@@ -1,0 +1,33 @@
+//! Fig. 12: the 4×T4 cluster — exclusive GPUs vs temporal sharing vs
+//! D-STACK on every GPU.
+//!
+//!     cargo run --release --example cluster_sim
+
+use dstack::cluster::{run_cluster, ClusterPolicy};
+use dstack::profile::{by_name, T4};
+use dstack::workload::{merged_stream, Arrivals};
+
+fn main() {
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let rates = [150.0, 150.0, 900.0, 450.0];
+    let horizon_ms = 8_000.0;
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(rates)
+        .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, 77);
+
+    println!("policy        total(req/s)  per-model  mean-util%");
+    for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
+        let r = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol);
+        println!(
+            "{:<12} {:>12.0}  {:?}  {:>6.1}",
+            r.policy,
+            r.total_throughput(),
+            r.throughput.iter().map(|t| t.round()).collect::<Vec<_>>(),
+            r.mean_utilization() * 100.0
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Fig. 11b: D-STACK adapting to dynamically varying request rates.
+//! Five sessions T0–T4; in each, one model's rate drops and the others
+//! opportunistically absorb the freed GPU capacity.
+//!
+//!     cargo run --release --example dynamic_rates
+
+use dstack::config::{build_policy, PolicyKind};
+use dstack::profile::by_name;
+use dstack::sim::{entries_at_optimum, Sim, SimConfig};
+use dstack::workload::{merged_stream, Arrivals};
+
+fn main() {
+    let names = ["alexnet", "mobilenet", "resnet50", "vgg19"];
+    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let entries = entries_at_optimum(&profiles);
+
+    // 2 s per phase; in phase k (k>0), model k-1's rate drops to 30%.
+    let phase_ms = 2_000.0;
+    let base = [700.0, 700.0, 320.0, 160.0];
+    let mut specs = Vec::new();
+    for (i, p) in profiles.iter().enumerate() {
+        let mut segments = vec![(0.0, base[i])];
+        for k in 1..5usize {
+            let rate = if k - 1 == i { base[i] * 0.3 } else { base[i] };
+            segments.push((k as f64 * phase_ms, rate));
+        }
+        specs.push((Arrivals::Trace { segments }, p.slo_ms));
+    }
+    let horizon = 5.0 * phase_ms;
+    let reqs = merged_stream(&specs, horizon, 3);
+
+    let mut pol = build_policy(PolicyKind::Dstack, &entries);
+    let mut sim = Sim::new(SimConfig { horizon_ms: horizon, gantt: true, ..Default::default() },
+        entries.clone());
+    let rep = sim.run(pol.as_mut(), &reqs);
+
+    // Report per-phase throughput from the Gantt log.
+    let gantt = sim.gpu.gantt.as_ref().unwrap();
+    println!("phase   {:>10} {:>10} {:>10} {:>10}   util%", names[0], names[1], names[2], names[3]);
+    for k in 0..5u64 {
+        let lo = k * 2_000_000;
+        let hi = lo + 2_000_000;
+        let mut items = [0u64; 4];
+        let mut busy_pct_us = 0.0f64;
+        for e in gantt.iter().filter(|e| e.start >= lo && e.start < hi) {
+            items[e.model] += 1;
+            busy_pct_us += e.pct as f64 * (e.end.min(hi) - e.start) as f64;
+        }
+        println!(
+            "T{k}      {:>10} {:>10} {:>10} {:>10}   {:>5.1}",
+            items[0], items[1], items[2], items[3],
+            busy_pct_us / (100.0 * 2_000_000.0) * 100.0
+        );
+    }
+    println!("\n(total served: {:.0} req/s, violations {:.1}%)",
+        rep.total_throughput(), rep.violation_fraction() * 100.0);
+}

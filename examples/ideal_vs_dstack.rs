@@ -1,0 +1,48 @@
+//! §6.2 / Fig. 9d: the ideal kernel-granularity preemptive scheduler vs
+//! D-STACK, GSLICE and temporal sharing on the three LeNet-style
+//! ConvNets — utilization and throughput.
+//!
+//!     cargo run --release --example ideal_vs_dstack
+
+use dstack::config::{build_policy, PolicyKind};
+use dstack::profile::{convnets, V100};
+use dstack::sched::ideal::run_ideal;
+use dstack::sim::{entries_at_optimum, Sim, SimConfig};
+use dstack::workload::{merged_stream, Arrivals};
+
+fn main() {
+    let profiles = convnets();
+    let horizon_ms = 5_000.0;
+
+    // Saturating closed-loop-like workload for the sim policies.
+    let entries = entries_at_optimum(&profiles);
+    let specs: Vec<_> = profiles
+        .iter()
+        .map(|p| (Arrivals::Poisson { rate: 2_000.0 }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, 11);
+
+    println!("policy          util%   thpt(img/s)  per-model");
+    for kind in [PolicyKind::Temporal, PolicyKind::Gslice, PolicyKind::Dstack] {
+        let mut pol = build_policy(kind, &entries);
+        let mut sim =
+            Sim::new(SimConfig { horizon_ms, ..Default::default() }, entries.clone());
+        let rep = sim.run(pol.as_mut(), &reqs);
+        println!(
+            "{:<15} {:>5.1}   {:>10.0}  {:?}",
+            kind.name(),
+            rep.mean_utilization() * 100.0,
+            rep.total_throughput(),
+            rep.throughput().iter().map(|t| t.round()).collect::<Vec<_>>()
+        );
+    }
+
+    let ideal = run_ideal(&profiles, &V100, 16, horizon_ms, 100);
+    println!(
+        "{:<15} {:>5.1}   {:>10.0}  {:?}",
+        "ideal",
+        ideal.utilization * 100.0,
+        ideal.throughput.iter().sum::<f64>(),
+        ideal.throughput.iter().map(|t| t.round()).collect::<Vec<_>>()
+    );
+}

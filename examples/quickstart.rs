@@ -1,0 +1,40 @@
+//! Quickstart: load an AOT artifact, validate its numerics against the
+//! JAX self-check, and time single inferences through the PJRT runtime.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use dstack::runtime::{artifacts_dir, iota_input, Runtime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::new(&artifacts_dir())?;
+    println!("artifacts: {} models", rt.manifest.models().len());
+
+    for (model, batch) in [("alexnet_mini", 1u32), ("alexnet_mini", 16), ("bert_mini", 16)] {
+        let loaded = rt.load(model, batch)?;
+        loaded.selfcheck()?;
+        let x = iota_input(&loaded.artifact.input_shape);
+        // Warm up, then time.
+        loaded.infer(&x)?;
+        let t0 = Instant::now();
+        let iters = 20;
+        for _ in 0..iters {
+            loaded.infer(&x)?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1_000.0 / iters as f64;
+        println!(
+            "{model:>16} b{batch:<3} selfcheck OK   {ms:7.2} ms/batch   {:8.0} items/s",
+            batch as f64 / (ms / 1_000.0)
+        );
+    }
+
+    // The §5 optimizer on the paper-calibrated profiles (Table 6).
+    println!("\nTable 6 operating points (paper-calibrated profiles):");
+    for row in dstack::optimizer::table6(&dstack::profile::zoo()) {
+        println!(
+            "  {:<10} knee {:>3}%  slo {:>5.0} ms  batch {:>2}  runtime {:>5.1} ms",
+            row.model, row.knee_pct, row.slo_ms, row.batch, row.runtime_ms
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""AOT lowering: JAX models → HLO *text* artifacts + manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that the xla crate's XLA (xla_extension
+0.5.1) rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Each artifact is one (model, batch) pair whose entry computation takes
+`(input, *weights)` and returns a 1-tuple. `manifest.json` records, per
+artifact: shapes, parameter specs (name/shape/seed/scale for the
+splitmix64 weights the Rust runtime regenerates), and a self-check
+(expected logits for the deterministic iota input) proving the Rust
+PJRT path computes exactly what JAX computed at build time.
+
+Usage: python -m compile.aot --out ../artifacts [--models a,b] [--batches 1,16]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, batch: int):
+    """Lower `name` at `batch`; returns (hlo_text, manifest_entry)."""
+    spec, apply = M.build(name)
+    in_shape = M.input_shape(name, batch)
+    params = spec.materialize()
+
+    def fn(x, *ps):
+        return (apply(x, *ps),)
+
+    example = [jax.ShapeDtypeStruct(in_shape, jnp.float32)] + [
+        jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params
+    ]
+    lowered = jax.jit(fn).lower(*example)
+    hlo = to_hlo_text(lowered)
+
+    # Self-check: run the real computation on the deterministic input.
+    x = M.deterministic_input(in_shape)
+    out = np.asarray(jax.jit(fn)(x, *params)[0])
+    entry = {
+        "model": name,
+        "batch": batch,
+        "input_shape": list(in_shape),
+        "output_shape": list(out.shape),
+        "params": [
+            {"name": nm, "shape": list(shape), "seed": k, "scale": scale}
+            for k, (nm, shape, scale) in enumerate(spec.params)
+        ],
+        "selfcheck": {
+            "input": "iota",
+            "output_sum": float(out.sum()),
+            "output_first8": [float(v) for v in out.ravel()[:8]],
+        },
+        "hlo_sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+    }
+    return hlo, entry
+
+
+DEFAULT_MODELS = list(M.MODELS.keys())
+DEFAULT_BATCHES = [1, 4, 16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--batches", default=",".join(str(b) for b in DEFAULT_BATCHES))
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    models = [m for m in args.models.split(",") if m]
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    manifest = {"format": 1, "artifacts": []}
+    for name in models:
+        for batch in batches:
+            hlo, entry = lower_model(name, batch)
+            fname = f"{name}_b{batch}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(hlo)
+            entry["file"] = fname
+            manifest["artifacts"].append(entry)
+            print(f"  {fname}: {len(hlo)} chars, out_sum={entry['selfcheck']['output_sum']:.4f}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

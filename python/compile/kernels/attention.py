@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: fused single-head scaled-dot-product attention.
+
+Used by `bert_mini` (the paper's Transformer workload, §4.4.2). The whole
+softmax(QKᵀ/√d)·V chain for one (batch, head) runs inside a single grid
+step, keeping the T×T score matrix in VMEM instead of round-tripping it
+through HBM — the flash-attention-style fusion, sized for the tiny
+sequence lengths of the mini zoo (T ≤ 128 keeps T² scores ≤ 64 KiB).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]  # [T, D]
+    k = k_ref[0]
+    v = v_ref[0]
+    d = q.shape[-1]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    # Numerically stable softmax, fully in-register/VMEM.
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / e.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def attention(q, k, v):
+    """Fused attention. q, k, v: [B, T, D] -> [B, T, D]."""
+    b, t, d = q.shape
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))] * 3,
+        out_specs=pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_bytes(t: int, d: int) -> int:
+    """VMEM per grid step: Q,K,V,O panels + the T×T score matrix (f32)."""
+    return 4 * (4 * t * d + t * t)

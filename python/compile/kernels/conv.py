@@ -1,0 +1,120 @@
+"""L1 Pallas kernels for convolutions.
+
+Two paths, mirroring how CNNs split in the paper's kernel analysis
+(Fig. 5: pointwise/expand convs are matmul-shaped and compute-bound;
+depthwise convs are memory-bound with low arithmetic intensity):
+
+- `conv2d`: standard convolution as im2col (pure indexing, done in XLA)
+  feeding the tiled Pallas `matmul` — the compute-bound hot path hits
+  the MXU-shaped kernel.
+- `depthwise3x3`: a dedicated Pallas kernel, grid over channels, each
+  step holding one padded channel plane in VMEM (scratchpad-resident
+  stencil, the TPU analogue of the paper's low-GPU%-demand kernels).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+
+
+def _im2col(x, kh, kw, stride):
+    """[B,H,W,C] -> [B*OH*OW, KH*KW*C] patches (SAME=VALID padding done
+    by caller)."""
+    b, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2),  # NCHW
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )  # [B, C*KH*KW, OH, OW]
+    patches = patches.transpose(0, 2, 3, 1).reshape(b * oh * ow, c * kh * kw)
+    return patches, oh, ow
+
+
+def conv2d(x, w, b=None, stride=1, padding=0, activation=None):
+    """2D convolution via im2col + Pallas matmul.
+
+    x: [B, H, W, Cin], w: [KH, KW, Cin, Cout] -> [B, OH, OW, Cout]
+    """
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    kh, kw, cin, cout = w.shape
+    bsz = x.shape[0]
+    patches, oh, ow = _im2col(x, kh, kw, stride)
+    # conv_general_dilated_patches yields C-major patches: [C, KH, KW].
+    wmat = w.transpose(2, 0, 1, 3).reshape(kh * kw * cin, cout)
+    y = mm.matmul(patches, wmat)
+    y = y.reshape(bsz, oh, ow, cout)
+    if b is not None:
+        y = y + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def _dw_kernel(x_ref, w_ref, o_ref):
+    # Blocks carry the leading singleton channel dim: x_ref[0] is the
+    # padded [B, H+2, W+2] plane of this grid step's channel.
+    x = x_ref[0]
+    w = w_ref[0]
+    acc = jnp.zeros_like(x[:, 1:-1, 1:-1])
+    h = x.shape[1] - 2
+    wd = x.shape[2] - 2
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + x[:, di : di + h, dj : dj + wd] * w[di, dj]
+    o_ref[0] = acc
+
+
+@jax.jit
+def depthwise3x3(x, w):
+    """Depthwise 3×3 convolution (stride 1, SAME) as a Pallas kernel.
+
+    x: [B, H, W, C], w: [3, 3, C] -> [B, H, W, C]
+    Grid over channels: each grid step holds one padded channel plane in
+    VMEM — B·(H+2)·(W+2)·4 bytes — and applies the 9-tap stencil.
+    """
+    b, h, wd, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    # Channel-major layout so the grid maps one channel per step.
+    xc = xp.transpose(3, 0, 1, 2)  # [C, B, H+2, W+2]
+    wc = w.transpose(2, 0, 1)  # [C, 3, 3]
+    out = pl.pallas_call(
+        _dw_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, b, h + 2, wd + 2), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 3, 3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, h, wd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, b, h, wd), jnp.float32),
+        interpret=True,
+    )(xc, wc)
+    return out.transpose(1, 2, 3, 0)
+
+
+def avg_pool2(x):
+    """2×2 average pooling, stride 2. x: [B, H, W, C]."""
+    b, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.mean(axis=(2, 4))
+
+
+def max_pool2(x):
+    """2×2 max pooling, stride 2."""
+    b, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def dw_vmem_bytes(b: int, h: int, w: int) -> int:
+    """VMEM per grid step of `depthwise3x3` (one padded channel, f32)."""
+    return 4 * (b * (h + 2) * (w + 2) + 9 + b * h * w)

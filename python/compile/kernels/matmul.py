@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: tiled matmul with optional fused bias + activation.
+
+The serving hot-spot of every model in the zoo (conv via im2col, FC
+layers, attention projections) funnels through this kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's insight is that
+kernels have bounded inherent parallelism, so right-sizing the compute
+slice wastes nothing. Here the BlockSpec grid expresses exactly that
+inherent parallelism: the output is tiled (TM × TN) so each grid step
+streams one A-row-panel and one B-column-panel HBM→VMEM and issues an
+MXU-shaped contraction. Tiles are capped at 128 (the MXU systolic-array
+edge); K is kept resident per step.
+
+VMEM per grid step = TM·K + K·TN + TM·TN floats — reported by
+`vmem_bytes()` and asserted < 16 MiB in tests (the per-core VMEM budget).
+
+Kernels run `interpret=True`: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO,
+which is what `aot.py` ships to the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array edge (v4/v5): align tiles to this when possible.
+MXU_EDGE = 128
+
+
+def _tile(dim: int) -> int:
+    """Largest divisor of `dim` that is ≤ MXU_EDGE (prefer exact MXU)."""
+    if dim >= MXU_EDGE and dim % MXU_EDGE == 0:
+        return MXU_EDGE
+    for cand in (64, 32, 16, 8, 4, 2, 1):
+        if dim % cand == 0 and cand <= dim:
+            return cand
+    return 1
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, activation):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def matmul(x, w, activation=None):
+    """`activation(x @ w)` as a tiled Pallas kernel.
+
+    x: [M, K], w: [K, N] -> [M, N]   (float32)
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    tm, tn = _tile(m), _tile(n)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def linear(x, w, b, activation=None):
+    """Fused dense layer: activation(x @ w + b).
+
+    Bias-add runs outside the kernel (XLA fuses it); the contraction —
+    the FLOPs that matter — is the Pallas kernel.
+    """
+    y = matmul(x, w)
+    y = y + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    return y
+
+
+def vmem_bytes(m: int, k: int, n: int) -> int:
+    """Estimated VMEM footprint (bytes) of one grid step (f32)."""
+    tm, tn = _tile(m), _tile(n)
+    return 4 * (tm * k + k * tn + tm * tn)
+
+
+def mxu_utilization(m: int, k: int, n: int) -> float:
+    """Fraction of MXU lanes a grid step's tiles occupy (structure-level
+    estimate: tile_m/128 × tile_n/128, the quantity to maximize when
+    choosing block shapes — see DESIGN.md §Perf)."""
+    tm, tn = _tile(m), _tile(n)
+    return min(tm / MXU_EDGE, 1.0) * min(tn / MXU_EDGE, 1.0)

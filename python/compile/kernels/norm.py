@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: layer normalization (rows of [N, D]).
+
+Memory-bound (arithmetic intensity ≈ 2 FLOP/byte — the GNMT-LSTM side of
+the paper's Table 2 split), so the kernel's job is purely to keep each
+row resident in VMEM for the two reduction passes + scale/shift, one HBM
+read and one write per element.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = xhat * g_ref[...] + b_ref[...]
+
+
+@jax.jit
+def layernorm(x, gamma, beta):
+    """Row-wise layernorm. x: [N, D]; gamma, beta: [D]."""
+    n, d = x.shape
+    # Row-tile the grid; D stays resident.
+    tn = 8 if n % 8 == 0 else 1
+    return pl.pallas_call(
+        _ln_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness
+signal): pytest sweeps shapes with hypothesis and asserts allclose
+between kernel and oracle. No pallas imports here — these must stay
+independent of the code under test."""
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(y, activation):
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    return y
+
+
+def matmul_ref(x, w, activation=None):
+    return _act(jnp.dot(x, w), activation)
+
+
+def linear_ref(x, w, b, activation=None):
+    return _act(jnp.dot(x, w) + b, activation)
+
+
+def conv2d_ref(x, w, b=None, stride=1, padding=0, activation=None):
+    """x: [B,H,W,Cin], w: [KH,KW,Cin,Cout] (NHWC/HWIO)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return _act(y, activation)
+
+
+def depthwise3x3_ref(x, w):
+    """x: [B,H,W,C], w: [3,3,C] — stride 1, SAME padding."""
+    c = x.shape[-1]
+    wk = w.reshape(3, 3, 1, c)  # HWIO with feature_group_count=C
+    return jax.lax.conv_general_dilated(
+        x,
+        wk,
+        window_strides=(1, 1),
+        padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def attention_ref(q, k, v):
+    d = q.shape[-1]
+    scores = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def avg_pool2_ref(x):
+    b, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))

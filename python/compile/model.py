@@ -1,0 +1,309 @@
+"""L2: the JAX mini model zoo (forward passes), built on the L1 Pallas
+kernels in `kernels/`.
+
+Mini counterparts of the paper's workload models (32×32×3 images / 16-
+token sequences instead of 224×224 ImageNet — the scheduler exercises the
+same code paths at tractable CPU cost; see DESIGN.md §1):
+
+  convnet1/2/3   — §6.2's LeNet-style ConvNets (varying filter widths)
+  alexnet_mini   — plain conv stack + FC head
+  mobilenet_mini — depthwise-separable convolutions
+  vgg_mini       — deeper conv stack (the compute-heavy tenant)
+  resnet_mini    — residual blocks
+  bert_mini      — 2-block Transformer encoder (fused Pallas attention)
+
+Weights are *runtime inputs* (not baked constants): the HLO stays small,
+and the Rust runtime owns model loading — regenerating bit-identical
+weights via the same splitmix64 scheme (`det_weights`), which is what
+makes the cross-language self-check in `aot.py` possible.
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import conv as conv_k
+from .kernels import matmul as mm_k
+from .kernels import norm as norm_k
+
+# ---------------------------------------------------------------------------
+# Deterministic cross-language weight init (splitmix64).
+# ---------------------------------------------------------------------------
+
+_SM64_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SM64_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM64_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def _splitmix64(z):
+    z = (z + _SM64_GAMMA).astype(np.uint64)
+    z = ((z ^ (z >> np.uint64(30))) * _SM64_M1).astype(np.uint64)
+    z = ((z ^ (z >> np.uint64(27))) * _SM64_M2).astype(np.uint64)
+    return z ^ (z >> np.uint64(31))
+
+
+def det_weights(shape, seed, scale):
+    """Deterministic uniform weights in [-scale, scale].
+
+    Element i of parameter `seed` is `splitmix64(seed*2^32 + i)` mapped
+    to [0,1) by its top 53 bits. The Rust runtime implements the exact
+    same function (`runtime::det_weights`), so both sides materialize
+    bit-identical f32 weights.
+    """
+    n = int(np.prod(shape))
+    base = np.uint64(seed) << np.uint64(32)
+    idx = base + np.arange(n, dtype=np.uint64)
+    z = _splitmix64(idx)
+    u = (z >> np.uint64(11)).astype(np.float64) * (1.0 / (1 << 53))
+    vals = ((2.0 * u - 1.0) * scale).astype(np.float32)
+    return vals.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Parameter-spec machinery.
+# ---------------------------------------------------------------------------
+
+
+class Spec:
+    """Ordered parameter specification for one model."""
+
+    def __init__(self):
+        self.params = []  # (name, shape, scale)
+
+    def add(self, name, shape, fan_in):
+        scale = float(1.0 / np.sqrt(max(fan_in, 1)))
+        self.params.append((name, tuple(int(s) for s in shape), scale))
+        return len(self.params) - 1
+
+    def materialize(self):
+        """Deterministic weights; parameter k uses seed k."""
+        return [det_weights(shape, k, scale) for k, (_, shape, scale) in enumerate(self.params)]
+
+
+# ---------------------------------------------------------------------------
+# Model definitions. Each `build_*` returns (spec, apply_fn) where
+# apply_fn(x, *params) is jit/AOT-friendly.
+# ---------------------------------------------------------------------------
+
+
+def _convnet(widths, fc_dim):
+    """§6.2 LeNet-style ConvNet: 3 convs (2 pooled), 2 FC layers."""
+    c1, c2, c3 = widths
+    spec = Spec()
+    spec.add("conv1_w", (5, 5, 3, c1), 5 * 5 * 3)
+    spec.add("conv1_b", (c1,), 1)
+    spec.add("conv2_w", (5, 5, c1, c2), 5 * 5 * c1)
+    spec.add("conv2_b", (c2,), 1)
+    spec.add("conv3_w", (3, 3, c2, c3), 3 * 3 * c2)
+    spec.add("conv3_b", (c3,), 1)
+    flat = 5 * 5 * c3
+    spec.add("fc1_w", (flat, fc_dim), flat)
+    spec.add("fc1_b", (fc_dim,), 1)
+    spec.add("fc2_w", (fc_dim, 10), fc_dim)
+    spec.add("fc2_b", (10,), 1)
+
+    def apply(x, *p):
+        # x: [B, 32, 32, 3]
+        y = conv_k.conv2d(x, p[0], p[1], padding=2, activation="relu")  # 32
+        y = conv_k.avg_pool2(y)  # 16
+        y = conv_k.conv2d(y, p[2], p[3], padding=2, activation="relu")  # 16
+        y = conv_k.avg_pool2(y)  # 8
+        y = conv_k.conv2d(y, p[4], p[5], padding=0, activation="relu")  # 6 -> wait 8-3+1=6
+        y = y[:, :5, :5, :]  # crop to 5×5 (fixed flat dim)
+        y = y.reshape(y.shape[0], -1)
+        y = mm_k.linear(y, p[6], p[7], activation="relu")
+        return mm_k.linear(y, p[8], p[9])
+
+    return spec, apply
+
+
+def build_convnet1():
+    return _convnet((8, 16, 32), 64)
+
+
+def build_convnet2():
+    return _convnet((16, 24, 48), 64)
+
+
+def build_convnet3():
+    return _convnet((16, 32, 64), 128)
+
+
+def build_alexnet_mini():
+    spec = Spec()
+    spec.add("c1_w", (3, 3, 3, 16), 27)
+    spec.add("c1_b", (16,), 1)
+    spec.add("c2_w", (3, 3, 16, 32), 144)
+    spec.add("c2_b", (32,), 1)
+    spec.add("c3_w", (3, 3, 32, 64), 288)
+    spec.add("c3_b", (64,), 1)
+    spec.add("fc1_w", (8 * 8 * 64, 128), 8 * 8 * 64)
+    spec.add("fc1_b", (128,), 1)
+    spec.add("fc2_w", (128, 10), 128)
+    spec.add("fc2_b", (10,), 1)
+
+    def apply(x, *p):
+        y = conv_k.conv2d(x, p[0], p[1], padding=1, activation="relu")  # 32
+        y = conv_k.max_pool2(y)  # 16
+        y = conv_k.conv2d(y, p[2], p[3], padding=1, activation="relu")  # 16
+        y = conv_k.max_pool2(y)  # 8
+        y = conv_k.conv2d(y, p[4], p[5], padding=1, activation="relu")  # 8
+        y = y.reshape(y.shape[0], -1)
+        y = mm_k.linear(y, p[6], p[7], activation="relu")
+        return mm_k.linear(y, p[8], p[9])
+
+    return spec, apply
+
+
+def build_mobilenet_mini():
+    spec = Spec()
+    spec.add("c1_w", (3, 3, 3, 16), 27)
+    spec.add("c1_b", (16,), 1)
+    spec.add("dw1_w", (3, 3, 16), 9)
+    spec.add("pw1_w", (1, 1, 16, 32), 16)
+    spec.add("pw1_b", (32,), 1)
+    spec.add("dw2_w", (3, 3, 32), 9)
+    spec.add("pw2_w", (1, 1, 32, 64), 32)
+    spec.add("pw2_b", (64,), 1)
+    spec.add("fc_w", (64, 10), 64)
+    spec.add("fc_b", (10,), 1)
+
+    def apply(x, *p):
+        y = conv_k.conv2d(x, p[0], p[1], padding=1, activation="relu")  # 32
+        y = conv_k.max_pool2(y)  # 16
+        y = conv_k.depthwise3x3(y, p[2])
+        y = conv_k.conv2d(y, p[3], p[4], activation="relu")  # pointwise
+        y = conv_k.max_pool2(y)  # 8
+        y = conv_k.depthwise3x3(y, p[5])
+        y = conv_k.conv2d(y, p[6], p[7], activation="relu")
+        y = y.mean(axis=(1, 2))  # global average pool -> [B, 64]
+        return mm_k.linear(y, p[8], p[9])
+
+    return spec, apply
+
+
+def build_vgg_mini():
+    spec = Spec()
+    dims = [(3, 32), (32, 32), (32, 64), (64, 64)]
+    for i, (cin, cout) in enumerate(dims):
+        spec.add(f"c{i}_w", (3, 3, cin, cout), 9 * cin)
+        spec.add(f"c{i}_b", (cout,), 1)
+    spec.add("fc1_w", (8 * 8 * 64, 128), 8 * 8 * 64)
+    spec.add("fc1_b", (128,), 1)
+    spec.add("fc2_w", (128, 10), 128)
+    spec.add("fc2_b", (10,), 1)
+
+    def apply(x, *p):
+        y = conv_k.conv2d(x, p[0], p[1], padding=1, activation="relu")  # 32
+        y = conv_k.conv2d(y, p[2], p[3], padding=1, activation="relu")
+        y = conv_k.max_pool2(y)  # 16
+        y = conv_k.conv2d(y, p[4], p[5], padding=1, activation="relu")
+        y = conv_k.conv2d(y, p[6], p[7], padding=1, activation="relu")
+        y = conv_k.max_pool2(y)  # 8
+        y = y.reshape(y.shape[0], -1)
+        y = mm_k.linear(y, p[8], p[9], activation="relu")
+        return mm_k.linear(y, p[10], p[11])
+
+    return spec, apply
+
+
+def build_resnet_mini():
+    spec = Spec()
+    spec.add("c0_w", (3, 3, 3, 32), 27)
+    spec.add("c0_b", (32,), 1)
+    for blk in range(2):
+        spec.add(f"b{blk}_c1_w", (3, 3, 32, 32), 288)
+        spec.add(f"b{blk}_c1_b", (32,), 1)
+        spec.add(f"b{blk}_c2_w", (3, 3, 32, 32), 288)
+        spec.add(f"b{blk}_c2_b", (32,), 1)
+    spec.add("fc_w", (32, 10), 32)
+    spec.add("fc_b", (10,), 1)
+
+    def apply(x, *p):
+        y = conv_k.conv2d(x, p[0], p[1], padding=1, activation="relu")  # 32
+        y = conv_k.max_pool2(y)  # 16
+        i = 2
+        for _ in range(2):
+            z = conv_k.conv2d(y, p[i], p[i + 1], padding=1, activation="relu")
+            z = conv_k.conv2d(z, p[i + 2], p[i + 3], padding=1)
+            y = jnp.maximum(y + z, 0.0)  # residual + relu
+            i += 4
+        y = y.mean(axis=(1, 2))  # [B, 32]
+        return mm_k.linear(y, p[i], p[i + 1])
+
+    return spec, apply
+
+
+def build_bert_mini(seq_len=16, d_model=64, n_blocks=2, d_ff=128):
+    spec = Spec()
+    for blk in range(n_blocks):
+        for nm in ("q", "k", "v", "o"):
+            spec.add(f"b{blk}_{nm}_w", (d_model, d_model), d_model)
+        spec.add(f"b{blk}_ln1_g", (d_model,), 1)
+        spec.add(f"b{blk}_ln1_b", (d_model,), 1)
+        spec.add(f"b{blk}_ff1_w", (d_model, d_ff), d_model)
+        spec.add(f"b{blk}_ff1_b", (d_ff,), 1)
+        spec.add(f"b{blk}_ff2_w", (d_ff, d_model), d_ff)
+        spec.add(f"b{blk}_ff2_b", (d_model,), 1)
+        spec.add(f"b{blk}_ln2_g", (d_model,), 1)
+        spec.add(f"b{blk}_ln2_b", (d_model,), 1)
+    spec.add("head_w", (d_model, 10), d_model)
+    spec.add("head_b", (10,), 1)
+
+    def apply(x, *p):
+        # x: [B, T, D] pre-embedded tokens.
+        b, t, d = x.shape
+        y = x
+        i = 0
+        for _ in range(n_blocks):
+            q = mm_k.matmul(y.reshape(b * t, d), p[i]).reshape(b, t, d)
+            k = mm_k.matmul(y.reshape(b * t, d), p[i + 1]).reshape(b, t, d)
+            v = mm_k.matmul(y.reshape(b * t, d), p[i + 2]).reshape(b, t, d)
+            a = attn_k.attention(q, k, v)
+            a = mm_k.matmul(a.reshape(b * t, d), p[i + 3]).reshape(b, t, d)
+            y = y + a
+            y2 = norm_k.layernorm(y.reshape(b * t, d), p[i + 4], p[i + 5])
+            h = mm_k.linear(y2, p[i + 6], p[i + 7], activation="gelu")
+            h = mm_k.linear(h, p[i + 8], p[i + 9])
+            y = y + h.reshape(b, t, d)
+            y = norm_k.layernorm(y.reshape(b * t, d), p[i + 10], p[i + 11]).reshape(b, t, d)
+            i += 12
+        pooled = y.mean(axis=1)  # [B, D]
+        return mm_k.linear(pooled, p[i], p[i + 1])
+
+    return spec, apply
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    "convnet1": build_convnet1,
+    "convnet2": build_convnet2,
+    "convnet3": build_convnet3,
+    "alexnet_mini": build_alexnet_mini,
+    "mobilenet_mini": build_mobilenet_mini,
+    "vgg_mini": build_vgg_mini,
+    "resnet_mini": build_resnet_mini,
+    "bert_mini": build_bert_mini,
+}
+
+
+def input_shape(name, batch):
+    """Input tensor shape for a model at a batch size."""
+    if name == "bert_mini":
+        return (batch, 16, 64)
+    return (batch, 32, 32, 3)
+
+
+def build(name):
+    """Return (spec, apply_fn) for a registered model."""
+    return MODELS[name]()
+
+
+def deterministic_input(shape):
+    """The fixed self-check input: normalized iota (same on both sides)."""
+    n = int(np.prod(shape))
+    return (np.arange(n, dtype=np.float32) / n - 0.5).reshape(shape)

@@ -1,0 +1,26 @@
+//! Fig. 12 benchmark: the 4xT4 cluster simulation across placements.
+
+use dstack::bench::{bench, Bench};
+use dstack::cluster::{run_cluster, ClusterPolicy};
+use dstack::profile::{by_name, T4};
+use dstack::workload::{merged_stream, Arrivals};
+
+fn main() {
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let rates = [150.0, 150.0, 900.0, 450.0];
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(rates)
+        .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, 2_000.0, 77);
+    let cfg = Bench::quick();
+    for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
+        let mut total = 0.0;
+        bench(&format!("cluster/{pol:?}"), &cfg, || {
+            total = run_cluster(&profiles, &T4, 4, &reqs, 2_000.0, pol).total_throughput();
+        });
+        println!("    -> total {total:.0} req/s");
+    }
+}

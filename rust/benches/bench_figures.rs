@@ -1,0 +1,21 @@
+//! Regeneration cost of the analytic figures (2-8): these exercise the
+//! analytic model + optimizer hot paths (latency surface evaluations).
+
+use dstack::bench::{bench, Bench};
+use dstack::figures;
+
+fn main() {
+    let cfg = Bench::quick();
+    bench("figures/fig2_latency_surface", &cfg, || {
+        assert!(!figures::fig2().rows.is_empty());
+    });
+    bench("figures/fig4_analytic_curves", &cfg, || {
+        assert!(!figures::fig4ab().rows.is_empty());
+    });
+    bench("figures/fig7_efficacy_surface", &cfg, || {
+        assert!(!figures::fig7().rows.is_empty());
+    });
+    bench("figures/table6_optimizer", &cfg, || {
+        assert!(!figures::table6().rows.is_empty());
+    });
+}

@@ -1,0 +1,21 @@
+//! Fig. 9d benchmark: the ideal kernel-granularity scheduler's slot loop
+//! (100 µs slots) and the D-STACK comparison run.
+
+use dstack::bench::{bench, Bench};
+use dstack::profile::{convnets, V100};
+use dstack::sched::ideal::run_ideal;
+
+fn main() {
+    let cfg = Bench::quick().units(10_000.0); // slots per 1 s horizon
+    let profiles = convnets();
+    bench("ideal/1s_horizon_100us_slots", &cfg, || {
+        let rep = run_ideal(&profiles, &V100, 16, 1_000.0, 100);
+        assert!(rep.utilization > 0.5);
+    });
+    let rep = run_ideal(&profiles, &V100, 16, 5_000.0, 100);
+    println!(
+        "ideal (5s): util {:.1}% thpt {:.0} img/s (paper: ~95% util)",
+        rep.utilization * 100.0,
+        rep.throughput.iter().sum::<f64>()
+    );
+}

@@ -1,0 +1,42 @@
+//! Fig. 11a benchmark: the C-2/3/4/7 multiplexing sweep across all five
+//! policies — end-to-end simulation cost per mix, plus headline output.
+
+use dstack::bench::{bench, Bench};
+use dstack::config::{build_policy, PolicyKind};
+use dstack::profile::by_name;
+use dstack::sim::{entries_at_optimum, Sim, SimConfig};
+use dstack::workload::{fig11a_rates, merged_stream, Arrivals};
+
+fn run_mix(mix: &str, kind: PolicyKind, horizon_ms: f64) -> (f64, f64) {
+    let spec = fig11a_rates(mix);
+    let profiles: Vec<_> = spec.iter().map(|(n, _)| by_name(n).unwrap()).collect();
+    let entries = entries_at_optimum(&profiles);
+    let specs: Vec<_> = spec
+        .iter()
+        .zip(&profiles)
+        .map(|((_, r), p)| (Arrivals::Poisson { rate: *r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, 21);
+    let mut pol = build_policy(kind, &entries);
+    let cfg = SimConfig {
+        horizon_ms,
+        allow_oversub: kind == PolicyKind::FixedBatch,
+        ..Default::default()
+    };
+    let mut sim = Sim::new(cfg, entries);
+    let rep = sim.run(pol.as_mut(), &reqs);
+    (rep.total_throughput(), rep.violation_fraction())
+}
+
+fn main() {
+    let cfg = Bench::quick();
+    for mix in ["C-2", "C-4", "C-7"] {
+        for kind in [PolicyKind::Temporal, PolicyKind::Dstack] {
+            let mut out = (0.0, 0.0);
+            bench(&format!("multiplex/{mix}/{}", kind.name()), &cfg, || {
+                out = run_mix(mix, kind, 2_000.0);
+            });
+            println!("    -> thpt {:.0} req/s, viol {:.3}", out.0, out.1);
+        }
+    }
+}

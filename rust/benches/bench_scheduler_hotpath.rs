@@ -1,0 +1,52 @@
+//! L3 hot-path microbenchmarks (§Perf): the operations executed per
+//! simulated/served event — capacity queries, plan construction, the
+//! dynamic pass — plus a full event-loop throughput figure.
+
+use dstack::bench::{bench, black_box, Bench};
+use dstack::config::{build_policy, PolicyKind};
+use dstack::profile::by_name;
+use dstack::sched::CapTimeline;
+use dstack::sim::{entries_at_optimum, Sim, SimConfig};
+use dstack::workload::{merged_stream, slo_proportional_rates, Arrivals};
+
+fn main() {
+    // CapTimeline peak query under a realistic reservation count.
+    let mut tl = CapTimeline::new();
+    for i in 0..24u64 {
+        tl.add(i * 4_000, i * 4_000 + 9_000, 20 + (i % 3) as u32 * 10);
+    }
+    let cfg = Bench::default().units(1.0);
+    bench("hotpath/captimeline_peak", &cfg, || {
+        black_box(tl.peak(black_box(37_000), black_box(65_000)));
+    });
+    bench("hotpath/captimeline_earliest_fit", &cfg, || {
+        black_box(tl.earliest_fit(0, 100_000, 8_000, 40, 100));
+    });
+
+    // Full-engine throughput: events/s through the D-STACK policy.
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let entries = entries_at_optimum(&profiles);
+    let slos: Vec<f64> = profiles.iter().map(|p| p.slo_ms).collect();
+    let rates = slo_proportional_rates(1_900.0, &slos);
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(&rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, 2_000.0, 7);
+    let n_reqs = reqs.len() as f64;
+    let cfg = Bench::quick().units(n_reqs);
+    bench("hotpath/dstack_2s_c4_sim(requests/s)", &cfg, || {
+        let mut pol = build_policy(PolicyKind::Dstack, &entries);
+        let mut sim =
+            Sim::new(SimConfig { horizon_ms: 2_000.0, ..Default::default() }, entries.clone());
+        black_box(sim.run(pol.as_mut(), &reqs));
+    });
+    bench("hotpath/temporal_2s_c4_sim(requests/s)", &cfg, || {
+        let mut pol = build_policy(PolicyKind::Temporal, &entries);
+        let mut sim =
+            Sim::new(SimConfig { horizon_ms: 2_000.0, ..Default::default() }, entries.clone());
+        black_box(sim.run(pol.as_mut(), &reqs));
+    });
+}

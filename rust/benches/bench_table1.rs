@@ -1,0 +1,23 @@
+//! Table 1 benchmark: wall-clock cost of simulating the Triton vs
+//! D-STACK task-completion experiment, plus the regenerated metric.
+
+use dstack::bench::{bench, Bench};
+use dstack::figures;
+
+fn main() {
+    // The actual experiment (also validates the metric each iteration).
+    let cfg = Bench::quick();
+    let mut last = (0.0, 0.0);
+    bench("table1/full_experiment", &cfg, || {
+        let d = figures::table1();
+        let triton: f64 = d.rows[0][1].parse().unwrap();
+        let dstack: f64 = d.rows[1][1].parse().unwrap();
+        last = (triton, dstack);
+    });
+    println!(
+        "table1 result: triton {:.1}s dstack {:.1}s ({:.0}% reduction; paper: 58.6 -> 35.6, 37%)",
+        last.0,
+        last.1,
+        (1.0 - last.1 / last.0) * 100.0
+    );
+}

@@ -1,0 +1,119 @@
+//! Batch-assembly policies.
+//!
+//! Three batching disciplines appear in the paper's comparisons (§7):
+//! *fixed* batching (always the max batch — the FB baseline), *adaptive*
+//! batching (Clipper/Nexus-style: take what's queued, capped by what
+//! fits the latency budget — used by GSLICE and the temporal baseline),
+//! and the *optimal* batch from the §5 optimization (used by D-STACK).
+
+use crate::optimizer;
+use crate::profile::{GpuSpec, ModelProfile};
+
+/// Batching discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Always wait for / take the model's max batch (FB baseline).
+    Fixed,
+    /// Take min(queued, max_batch), additionally capped so inference
+    /// fits the remaining latency budget (Clipper/Nexus adaptive).
+    Adaptive,
+    /// The §5 optimizer's batch, capped by queue occupancy.
+    Optimal,
+}
+
+/// Decide a batch size.
+///
+/// * `queued` — requests currently waiting for this model.
+/// * `opt_batch` — the model's optimizer-derived batch.
+/// * `budget_ms` — remaining time before the oldest request's deadline
+///   (or the slice end, whichever is smaller); `None` = unconstrained.
+/// * `gpu_pct` — allocation the batch would run at.
+pub fn choose_batch(
+    policy: BatchPolicy,
+    m: &ModelProfile,
+    gpu: &GpuSpec,
+    queued: usize,
+    opt_batch: u32,
+    gpu_pct: u32,
+    budget_ms: Option<f64>,
+) -> u32 {
+    let queued = queued as u32;
+    if queued == 0 {
+        return 0;
+    }
+    match policy {
+        BatchPolicy::Fixed => {
+            // FB waits for a full batch; partial queues produce nothing.
+            if queued >= m.max_batch {
+                m.max_batch
+            } else {
+                0
+            }
+        }
+        BatchPolicy::Adaptive => {
+            let want = queued.min(m.max_batch);
+            match budget_ms {
+                Some(budget) => {
+                    let fit = optimizer::max_batch_within(m, gpu, gpu_pct, budget);
+                    want.min(fit)
+                }
+                None => want,
+            }
+        }
+        BatchPolicy::Optimal => {
+            let want = queued.min(opt_batch).min(m.max_batch);
+            match budget_ms {
+                Some(budget) => {
+                    let fit = optimizer::max_batch_within(m, gpu, gpu_pct, budget);
+                    want.min(fit)
+                }
+                None => want,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{by_name, V100};
+
+    #[test]
+    fn fixed_waits_for_full_batch() {
+        let m = by_name("alexnet").unwrap();
+        assert_eq!(choose_batch(BatchPolicy::Fixed, &m, &V100, 10, 16, 30, None), 0);
+        assert_eq!(choose_batch(BatchPolicy::Fixed, &m, &V100, 16, 16, 30, None), 16);
+        assert_eq!(choose_batch(BatchPolicy::Fixed, &m, &V100, 40, 16, 30, None), 16);
+    }
+
+    #[test]
+    fn adaptive_takes_whats_queued() {
+        let m = by_name("alexnet").unwrap();
+        assert_eq!(choose_batch(BatchPolicy::Adaptive, &m, &V100, 5, 16, 30, None), 5);
+        assert_eq!(choose_batch(BatchPolicy::Adaptive, &m, &V100, 99, 16, 30, None), 16);
+        assert_eq!(choose_batch(BatchPolicy::Adaptive, &m, &V100, 0, 16, 30, None), 0);
+    }
+
+    #[test]
+    fn adaptive_respects_budget() {
+        let m = by_name("alexnet").unwrap();
+        // A budget between the batch-1 and batch-16 latencies forces a
+        // partial batch.
+        let budget =
+            0.5 * (m.latency_ms(m.knee_pct, 1) + m.latency_ms(m.knee_pct, 16));
+        let b = choose_batch(BatchPolicy::Adaptive, &m, &V100, 16, 16, m.knee_pct, Some(budget));
+        assert!(b > 0 && b < 16, "{b} (budget {budget})");
+        // Impossible budget → no launch.
+        assert_eq!(
+            choose_batch(BatchPolicy::Adaptive, &m, &V100, 16, 16, m.knee_pct, Some(0.001)),
+            0
+        );
+    }
+
+    #[test]
+    fn optimal_caps_at_opt_batch() {
+        let m = by_name("vgg19").unwrap();
+        assert_eq!(choose_batch(BatchPolicy::Optimal, &m, &V100, 99, 8, 50, None), 8);
+        assert_eq!(choose_batch(BatchPolicy::Optimal, &m, &V100, 3, 8, 50, None), 3);
+    }
+}

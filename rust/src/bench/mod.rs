@@ -1,0 +1,179 @@
+//! In-tree micro/macro benchmark harness (criterion is unavailable
+//! offline). Provides warmup, a time- or iteration-bounded measurement
+//! loop, robust summary statistics and throughput reporting. Bench
+//! binaries under `rust/benches/` use `harness = false` and call into
+//! this module, so `cargo bench` works end to end.
+
+use crate::util::stats::{percentile_sorted, Online};
+use std::time::{Duration, Instant};
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Optional units-processed-per-iteration for throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.mean_ns * 1e-9))
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    units_per_iter: Option<f64>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 1_000_000,
+            units_per_iter: None,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            ..Default::default()
+        }
+    }
+
+    /// Declare that each iteration processes `units` items (requests,
+    /// events, images…) so the report includes a throughput figure.
+    pub fn units(mut self, units: f64) -> Self {
+        self.units_per_iter = Some(units);
+        self
+    }
+
+    /// Run `f` repeatedly and collect per-iteration wall times.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut online = Online::new();
+        let m0 = Instant::now();
+        let mut iters = 0u64;
+        while (m0.elapsed() < self.measure || iters < self.min_iters) && iters < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples.push(dt);
+            online.push(dt);
+            iters += 1;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: online.mean(),
+            stddev_ns: online.stddev(),
+            p50_ns: percentile_sorted(&samples, 50.0),
+            p99_ns: percentile_sorted(&samples, 99.0),
+            min_ns: online.min(),
+            max_ns: online.max(),
+            units_per_iter: self.units_per_iter,
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print one result row in a stable, greppable format.
+pub fn report(r: &BenchResult) {
+    let mut line = format!(
+        "bench {:40} iters {:>8}  mean {:>12}  p50 {:>12}  p99 {:>12}",
+        r.name,
+        r.iters,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns),
+    );
+    if let Some(tp) = r.throughput_per_sec() {
+        line.push_str(&format!("  thpt {:>12.0}/s", tp));
+    }
+    println!("{line}");
+}
+
+/// Run and immediately report (the common pattern in bench binaries).
+pub fn bench<F: FnMut()>(name: &str, cfg: &Bench, f: F) -> BenchResult {
+    let r = cfg.run(name, f);
+    report(&r);
+    r
+}
+
+/// Black-box to defeat dead-code elimination of benched computations on
+/// stable rustc.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports_sane_numbers() {
+        let cfg = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 10_000,
+            units_per_iter: Some(100.0),
+        };
+        let mut acc = 0u64;
+        let r = cfg.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns + 1.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns + 1.0);
+        assert!(r.throughput_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

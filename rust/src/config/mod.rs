@@ -1,0 +1,335 @@
+//! Scenario configuration: JSON files describing a serving experiment
+//! (models, arrival rates, scheduler, GPU, horizon), loadable from the
+//! `dstack` CLI. This is the "real config system" of the framework —
+//! every experiment in EXPERIMENTS.md can be expressed as a scenario.
+
+use crate::profile::{self, GpuSpec, ModelProfile};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Scheduling policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Dstack,
+    SpatioTemporalOnly,
+    Temporal,
+    FixedBatch,
+    Gslice,
+    Triton,
+    MaxThroughput,
+    MaxMin,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind, String> {
+        Ok(match s {
+            "dstack" => PolicyKind::Dstack,
+            "spatio_temporal" => PolicyKind::SpatioTemporalOnly,
+            "temporal" => PolicyKind::Temporal,
+            "fixed_batch" | "fb" | "mps" => PolicyKind::FixedBatch,
+            "gslice" => PolicyKind::Gslice,
+            "triton" => PolicyKind::Triton,
+            "max_throughput" => PolicyKind::MaxThroughput,
+            "max_min" => PolicyKind::MaxMin,
+            other => return Err(format!("unknown policy '{other}'")),
+        })
+    }
+
+    pub fn all() -> &'static [PolicyKind] {
+        &[
+            PolicyKind::Dstack,
+            PolicyKind::SpatioTemporalOnly,
+            PolicyKind::Temporal,
+            PolicyKind::FixedBatch,
+            PolicyKind::Gslice,
+            PolicyKind::Triton,
+            PolicyKind::MaxThroughput,
+            PolicyKind::MaxMin,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Dstack => "dstack",
+            PolicyKind::SpatioTemporalOnly => "spatio_temporal",
+            PolicyKind::Temporal => "temporal",
+            PolicyKind::FixedBatch => "fixed_batch",
+            PolicyKind::Gslice => "gslice",
+            PolicyKind::Triton => "triton",
+            PolicyKind::MaxThroughput => "max_throughput",
+            PolicyKind::MaxMin => "max_min",
+        }
+    }
+}
+
+/// One model's workload in a scenario.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Mean request rate (req/s). `0` with a non-empty trace uses the trace.
+    pub rate: f64,
+    /// Optional piecewise-constant rate trace: (start_ms, rate).
+    pub trace: Vec<(f64, f64)>,
+    /// Optional SLO override (ms); default = profile SLO.
+    pub slo_ms: Option<f64>,
+}
+
+/// A full serving scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub gpu: &'static GpuSpec,
+    pub n_gpus: usize,
+    pub policy: PolicyKind,
+    pub horizon_ms: f64,
+    pub seed: u64,
+    pub models: Vec<ModelSpec>,
+    /// Poisson (true) or uniform-jitter arrivals.
+    pub poisson: bool,
+}
+
+impl Scenario {
+    /// Parse from JSON text. See `configs/` for examples.
+    pub fn from_json(text: &str) -> Result<Scenario, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let gpu_name = j.opt_str("gpu", "V100");
+        let gpu = GpuSpec::by_name(gpu_name).ok_or(format!("unknown gpu '{gpu_name}'"))?;
+        let policy = PolicyKind::parse(j.opt_str("policy", "dstack"))?;
+        let models_j = j.req("models")?.as_arr().ok_or("'models' must be an array")?;
+        if models_j.is_empty() {
+            return Err("scenario needs at least one model".into());
+        }
+        let mut models = Vec::new();
+        for mj in models_j {
+            let name = mj.req_str("name")?.to_string();
+            if profile::by_name(&name).is_none() {
+                return Err(format!("unknown model '{name}'"));
+            }
+            let trace = match mj.get("trace") {
+                Some(Json::Arr(segs)) => {
+                    let mut t = Vec::new();
+                    for s in segs {
+                        let arr = s.as_arr().ok_or("trace segments must be [start_ms, rate]")?;
+                        if arr.len() != 2 {
+                            return Err("trace segments must be [start_ms, rate]".into());
+                        }
+                        t.push((
+                            arr[0].as_f64().ok_or("trace start must be a number")?,
+                            arr[1].as_f64().ok_or("trace rate must be a number")?,
+                        ));
+                    }
+                    t
+                }
+                _ => Vec::new(),
+            };
+            models.push(ModelSpec {
+                name,
+                rate: mj.opt_f64("rate", 0.0),
+                trace,
+                slo_ms: mj.get("slo_ms").and_then(Json::as_f64),
+            });
+        }
+        Ok(Scenario {
+            name: j.opt_str("name", "scenario").to_string(),
+            gpu,
+            n_gpus: j.opt_u64("n_gpus", 1) as usize,
+            policy,
+            horizon_ms: j.opt_f64("horizon_ms", 10_000.0),
+            seed: j.opt_u64("seed", 42),
+            models,
+            poisson: j.opt_bool("poisson", true),
+        })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Scenario::from_json(&text)
+    }
+
+    /// Serialize back to JSON (round-trip support for tooling).
+    pub fn to_json(&self) -> Json {
+        let models: Vec<Json> = self
+            .models
+            .iter()
+            .map(|m| {
+                let mut pairs = vec![
+                    ("name", Json::from(m.name.as_str())),
+                    ("rate", Json::from(m.rate)),
+                ];
+                if !m.trace.is_empty() {
+                    pairs.push((
+                        "trace",
+                        Json::Arr(
+                            m.trace
+                                .iter()
+                                .map(|(s, r)| Json::Arr(vec![Json::Num(*s), Json::Num(*r)]))
+                                .collect(),
+                        ),
+                    ));
+                }
+                if let Some(slo) = m.slo_ms {
+                    pairs.push(("slo_ms", Json::from(slo)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("gpu", Json::from(self.gpu.name)),
+            ("n_gpus", Json::from(self.n_gpus as u64)),
+            ("policy", Json::from(self.policy.name())),
+            ("horizon_ms", Json::from(self.horizon_ms)),
+            ("seed", Json::from(self.seed)),
+            ("poisson", Json::from(self.poisson)),
+            ("models", Json::Arr(models)),
+        ])
+    }
+
+    /// Resolve model profiles (with SLO overrides applied).
+    pub fn profiles(&self) -> Vec<ModelProfile> {
+        self.models
+            .iter()
+            .map(|m| {
+                let mut p = profile::by_name(&m.name).expect("validated at parse");
+                if let Some(slo) = m.slo_ms {
+                    p.slo_ms = slo;
+                }
+                p
+            })
+            .collect()
+    }
+
+    /// Build the arrival processes for each model.
+    pub fn arrivals(&self) -> Vec<crate::workload::Arrivals> {
+        use crate::workload::Arrivals;
+        self.models
+            .iter()
+            .map(|m| {
+                if !m.trace.is_empty() {
+                    Arrivals::Trace { segments: m.trace.clone() }
+                } else if self.poisson {
+                    Arrivals::Poisson { rate: m.rate }
+                } else {
+                    Arrivals::Uniform { rate: m.rate, jitter: 0.5 }
+                }
+            })
+            .collect()
+    }
+}
+
+/// Instantiate the scenario's policy over model entries.
+pub fn build_policy(
+    kind: PolicyKind,
+    entries: &[crate::sim::ModelEntry],
+) -> Box<dyn crate::sim::Policy> {
+    use crate::sched::*;
+    match kind {
+        PolicyKind::Dstack => Box::new(dstack::Dstack::from_entries(entries)),
+        PolicyKind::SpatioTemporalOnly => Box::new(dstack::Dstack::with_cfg(
+            entries,
+            dstack::DstackCfg { opportunistic: false, ..Default::default() },
+        )),
+        PolicyKind::Temporal => Box::new(temporal::Temporal::from_entries(entries)),
+        PolicyKind::FixedBatch => Box::new(fixed_batch::FixedBatch::new()),
+        PolicyKind::Gslice => Box::new(gslice::Gslice::from_entries(entries)),
+        PolicyKind::Triton => Box::new(triton::Triton::from_entries(entries)),
+        PolicyKind::MaxThroughput => Box::new(max_throughput::MaxThroughput::from_entries(entries)),
+        PolicyKind::MaxMin => Box::new(max_min::MaxMin::from_entries(entries)),
+    }
+}
+
+/// Run a single-GPU scenario end to end and return the report.
+pub fn run_scenario(sc: &Scenario) -> crate::metrics::RunReport {
+    use crate::sim::{Sim, SimConfig};
+    use crate::workload::merged_stream;
+    let profiles = sc.profiles();
+    let entries = crate::cluster::entries_for_gpu(&profiles, sc.gpu);
+    let arrivals = sc.arrivals();
+    let specs: Vec<_> = arrivals
+        .into_iter()
+        .zip(profiles.iter())
+        .map(|(a, p)| (a, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, sc.horizon_ms, sc.seed);
+    let mut policy = build_policy(sc.policy, &entries);
+    let cfg = SimConfig {
+        gpu: sc.gpu.clone(),
+        horizon_ms: sc.horizon_ms,
+        allow_oversub: sc.policy == PolicyKind::FixedBatch,
+        ..Default::default()
+    };
+    let mut sim = Sim::new(cfg, entries);
+    sim.run(policy.as_mut(), &reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"{
+        "name": "c4",
+        "gpu": "V100",
+        "policy": "dstack",
+        "horizon_ms": 1000,
+        "seed": 7,
+        "models": [
+            {"name": "mobilenet", "rate": 700},
+            {"name": "alexnet", "rate": 700},
+            {"name": "resnet50", "rate": 320},
+            {"name": "vgg19", "rate": 160, "slo_ms": 120}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_example() {
+        let sc = Scenario::from_json(EXAMPLE).unwrap();
+        assert_eq!(sc.name, "c4");
+        assert_eq!(sc.models.len(), 4);
+        assert_eq!(sc.policy, PolicyKind::Dstack);
+        assert_eq!(sc.models[3].slo_ms, Some(120.0));
+        let profiles = sc.profiles();
+        assert_eq!(profiles[3].slo_ms, 120.0, "SLO override applied");
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(Scenario::from_json("{}").is_err());
+        assert!(Scenario::from_json(r#"{"models": []}"#).is_err());
+        assert!(Scenario::from_json(r#"{"models": [{"name": "nope", "rate": 1}]}"#).is_err());
+        assert!(
+            Scenario::from_json(r#"{"policy": "magic", "models": [{"name": "alexnet"}]}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn roundtrips_via_json() {
+        let sc = Scenario::from_json(EXAMPLE).unwrap();
+        let text = sc.to_json().to_string_pretty();
+        let sc2 = Scenario::from_json(&text).unwrap();
+        assert_eq!(sc2.models.len(), sc.models.len());
+        assert_eq!(sc2.policy, sc.policy);
+        assert_eq!(sc2.seed, sc.seed);
+    }
+
+    #[test]
+    fn runs_scenario_end_to_end() {
+        let mut sc = Scenario::from_json(EXAMPLE).unwrap();
+        sc.horizon_ms = 500.0;
+        let rep = run_scenario(&sc);
+        assert_eq!(rep.per_model.len(), 4);
+        assert!(rep.total_throughput() > 0.0);
+    }
+
+    #[test]
+    fn all_policies_instantiable_and_runnable() {
+        for kind in PolicyKind::all() {
+            let mut sc = Scenario::from_json(EXAMPLE).unwrap();
+            sc.policy = *kind;
+            sc.horizon_ms = 300.0;
+            let rep = run_scenario(&sc);
+            assert_eq!(rep.per_model.len(), 4, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,916 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (the DESIGN.md §5 per-experiment index). Each generator returns a
+//! [`FigData`] (header + rows) that the CLI renders as an ASCII table
+//! and writes as CSV under `results/`.
+
+use crate::analytic::AnalyticDnn;
+use crate::config::{build_policy, PolicyKind};
+use crate::gpu::us_to_ms;
+use crate::metrics::RunReport;
+use crate::optimizer::{self, OptConfig};
+use crate::profile::{self, by_name, GpuSpec, ModelProfile, P100, T4, V100};
+use crate::sim::{entries_at_optimum, ModelEntry, Sim, SimConfig};
+use crate::workload::{fig11a_rates, merged_stream, slo_proportional_rates, Arrivals};
+use std::path::Path;
+
+/// One regenerated table/figure dataset.
+pub struct FigData {
+    pub name: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl FigData {
+    fn new(name: &str, title: &str, header: &[&str]) -> FigData {
+        FigData {
+            name: name.into(),
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let hdr: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        format!("# {} — {}\n{}", self.name, self.title, crate::util::ascii_table(&hdr, &self.rows))
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> std::io::Result<()> {
+        let hdr: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        crate::util::write_file(
+            &dir.join(format!("{}.csv", self.name)),
+            &crate::util::to_csv(&hdr, &self.rows),
+        )
+    }
+}
+
+fn f(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+fn run_mix(
+    names: &[&str],
+    rates: &[f64],
+    policy: PolicyKind,
+    horizon_ms: f64,
+    seed: u64,
+) -> RunReport {
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let entries: Vec<ModelEntry> = entries_at_optimum(&profiles);
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    let mut pol = build_policy(policy, &entries);
+    let cfg = SimConfig {
+        horizon_ms,
+        allow_oversub: policy == PolicyKind::FixedBatch,
+        ..Default::default()
+    };
+    let mut sim = Sim::new(cfg, entries);
+    sim.run(pol.as_mut(), &reqs)
+}
+
+// ---------------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------------
+
+/// Table 1: Triton vs D-STACK completing 10 000 images per model
+/// (4 models on one V100) — task completion time.
+pub fn table1() -> FigData {
+    let names = ["alexnet", "mobilenet", "resnet50", "vgg19"];
+    let mut out = FigData::new(
+        "table1",
+        "task completion: 4 models x 10k images (s)",
+        &["policy", "completion_s", "reduction_vs_triton_%"],
+    );
+    // 10k images per model arrive over the first 5 s (open loop at
+    // 2000/s each); deadline pressure removed (completion-time metric).
+    let profiles: Vec<ModelProfile> = names
+        .iter()
+        .map(|n| {
+            let mut p = by_name(n).unwrap();
+            p.slo_ms = 1e7; // no deadline: measure completion
+            p
+        })
+        .collect();
+    let entries = entries_at_optimum(&profiles);
+    let specs: Vec<_> =
+        profiles.iter().map(|p| (Arrivals::Poisson { rate: 2_000.0 }, p.slo_ms)).collect();
+    // 5 s of arrivals ≈ 10k per model; long horizon to drain.
+    let reqs = merged_stream(&specs, 5_000.0, 10);
+    let mut completions = Vec::new();
+    for kind in [PolicyKind::Triton, PolicyKind::Dstack] {
+        let mut pol = build_policy(kind, &entries);
+        let mut sim =
+            Sim::new(SimConfig { horizon_ms: 300_000.0, ..Default::default() }, entries.clone());
+        let rep = sim.run(pol.as_mut(), &reqs);
+        completions.push((kind.name(), us_to_ms(rep.last_completion_us) / 1_000.0));
+    }
+    let triton = completions[0].1;
+    for (name, secs) in completions {
+        out.push(vec![
+            name.to_string(),
+            f(secs),
+            f((1.0 - secs / triton) * 100.0),
+        ]);
+    }
+    out
+}
+
+/// Table 2: compute- vs memory-bound kernels by arithmetic intensity.
+pub fn table2() -> FigData {
+    let mut out = FigData::new(
+        "table2",
+        "arithmetic intensity classification (V100 threshold 139.8 FLOP/B)",
+        &["model", "kernel", "gflops", "mbytes", "arith_intensity", "limit"],
+    );
+    let models = ["alexnet", "resnet50", "vgg19", "gnmt"];
+    for name in models {
+        let m = by_name(name).unwrap();
+        for k in &m.kernels {
+            out.push(vec![
+                name.to_string(),
+                k.name.to_string(),
+                format!("{:.3}", k.gflops),
+                format!("{:.2}", k.mbytes),
+                format!("{:.0}", k.arithmetic_intensity()),
+                if k.is_compute_bound(&V100) { "Compute" } else { "Memory" }.to_string(),
+            ]);
+        }
+    }
+    out
+}
+
+/// Table 3: p99 *service* (inference) latency in isolation vs 5-way
+/// multiplexed at the knee. The paper measures < 3% delta on real
+/// hardware because CSS maintains SM isolation; in the simulator SM
+/// isolation holds by construction, so this regenerates the same
+/// conclusion from the Gantt-recorded batch service times.
+pub fn table3() -> FigData {
+    let mut out = FigData::new(
+        "table3",
+        "p99 service latency (ms) of knee-allocated batches: isolation vs 5-way multiplexed",
+        &["model", "knee_%", "isolation_p99", "multiplexed_p99", "delta_%"],
+    );
+    let names = ["mobilenet", "resnet18", "bert", "resnet50", "vgg19"];
+
+    // Collect per-launch service durations for launches at the model's
+    // knee allocation.
+    // Compare like with like: same allocation AND same batch size.
+    // Collect durations bucketed by batch at the knee allocation.
+    fn service_by_batch(
+        sim: &Sim,
+        model: usize,
+        knee: u32,
+    ) -> std::collections::BTreeMap<u32, Vec<f64>> {
+        let mut map: std::collections::BTreeMap<u32, Vec<f64>> = Default::default();
+        for e in sim.gpu.gantt.as_ref().unwrap() {
+            if e.model == model && e.pct == knee {
+                map.entry(e.batch).or_default().push(us_to_ms(e.end - e.start));
+            }
+        }
+        map
+    }
+
+    let run = |names: &[&str], rates: &[f64], kind: PolicyKind| -> Sim {
+        let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+        let entries = entries_at_optimum(&profiles);
+        let specs: Vec<_> = profiles
+            .iter()
+            .zip(rates)
+            .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, 5_000.0, 3);
+        let mut pol = build_policy(kind, &entries);
+        let mut sim = Sim::new(
+            SimConfig { horizon_ms: 5_000.0, gantt: true, ..Default::default() },
+            entries,
+        );
+        sim.run(pol.as_mut(), &reqs);
+        sim
+    };
+
+    let multi = run(&names, &[200.0; 5], PolicyKind::Dstack);
+    for (i, n) in names.iter().enumerate() {
+        let m = by_name(n).unwrap();
+        let iso = run(&[n], &[200.0], PolicyKind::Dstack);
+        let iso_b = service_by_batch(&iso, 0, m.knee_pct);
+        let mul_b = service_by_batch(&multi, i, m.knee_pct);
+        // Largest batch size with enough samples in BOTH runs.
+        let bucket = iso_b
+            .keys()
+            .rev()
+            .find(|b| iso_b[b].len() >= 5 && mul_b.get(b).is_some_and(|v| v.len() >= 5))
+            .copied();
+        let (iso_p99, mul_p99) = match bucket {
+            Some(b) => (
+                crate::util::stats::percentile(&iso_b[&b], 99.0),
+                crate::util::stats::percentile(&mul_b[&b], 99.0),
+            ),
+            None => (m.latency_ms(m.knee_pct, 16), m.latency_ms(m.knee_pct, 16)),
+        };
+        let delta = if iso_p99 > 0.0 { (mul_p99 - iso_p99) / iso_p99 * 100.0 } else { 0.0 };
+        out.push(vec![
+            n.to_string(),
+            format!("{}", m.knee_pct),
+            f(iso_p99),
+            f(mul_p99),
+            f(delta),
+        ]);
+    }
+    out
+}
+
+/// Table 6: per-model optimal operating points from the §5 optimizer.
+pub fn table6() -> FigData {
+    let mut out = FigData::new(
+        "table6",
+        "optimizer-derived operating points (V100)",
+        &["model", "knee_%", "slo_ms", "batch", "runtime_ms"],
+    );
+    for row in optimizer::table6(&profile::zoo()) {
+        out.push(vec![
+            row.model,
+            format!("{}", row.knee_pct),
+            format!("{:.0}", row.slo_ms),
+            format!("{}", row.batch),
+            f(row.runtime_ms),
+        ]);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Figures
+// ---------------------------------------------------------------------------
+
+/// Fig. 2: V100 inference latency vs GPU% at batch 16.
+pub fn fig2() -> FigData {
+    let mut out = FigData::new(
+        "fig2",
+        "V100 latency (ms) vs GPU% (batch=16)",
+        &["gpu_pct", "mobilenet", "alexnet", "bert", "resnet18", "resnet50", "inception", "vgg19"],
+    );
+    let models = ["mobilenet", "alexnet", "bert", "resnet18", "resnet50", "inception", "vgg19"];
+    let profiles: Vec<ModelProfile> = models.iter().map(|m| by_name(m).unwrap()).collect();
+    for pct in (10..=100).step_by(10) {
+        let mut row = vec![pct.to_string()];
+        for p in &profiles {
+            row.push(f(p.latency_ms(pct, 16)));
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Fig. 3: latency vs GPU% on P100 and T4 for light models.
+pub fn fig3() -> FigData {
+    let mut out = FigData::new(
+        "fig3",
+        "P100/T4 latency (ms) vs GPU% (batch=16)",
+        &["gpu_pct", "A-P100", "A-T4", "Sq-P100", "Sq-T4", "R-P100", "R-T4"],
+    );
+    let models = ["alexnet", "squeezenet", "resnet50"];
+    let gpus: [&GpuSpec; 2] = [&P100, &T4];
+    for pct in (10..=100).step_by(10) {
+        let mut row = vec![pct.to_string()];
+        for name in models {
+            let m = profile::light_models().into_iter().find(|p| p.name == name).unwrap();
+            for gpu in gpus {
+                row.push(f(m.latency_ms_on(gpu, pct, 16)));
+            }
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Fig. 4a/b: the analytic DNN's latency and knee-metric curves.
+pub fn fig4ab() -> FigData {
+    let mut out = FigData::new(
+        "fig4ab",
+        "analytic model: latency + efficiency vs SMs (N1=20/40/60)",
+        &["sms", "lat_n20", "lat_n40", "lat_n60", "eff_n20", "eff_n40", "eff_n60"],
+    );
+    let dnns = [AnalyticDnn::fig4(20.0), AnalyticDnn::fig4(40.0), AnalyticDnn::fig4(60.0)];
+    for s in 1..=80u32 {
+        let mut row = vec![s.to_string()];
+        for d in &dnns {
+            row.push(f(d.latency_ms(s as f64, 1.0)));
+        }
+        for d in &dnns {
+            row.push(format!("{:.3e}", d.efficiency(s as f64, 1.0)));
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Fig. 4c/d: mobilenet latency + knee metric vs GPU% across batches.
+pub fn fig4cd() -> FigData {
+    let mut out = FigData::new(
+        "fig4cd",
+        "mobilenet latency (ms) and knee GPU% vs batch",
+        &["gpu_pct", "lat_b1", "lat_b2", "lat_b4", "lat_b8", "knee_pct_of_batch"],
+    );
+    let m = by_name("mobilenet").unwrap();
+    for pct in (10..=100).step_by(10) {
+        let knee_note = match pct {
+            10 => m.knee_pct_on(&V100, 1).to_string(),
+            20 => m.knee_pct_on(&V100, 2).to_string(),
+            30 => m.knee_pct_on(&V100, 4).to_string(),
+            40 => m.knee_pct_on(&V100, 8).to_string(),
+            _ => String::new(),
+        };
+        out.push(vec![
+            pct.to_string(),
+            f(m.latency_ms(pct, 1)),
+            f(m.latency_ms(pct, 2)),
+            f(m.latency_ms(pct, 4)),
+            f(m.latency_ms(pct, 8)),
+            knee_note,
+        ]);
+    }
+    out
+}
+
+/// Fig. 5: Mobilenet per-kernel thread counts, GPU% demand and runtime.
+pub fn fig5() -> FigData {
+    let mut out = FigData::new(
+        "fig5",
+        "mobilenet kernels: threads, GPU% demand, runtime share",
+        &["kernel", "threads", "gpu_pct_demand", "runtime_frac", "reps"],
+    );
+    let m = by_name("mobilenet").unwrap();
+    for k in &m.kernels {
+        out.push(vec![
+            k.name.to_string(),
+            k.threads.to_string(),
+            f(V100.pct_for_threads(k.threads)),
+            format!("{:.3}", k.runtime_frac),
+            k.reps.to_string(),
+        ]);
+    }
+    out
+}
+
+/// Fig. 6: knee metric (Eq. 6) per model; BERT at 10 and 20 words.
+pub fn fig6() -> FigData {
+    let mut out = FigData::new(
+        "fig6",
+        "knee metric vs GPU% (batch 16); bert at 10/20 words",
+        &["gpu_pct", "mobilenet", "resnet18", "resnet50", "vgg19", "bert10", "bert20"],
+    );
+    let ms: Vec<ModelProfile> =
+        ["mobilenet", "resnet18", "resnet50", "vgg19"].iter().map(|m| by_name(m).unwrap()).collect();
+    let bert10 = by_name("bert").unwrap();
+    // 20-word sentences: double the work → knee moves right (paper: 30→40%).
+    let bert20 = crate::profile::bert_long();
+    for pct in (5..=100).step_by(5) {
+        let sms = V100.sms_for_pct(pct) as f64;
+        let mut row = vec![pct.to_string()];
+        for m in ms.iter().chain([&bert10, &bert20]) {
+            row.push(format!("{:.3e}", m.dnn.efficiency(sms, 16.0)));
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Fig. 7: ResNet-50 efficacy surface over (batch, GPU%).
+pub fn fig7() -> FigData {
+    let mut out = FigData::new(
+        "fig7",
+        "resnet50 efficacy (Eq. 7) over batch x GPU%",
+        &["batch", "pct10", "pct20", "pct30", "pct40", "pct50", "pct70", "pct100"],
+    );
+    let m = by_name("resnet50").unwrap();
+    let cfg = OptConfig { slo_ms: Some(1e9), ..Default::default() };
+    for b in [1u32, 2, 4, 8, 12, 16] {
+        let mut row = vec![b.to_string()];
+        for pct in [10u32, 20, 30, 40, 50, 70, 100] {
+            let p = optimizer::evaluate(&m, &V100, b, pct, &cfg);
+            row.push(f(p.efficacy));
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Fig. 8: Mobilenet feasibility region + optimal point (SLO 50 ms).
+pub fn fig8() -> FigData {
+    let mut out = FigData::new(
+        "fig8",
+        "mobilenet feasibility (SLO=50ms): rows batch, cols GPU%; *=feasible",
+        &["batch", "p10", "p20", "p30", "p40", "p50", "p70", "p100", "efficacy_at_knee"],
+    );
+    let mut m = by_name("mobilenet").unwrap();
+    m.slo_ms = 50.0;
+    let cfg = OptConfig::default();
+    for b in [1u32, 2, 4, 8, 12, 16] {
+        let mut row = vec![b.to_string()];
+        for pct in [10u32, 20, 30, 40, 50, 70, 100] {
+            let p = optimizer::evaluate(&m, &V100, b, pct, &cfg);
+            row.push(if p.feasible { format!("*{:.1}", p.efficacy) } else { "-".into() });
+        }
+        let knee = m.knee_pct_on(&V100, b);
+        let p = optimizer::evaluate(&m, &V100, b, knee, &cfg);
+        row.push(f(p.efficacy));
+        out.push(row);
+    }
+    let opt = optimizer::optimize(&m, &V100, &cfg).unwrap();
+    out.push(vec![
+        format!("OPT: batch {} @ {}%", opt.batch, opt.gpu_pct),
+        f(opt.latency_ms),
+        f(opt.throughput),
+        f(opt.efficacy),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    out
+}
+
+/// Fig. 9a-c: schedule utilization for temporal, plain spatio-temporal
+/// and full D-STACK on the alexnet/resnet50/vgg19 session.
+pub fn fig9abc() -> FigData {
+    let mut out = FigData::new(
+        "fig9abc",
+        "scheduling of {alexnet,resnet50,vgg19}: mean GPU utilization",
+        &["policy", "util_%", "thpt_req_s", "viol_frac"],
+    );
+    let names = ["alexnet", "resnet50", "vgg19"];
+    let rates = slo_proportional_rates(1_400.0, &[25.0, 50.0, 100.0]);
+    for kind in [PolicyKind::Temporal, PolicyKind::SpatioTemporalOnly, PolicyKind::Dstack] {
+        let rep = run_mix(&names, &rates, kind, 10_000.0, 9);
+        out.push(vec![
+            kind.name().to_string(),
+            f(rep.mean_utilization() * 100.0),
+            f(rep.total_throughput()),
+            format!("{:.3}", rep.violation_fraction()),
+        ]);
+    }
+    out
+}
+
+/// Fig. 9d: ideal vs D-STACK vs GSLICE vs temporal on ConvNet-1/2/3.
+pub fn fig9d() -> FigData {
+    let mut out = FigData::new(
+        "fig9d",
+        "convnet1-3 saturated: utilization and throughput vs ideal",
+        &["policy", "util_%", "thpt_img_s", "thpt_vs_ideal_%"],
+    );
+    let profiles = profile::convnets();
+    let entries = entries_at_optimum(&profiles);
+    let specs: Vec<_> =
+        profiles.iter().map(|p| (Arrivals::Poisson { rate: 2_000.0 }, p.slo_ms)).collect();
+    let reqs = merged_stream(&specs, 5_000.0, 11);
+    let ideal = crate::sched::ideal::run_ideal(&profiles, &V100, 16, 5_000.0, 100);
+    let ideal_thpt: f64 = ideal.throughput.iter().sum();
+    for kind in [PolicyKind::Temporal, PolicyKind::Gslice, PolicyKind::Dstack] {
+        let mut pol = build_policy(kind, &entries);
+        let mut sim =
+            Sim::new(SimConfig { horizon_ms: 5_000.0, ..Default::default() }, entries.clone());
+        let rep = sim.run(pol.as_mut(), &reqs);
+        out.push(vec![
+            kind.name().to_string(),
+            f(rep.mean_utilization() * 100.0),
+            f(rep.total_throughput() * 16.0 / 16.0),
+            f(rep.total_throughput() / ideal_thpt * 100.0),
+        ]);
+    }
+    out.push(vec![
+        "ideal".into(),
+        f(ideal.utilization * 100.0),
+        f(ideal_thpt),
+        f(100.0),
+    ]);
+    out
+}
+
+/// Fig. 10: throughput and GPU runtime per model across schedulers.
+pub fn fig10() -> FigData {
+    let mut out = FigData::new(
+        "fig10",
+        "per-model throughput (req/s) / GPU runtime (s) over 10 s",
+        &["policy", "alexnet", "mobilenet", "resnet50", "vgg19", "fairness_jain"],
+    );
+    let names = ["alexnet", "mobilenet", "resnet50", "vgg19"];
+    let rates = slo_proportional_rates(1_900.0, &[25.0, 25.0, 50.0, 100.0]);
+    for kind in
+        [PolicyKind::Temporal, PolicyKind::MaxThroughput, PolicyKind::MaxMin, PolicyKind::Dstack]
+    {
+        let rep = run_mix(&names, &rates, kind, 10_000.0, 5);
+        let t = rep.throughput();
+        out.push(vec![
+            format!("{} thpt", kind.name()),
+            f(t[0]),
+            f(t[1]),
+            f(t[2]),
+            f(t[3]),
+            format!("{:.3}", rep.runtime_fairness()),
+        ]);
+        out.push(vec![
+            format!("{} runtime_s", kind.name()),
+            f(rep.busy_ms[0] / 1_000.0),
+            f(rep.busy_ms[1] / 1_000.0),
+            f(rep.busy_ms[2] / 1_000.0),
+            f(rep.busy_ms[3] / 1_000.0),
+            String::new(),
+        ]);
+    }
+    out
+}
+
+/// Fig. 11a: throughput + SLO violations for C-2/3/4/7 mixes across
+/// FB / temporal / Triton / GSLICE / D-STACK.
+pub fn fig11a() -> FigData {
+    let mut out = FigData::new(
+        "fig11a",
+        "multiplexing mixes: total throughput (req/s) and violations/s",
+        &["mix", "policy", "thpt", "viol_per_s", "viol_frac", "util_%"],
+    );
+    for mix in ["C-2", "C-3", "C-4", "C-7"] {
+        let spec = fig11a_rates(mix);
+        let names: Vec<&str> = spec.iter().map(|(n, _)| *n).collect();
+        let rates: Vec<f64> = spec.iter().map(|(_, r)| *r).collect();
+        for kind in [
+            PolicyKind::FixedBatch,
+            PolicyKind::Temporal,
+            PolicyKind::Triton,
+            PolicyKind::Gslice,
+            PolicyKind::Dstack,
+        ] {
+            let rep = run_mix(&names, &rates, kind, 10_000.0, 21);
+            out.push(vec![
+                mix.to_string(),
+                kind.name().to_string(),
+                f(rep.total_throughput()),
+                f(rep.total_violations_per_sec()),
+                format!("{:.3}", rep.violation_fraction()),
+                f(rep.mean_utilization() * 100.0),
+            ]);
+        }
+    }
+    out
+}
+
+/// Fig. 11b: D-STACK under dynamically varying rates (5 phases).
+pub fn fig11b() -> FigData {
+    let mut out = FigData::new(
+        "fig11b",
+        "dynamic rates: per-phase served req/s under D-STACK",
+        &["phase", "alexnet", "mobilenet", "resnet50", "vgg19", "util_%"],
+    );
+    let names = ["alexnet", "mobilenet", "resnet50", "vgg19"];
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let entries = entries_at_optimum(&profiles);
+    let phase_ms = 2_000.0;
+    let base = [700.0, 700.0, 320.0, 160.0];
+    let mut specs = Vec::new();
+    for (i, p) in profiles.iter().enumerate() {
+        let mut segments = vec![(0.0, base[i])];
+        for k in 1..5usize {
+            let rate = if k - 1 == i { base[i] * 0.3 } else { base[i] };
+            segments.push((k as f64 * phase_ms, rate));
+        }
+        specs.push((Arrivals::Trace { segments }, p.slo_ms));
+    }
+    let reqs = merged_stream(&specs, 5.0 * phase_ms, 3);
+    let mut pol = build_policy(PolicyKind::Dstack, &entries);
+    let mut sim = Sim::new(
+        SimConfig { horizon_ms: 5.0 * phase_ms, gantt: true, ..Default::default() },
+        entries,
+    );
+    let _rep = sim.run(pol.as_mut(), &reqs);
+    let gantt = sim.gpu.gantt.as_ref().unwrap();
+    for k in 0..5u64 {
+        let lo = k * 2_000_000;
+        let hi = lo + 2_000_000;
+        let mut items = [0f64; 4];
+        let mut busy = 0f64;
+        for e in gantt.iter().filter(|e| e.start >= lo && e.start < hi) {
+            items[e.model] += 1.0;
+            busy += e.pct as f64 * (e.end.min(hi) - e.start) as f64;
+        }
+        out.push(vec![
+            format!("T{k}"),
+            f(items[0]),
+            f(items[1]),
+            f(items[2]),
+            f(items[3]),
+            f(busy / (100.0 * 2_000_000.0) * 100.0),
+        ]);
+    }
+    out
+}
+
+/// Fig. 12: the 4×T4 cluster.
+pub fn fig12() -> FigData {
+    use crate::cluster::{run_cluster, ClusterPolicy};
+    let mut out = FigData::new(
+        "fig12",
+        "4xT4 cluster throughput (req/s)",
+        &["policy", "total", "mobilenet", "alexnet", "resnet50", "vgg19", "util_%"],
+    );
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let rates = [150.0, 150.0, 900.0, 450.0];
+    let horizon_ms = 8_000.0;
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(rates)
+        .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, 77);
+    for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
+        let r = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol);
+        out.push(vec![
+            r.policy.clone(),
+            f(r.total_throughput()),
+            f(r.throughput[0]),
+            f(r.throughput[1]),
+            f(r.throughput[2]),
+            f(r.throughput[3]),
+            f(r.mean_utilization() * 100.0),
+        ]);
+    }
+    out
+}
+
+/// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
+pub fn generate(which: &str) -> Vec<FigData> {
+    match which {
+        "table1" | "t1" => vec![table1()],
+        "table2" | "t2" => vec![table2()],
+        "table3" | "t3" => vec![table3()],
+        "table6" | "t6" => vec![table6()],
+        "2" => vec![fig2()],
+        "3" => vec![fig3()],
+        "4" => vec![fig4ab(), fig4cd()],
+        "5" => vec![fig5()],
+        "6" => vec![fig6()],
+        "7" => vec![fig7()],
+        "8" => vec![fig8()],
+        "9" => vec![fig9abc(), fig9d()],
+        "10" => vec![fig10()],
+        "11" => vec![fig11a(), fig11b()],
+        "12" => vec![fig12()],
+        "tables" => vec![table1(), table2(), table3(), table6()],
+        "ablation" => vec![ablation()],
+        "all" => {
+            let mut v = vec![
+                fig2(),
+                fig3(),
+                fig4ab(),
+                fig4cd(),
+                fig5(),
+                fig6(),
+                fig7(),
+                fig8(),
+                fig9abc(),
+                fig9d(),
+                fig10(),
+                fig11a(),
+                fig11b(),
+                fig12(),
+            ];
+            v.extend([table1(), table2(), table3(), table6()]);
+            v
+        }
+        other => panic!("unknown figure/table id '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_generators_produce_rows() {
+        for d in [table2(), table6(), fig2(), fig3(), fig4ab(), fig4cd(), fig5(), fig6(), fig7(),
+            fig8()]
+        {
+            assert!(!d.rows.is_empty(), "{} empty", d.name);
+            assert!(!d.render().is_empty());
+            // All rows have ≤ header width.
+            for r in &d.rows {
+                assert!(r.len() <= d.header.len() + 1, "{}: ragged row", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fig2_shows_knee_flattening() {
+        let d = fig2();
+        // Mobilenet (col 1): latency at 20% ≈ latency at 100% (flat
+        // beyond knee), but latency at 10% is much higher.
+        let lat = |row: usize, col: usize| d.rows[row][col].parse::<f64>().unwrap();
+        let l10 = lat(0, 1);
+        let l20 = lat(1, 1);
+        let l100 = lat(9, 1);
+        assert!(l10 > 1.3 * l20, "{l10} vs {l20}");
+        assert!((l20 - l100) / l100 < 0.25);
+    }
+
+    #[test]
+    fn table2_classifies_gnmt_memory_bound() {
+        let d = table2();
+        let gnmt = d.rows.iter().find(|r| r[0] == "gnmt").unwrap();
+        assert_eq!(gnmt[5], "Memory");
+        let vgg = d.rows.iter().find(|r| r[0] == "vgg19").unwrap();
+        assert_eq!(vgg[5], "Compute");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extensions beyond the paper: ablations + schedule visualization.
+// ---------------------------------------------------------------------------
+
+/// Ablation of D-STACK's design choices (DESIGN.md §5 "ablation benches"):
+/// each row disables or varies one mechanism on the C-4 workload.
+pub fn ablation() -> FigData {
+    use crate::sched::dstack::{Dstack, DstackCfg};
+    let mut out = FigData::new(
+        "ablation",
+        "D-STACK ablations on C-4 @ 1400 req/s (10 s)",
+        &["variant", "thpt_req_s", "viol_frac", "util_%", "fairness"],
+    );
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let entries = entries_at_optimum(&profiles);
+    let slos: Vec<f64> = profiles.iter().map(|p| p.slo_ms).collect();
+    let rates = slo_proportional_rates(1_400.0, &slos);
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(&rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, 10_000.0, 13);
+
+    let variants: Vec<(&str, DstackCfg)> = vec![
+        ("full (default)", DstackCfg::default()),
+        (
+            "no opportunistic pass",
+            DstackCfg { opportunistic: false, ..Default::default() },
+        ),
+        (
+            "no GPU% degradation",
+            DstackCfg { degrade_levels: vec![1.0], ..Default::default() },
+        ),
+        (
+            "scoreboard window 1",
+            DstackCfg { scoreboard_window: 1, ..Default::default() },
+        ),
+        (
+            "urgency factor 1.0",
+            DstackCfg { urgency_factor: 1.0, ..Default::default() },
+        ),
+        (
+            "urgency factor 4.0",
+            DstackCfg { urgency_factor: 4.0, ..Default::default() },
+        ),
+    ];
+    for (label, cfg) in variants {
+        let mut pol = Dstack::with_cfg(&entries, cfg);
+        let mut sim =
+            Sim::new(SimConfig { horizon_ms: 10_000.0, ..Default::default() }, entries.clone());
+        let rep = sim.run(&mut pol, &reqs);
+        out.push(vec![
+            label.to_string(),
+            f(rep.total_throughput()),
+            format!("{:.3}", rep.violation_fraction()),
+            f(rep.mean_utilization() * 100.0),
+            format!("{:.3}", rep.runtime_fairness()),
+        ]);
+    }
+    out
+}
+
+/// ASCII Gantt chart of one session window (Fig. 9a–c visualization):
+/// rows are models, columns are time buckets, cell = GPU% tens digit.
+pub fn render_gantt(
+    gantt: &[crate::gpu::GanttEntry],
+    n_models: usize,
+    names: &[String],
+    t0: crate::gpu::Us,
+    t1: crate::gpu::Us,
+    cols: usize,
+) -> String {
+    let mut grid = vec![vec![b' '; cols]; n_models];
+    let span = (t1 - t0).max(1);
+    for e in gantt.iter().filter(|e| e.end > t0 && e.start < t1) {
+        let c0 = ((e.start.max(t0) - t0) as usize * cols) / span as usize;
+        let c1 = (((e.end.min(t1) - t0) as usize * cols) / span as usize).max(c0 + 1);
+        let ch = b'0' + ((e.pct / 10).min(9) as u8);
+        for c in c0..c1.min(cols) {
+            grid[e.model][c] = ch;
+        }
+    }
+    let mut out = String::new();
+    let width = names.iter().map(|n| n.len()).max().unwrap_or(8);
+    for (m, row) in grid.iter().enumerate() {
+        out.push_str(&format!("{:>width$} |", names[m], width = width));
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push_str("|\n");
+    }
+    out.push_str(&format!(
+        "{:>width$}  {}..{} ms (cell = GPU% / 10)\n",
+        "",
+        t0 / 1_000,
+        t1 / 1_000,
+        width = width
+    ));
+    out
+}
+
+/// Fig. 9a–c as ASCII Gantt charts (one session of the 3-model mix per
+/// scheduler), written to `results/fig9_gantt.txt` by the CLI.
+pub fn fig9_gantt_text() -> String {
+    let names = ["alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let rates = slo_proportional_rates(1_400.0, &[25.0, 50.0, 100.0]);
+    let mut out = String::new();
+    for kind in [PolicyKind::Temporal, PolicyKind::SpatioTemporalOnly, PolicyKind::Dstack] {
+        let entries = entries_at_optimum(&profiles);
+        let specs: Vec<_> = profiles
+            .iter()
+            .zip(&rates)
+            .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, 1_000.0, 9);
+        let mut pol = build_policy(kind, &entries);
+        let mut sim = Sim::new(
+            SimConfig { horizon_ms: 1_000.0, gantt: true, ..Default::default() },
+            entries,
+        );
+        sim.run(pol.as_mut(), &reqs);
+        out.push_str(&format!("== {} (session 300-500 ms) ==\n", kind.name()));
+        let model_names: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+        out.push_str(&render_gantt(
+            sim.gpu.gantt.as_ref().unwrap(),
+            3,
+            &model_names,
+            300_000,
+            500_000,
+            100,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod ext_tests {
+    use super::*;
+
+    #[test]
+    fn ablation_full_beats_no_opportunistic() {
+        let d = ablation();
+        let get = |label: &str, col: usize| -> f64 {
+            d.rows.iter().find(|r| r[0] == label).unwrap()[col].parse().unwrap()
+        };
+        // The opportunistic pass is load-bearing: disabling it must cost
+        // throughput or violations (Fig. 9b vs 9c).
+        let full_thpt = get("full (default)", 1);
+        let noop_thpt = get("no opportunistic pass", 1);
+        let full_viol = get("full (default)", 2);
+        let noop_viol = get("no opportunistic pass", 2);
+        assert!(
+            full_thpt > noop_thpt || full_viol < noop_viol,
+            "opportunistic pass shows no benefit: thpt {full_thpt} vs {noop_thpt}, viol {full_viol} vs {noop_viol}"
+        );
+    }
+
+    #[test]
+    fn gantt_renderer_shapes() {
+        use crate::gpu::GanttEntry;
+        let g = vec![
+            GanttEntry { model: 0, pct: 30, batch: 16, start: 0, end: 50_000 },
+            GanttEntry { model: 1, pct: 50, batch: 16, start: 25_000, end: 100_000 },
+        ];
+        let txt = render_gantt(&g, 2, &["a".into(), "b".into()], 0, 100_000, 40);
+        assert!(txt.contains('3') && txt.contains('5'));
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 3);
+        // Model a occupies the first half only.
+        let a_line = lines[0];
+        assert!(a_line[..a_line.len() / 2].contains('3'));
+    }
+
+    #[test]
+    fn fig9_gantt_text_renders_all_three() {
+        let t = fig9_gantt_text();
+        assert!(t.contains("temporal") && t.contains("spatio_temporal") && t.contains("dstack"));
+    }
+}

@@ -1,0 +1,387 @@
+//! Simulated GPU device: SM-partitioned spatial multiplexing with MPS
+//! semantics (§2, §3.2).
+//!
+//! The simulator tracks, in virtual time, which model instances occupy
+//! which fraction of the GPU (CUDA-MPS `ACTIVE_THREAD_PERCENTAGE`-style
+//! caps with SM isolation), the utilization integral, an optional Gantt
+//! log (Fig. 9), and the §3.2 dynamic-reconfiguration mechanics:
+//! changing a model's GPU% spins up a standby process whose load is
+//! masked by the active instance (parameter sharing via cudaIPC cuts the
+//! transient memory copy by ~40%), leaving only a ~100 µs idle gap.
+
+use crate::profile::GpuSpec;
+
+/// Virtual time in microseconds.
+pub type Us = u64;
+
+pub const US_PER_MS: f64 = 1_000.0;
+
+pub fn ms_to_us(ms: f64) -> Us {
+    (ms * US_PER_MS).round().max(0.0) as Us
+}
+
+pub fn us_to_ms(us: Us) -> f64 {
+    us as f64 / US_PER_MS
+}
+
+/// Reconfiguration cost model (§3.2 / paper contribution ii).
+#[derive(Debug, Clone)]
+pub struct ReconfigModel {
+    /// GPU idle gap when a standby takes over (paper: < 100 µs).
+    pub takeover_gap_us: Us,
+    /// Fraction of weight memory the standby re-loads when parameter
+    /// sharing (cudaIPC) is enabled (paper: sharing saves up to 40%).
+    pub shared_load_fraction: f64,
+    /// Whether parameter sharing is enabled.
+    pub param_sharing: bool,
+}
+
+impl Default for ReconfigModel {
+    fn default() -> Self {
+        ReconfigModel { takeover_gap_us: 100, shared_load_fraction: 0.6, param_sharing: true }
+    }
+}
+
+/// One resident instance of a model on the simulated GPU.
+#[derive(Debug, Clone)]
+pub struct Resident {
+    pub model: usize,
+    /// GPU% this instance was started with (immutable per process —
+    /// CUDA MPS fixes the thread percentage at process start).
+    pub pct: u32,
+    /// Weight memory held, MiB.
+    pub mem_mib: u64,
+}
+
+/// A batch currently executing.
+#[derive(Debug, Clone)]
+pub struct Running {
+    pub id: u64,
+    pub model: usize,
+    pub batch: u32,
+    pub pct: u32,
+    /// SMs the model can actually exploit (min(pct, knee at this
+    /// batch)); utilization integrates this, capacity books `pct`.
+    /// §6.1: "We compute GPU utilization by using Knee% for each model."
+    pub useful_pct: u32,
+    pub start: Us,
+    pub end: Us,
+}
+
+/// Gantt entry for schedule visualizations (Fig. 9a–c).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GanttEntry {
+    pub model: usize,
+    pub pct: u32,
+    pub batch: u32,
+    pub start: Us,
+    pub end: Us,
+}
+
+/// The simulated device.
+#[derive(Debug)]
+pub struct GpuSim {
+    pub spec: GpuSpec,
+    pub reconfig: ReconfigModel,
+    running: Vec<Running>,
+    residents: Vec<Resident>,
+    next_id: u64,
+    /// If true, aggregate GPU% may exceed 100 (uncontrolled default MPS,
+    /// used by the Fixed-Batch baseline). Controlled policies keep it
+    /// false so oversubscription panics (an invariant violation).
+    pub allow_oversub: bool,
+    // Utilization accounting: ∫ pct dt, advanced lazily.
+    last_advance: Us,
+    util_integral_pct_us: f64,
+    /// Per-model busy integral (pct·µs) for runtime-share metrics.
+    busy_pct_us: Vec<f64>,
+    /// Per-model wall-clock busy time (µs, counted at any pct).
+    busy_us: Vec<Us>,
+    /// Idle time injected by reconfiguration gaps (µs).
+    pub reconfig_idle_us: Us,
+    pub gantt: Option<Vec<GanttEntry>>,
+}
+
+impl GpuSim {
+    pub fn new(spec: GpuSpec, n_models: usize, gantt: bool) -> GpuSim {
+        GpuSim {
+            spec,
+            reconfig: ReconfigModel::default(),
+            running: Vec::new(),
+            residents: Vec::new(),
+            next_id: 0,
+            allow_oversub: false,
+            last_advance: 0,
+            util_integral_pct_us: 0.0,
+            busy_pct_us: vec![0.0; n_models],
+            busy_us: vec![0; n_models],
+            reconfig_idle_us: 0,
+            gantt: if gantt { Some(Vec::new()) } else { None },
+        }
+    }
+
+    /// Aggregate GPU% currently booked.
+    pub fn used_pct(&self) -> u32 {
+        self.running.iter().map(|r| r.pct).sum()
+    }
+
+    pub fn free_pct(&self) -> u32 {
+        100u32.saturating_sub(self.used_pct())
+    }
+
+    pub fn running(&self) -> &[Running] {
+        &self.running
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn n_running_of(&self, model: usize) -> usize {
+        self.running.iter().filter(|r| r.model == model).count()
+    }
+
+    /// Advance the utilization integral to `now`.
+    fn advance(&mut self, now: Us) {
+        debug_assert!(now >= self.last_advance, "time went backwards");
+        let dt = (now - self.last_advance) as f64;
+        if dt > 0.0 {
+            let useful: u32 = self.running.iter().map(|r| r.useful_pct).sum();
+            self.util_integral_pct_us += useful.min(100) as f64 * dt;
+            for r in &self.running {
+                self.busy_pct_us[r.model] += r.useful_pct as f64 * dt;
+            }
+            self.last_advance = now;
+        }
+    }
+
+    /// Start a batch occupying `pct`% for `[now, now+dur_us)`, of which
+    /// `useful_pct` is productive (see [`Running::useful_pct`]).
+    /// Returns the instance id whose completion the caller must schedule.
+    pub fn launch_useful(
+        &mut self,
+        now: Us,
+        model: usize,
+        batch: u32,
+        pct: u32,
+        useful_pct: u32,
+        dur_us: Us,
+    ) -> u64 {
+        self.advance(now);
+        assert!(pct >= 1 && pct <= 100, "pct out of range: {pct}");
+        if !self.allow_oversub {
+            assert!(
+                self.used_pct() + pct <= 100,
+                "GPU oversubscribed: {} + {pct} > 100 (model {model})",
+                self.used_pct()
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let end = now + dur_us;
+        let useful_pct = useful_pct.min(pct);
+        self.running.push(Running { id, model, batch, pct, useful_pct, start: now, end });
+        self.busy_us[model] += dur_us;
+        if let Some(g) = self.gantt.as_mut() {
+            g.push(GanttEntry { model, pct, batch, start: now, end });
+        }
+        id
+    }
+
+    /// [`Self::launch_useful`] with the whole allocation productive.
+    pub fn launch(&mut self, now: Us, model: usize, batch: u32, pct: u32, dur_us: Us) -> u64 {
+        self.launch_useful(now, model, batch, pct, pct, dur_us)
+    }
+
+    /// Complete (remove) a running instance.
+    pub fn complete(&mut self, now: Us, id: u64) -> Running {
+        self.advance(now);
+        let idx = self
+            .running
+            .iter()
+            .position(|r| r.id == id)
+            .unwrap_or_else(|| panic!("completing unknown instance {id}"));
+        self.running.swap_remove(idx)
+    }
+
+    /// §3.2 — make a model resident at a GPU%, or change its allocation.
+    ///
+    /// Returns the virtual time when the (re)configured instance is ready
+    /// to serve. With an existing resident the standby load is fully
+    /// masked (the old instance keeps serving) and only the takeover gap
+    /// is charged as idle; a cold start pays the full (or shared) load.
+    pub fn configure(&mut self, now: Us, model: usize, pct: u32, load_ms: f64, mem_mib: u64) -> Us {
+        self.advance(now);
+        let existing = self.residents.iter().position(|r| r.model == model);
+        match existing {
+            Some(i) => {
+                if self.residents[i].pct == pct {
+                    return now; // already configured
+                }
+                // Overlapped active-standby reload: masked load, tiny gap.
+                self.residents[i].pct = pct;
+                self.reconfig_idle_us += self.reconfig.takeover_gap_us;
+                now + self.reconfig.takeover_gap_us
+            }
+            None => {
+                let frac = if self.reconfig.param_sharing && !self.residents.is_empty() {
+                    self.reconfig.shared_load_fraction
+                } else {
+                    1.0
+                };
+                self.residents.push(Resident { model, pct, mem_mib });
+                now + ms_to_us(load_ms * frac)
+            }
+        }
+    }
+
+    pub fn resident_pct(&self, model: usize) -> Option<u32> {
+        self.residents.iter().find(|r| r.model == model).map(|r| r.pct)
+    }
+
+    /// Total resident weight memory (MiB) — oversubscription of device
+    /// memory is a hard failure, as on the real device.
+    pub fn resident_mem_mib(&self) -> u64 {
+        self.residents.iter().map(|r| r.mem_mib).sum()
+    }
+
+    /// Mean GPU utilization in `[0, horizon_us]` as a fraction of 0..1.
+    pub fn utilization(&mut self, horizon_us: Us) -> f64 {
+        self.advance(horizon_us);
+        if horizon_us == 0 {
+            return 0.0;
+        }
+        self.util_integral_pct_us / (100.0 * horizon_us as f64)
+    }
+
+    /// Per-model GPU wall-clock busy time in ms (Fig. 10b).
+    pub fn busy_ms(&self) -> Vec<f64> {
+        self.busy_us.iter().map(|&us| us_to_ms(us)).collect()
+    }
+
+    /// Per-model share of the pct·time integral.
+    pub fn busy_share(&self) -> Vec<f64> {
+        let total: f64 = self.busy_pct_us.iter().sum();
+        if total == 0.0 {
+            return vec![0.0; self.busy_pct_us.len()];
+        }
+        self.busy_pct_us.iter().map(|v| v / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::V100;
+
+    fn gpu() -> GpuSim {
+        GpuSim::new(V100.clone(), 3, true)
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let mut g = gpu();
+        assert_eq!(g.free_pct(), 100);
+        let a = g.launch(0, 0, 16, 40, 1_000);
+        let _b = g.launch(0, 1, 16, 60, 2_000);
+        assert_eq!(g.free_pct(), 0);
+        g.complete(1_000, a);
+        assert_eq!(g.free_pct(), 40);
+        assert_eq!(g.n_running(), 1);
+        assert_eq!(g.n_running_of(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribed")]
+    fn oversubscription_panics_when_controlled() {
+        let mut g = gpu();
+        g.launch(0, 0, 16, 60, 1_000);
+        g.launch(0, 1, 16, 50, 1_000);
+    }
+
+    #[test]
+    fn oversubscription_allowed_for_default_mps() {
+        let mut g = gpu();
+        g.allow_oversub = true;
+        g.launch(0, 0, 16, 80, 1_000);
+        g.launch(0, 1, 16, 80, 1_000);
+        assert_eq!(g.used_pct(), 160);
+        assert_eq!(g.free_pct(), 0);
+    }
+
+    #[test]
+    fn utilization_integral() {
+        let mut g = gpu();
+        // 50% busy for half the horizon → 25% utilization.
+        let id = g.launch(0, 0, 16, 50, 5_000);
+        g.complete(5_000, id);
+        let u = g.utilization(10_000);
+        assert!((u - 0.25).abs() < 1e-9, "{u}");
+    }
+
+    #[test]
+    fn utilization_clamps_oversub_at_100() {
+        let mut g = gpu();
+        g.allow_oversub = true;
+        let a = g.launch(0, 0, 16, 80, 10_000);
+        let b = g.launch(0, 1, 16, 80, 10_000);
+        g.complete(10_000, a);
+        g.complete(10_000, b);
+        let u = g.utilization(10_000);
+        assert!((u - 1.0).abs() < 1e-9, "{u}");
+    }
+
+    #[test]
+    fn busy_time_per_model() {
+        let mut g = gpu();
+        let a = g.launch(0, 0, 16, 40, 2_000);
+        let b = g.launch(0, 2, 16, 30, 4_000);
+        g.complete(2_000, a);
+        g.complete(4_000, b);
+        let busy = g.busy_ms();
+        assert!((busy[0] - 2.0).abs() < 1e-9);
+        assert!((busy[1] - 0.0).abs() < 1e-9);
+        assert!((busy[2] - 4.0).abs() < 1e-9);
+        let share = g.busy_share();
+        let expect0 = (40.0 * 2000.0) / (40.0 * 2000.0 + 30.0 * 4000.0);
+        assert!((share[0] - expect0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reconfig_masks_load_for_resident_models() {
+        let mut g = gpu();
+        // Cold start pays the load (first model: no sharing possible).
+        let ready = g.configure(0, 0, 50, 8_000.0, 1_000);
+        assert_eq!(ready, ms_to_us(8_000.0));
+        // Re-allocation is near-instant: only the takeover gap.
+        let ready2 = g.configure(ready, 0, 25, 8_000.0, 1_000);
+        assert_eq!(ready2, ready + g.reconfig.takeover_gap_us);
+        assert_eq!(g.resident_pct(0), Some(25));
+        assert_eq!(g.reconfig_idle_us, 100);
+        // Same pct → no-op.
+        assert_eq!(g.configure(ready2, 0, 25, 8_000.0, 1_000), ready2);
+    }
+
+    #[test]
+    fn param_sharing_reduces_cold_load_of_second_model() {
+        let mut g = gpu();
+        g.configure(0, 0, 50, 8_000.0, 1_000);
+        // Second model cold-loads with cudaIPC weight sharing: 60%.
+        let ready = g.configure(0, 1, 30, 10_000.0, 800);
+        assert_eq!(ready, ms_to_us(6_000.0));
+        assert_eq!(g.resident_mem_mib(), 1_800);
+    }
+
+    #[test]
+    fn gantt_records_launches() {
+        let mut g = gpu();
+        let id = g.launch(100, 1, 8, 40, 900);
+        g.complete(1_000, id);
+        let gantt = g.gantt.as_ref().unwrap();
+        assert_eq!(gantt.len(), 1);
+        assert_eq!(
+            gantt[0],
+            GanttEntry { model: 1, pct: 40, batch: 8, start: 100, end: 1_000 }
+        );
+    }
+}

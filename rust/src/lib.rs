@@ -1,0 +1,37 @@
+//! # D-STACK — spatio-temporal GPU inference scheduling
+//!
+//! Reproduction of *"D-STACK: High Throughput DNN Inference by Effective
+//! Multiplexing and Spatio-Temporal Scheduling of GPUs"* (Dhakal,
+//! Kulkarni, Ramakrishnan, 2023) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! - **L3 (this crate)** — the paper's contribution: request routing,
+//!   batching, the knee/efficacy analytical models (§4–5), and the
+//!   D-STACK spatio-temporal scheduler plus all baselines (§6–7), driven
+//!   either in virtual time (paper-scale experiments on the GPU
+//!   simulator) or in real time against PJRT-executed model artifacts.
+//! - **L2** — `python/compile/model.py`: the JAX mini model zoo,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`.
+//! - **L1** — `python/compile/kernels/`: Pallas kernels (matmul, conv,
+//!   attention, layernorm) called from L2, validated against pure-jnp
+//!   oracles.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a module and bench target.
+
+pub mod analytic;
+pub mod batching;
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod gpu;
+pub mod metrics;
+pub mod optimizer;
+pub mod profile;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,168 @@
+//! `dstack` — the leader binary: serve real models (PJRT), run
+//! virtual-time scheduling experiments, and regenerate every table and
+//! figure of the paper.
+//!
+//! Subcommands:
+//!   figures  --fig <2|3|4|...|12|all> [--out results]
+//!   tables   --table <1|2|3|6|all>    [--out results]
+//!   simulate --config <scenario.json>
+//!   optimize --model <name> [--slo ms]
+//!   profile  --model <name> [--batch N]
+//!   serve    [--seconds N] [--rate-scale X] [--policy dstack|fifo]
+//!   selfcheck
+
+use dstack::util::cli::Args;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("figures") => figures(&args, args.get_or("fig", "all")),
+        Some("tables") => {
+            let t = args.get_or("table", "all");
+            let key = if t == "all" { "tables".to_string() } else { format!("table{t}") };
+            figures(&args, &key)
+        }
+        Some("simulate") => simulate(&args),
+        Some("optimize") => optimize(&args),
+        Some("profile") => profile_cmd(&args),
+        Some("serve") => serve(&args),
+        Some("selfcheck") => selfcheck(),
+        _ => {
+            eprintln!(
+                "usage: dstack <figures|tables|simulate|optimize|profile|serve|selfcheck> [opts]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn figures(args: &Args, which: &str) -> anyhow::Result<()> {
+    let out_dir = Path::new(args.get_or("out", "results")).to_path_buf();
+    for data in dstack::figures::generate(which) {
+        println!("{}\n", data.render());
+        data.write_csv(&out_dir)?;
+    }
+    if which == "9" || which == "all" {
+        let gantt = dstack::figures::fig9_gantt_text();
+        println!("{gantt}");
+        dstack::util::write_file(&out_dir.join("fig9_gantt.txt"), &gantt)?;
+    }
+    if which == "all" {
+        let d = dstack::figures::ablation();
+        println!("{}\n", d.render());
+        d.write_csv(&out_dir)?;
+    }
+    println!("(CSV written to {})", out_dir.display());
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or(args.get("config"))
+        .ok_or_else(|| anyhow::anyhow!("simulate needs a scenario file"))?;
+    let sc = dstack::config::Scenario::from_file(Path::new(path))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rep = dstack::config::run_scenario(&sc);
+    println!("scenario '{}' policy={} horizon={}s", sc.name, rep.policy, rep.horizon_s());
+    let mut rows = Vec::new();
+    for (i, m) in rep.per_model.iter().enumerate() {
+        let s = m.latency_summary();
+        rows.push(vec![
+            m.name.clone(),
+            m.served.to_string(),
+            m.slo_violations().to_string(),
+            format!("{:.1}", rep.throughput()[i]),
+            format!("{:.1}", s.p50),
+            format!("{:.1}", s.p99),
+            format!("{:.1}", m.mean_batch()),
+        ]);
+    }
+    println!(
+        "{}",
+        dstack::util::ascii_table(
+            &["model", "served", "viol", "req/s", "p50_ms", "p99_ms", "mean_batch"],
+            &rows
+        )
+    );
+    println!(
+        "total {:.0} req/s, utilization {:.1}%, violation fraction {:.3}",
+        rep.total_throughput(),
+        rep.mean_utilization() * 100.0,
+        rep.violation_fraction()
+    );
+    Ok(())
+}
+
+fn optimize(args: &Args) -> anyhow::Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let mut m = dstack::profile::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+    if let Some(slo) = args.get("slo") {
+        m.slo_ms = slo.parse()?;
+    }
+    let cfg = dstack::optimizer::OptConfig::default();
+    match dstack::optimizer::optimize(&m, &dstack::profile::V100, &cfg) {
+        Some(p) => println!(
+            "{name}: batch {} @ {}% GPU — latency {:.1} ms, throughput {:.0}/s, η {:.2} (slo {} ms)",
+            p.batch, p.gpu_pct, p.latency_ms, p.throughput, p.efficacy, m.slo_ms
+        ),
+        None => println!("{name}: no feasible operating point under SLO {} ms", m.slo_ms),
+    }
+    Ok(())
+}
+
+fn profile_cmd(args: &Args) -> anyhow::Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let b = args.get_u64("batch", 16) as u32;
+    let m = dstack::profile::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+    println!("{name} (batch {b}): latency vs GPU% on V100");
+    for pct in (5..=100).step_by(5) {
+        let l = m.latency_ms(pct, b);
+        let marker = if pct == m.knee_pct_on(&dstack::profile::V100, b) { "  <- knee" } else { "" };
+        println!("  {pct:>3}%  {l:>8.2} ms{marker}");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    use dstack::coordinator::{Coordinator, ServeConfig, ServeModel, ServePolicy};
+    let seconds = args.get_f64("seconds", 10.0);
+    let scale = args.get_f64("rate-scale", 1.0);
+    let policy = match args.get_or("policy", "dstack") {
+        "fifo" => ServePolicy::Fifo,
+        _ => ServePolicy::DstackRt,
+    };
+    let rt = dstack::runtime::Runtime::new(&dstack::runtime::artifacts_dir())?;
+    let mut coord = Coordinator::new(rt);
+    let cfg = ServeConfig {
+        models: vec![
+            ServeModel { name: "mobilenet_mini".into(), rate: 60.0 * scale, slo_ms: 100.0 },
+            ServeModel { name: "alexnet_mini".into(), rate: 60.0 * scale, slo_ms: 100.0 },
+            ServeModel { name: "resnet_mini".into(), rate: 30.0 * scale, slo_ms: 200.0 },
+            ServeModel { name: "vgg_mini".into(), rate: 15.0 * scale, slo_ms: 400.0 },
+        ],
+        policy,
+        duration: std::time::Duration::from_secs_f64(seconds),
+        seed: args.get_u64("seed", 42),
+    };
+    let rep = coord.serve(&cfg)?;
+    println!("{}", rep.render());
+    println!(
+        "total {:.0} req/s, violation fraction {:.3}",
+        rep.total_throughput(),
+        rep.violation_fraction()
+    );
+    Ok(())
+}
+
+fn selfcheck() -> anyhow::Result<()> {
+    let mut rt = dstack::runtime::Runtime::new(&dstack::runtime::artifacts_dir())?;
+    let n = rt.load_all_checked()?;
+    println!("all {n} artifacts compiled + numerics verified against JAX");
+    Ok(())
+}

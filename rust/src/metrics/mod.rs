@@ -1,0 +1,161 @@
+//! Serving metrics: per-model throughput, latency distributions, SLO
+//! violations (paper's definition: violating requests + unserved
+//! requests, §7), GPU runtime share and utilization, plus Jain fairness.
+
+use crate::gpu::{us_to_ms, Us};
+use crate::util::stats::{jain_fairness, Summary};
+
+/// Per-model counters collected during a run.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    pub name: String,
+    /// Requests that completed (any latency).
+    pub served: u64,
+    /// Served requests that finished within their SLO.
+    pub served_in_slo: u64,
+    /// Requests dropped (deadline passed before service started).
+    pub dropped: u64,
+    /// End-to-end latencies (ms) of served requests.
+    pub latencies_ms: Vec<f64>,
+    /// Batches executed.
+    pub batches: u64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batch_items: u64,
+}
+
+impl ModelMetrics {
+    /// Paper §7: SLO violations = late completions + unserved requests.
+    pub fn slo_violations(&self) -> u64 {
+        (self.served - self.served_in_slo) + self.dropped
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.served + self.dropped
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_items as f64 / self.batches as f64
+        }
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from_samples(&self.latencies_ms)
+    }
+}
+
+/// Full run report.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub policy: String,
+    pub horizon_us: Us,
+    pub per_model: Vec<ModelMetrics>,
+    /// Mean GPU utilization over the horizon, 0..1 (per GPU).
+    pub gpu_utilization: Vec<f64>,
+    /// Per-model GPU busy wall-clock ms (summed over GPUs).
+    pub busy_ms: Vec<f64>,
+    /// Virtual time of the last batch completion (µs) — task-completion
+    /// metric for Table 1.
+    pub last_completion_us: Us,
+}
+
+impl RunReport {
+    pub fn horizon_s(&self) -> f64 {
+        us_to_ms(self.horizon_us) / 1_000.0
+    }
+
+    /// Per-model throughput in served requests/s.
+    pub fn throughput(&self) -> Vec<f64> {
+        let s = self.horizon_s();
+        self.per_model.iter().map(|m| m.served as f64 / s).collect()
+    }
+
+    pub fn total_throughput(&self) -> f64 {
+        self.throughput().iter().sum()
+    }
+
+    /// Per-model SLO violations per second.
+    pub fn violations_per_sec(&self) -> Vec<f64> {
+        let s = self.horizon_s();
+        self.per_model.iter().map(|m| m.slo_violations() as f64 / s).collect()
+    }
+
+    pub fn total_violations_per_sec(&self) -> f64 {
+        self.violations_per_sec().iter().sum()
+    }
+
+    /// Fraction of all offered requests that violated their SLO.
+    pub fn violation_fraction(&self) -> f64 {
+        let offered: u64 = self.per_model.iter().map(|m| m.offered()).sum();
+        if offered == 0 {
+            return 0.0;
+        }
+        let viol: u64 = self.per_model.iter().map(|m| m.slo_violations()).sum();
+        viol as f64 / offered as f64
+    }
+
+    /// Mean utilization across GPUs.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.gpu_utilization.is_empty() {
+            return 0.0;
+        }
+        self.gpu_utilization.iter().sum::<f64>() / self.gpu_utilization.len() as f64
+    }
+
+    /// Jain fairness over per-model GPU busy time (Fig. 10b discussion).
+    pub fn runtime_fairness(&self) -> f64 {
+        jain_fairness(&self.busy_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm(served: u64, in_slo: u64, dropped: u64) -> ModelMetrics {
+        ModelMetrics {
+            name: "m".into(),
+            served,
+            served_in_slo: in_slo,
+            dropped,
+            latencies_ms: vec![10.0; served as usize],
+            batches: served / 4,
+            batch_items: served,
+        }
+    }
+
+    #[test]
+    fn violations_counts_late_and_unserved() {
+        let m = mm(100, 90, 20);
+        assert_eq!(m.slo_violations(), 30);
+        assert_eq!(m.offered(), 120);
+    }
+
+    #[test]
+    fn report_rates() {
+        let r = RunReport {
+            policy: "test".into(),
+            horizon_us: 10_000_000, // 10 s
+            per_model: vec![mm(1000, 950, 50), mm(500, 500, 0)],
+            gpu_utilization: vec![0.8],
+            busy_ms: vec![4_000.0, 4_000.0],
+            last_completion_us: 9_999_000,
+        };
+        assert!((r.horizon_s() - 10.0).abs() < 1e-12);
+        assert_eq!(r.throughput(), vec![100.0, 50.0]);
+        assert!((r.total_throughput() - 150.0).abs() < 1e-12);
+        assert_eq!(r.violations_per_sec(), vec![10.0, 0.0]);
+        assert!((r.violation_fraction() - 100.0 / 1550.0).abs() < 1e-12);
+        assert!((r.runtime_fairness() - 1.0).abs() < 1e-12);
+        assert!((r.mean_utilization() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let m = mm(100, 100, 0);
+        assert!((m.mean_batch() - 4.0).abs() < 1e-12);
+        assert_eq!(ModelMetrics::default().mean_batch(), 0.0);
+    }
+}

@@ -1,0 +1,498 @@
+//! Model and GPU profiles: the measured quantities the paper obtains by
+//! NVPROF profiling (§3, §4.4), reconstructed here by calibrating the
+//! analytical model (§4.3) to the published operating points (Table 6,
+//! §6.2, Fig. 3). All downstream components — the optimizer, the GPU
+//! simulator and every scheduler — consume latency exclusively through
+//! [`ModelProfile::latency_ms`], so the calibrated analytic surface is
+//! the single latency oracle of the system.
+
+use crate::analytic::{calibrate, AnalyticDnn};
+use std::collections::BTreeMap;
+
+/// A GPU device type (paper testbeds: V100, P100, T4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Number of streaming multiprocessors.
+    pub sms: u32,
+    /// Max resident threads per SM (paper uses 2048 for the V100).
+    pub threads_per_sm: u32,
+    /// Device memory in MiB.
+    pub mem_mib: u64,
+    /// Arithmetic-intensity threshold (FLOP/byte); kernels above are
+    /// compute-bound (§4.1; NVIDIA reports 139.8 for the V100).
+    pub aint_threshold: f64,
+    /// Relative *per-SM* throughput vs the V100 (clock/architecture);
+    /// the SM-count difference is already captured by the analytic
+    /// model's S-dependence, so this must not re-count it.
+    pub rel_capacity: f64,
+}
+
+pub const V100: GpuSpec = GpuSpec {
+    name: "V100",
+    sms: 80,
+    threads_per_sm: 2048,
+    mem_mib: 16 * 1024,
+    aint_threshold: 139.8,
+    rel_capacity: 1.0,
+};
+
+pub const P100: GpuSpec = GpuSpec {
+    name: "P100",
+    sms: 56,
+    threads_per_sm: 2048,
+    mem_mib: 16 * 1024,
+    aint_threshold: 66.0,
+    rel_capacity: 0.85,
+};
+
+pub const T4: GpuSpec = GpuSpec {
+    name: "T4",
+    sms: 40,
+    threads_per_sm: 1024,
+    mem_mib: 16 * 1024,
+    aint_threshold: 203.0,
+    rel_capacity: 0.85,
+};
+
+impl GpuSpec {
+    pub fn by_name(name: &str) -> Option<&'static GpuSpec> {
+        match name {
+            "V100" => Some(&V100),
+            "P100" => Some(&P100),
+            "T4" => Some(&T4),
+            _ => None,
+        }
+    }
+
+    /// SM count for a GPU percentage (paper: 50% of V100 = 40 SMs).
+    pub fn sms_for_pct(&self, pct: u32) -> u32 {
+        ((pct.min(100) as f64 / 100.0 * self.sms as f64).round() as u32).max(1)
+    }
+
+    /// GPU% needed to run `threads` concurrently (Fig. 5's Y2 axis).
+    pub fn pct_for_threads(&self, threads: u64) -> f64 {
+        let total = self.sms as u64 * self.threads_per_sm as u64;
+        threads as f64 / total as f64 * 100.0
+    }
+}
+
+/// One representative GPU kernel of a model (Table 2 / Fig. 5 data).
+#[derive(Debug, Clone)]
+pub struct KernelInfo {
+    pub name: &'static str,
+    /// Floating point operations per invocation.
+    pub gflops: f64,
+    /// Bytes moved per invocation (×10⁶).
+    pub mbytes: f64,
+    /// GPU threads requested.
+    pub threads: u64,
+    /// Runtime share of one inference (fraction, for Fig. 5 bubbles).
+    pub runtime_frac: f64,
+    /// Times this kernel runs per inference (`R_i`).
+    pub reps: u32,
+}
+
+impl KernelInfo {
+    /// Arithmetic intensity in FLOP/byte (§4.1).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.gflops * 1e9 / (self.mbytes * 1e6)
+    }
+
+    /// Compute- or memory-bound classification against a GPU threshold.
+    pub fn is_compute_bound(&self, gpu: &GpuSpec) -> bool {
+        self.arithmetic_intensity() >= gpu.aint_threshold
+    }
+}
+
+/// Everything the framework knows about one servable model.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// Knee GPU% on the V100 at the profiled batch (Table 6 col 2).
+    pub knee_pct: u32,
+    /// Application SLO in ms (Table 6 col 3).
+    pub slo_ms: f64,
+    /// Profiled/optimal batch size (Table 6 col 4).
+    pub opt_batch: u32,
+    /// Runtime at (knee, opt_batch) in ms (Table 6 col 5).
+    pub runtime_ms: f64,
+    /// Calibrated analytical latency model.
+    pub dnn: AnalyticDnn,
+    /// Cold model-load time (framework init + weight upload), ms (§3.2
+    /// reports "10s of seconds" for big frameworks; we default 8000).
+    pub load_ms: f64,
+    /// GPU memory footprint of loaded weights+activations, MiB.
+    pub mem_mib: u64,
+    /// Representative kernels (may be empty for schedulers-only models).
+    pub kernels: Vec<KernelInfo>,
+    /// Maximum batch size the model accepts (Eq. 10's MaxBatchSize).
+    pub max_batch: u32,
+}
+
+impl ModelProfile {
+    /// Latency (ms) at `gpu_pct`% of `gpu` with batch `b` — the f_L(p,b)
+    /// surface of §5 (fitted there; analytic here).
+    pub fn latency_ms_on(&self, gpu: &GpuSpec, gpu_pct: u32, b: u32) -> f64 {
+        let sms = gpu.sms_for_pct(gpu_pct);
+        self.dnn.latency_ms(sms as f64, b as f64) / gpu.rel_capacity
+    }
+
+    /// Latency on the default V100 testbed.
+    pub fn latency_ms(&self, gpu_pct: u32, b: u32) -> f64 {
+        self.latency_ms_on(&V100, gpu_pct, b)
+    }
+
+    /// Knee GPU% on an arbitrary GPU at batch `b`.
+    pub fn knee_pct_on(&self, gpu: &GpuSpec, b: u32) -> u32 {
+        let sms = self.dnn.knee_sms(b as f64, gpu.sms);
+        ((sms as f64 / gpu.sms as f64) * 100.0).ceil() as u32
+    }
+
+    /// Throughput (items/s) at an operating point.
+    pub fn throughput(&self, gpu_pct: u32, b: u32) -> f64 {
+        b as f64 / (self.latency_ms(gpu_pct, b) / 1000.0)
+    }
+}
+
+fn model(
+    name: &str,
+    knee_pct: u32,
+    slo_ms: f64,
+    opt_batch: u32,
+    runtime_ms: f64,
+    serial_frac: f64,
+    mem_mib: u64,
+    kernels: Vec<KernelInfo>,
+) -> ModelProfile {
+    let knee_sms = V100.sms_for_pct(knee_pct);
+    let dnn = calibrate(knee_sms, runtime_ms, opt_batch as f64, V100.sms, serial_frac);
+    ModelProfile {
+        name: name.to_string(),
+        knee_pct,
+        slo_ms,
+        opt_batch,
+        runtime_ms,
+        dnn,
+        load_ms: 8_000.0,
+        mem_mib,
+        kernels,
+        max_batch: 16,
+    }
+}
+
+/// The paper's Table 6 model zoo, calibrated so that knee%, SLO, batch
+/// and runtime match the published values on the V100.
+pub fn zoo() -> Vec<ModelProfile> {
+    vec![
+        model("mobilenet", 20, 25.0, 16, 10.0, 0.45, 600, mobilenet_kernels()),
+        model("alexnet", 30, 25.0, 16, 8.0, 0.35, 800, alexnet_kernels()),
+        model("bert", 30, 25.0, 16, 9.0, 0.35, 1300, bert_kernels()),
+        model("resnet50", 40, 50.0, 16, 28.0, 0.25, 1100, resnet50_kernels()),
+        model("vgg19", 50, 100.0, 16, 55.0, 0.15, 2200, vgg19_kernels()),
+        model("resnet18", 30, 25.0, 16, 12.0, 0.35, 700, Vec::new()),
+        model("inception", 40, 50.0, 16, 25.0, 0.25, 1000, Vec::new()),
+        model("resnext50", 50, 100.0, 16, 40.0, 0.15, 1200, Vec::new()),
+    ]
+}
+
+/// §6.2's three LeNet-style ConvNets (knee-runtime pairs as published).
+pub fn convnets() -> Vec<ModelProfile> {
+    vec![
+        model("convnet1", 30, 50.0, 16, 10.3, 0.35, 200, Vec::new()),
+        model("convnet2", 40, 50.0, 16, 14.6, 0.30, 260, Vec::new()),
+        model("convnet3", 60, 100.0, 16, 15.4, 0.20, 320, Vec::new()),
+    ]
+}
+
+/// Fig. 3's light models for the P100/T4 cross-GPU validation.
+pub fn light_models() -> Vec<ModelProfile> {
+    vec![
+        model("squeezenet", 20, 25.0, 16, 7.0, 0.45, 300, Vec::new()),
+        model("alexnet", 30, 25.0, 16, 8.0, 0.35, 800, alexnet_kernels()),
+        model("resnet50", 40, 50.0, 16, 28.0, 0.25, 1100, resnet50_kernels()),
+    ]
+}
+
+/// Look up a model by name across all built-in profiles.
+pub fn by_name(name: &str) -> Option<ModelProfile> {
+    zoo()
+        .into_iter()
+        .chain(convnets())
+        .chain(light_models())
+        .chain(std::iter::once(gnmt_profile()))
+        .find(|m| m.name == name)
+}
+
+/// Registry keyed by name (convenience for config loading).
+pub fn registry() -> BTreeMap<String, ModelProfile> {
+    let mut map = BTreeMap::new();
+    for m in zoo().into_iter().chain(convnets()).chain(light_models()) {
+        map.entry(m.name.clone()).or_insert(m);
+    }
+    map.insert("gnmt".into(), gnmt_profile());
+    map
+}
+
+/// BERT on 20-word sentences (Fig. 6b): double the tokens roughly
+/// doubles the attention work — higher latency, knee moves right
+/// (paper: 30% → 40%).
+pub fn bert_long() -> ModelProfile {
+    model("bert20", 40, 25.0, 16, 15.0, 0.3, 1300, bert_kernels())
+}
+
+/// GNMT appears only in Table 2 (memory-bound LSTM kernel).
+pub fn gnmt_profile() -> ModelProfile {
+    model(
+        "gnmt",
+        50,
+        100.0,
+        16,
+        60.0,
+        0.5,
+        1800,
+        vec![KernelInfo {
+            name: "LSTM",
+            gflops: 0.016,
+            mbytes: 8.38,
+            threads: 65_536,
+            runtime_frac: 0.6,
+            reps: 8,
+        }],
+    )
+}
+
+// ---- Table 2 kernels ------------------------------------------------------
+// GFLOPs and bytes follow the paper's Table 2. Where the printed FLOPs,
+// bytes and A.int are mutually inconsistent (Alexnet Conv.2: 0.30 GFLOP /
+// 0.22 MB would be 1364 FLOP/B, printed 182; ResNet-50 Conv.2: would be
+// 851, printed 393) we keep the printed *A.int* — the quantity the
+// classification in §4.1 actually uses — and derive bytes from it.
+
+fn alexnet_kernels() -> Vec<KernelInfo> {
+    vec![KernelInfo {
+        name: "Conv.2",
+        gflops: 0.30,
+        mbytes: 0.30e3 / 182.0, // bytes chosen so A.int = 182 (printed)
+        threads: 290_400,
+        runtime_frac: 0.22,
+        reps: 1,
+    }]
+}
+
+fn resnet50_kernels() -> Vec<KernelInfo> {
+    vec![KernelInfo {
+        name: "Conv.2",
+        gflops: 0.103,
+        mbytes: 0.103e3 / 393.0, // A.int = 393 (printed)
+        threads: 200_704,
+        runtime_frac: 0.05,
+        reps: 16,
+    }]
+}
+
+fn vgg19_kernels() -> Vec<KernelInfo> {
+    vec![KernelInfo {
+        name: "Conv.11",
+        gflops: 3.7,
+        mbytes: 9.44, // consistent with printed A.int 391
+        threads: 401_408,
+        runtime_frac: 0.09,
+        reps: 4,
+    }]
+}
+
+fn bert_kernels() -> Vec<KernelInfo> {
+    vec![KernelInfo {
+        name: "attention",
+        gflops: 0.18,
+        mbytes: 1.2,
+        threads: 49_152,
+        runtime_frac: 0.35,
+        reps: 12,
+    }]
+}
+
+/// Fig. 5: Mobilenet's 11 distinct kernels, 156 executions total.
+/// Thread counts and runtime shares are synthesized to match the figure's
+/// description: kernels 3, 4 and 6 demand > 100% of the V100
+/// (> 163,840 threads) but are short; kernels 7 and 10 run long at < 10%.
+fn mobilenet_kernels() -> Vec<KernelInfo> {
+    let k = |name, threads, runtime_frac, reps, gflops, mbytes| KernelInfo {
+        name,
+        threads,
+        runtime_frac,
+        reps,
+        gflops,
+        mbytes,
+    };
+    vec![
+        k("conv_s2", 100_352, 0.04, 1, 0.021, 0.30),
+        k("dwconv3x3_a", 150_528, 0.06, 4, 0.009, 0.60),
+        k("conv1x1_expand_a", 602_112, 0.03, 5, 0.055, 0.25),   // >100% GPU
+        k("relu6", 802_816, 0.02, 35, 0.001, 0.80),             // >100% GPU
+        k("dwconv3x3_b", 75_264, 0.07, 8, 0.012, 0.45),
+        k("conv1x1_expand_b", 301_056, 0.04, 10, 0.060, 0.22),  // >100% GPU
+        k("conv1x1_project", 12_544, 0.28, 22, 0.048, 0.18),    // long, <10%
+        k("dwconv3x3_c", 25_088, 0.09, 18, 0.014, 0.35),
+        k("batchnorm", 50_176, 0.05, 35, 0.002, 0.50),
+        k("conv1x1_tail", 6_272, 0.26, 17, 0.052, 0.15),        // long, <10%
+        k("global_pool_fc", 2_048, 0.06, 1, 0.003, 0.08),
+    ]
+}
+
+/// Total kernel executions per inference (Fig. 5 reports 156).
+pub fn mobilenet_kernel_executions() -> u32 {
+    mobilenet_kernels().iter().map(|k| k.reps).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_operating_points_reproduced() {
+        // knee%, SLO, batch and runtime must match the paper's Table 6.
+        let want: &[(&str, u32, f64, u32, f64)] = &[
+            ("mobilenet", 20, 25.0, 16, 10.0),
+            ("alexnet", 30, 25.0, 16, 8.0),
+            ("bert", 30, 25.0, 16, 9.0),
+            ("resnet50", 40, 50.0, 16, 28.0),
+            ("vgg19", 50, 100.0, 16, 55.0),
+            ("resnet18", 30, 25.0, 16, 12.0),
+            ("inception", 40, 50.0, 16, 25.0),
+            ("resnext50", 50, 100.0, 16, 40.0),
+        ];
+        let zoo = zoo();
+        assert_eq!(zoo.len(), want.len());
+        for (m, (name, knee, slo, batch, rt)) in zoo.iter().zip(want) {
+            assert_eq!(&m.name, name);
+            assert_eq!(m.knee_pct, *knee);
+            assert_eq!(m.slo_ms, *slo);
+            assert_eq!(m.opt_batch, *batch);
+            // Calibrated latency at the knee equals the published runtime.
+            let lat = m.latency_ms(m.knee_pct, m.opt_batch);
+            assert!(
+                (lat - rt).abs() / rt < 1e-6,
+                "{name}: latency at knee {lat} vs published {rt}"
+            );
+            // And the analytic knee really is at the published GPU%.
+            assert_eq!(m.knee_pct_on(&V100, m.opt_batch), *knee, "{name} knee");
+        }
+    }
+
+    #[test]
+    fn latency_increases_below_knee() {
+        for m in zoo() {
+            let at_knee = m.latency_ms(m.knee_pct, 16);
+            let below = m.latency_ms(m.knee_pct / 2, 16);
+            assert!(
+                below > at_knee * 1.5,
+                "{}: below-knee {below} vs knee {at_knee}",
+                m.name
+            );
+            // Above the knee the improvement is marginal (< 25%).
+            let above = m.latency_ms(100, 16);
+            assert!(above > at_knee * 0.75, "{}: {above} vs {at_knee}", m.name);
+        }
+    }
+
+    #[test]
+    fn table2_aint_classification() {
+        // Compute-bound: alexnet/resnet50/vgg19 conv kernels; memory-bound:
+        // GNMT LSTM (A.int ≈ 2 < 139.8).
+        let alex = &alexnet_kernels()[0];
+        assert!((alex.arithmetic_intensity() - 182.0).abs() < 1.0);
+        assert!(alex.is_compute_bound(&V100));
+        let r50 = &resnet50_kernels()[0];
+        assert!((r50.arithmetic_intensity() - 393.0).abs() < 1.0);
+        assert!(r50.is_compute_bound(&V100));
+        let vgg = &vgg19_kernels()[0];
+        assert!((vgg.arithmetic_intensity() - 391.0).abs() < 3.0);
+        assert!(vgg.is_compute_bound(&V100));
+        let lstm = &gnmt_profile().kernels[0];
+        assert!(lstm.arithmetic_intensity() < 3.0);
+        assert!(!lstm.is_compute_bound(&V100));
+    }
+
+    #[test]
+    fn mobilenet_fig5_shape() {
+        let ks = mobilenet_kernels();
+        assert_eq!(ks.len(), 11, "11 distinct kernels");
+        assert_eq!(mobilenet_kernel_executions(), 156, "156 executions");
+        // Runtime fractions sum to ~1.
+        let total: f64 = ks.iter().map(|k| k.runtime_frac).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // Some kernels demand >100% GPU; they must be short.
+        let over: Vec<_> = ks.iter().filter(|k| V100.pct_for_threads(k.threads) > 100.0).collect();
+        assert_eq!(over.len(), 3);
+        for k in &over {
+            assert!(k.runtime_frac < 0.05, "{} is over-100% but long", k.name);
+        }
+        // The biggest runtime contributors demand <10% GPU.
+        let mut by_rt = ks.clone();
+        by_rt.sort_by(|a, b| b.runtime_frac.partial_cmp(&a.runtime_frac).unwrap());
+        for k in &by_rt[..2] {
+            assert!(V100.pct_for_threads(k.threads) < 10.0, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn gpu_pct_to_sms() {
+        assert_eq!(V100.sms_for_pct(50), 40); // paper's example
+        assert_eq!(V100.sms_for_pct(100), 80);
+        assert_eq!(V100.sms_for_pct(0), 1); // clamp: at least one SM
+        assert_eq!(T4.sms_for_pct(50), 20);
+    }
+
+    #[test]
+    fn cross_gpu_knee_exists_for_light_models() {
+        // Fig. 3: alexnet/squeezenet show a knee on P100 and T4 too.
+        for m in light_models() {
+            if m.name == "resnet50" {
+                continue; // paper: no obvious knee on smaller GPUs
+            }
+            for gpu in [&P100, &T4] {
+                let knee = m.knee_pct_on(gpu, 16);
+                assert!(
+                    knee < 100,
+                    "{} on {} should knee below 100% (got {knee})",
+                    m.name,
+                    gpu.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn convnet_profiles_match_section_6_2() {
+        let cs = convnets();
+        let want = [("convnet1", 30, 10.3), ("convnet2", 40, 14.6), ("convnet3", 60, 15.4)];
+        for (c, (name, knee, rt)) in cs.iter().zip(want) {
+            assert_eq!(c.name, name);
+            assert_eq!(c.knee_pct, knee);
+            let lat = c.latency_ms(c.knee_pct, 16);
+            assert!((lat - rt).abs() / rt < 1e-6);
+        }
+    }
+
+    #[test]
+    fn registry_contains_all() {
+        let r = registry();
+        for name in
+            ["mobilenet", "alexnet", "bert", "resnet50", "vgg19", "convnet1", "squeezenet", "gnmt"]
+        {
+            assert!(r.contains_key(name), "missing {name}");
+        }
+        assert!(by_name("vgg19").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn throughput_at_knee_matches_ratio() {
+        let m = by_name("resnet50").unwrap();
+        let t = m.throughput(40, 16);
+        // 16 images / 28 ms ≈ 571 img/s.
+        assert!((t - 16.0 / 0.028).abs() < 1.0, "{t}");
+    }
+}

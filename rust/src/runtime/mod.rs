@@ -1,0 +1,306 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/
+//! aot.py` (HLO *text* — see /opt/xla-example/README.md for why not
+//! serialized protos) and executes them on the PJRT CPU client from the
+//! L3 hot path. Python never runs at serving time: model weights are
+//! regenerated in-process with the same splitmix64 scheme the compile
+//! path used, and validated against the manifest's self-check outputs.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One weight tensor's recipe (mirrors `Spec.params` in model.py).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub seed: u64,
+    pub scale: f64,
+}
+
+/// Expected output for the deterministic iota input (cross-language
+/// correctness contract).
+#[derive(Debug, Clone)]
+pub struct SelfCheck {
+    pub output_sum: f64,
+    pub output_first8: Vec<f64>,
+}
+
+/// Manifest entry for one (model, batch) artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub model: String,
+    pub batch: u32,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub selfcheck: SelfCheck,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts").map_err(|e| anyhow!(e))?.as_arr().unwrap_or(&[]) {
+            let shapes = |key: &str| -> Result<Vec<usize>> {
+                Ok(a.req(key)
+                    .map_err(|e| anyhow!(e))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not an array"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect())
+            };
+            let mut params = Vec::new();
+            for p in a.req("params").map_err(|e| anyhow!(e))?.as_arr().unwrap_or(&[]) {
+                params.push(ParamSpec {
+                    name: p.req_str("name").map_err(|e| anyhow!(e))?.to_string(),
+                    shape: p
+                        .req("shape")
+                        .map_err(|e| anyhow!(e))?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    seed: p.req_u64("seed").map_err(|e| anyhow!(e))?,
+                    scale: p.req_f64("scale").map_err(|e| anyhow!(e))?,
+                });
+            }
+            let sc = a.req("selfcheck").map_err(|e| anyhow!(e))?;
+            artifacts.push(Artifact {
+                model: a.req_str("model").map_err(|e| anyhow!(e))?.to_string(),
+                batch: a.req_u64("batch").map_err(|e| anyhow!(e))? as u32,
+                file: a.req_str("file").map_err(|e| anyhow!(e))?.to_string(),
+                input_shape: shapes("input_shape")?,
+                output_shape: shapes("output_shape")?,
+                params,
+                selfcheck: SelfCheck {
+                    output_sum: sc.req_f64("output_sum").map_err(|e| anyhow!(e))?,
+                    output_first8: sc
+                        .req("output_first8")
+                        .map_err(|e| anyhow!(e))?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("output_first8"))?
+                        .iter()
+                        .filter_map(Json::as_f64)
+                        .collect(),
+                },
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, model: &str, batch: u32) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.model == model && a.batch == batch)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.artifacts.iter().map(|a| a.model.clone()).collect();
+        names.dedup();
+        names
+    }
+
+    /// Batch sizes available for a model, ascending.
+    pub fn batches(&self, model: &str) -> Vec<u32> {
+        let mut bs: Vec<u32> =
+            self.artifacts.iter().filter(|a| a.model == model).map(|a| a.batch).collect();
+        bs.sort_unstable();
+        bs
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic weights (bit-identical to python's model.det_weights).
+// ---------------------------------------------------------------------------
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Regenerate a weight tensor (row-major) exactly as the compile path
+/// did: element i of parameter `seed` is splitmix64(seed·2³² + i) mapped
+/// to [-scale, scale] via its top 53 bits.
+pub fn det_weights(shape: &[usize], seed: u64, scale: f64) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    let base = seed << 32;
+    (0..n as u64)
+        .map(|i| {
+            let z = splitmix64(base.wrapping_add(i));
+            let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            ((2.0 * u - 1.0) * scale) as f32
+        })
+        .collect()
+}
+
+/// The deterministic self-check input (normalized iota — matches
+/// `model.deterministic_input`).
+pub fn iota_input(shape: &[usize]) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    (0..n).map(|i| i as f32 / n as f32 - 0.5).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Executable cache + execution.
+// ---------------------------------------------------------------------------
+
+/// A compiled (model, batch) executable with its resident weights.
+pub struct Loaded {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+}
+
+impl Loaded {
+    /// Run one batch. `input` must have `batch × item_len` elements.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want: usize = self.artifact.input_shape.iter().product();
+        if input.len() != want {
+            bail!("input length {} != expected {want}", input.len());
+        }
+        let dims: Vec<i64> = self.artifact.input_shape.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(input).reshape(&dims)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&x);
+        args.extend(self.weights.iter());
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Items per input batch.
+    pub fn batch(&self) -> u32 {
+        self.artifact.batch
+    }
+
+    /// Run the manifest self-check: the iota input must reproduce the
+    /// logits JAX computed at build time.
+    pub fn selfcheck(&self) -> Result<()> {
+        let out = self.infer(&iota_input(&self.artifact.input_shape))?;
+        let sum: f64 = out.iter().map(|&v| v as f64).sum();
+        let want = &self.artifact.selfcheck;
+        if (sum - want.output_sum).abs() > 1e-3 * (1.0 + want.output_sum.abs()) {
+            bail!("selfcheck sum mismatch: got {sum}, want {}", want.output_sum);
+        }
+        for (i, (&got, &w)) in out.iter().zip(want.output_first8.iter()).enumerate() {
+            if (got as f64 - w).abs() > 1e-3 * (1.0 + w.abs()) {
+                bail!("selfcheck[{i}]: got {got}, want {w}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// PJRT runtime: compile-once cache of (model, batch) executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: BTreeMap<(String, u32), Loaded>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: BTreeMap::new() })
+    }
+
+    /// Compile (or fetch cached) the executable for (model, batch) and
+    /// materialize its weights.
+    pub fn load(&mut self, model: &str, batch: u32) -> Result<&Loaded> {
+        let key = (model.to_string(), batch);
+        if !self.cache.contains_key(&key) {
+            let artifact = self
+                .manifest
+                .find(model, batch)
+                .ok_or_else(|| anyhow!("no artifact for {model} b{batch}"))?
+                .clone();
+            let path = self.manifest.dir.join(&artifact.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let mut weights = Vec::with_capacity(artifact.params.len());
+            for p in &artifact.params {
+                let vals = det_weights(&p.shape, p.seed, p.scale);
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                weights.push(xla::Literal::vec1(&vals).reshape(&dims)?);
+            }
+            self.cache.insert(key.clone(), Loaded { artifact, exe, weights });
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Fetch an already-loaded executable.
+    pub fn get(&self, model: &str, batch: u32) -> Option<&Loaded> {
+        self.cache.get(&(model.to_string(), batch))
+    }
+
+    /// Load + self-check every artifact (startup validation).
+    pub fn load_all_checked(&mut self) -> Result<usize> {
+        let entries: Vec<(String, u32)> =
+            self.manifest.artifacts.iter().map(|a| (a.model.clone(), a.batch)).collect();
+        for (m, b) in &entries {
+            self.load(m, *b)?.selfcheck().with_context(|| format!("{m} b{b}"))?;
+        }
+        Ok(entries.len())
+    }
+}
+
+/// Default artifacts directory: `$DSTACK_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("DSTACK_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_pins() {
+        // Sanity: distinct, deterministic, full-range.
+        assert_eq!(splitmix64(0), splitmix64(0));
+        assert_ne!(splitmix64(0), splitmix64(1));
+    }
+
+    #[test]
+    fn det_weights_distribution_and_contract() {
+        let w = det_weights(&[10_000], 7, 1.0);
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!(w.iter().all(|v| (-1.0..=1.0).contains(v)));
+        // Scale linearity (same contract as python test).
+        let a = det_weights(&[4], 0, 1.0);
+        let b = det_weights(&[4], 0, 0.5);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x * 0.5 - y).abs() < 1e-7);
+        }
+        // Seed decorrelation.
+        assert_ne!(det_weights(&[4], 0, 1.0), det_weights(&[4], 1, 1.0));
+    }
+
+    #[test]
+    fn iota_matches_python_contract() {
+        // python: deterministic_input((2,2)) == [[-0.5,-0.25],[0,0.25]]
+        assert_eq!(iota_input(&[2, 2]), vec![-0.5, -0.25, 0.0, 0.25]);
+    }
+
+    #[test]
+    fn manifest_parse_rejects_missing() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,637 @@
+//! D-STACK: dynamic, fair spatio-temporal scheduling (§6).
+//!
+//! Two cooperating mechanisms per *session* (period of the largest SLO):
+//!
+//! 1. **Static spatio-temporal plan** (§6.1.1). Each model gets
+//!    `⌈session/SLO⌉` planned instances with per-instance release times
+//!    `k·SLO` and deadlines `(k+1)·SLO` (spreading consecutive instances
+//!    of short-SLO models as far apart as possible); instances are placed
+//!    EDF-first onto a capacity-reservation timeline
+//!    ([`super::CapTimeline`]), never oversubscribing 100% GPU and never
+//!    preempting. If a model's knee doesn't fit by its deadline, reduced
+//!    GPU% levels are tried (the paper: "D-STACK's scheduler can also
+//!    schedule a model with GPU% lower than its Knee, albeit with high
+//!    inference latency").
+//!
+//! 2. **Fair, opportunistic, dynamic pass** (§6.1.2). Triggered on every
+//!    request arrival and batch completion. Models are offered idle
+//!    capacity in scoreboard order (fewest runs in the last ten sessions
+//!    first). A dynamic launch fires when a full optimal batch is queued
+//!    or the oldest request is under deadline pressure, and commits only
+//!    if the remaining plan can be *recomputed* to coexist with it (the
+//!    paper's "dynamically recomputes the schedule") — so opportunism
+//!    never endangers other models' planned instances.
+
+use super::{session_len_us, CapTimeline, Scoreboard};
+use crate::batching::{choose_batch, BatchPolicy};
+use crate::gpu::{ms_to_us, GpuSim, Us};
+use crate::sim::{Launch, ModelEntry, Policy, SimView};
+
+/// One planned (not yet executed) instance.
+#[derive(Debug, Clone)]
+struct Planned {
+    model: usize,
+    start: Us,
+    end: Us,
+    pct: u32,
+    release: Us,
+    deadline: Us,
+    /// Required instances realize the per-SLO-window guarantee; optional
+    /// (half-offset) ones are best-effort and may be dropped on replan.
+    required: bool,
+}
+
+/// D-STACK policy configuration.
+#[derive(Debug, Clone)]
+pub struct DstackCfg {
+    /// Enable the opportunistic dynamic pass (disable to obtain the
+    /// "plain spatio-temporal" schedule of Fig. 9b).
+    pub opportunistic: bool,
+    /// Scoreboard window in sessions (§6.1.2 uses ten).
+    pub scoreboard_window: usize,
+    /// GPU% levels (fractions of knee) tried when the knee doesn't fit.
+    pub degrade_levels: Vec<f64>,
+    /// Deadline-pressure factor: a dynamic launch fires when the oldest
+    /// request's slack falls below `factor × inference latency + 2 ms`.
+    /// 2.5 empirically minimizes SLO violations on the C-4 mix (see
+    /// EXPERIMENTS.md §Notes for the sweep).
+    pub urgency_factor: f64,
+}
+
+impl Default for DstackCfg {
+    fn default() -> Self {
+        DstackCfg {
+            opportunistic: true,
+            scoreboard_window: 10,
+            degrade_levels: vec![1.0, 0.75, 0.5],
+            urgency_factor: 2.5,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Dstack {
+    cfg: DstackCfg,
+    session_us: Us,
+    session_start: Us,
+    planned: Vec<Planned>,
+    scoreboard: Scoreboard,
+    initialized: bool,
+    /// Statistics: dynamic launches committed (for tests/reports).
+    pub dynamic_launches: u64,
+    /// Statistics: planned launches executed.
+    pub planned_launches: u64,
+}
+
+impl Dstack {
+    pub fn from_entries(models: &[ModelEntry]) -> Dstack {
+        Dstack::with_cfg(models, DstackCfg::default())
+    }
+
+    pub fn with_cfg(models: &[ModelEntry], cfg: DstackCfg) -> Dstack {
+        let session_us = session_len_us(models);
+        Dstack {
+            scoreboard: Scoreboard::new(models.len(), cfg.scoreboard_window),
+            cfg,
+            session_us,
+            session_start: 0,
+            planned: Vec::new(),
+            initialized: false,
+            dynamic_launches: 0,
+            planned_launches: 0,
+        }
+    }
+
+    /// Base timeline: capacity held by batches already running on the GPU.
+    fn running_timeline(now: Us, gpu: &GpuSim) -> CapTimeline {
+        let mut tl = CapTimeline::new();
+        for r in gpu.running() {
+            if r.end > now {
+                tl.add(now, r.end, r.pct);
+            }
+        }
+        tl
+    }
+
+    /// EDF placement of `insts` (release/deadline/model triples) onto
+    /// `timeline`. Returns the placements; instances that cannot fit even
+    /// degraded are skipped (the dynamic pass may still serve them).
+    fn place_instances(
+        &self,
+        insts: &mut [(usize, Us, Us)], // (model, release, deadline)
+        models: &[ModelEntry],
+        gpu_spec: &crate::profile::GpuSpec,
+        timeline: &mut CapTimeline,
+        not_before: Us,
+        required: bool,
+    ) -> Vec<Planned> {
+        // EDF: earliest deadline first; longer runtime first on ties so
+        // bulky instances grab contiguous capacity early.
+        insts.sort_by(|a, b| {
+            a.2.cmp(&b.2).then_with(|| {
+                let ra = models[a.0].profile.runtime_ms;
+                let rb = models[b.0].profile.runtime_ms;
+                rb.partial_cmp(&ra).unwrap()
+            })
+        });
+        let mut placed = Vec::new();
+        for &mut (model, release, deadline) in insts {
+            let e = &models[model];
+            let release = release.max(not_before);
+            for level in &self.cfg.degrade_levels {
+                let pct = ((e.pct as f64 * level).round() as u32).max(5);
+                let dur = ms_to_us(e.profile.latency_ms_on(gpu_spec, pct, e.batch)).max(1);
+                if deadline < dur || deadline - dur < release {
+                    continue;
+                }
+                let latest_start = deadline - dur;
+                if let Some(s) = timeline.earliest_fit(release, latest_start, dur, pct, 100) {
+                    timeline.add(s, s + dur, pct);
+                    placed.push(Planned {
+                        model,
+                        start: s,
+                        end: s + dur,
+                        pct,
+                        release,
+                        deadline,
+                        required,
+                    });
+                    break;
+                }
+            }
+        }
+        placed.sort_by_key(|p| p.start);
+        placed
+    }
+
+    /// Build the session's static EDF plan (§6.1.1).
+    fn build_plan(&mut self, t0: Us, models: &[ModelEntry], gpu: &GpuSim) {
+        self.session_start = t0;
+        let mut timeline = Self::running_timeline(t0, gpu);
+        // Required instances: one per SLO window per model (§6.1's hard
+        // constraint: "the DNN model must be scheduled at least once
+        // before an interval equal to its SLO").
+        let mut required: Vec<(usize, Us, Us)> = Vec::new();
+        // Optional instances: for models satisfying Eq. 12 (runtime ≤
+        // SLO/2), an extra half-offset instance per window, so a request
+        // arriving just after a launch still meets its deadline via the
+        // next one (wait ≤ SLO/2, run ≤ SLO/2). Placed only in capacity
+        // left over after all required instances fit.
+        let mut optional: Vec<(usize, Us, Us)> = Vec::new();
+        for (j, e) in models.iter().enumerate() {
+            let slo = ms_to_us(e.profile.slo_ms);
+            let n = self.session_us.div_ceil(slo).max(1);
+            for k in 0..n {
+                required.push((j, t0 + k * slo, t0 + (k + 1) * slo));
+            }
+            let lat = e.profile.latency_ms_on(&gpu.spec, e.pct, e.batch);
+            if lat <= e.profile.slo_ms / 2.0 {
+                for k in 0..n {
+                    let rel = t0 + k * slo + slo / 2;
+                    let dl = (rel + slo).min(t0 + self.session_us + slo / 2);
+                    optional.push((j, rel, dl));
+                }
+            }
+        }
+        self.planned =
+            self.place_instances(&mut required, models, &gpu.spec, &mut timeline, t0, true);
+        let extra =
+            self.place_instances(&mut optional, models, &gpu.spec, &mut timeline, t0, false);
+        self.planned.extend(extra);
+        self.planned.sort_by_key(|p| p.start);
+    }
+
+    /// Re-place all pending planned instances around a tentative dynamic
+    /// launch `(model, pct, [now, now+dur))`, excluding the launching
+    /// model's next pending instance (the launch absorbs it). Returns the
+    /// new plan if every other pending instance still fits.
+    fn replan_with_launch(
+        &self,
+        v: &SimView,
+        model: usize,
+        pct: u32,
+        dur: Us,
+    ) -> Option<Vec<Planned>> {
+        let mut timeline = Self::running_timeline(v.now, v.gpu);
+        if timeline.peak(v.now, v.now + dur) + pct > 100 {
+            return None;
+        }
+        timeline.add(v.now, v.now + dur, pct);
+        // Pending instances, minus the launching model's next one (the
+        // launch absorbs it). Required instances must all re-fit;
+        // optional ones are re-placed best-effort.
+        let mut absorbed = false;
+        let mut req: Vec<(usize, Us, Us)> = Vec::new();
+        let mut opt: Vec<(usize, Us, Us)> = Vec::new();
+        for p in &self.planned {
+            if p.model == model && !absorbed {
+                absorbed = true;
+                continue;
+            }
+            if p.required {
+                req.push((p.model, p.release, p.deadline));
+            } else {
+                opt.push((p.model, p.release, p.deadline));
+            }
+        }
+        let must_place = req.len();
+        let mut placed =
+            self.place_instances(&mut req, v.models, &v.gpu.spec, &mut timeline, v.now, true);
+        if placed.len() != must_place {
+            return None;
+        }
+        placed.extend(self.place_instances(
+            &mut opt,
+            v.models,
+            &v.gpu.spec,
+            &mut timeline,
+            v.now,
+            false,
+        ));
+        placed.sort_by_key(|p| p.start);
+        Some(placed)
+    }
+
+    /// Pop planned instances due at `now`; returns launches. At most one
+    /// launch per model per round: the view's queue lengths are a
+    /// snapshot, so a second instance of the same model must wait for
+    /// the next dispatch round (the engine re-calls until quiescent).
+    fn due_planned(&mut self, v: &SimView) -> Vec<Launch> {
+        let mut out: Vec<Launch> = Vec::new();
+        let mut i = 0;
+        while i < self.planned.len() {
+            if self.planned[i].start > v.now
+                || out.iter().any(|l| l.model == self.planned[i].model)
+            {
+                i += 1;
+                continue;
+            }
+            let p = self.planned.remove(i);
+            let queued = v.queue_len(p.model);
+            if queued == 0 {
+                continue; // capacity freed for the dynamic pass
+            }
+            if v.gpu.free_pct() < p.pct {
+                // Carried-over occupancy squeezed this slot out; the
+                // dynamic pass will reschedule the work.
+                continue;
+            }
+            let e = &v.models[p.model];
+            // Prefer a batch that finishes before the oldest request's
+            // deadline; if none can, serve the largest batch anyway
+            // (late service still beats dropping).
+            let budget = v.deadline_budget_ms(p.model);
+            let mut b = choose_batch(
+                BatchPolicy::Optimal,
+                &e.profile,
+                &v.gpu.spec,
+                queued,
+                e.batch,
+                p.pct,
+                budget,
+            );
+            if b == 0 {
+                b = choose_batch(
+                    BatchPolicy::Optimal,
+                    &e.profile,
+                    &v.gpu.spec,
+                    queued,
+                    e.batch,
+                    p.pct,
+                    None,
+                );
+            }
+            if b == 0 {
+                continue;
+            }
+            self.scoreboard.record_run(p.model);
+            self.planned_launches += 1;
+            out.push(Launch { model: p.model, batch: b, pct: p.pct, latency_ms_override: None });
+        }
+        out
+    }
+
+    /// Opportunistic dynamic pass (§6.1.2).
+    fn dynamic_pass(&mut self, v: &SimView) -> Vec<Launch> {
+        if !self.cfg.opportunistic {
+            return Vec::new();
+        }
+        // Candidate order: deadline-pressured models first (tightest
+        // slack first — EDF spirit), then full-batch opportunities in
+        // scoreboard-fairness order. (Small Vecs; measured: allocation
+        // here is <5% of the event path — kept simple, see §Perf.)
+        let mut urgent_models: Vec<(u64, usize)> = Vec::new();
+        let mut full_models: Vec<usize> = Vec::new();
+        for j in self.scoreboard.priority_order() {
+            let e = &v.models[j];
+            let queued = v.queue_len(j);
+            if queued == 0 || v.gpu.n_running_of(j) > 0 {
+                continue;
+            }
+            // Opportunistic ≠ eager: fire with a full optimal batch, or
+            // under deadline pressure (§5: under-filled batches waste
+            // GPU%·time).
+            let full = queued >= e.batch as usize;
+            let slack_ms = v.deadline_budget_ms(j).unwrap_or(f64::INFINITY);
+            let need_ms =
+                e.profile.latency_ms_on(&v.gpu.spec, e.pct, (queued as u32).min(e.batch));
+            let urgent = slack_ms <= self.cfg.urgency_factor * need_ms + 2.0;
+            if urgent {
+                urgent_models.push((v.oldest_deadline(j).unwrap_or(u64::MAX), j));
+            } else if full {
+                full_models.push(j);
+            }
+        }
+        urgent_models.sort();
+        let order: Vec<usize> =
+            urgent_models.into_iter().map(|(_, j)| j).chain(full_models).collect();
+        for j in order {
+            let e = &v.models[j];
+            let queued = v.queue_len(j);
+            for level in &self.cfg.degrade_levels {
+                let pct = ((e.pct as f64 * level).round() as u32).max(5);
+                if v.gpu.free_pct() < pct {
+                    continue;
+                }
+                let b = choose_batch(
+                    BatchPolicy::Optimal,
+                    &e.profile,
+                    &v.gpu.spec,
+                    queued,
+                    e.batch,
+                    pct,
+                    None,
+                );
+                if b == 0 {
+                    continue;
+                }
+                let dur = ms_to_us(e.profile.latency_ms_on(&v.gpu.spec, pct, b)).max(1);
+                // Fast path (§Perf): if the launch fits under current
+                // usage plus a *sum* upper bound of overlapping planned
+                // reservations, it cannot disturb any plan — commit
+                // without replanning (the plan keeps its own future
+                // instance; it simply finds an empty queue later).
+                let end = v.now + dur;
+                let overlap_sum: u32 = self
+                    .planned
+                    .iter()
+                    .filter(|p| p.start < end && p.end > v.now)
+                    .map(|p| p.pct)
+                    .sum();
+                if v.gpu.used_pct() + overlap_sum + pct <= 100 {
+                    self.scoreboard.record_run(j);
+                    self.dynamic_launches += 1;
+                    return vec![Launch { model: j, batch: b, pct, latency_ms_override: None }];
+                }
+                // Slow path: commit only if the rest of the plan can be
+                // recomputed around this launch (paper: "dynamically
+                // recomputes the schedule").
+                if let Some(new_plan) = self.replan_with_launch(v, j, pct, dur) {
+                    self.planned = new_plan;
+                    self.scoreboard.record_run(j);
+                    self.dynamic_launches += 1;
+                    return vec![Launch { model: j, batch: b, pct, latency_ms_override: None }];
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+impl Policy for Dstack {
+    fn name(&self) -> String {
+        if self.cfg.opportunistic {
+            "dstack".into()
+        } else {
+            "spatio_temporal".into()
+        }
+    }
+
+    fn dispatch(&mut self, v: &SimView) -> Vec<Launch> {
+        // Session roll-over (and first-call initialization).
+        if !self.initialized || v.now >= self.session_start + self.session_us {
+            if self.initialized {
+                self.scoreboard.end_session();
+            }
+            self.initialized = true;
+            let t0 = (v.now / self.session_us) * self.session_us;
+            let models = v.models.to_vec();
+            self.build_plan(t0, &models, v.gpu);
+        }
+        let mut launches = self.due_planned(v);
+        if launches.is_empty() {
+            launches = self.dynamic_pass(v);
+        }
+        launches
+    }
+
+    fn next_wakeup(&mut self, v: &SimView) -> Option<Us> {
+        let next_plan = self.planned.iter().map(|p| p.start).filter(|&s| s > v.now).min();
+        let next_session = self.session_start + self.session_us;
+        Some(next_plan.unwrap_or(next_session).min(next_session))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::by_name;
+    use crate::sim::{entries_at_optimum, Sim, SimConfig};
+    use crate::workload::{merged_stream, slo_proportional_rates, Arrivals};
+
+    fn entries(names: &[&str]) -> Vec<ModelEntry> {
+        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+        entries_at_optimum(&profiles)
+    }
+
+    pub(super) fn run_policy(
+        names: &[&str],
+        total_rate: f64,
+        horizon_ms: f64,
+        opportunistic: bool,
+        seed: u64,
+    ) -> (crate::metrics::RunReport, Sim) {
+        let es = entries(names);
+        let slos: Vec<f64> = es.iter().map(|e| e.profile.slo_ms).collect();
+        let rates = slo_proportional_rates(total_rate, &slos);
+        let specs: Vec<_> = es
+            .iter()
+            .zip(&rates)
+            .map(|(e, &r)| (Arrivals::Poisson { rate: r }, e.profile.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, horizon_ms, seed);
+        let mut cfg = DstackCfg { opportunistic, ..Default::default() };
+        if let Ok(f) = std::env::var("DSTACK_URGENCY") {
+            cfg.urgency_factor = f.parse().unwrap();
+        }
+        let mut pol = Dstack::with_cfg(&es, cfg);
+        let mut sim = Sim::new(SimConfig { horizon_ms, gantt: true, ..Default::default() }, es);
+        let rep = sim.run(&mut pol, &reqs);
+        (rep, sim)
+    }
+
+    #[test]
+    fn plan_never_oversubscribes() {
+        let es = entries(&["alexnet", "mobilenet", "resnet50", "vgg19"]);
+        let gpu = GpuSim::new(crate::profile::V100.clone(), es.len(), false);
+        let mut d = Dstack::from_entries(&es);
+        d.build_plan(0, &es, &gpu);
+        assert!(!d.planned.is_empty());
+        let mut tl = CapTimeline::new();
+        for p in &d.planned {
+            tl.add(p.start, p.end, p.pct);
+        }
+        assert!(tl.peak(0, d.session_us) <= 100);
+    }
+
+    #[test]
+    fn every_model_planned_at_least_slo_count() {
+        // §6.1: a model with SLO s must be planned ≥ ⌈session/s⌉ times
+        // when feasible. For the 3-model mix of Fig. 9 all fit.
+        let es = entries(&["alexnet", "resnet50", "vgg19"]);
+        let gpu = GpuSim::new(crate::profile::V100.clone(), es.len(), false);
+        let mut d = Dstack::from_entries(&es);
+        d.build_plan(0, &es, &gpu);
+        let session = d.session_us;
+        for (j, e) in es.iter().enumerate() {
+            let want = session.div_ceil(ms_to_us(e.profile.slo_ms));
+            let got = d.planned.iter().filter(|p| p.model == j).count() as u64;
+            assert!(got >= want, "{}: planned {got} < required {want}", e.profile.name);
+        }
+    }
+
+    #[test]
+    fn short_slo_instances_are_spread() {
+        let es = entries(&["alexnet", "resnet50", "vgg19"]);
+        let gpu = GpuSim::new(crate::profile::V100.clone(), es.len(), false);
+        let mut d = Dstack::from_entries(&es);
+        d.build_plan(0, &es, &gpu);
+        // Alexnet (SLO 25 ms in a 100 ms session) runs 4 *required*
+        // instances, one per 25 ms window (max spreading = release at
+        // k·SLO). Optional half-offset instances may add more.
+        let mut starts: Vec<Us> = d
+            .planned
+            .iter()
+            .filter(|p| p.model == 0 && p.required)
+            .map(|p| p.start)
+            .collect();
+        starts.sort();
+        assert_eq!(starts.len(), 4);
+        for (k, s) in starts.iter().enumerate() {
+            let lo = k as Us * 25_000;
+            let hi = (k as Us + 1) * 25_000;
+            assert!(*s >= lo && *s < hi, "instance {k} at {s} outside its window");
+        }
+    }
+
+    #[test]
+    fn meets_slos_for_c4_mix() {
+        // §7: "there are no SLO violations in D-STACK when multiplexing
+        // 2-4 models". Allow a small epsilon for boundary effects.
+        let (rep, _) =
+            run_policy(&["mobilenet", "alexnet", "resnet50", "vgg19"], 1_000.0, 10_000.0, true, 1);
+        let viol = rep.violation_fraction();
+        assert!(viol < 0.05, "violation fraction {viol}");
+        for m in &rep.per_model {
+            assert!(m.served > 0, "{} starved", m.name);
+        }
+    }
+
+    #[test]
+    fn opportunistic_pass_raises_utilization() {
+        // Fig. 9b vs 9c: dynamic pass lifts utilization (60% → 74%).
+        let (plain, _) = run_policy(&["alexnet", "resnet50", "vgg19"], 1_400.0, 8_000.0, false, 3);
+        let (dynamic, _) = run_policy(&["alexnet", "resnet50", "vgg19"], 1_400.0, 8_000.0, true, 3);
+        let u_plain = plain.mean_utilization();
+        let u_dyn = dynamic.mean_utilization();
+        assert!(u_dyn > u_plain, "dynamic {u_dyn} should exceed plain {u_plain}");
+        assert!(dynamic.total_throughput() >= plain.total_throughput());
+    }
+
+    #[test]
+    fn beats_temporal_sharing_on_throughput() {
+        // Headline claim: ≥2× throughput vs temporal sharing for the
+        // 4-model mix (paper reports up to 4×).
+        use crate::sched::temporal::Temporal;
+        let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+        let es = entries(&names);
+        let slos: Vec<f64> = es.iter().map(|e| e.profile.slo_ms).collect();
+        let rates = slo_proportional_rates(1_900.0, &slos);
+        let specs: Vec<_> = es
+            .iter()
+            .zip(&rates)
+            .map(|(e, &r)| (Arrivals::Poisson { rate: r }, e.profile.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, 10_000.0, 5);
+
+        let mut tpol = Temporal::from_entries(&es);
+        let mut tsim =
+            Sim::new(SimConfig { horizon_ms: 10_000.0, ..Default::default() }, es.clone());
+        let trep = tsim.run(&mut tpol, &reqs);
+
+        let mut dpol = Dstack::from_entries(&es);
+        let mut dsim = Sim::new(SimConfig { horizon_ms: 10_000.0, ..Default::default() }, es);
+        let drep = dsim.run(&mut dpol, &reqs);
+
+        let t = trep.total_throughput();
+        let d = drep.total_throughput();
+        assert!(d > 1.5 * t, "dstack {d} vs temporal {t}");
+    }
+
+    #[test]
+    fn scoreboard_fairness_gives_similar_runtimes() {
+        // Fig. 10b: "With D-STACK, all the models get similar GPU time".
+        let (rep, _) =
+            run_policy(&["mobilenet", "alexnet", "resnet50", "vgg19"], 1_900.0, 10_000.0, true, 7);
+        let fairness = rep.runtime_fairness();
+        assert!(fairness > 0.5, "Jain fairness {fairness}");
+    }
+
+    #[test]
+    fn uses_both_planned_and_dynamic_launches() {
+        let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+        let es = entries(&names);
+        let slos: Vec<f64> = es.iter().map(|e| e.profile.slo_ms).collect();
+        let rates = slo_proportional_rates(1_500.0, &slos);
+        let specs: Vec<_> = es
+            .iter()
+            .zip(&rates)
+            .map(|(e, &r)| (Arrivals::Poisson { rate: r }, e.profile.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, 5_000.0, 2);
+        let mut pol = Dstack::from_entries(&es);
+        let mut sim = Sim::new(SimConfig { horizon_ms: 5_000.0, ..Default::default() }, es);
+        sim.run(&mut pol, &reqs);
+        assert!(pol.planned_launches > 0, "static plan never fired");
+        assert!(pol.dynamic_launches > 0, "dynamic pass never fired");
+    }
+}
+
+#[cfg(test)]
+mod debug_tests {
+    #[test]
+    #[ignore]
+    fn debug_c4() {
+        let rate: f64 = std::env::var("DSTACK_RATE").ok().and_then(|v| v.parse().ok()).unwrap_or(1_000.0);
+        let (rep, _) = super::tests::run_policy(
+            &["mobilenet", "alexnet", "resnet50", "vgg19"],
+            rate,
+            10_000.0,
+            true,
+            1,
+        );
+        for m in &rep.per_model {
+            eprintln!(
+                "{}: served={} in_slo={} dropped={} batches={} meanb={:.1} p99={:.1}",
+                m.name,
+                m.served,
+                m.served_in_slo,
+                m.dropped,
+                m.batches,
+                m.mean_batch(),
+                m.latency_summary().p99
+            );
+        }
+        eprintln!("util={:.2} viol={:.3}", rep.mean_utilization(), rep.violation_fraction());
+    }
+}

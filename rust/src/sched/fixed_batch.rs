@@ -1,0 +1,128 @@
+//! FB — Fixed batching on *default* (uncontrolled) CUDA MPS (§7).
+//!
+//! Every model always waits for its full max batch (16) and launches the
+//! moment it has one, with no GPU% caps: all models run concurrently and
+//! contend for SMs. Default MPS gives no compute isolation, so when `n`
+//! models run concurrently each effectively receives ~100/n% of the SMs
+//! *plus* an interference penalty (GSLICE measured slowdowns beyond fair
+//! sharing from cache/scheduler contention under default MPS).
+
+use crate::gpu::Us;
+use crate::sim::{Launch, Policy, SimView};
+
+#[derive(Debug)]
+pub struct FixedBatch {
+    /// Multiplicative latency penalty per *additional* concurrent model
+    /// (default 15%/model, the uncontrolled-MPS interference).
+    pub interference_per_peer: f64,
+}
+
+impl Default for FixedBatch {
+    fn default() -> Self {
+        FixedBatch { interference_per_peer: 0.15 }
+    }
+}
+
+impl FixedBatch {
+    pub fn new() -> FixedBatch {
+        FixedBatch::default()
+    }
+}
+
+impl Policy for FixedBatch {
+    fn name(&self) -> String {
+        "fixed_batch_mps".into()
+    }
+
+    fn dispatch(&mut self, v: &SimView) -> Vec<Launch> {
+        // One launch per call; the engine re-invokes until quiescent.
+        for (i, e) in v.models.iter().enumerate() {
+            if v.gpu.n_running_of(i) > 0 {
+                continue; // one in-flight batch per model process
+            }
+            let queued = v.queue_len(i) as u32;
+            if queued < e.profile.max_batch {
+                continue; // fixed batching: wait for a full batch
+            }
+            let b = e.profile.max_batch;
+            // Effective share under default MPS with n concurrent models.
+            let n_after = v.gpu.n_running() as u32 + 1;
+            let share = (100 / n_after).max(1);
+            let base = e.profile.latency_ms_on(&v.gpu.spec, share, b);
+            let interference =
+                1.0 + self.interference_per_peer * (n_after.saturating_sub(1)) as f64;
+            // NOTE: the share is fixed at launch time — an approximation
+            // of continuously varying contention (documented in DESIGN.md).
+            return vec![Launch {
+                model: i,
+                batch: b,
+                pct: share,
+                latency_ms_override: Some(base * interference),
+            }];
+        }
+        Vec::new()
+    }
+
+    fn next_wakeup(&mut self, _v: &SimView) -> Option<Us> {
+        None // purely event-driven: arrivals/completions trigger dispatch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::by_name;
+    use crate::sim::{entries_at_optimum, Sim, SimConfig};
+    use crate::workload::{merged_stream, Arrivals};
+
+    fn run(names: &[&str], rate: f64, horizon_ms: f64) -> crate::metrics::RunReport {
+        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+        let entries = entries_at_optimum(&profiles);
+        let specs: Vec<_> =
+            profiles.iter().map(|p| (Arrivals::Poisson { rate }, p.slo_ms)).collect();
+        let reqs = merged_stream(&specs, horizon_ms, 21);
+        let mut pol = FixedBatch::new();
+        let mut sim = Sim::new(
+            SimConfig { horizon_ms, allow_oversub: true, ..Default::default() },
+            entries,
+        );
+        sim.run(&mut pol, &reqs)
+    }
+
+    #[test]
+    fn launches_only_full_batches() {
+        let rep = run(&["alexnet", "mobilenet"], 400.0, 3_000.0);
+        for m in &rep.per_model {
+            assert!(m.batches > 0, "{} never ran", m.name);
+            assert!(
+                (m.mean_batch() - 16.0).abs() < 1e-9,
+                "{}: mean batch {} ≠ 16",
+                m.name,
+                m.mean_batch()
+            );
+        }
+    }
+
+    #[test]
+    fn low_rate_models_miss_slos_waiting_for_full_batch() {
+        // At 100 req/s, assembling 16 takes ~160 ms ≫ the 25 ms SLO:
+        // most requests are served far too late (only the last few of
+        // each batch make their deadline) — the paper's FB pathology.
+        let rep = run(&["alexnet"], 100.0, 4_000.0);
+        let m = &rep.per_model[0];
+        let viol_frac = m.slo_violations() as f64 / m.offered() as f64;
+        assert!(viol_frac > 0.5, "violation fraction {viol_frac}");
+        assert!(m.latency_summary().p50 > 25.0, "p50 {}", m.latency_summary().p50);
+    }
+
+    #[test]
+    fn concurrency_inflates_latency() {
+        // Same per-model rate; more models ⇒ smaller effective share +
+        // interference ⇒ higher per-batch latency for model 0.
+        let solo = run(&["resnet50"], 600.0, 3_000.0);
+        let multi = run(&["resnet50", "vgg19", "alexnet", "mobilenet"], 600.0, 3_000.0);
+        let s = solo.per_model[0].latency_summary().p50;
+        let m = multi.per_model[0].latency_summary().p50;
+        assert!(m > s, "p50 solo {s} vs multiplexed {m}");
+    }
+}

@@ -1,0 +1,144 @@
+//! GSLICE-style static spatial sharing (§2, §7).
+//!
+//! Each admitted model receives a *static* GPU% slice: its knee if the
+//! knees fit, otherwise knees scaled down proportionally so the total is
+//! ≤ 100% (the paper's GSLICE pathology: "executing a large number of
+//! models potentially causes each model to get a small GPU slice (less
+//! than the Knee), leading to higher inference latency"). Batching is
+//! adaptive with GSLICE's SLO/2 budget. There is no temporal scheduler:
+//! every model independently runs whenever it has work.
+
+use crate::batching::{choose_batch, BatchPolicy};
+use crate::sim::{Launch, ModelEntry, Policy, SimView};
+
+#[derive(Debug)]
+pub struct Gslice {
+    /// Static per-model share (GPU%).
+    pub shares: Vec<u32>,
+}
+
+impl Gslice {
+    /// Compute static shares from the entries' knee GPU%.
+    pub fn from_entries(models: &[ModelEntry]) -> Gslice {
+        let knees: Vec<u32> = models.iter().map(|m| m.profile.knee_pct).collect();
+        let total: u32 = knees.iter().sum();
+        let shares = if total <= 100 {
+            knees
+        } else {
+            // Scale down proportionally; floor, but at least 1%.
+            knees
+                .iter()
+                .map(|&k| ((k as f64 * 100.0 / total as f64).floor() as u32).max(1))
+                .collect()
+        };
+        Gslice { shares }
+    }
+}
+
+impl Policy for Gslice {
+    fn name(&self) -> String {
+        "gslice".into()
+    }
+
+    fn dispatch(&mut self, v: &SimView) -> Vec<Launch> {
+        for (i, e) in v.models.iter().enumerate() {
+            if v.gpu.n_running_of(i) > 0 {
+                continue; // one in-flight batch per model slice
+            }
+            let queued = v.queue_len(i);
+            if queued == 0 {
+                continue;
+            }
+            let share = self.shares[i];
+            // GSLICE adaptive batching: fit within half the SLO.
+            let budget = e.profile.slo_ms / 2.0;
+            let b = choose_batch(
+                BatchPolicy::Adaptive,
+                &e.profile,
+                &v.gpu.spec,
+                queued,
+                e.batch,
+                share,
+                Some(budget),
+            );
+            // Below-knee slices may not fit any batch in the budget; fall
+            // back to batch 1 (GSLICE still serves, just slowly).
+            let b = if b == 0 { 1 } else { b };
+            return vec![Launch { model: i, batch: b, pct: share, latency_ms_override: None }];
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::by_name;
+    use crate::sim::{entries_at_optimum, Sim, SimConfig};
+    use crate::workload::{merged_stream, Arrivals};
+
+    fn entries(names: &[&str]) -> Vec<ModelEntry> {
+        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+        entries_at_optimum(&profiles)
+    }
+
+    #[test]
+    fn shares_fit_when_knees_fit() {
+        // alexnet 30 + resnet50 40 = 70 ≤ 100 → knees unchanged.
+        let g = Gslice::from_entries(&entries(&["alexnet", "resnet50"]));
+        assert_eq!(g.shares, vec![30, 40]);
+    }
+
+    #[test]
+    fn shares_scale_down_when_oversubscribed() {
+        // Four knees 30+40+50+20 = 140 > 100 → proportional scaling.
+        let g = Gslice::from_entries(&entries(&["alexnet", "resnet50", "vgg19", "mobilenet"]));
+        let total: u32 = g.shares.iter().sum();
+        assert!(total <= 100, "total {total}");
+        // VGG-19 is pushed well below its 50% knee.
+        assert!(g.shares[2] < 40, "vgg share {}", g.shares[2]);
+    }
+
+    #[test]
+    fn concurrent_spatial_execution() {
+        let es = entries(&["alexnet", "resnet50"]);
+        let specs: Vec<_> = es
+            .iter()
+            .map(|e| (Arrivals::Poisson { rate: 500.0 }, e.profile.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, 3_000.0, 13);
+        let mut pol = Gslice::from_entries(&es);
+        let mut sim =
+            Sim::new(SimConfig { horizon_ms: 3_000.0, gantt: true, ..Default::default() }, es);
+        let rep = sim.run(&mut pol, &reqs);
+        for m in &rep.per_model {
+            assert!(m.served > 0);
+        }
+        // Unlike temporal, the two models' Gantt entries overlap in time.
+        let gantt = sim.gpu.gantt.as_ref().unwrap();
+        let overlap = gantt.iter().enumerate().any(|(i, a)| {
+            gantt[i + 1..]
+                .iter()
+                .any(|b| a.model != b.model && a.start < b.end && b.start < a.end)
+        });
+        assert!(overlap, "expected spatially concurrent execution");
+    }
+
+    #[test]
+    fn below_knee_latency_blows_up_with_many_models() {
+        // 7-model mix pushes shares far below knees; VGG-19's latency
+        // inflates vs its knee runtime (the paper's GSLICE critique).
+        let names =
+            ["alexnet", "mobilenet", "resnet18", "resnet50", "inception", "resnext50", "vgg19"];
+        let es = entries(&names);
+        let g = Gslice::from_entries(&es);
+        let vgg_idx = 6;
+        let vgg = &es[vgg_idx].profile;
+        let lat_at_share = vgg.latency_ms(g.shares[vgg_idx], 16);
+        assert!(
+            lat_at_share > 1.5 * vgg.runtime_ms,
+            "expected blow-up: {lat_at_share} vs knee {}",
+            vgg.runtime_ms
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Max-Min fair scheduler (§6.3, Fig. 10): classic progressive-filling
+//! allocation of GPU% (Bertsekas & Gallager, *Data Networks*): demands
+//! are the models' knee GPU%; the smallest demands are satisfied first,
+//! and any remaining capacity is split equally among unsatisfied models.
+//! Models then run concurrently inside their static allocations.
+
+use crate::batching::{choose_batch, BatchPolicy};
+use crate::sim::{Launch, ModelEntry, Policy, SimView};
+
+/// Progressive-filling max-min allocation: each demand `d_i` receives
+/// `min(d_i, fair share)` where the fair share is raised until capacity
+/// is exhausted. Returns per-model GPU%.
+pub fn max_min_allocation(demands: &[u32], capacity: u32) -> Vec<u32> {
+    let n = demands.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut alloc = vec![0u32; n];
+    let mut remaining = capacity;
+    let mut unsat: Vec<usize> = (0..n).collect();
+    // Sort unsatisfied by demand ascending (progressive filling).
+    unsat.sort_by_key(|&i| demands[i]);
+    while !unsat.is_empty() && remaining > 0 {
+        let share = remaining / unsat.len() as u32;
+        if share == 0 {
+            // Give 1% each to the smallest demands until exhausted.
+            for &i in unsat.iter() {
+                if remaining == 0 {
+                    break;
+                }
+                alloc[i] += 1;
+                remaining -= 1;
+            }
+            break;
+        }
+        // Satisfy every demand below the share; they return leftovers.
+        let (sat, rest): (Vec<usize>, Vec<usize>) = unsat
+            .iter()
+            .partition(|&&i| demands[i].saturating_sub(alloc[i]) <= share);
+        if sat.is_empty() {
+            // No demand fits fully: give the share to all and finish.
+            for &i in &rest {
+                alloc[i] += share;
+            }
+            break;
+        }
+        for &i in &sat {
+            let need = demands[i] - alloc[i];
+            alloc[i] += need;
+            remaining -= need;
+        }
+        unsat = rest;
+    }
+    alloc
+}
+
+#[derive(Debug)]
+pub struct MaxMin {
+    pub shares: Vec<u32>,
+}
+
+impl MaxMin {
+    pub fn from_entries(models: &[ModelEntry]) -> MaxMin {
+        let demands: Vec<u32> = models.iter().map(|m| m.profile.knee_pct).collect();
+        MaxMin { shares: max_min_allocation(&demands, 100) }
+    }
+}
+
+impl Policy for MaxMin {
+    fn name(&self) -> String {
+        "max_min".into()
+    }
+
+    fn dispatch(&mut self, v: &SimView) -> Vec<Launch> {
+        for (i, e) in v.models.iter().enumerate() {
+            let share = self.shares[i];
+            if share == 0 || v.gpu.n_running_of(i) > 0 {
+                continue;
+            }
+            let queued = v.queue_len(i);
+            if queued == 0 {
+                continue;
+            }
+            let budget = e.profile.slo_ms;
+            let b = choose_batch(
+                BatchPolicy::Adaptive,
+                &e.profile,
+                &v.gpu.spec,
+                queued,
+                e.batch,
+                share,
+                Some(budget),
+            );
+            let b = if b == 0 { 1 } else { b };
+            return vec![Launch { model: i, batch: b, pct: share, latency_ms_override: None }];
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_when_capacity_sufficient() {
+        assert_eq!(max_min_allocation(&[20, 30, 40], 100), vec![20, 30, 40]);
+    }
+
+    #[test]
+    fn smallest_demands_satisfied_first() {
+        // Demands 20+30+40+50 = 140 > 100. Progressive filling: everyone
+        // is capped at the highest fair share; small demands met fully.
+        let a = max_min_allocation(&[20, 30, 40, 50], 100);
+        assert_eq!(a[0], 20, "smallest demand fully satisfied: {a:?}");
+        let total: u32 = a.iter().sum();
+        assert!(total <= 100);
+        // Larger demands get equal leftovers.
+        assert_eq!(a[2], a[3], "unsatisfied demands share equally: {a:?}");
+        assert!(a[2] < 40);
+    }
+
+    #[test]
+    fn extreme_contention() {
+        let a = max_min_allocation(&[60, 60, 60, 60], 100);
+        let total: u32 = a.iter().sum();
+        assert!(total <= 100);
+        assert!(a.iter().all(|&x| x == 25), "{a:?}");
+    }
+
+    #[test]
+    fn empty_and_zero() {
+        assert!(max_min_allocation(&[], 100).is_empty());
+        assert_eq!(max_min_allocation(&[10, 10], 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn favors_small_demand_models_in_runtime() {
+        use crate::profile::by_name;
+        use crate::sim::{entries_at_optimum, Sim, SimConfig};
+        use crate::workload::{merged_stream, Arrivals};
+        // Fig. 10b: Max-Min gives the low-demand Mobilenet more runtime
+        // (relative to its knee needs) than heavy models get.
+        let names = ["mobilenet", "resnet50", "vgg19", "alexnet"];
+        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+        let entries = entries_at_optimum(&profiles);
+        let specs: Vec<_> = profiles
+            .iter()
+            .map(|p| (Arrivals::Poisson { rate: 700.0 }, p.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, 5_000.0, 17);
+        let mut pol = MaxMin::from_entries(&entries);
+        let mut sim = Sim::new(SimConfig { horizon_ms: 5_000.0, ..Default::default() }, entries);
+        let rep = sim.run(&mut pol, &reqs);
+        // Mobilenet (demand 20, fully satisfied) meets nearly all SLOs.
+        let mob = &rep.per_model[0];
+        let ok = mob.served_in_slo as f64 / mob.offered().max(1) as f64;
+        assert!(ok > 0.5, "mobilenet in-SLO {ok}");
+    }
+}

@@ -1,0 +1,320 @@
+//! GPU scheduling policies (§6–§7).
+//!
+//! Every policy implements [`crate::sim::Policy`] and runs on the same
+//! simulator, so comparisons differ only in scheduling decisions:
+//!
+//! | module            | paper name                           |
+//! |-------------------|--------------------------------------|
+//! | [`dstack`]        | D-STACK (EDF spatio-temporal + fair opportunistic dynamic pass) |
+//! | [`temporal`]      | baseline temporal sharing (SLO-proportional slices @100%) |
+//! | [`fixed_batch`]   | FB — fixed batching on default (uncontrolled) CUDA MPS |
+//! | [`gslice`]        | GSLICE — static spatial shares at the knee + adaptive batching |
+//! | [`triton`]        | Triton-style dynamic batching, temporal execution |
+//! | [`max_throughput`]| throughput-maximizing schedule (Fig. 10 upper bound) |
+//! | [`max_min`]       | Max-Min fair GPU% allocation (Bertsekas–Gallager) |
+//! | [`ideal`]         | §6.2 ideal: kernel-granularity preemptive packing |
+
+pub mod dstack;
+pub mod fixed_batch;
+pub mod gslice;
+pub mod ideal;
+pub mod max_min;
+pub mod max_throughput;
+pub mod temporal;
+pub mod triton;
+
+use crate::gpu::{ms_to_us, Us};
+use crate::sim::ModelEntry;
+use std::collections::VecDeque;
+
+/// Session length: the period of the largest SLO among admitted models
+/// (§6.1: "We choose a time period defined by the largest SLO to be a
+/// Session").
+pub fn session_len_us(models: &[ModelEntry]) -> Us {
+    let max_slo = models.iter().map(|m| m.profile.slo_ms).fold(0.0, f64::max);
+    ms_to_us(max_slo.max(1.0))
+}
+
+/// Scoreboard tracking how many times each model ran in the last few
+/// sessions (§6.1.2: "we use a scoreboard that tracks how many times
+/// each model has run in the last few (e.g., ten) sessions and
+/// prioritizes the models that have run the fewest").
+#[derive(Debug, Clone)]
+pub struct Scoreboard {
+    window: usize,
+    /// Per model: run counts for recent sessions (front = current).
+    runs: Vec<VecDeque<u64>>,
+}
+
+impl Scoreboard {
+    pub fn new(n_models: usize, window: usize) -> Scoreboard {
+        Scoreboard {
+            window: window.max(1),
+            runs: (0..n_models).map(|_| VecDeque::from([0])).collect(),
+        }
+    }
+
+    /// Record that `model` ran once in the current session.
+    pub fn record_run(&mut self, model: usize) {
+        *self.runs[model].front_mut().unwrap() += 1;
+    }
+
+    /// Close the current session and open a new one.
+    pub fn end_session(&mut self) {
+        for q in &mut self.runs {
+            q.push_front(0);
+            while q.len() > self.window {
+                q.pop_back();
+            }
+        }
+    }
+
+    /// Total runs of `model` over the window (current session included).
+    pub fn recent_runs(&self, model: usize) -> u64 {
+        self.runs[model].iter().sum()
+    }
+
+    /// Model indices sorted fewest-recent-runs first (stable on ties).
+    pub fn priority_order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.runs.len()).collect();
+        idx.sort_by_key(|&i| (self.recent_runs(i), i));
+        idx
+    }
+}
+
+/// A capacity-reservation timeline over a bounded horizon: a set of
+/// `(start, end, pct)` intervals supporting peak-usage queries. Used by
+/// D-STACK's planner (static EDF reservations) and its dynamic pass
+/// (checking a launch won't steal reserved capacity).
+#[derive(Debug, Clone, Default)]
+pub struct CapTimeline {
+    /// (time, +pct at start / −pct at end) deltas, kept sorted.
+    deltas: Vec<(Us, i64)>,
+}
+
+impl CapTimeline {
+    pub fn new() -> CapTimeline {
+        CapTimeline::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.deltas.clear();
+    }
+
+    pub fn add(&mut self, start: Us, end: Us, pct: u32) {
+        debug_assert!(start < end);
+        self.insert_delta(start, pct as i64);
+        self.insert_delta(end, -(pct as i64));
+    }
+
+    /// Remove a previously added interval (exact match required).
+    pub fn remove(&mut self, start: Us, end: Us, pct: u32) {
+        self.remove_delta(start, pct as i64);
+        self.remove_delta(end, -(pct as i64));
+    }
+
+    fn insert_delta(&mut self, t: Us, d: i64) {
+        let pos = self.deltas.partition_point(|&(dt, _)| dt <= t);
+        self.deltas.insert(pos, (t, d));
+    }
+
+    fn remove_delta(&mut self, t: Us, d: i64) {
+        let pos = self
+            .deltas
+            .iter()
+            .position(|&(dt, dd)| dt == t && dd == d)
+            .expect("removing interval that was never added");
+        self.deltas.remove(pos);
+    }
+
+    /// Peak reserved pct over `[t0, t1)`.
+    pub fn peak(&self, t0: Us, t1: Us) -> u32 {
+        let mut level: i64 = 0;
+        let mut i = 0;
+        // Level carried into t0: all deltas at times ≤ t0 (interval ends
+        // are exclusive, so an interval ending exactly at t0 is gone).
+        while i < self.deltas.len() && self.deltas[i].0 <= t0 {
+            level += self.deltas[i].1;
+            i += 1;
+        }
+        let mut peak = level;
+        while i < self.deltas.len() && self.deltas[i].0 < t1 {
+            level += self.deltas[i].1;
+            peak = peak.max(level);
+            i += 1;
+        }
+        peak.max(0) as u32
+    }
+
+    /// Earliest time `t ∈ [lo, hi]` where an interval `[t, t+dur)` at
+    /// `pct` fits under `cap`. Candidate starts are `lo` and every delta
+    /// point in range (peak usage only changes there).
+    ///
+    /// Single sweep with a monotonic deque (sliding-window maximum over
+    /// the piecewise-constant usage function) instead of an O(n) peak
+    /// query per candidate — the planner/replanner hot path (§Perf).
+    pub fn earliest_fit(&self, lo: Us, hi: Us, dur: Us, pct: u32, cap: u32) -> Option<Us> {
+        if pct > cap {
+            return None;
+        }
+        let budget = (cap - pct) as i64;
+        // Piecewise-constant segments: level l_k on [b_k, b_{k+1}).
+        // Build once: O(n).
+        let mut bounds: Vec<(Us, i64)> = Vec::with_capacity(self.deltas.len() + 1);
+        let mut level = 0i64;
+        for &(t, d) in &self.deltas {
+            level += d;
+            match bounds.last_mut() {
+                Some((bt, bl)) if *bt == t => *bl = level,
+                _ => bounds.push((t, level)),
+            }
+        }
+        // Candidates ascending: lo, then each boundary in (lo, hi].
+        // Maintain a monotonic deque of segment levels intersecting the
+        // current window [t, t+dur).
+        let seg_level_at = |idx: usize| bounds[idx].1;
+        let seg_start = |idx: usize| bounds[idx].0;
+        let mut deque: std::collections::VecDeque<usize> = Default::default();
+        // j = next segment boundary not yet in the window.
+        let mut j = 0usize;
+        // Carried level at window start.
+        let try_start = |t: Us,
+                             deque: &mut std::collections::VecDeque<usize>,
+                             j: &mut usize|
+         -> bool {
+            let end = t + dur;
+            // Add segments starting before `end`.
+            while *j < bounds.len() && seg_start(*j) < end {
+                let l = seg_level_at(*j);
+                while deque.back().is_some_and(|&b| seg_level_at(b) <= l) {
+                    deque.pop_back();
+                }
+                deque.push_back(*j);
+                *j += 1;
+            }
+            // Evict segments that ended at or before `t`: a segment k
+            // covers [b_k, b_{k+1}); it is stale iff b_{k+1} <= t.
+            while deque.front().is_some_and(|&f| {
+                bounds.get(f + 1).is_some_and(|&(next, _)| next <= t)
+            }) {
+                deque.pop_front();
+            }
+            // Carried level at t = level of the last segment with
+            // b_k <= t (the deque front may start later than t).
+            let carried = match bounds.partition_point(|&(bt, _)| bt <= t) {
+                0 => 0,
+                k => bounds[k - 1].1,
+            };
+            let win_max = deque
+                .iter()
+                .map(|&k| seg_level_at(k))
+                .max()
+                .unwrap_or(0)
+                .max(carried)
+                .max(0);
+            win_max <= budget
+        };
+        if try_start(lo, &mut deque, &mut j) {
+            return Some(lo);
+        }
+        let first = self.deltas.partition_point(|&(t, _)| t <= lo);
+        let mut prev = lo;
+        for &(t, _) in &self.deltas[first..] {
+            if t > hi {
+                break;
+            }
+            if t == prev {
+                continue;
+            }
+            prev = t;
+            if try_start(t, &mut deque, &mut j) {
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::by_name;
+    use crate::sim::ModelEntry;
+
+    fn entries(names: &[&str]) -> Vec<ModelEntry> {
+        names
+            .iter()
+            .map(|n| {
+                let p = by_name(n).unwrap();
+                ModelEntry { pct: p.knee_pct, batch: p.opt_batch, profile: p }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn session_is_max_slo() {
+        let es = entries(&["alexnet", "resnet50", "vgg19"]);
+        assert_eq!(session_len_us(&es), 100_000); // vgg19's 100 ms
+        let es2 = entries(&["alexnet", "mobilenet"]);
+        assert_eq!(session_len_us(&es2), 25_000);
+    }
+
+    #[test]
+    fn scoreboard_window_and_priority() {
+        let mut sb = Scoreboard::new(3, 3);
+        sb.record_run(0);
+        sb.record_run(0);
+        sb.record_run(1);
+        assert_eq!(sb.recent_runs(0), 2);
+        assert_eq!(sb.priority_order(), vec![2, 1, 0]);
+        // Window slides: after 3 new sessions the old runs age out.
+        sb.end_session();
+        sb.end_session();
+        sb.end_session();
+        assert_eq!(sb.recent_runs(0), 0);
+        assert_eq!(sb.priority_order(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn captimeline_peak() {
+        let mut tl = CapTimeline::new();
+        tl.add(10, 20, 40);
+        tl.add(15, 30, 30);
+        assert_eq!(tl.peak(0, 10), 0);
+        assert_eq!(tl.peak(10, 15), 40);
+        assert_eq!(tl.peak(15, 20), 70);
+        assert_eq!(tl.peak(20, 30), 30);
+        assert_eq!(tl.peak(0, 100), 70);
+        // Query starting mid-interval sees the carried level.
+        assert_eq!(tl.peak(17, 18), 70);
+        assert_eq!(tl.peak(25, 26), 30);
+    }
+
+    #[test]
+    fn captimeline_remove() {
+        let mut tl = CapTimeline::new();
+        tl.add(0, 50, 60);
+        tl.add(10, 20, 40);
+        tl.remove(10, 20, 40);
+        assert_eq!(tl.peak(0, 50), 60);
+    }
+
+    #[test]
+    #[should_panic(expected = "never added")]
+    fn captimeline_remove_unknown_panics() {
+        let mut tl = CapTimeline::new();
+        tl.remove(0, 1, 10);
+    }
+
+    #[test]
+    fn captimeline_earliest_fit() {
+        let mut tl = CapTimeline::new();
+        tl.add(0, 100, 80); // only 20% free until t=100
+        // 30% for 50 µs can't fit before t=100.
+        assert_eq!(tl.earliest_fit(0, 200, 50, 30, 100), Some(100));
+        // 20% fits immediately.
+        assert_eq!(tl.earliest_fit(0, 200, 50, 20, 100), Some(0));
+        // Nothing fits if the window is too small.
+        assert_eq!(tl.earliest_fit(0, 50, 50, 30, 100), None);
+    }
+}

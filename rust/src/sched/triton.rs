@@ -1,0 +1,133 @@
+//! Triton-Inference-Server-style scheduling (§1 Table 1, §7).
+//!
+//! Triton's scheduler performs *dynamic batching* per model (launch when
+//! the queue reaches the preferred batch size or the oldest request has
+//! waited `max_queue_delay`) but executes models one at a time on the
+//! whole GPU (temporal multiplexing): "Models hosted in Triton server
+//! too have to multiplex GPU temporally" (§7).
+
+use crate::gpu::{ms_to_us, Us};
+use crate::sim::{Launch, ModelEntry, Policy, SimView};
+
+#[derive(Debug)]
+pub struct Triton {
+    /// Per-model max queue delay before a partial batch is flushed (µs).
+    max_queue_delay_us: Vec<Us>,
+}
+
+impl Triton {
+    /// Default: flush partial batches after SLO/4 (a common Triton
+    /// configuration heuristic for latency-sensitive endpoints).
+    pub fn from_entries(models: &[ModelEntry]) -> Triton {
+        Triton {
+            max_queue_delay_us: models
+                .iter()
+                .map(|m| ms_to_us(m.profile.slo_ms / 4.0))
+                .collect(),
+        }
+    }
+
+    /// A model is ready when a full preferred batch is queued or its
+    /// oldest request has exceeded the queue delay.
+    fn ready(&self, v: &SimView, i: usize) -> bool {
+        let queued = v.queue_len(i) as u32;
+        if queued == 0 {
+            return false;
+        }
+        if queued >= v.models[i].batch {
+            return true;
+        }
+        let oldest_arrival = v.queues[i].front().unwrap().arrival;
+        v.now.saturating_sub(oldest_arrival) >= self.max_queue_delay_us[i]
+    }
+}
+
+impl Policy for Triton {
+    fn name(&self) -> String {
+        "triton".into()
+    }
+
+    fn dispatch(&mut self, v: &SimView) -> Vec<Launch> {
+        if v.gpu.n_running() > 0 {
+            return Vec::new(); // temporal: one model batch at a time
+        }
+        // FCFS across ready models: pick the one whose head waited longest.
+        let mut best: Option<(Us, usize)> = None;
+        for i in 0..v.models.len() {
+            if self.ready(v, i) {
+                let head = v.queues[i].front().unwrap().arrival;
+                if best.is_none_or(|(h, _)| head < h) {
+                    best = Some((head, i));
+                }
+            }
+        }
+        let Some((_, i)) = best else { return Vec::new() };
+        let b = (v.queue_len(i) as u32).min(v.models[i].profile.max_batch);
+        vec![Launch { model: i, batch: b, pct: 100, latency_ms_override: None }]
+    }
+
+    fn next_wakeup(&mut self, v: &SimView) -> Option<Us> {
+        // Wake when the oldest partial batch hits its queue-delay flush.
+        let mut next: Option<Us> = None;
+        for i in 0..v.models.len() {
+            if let Some(head) = v.queues[i].front() {
+                let flush = head.arrival + self.max_queue_delay_us[i];
+                if flush > v.now {
+                    next = Some(next.map_or(flush, |n| n.min(flush)));
+                }
+            }
+        }
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::by_name;
+    use crate::sim::{entries_at_optimum, Sim, SimConfig};
+    use crate::workload::{merged_stream, Arrivals};
+
+    fn run(names: &[&str], rate: f64, horizon_ms: f64) -> crate::metrics::RunReport {
+        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+        let entries = entries_at_optimum(&profiles);
+        let specs: Vec<_> =
+            profiles.iter().map(|p| (Arrivals::Poisson { rate }, p.slo_ms)).collect();
+        let reqs = merged_stream(&specs, horizon_ms, 33);
+        let mut pol = Triton::from_entries(&entries);
+        let mut sim = Sim::new(SimConfig { horizon_ms, ..Default::default() }, entries);
+        sim.run(&mut pol, &reqs)
+    }
+
+    #[test]
+    fn partial_batches_flush_at_low_rate() {
+        // At 50 req/s a full 16-batch would take 320 ms to form; dynamic
+        // batching flushes early, so most requests are served in-SLO.
+        let rep = run(&["alexnet"], 50.0, 4_000.0);
+        let m = &rep.per_model[0];
+        assert!(m.served > 0);
+        assert!(m.mean_batch() < 16.0, "mean batch {}", m.mean_batch());
+        let ok = m.served_in_slo as f64 / m.offered() as f64;
+        assert!(ok > 0.8, "in-SLO fraction {ok}");
+    }
+
+    #[test]
+    fn batches_grow_at_high_rate() {
+        let rep = run(&["alexnet"], 1_500.0, 3_000.0);
+        assert!(rep.per_model[0].mean_batch() > 8.0);
+    }
+
+    #[test]
+    fn temporal_execution_degrades_with_many_models() {
+        // Aggregate throughput per model drops as more models multiplex
+        // (Fig. 11a: Triton's throughput falls off with model count).
+        let two = run(&["resnet50", "vgg19"], 300.0, 4_000.0);
+        let four = run(&["resnet50", "vgg19", "alexnet", "mobilenet"], 300.0, 4_000.0);
+        let r50_two = two.per_model[0].served;
+        let r50_four = four.per_model[0].served;
+        assert!(
+            r50_four < r50_two,
+            "resnet50 should lose throughput with more tenants: {r50_two} -> {r50_four}"
+        );
+    }
+}

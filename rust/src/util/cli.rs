@@ -1,0 +1,114 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --key value --flag positional` style, which is
+//! all the `dstack` binary and the examples need.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one optional subcommand, `--key value` options,
+/// bare `--flag`s, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (usually
+    /// `std::env::args().skip(1)`). The first non-option token becomes
+    /// the subcommand; later bare tokens are positionals. A token after
+    /// `--key` is consumed as its value unless it also starts with `--`,
+    /// in which case `key` is recorded as a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` form.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.options.insert(key.to_string(), v);
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_options_flags_positionals() {
+        // NB: bare flags must come after positionals (or use `--flag=1`),
+        // since `--key value` binds greedily.
+        let a = parse(&["simulate", "--seed", "42", "scenario.json", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["scenario.json"]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse(&["figures", "--fig=9", "--out=results"]);
+        assert_eq!(a.get("fig"), Some("9"));
+        assert_eq!(a.get_or("out", "x"), "results");
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+    }
+
+    #[test]
+    fn adjacent_flags() {
+        let a = parse(&["run", "--fast", "--trace"]);
+        assert!(a.has_flag("fast"));
+        assert!(a.has_flag("trace"));
+        assert!(a.options.is_empty());
+    }
+}

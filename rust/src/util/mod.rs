@@ -1,0 +1,91 @@
+//! Hand-rolled substrates: the build image has no reachable crates
+//! registry, so JSON, PRNG, statistics, CLI parsing and property testing
+//! are implemented in-tree (see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+use std::path::Path;
+
+/// Write `content` to `path`, creating parent directories.
+pub fn write_file(path: &Path, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}
+
+/// Render rows as an aligned ASCII table (used by the figures/tables CLI).
+pub fn ascii_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&format!("{:<width$}", c, width = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    line(&mut out, &sep);
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Serialize rows to CSV (figure data interchange for plotting).
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let esc = |s: &str| {
+        if s.contains(',') || s.contains('"') || s.contains('\n') {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_table_aligns() {
+        let t = ascii_table(
+            &["model", "knee"],
+            &[
+                vec!["mobilenet".into(), "20".into()],
+                vec!["vgg19".into(), "50".into()],
+            ],
+        );
+        assert!(t.contains("model"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let c = to_csv(&["a", "b"], &[vec!["x,y".into(), "q\"z".into()]]);
+        assert!(c.contains("\"x,y\""));
+        assert!(c.contains("\"q\"\"z\""));
+    }
+}

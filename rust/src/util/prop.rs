@@ -1,0 +1,151 @@
+//! Mini property-based-testing harness.
+//!
+//! `proptest` is unavailable offline; this provides the subset the test
+//! suite needs: seeded random case generation, a fixed case budget, and
+//! failure reporting that includes the reproducing seed. There is no
+//! shrinking — failures print the seed, and `Cases::seed(s)` replays it.
+
+use crate::util::rng::Pcg32;
+
+/// Configuration for a property run.
+pub struct Cases {
+    pub n: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        Cases { n: 256, base_seed: 0xD57ACC }
+    }
+}
+
+impl Cases {
+    pub fn new(n: usize) -> Self {
+        Cases { n, ..Default::default() }
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run `prop` for each case with a fresh deterministic generator.
+    /// Panics (failing the test) with the case seed on the first failure.
+    pub fn run<F>(&self, mut prop: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        for i in 0..self.n {
+            let case_seed = self.base_seed.wrapping_add(i as u64);
+            let mut g = Gen { rng: Pcg32::seeded(case_seed), seed: case_seed };
+            if let Err(msg) = prop(&mut g) {
+                panic!(
+                    "property failed on case {i} (replay with Cases::new(1).seed({case_seed})): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Per-case value generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.usize_below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choice(xs)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// A subset of `xs` with at least `min` elements.
+    pub fn subset<T: Clone>(&mut self, xs: &[T], min: usize) -> Vec<T> {
+        assert!(min <= xs.len());
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        self.rng.shuffle(&mut idx);
+        let k = self.usize_in(min, xs.len());
+        idx.truncate(k);
+        idx.sort();
+        idx.into_iter().map(|i| xs[i].clone()).collect()
+    }
+}
+
+/// Assertion helpers producing `Result<(), String>` for use in properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        Cases::new(57).run(|_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 57);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        Cases::new(16).run(|g| {
+            let v = g.usize_in(0, 9);
+            prop_assert!(v < 8, "v was {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        Cases::new(200).run(|g| {
+            let lo = g.usize_in(0, 5);
+            let hi = lo + g.usize_in(0, 10);
+            let v = g.usize_in(lo, hi);
+            prop_assert!(v >= lo && v <= hi, "bounds violated: {lo} {v} {hi}");
+            let f = g.f64_in(-2.0, 3.0);
+            prop_assert!((-2.0..3.0).contains(&f));
+            let s = g.subset(&[1, 2, 3, 4, 5], 2);
+            prop_assert!(s.len() >= 2 && s.len() <= 5);
+            Ok(())
+        });
+    }
+}

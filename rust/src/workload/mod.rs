@@ -1,0 +1,234 @@
+//! Workload generation (§7's request streams).
+//!
+//! The paper drives its testbed with MoonGen at ~1920 images/s over
+//! 10 GbE, splitting the stream across multiplexed models in (inverse)
+//! proportion to their SLOs, and also evaluates dynamically varying
+//! rates (Fig. 11b). This module produces the equivalent open-loop
+//! request streams in virtual time.
+
+use crate::gpu::{ms_to_us, Us};
+use crate::util::rng::Pcg32;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub model: usize,
+    pub arrival: Us,
+    /// Absolute deadline (arrival + SLO).
+    pub deadline: Us,
+}
+
+/// Arrival process for a single model's stream.
+#[derive(Debug, Clone)]
+pub enum Arrivals {
+    /// Exponential (Poisson) inter-arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Uniformly jittered inter-arrivals: mean `1/rate`, multiplied by
+    /// U(1−jitter, 1+jitter) (§6.3's "random, uniformly distributed
+    /// inter-arrival delay").
+    Uniform { rate: f64, jitter: f64 },
+    /// Piecewise-constant rates: (start_ms, rate) segments, used for the
+    /// dynamic-rate experiment (Fig. 11b).
+    Trace { segments: Vec<(f64, f64)> },
+}
+
+impl Arrivals {
+    fn rate_at(&self, t_ms: f64) -> f64 {
+        match self {
+            Arrivals::Poisson { rate } | Arrivals::Uniform { rate, .. } => *rate,
+            Arrivals::Trace { segments } => {
+                let mut r = 0.0;
+                for (start, rate) in segments {
+                    if t_ms >= *start {
+                        r = *rate;
+                    }
+                }
+                r
+            }
+        }
+    }
+
+    /// Generate arrivals over `[0, horizon_ms)` for `model` with the
+    /// model's SLO; ids are assigned by the caller via `next_id`.
+    pub fn generate(
+        &self,
+        model: usize,
+        slo_ms: f64,
+        horizon_ms: f64,
+        rng: &mut Pcg32,
+        next_id: &mut u64,
+    ) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut t_ms = 0.0;
+        loop {
+            let rate = self.rate_at(t_ms);
+            let gap_ms = if rate <= 0.0 {
+                // Idle segment: jump forward 1 ms looking for a live one.
+                t_ms += 1.0;
+                if t_ms >= horizon_ms {
+                    break;
+                }
+                continue;
+            } else {
+                match self {
+                    Arrivals::Poisson { .. } | Arrivals::Trace { .. } => {
+                        rng.exp(rate) * 1_000.0
+                    }
+                    Arrivals::Uniform { jitter, .. } => {
+                        let mean = 1_000.0 / rate;
+                        mean * rng.f64_range(1.0 - jitter, 1.0 + jitter)
+                    }
+                }
+            };
+            t_ms += gap_ms;
+            if t_ms >= horizon_ms {
+                break;
+            }
+            let arrival = ms_to_us(t_ms);
+            out.push(Request {
+                id: *next_id,
+                model,
+                arrival,
+                deadline: arrival + ms_to_us(slo_ms),
+            });
+            *next_id += 1;
+        }
+        out
+    }
+}
+
+/// Split an aggregate request rate across models inversely proportional
+/// to their SLOs (§7: with 1920 req/s over {25,25,50,100} ms SLOs the
+/// paper assigns 700/700/320/160 req/s).
+pub fn slo_proportional_rates(total_rate: f64, slos_ms: &[f64]) -> Vec<f64> {
+    let weights: Vec<f64> = slos_ms.iter().map(|s| 1.0 / s).collect();
+    let sum: f64 = weights.iter().sum();
+    weights.iter().map(|w| total_rate * w / sum).collect()
+}
+
+/// Build a merged, time-sorted request stream for a set of models.
+pub fn merged_stream(
+    specs: &[(Arrivals, f64)], // (process, slo_ms) per model index
+    horizon_ms: f64,
+    seed: u64,
+) -> Vec<Request> {
+    let mut all = Vec::new();
+    let mut next_id = 0u64;
+    for (model, (arr, slo)) in specs.iter().enumerate() {
+        // Independent stream per model for reproducibility under reorder.
+        let mut rng = Pcg32::new(seed, model as u64 + 1);
+        all.extend(arr.generate(model, *slo, horizon_ms, &mut rng, &mut next_id));
+    }
+    all.sort_by_key(|r| (r.arrival, r.id));
+    all
+}
+
+/// The paper's Fig. 11a request-rate assignments for the C-2/3/4/7 mixes.
+/// Returns (model name, rate req/s) pairs.
+pub fn fig11a_rates(mix: &str) -> Vec<(&'static str, f64)> {
+    match mix {
+        "C-2" => vec![("resnet50", 320.0), ("vgg19", 160.0)],
+        "C-3" => vec![("resnet50", 320.0), ("vgg19", 160.0), ("bert", 700.0)],
+        "C-4" => vec![
+            ("resnet50", 320.0),
+            ("vgg19", 160.0),
+            ("bert", 700.0),
+            ("mobilenet", 700.0),
+        ],
+        "C-7" => vec![
+            ("alexnet", 440.0),
+            ("mobilenet", 440.0),
+            ("resnet18", 440.0),
+            ("resnet50", 220.0),
+            ("inception", 220.0),
+            ("resnext50", 80.0),
+            ("vgg19", 80.0),
+        ],
+        other => panic!("unknown mix {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximation() {
+        let arr = Arrivals::Poisson { rate: 500.0 };
+        let mut rng = Pcg32::seeded(1);
+        let mut id = 0;
+        let reqs = arr.generate(0, 25.0, 10_000.0, &mut rng, &mut id);
+        // 500/s over 10 s → ~5000 requests.
+        assert!((reqs.len() as f64 - 5_000.0).abs() < 250.0, "{}", reqs.len());
+        // Deadlines are arrival + SLO.
+        for r in &reqs {
+            assert_eq!(r.deadline, r.arrival + 25_000);
+        }
+    }
+
+    #[test]
+    fn uniform_jitter_bounds() {
+        let arr = Arrivals::Uniform { rate: 100.0, jitter: 0.5 };
+        let mut rng = Pcg32::seeded(2);
+        let mut id = 0;
+        let reqs = arr.generate(0, 50.0, 5_000.0, &mut rng, &mut id);
+        assert!(!reqs.is_empty());
+        for w in reqs.windows(2) {
+            let gap = (w[1].arrival - w[0].arrival) as f64 / 1000.0;
+            assert!(gap >= 5.0 - 1e-3 && gap <= 15.0 + 1e-3, "gap {gap} ms");
+        }
+    }
+
+    #[test]
+    fn trace_changes_rate() {
+        // 1000/s for the first second, then silence.
+        let arr = Arrivals::Trace { segments: vec![(0.0, 1000.0), (1000.0, 0.0)] };
+        let mut rng = Pcg32::seeded(3);
+        let mut id = 0;
+        let reqs = arr.generate(0, 25.0, 3_000.0, &mut rng, &mut id);
+        let before: usize = reqs.iter().filter(|r| r.arrival < 1_000_000).count();
+        let after = reqs.len() - before;
+        assert!(before > 800, "{before}");
+        // At most one spillover event whose gap straddles the boundary.
+        assert!(after <= 1, "arrivals after the trace goes silent: {after}");
+    }
+
+    #[test]
+    fn slo_split_matches_paper() {
+        // §7: 1920 req/s over SLOs {25,25,50,100} → 698/698/349/175.
+        let rates = slo_proportional_rates(1920.0, &[25.0, 25.0, 50.0, 100.0]);
+        assert!((rates[0] - 698.0).abs() < 1.0, "{rates:?}");
+        assert!((rates[1] - 698.0).abs() < 1.0);
+        assert!((rates[2] - 349.0).abs() < 1.0);
+        assert!((rates[3] - 174.5).abs() < 1.0);
+        let sum: f64 = rates.iter().sum();
+        assert!((sum - 1920.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_stream_sorted_and_deterministic() {
+        let specs = vec![
+            (Arrivals::Poisson { rate: 300.0 }, 25.0),
+            (Arrivals::Poisson { rate: 100.0 }, 50.0),
+        ];
+        let a = merged_stream(&specs, 2_000.0, 7);
+        let b = merged_stream(&specs, 2_000.0, 7);
+        assert_eq!(a, b, "same seed, same stream");
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        let c = merged_stream(&specs, 2_000.0, 8);
+        assert_ne!(a, c, "different seed, different stream");
+    }
+
+    #[test]
+    fn fig11a_mixes() {
+        assert_eq!(fig11a_rates("C-2").len(), 2);
+        assert_eq!(fig11a_rates("C-3").len(), 3);
+        assert_eq!(fig11a_rates("C-4").len(), 4);
+        assert_eq!(fig11a_rates("C-7").len(), 7);
+        let total: f64 = fig11a_rates("C-7").iter().map(|(_, r)| r).sum();
+        assert!((total - 1920.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Cluster-level integration: placement correctness and determinism.
+
+use dstack::cluster::{entries_for_gpu, run_cluster, ClusterPolicy};
+use dstack::profile::{by_name, T4, V100};
+use dstack::workload::{merged_stream, Arrivals};
+
+fn setup() -> (Vec<dstack::profile::ModelProfile>, Vec<dstack::workload::Request>) {
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let specs: Vec<_> = profiles
+        .iter()
+        .map(|p| (Arrivals::Poisson { rate: 400.0 }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, 3_000.0, 4);
+    (profiles, reqs)
+}
+
+#[test]
+fn cluster_runs_deterministic() {
+    let (profiles, reqs) = setup();
+    let a = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::DstackAll);
+    let b = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::DstackAll);
+    assert_eq!(a.throughput, b.throughput);
+    assert_eq!(a.gpu_utilization, b.gpu_utilization);
+}
+
+#[test]
+fn more_gpus_more_throughput_under_overload() {
+    let names = ["resnet50", "vgg19"];
+    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let specs: Vec<_> = profiles
+        .iter()
+        .map(|p| (Arrivals::Poisson { rate: 2_000.0 }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, 3_000.0, 6);
+    let two = run_cluster(&profiles, &T4, 2, &reqs, 3_000.0, ClusterPolicy::DstackAll);
+    let four = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::DstackAll);
+    assert!(
+        four.total_throughput() > 1.5 * two.total_throughput(),
+        "2 GPUs {} vs 4 GPUs {}",
+        two.total_throughput(),
+        four.total_throughput()
+    );
+}
+
+#[test]
+fn operating_points_adapt_to_gpu() {
+    let profiles = vec![by_name("vgg19").unwrap()];
+    let v = entries_for_gpu(&profiles, &V100);
+    let t = entries_for_gpu(&profiles, &T4);
+    // VGG-19's knee is 40 of 80 SMs on V100; on the 40-SM T4 it wants
+    // proportionally more of the device.
+    assert!(t[0].pct > v[0].pct, "t4 {} vs v100 {}", t[0].pct, v[0].pct);
+}
+
+#[test]
+#[should_panic(expected = "exclusive placement")]
+fn exclusive_requires_enough_gpus() {
+    let (profiles, reqs) = setup();
+    run_cluster(&profiles, &T4, 2, &reqs, 1_000.0, ClusterPolicy::Exclusive);
+}

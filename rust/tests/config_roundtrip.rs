@@ -1,0 +1,43 @@
+//! Scenario config files under configs/ parse, validate and run.
+
+use dstack::config::{run_scenario, PolicyKind, Scenario};
+use std::path::Path;
+
+#[test]
+fn shipped_configs_parse_and_run() {
+    let dir = Path::new("configs");
+    let mut found = 0;
+    for entry in std::fs::read_dir(dir).expect("configs/ missing") {
+        let path = entry.unwrap().path();
+        if path.extension().is_some_and(|e| e == "json") {
+            let mut sc = Scenario::from_file(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            sc.horizon_ms = sc.horizon_ms.min(1_000.0); // keep tests fast
+            let rep = run_scenario(&sc);
+            assert_eq!(rep.per_model.len(), sc.models.len(), "{}", path.display());
+            found += 1;
+        }
+    }
+    assert!(found >= 3, "expected ≥3 shipped scenario configs, found {found}");
+}
+
+#[test]
+fn roundtrip_preserves_semantics() {
+    let sc = Scenario::from_file(Path::new("configs/c4_dstack.json")).unwrap();
+    let text = sc.to_json().to_string_pretty();
+    let sc2 = Scenario::from_json(&text).unwrap();
+    assert_eq!(sc.policy, sc2.policy);
+    assert_eq!(sc.models.len(), sc2.models.len());
+    for (a, b) in sc.models.iter().zip(&sc2.models) {
+        assert_eq!(a.name, b.name);
+        assert!((a.rate - b.rate).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn policy_parse_covers_all() {
+    for k in PolicyKind::all() {
+        assert_eq!(PolicyKind::parse(k.name()).unwrap(), *k);
+    }
+    assert!(PolicyKind::parse("bogus").is_err());
+}

@@ -1,0 +1,114 @@
+//! Every table/figure generator runs and produces plausible data; the
+//! headline paper *shapes* hold in the regenerated outputs.
+
+use dstack::figures;
+
+fn parse(v: &str) -> f64 {
+    v.parse().unwrap_or(f64::NAN)
+}
+
+#[test]
+fn table1_dstack_faster_than_triton() {
+    let d = figures::table1();
+    assert_eq!(d.rows.len(), 2);
+    let triton = parse(&d.rows[0][1]);
+    let dstack = parse(&d.rows[1][1]);
+    // Paper: 37% reduction (58.6 s → 35.6 s). Assert >20%.
+    assert!(dstack < 0.8 * triton, "triton {triton} dstack {dstack}");
+}
+
+#[test]
+fn fig9abc_utilization_ordering() {
+    let d = figures::fig9abc();
+    let util: Vec<f64> = d.rows.iter().map(|r| parse(&r[1])).collect();
+    // temporal < plain spatio-temporal < dstack (44% → 60% → 74%).
+    assert!(util[0] < util[1] && util[1] < util[2], "{util:?}");
+    assert!(util[0] < 55.0, "temporal too high: {}", util[0]);
+    assert!(util[2] > 60.0, "dstack too low: {}", util[2]);
+}
+
+#[test]
+fn fig9d_dstack_near_ideal() {
+    let d = figures::fig9d();
+    let dstack = d.rows.iter().find(|r| r[0] == "dstack").unwrap();
+    let vs_ideal = parse(&dstack[3]);
+    // Paper: >90% of ideal. (Ours slightly exceeds 100% — the slotted
+    // ideal pays quantization overhead; see EXPERIMENTS.md.)
+    assert!(vs_ideal > 90.0, "dstack at {vs_ideal}% of ideal");
+    let temporal = d.rows.iter().find(|r| r[0] == "temporal").unwrap();
+    assert!(parse(&temporal[3]) < 70.0);
+}
+
+#[test]
+fn fig10_dstack_beats_temporal_everywhere() {
+    let d = figures::fig10();
+    let get = |policy: &str| {
+        d.rows
+            .iter()
+            .find(|r| r[0] == format!("{policy} thpt"))
+            .map(|r| (1..=4).map(|i| parse(&r[i])).collect::<Vec<_>>())
+            .unwrap()
+    };
+    let temporal = get("temporal");
+    let dstack = get("dstack");
+    for i in 0..4 {
+        assert!(
+            dstack[i] > temporal[i],
+            "model {i}: dstack {} vs temporal {}",
+            dstack[i],
+            temporal[i]
+        );
+    }
+    // Light models gain the most (paper: 4x for alexnet/mobilenet).
+    assert!(dstack[0] > 2.0 * temporal[0]);
+}
+
+#[test]
+fn fig11a_dstack_highest_throughput_lowest_violations() {
+    let d = figures::fig11a();
+    for mix in ["C-4", "C-7"] {
+        let rows: Vec<_> = d.rows.iter().filter(|r| r[0] == mix).collect();
+        assert_eq!(rows.len(), 5);
+        let dstack = rows.iter().find(|r| r[1] == "dstack").unwrap();
+        for r in &rows {
+            if r[1] == "dstack" {
+                continue;
+            }
+            assert!(
+                parse(&dstack[2]) >= parse(&r[2]) * 0.95,
+                "{mix}: dstack thpt {} vs {} {}",
+                dstack[2],
+                r[1],
+                r[2]
+            );
+            assert!(
+                parse(&dstack[4]) <= parse(&r[4]) + 0.02,
+                "{mix}: dstack viol {} vs {} {}",
+                dstack[4],
+                r[1],
+                r[4]
+            );
+        }
+    }
+}
+
+#[test]
+fn fig12_cluster_ordering() {
+    let d = figures::fig12();
+    let total = |p: &str| {
+        d.rows.iter().find(|r| r[0].contains(p)).map(|r| parse(&r[1])).unwrap()
+    };
+    let excl = total("Exclusive");
+    let temp = total("Temporal");
+    let dstk = total("Dstack");
+    assert!(dstk > temp && dstk > 1.3 * excl, "excl {excl} temp {temp} dstack {dstk}");
+}
+
+#[test]
+fn all_generators_write_csv() {
+    let dir = std::env::temp_dir().join("dstack_figs_test");
+    for d in figures::generate("tables") {
+        d.write_csv(&dir).unwrap();
+        assert!(dir.join(format!("{}.csv", d.name)).exists());
+    }
+}

@@ -1,0 +1,67 @@
+//! End-to-end PJRT integration: load AOT artifacts compiled by JAX,
+//! regenerate weights in Rust, execute on the PJRT CPU client, and
+//! verify the numerics match what JAX computed at build time.
+//! Requires `make artifacts` (skips with a notice when absent).
+
+use dstack::runtime::{artifacts_dir, iota_input, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIPPED (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn selfcheck_every_artifact() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.load_all_checked().expect("selfcheck failed");
+    assert!(n >= 16, "expected ≥16 artifacts, got {n}");
+}
+
+#[test]
+fn inference_shapes_and_determinism() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let loaded = rt.load("convnet1", 1).unwrap();
+    let x = iota_input(&loaded.artifact.input_shape);
+    let a = loaded.infer(&x).unwrap();
+    let b = loaded.infer(&x).unwrap();
+    assert_eq!(a.len(), 10);
+    assert_eq!(a, b, "PJRT execution must be deterministic");
+}
+
+#[test]
+fn batch_row_consistency_across_executables() {
+    // Row 0 of the batch-16 executable ≈ the batch-1 executable on the
+    // same data (independent HLO lowerings of the same model).
+    let Some(mut rt) = runtime_or_skip() else { return };
+    rt.load("alexnet_mini", 1).unwrap();
+    rt.load("alexnet_mini", 16).unwrap();
+    let l16 = rt.get("alexnet_mini", 16).unwrap();
+    let x16 = iota_input(&l16.artifact.input_shape);
+    let out16 = l16.infer(&x16).unwrap();
+    let item = 32 * 32 * 3;
+    let l1 = rt.get("alexnet_mini", 1).unwrap();
+    let out1 = l1.infer(&x16[..item]).unwrap();
+    for (i, (&a, &b)) in out1.iter().zip(out16[..10].iter()).enumerate() {
+        assert!((a - b).abs() < 1e-3, "logit {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn wrong_input_length_rejected() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let loaded = rt.load("convnet1", 1).unwrap();
+    assert!(loaded.infer(&[0.0; 7]).is_err());
+}
+
+#[test]
+fn missing_artifact_errors() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert!(rt.load("convnet1", 3).is_err());
+    assert!(rt.load("unknown_model", 1).is_err());
+}

@@ -1,0 +1,100 @@
+//! Cross-module integration: determinism, session accounting and the
+//! paper's headline comparisons at the full 10 s scale.
+
+use dstack::config::{build_policy, PolicyKind};
+use dstack::sim::{entries_at_optimum, Sim, SimConfig};
+use dstack::workload::{merged_stream, slo_proportional_rates, Arrivals};
+
+fn c4_requests(total_rate: f64, horizon_ms: f64, seed: u64) -> (Vec<dstack::sim::ModelEntry>, Vec<dstack::workload::Request>) {
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<_> = names.iter().map(|n| dstack::profile::by_name(n).unwrap()).collect();
+    let entries = entries_at_optimum(&profiles);
+    let slos: Vec<f64> = profiles.iter().map(|p| p.slo_ms).collect();
+    let rates = slo_proportional_rates(total_rate, &slos);
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(&rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    (entries, merged_stream(&specs, horizon_ms, seed))
+}
+
+#[test]
+fn full_run_deterministic() {
+    let mut reports = Vec::new();
+    for _ in 0..2 {
+        let (entries, reqs) = c4_requests(1_000.0, 5_000.0, 77);
+        let mut pol = build_policy(PolicyKind::Dstack, &entries);
+        let mut sim = Sim::new(SimConfig { horizon_ms: 5_000.0, ..Default::default() }, entries);
+        reports.push(sim.run(pol.as_mut(), &reqs));
+    }
+    for i in 0..4 {
+        assert_eq!(reports[0].per_model[i].served, reports[1].per_model[i].served);
+        assert_eq!(
+            reports[0].per_model[i].latencies_ms,
+            reports[1].per_model[i].latencies_ms
+        );
+    }
+    assert_eq!(reports[0].busy_ms, reports[1].busy_ms);
+}
+
+#[test]
+fn headline_dstack_vs_temporal() {
+    // §1: "4x improvement in inference throughput" vs temporal at the
+    // full 1920 req/s C-4 load. We assert ≥2x here (seeds vary).
+    let (entries, reqs) = c4_requests(1_920.0, 10_000.0, 1);
+    let mut tpol = build_policy(PolicyKind::Temporal, &entries);
+    let mut tsim =
+        Sim::new(SimConfig { horizon_ms: 10_000.0, ..Default::default() }, entries.clone());
+    let trep = tsim.run(tpol.as_mut(), &reqs);
+
+    let mut dpol = build_policy(PolicyKind::Dstack, &entries);
+    let mut dsim = Sim::new(SimConfig { horizon_ms: 10_000.0, ..Default::default() }, entries);
+    let drep = dsim.run(dpol.as_mut(), &reqs);
+
+    assert!(
+        drep.total_throughput() >= 2.0 * trep.total_throughput(),
+        "dstack {} vs temporal {}",
+        drep.total_throughput(),
+        trep.total_throughput()
+    );
+    // And utilization improves (paper: ~1.6x).
+    assert!(drep.mean_utilization() > 1.2 * trep.mean_utilization());
+}
+
+#[test]
+fn dstack_violations_lowest_among_policies() {
+    let (entries, reqs) = c4_requests(1_500.0, 8_000.0, 5);
+    let mut best: Option<(String, f64)> = None;
+    let mut dstack_frac = 1.0;
+    for kind in [
+        PolicyKind::FixedBatch,
+        PolicyKind::Temporal,
+        PolicyKind::Triton,
+        PolicyKind::Gslice,
+        PolicyKind::Dstack,
+    ] {
+        let mut pol = build_policy(kind, &entries);
+        let cfg = SimConfig {
+            horizon_ms: 8_000.0,
+            allow_oversub: kind == PolicyKind::FixedBatch,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg, entries.clone());
+        let rep = sim.run(pol.as_mut(), &reqs);
+        let frac = rep.violation_fraction();
+        if kind == PolicyKind::Dstack {
+            dstack_frac = frac;
+        }
+        if best.as_ref().is_none_or(|(_, b)| frac < *b) {
+            best = Some((kind.name().to_string(), frac));
+        }
+    }
+    let (best_name, best_frac) = best.unwrap();
+    // Within 2 percentage points of the best policy (GSLICE ties D-STACK
+    // at low model counts — the paper observes the same at C-2).
+    assert!(
+        dstack_frac <= best_frac + 0.02,
+        "dstack {dstack_frac} beaten by {best_name} {best_frac}"
+    );
+}
