@@ -1,33 +1,67 @@
-//! Fig. 12: the 4×T4 cluster — exclusive GPUs vs temporal sharing vs
-//! D-STACK on every GPU.
+//! Fig. 12 and beyond: the paper's fixed 4×T4 layouts (exclusive GPUs vs
+//! temporal sharing vs D-STACK on every GPU) followed by the cluster
+//! placement engine — knee-packed placement, replication of hot models,
+//! and load-aware routing — including a heterogeneous V100+T4 cluster.
 //!
 //!     cargo run --release --example cluster_sim
 
-use dstack::cluster::{run_cluster, ClusterPolicy};
-use dstack::profile::{by_name, T4};
-use dstack::workload::{merged_stream, Arrivals};
+use dstack::cluster::{
+    fig12_workload, run_cluster, serve_cluster, ClusterPolicy, GpuSched, PlacementPolicy,
+    RoutingPolicy,
+};
+use dstack::profile::{GpuSpec, T4, V100};
 
 fn main() {
-    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
-    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
-    let rates = [150.0, 150.0, 900.0, 450.0];
     let horizon_ms = 8_000.0;
-    let specs: Vec<_> = profiles
-        .iter()
-        .zip(rates)
-        .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
-        .collect();
-    let reqs = merged_stream(&specs, horizon_ms, 77);
+    let (profiles, rates, reqs) = fig12_workload(horizon_ms, 77);
+    let names: Vec<&str> = profiles.iter().map(|p| p.name.as_str()).collect();
 
-    println!("policy        total(req/s)  per-model  mean-util%");
+    println!("== paper scenarios (fixed layouts, 4xT4, round-robin split) ==");
+    println!("{:<22} {:>12}  per-model  mean-util%", "policy", "total(req/s)");
     for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
         let r = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol);
         println!(
-            "{:<12} {:>12.0}  {:?}  {:>6.1}",
+            "{:<22} {:>12.0}  {:?}  {:>6.1}",
             r.policy,
             r.total_throughput(),
             r.throughput.iter().map(|t| t.round()).collect::<Vec<_>>(),
             r.mean_utilization() * 100.0
         );
+    }
+
+    println!();
+    println!("== placement engine (knee-packed, replicated, load-aware routing) ==");
+    let t4x4: Vec<GpuSpec> = vec![T4.clone(); 4];
+    let hetero: Vec<GpuSpec> = vec![V100.clone(), V100.clone(), T4.clone(), T4.clone()];
+    let scenarios: [(&str, &Vec<GpuSpec>, PlacementPolicy, RoutingPolicy); 3] = [
+        ("ffd+jsq 4xT4", &t4x4, PlacementPolicy::FirstFitDecreasing, RoutingPolicy::JoinShortestQueue),
+        ("lb+p2c  4xT4", &t4x4, PlacementPolicy::LoadBalance, RoutingPolicy::PowerOfTwoChoices),
+        ("ffd+jsq 2xV100+2xT4", &hetero, PlacementPolicy::FirstFitDecreasing, RoutingPolicy::JoinShortestQueue),
+    ];
+    for (label, gpus, placement, routing) in scenarios {
+        let r = serve_cluster(
+            &profiles, &rates, gpus, placement, routing, GpuSched::Dstack, &reqs, horizon_ms, 77,
+        );
+        println!(
+            "{:<22} {:>12.0}  {:?}  {:>6.1}",
+            label,
+            r.total_throughput(),
+            r.throughput.iter().map(|t| t.round()).collect::<Vec<_>>(),
+            r.mean_utilization() * 100.0
+        );
+        for (g, gr) in r.per_gpu.iter().enumerate() {
+            let models: Vec<String> = gr
+                .models
+                .iter()
+                .map(|s| format!("{}@{}%", names[s.model], s.pct))
+                .collect();
+            println!(
+                "    gpu{g} {:<5} knee_load {:>3}%  util {:>5.1}%  [{}]",
+                gr.gpu,
+                gr.knee_load_pct,
+                gr.utilization * 100.0,
+                models.join(" ")
+            );
+        }
     }
 }

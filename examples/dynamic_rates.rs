@@ -24,7 +24,7 @@ fn main() {
             let rate = if k - 1 == i { base[i] * 0.3 } else { base[i] };
             segments.push((k as f64 * phase_ms, rate));
         }
-        specs.push((Arrivals::Trace { segments }, p.slo_ms));
+        specs.push((Arrivals::trace(segments), p.slo_ms));
     }
     let horizon = 5.0 * phase_ms;
     let reqs = merged_stream(&specs, horizon, 3);

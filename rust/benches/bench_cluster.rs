@@ -1,26 +1,73 @@
-//! Fig. 12 benchmark: the 4xT4 cluster simulation across placements.
+//! Cluster benchmarks: the Fig. 12 fixed layouts plus the placement
+//! engine, on identical seeded workloads.
+//!
+//! The headline acceptance comparison: a heterogeneous 2×V100 + 2×T4
+//! cluster with knee-packed (FFD) placement and join-shortest-queue
+//! routing must reach at least the legacy round-robin `DstackAll`
+//! aggregate throughput of the 4×T4 layout on the same request stream.
 
 use dstack::bench::{bench, Bench};
-use dstack::cluster::{run_cluster, ClusterPolicy};
-use dstack::profile::{by_name, T4};
-use dstack::workload::{merged_stream, Arrivals};
+use dstack::cluster::{
+    fig12_workload, run_cluster, serve_cluster, ClusterPolicy, GpuSched, PlacementPolicy,
+    RoutingPolicy,
+};
+use dstack::profile::{GpuSpec, T4, V100};
 
 fn main() {
-    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
-    let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
-    let rates = [150.0, 150.0, 900.0, 450.0];
-    let specs: Vec<_> = profiles
-        .iter()
-        .zip(rates)
-        .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
-        .collect();
-    let reqs = merged_stream(&specs, 2_000.0, 77);
+    let horizon_ms = 2_000.0;
+    let (profiles, rates, reqs) = fig12_workload(horizon_ms, 77);
     let cfg = Bench::quick();
+
+    let mut legacy_dstack = 0.0;
     for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
         let mut total = 0.0;
         bench(&format!("cluster/{pol:?}"), &cfg, || {
-            total = run_cluster(&profiles, &T4, 4, &reqs, 2_000.0, pol).total_throughput();
+            total = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol).total_throughput();
         });
         println!("    -> total {total:.0} req/s");
+        if pol == ClusterPolicy::DstackAll {
+            legacy_dstack = total;
+        }
     }
+
+    let t4x4: Vec<GpuSpec> = vec![T4.clone(); 4];
+    let hetero: Vec<GpuSpec> = vec![V100.clone(), V100.clone(), T4.clone(), T4.clone()];
+    let scenarios: [(&str, &Vec<GpuSpec>, RoutingPolicy); 3] = [
+        ("placed/ffd+rr_4xT4", &t4x4, RoutingPolicy::RoundRobin),
+        ("placed/ffd+jsq_4xT4", &t4x4, RoutingPolicy::JoinShortestQueue),
+        ("placed/ffd+jsq_2xV100+2xT4", &hetero, RoutingPolicy::JoinShortestQueue),
+    ];
+    let mut hetero_jsq = 0.0;
+    for (label, gpus, routing) in scenarios {
+        let mut total = 0.0;
+        bench(label, &cfg, || {
+            total = serve_cluster(
+                &profiles,
+                &rates,
+                gpus,
+                PlacementPolicy::FirstFitDecreasing,
+                routing,
+                GpuSched::Dstack,
+                &reqs,
+                horizon_ms,
+                7,
+            )
+            .total_throughput();
+        });
+        println!("    -> total {total:.0} req/s");
+        if label.ends_with("2xV100+2xT4") {
+            hetero_jsq = total;
+        }
+    }
+
+    println!(
+        "acceptance: hetero ffd+jsq {hetero_jsq:.0} req/s vs legacy DstackAll RR {legacy_dstack:.0} req/s \
+         ({:.2}x)",
+        hetero_jsq / legacy_dstack.max(1e-9)
+    );
+    assert!(
+        hetero_jsq >= legacy_dstack,
+        "heterogeneous JSQ cluster ({hetero_jsq:.0} req/s) must reach the legacy \
+         round-robin DstackAll throughput ({legacy_dstack:.0} req/s)"
+    );
 }

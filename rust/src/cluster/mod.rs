@@ -1,19 +1,83 @@
-//! Multi-GPU cluster scheduling (§7.1, Fig. 12).
+//! Multi-GPU cluster serving: placement, load-aware routing, admission
+//! control (§7.1, Fig. 12, generalized).
 //!
-//! The paper evaluates a 4×T4 cluster three ways: (1) one GPU dedicated
-//! per model ("exclusive"), (2) all models on every GPU with temporal
-//! sharing, (3) all models on every GPU under D-STACK. Request streams
-//! are split round-robin across the GPUs hosting each model; every GPU
-//! runs an independent scheduler instance (the paper's design: per-GPU
-//! D-STACK schedulers, cluster-level placement).
+//! The paper evaluates a 4×T4 cluster with three fixed layouts and an
+//! up-front round-robin stream split. This module turns that into a real
+//! cluster subsystem (DESIGN.md §4):
+//!
+//! - [`placement`] bin-packs models onto (possibly heterogeneous) GPUs
+//!   by their per-GPU-type knee GPU%, replicating hot models and
+//!   rejecting what the cluster cannot host;
+//! - [`routing`] dispatches each request to a replica at its arrival
+//!   instant — round-robin, join-shortest-queue or power-of-two-choices
+//!   — against the live backlog of every per-GPU engine;
+//! - [`run_placement`] drives one [`crate::sim::Sim`] engine per GPU in
+//!   a single global virtual clock, feeding them *routed* requests
+//!   instead of pre-split streams, and aggregates a [`ClusterReport`]
+//!   with per-GPU packing, per-model replica map, reject/shed counts and
+//!   p99 latency per model.
+//!
+//! The paper's fixed scenarios ([`ClusterPolicy`]) are retained as thin
+//! layouts over the same engine: every GPU runs an independent scheduler
+//! instance (per-GPU D-STACK schedulers, cluster-level placement), and
+//! with round-robin routing the arrival-order splits are identical to
+//! the old up-front split.
 
+pub mod placement;
+pub mod routing;
+
+pub use placement::{place, op_point, Placement, PlacementPolicy, Replica};
+pub use routing::{Router, RoutingPolicy};
+
+use crate::gpu::ms_to_us;
 use crate::metrics::RunReport;
 use crate::profile::{GpuSpec, ModelProfile};
-use crate::sched::{dstack::Dstack, temporal::Temporal, triton::Triton};
+use crate::sched::{dstack::Dstack, gslice::Gslice, temporal::Temporal, triton::Triton};
 use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
 use crate::workload::Request;
 
-/// Cluster-level placement / scheduling strategy.
+/// Which scheduler runs on each GPU of the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuSched {
+    Dstack,
+    Temporal,
+    Triton,
+    Gslice,
+}
+
+impl GpuSched {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuSched::Dstack => "dstack",
+            GpuSched::Temporal => "temporal",
+            GpuSched::Triton => "triton",
+            GpuSched::Gslice => "gslice",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<GpuSched, String> {
+        Ok(match s {
+            "dstack" => GpuSched::Dstack,
+            "temporal" => GpuSched::Temporal,
+            "triton" => GpuSched::Triton,
+            "gslice" => GpuSched::Gslice,
+            other => return Err(format!("unknown per-GPU scheduler '{other}'")),
+        })
+    }
+
+    fn build(&self, entries: &[ModelEntry]) -> Box<dyn Policy> {
+        match self {
+            GpuSched::Dstack => Box::new(Dstack::from_entries(entries)),
+            GpuSched::Temporal => Box::new(Temporal::from_entries(entries)),
+            GpuSched::Triton => Box::new(Triton::from_entries(entries)),
+            GpuSched::Gslice => Box::new(Gslice::from_entries(entries)),
+        }
+    }
+}
+
+/// Legacy cluster-level strategy (the paper's three Fig. 12 scenarios).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClusterPolicy {
     /// One GPU per model, dynamic batching at 100% GPU (a dedicated
@@ -25,7 +89,33 @@ pub enum ClusterPolicy {
     DstackAll,
 }
 
-/// Aggregated cluster run.
+/// Per-model share of one GPU's packing (reported, not prescriptive).
+#[derive(Debug, Clone)]
+pub struct GpuModelShare {
+    /// Global model index.
+    pub model: usize,
+    /// Deployed GPU% of this replica.
+    pub pct: u32,
+    /// Deployed batch size.
+    pub batch: u32,
+    /// Requests this replica served.
+    pub served: u64,
+}
+
+/// One GPU's slice of the cluster report.
+#[derive(Debug, Clone)]
+pub struct GpuReport {
+    /// GPU type name (e.g. "V100").
+    pub gpu: String,
+    /// Σ placed knee GPU% on this device.
+    pub knee_load_pct: u32,
+    /// Mean utilization over the horizon, 0..1.
+    pub utilization: f64,
+    pub models: Vec<GpuModelShare>,
+}
+
+/// Aggregated cluster run: cluster-wide per-model outcomes plus the
+/// packing that produced them.
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
     pub policy: String,
@@ -33,8 +123,23 @@ pub struct ClusterReport {
     pub throughput: Vec<f64>,
     /// Per-GPU utilization.
     pub gpu_utilization: Vec<f64>,
-    /// Per-model SLO violations/s across the cluster.
+    /// Per-model SLO violations/s across the cluster (late + unserved +
+    /// admission-rejected).
     pub violations_per_sec: Vec<f64>,
+    /// Per-model p99 end-to-end latency (ms) over all replicas.
+    pub p99_ms: Vec<f64>,
+    /// Per-model served / still-queued-at-horizon / admission-rejected
+    /// request counts. Conservation: served + dropped + rejected equals
+    /// the offered stream per model.
+    pub served: Vec<u64>,
+    pub dropped: Vec<u64>,
+    pub rejected: Vec<u64>,
+    /// model → GPUs hosting a replica.
+    pub replica_map: Vec<Vec<usize>>,
+    /// Offered rate the placement could not cover (req/s per model).
+    pub shed_rps: Vec<f64>,
+    pub admitted: Vec<bool>,
+    pub per_gpu: Vec<GpuReport>,
 }
 
 impl ClusterReport {
@@ -45,51 +150,299 @@ impl ClusterReport {
     pub fn mean_utilization(&self) -> f64 {
         self.gpu_utilization.iter().sum::<f64>() / self.gpu_utilization.len().max(1) as f64
     }
+
+    /// Deterministic JSON form (golden-trace tests, tooling).
+    pub fn to_json(&self) -> Json {
+        let per_gpu: Vec<Json> = self
+            .per_gpu
+            .iter()
+            .map(|g| {
+                let models: Vec<Json> = g
+                    .models
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("model", Json::from(s.model)),
+                            ("pct", Json::from(s.pct)),
+                            ("batch", Json::from(s.batch)),
+                            ("served", Json::from(s.served)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("gpu", Json::from(g.gpu.as_str())),
+                    ("knee_load_pct", Json::from(g.knee_load_pct)),
+                    ("utilization", Json::from(g.utilization)),
+                    ("models", Json::Arr(models)),
+                ])
+            })
+            .collect();
+        let replica_map: Vec<Json> = self
+            .replica_map
+            .iter()
+            .map(|gpus| Json::Arr(gpus.iter().map(|&g| Json::from(g)).collect()))
+            .collect();
+        Json::obj(vec![
+            ("policy", Json::from(self.policy.as_str())),
+            ("throughput", Json::arr_f64(&self.throughput)),
+            ("gpu_utilization", Json::arr_f64(&self.gpu_utilization)),
+            ("violations_per_sec", Json::arr_f64(&self.violations_per_sec)),
+            ("p99_ms", Json::arr_f64(&self.p99_ms)),
+            ("served", Json::Arr(self.served.iter().map(|&v| Json::from(v)).collect())),
+            ("dropped", Json::Arr(self.dropped.iter().map(|&v| Json::from(v)).collect())),
+            ("rejected", Json::Arr(self.rejected.iter().map(|&v| Json::from(v)).collect())),
+            ("replica_map", Json::Arr(replica_map)),
+            ("shed_rps", Json::arr_f64(&self.shed_rps)),
+            (
+                "admitted",
+                Json::Arr(self.admitted.iter().map(|&b| Json::from(b)).collect()),
+            ),
+            ("per_gpu", Json::Arr(per_gpu)),
+        ])
+    }
 }
 
-/// Operating points recomputed for the cluster's GPU type (knees differ
+/// The seeded Fig. 12 cluster workload (profiles, offered rates, merged
+/// request stream) — the one workload every cluster experiment, bench
+/// and acceptance comparison runs, built from
+/// [`crate::workload::fig12_rates`] so the mix lives in one place.
+pub fn fig12_workload(
+    horizon_ms: f64,
+    seed: u64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+    use crate::workload::{fig12_rates, merged_stream, Arrivals};
+    let spec = fig12_rates();
+    let profiles: Vec<ModelProfile> = spec
+        .iter()
+        .map(|(n, _)| crate::profile::by_name(n).expect("fig12 model in zoo"))
+        .collect();
+    let rates: Vec<f64> = spec.iter().map(|&(_, r)| r).collect();
+    let arrivals: Vec<_> = profiles
+        .iter()
+        .zip(&rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&arrivals, horizon_ms, seed);
+    (profiles, rates, reqs)
+}
+
+/// Operating points recomputed for a cluster's GPU type (knees differ
 /// between V100 and T4 — §7.1).
 pub fn entries_for_gpu(profiles: &[ModelProfile], gpu: &GpuSpec) -> Vec<ModelEntry> {
-    use crate::optimizer::{optimize, OptConfig};
     profiles
         .iter()
         .map(|p| {
-            let cfg = OptConfig::default();
-            match optimize(p, gpu, &cfg) {
-                Some(op) => ModelEntry { profile: p.clone(), pct: op.gpu_pct, batch: op.batch },
-                None => ModelEntry {
-                    profile: p.clone(),
-                    pct: p.knee_pct_on(gpu, p.opt_batch),
-                    batch: p.opt_batch,
-                },
-            }
+            let (pct, batch, _) = op_point(p, gpu);
+            ModelEntry { profile: p.clone(), pct, batch }
         })
         .collect()
 }
 
-/// Split a request stream round-robin (per model) across `n` GPUs,
-/// remapping each request's model index to the hosting GPU's local index.
-fn split_stream(
-    requests: &[Request],
-    n_gpus: usize,
-    hosted: impl Fn(usize) -> Vec<(usize, usize)>, // model -> [(gpu, local_idx)]
-) -> Vec<Vec<Request>> {
-    let mut out: Vec<Vec<Request>> = vec![Vec::new(); n_gpus];
-    let mut rr: Vec<usize> = vec![0; 64];
-    for r in requests {
-        let hosts = hosted(r.model);
-        let pick = rr[r.model] % hosts.len();
-        rr[r.model] += 1;
-        let (gpu, local) = hosts[pick];
-        let mut req = r.clone();
-        req.model = local;
-        out[gpu].push(req);
-    }
-    out
+struct Engine {
+    sim: Sim,
+    policy: Box<dyn Policy>,
 }
 
-/// Run the cluster experiment: `profiles` over `n_gpus` of type `gpu`,
-/// with a merged request stream (model indices into `profiles`).
+/// Drive one engine per GPU over `requests` under `placement`, routing
+/// each request at its arrival instant. Deterministic: a fixed
+/// (placement, routing, seed, stream) tuple always yields the same
+/// [`ClusterReport`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_placement(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    pl: &Placement,
+    requests: &[Request],
+    horizon_ms: f64,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    seed: u64,
+    label: &str,
+) -> ClusterReport {
+    assert_eq!(pl.n_gpus(), gpus.len(), "placement built for a different cluster");
+    let n_models = profiles.len();
+    let n_gpus = gpus.len();
+    let horizon = ms_to_us(horizon_ms);
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+
+    // One engine per GPU that hosts anything; empty GPUs stay idle.
+    let mut engines: Vec<Option<Engine>> = (0..n_gpus)
+        .map(|g| {
+            if pl.hosted[g].is_empty() {
+                return None;
+            }
+            let entries: Vec<ModelEntry> = pl.hosted[g]
+                .iter()
+                .map(|&m| {
+                    let rep = pl.replicas[m]
+                        .iter()
+                        .find(|r| r.gpu == g)
+                        .expect("hosted model without a replica entry");
+                    ModelEntry { profile: profiles[m].clone(), pct: rep.pct, batch: rep.batch }
+                })
+                .collect();
+            let policy = sched.build(&entries);
+            let cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+            Some(Engine { sim: Sim::new(cfg, entries), policy })
+        })
+        .collect();
+
+    let mut router = Router::new(routing, n_models, seed);
+    let mut rejected = vec![0u64; n_models];
+    let mut cursor = 0usize;
+    let mut touched = vec![false; n_gpus];
+
+    loop {
+        let t_arr = requests.get(cursor).map(|r| r.arrival);
+        let t_eng = engines
+            .iter()
+            .flatten()
+            .filter_map(|e| e.sim.next_event_time())
+            .min();
+        let Some(t) = [t_arr, t_eng].into_iter().flatten().min() else { break };
+        if t >= horizon {
+            break;
+        }
+
+        // 1. Route every arrival at t to a replica and inject it.
+        touched.fill(false);
+        while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
+            let r = &requests[cursor];
+            cursor += 1;
+            if !pl.admitted[r.model] {
+                rejected[r.model] += 1;
+                continue;
+            }
+            let reps = &pl.replicas[r.model];
+            let pick = router.route(r.model, reps, |rep| {
+                engines[rep.gpu]
+                    .as_ref()
+                    .map_or(usize::MAX, |e| e.sim.backlog_items(rep.local))
+            });
+            let rep = &reps[pick];
+            let mut req = r.clone();
+            req.model = rep.local;
+            engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
+            touched[rep.gpu] = true;
+        }
+
+        // 2. Step every engine that has due events or new arrivals. Each
+        //    engine sees exactly the event sequence it would see running
+        //    alone on its routed sub-stream.
+        for (g, slot) in engines.iter_mut().enumerate() {
+            let Some(engine) = slot else { continue };
+            let due = touched[g]
+                || engine.sim.next_event_time().is_some_and(|w| w <= t);
+            if due {
+                engine.sim.step_to(t, engine.policy.as_mut(), horizon);
+            }
+        }
+    }
+
+    let reports: Vec<Option<RunReport>> = engines
+        .iter_mut()
+        .map(|slot| {
+            slot.as_mut().map(|e| {
+                let name = e.policy.name();
+                e.sim.finalize(name, horizon)
+            })
+        })
+        .collect();
+
+    // Aggregate per global model index.
+    let horizon_s = horizon_ms / 1_000.0;
+    let mut throughput = vec![0.0; n_models];
+    let mut violations = vec![0.0; n_models];
+    let mut served = vec![0u64; n_models];
+    let mut dropped = vec![0u64; n_models];
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut gpu_utilization = Vec::with_capacity(n_gpus);
+    let mut per_gpu = Vec::with_capacity(n_gpus);
+    for g in 0..n_gpus {
+        let (util, shares) = match &reports[g] {
+            Some(rep) => {
+                let mut shares = Vec::with_capacity(rep.per_model.len());
+                for (local, mm) in rep.per_model.iter().enumerate() {
+                    let global = pl.hosted[g][local];
+                    throughput[global] += mm.served as f64 / horizon_s;
+                    violations[global] += mm.slo_violations() as f64 / horizon_s;
+                    served[global] += mm.served;
+                    dropped[global] += mm.dropped;
+                    latencies[global].extend_from_slice(&mm.latencies_ms);
+                    let r = pl.replicas[global]
+                        .iter()
+                        .find(|r| r.gpu == g)
+                        .expect("share without replica");
+                    shares.push(GpuModelShare {
+                        model: global,
+                        pct: r.pct,
+                        batch: r.batch,
+                        served: mm.served,
+                    });
+                }
+                (rep.gpu_utilization[0], shares)
+            }
+            None => (0.0, Vec::new()),
+        };
+        gpu_utilization.push(util);
+        per_gpu.push(GpuReport {
+            gpu: gpus[g].name.to_string(),
+            knee_load_pct: pl.knee_load[g],
+            utilization: util,
+            models: shares,
+        });
+    }
+    for m in 0..n_models {
+        violations[m] += rejected[m] as f64 / horizon_s;
+    }
+    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let replica_map: Vec<Vec<usize>> = pl
+        .replicas
+        .iter()
+        .map(|reps| reps.iter().map(|r| r.gpu).collect())
+        .collect();
+
+    ClusterReport {
+        policy: label.to_string(),
+        throughput,
+        gpu_utilization,
+        violations_per_sec: violations,
+        p99_ms,
+        served,
+        dropped,
+        rejected,
+        replica_map,
+        shed_rps: pl.shed_rps.clone(),
+        admitted: pl.admitted.clone(),
+        per_gpu,
+    }
+}
+
+/// Placement + routing + simulation in one call: bin-pack `profiles`
+/// (with their offered rates) onto `gpus`, then serve `requests`.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_cluster(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+) -> ClusterReport {
+    let pl = place(profiles, offered_rps, gpus, placement);
+    let label = format!("{}+{}+{}", placement.name(), routing.name(), sched.name());
+    run_placement(
+        profiles, gpus, &pl, requests, horizon_ms, routing, sched, seed, &label,
+    )
+}
+
+/// Run a legacy fixed-layout cluster experiment: `profiles` over
+/// `n_gpus` of type `gpu` under one of the paper's three scenarios.
+/// Implemented on the placement/routing engine with round-robin
+/// dispatch, which reproduces the old up-front stream split exactly.
 pub fn run_cluster(
     profiles: &[ModelProfile],
     gpu: &GpuSpec,
@@ -98,94 +451,59 @@ pub fn run_cluster(
     horizon_ms: f64,
     policy: ClusterPolicy,
 ) -> ClusterReport {
-    let entries = entries_for_gpu(profiles, gpu);
     let n_models = profiles.len();
+    // One op_point per model on this (homogeneous) GPU type — the same
+    // source entries_for_gpu uses, capacity included.
+    let ops: Vec<(u32, u32, f64)> = profiles.iter().map(|p| op_point(p, gpu)).collect();
 
-    // Per-GPU model hosting.
-    let hosted: Box<dyn Fn(usize) -> Vec<(usize, usize)>> = match policy {
+    let hosted: Vec<Vec<usize>> = match policy {
         ClusterPolicy::Exclusive => {
             assert!(
                 n_gpus >= n_models,
                 "exclusive placement needs one GPU per model ({n_models} > {n_gpus})"
             );
-            Box::new(move |m| vec![(m, 0)])
+            (0..n_gpus).map(|g| if g < n_models { vec![g] } else { Vec::new() }).collect()
         }
-        _ => Box::new(move |m| (0..n_gpus).map(|g| (g, m)).collect()),
+        _ => (0..n_gpus).map(|_| (0..n_models).collect()).collect(),
     };
-    let streams = split_stream(requests, n_gpus, hosted);
-
-    let mut reports: Vec<(usize, RunReport)> = Vec::new();
-    for (g, stream) in streams.iter().enumerate() {
-        let gpu_entries: Vec<ModelEntry> = match policy {
-            ClusterPolicy::Exclusive => {
-                if g >= n_models {
-                    continue;
-                }
-                vec![entries[g].clone()]
-            }
-            _ => entries.clone(),
-        };
-        let mut pol: Box<dyn Policy> = match policy {
-            ClusterPolicy::Exclusive => Box::new(Triton::from_entries(&gpu_entries)),
-            ClusterPolicy::TemporalAll => Box::new(Temporal::from_entries(&gpu_entries)),
-            ClusterPolicy::DstackAll => Box::new(Dstack::from_entries(&gpu_entries)),
-        };
-        let cfg = SimConfig { gpu: gpu.clone(), horizon_ms, ..Default::default() };
-        let mut sim = Sim::new(cfg, gpu_entries);
-        reports.push((g, sim.run(pol.as_mut(), stream)));
-    }
-
-    // Aggregate per global model index.
-    let horizon_s = horizon_ms / 1_000.0;
-    let mut throughput = vec![0.0; n_models];
-    let mut violations = vec![0.0; n_models];
-    let mut utils = Vec::new();
-    for (g, rep) in &reports {
-        utils.push(rep.gpu_utilization[0]);
-        for (local, m) in rep.per_model.iter().enumerate() {
-            let global = match policy {
-                ClusterPolicy::Exclusive => *g,
-                _ => local,
-            };
-            throughput[global] += m.served as f64 / horizon_s;
-            violations[global] += m.slo_violations() as f64 / horizon_s;
-        }
-    }
-    ClusterReport {
-        policy: format!("{policy:?}"),
-        throughput,
-        gpu_utilization: utils,
-        violations_per_sec: violations,
-    }
+    let pl = Placement::fixed(n_models, hosted, |_g, m| ops[m]);
+    let sched = match policy {
+        ClusterPolicy::Exclusive => GpuSched::Triton,
+        ClusterPolicy::TemporalAll => GpuSched::Temporal,
+        ClusterPolicy::DstackAll => GpuSched::Dstack,
+    };
+    let gpus = vec![gpu.clone(); n_gpus];
+    run_placement(
+        profiles,
+        &gpus,
+        &pl,
+        requests,
+        horizon_ms,
+        RoutingPolicy::RoundRobin,
+        sched,
+        0,
+        &format!("{policy:?}"),
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::profile::{by_name, T4};
+    use crate::profile::{by_name, T4, V100};
     use crate::workload::{merged_stream, Arrivals};
 
-    fn fig12_setup(horizon_ms: f64) -> (Vec<ModelProfile>, Vec<Request>) {
-        let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
-        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
-        // Asymmetric demand (the Fig. 12 regime): the heavy models'
-        // demand exceeds what one dedicated T4 can serve, while the
-        // light models leave their dedicated GPUs mostly idle — D-STACK
-        // consolidates and reassigns that idle capacity.
-        let rates = [150.0, 150.0, 900.0, 450.0];
-        let specs: Vec<_> = profiles
-            .iter()
-            .zip(rates)
-            .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
-            .collect();
-        let reqs = merged_stream(&specs, horizon_ms, 77);
-        (profiles, reqs)
+    /// The Fig. 12 regime (see [`fig12_workload`]): the heavy models'
+    /// demand exceeds what one dedicated T4 can serve, while the light
+    /// models leave their dedicated GPUs mostly idle — D-STACK
+    /// consolidates and reassigns that idle capacity.
+    fn fig12_setup(horizon_ms: f64) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+        fig12_workload(horizon_ms, 77)
     }
 
     #[test]
     fn knees_differ_on_t4() {
         let profiles = vec![by_name("mobilenet").unwrap(), by_name("vgg19").unwrap()];
-        let v100 = entries_for_gpu(&profiles, &crate::profile::V100);
+        let v100 = entries_for_gpu(&profiles, &V100);
         let t4 = entries_for_gpu(&profiles, &T4);
         // The T4 has half the SMs; a model's knee GPU% is higher there.
         assert!(t4[0].pct >= v100[0].pct, "{} vs {}", t4[0].pct, v100[0].pct);
@@ -195,7 +513,7 @@ mod tests {
     fn dstack_cluster_beats_temporal_and_exclusive() {
         // Fig. 12: D-STACK ≥ 1.6× temporal / exclusive on the 4×T4
         // cluster; temporal ≈ exclusive.
-        let (profiles, reqs) = fig12_setup(4_000.0);
+        let (profiles, _rates, reqs) = fig12_setup(4_000.0);
         let excl = run_cluster(&profiles, &T4, 4, &reqs, 4_000.0, ClusterPolicy::Exclusive);
         let temp = run_cluster(&profiles, &T4, 4, &reqs, 4_000.0, ClusterPolicy::TemporalAll);
         let dstk = run_cluster(&profiles, &T4, 4, &reqs, 4_000.0, ClusterPolicy::DstackAll);
@@ -223,9 +541,9 @@ mod tests {
         // The under-utilization mechanism behind Fig. 12: the dedicated
         // GPUs of light models sit mostly idle while the heavy models'
         // GPUs drop requests.
-        let (profiles, reqs) = fig12_setup(3_000.0);
+        let (profiles, _rates, reqs) = fig12_setup(3_000.0);
         let excl = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::Exclusive);
-        // GPU 0 hosts mobilenet (light, 300/s): mostly idle.
+        // GPU 0 hosts mobilenet (light, 150/s): mostly idle.
         assert!(
             excl.gpu_utilization[0] < 0.6,
             "mobilenet GPU util {}",
@@ -238,17 +556,131 @@ mod tests {
     }
 
     #[test]
-    fn stream_split_preserves_requests() {
-        let (_profiles, reqs) = fig12_setup(1_000.0);
-        let n = reqs.len();
-        let streams = split_stream(&reqs, 4, |m| (0..4).map(|g| (g, m)).collect());
-        let total: usize = streams.iter().map(|s| s.len()).sum();
-        assert_eq!(total, n);
-        // Round-robin keeps streams roughly balanced.
-        let c0 = streams[0].len() as i64;
-        for s in &streams[1..] {
-            assert!((s.len() as i64 - c0).abs() <= 4, "{} vs {c0}", s.len());
+    #[should_panic(expected = "exclusive placement")]
+    fn exclusive_requires_enough_gpus() {
+        let (profiles, _rates, reqs) = fig12_setup(500.0);
+        run_cluster(&profiles, &T4, 2, &reqs, 500.0, ClusterPolicy::Exclusive);
+    }
+
+    #[test]
+    fn placed_cluster_conserves_requests() {
+        let (profiles, rates, reqs) = fig12_setup(2_000.0);
+        let rep = serve_cluster(
+            &profiles,
+            &rates,
+            &[V100.clone(), T4.clone(), T4.clone()],
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &reqs,
+            2_000.0,
+            7,
+        );
+        let mut offered = vec![0u64; profiles.len()];
+        for r in &reqs {
+            offered[r.model] += 1;
         }
+        for m in 0..profiles.len() {
+            assert_eq!(
+                rep.served[m] + rep.dropped[m] + rep.rejected[m],
+                offered[m],
+                "model {m}: conservation"
+            );
+        }
+        // This cluster admits everything in the Fig. 12 regime.
+        assert!(rep.admitted.iter().all(|&a| a), "{:?}", rep.admitted);
+        assert!(rep.total_throughput() > 0.0);
+    }
+
+    #[test]
+    fn jsq_beats_round_robin_on_heterogeneous_cluster() {
+        // With one fast and one slow GPU hosting the same hot model,
+        // blind round-robin overloads the slow replica while JSQ shifts
+        // traffic to wherever queues drain faster: p99 must not regress
+        // and throughput must at least match.
+        let profiles = vec![by_name("resnet50").unwrap()];
+        let rates = [900.0];
+        let specs = vec![(Arrivals::Poisson { rate: 900.0 }, profiles[0].slo_ms)];
+        let reqs = merged_stream(&specs, 3_000.0, 13);
+        let gpus = [V100.clone(), T4.clone()];
+        let run = |routing| {
+            serve_cluster(
+                &profiles,
+                &rates,
+                &gpus,
+                PlacementPolicy::FirstFitDecreasing,
+                routing,
+                GpuSched::Dstack,
+                &reqs,
+                3_000.0,
+                3,
+            )
+        };
+        let rr = run(RoutingPolicy::RoundRobin);
+        let jsq = run(RoutingPolicy::JoinShortestQueue);
+        assert!(
+            jsq.total_throughput() >= 0.98 * rr.total_throughput(),
+            "jsq {} vs rr {}",
+            jsq.total_throughput(),
+            rr.total_throughput()
+        );
+        assert!(
+            jsq.violations_per_sec[0] <= rr.violations_per_sec[0] + 1.0,
+            "jsq viol {} vs rr {}",
+            jsq.violations_per_sec[0],
+            rr.violations_per_sec[0]
+        );
+    }
+
+    #[test]
+    fn rejected_models_are_counted_not_lost() {
+        // A single T4 cannot admit the whole heavy mix; rejected models'
+        // requests show up in `rejected` and in violations/s.
+        let (profiles, rates, reqs) = fig12_setup(1_500.0);
+        let rep = serve_cluster(
+            &profiles,
+            &rates,
+            &[T4.clone()],
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &reqs,
+            1_500.0,
+            1,
+        );
+        let n_rejected_models = rep.admitted.iter().filter(|&&a| !a).count();
+        assert!(n_rejected_models >= 1, "one T4 cannot host all of Fig. 12");
+        for m in 0..profiles.len() {
+            if !rep.admitted[m] {
+                assert!(rep.rejected[m] > 0);
+                assert_eq!(rep.served[m], 0);
+                assert!(rep.violations_per_sec[m] > 0.0);
+                assert!(rep.replica_map[m].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_report_json_is_deterministic() {
+        let (profiles, rates, reqs) = fig12_setup(1_000.0);
+        let gpus = [V100.clone(), T4.clone(), T4.clone()];
+        let run = || {
+            serve_cluster(
+                &profiles,
+                &rates,
+                &gpus,
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::PowerOfTwoChoices,
+                GpuSched::Dstack,
+                &reqs,
+                1_000.0,
+                21,
+            )
+        };
+        let a = run().to_json().to_string_pretty();
+        let b = run().to_json().to_string_pretty();
+        assert_eq!(a, b, "same seed ⇒ identical ClusterReport");
+        assert!(a.contains("\"replica_map\""));
     }
 }
 
@@ -275,15 +707,8 @@ mod debug_cluster {
 #[cfg(test)]
 mod tests_helpers {
     use super::*;
-    use crate::profile::by_name;
-    use crate::workload::{merged_stream, Arrivals};
     pub fn setup(horizon_ms: f64) -> (Vec<ModelProfile>, Vec<Request>) {
-        let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
-        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
-        let rates = [150.0, 150.0, 900.0, 450.0];
-        let specs: Vec<_> = profiles.iter().zip(rates)
-            .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms)).collect();
-        let reqs = merged_stream(&specs, horizon_ms, 77);
+        let (profiles, _rates, reqs) = fig12_workload(horizon_ms, 77);
         (profiles, reqs)
     }
 }

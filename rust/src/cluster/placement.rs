@@ -1,0 +1,327 @@
+//! Cluster placement: bin-packing models onto GPUs by knee GPU%.
+//!
+//! The knee GPU% from the §4 analytic model is exactly the "item size" a
+//! cluster-level packer needs: a GPU can host any set of models whose
+//! knee allocations sum to ≤ 100% without destroying the per-GPU
+//! spatio-temporal packing (§6.1). This module right-sizes every model
+//! per GPU *type* (knees differ between V100 and T4 — §7.1, Fig. 3),
+//! bin-packs replicas under that budget, replicates hot models whose
+//! offered rate exceeds one replica's service capacity, and rejects
+//! models the remaining cluster capacity cannot host at all (admission
+//! control). Two packing disciplines are provided: classic
+//! first-fit-decreasing and a load-balancing variant that spreads knee
+//! load across GPUs (Jain et al.'s space-time packing and Nabavinejad et
+//! al.'s batching-vs-multi-tenancy tradeoff both reduce to this
+//! placement decision).
+
+use crate::optimizer::{optimize, OptConfig};
+use crate::profile::{GpuSpec, ModelProfile};
+
+/// Queueing headroom when sizing replica counts: replicate until placed
+/// service capacity covers `HEADROOM ×` the offered rate, so open-loop
+/// bursts do not immediately push a just-barely-sized model into SLO
+/// violations.
+pub const CAPACITY_HEADROOM: f64 = 1.15;
+
+/// Packing discipline for [`place`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Classic first-fit-decreasing on knee GPU%: biggest models first,
+    /// each replica onto the first GPU with enough residual budget.
+    FirstFitDecreasing,
+    /// Worst-fit variant: each replica onto the GPU with the *most*
+    /// residual budget, spreading knee load evenly.
+    LoadBalance,
+}
+
+impl PlacementPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::FirstFitDecreasing => "ffd",
+            PlacementPolicy::LoadBalance => "lb",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PlacementPolicy, String> {
+        Ok(match s {
+            "ffd" | "first_fit" | "first_fit_decreasing" => PlacementPolicy::FirstFitDecreasing,
+            "lb" | "load_balance" | "worst_fit" => PlacementPolicy::LoadBalance,
+            other => return Err(format!("unknown placement policy '{other}'")),
+        })
+    }
+
+    pub fn all() -> &'static [PlacementPolicy] {
+        &[PlacementPolicy::FirstFitDecreasing, PlacementPolicy::LoadBalance]
+    }
+}
+
+/// One deployed copy of a model on one GPU.
+#[derive(Debug, Clone)]
+pub struct Replica {
+    /// Cluster GPU index.
+    pub gpu: usize,
+    /// Local model index inside that GPU's engine.
+    pub local: usize,
+    /// Deployed GPU% (the knee-derived operating point on that GPU type).
+    pub pct: u32,
+    /// Deployed batch size.
+    pub batch: u32,
+    /// Max sustained service rate of this replica (req/s) at its
+    /// operating point: batch / f_L(pct, batch).
+    pub capacity_rps: f64,
+}
+
+/// The outcome of placing a model set on a cluster.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// gpu → global model indices hosted there, in local-index order.
+    pub hosted: Vec<Vec<usize>>,
+    /// model → its replicas (empty ⇔ rejected by admission control).
+    pub replicas: Vec<Vec<Replica>>,
+    /// model → admitted (≥ 1 replica placed)?
+    pub admitted: Vec<bool>,
+    /// model → offered rate (req/s, with headroom) the placed capacity
+    /// could *not* cover; > 0 means the model runs degraded ("shed").
+    pub shed_rps: Vec<f64>,
+    /// gpu → Σ placed knee GPU% (≤ 100 for bin-packed placements; fixed
+    /// legacy layouts may exceed it and rely on temporal sharing).
+    pub knee_load: Vec<u32>,
+}
+
+impl Placement {
+    pub fn n_gpus(&self) -> usize {
+        self.hosted.len()
+    }
+
+    /// Total placed service capacity for `model` (req/s).
+    pub fn capacity_rps(&self, model: usize) -> f64 {
+        self.replicas[model].iter().map(|r| r.capacity_rps).sum()
+    }
+
+    /// Build a placement from an explicit gpu → models layout (the
+    /// paper's fixed Fig. 12 scenarios). `op(gpu, model)` supplies the
+    /// deployed (pct, batch, capacity_rps) for each copy.
+    pub fn fixed(
+        n_models: usize,
+        hosted: Vec<Vec<usize>>,
+        mut op: impl FnMut(usize, usize) -> (u32, u32, f64),
+    ) -> Placement {
+        let mut replicas: Vec<Vec<Replica>> = vec![Vec::new(); n_models];
+        let mut knee_load = vec![0u32; hosted.len()];
+        for (gpu, models) in hosted.iter().enumerate() {
+            for (local, &m) in models.iter().enumerate() {
+                assert!(m < n_models, "fixed placement references model {m} of {n_models}");
+                let (pct, batch, capacity_rps) = op(gpu, m);
+                knee_load[gpu] += pct;
+                replicas[m].push(Replica { gpu, local, pct, batch, capacity_rps });
+            }
+        }
+        let admitted: Vec<bool> = replicas.iter().map(|r| !r.is_empty()).collect();
+        Placement {
+            hosted,
+            replicas,
+            admitted,
+            shed_rps: vec![0.0; n_models],
+            knee_load,
+        }
+    }
+}
+
+/// The knee operating point of `m` on GPU type `gpu`: deployed GPU%,
+/// batch, and the replica's max service rate there.
+pub fn op_point(m: &ModelProfile, gpu: &GpuSpec) -> (u32, u32, f64) {
+    let cfg = OptConfig::default();
+    let (pct, batch) = match optimize(m, gpu, &cfg) {
+        Some(op) => (op.gpu_pct, op.batch),
+        None => (m.knee_pct_on(gpu, m.opt_batch), m.opt_batch),
+    };
+    let pct = pct.clamp(1, 100);
+    let latency_ms = m.latency_ms_on(gpu, pct, batch);
+    let capacity = batch as f64 / (latency_ms / 1_000.0);
+    (pct, batch, capacity)
+}
+
+/// Bin-pack `profiles` (with offered rates in req/s) onto `gpus`.
+///
+/// Models are processed in decreasing knee-size order (ties broken by
+/// offered rate, then name, then index — fully deterministic). Each
+/// model receives replicas — at most one per GPU — until the placed
+/// capacity covers [`CAPACITY_HEADROOM`] × its offered rate or no GPU
+/// has residual knee budget for it. A model with zero replicas is
+/// *rejected* (admission control); partially covered models record the
+/// uncovered remainder in `shed_rps`.
+pub fn place(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    policy: PlacementPolicy,
+) -> Placement {
+    assert_eq!(
+        profiles.len(),
+        offered_rps.len(),
+        "one offered rate per model required"
+    );
+    let n_models = profiles.len();
+    let n_gpus = gpus.len();
+    // Operating point of every model on every cluster GPU (types may
+    // repeat; recomputation per index keeps the lookup trivial).
+    let ops: Vec<Vec<(u32, u32, f64)>> = profiles
+        .iter()
+        .map(|m| gpus.iter().map(|g| op_point(m, g)).collect())
+        .collect();
+
+    // Decreasing knee size; the "size" of a model is the largest knee%
+    // it demands on any GPU type present (the binding constraint).
+    let size = |m: usize| ops[m].iter().map(|o| o.0).max().unwrap_or(0);
+    let mut order: Vec<usize> = (0..n_models).collect();
+    order.sort_by(|&a, &b| {
+        size(b)
+            .cmp(&size(a))
+            .then(offered_rps[b].total_cmp(&offered_rps[a]))
+            .then(profiles[a].name.cmp(&profiles[b].name))
+            .then(a.cmp(&b))
+    });
+
+    let mut free = vec![100u32; n_gpus];
+    let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); n_gpus];
+    let mut replicas: Vec<Vec<Replica>> = vec![Vec::new(); n_models];
+    let mut shed = vec![0.0f64; n_models];
+
+    for &m in &order {
+        let mut remaining = offered_rps[m] * CAPACITY_HEADROOM;
+        loop {
+            let pick = {
+                let fits = (0..n_gpus)
+                    .filter(|&g| free[g] >= ops[m][g].0 && !hosted[g].contains(&m));
+                match policy {
+                    PlacementPolicy::FirstFitDecreasing => fits.min(),
+                    // Most residual budget; ties to the lowest index.
+                    PlacementPolicy::LoadBalance => {
+                        fits.max_by_key(|&g| (free[g], std::cmp::Reverse(g)))
+                    }
+                }
+            };
+            let Some(g) = pick else { break };
+            let (pct, batch, capacity_rps) = ops[m][g];
+            let local = hosted[g].len();
+            hosted[g].push(m);
+            free[g] -= pct;
+            replicas[m].push(Replica { gpu: g, local, pct, batch, capacity_rps });
+            remaining -= capacity_rps;
+            if remaining <= 0.0 {
+                break;
+            }
+        }
+        shed[m] = remaining.max(0.0);
+    }
+
+    let admitted: Vec<bool> = replicas.iter().map(|r| !r.is_empty()).collect();
+    let knee_load: Vec<u32> = free.iter().map(|f| 100 - f).collect();
+    Placement { hosted, replicas, admitted, shed_rps: shed, knee_load }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{by_name, T4, V100};
+
+    fn models(names: &[&str]) -> Vec<ModelProfile> {
+        names.iter().map(|n| by_name(n).unwrap()).collect()
+    }
+
+    #[test]
+    fn knee_budget_never_oversubscribed() {
+        let ms = models(&["mobilenet", "alexnet", "resnet50", "vgg19"]);
+        let rates = [150.0, 150.0, 900.0, 450.0];
+        for &pol in PlacementPolicy::all() {
+            for gpus in [vec![T4.clone(); 4], vec![V100.clone(), V100.clone(), T4.clone(), T4.clone()]] {
+                let p = place(&ms, &rates, &gpus, pol);
+                for (g, load) in p.knee_load.iter().enumerate() {
+                    assert!(*load <= 100, "{pol:?}: gpu {g} packed to {load}%");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hot_models_get_replicated() {
+        // ResNet-50 at 900 req/s needs more than one replica's capacity
+        // on either GPU type.
+        let ms = models(&["mobilenet", "alexnet", "resnet50", "vgg19"]);
+        let rates = [150.0, 150.0, 900.0, 450.0];
+        let p = place(
+            &ms,
+            &rates,
+            &[V100.clone(), V100.clone(), T4.clone(), T4.clone()],
+            PlacementPolicy::FirstFitDecreasing,
+        );
+        let r50 = 2; // index in `ms`
+        assert!(p.replicas[r50].len() >= 2, "resnet50 replicas: {}", p.replicas[r50].len());
+        assert!(p.admitted.iter().all(|&a| a), "everything fits this cluster");
+        // Replica capacity actually covers the (headroomed) demand.
+        assert!(p.capacity_rps(r50) >= 900.0, "{}", p.capacity_rps(r50));
+        assert!(p.shed_rps[r50] == 0.0);
+    }
+
+    #[test]
+    fn admission_rejects_when_cluster_full() {
+        // One T4 cannot host the whole heavy zoo: something is rejected
+        // or shed, and rejected models have no replicas.
+        let ms = models(&["vgg19", "resnext50", "resnet50", "inception", "mobilenet"]);
+        let rates = [400.0; 5];
+        let p = place(&ms, &rates, &[T4.clone()], PlacementPolicy::FirstFitDecreasing);
+        let placed_pct: u32 = p.knee_load[0];
+        assert!(placed_pct <= 100);
+        let rejected: Vec<usize> =
+            (0..ms.len()).filter(|&m| !p.admitted[m]).collect();
+        let shed: f64 = p.shed_rps.iter().sum();
+        assert!(
+            !rejected.is_empty() || shed > 0.0,
+            "five heavy models at 400/s cannot fully fit one T4"
+        );
+        for &m in &rejected {
+            assert!(p.replicas[m].is_empty());
+        }
+    }
+
+    #[test]
+    fn load_balance_spreads_vs_ffd_packs() {
+        // Two light models on two GPUs: FFD stacks both onto GPU 0,
+        // load-balancing puts one on each.
+        let ms = models(&["mobilenet", "alexnet"]);
+        let rates = [50.0, 50.0];
+        let gpus = [V100.clone(), V100.clone()];
+        let ffd = place(&ms, &rates, &gpus, PlacementPolicy::FirstFitDecreasing);
+        let lb = place(&ms, &rates, &gpus, PlacementPolicy::LoadBalance);
+        assert_eq!(ffd.knee_load[1], 0, "ffd leaves gpu 1 empty: {:?}", ffd.knee_load);
+        assert!(lb.knee_load[0] > 0 && lb.knee_load[1] > 0, "{:?}", lb.knee_load);
+    }
+
+    #[test]
+    fn heterogeneous_op_points_differ() {
+        let m = by_name("vgg19").unwrap();
+        let (pct_v, _, cap_v) = op_point(&m, &V100);
+        let (pct_t, _, cap_t) = op_point(&m, &T4);
+        assert!(pct_t > pct_v, "T4 knee% {pct_t} vs V100 {pct_v}");
+        assert!(cap_v > cap_t, "V100 capacity {cap_v} vs T4 {cap_t}");
+    }
+
+    #[test]
+    fn replica_bookkeeping_consistent() {
+        let ms = models(&["mobilenet", "alexnet", "resnet50", "vgg19"]);
+        let rates = [150.0, 150.0, 900.0, 450.0];
+        for &pol in PlacementPolicy::all() {
+            let p = place(&ms, &rates, &[T4.clone(); 4], pol);
+            for (m, reps) in p.replicas.iter().enumerate() {
+                for r in reps {
+                    assert_eq!(p.hosted[r.gpu][r.local], m, "{pol:?}: hosted/replica mismatch");
+                }
+                // At most one replica of a model per GPU.
+                let mut gpus_used: Vec<usize> = reps.iter().map(|r| r.gpu).collect();
+                gpus_used.sort_unstable();
+                gpus_used.dedup();
+                assert_eq!(gpus_used.len(), reps.len(), "{pol:?}: duplicate replica on a gpu");
+            }
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Load-aware request routing across a model's replicas.
+//!
+//! Replaces the old up-front round-robin stream split: the cluster
+//! driver routes each request *at its arrival instant*, so load-aware
+//! policies can react to the actual queue state of every replica. All
+//! three policies are deterministic under a fixed seed, which keeps
+//! whole-cluster runs bit-reproducible.
+
+use super::placement::Replica;
+use crate::util::rng::Pcg32;
+
+/// Replica-selection discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through replicas per model (the paper's §7.1 stream split,
+    /// now applied online).
+    RoundRobin,
+    /// Join-shortest-queue on items queued + in flight at each replica.
+    JoinShortestQueue,
+    /// Power-of-two-choices: sample two distinct replicas, take the
+    /// shorter queue — near-JSQ balance at O(1) state inspection.
+    PowerOfTwoChoices,
+}
+
+impl RoutingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "rr",
+            RoutingPolicy::JoinShortestQueue => "jsq",
+            RoutingPolicy::PowerOfTwoChoices => "p2c",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RoutingPolicy, String> {
+        Ok(match s {
+            "rr" | "round_robin" => RoutingPolicy::RoundRobin,
+            "jsq" | "join_shortest_queue" => RoutingPolicy::JoinShortestQueue,
+            "p2c" | "power_of_two" | "power_of_two_choices" => RoutingPolicy::PowerOfTwoChoices,
+            other => return Err(format!("unknown routing policy '{other}'")),
+        })
+    }
+
+    pub fn all() -> &'static [RoutingPolicy] {
+        &[
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::JoinShortestQueue,
+            RoutingPolicy::PowerOfTwoChoices,
+        ]
+    }
+}
+
+/// Per-run router state (round-robin counters, P2C sampling stream).
+pub struct Router {
+    policy: RoutingPolicy,
+    rr: Vec<usize>,
+    rng: Pcg32,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy, n_models: usize, seed: u64) -> Router {
+        Router { policy, rr: vec![0; n_models], rng: Pcg32::new(seed, 0x70C) }
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Pick the index (into `replicas`) that the next request of `model`
+    /// goes to. `backlog` reports items queued + in flight at a replica;
+    /// ties always resolve to the lowest replica index (determinism).
+    pub fn route(
+        &mut self,
+        model: usize,
+        replicas: &[Replica],
+        mut backlog: impl FnMut(&Replica) -> usize,
+    ) -> usize {
+        assert!(!replicas.is_empty(), "routing model {model} with no replicas");
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = self.rr[model] % replicas.len();
+                self.rr[model] += 1;
+                i
+            }
+            RoutingPolicy::JoinShortestQueue => (0..replicas.len())
+                .min_by_key(|&i| (backlog(&replicas[i]), i))
+                .expect("non-empty replicas"),
+            RoutingPolicy::PowerOfTwoChoices => {
+                let n = replicas.len();
+                if n == 1 {
+                    return 0;
+                }
+                let a = self.rng.usize_below(n);
+                let mut b = self.rng.usize_below(n - 1);
+                if b >= a {
+                    b += 1;
+                }
+                let (qa, qb) = (backlog(&replicas[a]), backlog(&replicas[b]));
+                if qb < qa || (qb == qa && b < a) {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replicas(n: usize) -> Vec<Replica> {
+        (0..n)
+            .map(|g| Replica { gpu: g, local: 0, pct: 40, batch: 16, capacity_rps: 100.0 })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles_per_model() {
+        let reps = replicas(3);
+        let mut r = Router::new(RoutingPolicy::RoundRobin, 2, 1);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(0, &reps, |_| 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // Model 1 has its own counter.
+        assert_eq!(r.route(1, &reps, |_| 0), 0);
+    }
+
+    #[test]
+    fn jsq_takes_shortest_with_stable_ties() {
+        let reps = replicas(3);
+        let mut r = Router::new(RoutingPolicy::JoinShortestQueue, 1, 1);
+        let loads = [5usize, 2, 9];
+        assert_eq!(r.route(0, &reps, |rep| loads[rep.gpu]), 1);
+        // All-equal backlog → lowest index.
+        assert_eq!(r.route(0, &reps, |_| 4), 0);
+    }
+
+    #[test]
+    fn p2c_prefers_lighter_of_its_pair_and_is_deterministic() {
+        let reps = replicas(4);
+        let loads = [0usize, 100, 100, 100];
+        let run = |seed: u64| -> Vec<usize> {
+            let mut r = Router::new(RoutingPolicy::PowerOfTwoChoices, 1, seed);
+            (0..64).map(|_| r.route(0, &reps, |rep| loads[rep.gpu])).collect()
+        };
+        let a = run(9);
+        assert_eq!(a, run(9), "same seed, same choices");
+        // Whenever replica 0 is in the sampled pair it must win; it is
+        // sampled in a pair with probability 1/2 per request.
+        let zero = a.iter().filter(|&&p| p == 0).count();
+        assert!(zero > 16, "p2c barely found the idle replica: {zero}/64");
+        // Single replica short-circuits.
+        let one = replicas(1);
+        let mut r = Router::new(RoutingPolicy::PowerOfTwoChoices, 1, 3);
+        assert_eq!(r.route(0, &one, |_| 42), 0);
+    }
+}

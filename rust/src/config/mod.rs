@@ -62,6 +62,17 @@ impl PolicyKind {
     }
 }
 
+/// Cluster block of a scenario: heterogeneous GPU set plus placement
+/// and routing policies for the knee-packing cluster engine
+/// ([`crate::cluster::serve_cluster`]). Present ⇒ the scenario runs on
+/// the cluster path instead of a single GPU.
+#[derive(Debug, Clone)]
+pub struct ClusterCfg {
+    pub gpus: Vec<&'static GpuSpec>,
+    pub placement: crate::cluster::PlacementPolicy,
+    pub routing: crate::cluster::RoutingPolicy,
+}
+
 /// One model's workload in a scenario.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
@@ -86,6 +97,8 @@ pub struct Scenario {
     pub models: Vec<ModelSpec>,
     /// Poisson (true) or uniform-jitter arrivals.
     pub poisson: bool,
+    /// Optional cluster block — see [`ClusterCfg`].
+    pub cluster: Option<ClusterCfg>,
 }
 
 impl Scenario {
@@ -129,6 +142,31 @@ impl Scenario {
                 slo_ms: mj.get("slo_ms").and_then(Json::as_f64),
             });
         }
+        let cluster = match j.get("cluster") {
+            Some(cj) => {
+                let names = cj
+                    .req("gpus")
+                    .map_err(|e| e.to_string())?
+                    .as_arr()
+                    .ok_or("'cluster.gpus' must be an array of GPU names")?;
+                let mut gpus = Vec::new();
+                for gj in names {
+                    let n = gj.as_str().ok_or("'cluster.gpus' entries must be strings")?;
+                    gpus.push(GpuSpec::by_name(n).ok_or(format!("unknown gpu '{n}'"))?);
+                }
+                if gpus.is_empty() {
+                    return Err("'cluster.gpus' needs at least one GPU".into());
+                }
+                Some(ClusterCfg {
+                    gpus,
+                    placement: crate::cluster::PlacementPolicy::parse(
+                        cj.opt_str("placement", "ffd"),
+                    )?,
+                    routing: crate::cluster::RoutingPolicy::parse(cj.opt_str("routing", "jsq"))?,
+                })
+            }
+            None => None,
+        };
         Ok(Scenario {
             name: j.opt_str("name", "scenario").to_string(),
             gpu,
@@ -138,6 +176,7 @@ impl Scenario {
             seed: j.opt_u64("seed", 42),
             models,
             poisson: j.opt_bool("poisson", true),
+            cluster,
         })
     }
 
@@ -174,7 +213,7 @@ impl Scenario {
                 Json::obj(pairs)
             })
             .collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::from(self.name.as_str())),
             ("gpu", Json::from(self.gpu.name)),
             ("n_gpus", Json::from(self.n_gpus as u64)),
@@ -183,7 +222,21 @@ impl Scenario {
             ("seed", Json::from(self.seed)),
             ("poisson", Json::from(self.poisson)),
             ("models", Json::Arr(models)),
-        ])
+        ];
+        if let Some(c) = &self.cluster {
+            pairs.push((
+                "cluster",
+                Json::obj(vec![
+                    (
+                        "gpus",
+                        Json::Arr(c.gpus.iter().map(|g| Json::from(g.name)).collect()),
+                    ),
+                    ("placement", Json::from(c.placement.name())),
+                    ("routing", Json::from(c.routing.name())),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     /// Resolve model profiles (with SLO overrides applied).
@@ -207,7 +260,7 @@ impl Scenario {
             .iter()
             .map(|m| {
                 if !m.trace.is_empty() {
-                    Arrivals::Trace { segments: m.trace.clone() }
+                    Arrivals::trace(m.trace.clone())
                 } else if self.poisson {
                     Arrivals::Poisson { rate: m.rate }
                 } else {
@@ -215,6 +268,33 @@ impl Scenario {
                 }
             })
             .collect()
+    }
+
+    /// Offered rate per model (req/s) for placement sizing: the flat
+    /// rate, or the peak segment rate of a trace (place for the peak).
+    pub fn offered_rates(&self) -> Vec<f64> {
+        self.models
+            .iter()
+            .map(|m| {
+                if m.trace.is_empty() {
+                    m.rate
+                } else {
+                    m.trace.iter().map(|&(_, r)| r).fold(0.0, f64::max)
+                }
+            })
+            .collect()
+    }
+
+    /// Per-GPU scheduler for the cluster path, derived from the
+    /// scenario's policy (cluster engines run one scheduler per GPU).
+    pub fn gpu_sched(&self) -> crate::cluster::GpuSched {
+        use crate::cluster::GpuSched;
+        match self.policy {
+            PolicyKind::Temporal => GpuSched::Temporal,
+            PolicyKind::Triton | PolicyKind::FixedBatch => GpuSched::Triton,
+            PolicyKind::Gslice => GpuSched::Gslice,
+            _ => GpuSched::Dstack,
+        }
     }
 }
 
@@ -261,6 +341,36 @@ pub fn run_scenario(sc: &Scenario) -> crate::metrics::RunReport {
     };
     let mut sim = Sim::new(cfg, entries);
     sim.run(policy.as_mut(), &reqs)
+}
+
+/// Run a scenario's cluster block end to end: knee-packed placement over
+/// the configured GPU set, load-aware routing, one engine per GPU.
+/// Panics if the scenario has no `cluster` block — callers branch on
+/// [`Scenario::cluster`].
+pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
+    use crate::workload::merged_stream;
+    let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
+    let profiles = sc.profiles();
+    let rates = sc.offered_rates();
+    let arrivals = sc.arrivals();
+    let specs: Vec<_> = arrivals
+        .into_iter()
+        .zip(profiles.iter())
+        .map(|(a, p)| (a, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, sc.horizon_ms, sc.seed);
+    let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
+    crate::cluster::serve_cluster(
+        &profiles,
+        &rates,
+        &gpus,
+        cl.placement,
+        cl.routing,
+        sc.gpu_sched(),
+        &reqs,
+        sc.horizon_ms,
+        sc.seed,
+    )
 }
 
 #[cfg(test)]
@@ -320,6 +430,63 @@ mod tests {
         let rep = run_scenario(&sc);
         assert_eq!(rep.per_model.len(), 4);
         assert!(rep.total_throughput() > 0.0);
+    }
+
+    const CLUSTER_EXAMPLE: &str = r#"{
+        "name": "hetero",
+        "policy": "dstack",
+        "horizon_ms": 600,
+        "seed": 3,
+        "cluster": {"gpus": ["V100", "T4"], "placement": "ffd", "routing": "jsq"},
+        "models": [
+            {"name": "mobilenet", "rate": 150},
+            {"name": "resnet50", "rate": 500}
+        ]
+    }"#;
+
+    #[test]
+    fn cluster_block_parses_and_runs() {
+        let sc = Scenario::from_json(CLUSTER_EXAMPLE).unwrap();
+        let cl = sc.cluster.as_ref().expect("cluster block parsed");
+        assert_eq!(cl.gpus.len(), 2);
+        assert_eq!(cl.gpus[0].name, "V100");
+        assert_eq!(cl.placement, crate::cluster::PlacementPolicy::FirstFitDecreasing);
+        assert_eq!(cl.routing, crate::cluster::RoutingPolicy::JoinShortestQueue);
+        let rep = run_cluster_scenario(&sc);
+        assert_eq!(rep.throughput.len(), 2);
+        assert!(rep.total_throughput() > 0.0);
+        assert_eq!(rep.gpu_utilization.len(), 2);
+    }
+
+    #[test]
+    fn cluster_block_roundtrips_and_validates() {
+        let sc = Scenario::from_json(CLUSTER_EXAMPLE).unwrap();
+        let text = sc.to_json().to_string_pretty();
+        let sc2 = Scenario::from_json(&text).unwrap();
+        let (a, b) = (sc.cluster.unwrap(), sc2.cluster.unwrap());
+        assert_eq!(a.gpus.len(), b.gpus.len());
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.routing, b.routing);
+        // Bad cluster blocks are rejected with a useful error.
+        for bad in [
+            r#"{"cluster": {"gpus": []}, "models": [{"name": "alexnet", "rate": 1}]}"#,
+            r#"{"cluster": {"gpus": ["H100"]}, "models": [{"name": "alexnet", "rate": 1}]}"#,
+            r#"{"cluster": {"gpus": ["T4"], "routing": "magic"}, "models": [{"name": "alexnet", "rate": 1}]}"#,
+        ] {
+            assert!(Scenario::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn offered_rates_use_trace_peak() {
+        let sc = Scenario::from_json(
+            r#"{"models": [
+                {"name": "alexnet", "rate": 0, "trace": [[0, 100], [500, 900], [1000, 300]]},
+                {"name": "mobilenet", "rate": 250}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.offered_rates(), vec![900.0, 250.0]);
     }
 
     #[test]

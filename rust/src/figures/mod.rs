@@ -584,7 +584,7 @@ pub fn fig11b() -> FigData {
             let rate = if k - 1 == i { base[i] * 0.3 } else { base[i] };
             segments.push((k as f64 * phase_ms, rate));
         }
-        specs.push((Arrivals::Trace { segments }, p.slo_ms));
+        specs.push((Arrivals::trace(segments), p.slo_ms));
     }
     let reqs = merged_stream(&specs, 5.0 * phase_ms, 3);
     let mut pol = build_policy(PolicyKind::Dstack, &entries);
@@ -615,28 +615,24 @@ pub fn fig11b() -> FigData {
     out
 }
 
-/// Fig. 12: the 4×T4 cluster.
+/// Fig. 12: the 4×T4 cluster — the paper's three fixed layouts, then the
+/// same workload re-expressed as placement scenarios on the cluster
+/// engine (knee-packed placement + load-aware routing, §7.1 extended),
+/// including a heterogeneous 2×V100 + 2×T4 variant.
 pub fn fig12() -> FigData {
-    use crate::cluster::{run_cluster, ClusterPolicy};
+    use crate::cluster::{
+        run_cluster, serve_cluster, ClusterPolicy, GpuSched, PlacementPolicy, RoutingPolicy,
+    };
     let mut out = FigData::new(
         "fig12",
-        "4xT4 cluster throughput (req/s)",
+        "cluster throughput (req/s): fixed layouts vs placement engine",
         &["policy", "total", "mobilenet", "alexnet", "resnet50", "vgg19", "util_%"],
     );
-    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
-    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
-    let rates = [150.0, 150.0, 900.0, 450.0];
     let horizon_ms = 8_000.0;
-    let specs: Vec<_> = profiles
-        .iter()
-        .zip(rates)
-        .map(|(p, r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
-        .collect();
-    let reqs = merged_stream(&specs, horizon_ms, 77);
-    for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
-        let r = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol);
+    let (profiles, rates, reqs) = crate::cluster::fig12_workload(horizon_ms, 77);
+    let mut push = |label: String, r: &crate::cluster::ClusterReport| {
         out.push(vec![
-            r.policy.clone(),
+            label,
             f(r.total_throughput()),
             f(r.throughput[0]),
             f(r.throughput[1]),
@@ -644,6 +640,34 @@ pub fn fig12() -> FigData {
             f(r.throughput[3]),
             f(r.mean_utilization() * 100.0),
         ]);
+    };
+    for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
+        let r = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol);
+        push(r.policy.clone(), &r);
+    }
+    let t4x4 = vec![T4.clone(); 4];
+    let hetero = vec![V100.clone(), V100.clone(), T4.clone(), T4.clone()];
+    let placed: [(&str, &[GpuSpec], PlacementPolicy, RoutingPolicy); 4] = [
+        ("ffd+rr 4xT4", &t4x4, PlacementPolicy::FirstFitDecreasing, RoutingPolicy::RoundRobin),
+        (
+            "ffd+jsq 4xT4",
+            &t4x4,
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+        ),
+        ("lb+p2c 4xT4", &t4x4, PlacementPolicy::LoadBalance, RoutingPolicy::PowerOfTwoChoices),
+        (
+            "ffd+jsq 2xV100+2xT4",
+            &hetero,
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+        ),
+    ];
+    for (label, gpus, placement, routing) in placed {
+        let r = serve_cluster(
+            &profiles, &rates, gpus, placement, routing, GpuSched::Dstack, &reqs, horizon_ms, 77,
+        );
+        push(label.to_string(), &r);
     }
     out
 }

@@ -5,7 +5,12 @@
 //! Subcommands:
 //!   figures  --fig <2|3|4|...|12|all> [--out results]
 //!   tables   --table <1|2|3|6|all>    [--out results]
-//!   simulate --config <scenario.json>
+//!   simulate --config <scenario.json>   (scenarios with a "cluster"
+//!            block run on the placement/routing cluster engine)
+//!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
+//!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
+//!            [--horizon ms] [--seed N]   — Fig. 12 workload on an
+//!            arbitrary cluster
 //!   optimize --model <name> [--slo ms]
 //!   profile  --model <name> [--batch N]
 //!   serve    [--seconds N] [--rate-scale X] [--policy dstack|fifo]
@@ -24,13 +29,14 @@ fn main() -> anyhow::Result<()> {
             figures(&args, &key)
         }
         Some("simulate") => simulate(&args),
+        Some("cluster") => cluster_cmd(&args),
         Some("optimize") => optimize(&args),
         Some("profile") => profile_cmd(&args),
         Some("serve") => serve(&args),
         Some("selfcheck") => selfcheck(),
         _ => {
             eprintln!(
-                "usage: dstack <figures|tables|simulate|optimize|profile|serve|selfcheck> [opts]"
+                "usage: dstack <figures|tables|simulate|cluster|optimize|profile|serve|selfcheck> [opts]"
             );
             std::process::exit(2);
         }
@@ -66,6 +72,12 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("simulate needs a scenario file"))?;
     let sc = dstack::config::Scenario::from_file(Path::new(path))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if sc.cluster.is_some() {
+        let rep = dstack::config::run_cluster_scenario(&sc);
+        println!("scenario '{}' cluster policy={}", sc.name, rep.policy);
+        print_cluster_report(&sc.profiles().iter().map(|p| p.name.clone()).collect::<Vec<_>>(), &rep);
+        return Ok(());
+    }
     let rep = dstack::config::run_scenario(&sc);
     println!("scenario '{}' policy={} horizon={}s", sc.name, rep.policy, rep.horizon_s());
     let mut rows = Vec::new();
@@ -94,6 +106,91 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         rep.mean_utilization() * 100.0,
         rep.violation_fraction()
     );
+    Ok(())
+}
+
+fn print_cluster_report(names: &[String], rep: &dstack::cluster::ClusterReport) {
+    let mut rows = Vec::new();
+    for (m, name) in names.iter().enumerate() {
+        rows.push(vec![
+            name.clone(),
+            if rep.admitted[m] { "yes" } else { "REJECTED" }.to_string(),
+            format!("{:?}", rep.replica_map[m]),
+            rep.served[m].to_string(),
+            rep.rejected[m].to_string(),
+            format!("{:.1}", rep.throughput[m]),
+            format!("{:.1}", rep.p99_ms[m]),
+            format!("{:.1}", rep.violations_per_sec[m]),
+            format!("{:.0}", rep.shed_rps[m]),
+        ]);
+    }
+    println!(
+        "{}",
+        dstack::util::ascii_table(
+            &["model", "admitted", "gpus", "served", "rejected", "req/s", "p99_ms", "viol/s", "shed/s"],
+            &rows
+        )
+    );
+    let mut gpu_rows = Vec::new();
+    for (g, gr) in rep.per_gpu.iter().enumerate() {
+        let models: Vec<String> = gr
+            .models
+            .iter()
+            .map(|s| format!("{}@{}%", names[s.model], s.pct))
+            .collect();
+        gpu_rows.push(vec![
+            format!("gpu{g} ({})", gr.gpu),
+            format!("{}%", gr.knee_load_pct),
+            format!("{:.1}%", gr.utilization * 100.0),
+            models.join(" "),
+        ]);
+    }
+    println!(
+        "{}",
+        dstack::util::ascii_table(&["gpu", "knee_load", "util", "replicas"], &gpu_rows)
+    );
+    println!(
+        "total {:.0} req/s over {} GPUs, mean utilization {:.1}%",
+        rep.total_throughput(),
+        rep.gpu_utilization.len(),
+        rep.mean_utilization() * 100.0
+    );
+}
+
+fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
+    use dstack::cluster::{fig12_workload, serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy};
+    let gpu_names = args.get_or("gpus", "T4,T4,T4,T4");
+    let mut gpus = Vec::new();
+    for n in gpu_names.split(',') {
+        let n = n.trim();
+        let spec = dstack::profile::GpuSpec::by_name(n)
+            .ok_or_else(|| anyhow::anyhow!("unknown gpu '{n}'"))?;
+        gpus.push(spec.clone());
+    }
+    let placement = PlacementPolicy::parse(args.get_or("placement", "ffd"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let routing = RoutingPolicy::parse(args.get_or("routing", "jsq"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sched =
+        GpuSched::parse(args.get_or("sched", "dstack")).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let horizon_ms = args.get_f64("horizon", 8_000.0);
+    let seed = args.get_u64("seed", 77);
+
+    // The Fig. 12 asymmetric-demand workload over the chosen cluster.
+    let (profiles, rates, reqs) = fig12_workload(horizon_ms, seed);
+    let rep = serve_cluster(
+        &profiles, &rates, &gpus, placement, routing, sched, &reqs, horizon_ms, seed,
+    );
+    println!(
+        "cluster [{}] placement={} routing={} sched={} horizon={:.0}ms",
+        gpu_names,
+        placement.name(),
+        routing.name(),
+        sched.name(),
+        horizon_ms
+    );
+    let model_names: Vec<String> = profiles.iter().map(|p| p.name.clone()).collect();
+    print_cluster_report(&model_names, &rep);
     Ok(())
 }
 

@@ -3,6 +3,7 @@
 //! requests, §7), GPU runtime share and utilization, plus Jain fairness.
 
 use crate::gpu::{us_to_ms, Us};
+use crate::util::json::Json;
 use crate::util::stats::{jain_fairness, Summary};
 
 /// Per-model counters collected during a run.
@@ -43,6 +44,30 @@ impl ModelMetrics {
 
     pub fn latency_summary(&self) -> Summary {
         Summary::from_samples(&self.latencies_ms)
+    }
+
+    /// Deterministic JSON form: counters plus a latency summary (the raw
+    /// latency vector is deliberately omitted — golden files stay small
+    /// and reviewable).
+    pub fn to_json(&self) -> Json {
+        let s = self.latency_summary();
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("served", Json::from(self.served)),
+            ("served_in_slo", Json::from(self.served_in_slo)),
+            ("dropped", Json::from(self.dropped)),
+            ("batches", Json::from(self.batches)),
+            ("batch_items", Json::from(self.batch_items)),
+            (
+                "latency_ms",
+                Json::obj(vec![
+                    ("mean", Json::from(s.mean)),
+                    ("p50", Json::from(s.p50)),
+                    ("p99", Json::from(s.p99)),
+                    ("max", Json::from(s.max)),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -108,6 +133,18 @@ impl RunReport {
     pub fn runtime_fairness(&self) -> f64 {
         jain_fairness(&self.busy_ms)
     }
+
+    /// Deterministic JSON form (golden-trace regression tests, tooling).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::from(self.policy.as_str())),
+            ("horizon_us", Json::from(self.horizon_us)),
+            ("per_model", Json::Arr(self.per_model.iter().map(|m| m.to_json()).collect())),
+            ("gpu_utilization", Json::arr_f64(&self.gpu_utilization)),
+            ("busy_ms", Json::arr_f64(&self.busy_ms)),
+            ("last_completion_us", Json::from(self.last_completion_us)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +187,26 @@ mod tests {
         assert!((r.violation_fraction() - 100.0 / 1550.0).abs() < 1e-12);
         assert!((r.runtime_fairness() - 1.0).abs() < 1e-12);
         assert!((r.mean_utilization() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_omits_raw_latencies() {
+        let r = RunReport {
+            policy: "dstack".into(),
+            horizon_us: 2_000_000,
+            per_model: vec![mm(100, 95, 5)],
+            gpu_utilization: vec![0.7],
+            busy_ms: vec![1_400.0],
+            last_completion_us: 1_999_000,
+        };
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j, "serialized report reparses identically");
+        assert_eq!(parsed.req_str("policy").unwrap(), "dstack");
+        let pm = &parsed.get("per_model").unwrap().as_arr().unwrap()[0];
+        assert_eq!(pm.req_u64("served").unwrap(), 100);
+        assert!(pm.get("latencies_ms").is_none(), "raw vector must not be serialized");
+        assert!(pm.get("latency_ms").unwrap().get("p99").is_some());
     }
 
     #[test]

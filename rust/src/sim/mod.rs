@@ -175,59 +175,77 @@ impl Sim {
         }
     }
 
-    /// Run `policy` over the (time-sorted) request stream; returns the
-    /// run report at the horizon.
-    pub fn run(&mut self, policy: &mut dyn Policy, requests: &[Request]) -> RunReport {
-        let horizon = ms_to_us(self.cfg.horizon_ms);
-        let mut cursor = 0usize;
-        debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    /// Current virtual time (µs).
+    pub fn now(&self) -> Us {
+        self.now
+    }
 
-        loop {
-            // Next event time across the three sources.
-            let t_arr = requests.get(cursor).map(|r| r.arrival);
-            let t_comp = self.completions.peek().map(|c| c.t);
-            let t_timer = self.timers.iter().next().copied();
-            let t_next = [t_arr, t_comp, t_timer].into_iter().flatten().min();
-            let Some(t) = t_next else { break };
-            if t >= horizon {
-                break;
-            }
-            self.now = t;
+    /// Earliest pending *internal* event — batch completion or policy
+    /// timer. Arrivals are the caller's concern ([`Self::inject`]); a
+    /// cluster-level driver uses this to interleave several engines in
+    /// one global virtual clock.
+    pub fn next_event_time(&self) -> Option<Us> {
+        let t_comp = self.completions.peek().map(|c| c.t);
+        let t_timer = self.timers.first().copied();
+        [t_comp, t_timer].into_iter().flatten().min()
+    }
 
-            // 1. Completions at t.
-            while self.completions.peek().is_some_and(|c| c.t <= t) {
-                let c = self.completions.pop().unwrap();
-                self.gpu.complete(t, c.inst);
-                self.last_completion = self.last_completion.max(c.t);
-                let m = &mut self.metrics[c.model];
-                for r in &c.reqs {
-                    m.served += 1;
-                    if t <= r.deadline {
-                        m.served_in_slo += 1;
-                    }
-                    m.latencies_ms.push((t - r.arrival) as f64 / 1_000.0);
+    /// Enqueue a request (its `model` field indexes this engine's local
+    /// model table). Routed cluster traffic and `run`'s own stream
+    /// arrivals both enter through here.
+    pub fn inject(&mut self, r: Request) {
+        debug_assert!(r.model < self.queues.len(), "inject: unknown local model {}", r.model);
+        self.queues[r.model].push_back(r);
+    }
+
+    /// Requests queued plus items currently in flight for `model` — the
+    /// load signal a cluster router (JSQ / power-of-two) samples.
+    pub fn backlog_items(&self, model: usize) -> usize {
+        let in_flight: usize = self
+            .gpu
+            .running()
+            .iter()
+            .filter(|r| r.model == model)
+            .map(|r| r.batch as usize)
+            .sum();
+        self.queues[model].len() + in_flight
+    }
+
+    /// Advance virtual time to `t` (≥ now): process completions and
+    /// timers due by `t`, shed expired requests if configured, then run
+    /// the policy to quiescence. The caller injects any arrivals at `t`
+    /// *before* this call so the dispatch round sees them — the same
+    /// ordering `run` has always used.
+    pub fn step_to(&mut self, t: Us, policy: &mut dyn Policy, horizon: Us) {
+        debug_assert!(t >= self.now, "step_to going backwards: {t} < {}", self.now);
+        self.now = t;
+        while self.completions.peek().is_some_and(|c| c.t <= t) {
+            let c = self.completions.pop().unwrap();
+            self.gpu.complete(t, c.inst);
+            self.last_completion = self.last_completion.max(c.t);
+            let m = &mut self.metrics[c.model];
+            for r in &c.reqs {
+                m.served += 1;
+                if t <= r.deadline {
+                    m.served_in_slo += 1;
                 }
-                policy.on_complete(c.model, t);
+                m.latencies_ms.push((t - r.arrival) as f64 / 1_000.0);
             }
-            // 2. Arrivals at t.
-            while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
-                let r = requests[cursor].clone();
-                self.queues[r.model].push_back(r);
-                cursor += 1;
-            }
-            // 3. Timers at t.
-            while self.timers.first().is_some_and(|&w| w <= t) {
-                self.timers.pop_first();
-            }
-
-            self.prune_expired();
-            self.dispatch_until_quiescent(policy, horizon);
+            policy.on_complete(c.model, t);
         }
+        while self.timers.first().is_some_and(|&w| w <= t) {
+            self.timers.pop_first();
+        }
+        self.prune_expired();
+        self.dispatch_until_quiescent(policy, horizon);
+    }
 
+    /// Horizon wrap-up: drain batches still in flight (they started
+    /// before the horizon; count them at their true completion time so
+    /// request conservation holds: served + dropped = offered), drop
+    /// anything still queued, and emit the report.
+    pub fn finalize(&mut self, policy_name: String, horizon: Us) -> RunReport {
         self.now = horizon;
-        // Drain batches still in flight at the horizon (they started
-        // before it; count them at their true completion time so request
-        // conservation holds: served + dropped = offered).
         while let Some(c) = self.completions.pop() {
             self.last_completion = self.last_completion.max(c.t);
             let m = &mut self.metrics[c.model];
@@ -246,13 +264,38 @@ impl Sim {
         }
         let util = self.gpu.utilization(horizon);
         RunReport {
-            policy: policy.name(),
+            policy: policy_name,
             horizon_us: horizon,
             per_model: self.metrics.clone(),
             gpu_utilization: vec![util],
             busy_ms: self.gpu.busy_ms(),
             last_completion_us: self.last_completion,
         }
+    }
+
+    /// Run `policy` over the (time-sorted) request stream; returns the
+    /// run report at the horizon. Implemented on the incremental
+    /// primitives above — single-GPU behavior is unchanged.
+    pub fn run(&mut self, policy: &mut dyn Policy, requests: &[Request]) -> RunReport {
+        let horizon = ms_to_us(self.cfg.horizon_ms);
+        let mut cursor = 0usize;
+        debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+
+        loop {
+            let t_arr = requests.get(cursor).map(|r| r.arrival);
+            let t_next = [t_arr, self.next_event_time()].into_iter().flatten().min();
+            let Some(t) = t_next else { break };
+            if t >= horizon {
+                break;
+            }
+            while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
+                self.inject(requests[cursor].clone());
+                cursor += 1;
+            }
+            self.step_to(t, policy, horizon);
+        }
+
+        self.finalize(policy.name(), horizon)
     }
 
     fn prune_expired(&mut self) {
@@ -455,6 +498,61 @@ mod tests {
         // before launch and in-flight batches were feasible at launch.
         let m = &rep.per_model[0];
         assert!(m.served > 0);
+    }
+
+    #[test]
+    fn backlog_counts_queued_and_in_flight() {
+        let (mut sim, reqs) = setup(&["alexnet"], 300.0, 1_000.0, 12);
+        assert_eq!(sim.backlog_items(0), 0);
+        let horizon = ms_to_us(1_000.0);
+        let mut pol = Greedy;
+        // Feed the first few arrivals by hand through the incremental API.
+        let n = reqs.len().min(8);
+        for r in &reqs[..n] {
+            sim.inject(r.clone());
+        }
+        let t0 = reqs[n - 1].arrival;
+        assert_eq!(sim.backlog_items(0), n, "all queued before any dispatch");
+        sim.step_to(t0, &mut pol, horizon);
+        // Greedy launched one batch: items moved from queue to in-flight,
+        // but the backlog (queued + in flight) is conserved.
+        assert!(sim.gpu.n_running_of(0) > 0);
+        assert_eq!(sim.backlog_items(0), n);
+    }
+
+    #[test]
+    fn incremental_stepping_matches_run() {
+        // Driving the engine event-by-event from outside (the cluster
+        // driver's pattern) must reproduce `run` exactly.
+        let (mut s1, reqs) = setup(&["alexnet", "resnet50"], 250.0, 1_200.0, 21);
+        let a = s1.run(&mut Greedy, &reqs);
+
+        let (mut s2, _) = setup(&["alexnet", "resnet50"], 250.0, 1_200.0, 21);
+        let horizon = ms_to_us(1_200.0);
+        let mut pol = Greedy;
+        let mut cursor = 0usize;
+        loop {
+            let t_arr = reqs.get(cursor).map(|r| r.arrival);
+            let Some(t) = [t_arr, s2.next_event_time()].into_iter().flatten().min() else {
+                break;
+            };
+            if t >= horizon {
+                break;
+            }
+            while reqs.get(cursor).is_some_and(|r| r.arrival <= t) {
+                s2.inject(reqs[cursor].clone());
+                cursor += 1;
+            }
+            s2.step_to(t, &mut pol, horizon);
+        }
+        let b = s2.finalize("greedy".into(), horizon);
+        for (x, y) in a.per_model.iter().zip(&b.per_model) {
+            assert_eq!(x.served, y.served);
+            assert_eq!(x.dropped, y.dropped);
+            assert_eq!(x.latencies_ms, y.latencies_ms);
+        }
+        assert_eq!(a.busy_ms, b.busy_ms);
+        assert_eq!(a.gpu_utilization, b.gpu_utilization);
     }
 
     #[test]

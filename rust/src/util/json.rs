@@ -201,6 +201,30 @@ impl Json {
         self.get(key).and_then(Json::as_str).unwrap_or(default)
     }
 
+    /// Structural equality with a numeric tolerance: numbers compare as
+    /// `|a − b| ≤ tol · max(1, |a|, |b|)`, everything else exactly. The
+    /// golden-trace regression tests diff reports through this, so
+    /// platform-level float formatting noise cannot produce false
+    /// failures while any real drift (counts, added/removed fields,
+    /// reordered arrays) still does.
+    pub fn approx_eq(&self, other: &Json, tol: f64) -> bool {
+        match (self, other) {
+            (Json::Num(a), Json::Num(b)) => {
+                (a - b).abs() <= tol * 1f64.max(a.abs()).max(b.abs())
+            }
+            (Json::Arr(a), Json::Arr(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.approx_eq(y, tol))
+            }
+            (Json::Obj(a), Json::Obj(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|((ka, va), (kb, vb))| {
+                        ka == kb && va.approx_eq(vb, tol)
+                    })
+            }
+            (a, b) => a == b,
+        }
+    }
+
     // ---- builders --------------------------------------------------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -548,6 +572,23 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(10.0).to_string_compact(), "10");
         assert_eq!(Json::Num(10.25).to_string_compact(), "10.25");
+    }
+
+    #[test]
+    fn approx_eq_tolerates_float_noise_only() {
+        let a = Json::parse(r#"{"x": [1.0, 2.0], "n": 10, "s": "p99"}"#).unwrap();
+        let close = Json::parse(r#"{"x": [1.0000000001, 2.0], "n": 10, "s": "p99"}"#).unwrap();
+        let far = Json::parse(r#"{"x": [1.1, 2.0], "n": 10, "s": "p99"}"#).unwrap();
+        let renamed = Json::parse(r#"{"x": [1.0, 2.0], "n": 10, "s": "p98"}"#).unwrap();
+        let extra = Json::parse(r#"{"x": [1.0, 2.0], "n": 10, "s": "p99", "y": 0}"#).unwrap();
+        assert!(a.approx_eq(&close, 1e-6));
+        assert!(!a.approx_eq(&far, 1e-6));
+        assert!(!a.approx_eq(&renamed, 1e-6));
+        assert!(!a.approx_eq(&extra, 1e-6));
+        // Tolerance is relative for large magnitudes.
+        let big = Json::Num(1e12);
+        assert!(big.approx_eq(&Json::Num(1e12 + 100.0), 1e-6));
+        assert!(!big.approx_eq(&Json::Num(1.01e12), 1e-6));
     }
 
     #[test]

@@ -34,17 +34,46 @@ pub enum Arrivals {
 }
 
 impl Arrivals {
+    /// Trace constructor that sorts segments by start time up front, so
+    /// every later lookup is a binary search over a sorted slice. The
+    /// sort is stable: among segments sharing a start time, the one
+    /// listed last wins — the same semantics the old linear scan had.
+    pub fn trace(segments: Vec<(f64, f64)>) -> Arrivals {
+        Arrivals::Trace { segments: Self::normalize_segments(&segments) }
+    }
+
+    fn normalize_segments(segments: &[(f64, f64)]) -> Vec<(f64, f64)> {
+        let mut s = segments.to_vec();
+        s.sort_by(|a, b| a.0.total_cmp(&b.0));
+        s
+    }
+
+    /// Rate of the last segment with `start <= t_ms`; 0 before the first
+    /// segment. `segments` must be sorted by start time.
+    fn rate_from_sorted(segments: &[(f64, f64)], t_ms: f64) -> f64 {
+        let idx = segments.partition_point(|&(start, _)| start <= t_ms);
+        if idx == 0 {
+            0.0
+        } else {
+            segments[idx - 1].1
+        }
+    }
+
+    /// Start of the first segment strictly after `t_ms` (sorted input) —
+    /// lets the generator skip idle spans in one jump.
+    fn next_start_after(segments: &[(f64, f64)], t_ms: f64) -> Option<f64> {
+        let idx = segments.partition_point(|&(start, _)| start <= t_ms);
+        segments.get(idx).map(|&(start, _)| start)
+    }
+
     fn rate_at(&self, t_ms: f64) -> f64 {
         match self {
             Arrivals::Poisson { rate } | Arrivals::Uniform { rate, .. } => *rate,
+            // Public enum fields mean a `Trace` may be built unsorted;
+            // `generate` normalizes once per stream, this path stays
+            // correct (if slower) for ad-hoc callers.
             Arrivals::Trace { segments } => {
-                let mut r = 0.0;
-                for (start, rate) in segments {
-                    if t_ms >= *start {
-                        r = *rate;
-                    }
-                }
-                r
+                Self::rate_from_sorted(&Self::normalize_segments(segments), t_ms)
             }
         }
     }
@@ -59,13 +88,27 @@ impl Arrivals {
         rng: &mut Pcg32,
         next_id: &mut u64,
     ) -> Vec<Request> {
+        // Sort once per stream; the hot loop below only binary-searches.
+        let sorted: Option<Vec<(f64, f64)>> = match self {
+            Arrivals::Trace { segments } => Some(Self::normalize_segments(segments)),
+            _ => None,
+        };
         let mut out = Vec::new();
         let mut t_ms = 0.0;
         loop {
-            let rate = self.rate_at(t_ms);
+            let rate = match &sorted {
+                Some(segs) => Self::rate_from_sorted(segs, t_ms),
+                None => self.rate_at(t_ms),
+            };
             let gap_ms = if rate <= 0.0 {
-                // Idle segment: jump forward 1 ms looking for a live one.
-                t_ms += 1.0;
+                // Idle span: jump straight to the next segment start (a
+                // constant-rate process at rate 0 stays silent forever).
+                let Some(next) =
+                    sorted.as_ref().and_then(|segs| Self::next_start_after(segs, t_ms))
+                else {
+                    break;
+                };
+                t_ms = next;
                 if t_ms >= horizon_ms {
                     break;
                 }
@@ -122,6 +165,19 @@ pub fn merged_stream(
     }
     all.sort_by_key(|r| (r.arrival, r.id));
     all
+}
+
+/// The Fig. 12 cluster workload: the 4-model mix with asymmetric demand
+/// (heavy models oversubscribe a dedicated T4, light models strand
+/// capacity). Single source of truth for every cluster experiment,
+/// bench and test that claims to run "the same seeded workload".
+pub fn fig12_rates() -> Vec<(&'static str, f64)> {
+    vec![
+        ("mobilenet", 150.0),
+        ("alexnet", 150.0),
+        ("resnet50", 900.0),
+        ("vgg19", 450.0),
+    ]
 }
 
 /// The paper's Fig. 11a request-rate assignments for the C-2/3/4/7 mixes.
@@ -192,6 +248,65 @@ mod tests {
         assert!(before > 800, "{before}");
         // At most one spillover event whose gap straddles the boundary.
         assert!(after <= 1, "arrivals after the trace goes silent: {after}");
+    }
+
+    #[test]
+    fn unsorted_trace_equals_sorted() {
+        // The generator must not care about segment declaration order:
+        // identical seed + identical (sorted) rate function ⇒ identical
+        // stream, whether the caller sorted or not.
+        let sorted = Arrivals::trace(vec![(0.0, 400.0), (500.0, 900.0), (1500.0, 100.0)]);
+        let unsorted =
+            Arrivals::Trace { segments: vec![(1500.0, 100.0), (0.0, 400.0), (500.0, 900.0)] };
+        let gen = |a: &Arrivals| {
+            let mut rng = Pcg32::seeded(11);
+            let mut id = 0;
+            a.generate(0, 25.0, 2_500.0, &mut rng, &mut id)
+        };
+        assert_eq!(gen(&sorted), gen(&unsorted));
+        assert!(!gen(&sorted).is_empty());
+    }
+
+    #[test]
+    fn trace_segment_boundaries() {
+        // A segment's rate applies from exactly its start time; before
+        // the first segment the rate is zero; equal start times resolve
+        // to the last-listed segment (stable sort).
+        let a = Arrivals::Trace { segments: vec![(1_000.0, 800.0)] };
+        assert_eq!(a.rate_at(999.999), 0.0);
+        assert_eq!(a.rate_at(1_000.0), 800.0);
+        assert_eq!(a.rate_at(5_000.0), 800.0);
+        let dup = Arrivals::Trace { segments: vec![(0.0, 100.0), (0.0, 300.0)] };
+        assert_eq!(dup.rate_at(0.0), 300.0, "last-listed duplicate start wins");
+
+        // Generation respects the leading idle span: no arrival before
+        // the first live segment.
+        let mut rng = Pcg32::seeded(5);
+        let mut id = 0;
+        let reqs = a.generate(0, 25.0, 3_000.0, &mut rng, &mut id);
+        assert!(!reqs.is_empty());
+        assert!(
+            reqs.iter().all(|r| r.arrival >= 1_000_000),
+            "arrival before the trace goes live: {:?}",
+            reqs.first()
+        );
+    }
+
+    #[test]
+    fn trace_with_interior_idle_gap_resumes() {
+        // live 0-500 ms, silent 500-2000 ms, live again after.
+        let a = Arrivals::trace(vec![(0.0, 1_000.0), (500.0, 0.0), (2_000.0, 1_000.0)]);
+        let mut rng = Pcg32::seeded(9);
+        let mut id = 0;
+        let reqs = a.generate(0, 25.0, 3_000.0, &mut rng, &mut id);
+        let in_gap = reqs
+            .iter()
+            .filter(|r| r.arrival > 510_000 && r.arrival < 2_000_000)
+            .count();
+        // At most the single spillover event whose gap straddles 500 ms.
+        assert!(in_gap <= 1, "{in_gap} arrivals inside the silent span");
+        let resumed = reqs.iter().filter(|r| r.arrival >= 2_000_000).count();
+        assert!(resumed > 500, "trace did not resume: {resumed}");
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Property-based invariants of the cluster placement engine and the
+//! load-aware router (mini harness, see `util::prop`): random model
+//! mixes, rates, heterogeneous GPU sets, placement and routing policies
+//! — the packing and routing invariants must hold on every case.
+
+use dstack::cluster::{
+    place, serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy,
+};
+use dstack::profile::{by_name, GpuSpec, ModelProfile, T4, V100};
+use dstack::prop_assert;
+use dstack::util::prop::{Cases, Gen};
+use dstack::workload::{merged_stream, Arrivals};
+
+const ZOO: &[&str] =
+    &["mobilenet", "alexnet", "bert", "resnet50", "vgg19", "resnet18", "inception", "resnext50"];
+
+fn random_models(g: &mut Gen, max: usize) -> (Vec<ModelProfile>, Vec<f64>) {
+    let names = g.subset(ZOO, 2);
+    let n = names.len().min(max);
+    let profiles: Vec<ModelProfile> =
+        names[..n].iter().map(|m| by_name(m).unwrap()).collect();
+    let rates: Vec<f64> = (0..n).map(|_| g.f64_in(50.0, 700.0)).collect();
+    (profiles, rates)
+}
+
+fn random_gpus(g: &mut Gen, lo: usize, hi: usize) -> Vec<GpuSpec> {
+    (0..g.usize_in(lo, hi))
+        .map(|_| if g.bool() { V100.clone() } else { T4.clone() })
+        .collect()
+}
+
+#[test]
+fn placement_invariants_hold_on_random_clusters() {
+    Cases::new(48).run(|g| {
+        let (profiles, rates) = random_models(g, 6);
+        let gpus = random_gpus(g, 1, 5);
+        let policy = *g.pick(PlacementPolicy::all());
+        let p = place(&profiles, &rates, &gpus, policy);
+
+        // 1. No GPU is packed beyond 100% knee budget.
+        for (gi, load) in p.knee_load.iter().enumerate() {
+            prop_assert!(*load <= 100, "{policy:?}: gpu {gi} at {load}% knee load");
+        }
+        // 2. Admitted ⇔ at least one replica; rejected ⇔ none.
+        for m in 0..profiles.len() {
+            prop_assert!(
+                p.admitted[m] == !p.replicas[m].is_empty(),
+                "model {m}: admitted={} but {} replicas",
+                p.admitted[m],
+                p.replicas[m].len()
+            );
+        }
+        // 3. hosted/replica cross-references agree; ≤ 1 replica per GPU.
+        for (m, reps) in p.replicas.iter().enumerate() {
+            let mut seen_gpus = Vec::new();
+            for r in reps {
+                prop_assert!(r.gpu < gpus.len(), "replica on gpu {} of {}", r.gpu, gpus.len());
+                prop_assert!(
+                    p.hosted[r.gpu].get(r.local) == Some(&m),
+                    "hosted[{}][{}] != model {m}",
+                    r.gpu,
+                    r.local
+                );
+                prop_assert!(!seen_gpus.contains(&r.gpu), "model {m} twice on gpu {}", r.gpu);
+                seen_gpus.push(r.gpu);
+                prop_assert!(r.capacity_rps > 0.0, "replica with zero capacity");
+            }
+        }
+        // 4. Fully covered models really have the capacity; shed is the
+        //    exact uncovered remainder (with headroom).
+        for m in 0..profiles.len() {
+            prop_assert!(p.shed_rps[m] >= 0.0);
+            if p.admitted[m] && p.shed_rps[m] == 0.0 {
+                prop_assert!(
+                    p.capacity_rps(m) + 1e-9 >= rates[m],
+                    "model {m}: capacity {} < offered {}",
+                    p.capacity_rps(m),
+                    rates[m]
+                );
+            }
+        }
+        // 5. Determinism: the same inputs repack identically.
+        let q = place(&profiles, &rates, &gpus, policy);
+        prop_assert!(p.knee_load == q.knee_load && p.hosted == q.hosted);
+        Ok(())
+    });
+}
+
+#[test]
+fn routed_cluster_invariants_hold_end_to_end() {
+    Cases::new(6).run(|g| {
+        let (profiles, rates) = random_models(g, 3);
+        let gpus = random_gpus(g, 2, 3);
+        let placement = *g.pick(PlacementPolicy::all());
+        let routing = *g.pick(RoutingPolicy::all());
+        let seed = g.u64();
+        let horizon_ms = 400.0;
+        let specs: Vec<_> = profiles
+            .iter()
+            .zip(&rates)
+            .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+            .collect();
+        let reqs = merged_stream(&specs, horizon_ms, seed);
+
+        let run = || {
+            serve_cluster(
+                &profiles, &rates, &gpus, placement, routing, GpuSched::Dstack, &reqs,
+                horizon_ms, seed,
+            )
+        };
+        let rep = run();
+
+        // 1. Identical seeds ⇒ identical ClusterReport (bitwise, via the
+        //    deterministic JSON form).
+        let again = run();
+        prop_assert!(
+            rep.to_json().to_string_compact() == again.to_json().to_string_compact(),
+            "{placement:?}+{routing:?}: non-deterministic report"
+        );
+        // 2. Request conservation: served + dropped + rejected = offered.
+        let mut offered = vec![0u64; profiles.len()];
+        for r in &reqs {
+            offered[r.model] += 1;
+        }
+        for m in 0..profiles.len() {
+            prop_assert!(
+                rep.served[m] + rep.dropped[m] + rep.rejected[m] == offered[m],
+                "model {m}: {} + {} + {} != {}",
+                rep.served[m],
+                rep.dropped[m],
+                rep.rejected[m],
+                offered[m]
+            );
+            prop_assert!(
+                rep.admitted[m] || rep.served[m] == 0,
+                "rejected model {m} served requests"
+            );
+        }
+        // 3. The router never lands work on a GPU that hosts no replica
+        //    of the model: every served share sits inside the replica
+        //    map (JSQ/P2C sample backlogs only across true replicas).
+        for (gi, gr) in rep.per_gpu.iter().enumerate() {
+            for share in &gr.models {
+                prop_assert!(
+                    rep.replica_map[share.model].contains(&gi),
+                    "gpu {gi} served model {} without hosting it",
+                    share.model
+                );
+            }
+        }
+        // 4. Utilization is a valid fraction on every GPU.
+        for (gi, u) in rep.gpu_utilization.iter().enumerate() {
+            prop_assert!((0.0..=1.0).contains(u), "gpu {gi} utilization {u}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn heterogeneous_jsq_cluster_beats_legacy_round_robin_split() {
+    // The bench_cluster acceptance scenario, pinned as a test: on the
+    // same seeded Fig. 12 workload, a heterogeneous 2×V100 + 2×T4
+    // cluster with knee-packed placement and JSQ routing must reach at
+    // least the legacy all-on-every-T4 round-robin D-STACK throughput.
+    use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
+    let horizon_ms = 2_000.0;
+    let (profiles, rates, reqs) = fig12_workload(horizon_ms, 77);
+
+    let legacy = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, ClusterPolicy::DstackAll);
+    let hetero_gpus = [V100.clone(), V100.clone(), T4.clone(), T4.clone()];
+    let placed = serve_cluster(
+        &profiles,
+        &rates,
+        &hetero_gpus,
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &reqs,
+        horizon_ms,
+        7,
+    );
+    assert!(
+        placed.total_throughput() >= legacy.total_throughput(),
+        "hetero JSQ {} < legacy RR {}",
+        placed.total_throughput(),
+        legacy.total_throughput()
+    );
+}

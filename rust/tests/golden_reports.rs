@@ -1,0 +1,130 @@
+//! Golden-trace regression tests: fixed seed, 2 s horizon, one golden
+//! JSON per scheduling policy (single-GPU `RunReport`) and per cluster
+//! configuration (`ClusterReport`), diffed against `tests/golden/*.json`
+//! with a float tolerance. This is the backbone for perf-refactor PRs:
+//! any behavioral drift in the simulator, schedulers, placement or
+//! routing shows up as a golden diff.
+//!
+//! Blessing: a missing golden is written on first run (and reported so
+//! it gets committed); `DSTACK_BLESS=1 cargo test` rewrites all of them
+//! after an *intentional* behavior change.
+//!
+//! Tolerances: counters (served/dropped/batches…) are integers and
+//! compare exactly; derived floats (utilization, latency percentiles,
+//! rates) use a relative tolerance of 1e-6 — large enough for libm-level
+//! noise in `ln`/`cos` on exotic platforms, far too small to mask a real
+//! scheduling change. See `Json::approx_eq`.
+
+use dstack::cluster::{serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy};
+use dstack::config::{build_policy, PolicyKind};
+use dstack::profile::{by_name, ModelProfile, T4, V100};
+use dstack::sim::{entries_at_optimum, Sim, SimConfig};
+use dstack::util::json::Json;
+use dstack::workload::{merged_stream, Arrivals};
+use std::path::PathBuf;
+
+const TOL: f64 = 1e-6;
+const HORIZON_MS: f64 = 2_000.0;
+const SEED: u64 = 20_260_731;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(format!("{name}.json"))
+}
+
+/// Diff `got` against the stored golden; bless it when absent or when
+/// `DSTACK_BLESS` is set.
+fn check_golden(name: &str, got: &Json) {
+    let path = golden_path(name);
+    let bless = std::env::var_os("DSTACK_BLESS").is_some();
+    if bless || !path.exists() {
+        dstack::util::write_file(&path, &got.to_string_pretty()).unwrap();
+        eprintln!("golden '{name}': blessed at {} — commit this file", path.display());
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let want = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("golden '{name}' is not valid JSON: {e}"));
+    assert!(
+        got.approx_eq(&want, TOL),
+        "golden '{name}' drifted (rerun with DSTACK_BLESS=1 if intentional)\n\
+         --- got ---\n{}\n--- want ---\n{}",
+        got.to_string_pretty(),
+        want.to_string_pretty()
+    );
+}
+
+fn c4() -> (Vec<ModelProfile>, Vec<f64>) {
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let rates = vec![700.0, 700.0, 320.0, 160.0];
+    (profiles, rates)
+}
+
+#[test]
+fn single_gpu_run_reports_match_goldens() {
+    let (profiles, rates) = c4();
+    let entries = entries_at_optimum(&profiles);
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(&rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, HORIZON_MS, SEED);
+    for kind in [
+        PolicyKind::Dstack,
+        PolicyKind::Temporal,
+        PolicyKind::Triton,
+        PolicyKind::Gslice,
+    ] {
+        let mut pol = build_policy(kind, &entries);
+        let cfg = SimConfig { horizon_ms: HORIZON_MS, ..Default::default() };
+        let mut sim = Sim::new(cfg, entries.clone());
+        let rep = sim.run(pol.as_mut(), &reqs);
+        check_golden(&format!("run_{}", kind.name()), &rep.to_json());
+    }
+}
+
+#[test]
+fn cluster_reports_match_goldens() {
+    let (profiles, rates) = c4();
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(&rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, HORIZON_MS, SEED);
+    let gpus = [V100.clone(), T4.clone(), T4.clone()];
+    for (placement, routing) in [
+        (PlacementPolicy::FirstFitDecreasing, RoutingPolicy::RoundRobin),
+        (PlacementPolicy::FirstFitDecreasing, RoutingPolicy::JoinShortestQueue),
+        (PlacementPolicy::LoadBalance, RoutingPolicy::PowerOfTwoChoices),
+    ] {
+        let rep = serve_cluster(
+            &profiles,
+            &rates,
+            &gpus,
+            placement,
+            routing,
+            GpuSched::Dstack,
+            &reqs,
+            HORIZON_MS,
+            SEED,
+        );
+        check_golden(
+            &format!("cluster_{}_{}", placement.name(), routing.name()),
+            &rep.to_json(),
+        );
+    }
+}
+
+#[test]
+fn legacy_fig12_cluster_matches_golden() {
+    use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
+    let (profiles, _rates, reqs) = fig12_workload(HORIZON_MS, SEED);
+    for policy in
+        [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll]
+    {
+        let rep = run_cluster(&profiles, &T4, 4, &reqs, HORIZON_MS, policy);
+        check_golden(&format!("fig12_{:?}", policy), &rep.to_json());
+    }
+}

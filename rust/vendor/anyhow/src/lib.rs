@@ -1,0 +1,170 @@
+//! Minimal API-compatible stand-in for the `anyhow` crate.
+//!
+//! The build image has no reachable crates registry (see DESIGN.md §3),
+//! so the subset of `anyhow` the codebase uses is implemented here: the
+//! [`Error`] type with source preservation, the [`Result`] alias, the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros and the [`Context`]
+//! extension trait. Swapping in the real crate is a one-line Cargo.toml
+//! change; no call site would differ.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed, context-carrying error. Like `anyhow::Error`, this
+/// deliberately does *not* implement `std::error::Error`, which is what
+/// permits the blanket `From<E: std::error::Error>` conversion below.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap with higher-level context (rendered as `context: cause`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The deepest retained source error, if any.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source();
+        while let Some(e) = src {
+            write!(f, "\n\nCaused by:\n    {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Context-attachment extension for `Result`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(::std::format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(::std::format!($fmt, $($arg)*)) };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($args:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($args)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}", ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($args:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($args)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/9f3a")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.source().is_some(), "io::Error retained as source");
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let err = r.with_context(|| "reading manifest").unwrap_err();
+        assert!(err.to_string().starts_with("reading manifest: "), "{err}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("knee at {}%", 40);
+        assert_eq!(e.to_string(), "knee at 40%");
+        let s: String = "plain".into();
+        assert_eq!(anyhow!(s).to_string(), "plain");
+
+        fn bails(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(bails(3).unwrap(), 3);
+        assert_eq!(bails(7).unwrap_err().to_string(), "unlucky");
+        assert_eq!(bails(12).unwrap_err().to_string(), "x too big: 12");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let err = io_fail().unwrap_err().context("loading artifacts");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("loading artifacts"), "{dbg}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+}
