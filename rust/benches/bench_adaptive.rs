@@ -1,0 +1,77 @@
+//! Control-plane benchmarks on the drifting-rate workload, plus the
+//! adaptive acceptance comparison: on a trace whose hot models swap
+//! halfway through the run, the adaptive control plane must serve
+//! strictly more than the static peak-rate placement while violating
+//! SLOs no more often — the whole point of re-optimizing at runtime.
+
+use dstack::bench::{bench, Bench};
+use dstack::cluster::{serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy};
+use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive, AdaptiveCfg};
+
+fn main() {
+    let horizon_ms = 4_000.0;
+    let seed = 77;
+    let (profiles, initial, peak, reqs) = drift_workload(horizon_ms, seed);
+    let gpus = drift_gpus();
+    let cfg = Bench::quick();
+    let acfg = AdaptiveCfg { interval_ms: 250.0, ..Default::default() };
+
+    let mut static_total = 0.0;
+    let mut static_viol = 0.0;
+    bench("adaptive/static_peak_placement", &cfg, || {
+        let r = serve_cluster(
+            &profiles,
+            &peak,
+            &gpus,
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &reqs,
+            horizon_ms,
+            seed,
+        );
+        static_total = r.total_throughput();
+        static_viol = r.violations_per_sec.iter().sum();
+    });
+    println!("    -> total {static_total:.0} req/s, {static_viol:.0} viol/s");
+
+    let mut adaptive_total = 0.0;
+    let mut adaptive_viol = 0.0;
+    let mut rebalances = 0;
+    bench("adaptive/control_plane", &cfg, || {
+        let r = run_adaptive(
+            &profiles,
+            &initial,
+            &gpus,
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &acfg,
+            &reqs,
+            horizon_ms,
+            seed,
+        );
+        adaptive_total = r.total_throughput();
+        adaptive_viol = r.violations_per_sec.iter().sum();
+        rebalances = r.adaptive.as_ref().map_or(0, |a| a.rebalances);
+    });
+    println!(
+        "    -> total {adaptive_total:.0} req/s, {adaptive_viol:.0} viol/s, {rebalances} rebalances"
+    );
+
+    println!(
+        "acceptance: adaptive {adaptive_total:.0} req/s vs static-peak {static_total:.0} req/s \
+         ({:.2}x), viol/s {adaptive_viol:.0} vs {static_viol:.0}",
+        adaptive_total / static_total.max(1e-9)
+    );
+    assert!(
+        adaptive_total > static_total,
+        "adaptive ({adaptive_total:.0} req/s) must beat the static peak-rate placement \
+         ({static_total:.0} req/s) on the drifting trace"
+    );
+    assert!(
+        adaptive_viol <= static_viol,
+        "adaptive must not violate more SLOs ({adaptive_viol:.0}/s) than static \
+         ({static_viol:.0}/s)"
+    );
+}

@@ -5,6 +5,14 @@
 //! batching (Clipper/Nexus-style: take what's queued, capped by what
 //! fits the latency budget — used by GSLICE and the temporal baseline),
 //! and the *optimal* batch from the §5 optimization (used by D-STACK).
+//!
+//! The optimal batch is a property of a replica's deployed operating
+//! point: it is chosen per (model, GPU type) by the §5 optimizer and
+//! carried in [`crate::sim::ModelEntry::batch`]. When the adaptive
+//! control plane ([`crate::controlplane`]) migrates a replica across
+//! GPU types, the receiving engine's entry therefore arrives with a
+//! freshly derived batch for that device — no batching state survives a
+//! migration.
 
 use crate::optimizer;
 use crate::profile::{GpuSpec, ModelProfile};

@@ -22,6 +22,12 @@
 //! instance (per-GPU D-STACK schedulers, cluster-level placement), and
 //! with round-robin routing the arrival-order splits are identical to
 //! the old up-front split.
+//!
+//! Placement here is solved once, at t = 0. The adaptive control plane
+//! ([`crate::controlplane`]) layers runtime re-optimization on top:
+//! it re-runs [`placement::place`] against EWMA rate estimates when a
+//! drift detector fires and migrates replicas incrementally, reusing
+//! this module's engine/routing machinery unchanged.
 
 pub mod placement;
 pub mod routing;
@@ -67,13 +73,24 @@ impl GpuSched {
         })
     }
 
-    fn build(&self, entries: &[ModelEntry]) -> Box<dyn Policy> {
+    /// Instantiate the per-GPU policy over an engine's entry table.
+    /// `active` masks control-plane tombstones (see
+    /// [`crate::controlplane`]); static paths pass all-true.
+    pub(crate) fn build_masked(
+        &self,
+        entries: &[ModelEntry],
+        active: &[bool],
+    ) -> Box<dyn Policy> {
         match self {
             GpuSched::Dstack => Box::new(Dstack::from_entries(entries)),
             GpuSched::Temporal => Box::new(Temporal::from_entries(entries)),
             GpuSched::Triton => Box::new(Triton::from_entries(entries)),
-            GpuSched::Gslice => Box::new(Gslice::from_entries(entries)),
+            GpuSched::Gslice => Box::new(Gslice::from_entries_masked(entries, active)),
         }
+    }
+
+    pub(crate) fn build(&self, entries: &[ModelEntry]) -> Box<dyn Policy> {
+        self.build_masked(entries, &vec![true; entries.len()])
     }
 }
 
@@ -140,6 +157,10 @@ pub struct ClusterReport {
     pub shed_rps: Vec<f64>,
     pub admitted: Vec<bool>,
     pub per_gpu: Vec<GpuReport>,
+    /// Control-plane telemetry — `Some` only for adaptive runs
+    /// ([`crate::controlplane::run_adaptive`]); static reports serialize
+    /// without the field, so their golden JSON is unchanged.
+    pub adaptive: Option<crate::controlplane::AdaptiveStats>,
 }
 
 impl ClusterReport {
@@ -182,7 +203,7 @@ impl ClusterReport {
             .iter()
             .map(|gpus| Json::Arr(gpus.iter().map(|&g| Json::from(g)).collect()))
             .collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("policy", Json::from(self.policy.as_str())),
             ("throughput", Json::arr_f64(&self.throughput)),
             ("gpu_utilization", Json::arr_f64(&self.gpu_utilization)),
@@ -198,7 +219,11 @@ impl ClusterReport {
                 Json::Arr(self.admitted.iter().map(|&b| Json::from(b)).collect()),
             ),
             ("per_gpu", Json::Arr(per_gpu)),
-        ])
+        ];
+        if let Some(stats) = &self.adaptive {
+            pairs.push(("adaptive", stats.to_json()));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -415,6 +440,7 @@ pub fn run_placement(
         shed_rps: pl.shed_rps.clone(),
         admitted: pl.admitted.clone(),
         per_gpu,
+        adaptive: None,
     }
 }
 

@@ -13,6 +13,15 @@
 //! load across GPUs (Jain et al.'s space-time packing and Nabavinejad et
 //! al.'s batching-vs-multi-tenancy tradeoff both reduce to this
 //! placement decision).
+//!
+//! [`place`] is a pure function of (profiles, rates, GPUs, policy) —
+//! fully deterministic and cheap enough to re-solve online. The static
+//! cluster path calls it once at t = 0; the adaptive control plane
+//! ([`crate::controlplane`]) calls it again whenever its drift detector
+//! fires, against *estimated* rates, and diffs the result into an
+//! incremental migration. Because [`op_point`] depends only on (model,
+//! GPU type), replicas shared between two solutions keep their
+//! operating point — a rebalance only ever adds or removes replicas.
 
 use crate::optimizer::{optimize, OptConfig};
 use crate::profile::{GpuSpec, ModelProfile};

@@ -5,6 +5,13 @@
 //! policies can react to the actual queue state of every replica. All
 //! three policies are deterministic under a fixed seed, which keeps
 //! whole-cluster runs bit-reproducible.
+//!
+//! The [`Router`] is deliberately stateless about *which* replicas
+//! exist: callers pass the current replica slice on every call, so the
+//! adaptive control plane ([`crate::controlplane`]) can grow and shrink
+//! a model's replica set mid-run — round-robin cursors simply wrap
+//! modulo the new length, and the load-aware policies sample whatever
+//! backlogs the live set exposes.
 
 use super::placement::Replica;
 use crate::util::rng::Pcg32;

@@ -99,6 +99,9 @@ pub struct Scenario {
     pub poisson: bool,
     /// Optional cluster block — see [`ClusterCfg`].
     pub cluster: Option<ClusterCfg>,
+    /// Optional adaptive control-plane block (requires `cluster`) —
+    /// the scenario runs through [`crate::controlplane::run_adaptive`].
+    pub adaptive: Option<crate::controlplane::AdaptiveCfg>,
 }
 
 impl Scenario {
@@ -167,6 +170,26 @@ impl Scenario {
             }
             None => None,
         };
+        let adaptive = match j.get("adaptive") {
+            Some(aj) => {
+                if cluster.is_none() {
+                    return Err("'adaptive' requires a 'cluster' block".into());
+                }
+                let d = crate::controlplane::AdaptiveCfg::default();
+                let cfg = crate::controlplane::AdaptiveCfg {
+                    interval_ms: aj.opt_f64("interval_ms", d.interval_ms),
+                    alpha: aj.opt_f64("alpha", d.alpha),
+                    drift_threshold: aj.opt_f64("drift_threshold", d.drift_threshold),
+                    rearm_threshold: aj.opt_f64("rearm_threshold", d.rearm_threshold),
+                    cooldown_ticks: aj.opt_u64("cooldown_ticks", d.cooldown_ticks as u64)
+                        as u32,
+                    migration_cost_ms: aj.opt_f64("migration_cost_ms", d.migration_cost_ms),
+                };
+                cfg.validate()?;
+                Some(cfg)
+            }
+            None => None,
+        };
         Ok(Scenario {
             name: j.opt_str("name", "scenario").to_string(),
             gpu,
@@ -177,6 +200,7 @@ impl Scenario {
             models,
             poisson: j.opt_bool("poisson", true),
             cluster,
+            adaptive,
         })
     }
 
@@ -236,6 +260,19 @@ impl Scenario {
                 ]),
             ));
         }
+        if let Some(a) = &self.adaptive {
+            pairs.push((
+                "adaptive",
+                Json::obj(vec![
+                    ("interval_ms", Json::from(a.interval_ms)),
+                    ("alpha", Json::from(a.alpha)),
+                    ("drift_threshold", Json::from(a.drift_threshold)),
+                    ("rearm_threshold", Json::from(a.rearm_threshold)),
+                    ("cooldown_ticks", Json::from(a.cooldown_ticks)),
+                    ("migration_cost_ms", Json::from(a.migration_cost_ms)),
+                ]),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -283,6 +320,16 @@ impl Scenario {
                 }
             })
             .collect()
+    }
+
+    /// Offered rate per model at t = 0 — what the adaptive control plane
+    /// solves the *initial* placement for (the static cluster path uses
+    /// [`Self::offered_rates`], i.e. the peak, instead). For a trace
+    /// this is the rate of the segment covering t = 0 (0 when the trace
+    /// starts later), resolved through
+    /// [`crate::workload::Arrivals::rate_at`].
+    pub fn initial_rates(&self) -> Vec<f64> {
+        self.arrivals().iter().map(|a| a.rate_at(0.0)).collect()
     }
 
     /// Per-GPU scheduler for the cluster path, derived from the
@@ -367,6 +414,39 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         cl.placement,
         cl.routing,
         sc.gpu_sched(),
+        &reqs,
+        sc.horizon_ms,
+        sc.seed,
+    )
+}
+
+/// Run a scenario's cluster block through the adaptive control plane:
+/// initial placement for the t = 0 rates, then periodic re-optimization
+/// and rebalancing as rates drift. Panics without `cluster`; uses the
+/// default [`crate::controlplane::AdaptiveCfg`] when the scenario has no
+/// `adaptive` block.
+pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
+    use crate::workload::merged_stream;
+    let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
+    let adaptive = sc.adaptive.clone().unwrap_or_default();
+    let profiles = sc.profiles();
+    let initial = sc.initial_rates();
+    let arrivals = sc.arrivals();
+    let specs: Vec<_> = arrivals
+        .into_iter()
+        .zip(profiles.iter())
+        .map(|(a, p)| (a, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, sc.horizon_ms, sc.seed);
+    let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
+    crate::controlplane::run_adaptive(
+        &profiles,
+        &initial,
+        &gpus,
+        cl.placement,
+        cl.routing,
+        sc.gpu_sched(),
+        &adaptive,
         &reqs,
         sc.horizon_ms,
         sc.seed,
@@ -475,6 +555,70 @@ mod tests {
         ] {
             assert!(Scenario::from_json(bad).is_err(), "{bad}");
         }
+    }
+
+    const ADAPTIVE_EXAMPLE: &str = r#"{
+        "name": "adaptive_mini",
+        "policy": "dstack",
+        "horizon_ms": 1000,
+        "seed": 5,
+        "cluster": {"gpus": ["V100", "V100"], "placement": "ffd", "routing": "jsq"},
+        "adaptive": {"interval_ms": 250, "alpha": 0.4, "drift_threshold": 0.3,
+                     "rearm_threshold": 0.1, "cooldown_ticks": 1, "migration_cost_ms": 20},
+        "models": [
+            {"name": "resnet50", "rate": 0, "trace": [[0, 500], [500, 100]]},
+            {"name": "alexnet", "rate": 200}
+        ]
+    }"#;
+
+    #[test]
+    fn adaptive_block_parses_roundtrips_and_runs() {
+        let sc = Scenario::from_json(ADAPTIVE_EXAMPLE).unwrap();
+        let a = sc.adaptive.as_ref().expect("adaptive block parsed");
+        assert_eq!(a.interval_ms, 250.0);
+        assert_eq!(a.cooldown_ticks, 1);
+        let text = sc.to_json().to_string_pretty();
+        let sc2 = Scenario::from_json(&text).unwrap();
+        let b = sc2.adaptive.as_ref().unwrap();
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.migration_cost_ms, b.migration_cost_ms);
+        let rep = run_adaptive_scenario(&sc);
+        assert!(rep.adaptive.is_some(), "adaptive stats attached");
+        assert!(rep.total_throughput() > 0.0);
+    }
+
+    #[test]
+    fn adaptive_requires_cluster_and_valid_fields() {
+        let no_cluster = r#"{"adaptive": {}, "models": [{"name": "alexnet", "rate": 1}]}"#;
+        assert!(Scenario::from_json(no_cluster).is_err());
+        let bad_alpha = r#"{
+            "cluster": {"gpus": ["V100"]},
+            "adaptive": {"alpha": 2.0},
+            "models": [{"name": "alexnet", "rate": 1}]
+        }"#;
+        assert!(Scenario::from_json(bad_alpha).is_err());
+        let bad_band = r#"{
+            "cluster": {"gpus": ["V100"]},
+            "adaptive": {"drift_threshold": 0.2, "rearm_threshold": 0.4},
+            "models": [{"name": "alexnet", "rate": 1}]
+        }"#;
+        assert!(Scenario::from_json(bad_band).is_err());
+    }
+
+    #[test]
+    fn initial_rates_use_t0_segment() {
+        let sc = Scenario::from_json(
+            r#"{"models": [
+                {"name": "alexnet", "rate": 0, "trace": [[500, 900], [0, 100], [1000, 300]]},
+                {"name": "mobilenet", "rate": 250},
+                {"name": "vgg19", "rate": 0, "trace": [[200, 80]]}
+            ]}"#,
+        )
+        .unwrap();
+        // Unsorted trace: the segment covering t=0 wins; a trace that
+        // starts later offers 0 at t=0.
+        assert_eq!(sc.initial_rates(), vec![100.0, 250.0, 0.0]);
+        assert_eq!(sc.offered_rates(), vec![900.0, 250.0, 80.0]);
     }
 
     #[test]

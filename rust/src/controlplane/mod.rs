@@ -1,0 +1,1028 @@
+//! Adaptive control plane: runtime re-optimization and cluster
+//! rebalancing under rate drift.
+//!
+//! The cluster layer ([`crate::cluster`]) computes a knee-packed
+//! placement once at t = 0 and never revisits it — under dynamic-rate
+//! traces (the paper's Fig. 11b regime, generalized to a cluster) a load
+//! shift strands replicas on the wrong GPUs: the formerly-hot model
+//! holds knee budget it no longer needs while the newly-hot model
+//! saturates its lone replica. This module closes the loop between
+//! observation and allocation with a dataflow of three stages driven by
+//! a periodic control tick on the global virtual clock:
+//!
+//! 1. **[`RateEstimator`]** — a per-model EWMA over per-tick arrival
+//!    counts sampled by the cluster driver (every request the router
+//!    sees, including admission-rejected ones: the *demand* signal, not
+//!    the served rate).
+//! 2. **[`DriftDetector`]** — compares estimates against the rates the
+//!    current placement was solved for, with hysteresis: a model opens
+//!    a *drift episode* when its relative deviation exceeds
+//!    `drift_threshold`; an open episode replans every `cooldown_ticks`
+//!    until the deviation converges below `rearm_threshold`
+//!    (`rearm < drift`), which closes it. Deviations that only wander
+//!    into the band between the two thresholds never open an episode —
+//!    noisy rates cannot flap the placement, while a step change
+//!    triggers a bounded burst of replans until the EWMA settles.
+//! 3. **Rebalancer** — on drift, re-solves operating points and packing
+//!    by re-running [`crate::cluster::placement::place`] (which derives
+//!    each model's fresh knee/batch point per GPU type through
+//!    [`crate::cluster::placement::op_point`] — the §5 optimizer at the
+//!    knee, the right point when multiplexing, see
+//!    [`crate::sim::entries_at_optimum`]) against the *estimated* rates,
+//!    then computes an incremental [`RebalanceDelta`] against the live
+//!    replica set: replicas to remove and replicas to add. Removals
+//!    apply first and additions only become routable after a
+//!    `migration_cost_ms` model-load delay, so a GPU's knee budget is
+//!    never oversubscribed mid-flight (see [`placement_delta`] and the
+//!    budget invariant in [`run_adaptive`]).
+//!
+//! Replica removal drains the replica's queued requests and re-routes
+//! them to the model's surviving replicas (requests keep their original
+//! arrival time and deadline — end-to-end latency accounting is
+//! unaffected); in-flight batches complete on the old GPU and are
+//! counted there. A removed replica's engine slot becomes a *tombstone*
+//! that a later re-activation of the same model reuses, so an engine's
+//! model table only ever grows to the number of distinct models placed
+//! on it.
+//!
+//! The outcome of an adaptive run is an ordinary
+//! [`crate::cluster::ClusterReport`] whose `adaptive` field carries
+//! [`AdaptiveStats`]: replan/rebalance counts, migration cost, and
+//! per-model p99 before vs after the first applied rebalance — the
+//! adaptive-vs-static comparison is a first-class reportable figure
+//! (`figures::fig13`, `dstack adaptive`).
+
+use crate::cluster::{
+    place, ClusterReport, GpuModelShare, GpuReport, GpuSched, Placement, PlacementPolicy,
+    Replica, Router, RoutingPolicy,
+};
+use crate::gpu::{ms_to_us, Us};
+use crate::metrics::RunReport;
+use crate::profile::{GpuSpec, ModelProfile};
+use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::workload::Request;
+
+/// Control-plane configuration (the scenario `"adaptive"` block — see
+/// `docs/CONFIG.md`).
+#[derive(Debug, Clone)]
+pub struct AdaptiveCfg {
+    /// Control-tick period (ms of virtual time).
+    pub interval_ms: f64,
+    /// EWMA smoothing factor in (0, 1]: weight of the newest window.
+    pub alpha: f64,
+    /// Relative deviation |est − planned| / max(planned, 1) at which a
+    /// model enters the drifted state and a replan fires.
+    pub drift_threshold: f64,
+    /// Deviation below which a drifted model re-arms (must be below
+    /// `drift_threshold` — the hysteresis band).
+    pub rearm_threshold: f64,
+    /// Minimum control ticks between replans.
+    pub cooldown_ticks: u32,
+    /// Model-load delay before an added replica becomes routable (ms);
+    /// the §3.2 reconfiguration cost, charged per migration.
+    pub migration_cost_ms: f64,
+}
+
+impl Default for AdaptiveCfg {
+    fn default() -> Self {
+        AdaptiveCfg {
+            interval_ms: 500.0,
+            alpha: 0.3,
+            drift_threshold: 0.3,
+            rearm_threshold: 0.15,
+            cooldown_ticks: 2,
+            migration_cost_ms: 50.0,
+        }
+    }
+}
+
+impl AdaptiveCfg {
+    /// Validate ranges; returns a message naming the offending field.
+    pub fn validate(&self) -> Result<(), String> {
+        let bad = |v: f64| v.is_nan();
+        if bad(self.interval_ms) || self.interval_ms <= 0.0 {
+            return Err("adaptive.interval_ms must be > 0".into());
+        }
+        if bad(self.alpha) || self.alpha <= 0.0 || self.alpha > 1.0 {
+            return Err("adaptive.alpha must be in (0, 1]".into());
+        }
+        if bad(self.drift_threshold) || self.drift_threshold <= 0.0 {
+            return Err("adaptive.drift_threshold must be > 0".into());
+        }
+        if bad(self.rearm_threshold)
+            || self.rearm_threshold < 0.0
+            || self.rearm_threshold >= self.drift_threshold
+        {
+            return Err("adaptive.rearm_threshold must be in [0, drift_threshold)".into());
+        }
+        if bad(self.migration_cost_ms) || self.migration_cost_ms < 0.0 {
+            return Err("adaptive.migration_cost_ms must be >= 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-model EWMA rate estimator over fixed observation windows.
+#[derive(Debug, Clone)]
+pub struct RateEstimator {
+    alpha: f64,
+    rates: Vec<f64>,
+}
+
+impl RateEstimator {
+    /// Seed the estimate with the rates the initial placement was solved
+    /// for, so the detector starts from a consistent state.
+    pub fn new(alpha: f64, initial_rates: &[f64]) -> RateEstimator {
+        RateEstimator { alpha, rates: initial_rates.to_vec() }
+    }
+
+    /// Fold one observation window (per-model arrival counts over
+    /// `window_s` seconds) into the estimates.
+    pub fn observe(&mut self, counts: &[u64], window_s: f64) {
+        debug_assert_eq!(counts.len(), self.rates.len());
+        debug_assert!(window_s > 0.0);
+        for (rate, &c) in self.rates.iter_mut().zip(counts) {
+            let measured = c as f64 / window_s;
+            *rate = self.alpha * measured + (1.0 - self.alpha) * *rate;
+        }
+    }
+
+    /// Current per-model rate estimates (req/s).
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
+    }
+}
+
+/// Hysteresis drift detector (stage 2 of the module dataflow).
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    fire: f64,
+    rearm: f64,
+    cooldown: u32,
+    drifted: Vec<bool>,
+    ticks_since_replan: u32,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: &AdaptiveCfg, n_models: usize) -> DriftDetector {
+        DriftDetector {
+            fire: cfg.drift_threshold,
+            rearm: cfg.rearm_threshold,
+            cooldown: cfg.cooldown_ticks,
+            drifted: vec![false; n_models],
+            // Ready to fire on the very first tick if drift is present.
+            ticks_since_replan: cfg.cooldown_ticks,
+        }
+    }
+
+    /// Relative deviation of an estimate from the planned rate, with an
+    /// absolute floor of 1 req/s so silent models waking up register as
+    /// infinite-relative drift without dividing by zero.
+    pub fn deviation(estimated: f64, planned: f64) -> f64 {
+        (estimated - planned).abs() / planned.max(1.0)
+    }
+
+    /// Advance one control tick. Returns `true` when a replan should
+    /// fire. Hysteresis: a model *opens* a drift episode when its
+    /// deviation exceeds the fire threshold, and the episode stays open
+    /// — triggering a replan every `cooldown_ticks` — until the
+    /// deviation converges below the rearm threshold (replans refresh
+    /// the planned rates, so a settled estimate closes the episode
+    /// within a tick or two). A deviation that merely wanders into the
+    /// band (rearm, fire] without crossing fire never opens an episode,
+    /// which is what keeps noisy rates from flapping the placement.
+    /// The caller must re-solve the placement against the estimates on
+    /// `true` and treat them as the new planned rates.
+    pub fn tick(&mut self, estimated: &[f64], planned: &[f64]) -> bool {
+        debug_assert_eq!(estimated.len(), planned.len());
+        self.ticks_since_replan = self.ticks_since_replan.saturating_add(1);
+        for (m, (&est, &pl)) in estimated.iter().zip(planned).enumerate() {
+            let d = Self::deviation(est, pl);
+            if self.drifted[m] {
+                if d < self.rearm {
+                    self.drifted[m] = false;
+                }
+            } else if d > self.fire {
+                self.drifted[m] = true;
+            }
+        }
+        let episode_open = self.drifted.iter().any(|&x| x);
+        if episode_open && self.ticks_since_replan >= self.cooldown {
+            self.ticks_since_replan = 0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// An incremental placement change: replicas to tear down and replicas
+/// to bring up. Removals always apply before additions so per-GPU knee
+/// budgets stay within 100% throughout the migration.
+#[derive(Debug, Clone, Default)]
+pub struct RebalanceDelta {
+    /// (model, target replica) — `local` is assigned at activation.
+    pub add: Vec<(usize, Replica)>,
+    /// (model, gpu, freed knee pct).
+    pub remove: Vec<(usize, usize, u32)>,
+}
+
+impl RebalanceDelta {
+    pub fn is_empty(&self) -> bool {
+        self.add.is_empty() && self.remove.is_empty()
+    }
+}
+
+/// Diff the live replica set against a freshly solved target placement.
+/// `current[m]` lists (gpu, knee pct) of model `m`'s live (and pending)
+/// replicas. Replicas present in both are kept untouched — operating
+/// points depend only on (model, GPU type), so a kept replica's point
+/// never changes across re-solves. Fully deterministic: models ascending,
+/// GPUs in the target's own deterministic order.
+pub fn placement_delta(current: &[Vec<(usize, u32)>], target: &Placement) -> RebalanceDelta {
+    let mut delta = RebalanceDelta::default();
+    for (m, cur) in current.iter().enumerate() {
+        let want = &target.replicas[m];
+        for &(gpu, pct) in cur {
+            if !want.iter().any(|r| r.gpu == gpu) {
+                delta.remove.push((m, gpu, pct));
+            }
+        }
+        for r in want {
+            if !cur.iter().any(|&(gpu, _)| gpu == r.gpu) {
+                delta.add.push((m, r.clone()));
+            }
+        }
+    }
+    delta
+}
+
+/// Apply a delta to per-GPU knee loads (removals first), returning the
+/// load after removals and after additions. Panics if additions would
+/// push any GPU past 100% — the rebalancer must never schedule an
+/// oversubscribing migration.
+pub fn apply_delta_to_knee_load(
+    knee_load: &[u32],
+    delta: &RebalanceDelta,
+) -> (Vec<u32>, Vec<u32>) {
+    let mut after_remove = knee_load.to_vec();
+    for &(_, gpu, pct) in &delta.remove {
+        after_remove[gpu] = after_remove[gpu]
+            .checked_sub(pct)
+            .expect("removing more knee pct than the GPU holds");
+    }
+    let mut after_add = after_remove.clone();
+    for (m, r) in &delta.add {
+        after_add[r.gpu] += r.pct;
+        assert!(
+            after_add[r.gpu] <= 100,
+            "rebalance oversubscribes gpu {} to {}% (adding model {m})",
+            r.gpu,
+            after_add[r.gpu]
+        );
+    }
+    (after_remove, after_add)
+}
+
+/// Control-plane telemetry attached to an adaptive run's
+/// [`ClusterReport`].
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveStats {
+    /// Drift firings (placement re-solves), including no-op ones.
+    pub replans: u64,
+    /// Replans whose delta actually moved replicas.
+    pub rebalances: u64,
+    pub replicas_added: u64,
+    pub replicas_removed: u64,
+    /// Total model-load time charged to migrations (ms).
+    pub migration_ms: f64,
+    /// Virtual times of applied (non-empty) rebalances (µs).
+    pub rebalance_times_us: Vec<Us>,
+    /// Final EWMA rate estimates (req/s per model).
+    pub est_rates: Vec<f64>,
+    /// Per-model p99 latency (ms) over completions before the first
+    /// applied rebalance (the whole run when none was applied).
+    pub p99_before_ms: Vec<f64>,
+    /// Per-model p99 latency (ms) over completions at or after the
+    /// first applied rebalance (NaN-free: 0 when no samples).
+    pub p99_after_ms: Vec<f64>,
+}
+
+impl AdaptiveStats {
+    pub fn first_rebalance_us(&self) -> Option<Us> {
+        self.rebalance_times_us.first().copied()
+    }
+
+    /// Deterministic JSON form (embedded in `ClusterReport::to_json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replans", Json::from(self.replans)),
+            ("rebalances", Json::from(self.rebalances)),
+            ("replicas_added", Json::from(self.replicas_added)),
+            ("replicas_removed", Json::from(self.replicas_removed)),
+            ("migration_ms", Json::from(self.migration_ms)),
+            (
+                "rebalance_times_us",
+                Json::Arr(self.rebalance_times_us.iter().map(|&t| Json::from(t)).collect()),
+            ),
+            ("est_rates", Json::arr_f64(&self.est_rates)),
+            ("p99_before_ms", Json::arr_f64(&self.p99_before_ms)),
+            ("p99_after_ms", Json::arr_f64(&self.p99_after_ms)),
+        ])
+    }
+}
+
+/// One live (or pending) replica tracked by the driver. A pending
+/// replica (`local == None`) becomes routable when its activation event
+/// — tracked in the driver's `pending` list with its effective time —
+/// matures.
+#[derive(Debug, Clone)]
+struct LiveRep {
+    gpu: usize,
+    pct: u32,
+    batch: u32,
+    capacity_rps: f64,
+    /// Engine-local model index once activated.
+    local: Option<usize>,
+}
+
+struct AdEngine {
+    sim: Sim,
+    policy: Box<dyn Policy>,
+}
+
+impl AdEngine {
+    /// Rebuild the per-GPU policy from the engine's current entry table,
+    /// masking tombstones so retired models hold no plan capacity,
+    /// slices or shares.
+    fn rebuild_policy(&mut self, sched: GpuSched) {
+        let mask: Vec<bool> =
+            (0..self.sim.models.len()).map(|i| self.sim.is_active(i)).collect();
+        self.policy = sched.build_masked(&self.sim.models, &mask);
+    }
+}
+
+/// Activate `rep` (a replica of global `model`) on its GPU's engine,
+/// creating the engine on first use, reusing the model's tombstone slot
+/// when it served here before, and rebuilding the per-GPU policy from
+/// the updated entry table. Fills in `rep.local`.
+#[allow(clippy::too_many_arguments)]
+fn activate_replica(
+    engines: &mut [Option<AdEngine>],
+    local_map: &mut [Vec<usize>],
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    horizon_ms: f64,
+    sched: GpuSched,
+    model: usize,
+    rep: &mut LiveRep,
+) {
+    let g = rep.gpu;
+    if engines[g].is_none() {
+        let sim_cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+        engines[g] = Some(AdEngine {
+            sim: Sim::new(sim_cfg, Vec::new()),
+            policy: sched.build(&[]),
+        });
+    }
+    let engine = engines[g].as_mut().expect("engine just created");
+    let entry = ModelEntry { profile: profiles[model].clone(), pct: rep.pct, batch: rep.batch };
+    let local = match local_map[g].iter().position(|&gm| gm == model) {
+        Some(li) => {
+            engine.sim.reactivate_model(li, entry);
+            li
+        }
+        None => {
+            let li = engine.sim.add_model(entry);
+            debug_assert_eq!(li, local_map[g].len());
+            local_map[g].push(model);
+            li
+        }
+    };
+    rep.local = Some(local);
+    engine.rebuild_policy(sched);
+}
+
+/// Route one request of `model` to a replica (JSQ/P2C probe the live
+/// engine backlogs) and inject it, or count it rejected when the model
+/// has no routable replica. Shared by arrival routing and the
+/// re-routing of queues drained from removed replicas.
+fn route_and_inject(
+    router: &mut Router,
+    routable: &[Vec<Replica>],
+    engines: &mut [Option<AdEngine>],
+    rejected: &mut [u64],
+    touched: &mut [bool],
+    model: usize,
+    req: &Request,
+) {
+    let reps = &routable[model];
+    if reps.is_empty() {
+        rejected[model] += 1;
+        return;
+    }
+    let pick = router.route(model, reps, |rep| {
+        engines[rep.gpu]
+            .as_ref()
+            .map_or(usize::MAX, |e| e.sim.backlog_items(rep.local))
+    });
+    let rep = &reps[pick];
+    let mut q = req.clone();
+    q.model = rep.local;
+    engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(q);
+    touched[rep.gpu] = true;
+}
+
+/// Routable replicas of `model`: live entries whose engine slot is
+/// assigned (pending migrations are excluded until they mature).
+fn routable_of(live: &[Vec<LiveRep>], model: usize) -> Vec<Replica> {
+    live[model]
+        .iter()
+        .filter(|r| r.local.is_some())
+        .map(|r| Replica {
+            gpu: r.gpu,
+            local: r.local.expect("filtered on local"),
+            pct: r.pct,
+            batch: r.batch,
+            capacity_rps: r.capacity_rps,
+        })
+        .collect()
+}
+
+/// Serve `requests` on `gpus` with the adaptive control plane: initial
+/// knee-packed placement for `initial_rates`, then per-tick estimation,
+/// drift detection and incremental rebalancing as described in the
+/// module docs. Deterministic: a fixed (inputs, seed) tuple always
+/// yields the same report, including the rebalance schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn run_adaptive(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &AdaptiveCfg,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+) -> ClusterReport {
+    cfg.validate().expect("invalid adaptive config");
+    let n_models = profiles.len();
+    let n_gpus = gpus.len();
+    let horizon = ms_to_us(horizon_ms);
+    let interval = ms_to_us(cfg.interval_ms).max(1);
+    let migration_us = ms_to_us(cfg.migration_cost_ms);
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+
+    // --- initial placement --------------------------------------------------
+    let initial = place(profiles, initial_rates, gpus, placement);
+    let mut live: Vec<Vec<LiveRep>> = vec![Vec::new(); n_models];
+    let mut knee_load: Vec<u32> = initial.knee_load.clone();
+    let mut shed_rps: Vec<f64> = initial.shed_rps.clone();
+
+    let mut engines: Vec<Option<AdEngine>> = (0..n_gpus).map(|_| None).collect();
+    // gpu → engine-local index → global model index.
+    let mut local_map: Vec<Vec<usize>> = vec![Vec::new(); n_gpus];
+
+    for (m, reps) in initial.replicas.iter().enumerate() {
+        for r in reps {
+            let mut lr = LiveRep {
+                gpu: r.gpu,
+                pct: r.pct,
+                batch: r.batch,
+                capacity_rps: r.capacity_rps,
+                local: None,
+            };
+            activate_replica(
+                &mut engines,
+                &mut local_map,
+                profiles,
+                gpus,
+                horizon_ms,
+                sched,
+                m,
+                &mut lr,
+            );
+            live[m].push(lr);
+        }
+    }
+
+    // Routable view handed to the router: rebuilt whenever `live` changes.
+    let mut routable: Vec<Vec<Replica>> = (0..n_models).map(|m| routable_of(&live, m)).collect();
+
+    // --- control state ------------------------------------------------------
+    let mut estimator = RateEstimator::new(cfg.alpha, initial_rates);
+    let mut detector = DriftDetector::new(cfg, n_models);
+    let mut planned_rates: Vec<f64> = initial_rates.to_vec();
+    let mut window_counts = vec![0u64; n_models];
+    let window_s = cfg.interval_ms / 1_000.0;
+    let mut stats = AdaptiveStats::default();
+    // (effective_at, model, index into live[model]) of pending adds.
+    let mut pending: Vec<(Us, usize, usize)> = Vec::new();
+
+    let mut router = Router::new(routing, n_models, seed);
+    let mut rejected = vec![0u64; n_models];
+    let mut cursor = 0usize;
+    let mut touched = vec![false; n_gpus];
+    let mut next_tick: Us = interval;
+
+    // --- event loop ---------------------------------------------------------
+    loop {
+        let t_arr = requests.get(cursor).map(|r| r.arrival);
+        let t_eng = engines
+            .iter()
+            .flatten()
+            .filter_map(|e| e.sim.next_event_time())
+            .min();
+        let t_act = pending.iter().map(|&(at, _, _)| at).min();
+        let t_tick = if next_tick < horizon { Some(next_tick) } else { None };
+        let Some(t) = [t_arr, t_eng, t_act, t_tick].into_iter().flatten().min() else {
+            break;
+        };
+        if t >= horizon {
+            break;
+        }
+        touched.fill(false);
+
+        // 1. Mature pending replica activations due at t.
+        if pending.iter().any(|&(at, _, _)| at <= t) {
+            let due: Vec<(Us, usize, usize)> =
+                pending.iter().copied().filter(|&(at, _, _)| at <= t).collect();
+            pending.retain(|&(at, _, _)| at > t);
+            let mut refreshed = Vec::new();
+            for (_, m, idx) in due {
+                let mut lr = live[m][idx].clone();
+                activate_replica(
+                    &mut engines,
+                    &mut local_map,
+                    profiles,
+                    gpus,
+                    horizon_ms,
+                    sched,
+                    m,
+                    &mut lr,
+                );
+                touched[lr.gpu] = true;
+                live[m][idx] = lr;
+                refreshed.push(m);
+            }
+            for m in refreshed {
+                routable[m] = routable_of(&live, m);
+            }
+        }
+
+        // 2. Route every arrival at t (counted into the estimator window
+        //    whether or not it is admitted — demand, not service).
+        while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
+            let r = &requests[cursor];
+            cursor += 1;
+            window_counts[r.model] += 1;
+            route_and_inject(
+                &mut router,
+                &routable,
+                &mut engines,
+                &mut rejected,
+                &mut touched,
+                r.model,
+                r,
+            );
+        }
+
+        // 3. Control tick: estimate, detect drift, rebalance.
+        if t == next_tick {
+            next_tick += interval;
+            estimator.observe(&window_counts, window_s);
+            window_counts.fill(0);
+            if detector.tick(estimator.rates(), &planned_rates) {
+                stats.replans += 1;
+                planned_rates = estimator.rates().to_vec();
+                let target = place(profiles, &planned_rates, gpus, placement);
+                let current: Vec<Vec<(usize, u32)>> = live
+                    .iter()
+                    .map(|reps| reps.iter().map(|r| (r.gpu, r.pct)).collect())
+                    .collect();
+                let delta = placement_delta(&current, &target);
+                if !delta.is_empty() {
+                    // Budget invariant: removals-then-additions never
+                    // pushes a GPU past 100% knee load.
+                    let (_, after) = apply_delta_to_knee_load(&knee_load, &delta);
+                    // Tear down removed replicas: drain queues, re-route
+                    // survivors' way (or count as rejected when the model
+                    // lost its last replica).
+                    let mut drained: Vec<(usize, Request)> = Vec::new();
+                    for &(m, gpu, _) in &delta.remove {
+                        let idx = live[m]
+                            .iter()
+                            .position(|r| r.gpu == gpu)
+                            .expect("removing unknown replica");
+                        let lr = live[m].remove(idx);
+                        if let Some(local) = lr.local {
+                            let engine =
+                                engines[gpu].as_mut().expect("live replica without engine");
+                            for req in engine.sim.deactivate_model(local) {
+                                drained.push((m, req));
+                            }
+                            engine.rebuild_policy(sched);
+                            touched[gpu] = true;
+                            stats.replicas_removed += 1;
+                        } else {
+                            // Still pending: cancel the migration and
+                            // refund its accounting — the replica never
+                            // materialized, so it is neither an add nor
+                            // a remove.
+                            pending.retain(|&(_, pm, pidx)| !(pm == m && pidx == idx));
+                            stats.replicas_added -= 1;
+                            stats.migration_ms -= cfg.migration_cost_ms;
+                        }
+                        // Pending entries index into live[m]; the removal
+                        // shifted everything behind it down by one.
+                        for p in pending.iter_mut() {
+                            if p.1 == m && p.2 > idx {
+                                p.2 -= 1;
+                            }
+                        }
+                    }
+                    // Bring up added replicas after the migration delay.
+                    for (m, r) in &delta.add {
+                        let lr = LiveRep {
+                            gpu: r.gpu,
+                            pct: r.pct,
+                            batch: r.batch,
+                            capacity_rps: r.capacity_rps,
+                            local: None,
+                        };
+                        live[*m].push(lr);
+                        pending.push((t + migration_us, *m, live[*m].len() - 1));
+                        stats.replicas_added += 1;
+                        stats.migration_ms += cfg.migration_cost_ms;
+                    }
+                    knee_load = after;
+                    for m in 0..n_models {
+                        routable[m] = routable_of(&live, m);
+                    }
+                    // Re-route drained requests among surviving replicas.
+                    for (m, req) in drained {
+                        route_and_inject(
+                            &mut router,
+                            &routable,
+                            &mut engines,
+                            &mut rejected,
+                            &mut touched,
+                            m,
+                            &req,
+                        );
+                    }
+                    stats.rebalances += 1;
+                    stats.rebalance_times_us.push(t);
+                }
+                shed_rps = target.shed_rps.clone();
+            }
+        }
+
+        // 4. Step every engine with due events or new work.
+        for (g, slot) in engines.iter_mut().enumerate() {
+            let Some(engine) = slot else { continue };
+            let due = touched[g] || engine.sim.next_event_time().is_some_and(|w| w <= t);
+            if due {
+                engine.sim.step_to(t, engine.policy.as_mut(), horizon);
+            }
+        }
+    }
+
+    stats.est_rates = estimator.rates().to_vec();
+
+    // --- finalize + aggregate ----------------------------------------------
+    let reports: Vec<Option<RunReport>> = engines
+        .iter_mut()
+        .map(|slot| {
+            slot.as_mut().map(|e| {
+                let name = e.policy.name();
+                e.sim.finalize(name, horizon)
+            })
+        })
+        .collect();
+
+    let horizon_s = horizon_ms / 1_000.0;
+    let split_at = stats.first_rebalance_us();
+    let mut throughput = vec![0.0; n_models];
+    let mut violations = vec![0.0; n_models];
+    let mut served = vec![0u64; n_models];
+    let mut dropped = vec![0u64; n_models];
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut lat_before: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut lat_after: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut gpu_utilization = Vec::with_capacity(n_gpus);
+    let mut per_gpu = Vec::with_capacity(n_gpus);
+    for g in 0..n_gpus {
+        let (util, shares) = match &reports[g] {
+            Some(rep) => {
+                let mut shares = Vec::with_capacity(rep.per_model.len());
+                for (local, mm) in rep.per_model.iter().enumerate() {
+                    let global = local_map[g][local];
+                    throughput[global] += mm.served as f64 / horizon_s;
+                    violations[global] += mm.slo_violations() as f64 / horizon_s;
+                    served[global] += mm.served;
+                    dropped[global] += mm.dropped;
+                    latencies[global].extend_from_slice(&mm.latencies_ms);
+                    for (lat, &done) in mm.latencies_ms.iter().zip(&mm.completions_us) {
+                        match split_at {
+                            Some(cut) if done >= cut => lat_after[global].push(*lat),
+                            _ => lat_before[global].push(*lat),
+                        }
+                    }
+                    // Shares describe the *final* packing: tombstones
+                    // (models migrated off this GPU) contribute their
+                    // served counts above but are not listed as current
+                    // replicas — keeping per_gpu consistent with
+                    // replica_map and knee_load_pct.
+                    let engine = engines[g].as_ref().expect("reported engine");
+                    if engine.sim.is_active(local) {
+                        let entry = &engine.sim.models[local];
+                        shares.push(GpuModelShare {
+                            model: global,
+                            pct: entry.pct,
+                            batch: entry.batch,
+                            served: mm.served,
+                        });
+                    }
+                }
+                (rep.gpu_utilization[0], shares)
+            }
+            None => (0.0, Vec::new()),
+        };
+        gpu_utilization.push(util);
+        per_gpu.push(GpuReport {
+            gpu: gpus[g].name.to_string(),
+            knee_load_pct: knee_load[g],
+            utilization: util,
+            models: shares,
+        });
+    }
+    for m in 0..n_models {
+        violations[m] += rejected[m] as f64 / horizon_s;
+    }
+    stats.p99_before_ms = lat_before.iter().map(|l| percentile(l, 99.0)).collect();
+    stats.p99_after_ms = lat_after.iter().map(|l| percentile(l, 99.0)).collect();
+    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let replica_map: Vec<Vec<usize>> = live
+        .iter()
+        .map(|reps| reps.iter().map(|r| r.gpu).collect())
+        .collect();
+    let admitted: Vec<bool> = live.iter().map(|reps| !reps.is_empty()).collect();
+
+    ClusterReport {
+        policy: format!("adaptive+{}+{}+{}", placement.name(), routing.name(), sched.name()),
+        throughput,
+        gpu_utilization,
+        violations_per_sec: violations,
+        p99_ms,
+        served,
+        dropped,
+        rejected,
+        replica_map,
+        shed_rps,
+        admitted,
+        per_gpu,
+        adaptive: Some(stats),
+    }
+}
+
+/// The canonical drifting-rate cluster workload (the adaptive-vs-static
+/// acceptance scenario, `figures::fig13`, `dstack adaptive`, the
+/// `bench_adaptive` bench and the golden trace all run this): on a
+/// 2×V100 cluster, ResNet-50 and VGG-19 swap hot/cold roles at the
+/// horizon midpoint while AlexNet and Mobilenet offer steady load. A
+/// static peak-rate placement cannot admit all four (peaks would need
+/// both GPUs twice over); each phase individually fits, so tracking the
+/// drift is worth an entire GPU's worth of admitted traffic.
+///
+/// Returns (profiles, initial rates, peak rates, request stream).
+pub fn drift_workload(
+    horizon_ms: f64,
+    seed: u64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<f64>, Vec<Request>) {
+    use crate::workload::{drift_rates, merged_stream, Arrivals};
+    let spec = drift_rates(horizon_ms);
+    let profiles: Vec<ModelProfile> = spec
+        .iter()
+        .map(|(n, _)| crate::profile::by_name(n).expect("drift model in zoo"))
+        .collect();
+    let peak: Vec<f64> = spec
+        .iter()
+        .map(|(_, tr)| tr.iter().map(|&(_, r)| r).fold(0.0, f64::max))
+        .collect();
+    let arrivals: Vec<_> = profiles
+        .iter()
+        .zip(&spec)
+        .map(|(p, (_, tr))| (Arrivals::trace(tr.clone()), p.slo_ms))
+        .collect();
+    let initial: Vec<f64> = arrivals.iter().map(|(a, _)| a.rate_at(0.0)).collect();
+    let reqs = merged_stream(&arrivals, horizon_ms, seed);
+    (profiles, initial, peak, reqs)
+}
+
+/// The 2×V100 GPU set [`drift_workload`] is sized for.
+pub fn drift_gpus() -> Vec<GpuSpec> {
+    vec![crate::profile::V100.clone(), crate::profile::V100.clone()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::{by_name, V100};
+
+    fn cfg() -> AdaptiveCfg {
+        AdaptiveCfg::default()
+    }
+
+    #[test]
+    fn estimator_converges_geometrically() {
+        let mut est = RateEstimator::new(0.5, &[100.0]);
+        // Windows of 1 s at 300 req/s: estimate halves its distance to
+        // the truth every observation.
+        est.observe(&[300], 1.0);
+        assert!((est.rates()[0] - 200.0).abs() < 1e-9);
+        est.observe(&[300], 1.0);
+        assert!((est.rates()[0] - 250.0).abs() < 1e-9);
+        // Window length scales counts into rates.
+        let mut est2 = RateEstimator::new(1.0, &[0.0]);
+        est2.observe(&[150], 0.5);
+        assert!((est2.rates()[0] - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detector_ignores_noise_inside_the_band() {
+        // ±15% noise around the planned rate with a 30% fire threshold:
+        // no replan, ever — the flapping guard.
+        let mut det = DriftDetector::new(&cfg(), 1);
+        let planned = [200.0];
+        for i in 0..100 {
+            let noisy = 200.0 * (1.0 + 0.15 * if i % 2 == 0 { 1.0 } else { -1.0 });
+            assert!(!det.tick(&[noisy], &planned), "fired on noise at tick {i}");
+        }
+    }
+
+    #[test]
+    fn detector_fires_on_step_change_then_settles() {
+        let c = cfg();
+        let mut det = DriftDetector::new(&c, 1);
+        let mut planned = [100.0];
+        // Step to 300 req/s: fires on the first tick (cooldown pre-armed).
+        assert!(det.tick(&[300.0], &planned));
+        planned = [300.0];
+        // Settled around the new plan: deviations < rearm ⇒ silence.
+        for _ in 0..20 {
+            assert!(!det.tick(&[305.0], &planned));
+        }
+    }
+
+    #[test]
+    fn detector_respects_cooldown_and_rearm_band() {
+        let c = AdaptiveCfg { cooldown_ticks: 3, ..cfg() };
+        let mut det = DriftDetector::new(&c, 1);
+        let planned = [100.0];
+        assert!(det.tick(&[200.0], &planned), "first fire");
+        // Still drifting hard, but inside the cooldown: suppressed.
+        assert!(!det.tick(&[220.0], &planned));
+        assert!(!det.tick(&[240.0], &planned));
+        // Cooldown elapsed and the episode is still open: replans again.
+        assert!(det.tick(&[260.0], &planned));
+        // After the replan the deviation sits inside the band
+        // (rearm..fire): the open episode keeps refining the plan at
+        // the cooldown cadence until the estimate converges.
+        let planned2 = [260.0];
+        assert!(!det.tick(&[310.0], &planned2)); // dev ≈ 0.19, cooldown 1
+        assert!(!det.tick(&[310.0], &planned2)); // cooldown 2
+        assert!(det.tick(&[310.0], &planned2), "open episode refines");
+        // Convergence below rearm closes the episode…
+        let planned3 = [310.0];
+        assert!(!det.tick(&[320.0], &planned3)); // dev ≈ 0.03 → re-armed
+        // …and once closed, band-level deviations (rearm < dev < fire)
+        // never re-open it: the anti-flapping guarantee.
+        for _ in 0..10 {
+            assert!(!det.tick(&[370.0], &planned3)); // dev ≈ 0.19
+        }
+    }
+
+    #[test]
+    fn deviation_has_absolute_floor() {
+        assert!(DriftDetector::deviation(10.0, 0.0) > 5.0);
+        assert!((DriftDetector::deviation(150.0, 100.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_of_identical_placements_is_empty() {
+        let profiles = vec![by_name("resnet50").unwrap(), by_name("vgg19").unwrap()];
+        let rates = [400.0, 100.0];
+        let gpus = [V100.clone(), V100.clone()];
+        let p = place(&profiles, &rates, &gpus, PlacementPolicy::FirstFitDecreasing);
+        let current: Vec<Vec<(usize, u32)>> = p
+            .replicas
+            .iter()
+            .map(|reps| reps.iter().map(|r| (r.gpu, r.pct)).collect())
+            .collect();
+        let delta = placement_delta(&current, &p);
+        assert!(delta.is_empty(), "{delta:?}");
+    }
+
+    #[test]
+    fn delta_moves_replicas_when_rates_swap() {
+        // The drift scenario's core move: resnet50 hot→cold frees a GPU
+        // that vgg19 cold→hot claims.
+        let profiles = vec![
+            by_name("resnet50").unwrap(),
+            by_name("vgg19").unwrap(),
+            by_name("alexnet").unwrap(),
+            by_name("mobilenet").unwrap(),
+        ];
+        let gpus = [V100.clone(), V100.clone()];
+        let before = place(
+            &profiles,
+            &[900.0, 100.0, 400.0, 300.0],
+            &gpus,
+            PlacementPolicy::FirstFitDecreasing,
+        );
+        let after = place(
+            &profiles,
+            &[150.0, 450.0, 400.0, 300.0],
+            &gpus,
+            PlacementPolicy::FirstFitDecreasing,
+        );
+        let current: Vec<Vec<(usize, u32)>> = before
+            .replicas
+            .iter()
+            .map(|reps| reps.iter().map(|r| (r.gpu, r.pct)).collect())
+            .collect();
+        let delta = placement_delta(&current, &after);
+        assert!(!delta.is_empty());
+        assert!(
+            delta.remove.iter().any(|&(m, _, _)| m == 0),
+            "resnet50 should shrink: {delta:?}"
+        );
+        assert!(delta.add.iter().any(|&(m, _)| m == 1), "vgg19 should grow: {delta:?}");
+        // Budget invariant holds across the migration.
+        let (after_remove, after_add) = apply_delta_to_knee_load(&before.knee_load, &delta);
+        for g in 0..gpus.len() {
+            assert!(after_remove[g] <= 100);
+            assert!(after_add[g] <= 100);
+            assert_eq!(after_add[g], after.knee_load[g]);
+        }
+    }
+
+    #[test]
+    fn delta_is_deterministic() {
+        let profiles = vec![by_name("resnet50").unwrap(), by_name("vgg19").unwrap()];
+        let gpus = [V100.clone(), V100.clone()];
+        let a = place(&profiles, &[900.0, 100.0], &gpus, PlacementPolicy::FirstFitDecreasing);
+        let b = place(&profiles, &[100.0, 500.0], &gpus, PlacementPolicy::FirstFitDecreasing);
+        let current: Vec<Vec<(usize, u32)>> = a
+            .replicas
+            .iter()
+            .map(|reps| reps.iter().map(|r| (r.gpu, r.pct)).collect())
+            .collect();
+        let d1 = placement_delta(&current, &b);
+        let d2 = placement_delta(&current, &b);
+        assert_eq!(format!("{d1:?}"), format!("{d2:?}"));
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribes")]
+    fn oversubscribing_delta_panics() {
+        let delta = RebalanceDelta {
+            add: vec![(
+                0,
+                Replica { gpu: 0, local: 0, pct: 60, batch: 16, capacity_rps: 100.0 },
+            )],
+            remove: Vec::new(),
+        };
+        apply_delta_to_knee_load(&[70], &delta);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_fields() {
+        assert!(AdaptiveCfg::default().validate().is_ok());
+        assert!(AdaptiveCfg { interval_ms: 0.0, ..cfg() }.validate().is_err());
+        assert!(AdaptiveCfg { alpha: 1.5, ..cfg() }.validate().is_err());
+        assert!(AdaptiveCfg { rearm_threshold: 0.5, ..cfg() }.validate().is_err());
+        assert!(AdaptiveCfg { migration_cost_ms: -1.0, ..cfg() }.validate().is_err());
+    }
+
+    #[test]
+    fn drift_workload_shape() {
+        let (profiles, initial, peak, reqs) = drift_workload(2_000.0, 7);
+        assert_eq!(profiles.len(), 4);
+        assert_eq!(initial, vec![900.0, 100.0, 400.0, 300.0]);
+        assert_eq!(peak, vec![900.0, 450.0, 400.0, 300.0]);
+        assert!(!reqs.is_empty());
+        // Sorted stream, all four models present.
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for m in 0..4 {
+            assert!(reqs.iter().any(|r| r.model == m), "model {m} silent");
+        }
+    }
+}

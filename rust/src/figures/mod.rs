@@ -672,6 +672,69 @@ pub fn fig12() -> FigData {
     out
 }
 
+/// Fig. 13 (beyond the paper): adaptive control plane vs static
+/// placement on the drifting-rate cluster workload
+/// ([`crate::workload::drift_rates`], 2×V100). Static solves the
+/// knee packing once — for the per-model peak rates, which never occur
+/// simultaneously — and strands two models at admission; the adaptive
+/// plane places for the live estimates and migrates replicas when the
+/// drift detector fires.
+pub fn fig13() -> FigData {
+    use crate::cluster::{serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy};
+    use crate::controlplane::{drift_gpus, drift_workload, run_adaptive, AdaptiveCfg};
+    let mut out = FigData::new(
+        "fig13",
+        "adaptive vs static under rate drift (req/s, drifting 2xV100 workload)",
+        &["policy", "total", "resnet50", "vgg19", "alexnet", "mobilenet", "viol_per_s", "rebalances"],
+    );
+    let horizon_ms = 6_000.0;
+    let seed = 77;
+    let (profiles, initial, peak, reqs) = drift_workload(horizon_ms, seed);
+    let gpus = drift_gpus();
+    let mut push = |label: &str, r: &crate::cluster::ClusterReport| {
+        out.push(vec![
+            label.to_string(),
+            f(r.total_throughput()),
+            f(r.throughput[0]),
+            f(r.throughput[1]),
+            f(r.throughput[2]),
+            f(r.throughput[3]),
+            f(r.violations_per_sec.iter().sum::<f64>()),
+            r.adaptive.as_ref().map_or(0, |a| a.rebalances).to_string(),
+        ]);
+    };
+    let run_static = |rates: &[f64]| {
+        serve_cluster(
+            &profiles,
+            rates,
+            &gpus,
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &reqs,
+            horizon_ms,
+            seed,
+        )
+    };
+    push("static (peak rates)", &run_static(&peak));
+    push("static (t=0 rates)", &run_static(&initial));
+    let cfg = AdaptiveCfg { interval_ms: 250.0, ..Default::default() };
+    let adap = run_adaptive(
+        &profiles,
+        &initial,
+        &gpus,
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        &reqs,
+        horizon_ms,
+        seed,
+    );
+    push("adaptive", &adap);
+    out
+}
+
 /// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
 pub fn generate(which: &str) -> Vec<FigData> {
     match which {
@@ -690,6 +753,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
         "10" => vec![fig10()],
         "11" => vec![fig11a(), fig11b()],
         "12" => vec![fig12()],
+        "13" | "adaptive" => vec![fig13()],
         "tables" => vec![table1(), table2(), table3(), table6()],
         "ablation" => vec![ablation()],
         "all" => {
@@ -708,6 +772,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
                 fig11a(),
                 fig11b(),
                 fig12(),
+                fig13(),
             ];
             v.extend([table1(), table2(), table3(), table6()]);
             v

@@ -120,6 +120,16 @@ impl GpuSim {
         }
     }
 
+    /// Grow the per-model accounting vectors to `n` models (runtime
+    /// model activation on a live cluster engine — new slots start with
+    /// zero busy time). Shrinking is not supported: indices are stable.
+    pub fn grow_models(&mut self, n: usize) {
+        if self.busy_pct_us.len() < n {
+            self.busy_pct_us.resize(n, 0.0);
+            self.busy_us.resize(n, 0);
+        }
+    }
+
     /// Aggregate GPU% currently booked.
     pub fn used_pct(&self) -> u32 {
         self.running.iter().map(|r| r.pct).sum()

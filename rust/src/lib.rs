@@ -24,6 +24,7 @@ pub mod batching;
 pub mod bench;
 pub mod cluster;
 pub mod config;
+pub mod controlplane;
 pub mod coordinator;
 pub mod figures;
 pub mod gpu;

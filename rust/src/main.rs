@@ -3,14 +3,19 @@
 //! figure of the paper.
 //!
 //! Subcommands:
-//!   figures  --fig <2|3|4|...|12|all> [--out results]
+//!   figures  --fig <2|3|4|...|13|all> [--out results]
 //!   tables   --table <1|2|3|6|all>    [--out results]
 //!   simulate --config <scenario.json>   (scenarios with a "cluster"
-//!            block run on the placement/routing cluster engine)
+//!            block run on the placement/routing cluster engine; adding
+//!            an "adaptive" block runs the adaptive control plane)
 //!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
 //!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
 //!            [--horizon ms] [--seed N]   — Fig. 12 workload on an
 //!            arbitrary cluster
+//!   adaptive [--config <scenario.json>] [--horizon ms] [--seed N]
+//!            [--interval ms] [--alpha X] [--threshold X] [--rearm X]
+//!            [--cooldown N] [--migration-cost ms]   — adaptive control
+//!            plane vs static placement on the drifting-rate workload
 //!   optimize --model <name> [--slo ms]
 //!   profile  --model <name> [--batch N]
 //!   serve    [--seconds N] [--rate-scale X] [--policy dstack|fifo]
@@ -30,13 +35,14 @@ fn main() -> anyhow::Result<()> {
         }
         Some("simulate") => simulate(&args),
         Some("cluster") => cluster_cmd(&args),
+        Some("adaptive") => adaptive_cmd(&args),
         Some("optimize") => optimize(&args),
         Some("profile") => profile_cmd(&args),
         Some("serve") => serve(&args),
         Some("selfcheck") => selfcheck(),
         _ => {
             eprintln!(
-                "usage: dstack <figures|tables|simulate|cluster|optimize|profile|serve|selfcheck> [opts]"
+                "usage: dstack <figures|tables|simulate|cluster|adaptive|optimize|profile|serve|selfcheck> [opts]"
             );
             std::process::exit(2);
         }
@@ -73,9 +79,14 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let sc = dstack::config::Scenario::from_file(Path::new(path))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     if sc.cluster.is_some() {
-        let rep = dstack::config::run_cluster_scenario(&sc);
+        let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
+        let rep = if sc.adaptive.is_some() {
+            dstack::config::run_adaptive_scenario(&sc)
+        } else {
+            dstack::config::run_cluster_scenario(&sc)
+        };
         println!("scenario '{}' cluster policy={}", sc.name, rep.policy);
-        print_cluster_report(&sc.profiles().iter().map(|p| p.name.clone()).collect::<Vec<_>>(), &rep);
+        print_cluster_report(&names, &rep);
         return Ok(());
     }
     let rep = dstack::config::run_scenario(&sc);
@@ -155,6 +166,109 @@ fn print_cluster_report(names: &[String], rep: &dstack::cluster::ClusterReport) 
         rep.gpu_utilization.len(),
         rep.mean_utilization() * 100.0
     );
+    if let Some(a) = &rep.adaptive {
+        println!(
+            "control plane: {} replans, {} rebalances (+{} / -{} replicas, {:.0} ms migration) at {:?} ms",
+            a.replans,
+            a.rebalances,
+            a.replicas_added,
+            a.replicas_removed,
+            a.migration_ms,
+            a.rebalance_times_us.iter().map(|t| t / 1_000).collect::<Vec<_>>()
+        );
+        println!(
+            "p99 before/after first rebalance (ms): {:?} / {:?}",
+            a.p99_before_ms.iter().map(|v| v.round()).collect::<Vec<_>>(),
+            a.p99_after_ms.iter().map(|v| v.round()).collect::<Vec<_>>()
+        );
+    }
+}
+
+/// Overlay the `adaptive` tuning flags onto a base config: every flag
+/// the usage text documents works both with `--config` (overriding the
+/// scenario's block) and with the built-in drifting workload.
+fn adaptive_cfg_from_args(
+    args: &Args,
+    base: dstack::controlplane::AdaptiveCfg,
+) -> anyhow::Result<dstack::controlplane::AdaptiveCfg> {
+    let cfg = dstack::controlplane::AdaptiveCfg {
+        interval_ms: args.get_f64("interval", base.interval_ms),
+        alpha: args.get_f64("alpha", base.alpha),
+        drift_threshold: args.get_f64("threshold", base.drift_threshold),
+        rearm_threshold: args.get_f64("rearm", base.rearm_threshold),
+        cooldown_ticks: args.get_u64("cooldown", base.cooldown_ticks as u64) as u32,
+        migration_cost_ms: args.get_f64("migration-cost", base.migration_cost_ms),
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(cfg)
+}
+
+fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
+    use dstack::cluster::{serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy};
+    use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive, AdaptiveCfg};
+    if let Some(path) = args.get("config") {
+        let mut sc = dstack::config::Scenario::from_file(Path::new(path))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if sc.cluster.is_none() {
+            anyhow::bail!("adaptive needs a scenario with a 'cluster' block");
+        }
+        sc.horizon_ms = args.get_f64("horizon", sc.horizon_ms);
+        sc.seed = args.get_u64("seed", sc.seed);
+        sc.adaptive =
+            Some(adaptive_cfg_from_args(args, sc.adaptive.clone().unwrap_or_default())?);
+        let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
+        let rep = dstack::config::run_adaptive_scenario(&sc);
+        println!("scenario '{}' adaptive policy={}", sc.name, rep.policy);
+        print_cluster_report(&names, &rep);
+        return Ok(());
+    }
+    let horizon_ms = args.get_f64("horizon", 10_000.0);
+    let seed = args.get_u64("seed", 42);
+    let cfg = adaptive_cfg_from_args(args, AdaptiveCfg::default())?;
+
+    let (profiles, initial, peak, reqs) = drift_workload(horizon_ms, seed);
+    let gpus = drift_gpus();
+    let names: Vec<String> = profiles.iter().map(|p| p.name.clone()).collect();
+    println!(
+        "drifting-rate workload on 2xV100, horizon {horizon_ms:.0} ms, drift at {:.0} ms",
+        horizon_ms / 2.0
+    );
+
+    let stat = serve_cluster(
+        &profiles,
+        &peak,
+        &gpus,
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &reqs,
+        horizon_ms,
+        seed,
+    );
+    println!("\n== static placement (solved once, for per-model peak rates) ==");
+    print_cluster_report(&names, &stat);
+
+    let adap = run_adaptive(
+        &profiles,
+        &initial,
+        &gpus,
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        &reqs,
+        horizon_ms,
+        seed,
+    );
+    println!("\n== adaptive control plane ==");
+    print_cluster_report(&names, &adap);
+
+    let (s, a) = (stat.total_throughput(), adap.total_throughput());
+    println!(
+        "\nadaptive vs static: {a:.0} vs {s:.0} req/s served ({:.2}x)",
+        a / s.max(1e-9)
+    );
+    Ok(())
 }
 
 fn cluster_cmd(args: &Args) -> anyhow::Result<()> {

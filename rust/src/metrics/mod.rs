@@ -18,6 +18,10 @@ pub struct ModelMetrics {
     pub dropped: u64,
     /// End-to-end latencies (ms) of served requests.
     pub latencies_ms: Vec<f64>,
+    /// Completion virtual times (µs), parallel to `latencies_ms` — lets
+    /// the adaptive control plane split latency distributions around
+    /// rebalance events. Not serialized (see [`Self::to_json`]).
+    pub completions_us: Vec<Us>,
     /// Batches executed.
     pub batches: u64,
     /// Sum of batch sizes (for mean batch size).
@@ -158,6 +162,7 @@ mod tests {
             served_in_slo: in_slo,
             dropped,
             latencies_ms: vec![10.0; served as usize],
+            completions_us: vec![1_000; served as usize],
             batches: served / 4,
             batch_items: served,
         }

@@ -128,6 +128,14 @@ pub fn optimize(m: &ModelProfile, gpu: &GpuSpec, cfg: &OptConfig) -> Option<Oper
 
 /// The deployed operating point: the optimum with the §5.1 headroom
 /// added to GPU% (clamped at 100).
+///
+/// Use this for *single-model* deployment only. Multiplexed paths — the
+/// per-GPU entry tables ([`crate::sim::entries_at_optimum`]), the
+/// cluster packer ([`crate::cluster::placement::op_point`]) and the
+/// adaptive control plane's re-optimization on top of it — deploy at
+/// the bare knee instead: over-provisioned GPU% destroys the
+/// spatio-temporal packing (the Table 6 knees 20+30+40+50 admit a
+/// feasible session plan; +5% each does not).
 pub fn deploy_point(m: &ModelProfile, gpu: &GpuSpec, cfg: &OptConfig) -> Option<OperatingPoint> {
     optimize(m, gpu, cfg).map(|mut p| {
         p.gpu_pct = (p.gpu_pct + cfg.deploy_headroom_pct).min(100);

@@ -164,8 +164,10 @@ impl Dstack {
         placed
     }
 
-    /// Build the session's static EDF plan (§6.1.1).
-    fn build_plan(&mut self, t0: Us, models: &[ModelEntry], gpu: &GpuSim) {
+    /// Build the session's static EDF plan (§6.1.1). `active` masks out
+    /// control-plane tombstones: retired models must not hold planned
+    /// capacity reservations.
+    fn build_plan(&mut self, t0: Us, models: &[ModelEntry], active: &[bool], gpu: &GpuSim) {
         self.session_start = t0;
         let mut timeline = Self::running_timeline(t0, gpu);
         // Required instances: one per SLO window per model (§6.1's hard
@@ -179,6 +181,9 @@ impl Dstack {
         // left over after all required instances fit.
         let mut optional: Vec<(usize, Us, Us)> = Vec::new();
         for (j, e) in models.iter().enumerate() {
+            if !active.get(j).copied().unwrap_or(true) {
+                continue;
+            }
             let slo = ms_to_us(e.profile.slo_ms);
             let n = self.session_us.div_ceil(slo).max(1);
             for k in 0..n {
@@ -416,7 +421,8 @@ impl Policy for Dstack {
             self.initialized = true;
             let t0 = (v.now / self.session_us) * self.session_us;
             let models = v.models.to_vec();
-            self.build_plan(t0, &models, v.gpu);
+            let active = v.active.to_vec();
+            self.build_plan(t0, &models, &active, v.gpu);
         }
         let mut launches = self.due_planned(v);
         if launches.is_empty() {
@@ -475,7 +481,7 @@ mod tests {
         let es = entries(&["alexnet", "mobilenet", "resnet50", "vgg19"]);
         let gpu = GpuSim::new(crate::profile::V100.clone(), es.len(), false);
         let mut d = Dstack::from_entries(&es);
-        d.build_plan(0, &es, &gpu);
+        d.build_plan(0, &es, &vec![true; es.len()], &gpu);
         assert!(!d.planned.is_empty());
         let mut tl = CapTimeline::new();
         for p in &d.planned {
@@ -491,7 +497,7 @@ mod tests {
         let es = entries(&["alexnet", "resnet50", "vgg19"]);
         let gpu = GpuSim::new(crate::profile::V100.clone(), es.len(), false);
         let mut d = Dstack::from_entries(&es);
-        d.build_plan(0, &es, &gpu);
+        d.build_plan(0, &es, &vec![true; es.len()], &gpu);
         let session = d.session_us;
         for (j, e) in es.iter().enumerate() {
             let want = session.div_ceil(ms_to_us(e.profile.slo_ms));
@@ -505,7 +511,7 @@ mod tests {
         let es = entries(&["alexnet", "resnet50", "vgg19"]);
         let gpu = GpuSim::new(crate::profile::V100.clone(), es.len(), false);
         let mut d = Dstack::from_entries(&es);
-        d.build_plan(0, &es, &gpu);
+        d.build_plan(0, &es, &vec![true; es.len()], &gpu);
         // Alexnet (SLO 25 ms in a 100 ms session) runs 4 *required*
         // instances, one per 25 ms window (max spreading = release at
         // k·SLO). Optional half-offset instances may add more.

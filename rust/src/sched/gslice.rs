@@ -20,15 +20,33 @@ pub struct Gslice {
 impl Gslice {
     /// Compute static shares from the entries' knee GPU%.
     pub fn from_entries(models: &[ModelEntry]) -> Gslice {
-        let knees: Vec<u32> = models.iter().map(|m| m.profile.knee_pct).collect();
+        Gslice::from_entries_masked(models, &vec![true; models.len()])
+    }
+
+    /// Like [`Self::from_entries`], but control-plane tombstones
+    /// (`active[i] == false`) get a zero share and are excluded from the
+    /// normalization — retired models must not shrink live ones.
+    pub fn from_entries_masked(models: &[ModelEntry], active: &[bool]) -> Gslice {
+        let knees: Vec<u32> = models
+            .iter()
+            .zip(active)
+            .map(|(m, &a)| if a { m.profile.knee_pct } else { 0 })
+            .collect();
         let total: u32 = knees.iter().sum();
         let shares = if total <= 100 {
             knees
         } else {
-            // Scale down proportionally; floor, but at least 1%.
+            // Scale down proportionally; floor, but at least 1% for
+            // every live model.
             knees
                 .iter()
-                .map(|&k| ((k as f64 * 100.0 / total as f64).floor() as u32).max(1))
+                .map(|&k| {
+                    if k == 0 {
+                        0
+                    } else {
+                        ((k as f64 * 100.0 / total as f64).floor() as u32).max(1)
+                    }
+                })
                 .collect()
         };
         Gslice { shares }
@@ -50,6 +68,16 @@ impl Policy for Gslice {
                 continue;
             }
             let share = self.shares[i];
+            if share == 0 {
+                continue; // retired (tombstone) slice
+            }
+            if v.gpu.free_pct() < share {
+                // Statically unreachable (shares are normalized to ≤ 100
+                // with one in-flight batch per slice), but a control-plane
+                // reconfiguration can briefly leave an old batch running
+                // at a larger, pre-renormalization share.
+                continue;
+            }
             // GSLICE adaptive batching: fit within half the SLO.
             let budget = e.profile.slo_ms / 2.0;
             let b = choose_batch(
@@ -97,6 +125,19 @@ mod tests {
         assert!(total <= 100, "total {total}");
         // VGG-19 is pushed well below its 50% knee.
         assert!(g.shares[2] < 40, "vgg share {}", g.shares[2]);
+    }
+
+    #[test]
+    fn masked_shares_exclude_tombstones() {
+        // vgg19 (50) + resnet50 (40) + alexnet (30) = 120 > 100 → all
+        // scaled; masking vgg19 out (a control-plane tombstone) returns
+        // the live models to their full knees and zeroes the tombstone.
+        let es = entries(&["vgg19", "resnet50", "alexnet"]);
+        let all = Gslice::from_entries(&es);
+        assert!(all.shares.iter().sum::<u32>() <= 100);
+        assert!(all.shares.iter().all(|&s| s > 0));
+        let masked = Gslice::from_entries_masked(&es, &[false, true, true]);
+        assert_eq!(masked.shares, vec![0, 40, 30]);
     }
 
     #[test]

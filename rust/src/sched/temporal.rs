@@ -72,6 +72,18 @@ impl Policy for Temporal {
         if v.gpu.n_running() > 0 || v.now < self.ready_at {
             return Vec::new();
         }
+        // Control-plane tombstones own no GPU time: hand their slices to
+        // the next live model immediately instead of idling through them
+        // (no switch cost — nothing ran).
+        let mut hops = 0;
+        while hops < self.slices.len() && !v.is_active(self.current) {
+            self.current = (self.current + 1) % self.slices.len();
+            self.slice_end = v.now + self.slices[self.current];
+            hops += 1;
+        }
+        if hops == self.slices.len() {
+            return Vec::new(); // every model is retired
+        }
         let m = self.current;
         let entry = &v.models[m];
         let queued = v.queue_len(m);

@@ -44,11 +44,20 @@ pub struct SimView<'a> {
     pub queues: &'a [VecDeque<Request>],
     pub gpu: &'a GpuSim,
     pub models: &'a [ModelEntry],
+    /// Per-model liveness (control-plane reconfiguration): inactive
+    /// models are tombstones — they receive no traffic and must not be
+    /// given planned capacity or time slices.
+    pub active: &'a [bool],
 }
 
 impl<'a> SimView<'a> {
     pub fn queue_len(&self, model: usize) -> usize {
         self.queues[model].len()
+    }
+
+    /// Is `model` currently serving (not a reconfiguration tombstone)?
+    pub fn is_active(&self, model: usize) -> bool {
+        self.active[model]
     }
 
     /// Earliest-deadline request currently queued for `model` (queues
@@ -145,6 +154,11 @@ pub struct Sim {
     pub gpu: GpuSim,
     queues: Vec<VecDeque<Request>>,
     metrics: Vec<ModelMetrics>,
+    /// Per-model liveness under runtime reconfiguration: a deactivated
+    /// model keeps its slot (stable indices for metrics, queues and the
+    /// policy view) but receives no new traffic — see
+    /// [`Self::deactivate_model`].
+    active: Vec<bool>,
     completions: BinaryHeap<Completion>,
     timers: BTreeSet<Us>,
     seq: u64,
@@ -167,12 +181,58 @@ impl Sim {
             gpu,
             queues: vec![VecDeque::new(); n],
             metrics,
+            active: vec![true; n],
             completions: BinaryHeap::new(),
             timers: BTreeSet::new(),
             seq: 0,
             now: 0,
             last_completion: 0,
         }
+    }
+
+    /// Append a model at runtime (cluster rebalancing): fresh local slot
+    /// at the end of the table, empty queue, zeroed metrics. Returns the
+    /// new local index. To bring back a retired model, use
+    /// [`Self::reactivate_model`] on its tombstone instead — metrics
+    /// then keep accumulating for the same logical model.
+    pub fn add_model(&mut self, entry: ModelEntry) -> usize {
+        let i = self.models.len();
+        self.metrics
+            .push(ModelMetrics { name: entry.profile.name.clone(), ..Default::default() });
+        self.models.push(entry);
+        self.queues.push(VecDeque::new());
+        self.active.push(true);
+        self.gpu.grow_models(self.models.len());
+        i
+    }
+
+    /// Re-activate a retired model in place, with a (possibly updated)
+    /// operating point. The slot must be a tombstone left by
+    /// [`Self::deactivate_model`] for the same model.
+    pub fn reactivate_model(&mut self, local: usize, entry: ModelEntry) {
+        assert!(!self.active[local], "reactivating an active model {local}");
+        debug_assert_eq!(
+            self.models[local].profile.name, entry.profile.name,
+            "tombstone holds a different model"
+        );
+        self.models[local] = entry;
+        self.active[local] = true;
+    }
+
+    /// Retire a model at runtime: it keeps its slot (indices stay stable
+    /// for the policy and for in-flight completions, which still finish
+    /// and are counted here) but its queued requests are handed back to
+    /// the caller for re-routing. The caller must stop injecting for
+    /// this local index until a matching [`Self::reactivate_model`].
+    pub fn deactivate_model(&mut self, local: usize) -> Vec<Request> {
+        debug_assert!(self.active[local], "deactivating an inactive model {local}");
+        self.active[local] = false;
+        self.queues[local].drain(..).collect()
+    }
+
+    /// Is the local model currently accepting traffic?
+    pub fn is_active(&self, local: usize) -> bool {
+        self.active[local]
     }
 
     /// Current virtual time (µs).
@@ -230,6 +290,7 @@ impl Sim {
                     m.served_in_slo += 1;
                 }
                 m.latencies_ms.push((t - r.arrival) as f64 / 1_000.0);
+                m.completions_us.push(t);
             }
             policy.on_complete(c.model, t);
         }
@@ -255,6 +316,7 @@ impl Sim {
                     m.served_in_slo += 1;
                 }
                 m.latencies_ms.push((c.t - r.arrival) as f64 / 1_000.0);
+                m.completions_us.push(c.t);
             }
         }
         // Anything still queued at the horizon was never served.
@@ -318,6 +380,7 @@ impl Sim {
                 queues: &self.queues,
                 gpu: &self.gpu,
                 models: &self.models,
+                active: &self.active,
             };
             let launches = policy.dispatch(&view);
             if launches.is_empty() {
@@ -334,6 +397,7 @@ impl Sim {
             queues: &self.queues,
             gpu: &self.gpu,
             models: &self.models,
+            active: &self.active,
         };
         if let Some(w) = policy.next_wakeup(&view) {
             if w > self.now && w < horizon {
@@ -553,6 +617,43 @@ mod tests {
         }
         assert_eq!(a.busy_ms, b.busy_ms);
         assert_eq!(a.gpu_utilization, b.gpu_utilization);
+    }
+
+    #[test]
+    fn runtime_activate_deactivate_models() {
+        let (mut sim, reqs) = setup(&["alexnet"], 200.0, 1_000.0, 8);
+        let n = reqs.len().min(4);
+        for r in &reqs[..n] {
+            sim.inject(r.clone());
+        }
+        assert!(sim.is_active(0));
+        // Retirement hands the queued requests back for re-routing.
+        let drained = sim.deactivate_model(0);
+        assert_eq!(drained.len(), n);
+        assert!(!sim.is_active(0));
+        assert_eq!(sim.backlog_items(0), 0);
+        // Re-activating the same model reuses the tombstone slot…
+        let e = entries_at_optimum(&[by_name("alexnet").unwrap()]).remove(0);
+        sim.reactivate_model(0, e);
+        assert!(sim.is_active(0));
+        // …while a different model appends a fresh slot.
+        let e2 = entries_at_optimum(&[by_name("resnet50").unwrap()]).remove(0);
+        assert_eq!(sim.add_model(e2), 1);
+        assert_eq!(sim.models.len(), 2);
+        assert!(sim.is_active(1));
+    }
+
+    #[test]
+    fn completion_times_parallel_latencies() {
+        let (mut sim, reqs) = setup(&["alexnet", "mobilenet"], 200.0, 1_000.0, 6);
+        let rep = sim.run(&mut Greedy, &reqs);
+        for m in &rep.per_model {
+            assert_eq!(m.latencies_ms.len(), m.completions_us.len());
+            for (lat, &done) in m.latencies_ms.iter().zip(&m.completions_us) {
+                assert!(*lat >= 0.0);
+                assert!(done <= ms_to_us(1_000.0) + ms_to_us(200.0), "completion {done}");
+            }
+        }
     }
 
     #[test]

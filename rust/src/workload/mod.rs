@@ -66,7 +66,13 @@ impl Arrivals {
         segments.get(idx).map(|&(start, _)| start)
     }
 
-    fn rate_at(&self, t_ms: f64) -> f64 {
+    /// Offered rate (req/s) at virtual time `t_ms`: the constant rate
+    /// for Poisson/Uniform processes, the covering segment's rate for a
+    /// trace (0 before the first segment). The single source of truth
+    /// for "rate at time t" — scenario sizing (`Scenario::initial_rates`)
+    /// and the control plane's drift workload both resolve t = 0
+    /// through here.
+    pub fn rate_at(&self, t_ms: f64) -> f64 {
         match self {
             Arrivals::Poisson { rate } | Arrivals::Uniform { rate, .. } => *rate,
             // Public enum fields mean a `Trace` may be built unsorted;
@@ -177,6 +183,24 @@ pub fn fig12_rates() -> Vec<(&'static str, f64)> {
         ("alexnet", 150.0),
         ("resnet50", 900.0),
         ("vgg19", 450.0),
+    ]
+}
+
+/// The drifting-rate cluster workload behind the adaptive-vs-static
+/// comparison (`controlplane`, `figures::fig13`): ResNet-50 and VGG-19
+/// swap hot/cold roles at the horizon midpoint (piecewise-constant
+/// traces), AlexNet and Mobilenet offer steady background load. Peak
+/// rates are deliberately *not* simultaneous: a placement solved for the
+/// per-model peaks cannot admit all four models on the 2×V100 cluster
+/// this mix is sized for, while each phase individually fits.
+/// Returns (model name, (start_ms, rate) trace) per model.
+pub fn drift_rates(horizon_ms: f64) -> Vec<(&'static str, Vec<(f64, f64)>)> {
+    let mid = horizon_ms / 2.0;
+    vec![
+        ("resnet50", vec![(0.0, 900.0), (mid, 150.0)]),
+        ("vgg19", vec![(0.0, 100.0), (mid, 450.0)]),
+        ("alexnet", vec![(0.0, 400.0)]),
+        ("mobilenet", vec![(0.0, 300.0)]),
     ]
 }
 

@@ -118,6 +118,30 @@ fn cluster_reports_match_goldens() {
 }
 
 #[test]
+fn adaptive_cluster_report_matches_golden() {
+    // Drifting trace at a 2 s horizon (drift at 1 s): the run includes a
+    // detector firing and an applied migration, so estimator, rebalancer
+    // and the migration path are all pinned by the golden.
+    use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive, AdaptiveCfg};
+    let (profiles, initial, _peak, reqs) = drift_workload(HORIZON_MS, SEED);
+    let cfg = AdaptiveCfg { interval_ms: 250.0, ..Default::default() };
+    let rep = run_adaptive(
+        &profiles,
+        &initial,
+        &drift_gpus(),
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        &reqs,
+        HORIZON_MS,
+        SEED,
+    );
+    assert!(rep.adaptive.is_some(), "adaptive stats must be serialized");
+    check_golden("adaptive_drift", &rep.to_json());
+}
+
+#[test]
 fn legacy_fig12_cluster_matches_golden() {
     use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
     let (profiles, _rates, reqs) = fig12_workload(HORIZON_MS, SEED);
