@@ -74,4 +74,7 @@ fn main() {
         "adaptive must not violate more SLOs ({adaptive_viol:.0}/s) than static \
          ({static_viol:.0}/s)"
     );
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "adaptive").unwrap();
+    println!("machine-readable summary: {}", summary.display());
 }

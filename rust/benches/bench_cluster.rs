@@ -70,4 +70,7 @@ fn main() {
         "heterogeneous JSQ cluster ({hetero_jsq:.0} req/s) must reach the legacy \
          round-robin DstackAll throughput ({legacy_dstack:.0} req/s)"
     );
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "cluster").unwrap();
+    println!("machine-readable summary: {}", summary.display());
 }

@@ -18,4 +18,7 @@ fn main() {
     bench("figures/table6_optimizer", &cfg, || {
         assert!(!figures::table6().rows.is_empty());
     });
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "figures").unwrap();
+    println!("machine-readable summary: {}", summary.display());
 }

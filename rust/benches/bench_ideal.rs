@@ -18,4 +18,7 @@ fn main() {
         rep.utilization * 100.0,
         rep.throughput.iter().sum::<f64>()
     );
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "ideal").unwrap();
+    println!("machine-readable summary: {}", summary.display());
 }

@@ -1,0 +1,74 @@
+//! Long-tail lifecycle benchmarks plus the warmness acceptance
+//! comparison: on a 24-model Zipf(1.1) fleet whose weights oversubscribe
+//! the resident budget 3×, warmness-aware routing (cold-start penalty
+//! folded into the JSQ cost) must achieve at least the goodput of
+//! warm-oblivious JSQ at no worse an SLO miss rate — spilling a request
+//! to a cold replica pays a weight upload that dwarfs every SLO, and
+//! evicts a warm model to do it.
+
+use dstack::bench::{bench, Bench};
+use dstack::cluster::{GpuSched, PlacementPolicy, RoutingPolicy};
+use dstack::lifecycle::{longtail_gpus, longtail_workload, serve_longtail, LifecycleCfg};
+
+fn main() {
+    let horizon_ms = 4_000.0;
+    let seed = 77;
+    let (profiles, rates, reqs) = longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = longtail_gpus();
+    let cfg = Bench::quick();
+    let base = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
+
+    let mut run = |label: &str, warm: bool| {
+        let lcfg = LifecycleCfg { warm_routing: warm, ..base.clone() };
+        let mut goodput = 0.0;
+        let mut viol = 0.0;
+        let mut cold = 0;
+        let mut evictions = 0;
+        bench(label, &cfg, || {
+            let r = serve_longtail(
+                &profiles,
+                &rates,
+                &gpus,
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &lcfg,
+                &reqs,
+                horizon_ms,
+                seed,
+            );
+            let stats = r.lifecycle.as_ref().expect("lifecycle stats");
+            goodput = stats.goodput_rps;
+            cold = stats.cold_starts;
+            evictions = stats.evictions;
+            viol = r.violations_per_sec.iter().sum();
+        });
+        println!(
+            "    -> goodput {goodput:.0} req/s in SLO, {viol:.0} viol/s, \
+             {cold} cold starts, {evictions} evictions"
+        );
+        (goodput, viol)
+    };
+
+    let (oblivious_goodput, oblivious_viol) = run("lifecycle/warm_oblivious_jsq", false);
+    let (warm_goodput, warm_viol) = run("lifecycle/warmness_aware_jsq", true);
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "lifecycle").unwrap();
+    println!("machine-readable summary: {}", summary.display());
+
+    println!(
+        "acceptance: warmness-aware {warm_goodput:.0} req/s goodput vs warm-oblivious \
+         {oblivious_goodput:.0} req/s ({:.2}x), viol/s {warm_viol:.0} vs {oblivious_viol:.0}",
+        warm_goodput / oblivious_goodput.max(1e-9)
+    );
+    assert!(
+        warm_goodput >= oblivious_goodput,
+        "warmness-aware routing ({warm_goodput:.0} req/s goodput) must reach warm-oblivious \
+         JSQ ({oblivious_goodput:.0} req/s) on the long-tail fleet"
+    );
+    assert!(
+        warm_viol <= oblivious_viol + 1e-9,
+        "warmness-aware routing must not miss more SLOs ({warm_viol:.2}/s) than \
+         warm-oblivious JSQ ({oblivious_viol:.2}/s)"
+    );
+}

@@ -39,4 +39,7 @@ fn main() {
             println!("    -> thpt {:.0} req/s, viol {:.3}", out.0, out.1);
         }
     }
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "multiplex").unwrap();
+    println!("machine-readable summary: {}", summary.display());
 }

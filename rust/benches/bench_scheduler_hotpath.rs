@@ -49,4 +49,8 @@ fn main() {
             Sim::new(SimConfig { horizon_ms: 2_000.0, ..Default::default() }, entries.clone());
         black_box(sim.run(pol.as_mut(), &reqs));
     });
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "scheduler_hotpath")
+        .unwrap();
+    println!("machine-readable summary: {}", summary.display());
 }

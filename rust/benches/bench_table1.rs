@@ -20,4 +20,7 @@ fn main() {
         last.1,
         (1.0 - last.1 / last.0) * 100.0
     );
+
+    let summary = dstack::bench::write_summary(std::path::Path::new("."), "table1").unwrap();
+    println!("machine-readable summary: {}", summary.display());
 }

@@ -11,7 +11,7 @@
 //! With the paper's Fig. 4 parameters (`Kmax=50, t_p=40, t_np=10`,
 //! `N1 ∈ {20,40,60}`) this module reproduces interior knees at
 //! 10/20/30 SMs (paper reports 9/24/31 — same shape; the paper does not
-//! publish its `d_i/M` values, see EXPERIMENTS.md F4).
+//! publish its `d_i/M` values, see docs/EXPERIMENTS.md F4).
 
 /// Parameters of the analytical DNN (Table 4 notation).
 #[derive(Debug, Clone)]
@@ -82,7 +82,7 @@ impl AnalyticDnn {
     /// batch is processed by *one* kernel launch per repetition, so the
     /// launch overhead `t_np` is paid per launch, not per item; only the
     /// parallel work (via `N_i = p·b`, Eq. 1) scales with the batch.
-    /// See EXPERIMENTS.md §Notes.
+    /// See docs/EXPERIMENTS.md §Notes.
     pub fn e_t_units(&self, s: f64, b: f64) -> f64 {
         assert!(s >= 1.0, "at least one SM required");
         let mut parallel = 0.0;
@@ -211,7 +211,7 @@ mod tests {
     fn fig4_interior_knees() {
         // Paper Fig. 4b: N1 = 20/40/60 → knees at 9/24/31 SMs. With the
         // printed parameters and no memory term we land at 10/20/30 —
-        // the documented reproduction values (EXPERIMENTS.md F4).
+        // the documented reproduction values (docs/EXPERIMENTS.md F4).
         assert_eq!(AnalyticDnn::fig4(20.0).knee_sms(1.0, 80), 10);
         assert_eq!(AnalyticDnn::fig4(40.0).knee_sms(1.0, 80), 20);
         assert_eq!(AnalyticDnn::fig4(60.0).knee_sms(1.0, 80), 30);

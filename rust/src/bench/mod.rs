@@ -4,7 +4,10 @@
 //! binaries under `rust/benches/` use `harness = false` and call into
 //! this module, so `cargo bench` works end to end.
 
+use crate::util::json::Json;
 use crate::util::stats::{percentile_sorted, Online};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// One benchmark's results.
@@ -26,6 +29,49 @@ impl BenchResult {
     pub fn throughput_per_sec(&self) -> Option<f64> {
         self.units_per_iter.map(|u| u / (self.mean_ns * 1e-9))
     }
+
+    /// Machine-readable form for `BENCH_<name>.json` summaries.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("iters", Json::from(self.iters)),
+            ("mean_ns", Json::from(self.mean_ns)),
+            ("stddev_ns", Json::from(self.stddev_ns)),
+            ("p50_ns", Json::from(self.p50_ns)),
+            ("p99_ns", Json::from(self.p99_ns)),
+            ("min_ns", Json::from(self.min_ns)),
+            ("max_ns", Json::from(self.max_ns)),
+        ];
+        if let Some(tp) = self.throughput_per_sec() {
+            pairs.push(("throughput_per_sec", Json::from(tp)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Results recorded by [`bench`] in this process, drained by
+/// [`write_summary`]. Bench binaries run single-threaded, so ordering
+/// is the call order.
+static RESULTS: Mutex<Vec<BenchResult>> = Mutex::new(Vec::new());
+
+/// Record a result for the process-wide summary (called by [`bench`];
+/// call directly when using [`Bench::run`] without the helper).
+pub fn record(r: &BenchResult) {
+    RESULTS.lock().unwrap().push(r.clone());
+}
+
+/// Drain every result recorded so far into `dir/BENCH_<stem>.json` —
+/// the machine-readable perf trajectory CI uploads as a workflow
+/// artifact. Returns the written path.
+pub fn write_summary(dir: &Path, stem: &str) -> std::io::Result<PathBuf> {
+    let results: Vec<BenchResult> = std::mem::take(&mut *RESULTS.lock().unwrap());
+    let json = Json::obj(vec![
+        ("bench", Json::from(stem)),
+        ("results", Json::Arr(results.iter().map(|r| r.to_json()).collect())),
+    ]);
+    let path = dir.join(format!("BENCH_{stem}.json"));
+    crate::util::write_file(&path, &json.to_string_pretty())?;
+    Ok(path)
 }
 
 /// Harness configuration.
@@ -129,10 +175,12 @@ pub fn report(r: &BenchResult) {
     println!("{line}");
 }
 
-/// Run and immediately report (the common pattern in bench binaries).
+/// Run, report, and record for the summary file (the common pattern in
+/// bench binaries).
 pub fn bench<F: FnMut()>(name: &str, cfg: &Bench, f: F) -> BenchResult {
     let r = cfg.run(name, f);
     report(&r);
+    record(&r);
     r
 }
 
@@ -167,6 +215,35 @@ mod tests {
         assert!(r.p50_ns <= r.p99_ns + 1.0);
         assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns + 1.0);
         assert!(r.throughput_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn summary_file_roundtrips_via_json() {
+        let cfg = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_iters: 3,
+            max_iters: 100,
+            units_per_iter: Some(10.0),
+        };
+        let r = cfg.run("unit/spin", || {
+            black_box(7u64.wrapping_mul(13));
+        });
+        let j = r.to_json();
+        assert_eq!(j.req_str("name").unwrap(), "unit/spin");
+        assert!(j.get("throughput_per_sec").is_some());
+        record(&r);
+        let dir = std::env::temp_dir();
+        let path = write_summary(&dir, "dstack_unit_test").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req_str("bench").unwrap(), "dstack_unit_test");
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert!(
+            results.iter().any(|r| r.req_str("name").unwrap() == "unit/spin"),
+            "recorded result missing from summary"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -32,7 +32,9 @@
 pub mod placement;
 pub mod routing;
 
-pub use placement::{place, op_point, Placement, PlacementPolicy, Replica};
+pub use placement::{
+    op_point, place, plan_residency, Placement, PlacementPolicy, Replica, ResidencyPlan,
+};
 pub use routing::{Router, RoutingPolicy};
 
 use crate::gpu::ms_to_us;
@@ -161,6 +163,10 @@ pub struct ClusterReport {
     /// ([`crate::controlplane::run_adaptive`]); static reports serialize
     /// without the field, so their golden JSON is unchanged.
     pub adaptive: Option<crate::controlplane::AdaptiveStats>,
+    /// Memory-manager telemetry — `Some` only for lifecycle runs
+    /// ([`crate::lifecycle::run_lifecycle`]); serialized only when
+    /// present, so static and adaptive golden shapes are unchanged.
+    pub lifecycle: Option<crate::lifecycle::LifecycleStats>,
 }
 
 impl ClusterReport {
@@ -223,6 +229,9 @@ impl ClusterReport {
         if let Some(stats) = &self.adaptive {
             pairs.push(("adaptive", stats.to_json()));
         }
+        if let Some(stats) = &self.lifecycle {
+            pairs.push(("lifecycle", stats.to_json()));
+        }
         Json::obj(pairs)
     }
 }
@@ -266,6 +275,25 @@ pub fn entries_for_gpu(profiles: &[ModelProfile], gpu: &GpuSpec) -> Vec<ModelEnt
 struct Engine {
     sim: Sim,
     policy: Box<dyn Policy>,
+}
+
+/// One per-GPU engine whose model table is reconfigured at runtime
+/// (control-plane migrations, lifecycle loads/evictions). Shared by
+/// [`crate::controlplane`] and [`crate::lifecycle`] so masked policy
+/// rebuilds have a single definition.
+pub(crate) struct MaskedEngine {
+    pub(crate) sim: Sim,
+    pub(crate) policy: Box<dyn Policy>,
+}
+
+impl MaskedEngine {
+    /// Rebuild the per-GPU policy from the engine's current entry
+    /// table, masking tombstones so retired models hold no plan
+    /// capacity, slices or shares.
+    pub(crate) fn rebuild_policy(&mut self, sched: GpuSched) {
+        let mask = self.sim.active_mask();
+        self.policy = sched.build_masked(&self.sim.models, &mask);
+    }
 }
 
 /// Drive one engine per GPU over `requests` under `placement`, routing
@@ -441,6 +469,7 @@ pub fn run_placement(
         admitted: pl.admitted.clone(),
         per_gpu,
         adaptive: None,
+        lifecycle: None,
     }
 }
 

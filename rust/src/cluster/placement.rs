@@ -156,7 +156,10 @@ pub fn op_point(m: &ModelProfile, gpu: &GpuSpec) -> (u32, u32, f64) {
 /// offered rate, then name, then index — fully deterministic). Each
 /// model receives replicas — at most one per GPU — until the placed
 /// capacity covers [`CAPACITY_HEADROOM`] × its offered rate or no GPU
-/// has residual knee budget for it. A model with zero replicas is
+/// has residual knee budget *and* residual weight memory
+/// (`GpuSpec::mem_mib`) for it: a statically placed replica pins its
+/// weights for the whole run, so device memory is a hard second
+/// capacity dimension next to knee GPU%. A model with zero replicas is
 /// *rejected* (admission control); partially covered models record the
 /// uncovered remainder in `shed_rps`.
 pub fn place(
@@ -192,6 +195,11 @@ pub fn place(
     });
 
     let mut free = vec![100u32; n_gpus];
+    // Hard second capacity dimension: a replica holds its model's weight
+    // memory for the whole run on the static path, so a GPU can only
+    // host what fits `GpuSpec::mem_mib`. (Time-shared memory is the
+    // lifecycle subsystem's job — see [`plan_residency`].)
+    let mut free_mem: Vec<u64> = gpus.iter().map(|g| g.mem_mib).collect();
     let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); n_gpus];
     let mut replicas: Vec<Vec<Replica>> = vec![Vec::new(); n_models];
     let mut shed = vec![0.0f64; n_models];
@@ -200,8 +208,11 @@ pub fn place(
         let mut remaining = offered_rps[m] * CAPACITY_HEADROOM;
         loop {
             let pick = {
-                let fits = (0..n_gpus)
-                    .filter(|&g| free[g] >= ops[m][g].0 && !hosted[g].contains(&m));
+                let fits = (0..n_gpus).filter(|&g| {
+                    free[g] >= ops[m][g].0
+                        && free_mem[g] >= profiles[m].mem_mib
+                        && !hosted[g].contains(&m)
+                });
                 match policy {
                     PlacementPolicy::FirstFitDecreasing => fits.min(),
                     // Most residual budget; ties to the lowest index.
@@ -215,6 +226,7 @@ pub fn place(
             let local = hosted[g].len();
             hosted[g].push(m);
             free[g] -= pct;
+            free_mem[g] -= profiles[m].mem_mib;
             replicas[m].push(Replica { gpu: g, local, pct, batch, capacity_rps });
             remaining -= capacity_rps;
             if remaining <= 0.0 {
@@ -227,6 +239,152 @@ pub fn place(
     let admitted: Vec<bool> = replicas.iter().map(|r| !r.is_empty()).collect();
     let knee_load: Vec<u32> = free.iter().map(|f| 100 - f).collect();
     Placement { hosted, replicas, admitted, shed_rps: shed, knee_load }
+}
+
+/// A placement for model fleets whose working set exceeds GPU memory:
+/// the assignment says which GPUs *may* serve each model (replicas are
+/// engine slots, possibly tombstoned), while `resident0` says whose
+/// weights are actually preloaded at t = 0 within each GPU's memory
+/// budget. Everything else time-shares memory through the lifecycle
+/// [`crate::lifecycle::ModelStore`] (cold loads + eviction).
+#[derive(Debug, Clone)]
+pub struct ResidencyPlan {
+    /// The assignment (admission, replicas, engine layout). `knee_load`
+    /// here is the *sum of assigned knees* and may exceed 100 — assigned
+    /// models time-share the GPU temporally; the per-GPU scheduler never
+    /// runs more than 100% concurrently.
+    pub placement: Placement,
+    /// gpu → global models preloaded (warm) at t = 0, hottest first,
+    /// greedily filled within `mem_budget_mib`.
+    pub resident0: Vec<Vec<usize>>,
+    /// Per-GPU resident-memory budget the plan was solved for (MiB).
+    pub mem_budget_mib: Vec<u64>,
+}
+
+/// Assign a (possibly memory-oversubscribed) model fleet to `gpus` for
+/// lifecycle-managed serving.
+///
+/// Unlike [`place`], the packed quantity is *effective* knee load —
+/// knee GPU% × the fraction of time the model is actually busy
+/// (`offered × `[`CAPACITY_HEADROOM`]` / capacity`, capped at 1) — since
+/// a long-tail model only holds its knee while a batch runs. Models are
+/// assigned hottest-first; each receives up to
+/// `min_replicas.min(feasible GPUs)` replicas (availability / routing
+/// choice — best-effort: later models get fewer when earlier ones have
+/// exhausted the effective knee budget) and more while placed capacity
+/// still trails headroomed demand. A GPU is feasible for a model only
+/// if the model's weights
+/// fit its memory budget at all (otherwise the replica could never be
+/// made resident). Models with zero feasible replicas are rejected.
+///
+/// The initial resident set greedily preloads each GPU's assigned
+/// models, hottest first, until the memory budget is exhausted — the
+/// long tail starts cold and is faulted in on demand.
+pub fn plan_residency(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    policy: PlacementPolicy,
+    mem_budget_mib: &[u64],
+    min_replicas: usize,
+) -> ResidencyPlan {
+    assert_eq!(profiles.len(), offered_rps.len(), "one offered rate per model required");
+    assert_eq!(gpus.len(), mem_budget_mib.len(), "one memory budget per GPU required");
+    assert!(min_replicas >= 1, "min_replicas must be >= 1");
+    let n_models = profiles.len();
+    let n_gpus = gpus.len();
+    let ops: Vec<Vec<(u32, u32, f64)>> = profiles
+        .iter()
+        .map(|m| gpus.iter().map(|g| op_point(m, g)).collect())
+        .collect();
+    // Effective knee load of one replica of model m on gpu g.
+    let eff = |m: usize, g: usize| -> f64 {
+        let (pct, _, cap) = ops[m][g];
+        let busy = (offered_rps[m] * CAPACITY_HEADROOM / cap.max(1e-9)).min(1.0);
+        pct as f64 * busy
+    };
+
+    // Hottest first (ties by name, then index — deterministic). One
+    // comparator for both the assignment order and the resident0
+    // preload order, so the two can never desynchronize.
+    let hotter = |a: &usize, b: &usize| {
+        offered_rps[*b]
+            .total_cmp(&offered_rps[*a])
+            .then(profiles[*a].name.cmp(&profiles[*b].name))
+            .then(a.cmp(b))
+    };
+    let mut order: Vec<usize> = (0..n_models).collect();
+    order.sort_by(hotter);
+
+    let mut free_eff = vec![100.0f64; n_gpus];
+    let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); n_gpus];
+    let mut replicas: Vec<Vec<Replica>> = vec![Vec::new(); n_models];
+    let mut shed = vec![0.0f64; n_models];
+
+    for &m in &order {
+        let feasible_gpus =
+            (0..n_gpus).filter(|&g| profiles[m].mem_mib <= mem_budget_mib[g]).count();
+        let want = min_replicas.min(feasible_gpus);
+        let mut remaining = offered_rps[m] * CAPACITY_HEADROOM;
+        let mut placed = 0usize;
+        loop {
+            if placed >= want && remaining <= 0.0 {
+                break;
+            }
+            let pick = {
+                let fits = (0..n_gpus).filter(|&g| {
+                    profiles[m].mem_mib <= mem_budget_mib[g]
+                        && free_eff[g] >= eff(m, g)
+                        && !hosted[g].contains(&m)
+                });
+                match policy {
+                    PlacementPolicy::FirstFitDecreasing => fits.min(),
+                    PlacementPolicy::LoadBalance => fits.max_by(|&a, &b| {
+                        free_eff[a]
+                            .total_cmp(&free_eff[b])
+                            .then(b.cmp(&a)) // ties to the lowest index
+                    }),
+                }
+            };
+            let Some(g) = pick else { break };
+            let (pct, batch, capacity_rps) = ops[m][g];
+            let local = hosted[g].len();
+            hosted[g].push(m);
+            free_eff[g] -= eff(m, g);
+            replicas[m].push(Replica { gpu: g, local, pct, batch, capacity_rps });
+            remaining -= capacity_rps;
+            placed += 1;
+        }
+        shed[m] = remaining.max(0.0);
+    }
+
+    // Σ assigned knee% per GPU (> 100 is fine: temporal sharing).
+    let mut knee_load = vec![0u32; n_gpus];
+    for (g, models) in hosted.iter().enumerate() {
+        for &m in models {
+            knee_load[g] += ops[m][g].0;
+        }
+    }
+    // Preload hottest-first within each GPU's budget.
+    let mut resident0: Vec<Vec<usize>> = vec![Vec::new(); n_gpus];
+    for g in 0..n_gpus {
+        let mut by_heat = hosted[g].clone();
+        by_heat.sort_by(hotter);
+        let mut used = 0u64;
+        for m in by_heat {
+            if used + profiles[m].mem_mib <= mem_budget_mib[g] {
+                used += profiles[m].mem_mib;
+                resident0[g].push(m);
+            }
+        }
+    }
+
+    let admitted: Vec<bool> = replicas.iter().map(|r| !r.is_empty()).collect();
+    ResidencyPlan {
+        placement: Placement { hosted, replicas, admitted, shed_rps: shed, knee_load },
+        resident0,
+        mem_budget_mib: mem_budget_mib.to_vec(),
+    }
 }
 
 #[cfg(test)]
@@ -313,6 +471,82 @@ mod tests {
         let (pct_t, _, cap_t) = op_point(&m, &T4);
         assert!(pct_t > pct_v, "T4 knee% {pct_t} vs V100 {pct_v}");
         assert!(cap_v > cap_t, "V100 capacity {cap_v} vs T4 {cap_t}");
+    }
+
+    #[test]
+    fn memory_is_a_hard_placement_dimension() {
+        // Plenty of knee budget, almost no memory: only what fits the
+        // small device's RAM may be placed there.
+        let small = GpuSpec { mem_mib: 1_500, ..V100 };
+        let ms = models(&["mobilenet", "vgg19"]); // 600 + 2200 MiB
+        let rates = [50.0, 50.0];
+        let p = place(&ms, &rates, &[small], PlacementPolicy::FirstFitDecreasing);
+        assert!(p.admitted[0], "mobilenet (600 MiB) fits");
+        assert!(!p.admitted[1], "vgg19 (2200 MiB) cannot fit 1.5 GiB");
+        // With enough memory the same knee budget admits both.
+        let p2 = place(&ms, &rates, &[V100.clone()], PlacementPolicy::FirstFitDecreasing);
+        assert!(p2.admitted.iter().all(|&a| a));
+    }
+
+    #[test]
+    fn residency_plan_timeshares_memory() {
+        // 6 models × ~1-2 GiB against a 3 GiB budget per GPU: all are
+        // admitted (assigned), but only a prefix is resident at t = 0.
+        let ms = models(&["mobilenet", "alexnet", "resnet50", "vgg19", "inception", "resnet18"]);
+        let rates = [200.0, 100.0, 50.0, 25.0, 12.0, 6.0];
+        let gpus = [V100.clone(), V100.clone()];
+        let budgets = [3_000u64, 3_000];
+        let plan = plan_residency(
+            &ms,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            &budgets,
+            2,
+        );
+        assert!(plan.placement.admitted.iter().all(|&a| a), "everything is assignable");
+        for (m, reps) in plan.placement.replicas.iter().enumerate() {
+            assert!(reps.len() >= 2, "model {m} should get 2 replicas for routing choice");
+        }
+        // The resident sets respect the budget and cover < all models.
+        let total_mem: u64 = ms.iter().map(|p| p.mem_mib).sum();
+        assert!(total_mem * 2 > budgets[0] + budgets[1], "working set oversubscribes memory");
+        for g in 0..2 {
+            let used: u64 =
+                plan.resident0[g].iter().map(|&m| ms[m].mem_mib).sum();
+            assert!(used <= budgets[g], "gpu {g} preloads {used} > {}", budgets[g]);
+            assert!(!plan.resident0[g].is_empty(), "gpu {g} starts fully cold");
+            assert!(
+                plan.resident0[g].len() < plan.placement.hosted[g].len(),
+                "gpu {g}: everything resident — not a time-sharing regime"
+            );
+            // Preloads are a subset of the assignment.
+            for m in &plan.resident0[g] {
+                assert!(plan.placement.hosted[g].contains(m));
+            }
+        }
+        // Hottest model is warm somewhere at t = 0.
+        assert!(plan.resident0.iter().any(|r| r.contains(&0)), "hottest model starts cold");
+    }
+
+    #[test]
+    fn residency_plan_rejects_memory_infeasible_models() {
+        // A model bigger than every GPU's budget can never become
+        // resident — it must be rejected, not assigned.
+        let ms = models(&["mobilenet", "vgg19"]);
+        let rates = [50.0, 50.0];
+        let gpus = [V100.clone()];
+        let plan = plan_residency(
+            &ms,
+            &rates,
+            &gpus,
+            PlacementPolicy::FirstFitDecreasing,
+            &[1_000],
+            1,
+        );
+        assert!(plan.placement.admitted[0]);
+        assert!(!plan.placement.admitted[1], "vgg19 can never fit a 1 GiB budget");
+        assert!(plan.placement.replicas[1].is_empty());
     }
 
     #[test]

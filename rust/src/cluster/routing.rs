@@ -12,6 +12,13 @@
 //! a model's replica set mid-run — round-robin cursors simply wrap
 //! modulo the new length, and the load-aware policies sample whatever
 //! backlogs the live set exposes.
+//!
+//! The `backlog` closure is a *cost*, not literally a queue length:
+//! the lifecycle driver ([`crate::lifecycle`]) implements
+//! warmness-aware routing by folding a cold-start penalty (the items a
+//! replica could have served during its remaining model-load time) into
+//! the closure, which makes JSQ/P2C tie-break toward warm replicas with
+//! no router changes.
 
 use super::placement::Replica;
 use crate::util::rng::Pcg32;

@@ -1,7 +1,7 @@
 //! Scenario configuration: JSON files describing a serving experiment
 //! (models, arrival rates, scheduler, GPU, horizon), loadable from the
 //! `dstack` CLI. This is the "real config system" of the framework —
-//! every experiment in EXPERIMENTS.md can be expressed as a scenario.
+//! every experiment in docs/EXPERIMENTS.md can be expressed as a scenario.
 
 use crate::profile::{self, GpuSpec, ModelProfile};
 use crate::util::json::Json;
@@ -85,6 +85,23 @@ pub struct ModelSpec {
     pub slo_ms: Option<f64>,
 }
 
+/// Lifecycle block of a scenario: a long-tail Zipf fleet served under
+/// the memory manager (requires `cluster`). The scenario's `models`
+/// list becomes the *base* zoo, cycled out to `n_models` distinct
+/// fleet entries; per-model `rate`s are ignored on this path (rates
+/// come from the Zipf split of `total_rps`).
+#[derive(Debug, Clone)]
+pub struct LifecycleScenario {
+    /// Fleet size (≫ what fits resident memory, typically).
+    pub n_models: usize,
+    /// Zipf popularity exponent (0 = uniform).
+    pub alpha: f64,
+    /// Aggregate offered rate across the fleet (req/s).
+    pub total_rps: f64,
+    /// Memory-manager knobs — see [`crate::lifecycle::LifecycleCfg`].
+    pub cfg: crate::lifecycle::LifecycleCfg,
+}
+
 /// A full serving scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -102,6 +119,9 @@ pub struct Scenario {
     /// Optional adaptive control-plane block (requires `cluster`) —
     /// the scenario runs through [`crate::controlplane::run_adaptive`].
     pub adaptive: Option<crate::controlplane::AdaptiveCfg>,
+    /// Optional lifecycle block (requires `cluster`) — the scenario
+    /// runs through [`crate::lifecycle::run_lifecycle`].
+    pub lifecycle: Option<LifecycleScenario>,
 }
 
 impl Scenario {
@@ -190,6 +210,80 @@ impl Scenario {
             }
             None => None,
         };
+        let lifecycle = match j.get("lifecycle") {
+            Some(lj) => {
+                if cluster.is_none() {
+                    return Err("'lifecycle' requires a 'cluster' block".into());
+                }
+                let d = crate::lifecycle::LifecycleCfg::default();
+                let pinned = match lj.get("pinned") {
+                    Some(Json::Arr(names)) => {
+                        let mut out = Vec::new();
+                        for n in names {
+                            out.push(
+                                n.as_str()
+                                    .ok_or("'lifecycle.pinned' entries must be strings")?
+                                    .to_string(),
+                            );
+                        }
+                        out
+                    }
+                    _ => Vec::new(),
+                };
+                let cfg = crate::lifecycle::LifecycleCfg {
+                    eviction: crate::lifecycle::EvictionPolicy::parse(
+                        lj.opt_str("eviction", d.eviction.name()),
+                    )?,
+                    mem_budget_mib: lj.opt_u64("mem_budget_mib", d.mem_budget_mib),
+                    headroom_mib: lj.opt_u64("headroom_mib", d.headroom_mib),
+                    idle_timeout_ms: lj.opt_f64("idle_timeout_ms", d.idle_timeout_ms),
+                    warm_routing: lj.opt_bool("warm_routing", d.warm_routing),
+                    min_replicas: lj.opt_u64("min_replicas", d.min_replicas as u64) as usize,
+                    pinned,
+                    reconfig: d.reconfig,
+                };
+                cfg.validate()?;
+                // validate() cannot see the devices; check here that the
+                // headroom leaves resident memory on every cluster GPU.
+                let cl = cluster.as_ref().expect("checked above");
+                if let Some(g) = cl.gpus.iter().find(|g| cfg.budget_for(g) == 0) {
+                    return Err(format!(
+                        "lifecycle.headroom_mib leaves no resident memory on {} \
+                         ({} MiB device)",
+                        g.name, g.mem_mib
+                    ));
+                }
+                let alpha = lj.opt_f64("alpha", 1.1);
+                if !alpha.is_finite() || alpha < 0.0 {
+                    return Err("lifecycle.alpha must be finite and >= 0".into());
+                }
+                let n_models = lj.opt_u64("n_models", 24) as usize;
+                if n_models == 0 {
+                    return Err("lifecycle.n_models must be >= 1".into());
+                }
+                let total_rps = lj.opt_f64("total_rps", 600.0);
+                if !total_rps.is_finite() || total_rps < 0.0 {
+                    return Err("lifecycle.total_rps must be finite and >= 0".into());
+                }
+                // Pinning refers to generated *fleet* names
+                // (`mobilenet_00`, …), not base-zoo names — a typo here
+                // would otherwise silently pin nothing.
+                for p in &cfg.pinned {
+                    let known = (0..n_models).any(|i| {
+                        crate::lifecycle::fleet_name(&models[i % models.len()].name, i) == *p
+                    });
+                    if !known {
+                        return Err(format!(
+                            "lifecycle.pinned entry '{p}' names no fleet entry (expected \
+                             e.g. '{}')",
+                            crate::lifecycle::fleet_name(&models[0].name, 0)
+                        ));
+                    }
+                }
+                Some(LifecycleScenario { n_models, alpha, total_rps, cfg })
+            }
+            None => None,
+        };
         Ok(Scenario {
             name: j.opt_str("name", "scenario").to_string(),
             gpu,
@@ -201,6 +295,7 @@ impl Scenario {
             poisson: j.opt_bool("poisson", true),
             cluster,
             adaptive,
+            lifecycle,
         })
     }
 
@@ -270,6 +365,26 @@ impl Scenario {
                     ("rearm_threshold", Json::from(a.rearm_threshold)),
                     ("cooldown_ticks", Json::from(a.cooldown_ticks)),
                     ("migration_cost_ms", Json::from(a.migration_cost_ms)),
+                ]),
+            ));
+        }
+        if let Some(l) = &self.lifecycle {
+            pairs.push((
+                "lifecycle",
+                Json::obj(vec![
+                    ("n_models", Json::from(l.n_models)),
+                    ("alpha", Json::from(l.alpha)),
+                    ("total_rps", Json::from(l.total_rps)),
+                    ("eviction", Json::from(l.cfg.eviction.name())),
+                    ("mem_budget_mib", Json::from(l.cfg.mem_budget_mib)),
+                    ("headroom_mib", Json::from(l.cfg.headroom_mib)),
+                    ("idle_timeout_ms", Json::from(l.cfg.idle_timeout_ms)),
+                    ("warm_routing", Json::from(l.cfg.warm_routing)),
+                    ("min_replicas", Json::from(l.cfg.min_replicas)),
+                    (
+                        "pinned",
+                        Json::Arr(l.cfg.pinned.iter().map(|n| Json::from(n.as_str())).collect()),
+                    ),
                 ]),
             ));
         }
@@ -453,6 +568,38 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
     )
 }
 
+/// Run a scenario's lifecycle block: build the long-tail Zipf fleet by
+/// cycling the scenario's `models` as base profiles, assign it with
+/// [`crate::cluster::plan_residency`] against the configured memory
+/// budgets, and serve it through the memory manager. Panics without
+/// `cluster`/`lifecycle` blocks — callers branch on the options.
+pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
+    let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
+    let lc = sc.lifecycle.as_ref().expect("scenario has no lifecycle block");
+    let base = sc.profiles();
+    let (profiles, rates, reqs) = crate::lifecycle::longtail_workload_from(
+        &base,
+        lc.n_models,
+        lc.alpha,
+        lc.total_rps,
+        sc.horizon_ms,
+        sc.seed,
+    );
+    let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
+    crate::lifecycle::serve_longtail(
+        &profiles,
+        &rates,
+        &gpus,
+        cl.placement,
+        cl.routing,
+        sc.gpu_sched(),
+        &lc.cfg,
+        &reqs,
+        sc.horizon_ms,
+        sc.seed,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -603,6 +750,72 @@ mod tests {
             "models": [{"name": "alexnet", "rate": 1}]
         }"#;
         assert!(Scenario::from_json(bad_band).is_err());
+    }
+
+    const LIFECYCLE_EXAMPLE: &str = r#"{
+        "name": "longtail_mini",
+        "policy": "dstack",
+        "horizon_ms": 800,
+        "seed": 9,
+        "cluster": {"gpus": ["V100", "V100"], "placement": "lb", "routing": "jsq"},
+        "lifecycle": {"n_models": 8, "alpha": 1.1, "total_rps": 250,
+                      "eviction": "lru", "mem_budget_mib": 3072,
+                      "idle_timeout_ms": 1000, "warm_routing": true,
+                      "min_replicas": 2, "pinned": ["mobilenet_00"]},
+        "models": [
+            {"name": "mobilenet"},
+            {"name": "alexnet"},
+            {"name": "resnet50"}
+        ]
+    }"#;
+
+    #[test]
+    fn lifecycle_block_parses_roundtrips_and_runs() {
+        let sc = Scenario::from_json(LIFECYCLE_EXAMPLE).unwrap();
+        let l = sc.lifecycle.as_ref().expect("lifecycle block parsed");
+        assert_eq!(l.n_models, 8);
+        assert_eq!(l.cfg.mem_budget_mib, 3072);
+        assert_eq!(l.cfg.eviction, crate::lifecycle::EvictionPolicy::Lru);
+        assert_eq!(l.cfg.pinned, vec!["mobilenet_00".to_string()]);
+        let text = sc.to_json().to_string_pretty();
+        let sc2 = Scenario::from_json(&text).unwrap();
+        let l2 = sc2.lifecycle.as_ref().unwrap();
+        assert_eq!(l.n_models, l2.n_models);
+        assert_eq!(l.alpha, l2.alpha);
+        assert_eq!(l.total_rps, l2.total_rps);
+        assert_eq!(l.cfg.warm_routing, l2.cfg.warm_routing);
+        assert_eq!(l.cfg.min_replicas, l2.cfg.min_replicas);
+        assert_eq!(l.cfg.pinned, l2.cfg.pinned);
+        let rep = run_lifecycle_scenario(&sc);
+        assert!(rep.lifecycle.is_some(), "lifecycle stats attached");
+        assert_eq!(rep.throughput.len(), 8, "fleet size, not base-list size");
+        assert!(rep.total_throughput() > 0.0);
+    }
+
+    #[test]
+    fn lifecycle_requires_cluster_and_valid_fields() {
+        let no_cluster = r#"{"lifecycle": {}, "models": [{"name": "alexnet", "rate": 1}]}"#;
+        assert!(Scenario::from_json(no_cluster).is_err());
+        for bad in [
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"eviction": "magic"},
+                "models": [{"name": "alexnet"}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"n_models": 0},
+                "models": [{"name": "alexnet"}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"alpha": -1},
+                "models": [{"name": "alexnet"}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"alpha": 1e999},
+                "models": [{"name": "alexnet"}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"total_rps": 1e999},
+                "models": [{"name": "alexnet"}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"min_replicas": 0},
+                "models": [{"name": "alexnet"}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"headroom_mib": 20000},
+                "models": [{"name": "alexnet"}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]}, "lifecycle": {"pinned": ["mobilenet"]},
+                "models": [{"name": "alexnet"}]}"#,
+        ] {
+            assert!(Scenario::from_json(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -53,13 +53,13 @@
 //! (`figures::fig13`, `dstack adaptive`).
 
 use crate::cluster::{
-    place, ClusterReport, GpuModelShare, GpuReport, GpuSched, Placement, PlacementPolicy,
-    Replica, Router, RoutingPolicy,
+    place, ClusterReport, GpuModelShare, GpuReport, GpuSched, MaskedEngine as AdEngine,
+    Placement, PlacementPolicy, Replica, Router, RoutingPolicy,
 };
 use crate::gpu::{ms_to_us, Us};
 use crate::metrics::RunReport;
 use crate::profile::{GpuSpec, ModelProfile};
-use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
+use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::workload::Request;
@@ -346,22 +346,6 @@ struct LiveRep {
     capacity_rps: f64,
     /// Engine-local model index once activated.
     local: Option<usize>,
-}
-
-struct AdEngine {
-    sim: Sim,
-    policy: Box<dyn Policy>,
-}
-
-impl AdEngine {
-    /// Rebuild the per-GPU policy from the engine's current entry table,
-    /// masking tombstones so retired models hold no plan capacity,
-    /// slices or shares.
-    fn rebuild_policy(&mut self, sched: GpuSched) {
-        let mask: Vec<bool> =
-            (0..self.sim.models.len()).map(|i| self.sim.is_active(i)).collect();
-        self.policy = sched.build_masked(&self.sim.models, &mask);
-    }
 }
 
 /// Activate `rep` (a replica of global `model`) on its GPU's engine,
@@ -787,6 +771,7 @@ pub fn run_adaptive(
         admitted,
         per_gpu,
         adaptive: Some(stats),
+        lifecycle: None,
     }
 }
 

@@ -735,6 +735,69 @@ pub fn fig13() -> FigData {
     out
 }
 
+/// Fig. 14 (beyond the paper): long-tail serving under the lifecycle
+/// memory manager — cold-start p99 and goodput vs eviction policy and
+/// memory headroom. A 24-model Zipf(1.1) fleet (~26 GiB of weights)
+/// serves on 2×V100 whose resident budget is swept from thrash-prone
+/// to roomy; each eviction policy replays the identical request stream.
+pub fn fig14() -> FigData {
+    use crate::cluster::{GpuSched, PlacementPolicy, RoutingPolicy};
+    use crate::lifecycle::{
+        longtail_gpus, longtail_workload, serve_longtail, EvictionPolicy, LifecycleCfg,
+    };
+    let mut out = FigData::new(
+        "fig14",
+        "long-tail lifecycle: goodput + cold-start p99 vs eviction policy x memory budget",
+        &[
+            "eviction",
+            "budget_mib",
+            "goodput_rps",
+            "total_rps",
+            "cold_p99_ms",
+            "cold_starts",
+            "evictions",
+            "viol_per_s",
+        ],
+    );
+    let horizon_ms = 3_000.0;
+    let seed = 77;
+    let (profiles, rates, reqs) = longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = longtail_gpus();
+    for &policy in EvictionPolicy::all() {
+        for budget in [3_072u64, 4_096, 6_144] {
+            let cfg = LifecycleCfg {
+                eviction: policy,
+                mem_budget_mib: budget,
+                ..Default::default()
+            };
+            let rep = serve_longtail(
+                &profiles,
+                &rates,
+                &gpus,
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &cfg,
+                &reqs,
+                horizon_ms,
+                seed,
+            );
+            let stats = rep.lifecycle.as_ref().expect("lifecycle stats");
+            out.push(vec![
+                policy.name().to_string(),
+                budget.to_string(),
+                f(stats.goodput_rps),
+                f(rep.total_throughput()),
+                f(stats.cold_start_p99_ms),
+                stats.cold_starts.to_string(),
+                stats.evictions.to_string(),
+                f(rep.violations_per_sec.iter().sum::<f64>()),
+            ]);
+        }
+    }
+    out
+}
+
 /// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
 pub fn generate(which: &str) -> Vec<FigData> {
     match which {
@@ -754,6 +817,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
         "11" => vec![fig11a(), fig11b()],
         "12" => vec![fig12()],
         "13" | "adaptive" => vec![fig13()],
+        "14" | "lifecycle" => vec![fig14()],
         "tables" => vec![table1(), table2(), table3(), table6()],
         "ablation" => vec![ablation()],
         "all" => {
@@ -773,6 +837,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
                 fig11b(),
                 fig12(),
                 fig13(),
+                fig14(),
             ];
             v.extend([table1(), table2(), table3(), table6()]);
             v

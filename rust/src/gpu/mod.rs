@@ -42,6 +42,22 @@ impl Default for ReconfigModel {
     }
 }
 
+impl ReconfigModel {
+    /// Effective cold-start load (ms) for a model joining a device that
+    /// already hosts `n_resident` other models: with parameter sharing
+    /// (cudaIPC, §3.2) the standby process re-reads only
+    /// `shared_load_fraction` of the weights. Shared by
+    /// [`GpuSim::configure`] and the lifecycle memory manager
+    /// ([`crate::lifecycle`]) so both charge cold starts identically.
+    pub fn cold_load_ms(&self, load_ms: f64, n_resident: usize) -> f64 {
+        if self.param_sharing && n_resident > 0 {
+            load_ms * self.shared_load_fraction
+        } else {
+            load_ms
+        }
+    }
+}
+
 /// One resident instance of a model on the simulated GPU.
 #[derive(Debug, Clone)]
 pub struct Resident {
@@ -234,13 +250,9 @@ impl GpuSim {
                 now + self.reconfig.takeover_gap_us
             }
             None => {
-                let frac = if self.reconfig.param_sharing && !self.residents.is_empty() {
-                    self.reconfig.shared_load_fraction
-                } else {
-                    1.0
-                };
+                let eff_ms = self.reconfig.cold_load_ms(load_ms, self.residents.len());
                 self.residents.push(Resident { model, pct, mem_mib });
-                now + ms_to_us(load_ms * frac)
+                now + ms_to_us(eff_ms)
             }
         }
     }

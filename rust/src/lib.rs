@@ -28,6 +28,7 @@ pub mod controlplane;
 pub mod coordinator;
 pub mod figures;
 pub mod gpu;
+pub mod lifecycle;
 pub mod metrics;
 pub mod optimizer;
 pub mod profile;

@@ -1,0 +1,847 @@
+//! Model lifecycle subsystem: per-GPU memory management, cold starts,
+//! scale-to-zero, and long-tail (Zipf) model fleets.
+//!
+//! The paper multiplexes a handful of *resident* DNNs; the systems it
+//! benchmarks against (Nexus, Clipper) serve fleets where the working
+//! set exceeds GPU memory. In that regime throughput is decided by
+//! *what is resident*, not just how residents are scheduled. This
+//! module closes that gap with four cooperating mechanisms:
+//!
+//! 1. **[`ModelStore`]** (`store`) — per-GPU resident-set tracker
+//!    against a device-memory budget, with pluggable eviction
+//!    (LRU / LFU / cost-aware "load-ms-per-req saved") and pinning.
+//!    Cold loads reserve memory for the duration of the weight upload
+//!    and are charged through the §3.2 [`crate::gpu::ReconfigModel`]:
+//!    parameter sharing (cudaIPC) cuts the transfer to
+//!    `shared_load_fraction` whenever another model is already resident.
+//! 2. **Scale-to-zero / warm-up** — idle residents release their memory
+//!    *and* their knee budget through the existing [`crate::sim::Sim`]
+//!    tombstone surgery (`deactivate_model`); a later request faults the
+//!    model back in (`reactivate_model`) after the load delay, the same
+//!    machinery the adaptive control plane uses for migrations.
+//! 3. **Memory-feasible assignment** —
+//!    [`crate::cluster::placement::plan_residency`] assigns models to
+//!    GPUs by *effective* knee load (knee% × busy fraction, since a
+//!    tail model only holds its knee while a batch runs), bounds the
+//!    t = 0 resident set by each GPU's memory budget, and rejects
+//!    models whose weights can never fit — so no request is ever
+//!    admitted for a never-resident model.
+//! 4. **Warmness-aware routing** — JSQ/P2C run against a *cost* that
+//!    adds, for cold replicas, the items the replica could have served
+//!    during its remaining load time. Warm replicas win ties; a cold
+//!    dispatch is taken only when the warm queues are long enough to
+//!    amortize the load, and then pays the §3.2 load delay before its
+//!    requests are injected.
+//!
+//! The outcome is an ordinary [`ClusterReport`] whose `lifecycle` field
+//! carries [`LifecycleStats`] (cold starts, evictions, bytes loaded,
+//! cold-start delay p99, goodput) — serialized only for lifecycle runs
+//! so static/adaptive golden shapes are unchanged. The canonical
+//! scenario is [`longtail_workload`]: N models with Zipf(α) popularity
+//! over GPUs whose combined memory holds fewer than half of them
+//! (`rust/configs/cluster_longtail_zipf.json`, `dstack lifecycle`,
+//! `figures::fig14`, `benches/bench_lifecycle.rs`).
+
+pub mod store;
+
+pub use store::{EvictionPolicy, ModelStore};
+
+use crate::cluster::{
+    ClusterReport, GpuModelShare, GpuReport, GpuSched, MaskedEngine as LcEngine, Replica,
+    ResidencyPlan, Router, RoutingPolicy,
+};
+use crate::gpu::{ms_to_us, us_to_ms, ReconfigModel, Us};
+use crate::metrics::RunReport;
+use crate::profile::{GpuSpec, ModelProfile};
+use crate::sim::{ModelEntry, Sim, SimConfig};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::workload::Request;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Lifecycle configuration (the scenario `"lifecycle"` block — see
+/// `docs/CONFIG.md`).
+#[derive(Debug, Clone)]
+pub struct LifecycleCfg {
+    /// Victim selection under memory pressure.
+    pub eviction: EvictionPolicy,
+    /// Per-GPU resident-memory budget (MiB). `0` ⇒ the device's full
+    /// `GpuSpec::mem_mib`.
+    pub mem_budget_mib: u64,
+    /// Reserved headroom subtracted from the budget (activations,
+    /// fragmentation), MiB.
+    pub headroom_mib: u64,
+    /// Idle time after which a warm model scales to zero (releases
+    /// memory and knee budget). `0` disables scale-to-zero.
+    pub idle_timeout_ms: f64,
+    /// Fold cold-start penalties into the routing cost (JSQ/P2C
+    /// tie-break toward warm replicas). `false` = warm-oblivious
+    /// routing: queues only, cold starts land wherever backlog is
+    /// shortest.
+    pub warm_routing: bool,
+    /// Minimum replicas per admitted model (availability / routing
+    /// choice), capped at the number of memory-feasible GPUs.
+    pub min_replicas: usize,
+    /// Profile names whose residents are never evicted or scaled to
+    /// zero.
+    pub pinned: Vec<String>,
+    /// §3.2 reconfiguration cost model (parameter sharing discount on
+    /// cold loads).
+    pub reconfig: ReconfigModel,
+}
+
+impl Default for LifecycleCfg {
+    fn default() -> Self {
+        LifecycleCfg {
+            eviction: EvictionPolicy::Lru,
+            mem_budget_mib: 0,
+            headroom_mib: 0,
+            idle_timeout_ms: 2_000.0,
+            warm_routing: true,
+            min_replicas: 2,
+            pinned: Vec::new(),
+            reconfig: ReconfigModel::default(),
+        }
+    }
+}
+
+impl LifecycleCfg {
+    /// Validate ranges; returns a message naming the offending field.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.idle_timeout_ms.is_nan() || self.idle_timeout_ms < 0.0 {
+            return Err("lifecycle.idle_timeout_ms must be >= 0".into());
+        }
+        if self.min_replicas == 0 {
+            return Err("lifecycle.min_replicas must be >= 1".into());
+        }
+        if self.mem_budget_mib > 0 && self.headroom_mib >= self.mem_budget_mib {
+            return Err("lifecycle.headroom_mib must be < mem_budget_mib".into());
+        }
+        Ok(())
+    }
+
+    /// Resident-memory budget for one device (MiB).
+    pub fn budget_for(&self, gpu: &GpuSpec) -> u64 {
+        let cap = if self.mem_budget_mib > 0 {
+            self.mem_budget_mib.min(gpu.mem_mib)
+        } else {
+            gpu.mem_mib
+        };
+        cap.saturating_sub(self.headroom_mib)
+    }
+
+    /// Per-GPU budgets for a cluster.
+    pub fn budgets(&self, gpus: &[GpuSpec]) -> Vec<u64> {
+        gpus.iter().map(|g| self.budget_for(g)).collect()
+    }
+}
+
+/// Memory-manager telemetry attached to a lifecycle run's
+/// [`ClusterReport`].
+#[derive(Debug, Clone, Default)]
+pub struct LifecycleStats {
+    /// On-demand model loads triggered by routing a cold request.
+    pub cold_starts: u64,
+    /// Requests dispatched to an already-warm replica.
+    pub warm_hits: u64,
+    /// Park events behind a model load: a request re-parked after an
+    /// eviction drained its queue counts once per park.
+    pub cold_delayed: u64,
+    /// Residents evicted under memory pressure.
+    pub evictions: u64,
+    /// Idle residents released by the scale-to-zero sweep.
+    pub scale_to_zero: u64,
+    /// Total weight traffic of on-demand loads (MiB).
+    pub mib_loaded: u64,
+    /// Total model-load time charged (ms).
+    pub load_ms_total: f64,
+    /// p99 of the arrival→warm delay over park events (ms); includes
+    /// parks whose request was still waiting at the horizon.
+    pub cold_start_p99_ms: f64,
+    /// Served-within-SLO requests per second, cluster-wide.
+    pub goodput_rps: f64,
+    /// Per-GPU high-water mark of resident memory (MiB).
+    pub peak_resident_mib: Vec<u64>,
+    /// Per-GPU resident-model count at the horizon.
+    pub resident_final: Vec<u64>,
+}
+
+impl LifecycleStats {
+    /// Deterministic JSON form (embedded in `ClusterReport::to_json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cold_starts", Json::from(self.cold_starts)),
+            ("warm_hits", Json::from(self.warm_hits)),
+            ("cold_delayed", Json::from(self.cold_delayed)),
+            ("evictions", Json::from(self.evictions)),
+            ("scale_to_zero", Json::from(self.scale_to_zero)),
+            ("mib_loaded", Json::from(self.mib_loaded)),
+            ("load_ms_total", Json::from(self.load_ms_total)),
+            ("cold_start_p99_ms", Json::from(self.cold_start_p99_ms)),
+            ("goodput_rps", Json::from(self.goodput_rps)),
+            (
+                "peak_resident_mib",
+                Json::Arr(self.peak_resident_mib.iter().map(|&v| Json::from(v)).collect()),
+            ),
+            (
+                "resident_final",
+                Json::Arr(self.resident_final.iter().map(|&v| Json::from(v)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Name of fleet entry `i` cloned from `base` — the single source of
+/// the `{base}_{:02}` scheme shared by [`longtail_workload_from`], the
+/// CLI's report rows and the config layer's `pinned` validation.
+pub fn fleet_name(base: &str, i: usize) -> String {
+    format!("{base}_{i:02}")
+}
+
+/// The canonical long-tail fleet: `n_models` clones of the Table 6 zoo
+/// (round-robin, suffixed `_00..`) with Zipf(`alpha`) popularity summing
+/// to `total_rps`. Cold-load times are re-derived from the weight
+/// footprint (`150 ms + 0.15 ms/MiB` — a warm serving framework
+/// streaming weights, not the §3.2 tens-of-seconds full framework init;
+/// parameter sharing discounts this further at load time). Returns
+/// (profiles, rates, merged request stream).
+pub fn longtail_workload(
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+    horizon_ms: f64,
+    seed: u64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+    let base = crate::profile::zoo();
+    longtail_workload_from(&base, n_models, alpha, total_rps, horizon_ms, seed)
+}
+
+/// [`longtail_workload`] over an explicit base model list (the config
+/// path cycles the scenario's `models` entries).
+pub fn longtail_workload_from(
+    base: &[ModelProfile],
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+    horizon_ms: f64,
+    seed: u64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+    assert!(!base.is_empty(), "long-tail fleet needs at least one base model");
+    use crate::workload::{merged_stream, zipf_rates, Arrivals};
+    let profiles: Vec<ModelProfile> = (0..n_models)
+        .map(|i| {
+            let mut p = base[i % base.len()].clone();
+            p.name = fleet_name(&p.name, i);
+            p.load_ms = 150.0 + 0.15 * p.mem_mib as f64;
+            p
+        })
+        .collect();
+    let rates = zipf_rates(n_models, alpha, total_rps);
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(&rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    (profiles, rates, reqs)
+}
+
+/// Serve `requests` on `gpus` under the lifecycle memory manager:
+/// `plan` assigns models and the t = 0 resident sets; everything beyond
+/// the resident sets is faulted in on demand (evicting per
+/// `cfg.eviction`), idles out per `cfg.idle_timeout_ms`, and routes per
+/// `routing` with warmness-aware costs when `cfg.warm_routing`.
+/// Deterministic: a fixed (inputs, seed) tuple always yields the same
+/// report, including the load/eviction schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lifecycle(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    plan: &ResidencyPlan,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+) -> ClusterReport {
+    cfg.validate().expect("invalid lifecycle config");
+    let n_models = profiles.len();
+    let n_gpus = gpus.len();
+    assert_eq!(plan.placement.n_gpus(), n_gpus, "plan built for a different cluster");
+    let horizon = ms_to_us(horizon_ms);
+    let idle_timeout: Option<Us> = if cfg.idle_timeout_ms > 0.0 {
+        Some(ms_to_us(cfg.idle_timeout_ms).max(1))
+    } else {
+        None
+    };
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    let pinned: Vec<bool> =
+        profiles.iter().map(|p| cfg.pinned.iter().any(|n| n == &p.name)).collect();
+
+    // --- engines, stores, index maps ---------------------------------------
+    let mut local_of: Vec<Vec<Option<usize>>> = vec![vec![None; n_models]; n_gpus];
+    let mut engines: Vec<Option<LcEngine>> = (0..n_gpus)
+        .map(|g| {
+            if plan.placement.hosted[g].is_empty() {
+                return None;
+            }
+            let entries: Vec<ModelEntry> = plan.placement.hosted[g]
+                .iter()
+                .enumerate()
+                .map(|(local, &m)| {
+                    local_of[g][m] = Some(local);
+                    let rep = plan.placement.replicas[m]
+                        .iter()
+                        .find(|r| r.gpu == g)
+                        .expect("hosted model without a replica entry");
+                    debug_assert_eq!(rep.local, local, "plan local indices drifted");
+                    ModelEntry { profile: profiles[m].clone(), pct: rep.pct, batch: rep.batch }
+                })
+                .collect();
+            let sim_cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+            let mut sim = Sim::new(sim_cfg, entries);
+            // Everything outside the t = 0 resident set starts as a
+            // tombstone: no knee budget, no traffic until faulted in.
+            for (local, &m) in plan.placement.hosted[g].iter().enumerate() {
+                if !plan.resident0[g].contains(&m) {
+                    let drained = sim.deactivate_model(local);
+                    debug_assert!(drained.is_empty());
+                }
+            }
+            let mask = sim.active_mask();
+            let policy = sched.build_masked(&sim.models, &mask);
+            Some(LcEngine { sim, policy })
+        })
+        .collect();
+
+    let mut stores: Vec<ModelStore> = (0..n_gpus)
+        .map(|g| {
+            let mut s = ModelStore::new(plan.mem_budget_mib[g], cfg.eviction);
+            for &m in &plan.resident0[g] {
+                let ok = s.preload(0, m, profiles[m].mem_mib, profiles[m].load_ms, pinned[m]);
+                assert!(ok, "resident0 oversubscribes gpu {g}'s memory budget");
+            }
+            s
+        })
+        .collect();
+
+    // --- driver state -------------------------------------------------------
+    let mut router = Router::new(routing, n_models, seed);
+    let mut rejected = vec![0u64; n_models];
+    let mut cursor = 0usize;
+    let mut touched = vec![false; n_gpus];
+    // (gpu, model) → virtual time its in-flight load completes.
+    let mut loading: BTreeMap<(usize, usize), Us> = BTreeMap::new();
+    // (gpu, model) → requests parked until the load completes.
+    let mut held: BTreeMap<(usize, usize), Vec<Request>> = BTreeMap::new();
+    let mut cold_delays_ms: Vec<f64> = Vec::new();
+    let mut stats = LifecycleStats::default();
+
+    // One request dispatch, shared by arrivals and eviction re-routes.
+    // Victim queues drained by an eviction are appended to `work` so
+    // cascades stay iterative (loading residents are unevictable, which
+    // bounds the cascade by the resident count).
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        t: Us,
+        model: usize,
+        req: Request,
+        work: &mut VecDeque<(usize, Request)>,
+        profiles: &[ModelProfile],
+        plan: &ResidencyPlan,
+        cfg: &LifecycleCfg,
+        pinned: &[bool],
+        router: &mut Router,
+        engines: &mut [Option<LcEngine>],
+        stores: &mut [ModelStore],
+        local_of: &[Vec<Option<usize>>],
+        loading: &mut BTreeMap<(usize, usize), Us>,
+        held: &mut BTreeMap<(usize, usize), Vec<Request>>,
+        sched: GpuSched,
+        touched: &mut [bool],
+        rejected: &mut [u64],
+        cold_delays_ms: &mut Vec<f64>,
+        stats: &mut LifecycleStats,
+    ) {
+        let reps: &[Replica] = &plan.placement.replicas[model];
+        if reps.is_empty() {
+            rejected[model] += 1;
+            return;
+        }
+        let pick = router.route(model, reps, |rep| {
+            let engine = engines[rep.gpu].as_ref().expect("replica on idle GPU");
+            let backlog = engine.sim.backlog_items(rep.local);
+            let parked = held.get(&(rep.gpu, model)).map_or(0, |v| v.len());
+            let base = backlog + parked;
+            if !cfg.warm_routing || stores[rep.gpu].is_warm(model) {
+                return base;
+            }
+            // Cold cost: the items this replica could have served while
+            // the (remaining) weight upload streams in.
+            let remaining_ms = match loading.get(&(rep.gpu, model)) {
+                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                // Pre-route estimate: the post-eviction sharing set is
+                // unknowable here, so assume today's warm residents.
+                None => cfg
+                    .reconfig
+                    .cold_load_ms(profiles[model].load_ms, stores[rep.gpu].n_warm()),
+            };
+            base + (remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize
+        });
+        // Dispatch on the routed replica, falling back across the
+        // model's other replicas (index order) when a GPU cannot start
+        // a load right now (pinned or mid-load residents crowd its
+        // budget): a warm replica serves immediately, an in-flight load
+        // parks the request, a loadable GPU faults the model in. Only a
+        // model with no path to residency anywhere rejects.
+        let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
+        for i in order {
+            let r = &reps[i];
+            let g = r.gpu;
+            if stores[g].is_warm(model) {
+                stores[g].touch(t, model);
+                let mut q = req;
+                q.model = r.local;
+                engines[g].as_mut().expect("warm replica on idle GPU").sim.inject(q);
+                touched[g] = true;
+                stats.warm_hits += 1;
+                return;
+            }
+            if let Some(&ready) = loading.get(&(g, model)) {
+                cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+                held.entry((g, model)).or_default().push(req);
+                stats.cold_delayed += 1;
+                return;
+            }
+            // Cold start: reserve memory now (evicting if needed), park
+            // the request until the weights have streamed in.
+            let Some(victims) = stores[g].begin_load(
+                t,
+                model,
+                profiles[model].mem_mib,
+                profiles[model].load_ms,
+                pinned[model],
+            ) else {
+                continue; // crowded out here — try the next replica
+            };
+            // Charge the upload against the *post-eviction* sharing set:
+            // only warm survivors can share parameters during the load
+            // (the loading model itself is excluded by n_warm).
+            let load_ms = cfg
+                .reconfig
+                .cold_load_ms(profiles[model].load_ms, stores[g].n_warm());
+            if !victims.is_empty() {
+                let engine = engines[g].as_mut().expect("cold replica on idle GPU");
+                for v in victims {
+                    let vl = local_of[g][v].expect("evicting unassigned model");
+                    for dr in engine.sim.deactivate_model(vl) {
+                        work.push_back((v, dr));
+                    }
+                }
+                // The mask changed (victims tombstoned); the loading
+                // model itself stays inactive until complete_load
+                // rebuilds again.
+                engine.rebuild_policy(sched);
+                touched[g] = true;
+            }
+            let ready = t + ms_to_us(load_ms).max(1);
+            loading.insert((g, model), ready);
+            cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+            held.entry((g, model)).or_default().push(req);
+            stats.cold_delayed += 1;
+            stats.load_ms_total += load_ms;
+            return;
+        }
+        rejected[model] += 1;
+    }
+
+    // --- event loop ---------------------------------------------------------
+    loop {
+        let t_arr = requests.get(cursor).map(|r| r.arrival);
+        let t_eng = engines
+            .iter()
+            .flatten()
+            .filter_map(|e| e.sim.next_event_time())
+            .min();
+        let t_load = loading.values().min().copied();
+        let t_idle = idle_timeout
+            .and_then(|to| stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
+        let Some(t) = [t_arr, t_eng, t_load, t_idle].into_iter().flatten().min() else {
+            break;
+        };
+        if t >= horizon {
+            break;
+        }
+        touched.fill(false);
+
+        // 1. Mature loads due at t: the model becomes warm, its
+        //    tombstone slot reactivates, parked requests inject with
+        //    their original arrival times (cold delay shows up as
+        //    end-to-end latency).
+        let due: Vec<(usize, usize)> = loading
+            .iter()
+            .filter(|&(_, &ready)| ready <= t)
+            .map(|(&k, _)| k)
+            .collect();
+        for (g, m) in due {
+            loading.remove(&(g, m));
+            stores[g].complete_load(t, m);
+            let local = local_of[g][m].expect("loaded model without a slot");
+            let rep = plan.placement.replicas[m]
+                .iter()
+                .find(|r| r.gpu == g)
+                .expect("loaded model without a replica");
+            let engine = engines[g].as_mut().expect("load on idle GPU");
+            engine.sim.reactivate_model(
+                local,
+                ModelEntry { profile: profiles[m].clone(), pct: rep.pct, batch: rep.batch },
+            );
+            engine.rebuild_policy(sched);
+            for mut r in held.remove(&(g, m)).unwrap_or_default() {
+                stores[g].touch(t, m);
+                r.model = local;
+                engine.sim.inject(r);
+            }
+            touched[g] = true;
+        }
+
+        // 2. Route every arrival at t.
+        let mut work: VecDeque<(usize, Request)> = VecDeque::new();
+        while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
+            let r = requests[cursor].clone();
+            cursor += 1;
+            work.push_back((r.model, r));
+            while let Some((m, req)) = work.pop_front() {
+                dispatch(
+                    t, m, req, &mut work, profiles, plan, cfg, &pinned, &mut router,
+                    &mut engines, &mut stores, &local_of, &mut loading, &mut held, sched,
+                    &mut touched, &mut rejected, &mut cold_delays_ms, &mut stats,
+                );
+            }
+        }
+
+        // 3. Scale-to-zero sweep: idle warm residents with an empty
+        //    backlog release memory and knee budget; residents that are
+        //    idle by the clock but still draining are re-armed (they are
+        //    in use, not idle).
+        if let Some(to) = idle_timeout {
+            for g in 0..n_gpus {
+                for m in stores[g].idle_candidates(t, to) {
+                    let local = local_of[g][m].expect("resident without a slot");
+                    let engine = engines[g].as_mut().expect("resident on idle GPU");
+                    if engine.sim.backlog_items(local) == 0 {
+                        let released = stores[g].release(m);
+                        debug_assert!(released, "idle candidate refused release");
+                        let drained = engine.sim.deactivate_model(local);
+                        debug_assert!(drained.is_empty(), "empty backlog drained requests");
+                        engine.rebuild_policy(sched);
+                        stats.scale_to_zero += 1;
+                        touched[g] = true;
+                    } else {
+                        stores[g].touch(t, m);
+                    }
+                }
+            }
+        }
+
+        // 4. Step every engine with due events or new work.
+        for (g, slot) in engines.iter_mut().enumerate() {
+            let Some(engine) = slot else { continue };
+            let due = touched[g] || engine.sim.next_event_time().is_some_and(|w| w <= t);
+            if due {
+                engine.sim.step_to(t, engine.policy.as_mut(), horizon);
+            }
+        }
+    }
+
+    // --- finalize + aggregate ----------------------------------------------
+    let reports: Vec<Option<RunReport>> = engines
+        .iter_mut()
+        .map(|slot| {
+            slot.as_mut().map(|e| {
+                let name = e.policy.name();
+                e.sim.finalize(name, horizon)
+            })
+        })
+        .collect();
+
+    let horizon_s = horizon_ms / 1_000.0;
+    let mut throughput = vec![0.0; n_models];
+    let mut violations = vec![0.0; n_models];
+    let mut served = vec![0u64; n_models];
+    let mut served_in_slo = 0u64;
+    let mut dropped = vec![0u64; n_models];
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut gpu_utilization = Vec::with_capacity(n_gpus);
+    let mut per_gpu = Vec::with_capacity(n_gpus);
+    for g in 0..n_gpus {
+        let (util, shares) = match &reports[g] {
+            Some(rep) => {
+                let mut shares = Vec::with_capacity(rep.per_model.len());
+                for (local, mm) in rep.per_model.iter().enumerate() {
+                    let global = plan.placement.hosted[g][local];
+                    throughput[global] += mm.served as f64 / horizon_s;
+                    violations[global] += mm.slo_violations() as f64 / horizon_s;
+                    served[global] += mm.served;
+                    served_in_slo += mm.served_in_slo;
+                    dropped[global] += mm.dropped;
+                    latencies[global].extend_from_slice(&mm.latencies_ms);
+                    // Shares list the final resident set only, keeping
+                    // per_gpu consistent with what the GPU holds at the
+                    // horizon.
+                    let engine = engines[g].as_ref().expect("reported engine");
+                    if engine.sim.is_active(local) {
+                        let entry = &engine.sim.models[local];
+                        shares.push(GpuModelShare {
+                            model: global,
+                            pct: entry.pct,
+                            batch: entry.batch,
+                            served: mm.served,
+                        });
+                    }
+                }
+                (rep.gpu_utilization[0], shares)
+            }
+            None => (0.0, Vec::new()),
+        };
+        gpu_utilization.push(util);
+        per_gpu.push(GpuReport {
+            gpu: gpus[g].name.to_string(),
+            knee_load_pct: plan.placement.knee_load[g],
+            utilization: util,
+            models: shares,
+        });
+    }
+    // Requests still parked behind a load that never matured inside the
+    // horizon were never served — count them as dropped so conservation
+    // (served + dropped + rejected = offered) holds.
+    for ((_, m), reqs) in &held {
+        dropped[*m] += reqs.len() as u64;
+        violations[*m] += reqs.len() as f64 / horizon_s;
+    }
+    for m in 0..n_models {
+        violations[m] += rejected[m] as f64 / horizon_s;
+    }
+    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let replica_map: Vec<Vec<usize>> = plan
+        .placement
+        .replicas
+        .iter()
+        .map(|reps| reps.iter().map(|r| r.gpu).collect())
+        .collect();
+
+    // Load/eviction counters live in the stores (single source of
+    // truth); the stats block just aggregates them.
+    stats.cold_starts = stores.iter().map(|s| s.loads).sum();
+    stats.evictions = stores.iter().map(|s| s.evictions).sum();
+    stats.mib_loaded = stores.iter().map(|s| s.mib_loaded).sum();
+    stats.cold_start_p99_ms = percentile(&cold_delays_ms, 99.0);
+    stats.goodput_rps = served_in_slo as f64 / horizon_s;
+    stats.peak_resident_mib = stores.iter().map(|s| s.peak_mib()).collect();
+    stats.resident_final = stores.iter().map(|s| s.n_resident() as u64).collect();
+
+    ClusterReport {
+        policy: format!(
+            "lifecycle+{}+{}{}+{}",
+            cfg.eviction.name(),
+            if cfg.warm_routing { "warm-" } else { "" },
+            routing.name(),
+            sched.name()
+        ),
+        throughput,
+        gpu_utilization,
+        violations_per_sec: violations,
+        p99_ms,
+        served,
+        dropped,
+        rejected,
+        replica_map,
+        shed_rps: plan.placement.shed_rps.clone(),
+        admitted: plan.placement.admitted.clone(),
+        per_gpu,
+        adaptive: None,
+        lifecycle: Some(stats),
+    }
+}
+
+/// Plan + serve in one call: [`crate::cluster::plan_residency`] against
+/// `cfg`'s memory budgets, then [`run_lifecycle`].
+#[allow(clippy::too_many_arguments)]
+pub fn serve_longtail(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: crate::cluster::PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+) -> ClusterReport {
+    let budgets = cfg.budgets(gpus);
+    assert!(
+        budgets.iter().all(|&b| b > 0),
+        "lifecycle memory budget is zero after headroom ({budgets:?} MiB) — \
+         lower headroom_mib or raise mem_budget_mib"
+    );
+    let plan = crate::cluster::plan_residency(
+        profiles,
+        offered_rps,
+        gpus,
+        placement,
+        &budgets,
+        cfg.min_replicas,
+    );
+    run_lifecycle(profiles, gpus, &plan, routing, sched, cfg, requests, horizon_ms, seed)
+}
+
+/// The 2×V100 cluster the canonical long-tail scenario is sized for.
+pub fn longtail_gpus() -> Vec<GpuSpec> {
+    vec![crate::profile::V100.clone(), crate::profile::V100.clone()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PlacementPolicy;
+
+    fn small_cfg() -> LifecycleCfg {
+        LifecycleCfg { mem_budget_mib: 3_072, ..Default::default() }
+    }
+
+    fn run(
+        n: usize,
+        total_rps: f64,
+        horizon_ms: f64,
+        seed: u64,
+        cfg: &LifecycleCfg,
+    ) -> ClusterReport {
+        let (profiles, rates, reqs) = longtail_workload(n, 1.1, total_rps, horizon_ms, seed);
+        serve_longtail(
+            &profiles,
+            &rates,
+            &longtail_gpus(),
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            cfg,
+            &reqs,
+            horizon_ms,
+            seed,
+        )
+    }
+
+    #[test]
+    fn longtail_workload_shape() {
+        let (profiles, rates, reqs) = longtail_workload(12, 1.1, 400.0, 1_000.0, 7);
+        assert_eq!(profiles.len(), 12);
+        assert_eq!(rates.len(), 12);
+        assert!(!reqs.is_empty());
+        // Distinct names, cycled bases, footprint-derived load times.
+        assert_eq!(profiles[0].name, "mobilenet_00");
+        assert_eq!(profiles[8].name, "mobilenet_08");
+        for p in &profiles {
+            assert!(p.load_ms < 1_000.0, "{}: load {} ms", p.name, p.load_ms);
+            assert!(p.load_ms >= 150.0);
+        }
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn lifecycle_run_is_deterministic() {
+        let cfg = small_cfg();
+        let a = run(8, 300.0, 1_200.0, 11, &cfg).to_json().to_string_compact();
+        let b = run(8, 300.0, 1_200.0, 11, &cfg).to_json().to_string_compact();
+        assert_eq!(a, b, "same seed ⇒ identical lifecycle report");
+        assert!(a.contains("\"lifecycle\""));
+    }
+
+    #[test]
+    fn memory_pressure_causes_cold_starts_and_evictions() {
+        let cfg = LifecycleCfg { mem_budget_mib: 2_048, ..Default::default() };
+        let rep = run(10, 400.0, 2_000.0, 3, &cfg);
+        let stats = rep.lifecycle.as_ref().expect("lifecycle stats attached");
+        assert!(stats.cold_starts > 0, "tail must fault in");
+        assert!(stats.evictions > 0, "2 GiB budget must thrash");
+        assert!(stats.mib_loaded > 0);
+        assert!(stats.warm_hits > 0, "the head stays warm");
+        for (g, &peak) in stats.peak_resident_mib.iter().enumerate() {
+            assert!(peak <= 2_048, "gpu {g} resident peak {peak} MiB > budget");
+        }
+        assert!(rep.total_throughput() > 0.0);
+    }
+
+    #[test]
+    fn idle_models_scale_to_zero() {
+        // Plenty of memory (no eviction pressure) but a short idle
+        // timeout: the tail must be released at least once.
+        let cfg = LifecycleCfg {
+            mem_budget_mib: 0,
+            idle_timeout_ms: 300.0,
+            ..Default::default()
+        };
+        let rep = run(10, 150.0, 2_000.0, 5, &cfg);
+        let stats = rep.lifecycle.as_ref().unwrap();
+        assert!(stats.scale_to_zero > 0, "idle tail models must release memory");
+        assert_eq!(stats.evictions, 0, "no memory pressure ⇒ no evictions");
+    }
+
+    #[test]
+    fn disabled_idle_timeout_never_scales_to_zero() {
+        let cfg = LifecycleCfg {
+            mem_budget_mib: 0,
+            idle_timeout_ms: 0.0,
+            ..Default::default()
+        };
+        let rep = run(6, 150.0, 1_000.0, 9, &cfg);
+        let stats = rep.lifecycle.as_ref().unwrap();
+        assert_eq!(stats.scale_to_zero, 0);
+    }
+
+    #[test]
+    fn cold_delays_cost_latency_not_correctness() {
+        let cfg = small_cfg();
+        let rep = run(10, 300.0, 2_000.0, 13, &cfg);
+        let stats = rep.lifecycle.as_ref().unwrap();
+        assert!(stats.cold_delayed > 0);
+        // A cold-delayed request waits at least the smallest weight
+        // upload (≥ ~150 ms even with parameter sharing).
+        assert!(
+            stats.cold_start_p99_ms > 100.0,
+            "cold-start p99 {} ms implausibly small",
+            stats.cold_start_p99_ms
+        );
+        // Goodput is bounded by throughput.
+        assert!(stats.goodput_rps <= rep.total_throughput() + 1e-9);
+        assert!(stats.goodput_rps > 0.0);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_fields() {
+        assert!(LifecycleCfg::default().validate().is_ok());
+        assert!(LifecycleCfg { idle_timeout_ms: -1.0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(LifecycleCfg { min_replicas: 0, ..Default::default() }.validate().is_err());
+        assert!(LifecycleCfg { mem_budget_mib: 100, headroom_mib: 100, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn budgets_respect_device_memory_and_headroom() {
+        let cfg = LifecycleCfg {
+            mem_budget_mib: 4_096,
+            headroom_mib: 512,
+            ..Default::default()
+        };
+        let v100 = crate::profile::V100.clone();
+        assert_eq!(cfg.budget_for(&v100), 3_584);
+        let unbounded = LifecycleCfg::default();
+        assert_eq!(unbounded.budget_for(&v100), v100.mem_mib);
+    }
+}

@@ -1,0 +1,461 @@
+//! Per-GPU model store: the resident set tracked against device memory.
+//!
+//! The store is pure bookkeeping — it never touches the engine. The
+//! lifecycle driver ([`crate::lifecycle::run_lifecycle`]) consults it on
+//! every dispatch (warm or cold?), charges cold loads through it
+//! (reserving memory for the duration of the weight upload), and applies
+//! its eviction verdicts to the per-GPU [`crate::sim::Sim`] via the
+//! tombstone surgery (`deactivate_model`/`reactivate_model`).
+//!
+//! Invariants (checked in debug builds, property-tested in
+//! `rust/tests/lifecycle_cluster.rs`):
+//! - `used_mib` always equals the sum of resident footprints;
+//! - `used_mib <= capacity_mib` after every operation;
+//! - pinned and mid-load residents are never chosen as victims.
+
+use crate::gpu::Us;
+
+/// Which resident to sacrifice under memory pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Least-recently-used: evict the resident with the oldest
+    /// `last_used` timestamp.
+    Lru,
+    /// Least-frequently-used: fewest dispatches since load (ties broken
+    /// by recency).
+    Lfu,
+    /// Cost-aware: evict the resident whose retention saves the fewest
+    /// load-milliseconds per unit time — `load_ms × hits / age`, i.e.
+    /// cheap-to-reload rarely-hit models go first even if recently
+    /// touched.
+    CostAware,
+}
+
+impl EvictionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::Lfu => "lfu",
+            EvictionPolicy::CostAware => "cost",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EvictionPolicy, String> {
+        Ok(match s {
+            "lru" => EvictionPolicy::Lru,
+            "lfu" => EvictionPolicy::Lfu,
+            "cost" | "cost_aware" => EvictionPolicy::CostAware,
+            other => return Err(format!("unknown eviction policy '{other}'")),
+        })
+    }
+
+    pub fn all() -> &'static [EvictionPolicy] {
+        &[EvictionPolicy::Lru, EvictionPolicy::Lfu, EvictionPolicy::CostAware]
+    }
+}
+
+/// One model currently holding device memory.
+#[derive(Debug, Clone)]
+pub struct ResidentEntry {
+    /// Global model index.
+    pub model: usize,
+    /// Weight footprint held (MiB).
+    pub mem_mib: u64,
+    /// Full (unshared) reload cost, for cost-aware scoring (ms).
+    pub load_ms: f64,
+    /// When the model became (or started becoming) resident.
+    pub loaded_at: Us,
+    /// Last dispatch that touched this model.
+    pub last_used: Us,
+    /// Dispatches since load.
+    pub hits: u64,
+    /// Pinned residents are never evicted or scaled to zero.
+    pub pinned: bool,
+    /// Mid-load: memory is reserved but the model is not yet warm.
+    /// Loading residents are never eviction victims.
+    pub loading: bool,
+}
+
+/// Resident-set tracker for one GPU.
+#[derive(Debug, Clone)]
+pub struct ModelStore {
+    policy: EvictionPolicy,
+    capacity_mib: u64,
+    used_mib: u64,
+    peak_mib: u64,
+    residents: Vec<ResidentEntry>,
+    /// Victims removed under memory pressure (scale-to-zero not counted).
+    pub evictions: u64,
+    /// On-demand loads charged (t = 0 preloads not counted).
+    pub loads: u64,
+    /// Total weight traffic of on-demand loads (MiB).
+    pub mib_loaded: u64,
+}
+
+impl ModelStore {
+    pub fn new(capacity_mib: u64, policy: EvictionPolicy) -> ModelStore {
+        ModelStore {
+            policy,
+            capacity_mib,
+            used_mib: 0,
+            peak_mib: 0,
+            residents: Vec::new(),
+            evictions: 0,
+            loads: 0,
+            mib_loaded: 0,
+        }
+    }
+
+    pub fn policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
+    pub fn capacity_mib(&self) -> u64 {
+        self.capacity_mib
+    }
+
+    pub fn used_mib(&self) -> u64 {
+        self.used_mib
+    }
+
+    pub fn free_mib(&self) -> u64 {
+        self.capacity_mib - self.used_mib
+    }
+
+    /// High-water mark of `used_mib` over the store's lifetime.
+    pub fn peak_mib(&self) -> u64 {
+        self.peak_mib
+    }
+
+    pub fn n_resident(&self) -> usize {
+        self.residents.len()
+    }
+
+    /// Residents whose weights are fully loaded — the models a new cold
+    /// load can share parameters with (§3.2 cudaIPC).
+    pub fn n_warm(&self) -> usize {
+        self.residents.iter().filter(|r| !r.loading).count()
+    }
+
+    pub fn residents(&self) -> &[ResidentEntry] {
+        &self.residents
+    }
+
+    fn find(&self, model: usize) -> Option<usize> {
+        self.residents.iter().position(|r| r.model == model)
+    }
+
+    /// Resident at all (warm or mid-load)?
+    pub fn is_resident(&self, model: usize) -> bool {
+        self.find(model).is_some()
+    }
+
+    /// Resident *and* finished loading — dispatchable without delay.
+    pub fn is_warm(&self, model: usize) -> bool {
+        self.find(model).is_some_and(|i| !self.residents[i].loading)
+    }
+
+    /// Record a dispatch of `model` (recency + frequency signals).
+    pub fn touch(&mut self, now: Us, model: usize) {
+        if let Some(i) = self.find(model) {
+            let r = &mut self.residents[i];
+            r.last_used = r.last_used.max(now);
+            r.hits += 1;
+        }
+    }
+
+    fn insert(&mut self, entry: ResidentEntry) {
+        debug_assert!(self.find(entry.model).is_none(), "double-resident model");
+        self.used_mib += entry.mem_mib;
+        self.peak_mib = self.peak_mib.max(self.used_mib);
+        self.residents.push(entry);
+        self.debug_check();
+    }
+
+    /// Seed a model at t = 0 (placement preload). Warm immediately, no
+    /// load counters charged. Returns false (state unchanged) when the
+    /// footprint does not fit the remaining capacity.
+    pub fn preload(
+        &mut self,
+        now: Us,
+        model: usize,
+        mem_mib: u64,
+        load_ms: f64,
+        pinned: bool,
+    ) -> bool {
+        if self.used_mib + mem_mib > self.capacity_mib {
+            return false;
+        }
+        self.insert(ResidentEntry {
+            model,
+            mem_mib,
+            load_ms,
+            loaded_at: now,
+            last_used: now,
+            hits: 0,
+            pinned,
+            loading: false,
+        });
+        true
+    }
+
+    /// Cost-aware eviction score: the load-milliseconds this resident
+    /// saves per unit time if kept (`load_ms × hit rate`). Smaller means
+    /// cheaper to lose — evicted first. Deterministic: float scores
+    /// compare via `total_cmp`, ties resolve by model index.
+    fn retention_value(now: Us, r: &ResidentEntry) -> f64 {
+        let age_ms = (now.saturating_sub(r.loaded_at) as f64 / 1_000.0).max(1.0);
+        r.load_ms * r.hits as f64 / age_ms
+    }
+
+    /// Start an on-demand load of `model`, evicting victims per policy
+    /// until the footprint fits. Memory is reserved immediately (the
+    /// weights stream in over the load delay); the caller marks the
+    /// model warm with [`Self::complete_load`]. Returns the evicted
+    /// model indices in eviction order, or `None` — with the store
+    /// unchanged — when even evicting every unpinned, non-loading
+    /// resident cannot make room.
+    pub fn begin_load(
+        &mut self,
+        now: Us,
+        model: usize,
+        mem_mib: u64,
+        load_ms: f64,
+        pinned: bool,
+    ) -> Option<Vec<usize>> {
+        debug_assert!(self.find(model).is_none(), "begin_load of resident model {model}");
+        // Plan the victim set without mutating: candidates in eviction
+        // order, shortest prefix that frees enough memory.
+        let mut candidates: Vec<usize> = (0..self.residents.len())
+            .filter(|&i| !self.residents[i].pinned && !self.residents[i].loading)
+            .collect();
+        match self.policy {
+            EvictionPolicy::Lru => candidates.sort_by_key(|&i| {
+                let r = &self.residents[i];
+                (r.last_used, r.model)
+            }),
+            EvictionPolicy::Lfu => candidates.sort_by_key(|&i| {
+                let r = &self.residents[i];
+                (r.hits, r.last_used, r.model)
+            }),
+            EvictionPolicy::CostAware => candidates.sort_by(|&a, &b| {
+                let (ra, rb) = (&self.residents[a], &self.residents[b]);
+                Self::retention_value(now, ra)
+                    .total_cmp(&Self::retention_value(now, rb))
+                    .then(ra.model.cmp(&rb.model))
+            }),
+        }
+        let mut freed = 0u64;
+        let mut take = 0usize;
+        while self.used_mib - freed + mem_mib > self.capacity_mib {
+            if take == candidates.len() {
+                return None; // cannot fit even after evicting everything evictable
+            }
+            freed += self.residents[candidates[take]].mem_mib;
+            take += 1;
+        }
+        let mut victims: Vec<usize> =
+            candidates[..take].iter().map(|&i| self.residents[i].model).collect();
+        // Remove by model id (indices shift as we remove).
+        for &v in &victims {
+            let i = self.find(v).expect("victim resident");
+            self.used_mib -= self.residents[i].mem_mib;
+            self.residents.remove(i);
+            self.evictions += 1;
+        }
+        self.insert(ResidentEntry {
+            model,
+            mem_mib,
+            load_ms,
+            loaded_at: now,
+            last_used: now,
+            hits: 0,
+            pinned,
+            loading: true,
+        });
+        self.loads += 1;
+        self.mib_loaded += mem_mib;
+        victims.shrink_to_fit();
+        Some(victims)
+    }
+
+    /// Mark a mid-load model warm (the weight upload finished).
+    pub fn complete_load(&mut self, now: Us, model: usize) {
+        let i = self.find(model).expect("completing load of non-resident model");
+        let r = &mut self.residents[i];
+        debug_assert!(r.loading, "complete_load of warm model {model}");
+        r.loading = false;
+        r.last_used = r.last_used.max(now);
+    }
+
+    /// Release a warm resident (scale-to-zero). Not counted as an
+    /// eviction. Returns false for non-resident, pinned or mid-load
+    /// models (state unchanged).
+    pub fn release(&mut self, model: usize) -> bool {
+        let Some(i) = self.find(model) else { return false };
+        if self.residents[i].pinned || self.residents[i].loading {
+            return false;
+        }
+        self.used_mib -= self.residents[i].mem_mib;
+        self.residents.remove(i);
+        self.debug_check();
+        true
+    }
+
+    /// Warm, unpinned residents idle since before `now − timeout`, in
+    /// model order.
+    pub fn idle_candidates(&self, now: Us, timeout: Us) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .residents
+            .iter()
+            .filter(|r| !r.pinned && !r.loading && r.last_used + timeout <= now)
+            .map(|r| r.model)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Earliest future instant at which some warm, unpinned resident
+    /// becomes idle-expired (assuming no further touches).
+    pub fn next_idle_expiry(&self, timeout: Us) -> Option<Us> {
+        self.residents
+            .iter()
+            .filter(|r| !r.pinned && !r.loading)
+            .map(|r| r.last_used + timeout)
+            .min()
+    }
+
+    fn debug_check(&self) {
+        debug_assert_eq!(
+            self.used_mib,
+            self.residents.iter().map(|r| r.mem_mib).sum::<u64>(),
+            "resident memory accounting drifted"
+        );
+        debug_assert!(self.used_mib <= self.capacity_mib, "store over capacity");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(cap: u64, policy: EvictionPolicy) -> ModelStore {
+        ModelStore::new(cap, policy)
+    }
+
+    #[test]
+    fn preload_respects_capacity() {
+        let mut s = store(2_000, EvictionPolicy::Lru);
+        assert!(s.preload(0, 0, 1_200, 300.0, false));
+        assert!(!s.preload(0, 1, 900, 300.0, false), "over capacity");
+        assert_eq!(s.used_mib(), 1_200);
+        assert_eq!(s.n_resident(), 1);
+        assert!(s.is_warm(0));
+        assert_eq!(s.loads, 0, "preloads are free");
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut s = store(3_000, EvictionPolicy::Lru);
+        s.preload(0, 0, 1_000, 300.0, false);
+        s.preload(0, 1, 1_000, 300.0, false);
+        s.preload(0, 2, 1_000, 300.0, false);
+        s.touch(10, 0);
+        s.touch(20, 2); // model 1 is now the coldest
+        let victims = s.begin_load(30, 3, 1_500, 400.0, false).unwrap();
+        assert_eq!(victims, vec![1, 0], "oldest-first until it fits");
+        assert!(s.is_resident(3) && !s.is_warm(3), "loading, not yet warm");
+        s.complete_load(40, 3);
+        assert!(s.is_warm(3));
+        assert_eq!(s.evictions, 2);
+        assert_eq!(s.mib_loaded, 1_500);
+    }
+
+    #[test]
+    fn lfu_evicts_fewest_hits() {
+        let mut s = store(2_000, EvictionPolicy::Lfu);
+        s.preload(0, 0, 1_000, 300.0, false);
+        s.preload(0, 1, 1_000, 300.0, false);
+        for t in 0..5 {
+            s.touch(t, 1);
+        }
+        s.touch(100, 0); // recent but rarely used
+        let victims = s.begin_load(200, 2, 1_000, 300.0, false).unwrap();
+        assert_eq!(victims, vec![0], "LFU ignores recency");
+    }
+
+    #[test]
+    fn cost_aware_keeps_expensive_hot_models() {
+        let mut s = store(2_000, EvictionPolicy::CostAware);
+        // Model 0: expensive reload, frequently hit. Model 1: cheap
+        // reload, same recency.
+        s.preload(0, 0, 1_000, 2_000.0, false);
+        s.preload(0, 1, 1_000, 100.0, false);
+        for t in 1..20 {
+            s.touch(t, 0);
+            s.touch(t, 1);
+        }
+        let victims = s.begin_load(1_000, 2, 1_000, 300.0, false).unwrap();
+        assert_eq!(victims, vec![1], "cheap-to-reload goes first");
+    }
+
+    #[test]
+    fn pinned_and_loading_are_never_victims() {
+        let mut s = store(2_500, EvictionPolicy::Lru);
+        s.preload(0, 0, 1_000, 300.0, true); // pinned
+        let v = s.begin_load(10, 1, 1_000, 300.0, false).unwrap();
+        assert!(v.is_empty());
+        // Model 1 is mid-load: the only possible victim is none.
+        assert!(s.begin_load(20, 2, 1_000, 300.0, false).is_none(), "nothing evictable");
+        assert_eq!(s.n_resident(), 2, "failed load leaves the store unchanged");
+        assert_eq!(s.used_mib(), 2_000);
+        // Once warm, model 1 becomes evictable.
+        s.complete_load(30, 1);
+        let v = s.begin_load(40, 2, 1_000, 300.0, false).unwrap();
+        assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn release_frees_memory_but_counts_separately() {
+        let mut s = store(2_000, EvictionPolicy::Lru);
+        s.preload(0, 0, 800, 300.0, false);
+        assert!(s.release(0));
+        assert_eq!(s.used_mib(), 0);
+        assert_eq!(s.evictions, 0, "scale-to-zero is not an eviction");
+        assert!(!s.release(0), "double release is a no-op");
+        // Pinned models cannot be scaled to zero.
+        s.preload(0, 1, 800, 300.0, true);
+        assert!(!s.release(1));
+    }
+
+    #[test]
+    fn idle_candidates_and_expiry() {
+        let mut s = store(4_000, EvictionPolicy::Lru);
+        s.preload(0, 0, 1_000, 300.0, false);
+        s.preload(0, 1, 1_000, 300.0, false);
+        s.preload(0, 2, 1_000, 300.0, true); // pinned never idles out
+        s.touch(5_000, 1);
+        assert_eq!(s.idle_candidates(10_000, 8_000), vec![0]);
+        assert_eq!(s.next_idle_expiry(8_000), Some(8_000));
+        assert_eq!(s.idle_candidates(14_000, 8_000), vec![0, 1]);
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut s = store(3_000, EvictionPolicy::Lru);
+        s.preload(0, 0, 1_000, 300.0, false);
+        s.preload(0, 1, 1_500, 300.0, false);
+        assert_eq!(s.peak_mib(), 2_500);
+        s.release(1);
+        assert_eq!(s.used_mib(), 1_000);
+        assert_eq!(s.peak_mib(), 2_500, "peak is monotone");
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in EvictionPolicy::all() {
+            assert_eq!(EvictionPolicy::parse(p.name()).unwrap(), *p);
+        }
+        assert!(EvictionPolicy::parse("fifo").is_err());
+    }
+}

@@ -3,11 +3,12 @@
 //! figure of the paper.
 //!
 //! Subcommands:
-//!   figures  --fig <2|3|4|...|13|all> [--out results]
+//!   figures  --fig <2|3|4|...|14|all> [--out results]
 //!   tables   --table <1|2|3|6|all>    [--out results]
 //!   simulate --config <scenario.json>   (scenarios with a "cluster"
 //!            block run on the placement/routing cluster engine; adding
-//!            an "adaptive" block runs the adaptive control plane)
+//!            an "adaptive" block runs the adaptive control plane; a
+//!            "lifecycle" block runs the long-tail memory manager)
 //!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
 //!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
 //!            [--horizon ms] [--seed N]   — Fig. 12 workload on an
@@ -16,6 +17,12 @@
 //!            [--interval ms] [--alpha X] [--threshold X] [--rearm X]
 //!            [--cooldown N] [--migration-cost ms]   — adaptive control
 //!            plane vs static placement on the drifting-rate workload
+//!   lifecycle [--config <scenario.json>] [--horizon ms] [--seed N]
+//!            [--eviction lru|lfu|cost] [--mem-budget MiB]
+//!            [--oblivious]   — long-tail Zipf fleet under the memory
+//!            manager; without --config, runs the canonical 24-model
+//!            scenario and compares warmness-aware vs warm-oblivious
+//!            routing
 //!   optimize --model <name> [--slo ms]
 //!   profile  --model <name> [--batch N]
 //!   serve    [--seconds N] [--rate-scale X] [--policy dstack|fifo]
@@ -36,13 +43,14 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => simulate(&args),
         Some("cluster") => cluster_cmd(&args),
         Some("adaptive") => adaptive_cmd(&args),
+        Some("lifecycle") => lifecycle_cmd(&args),
         Some("optimize") => optimize(&args),
         Some("profile") => profile_cmd(&args),
         Some("serve") => serve(&args),
         Some("selfcheck") => selfcheck(),
         _ => {
             eprintln!(
-                "usage: dstack <figures|tables|simulate|cluster|adaptive|optimize|profile|serve|selfcheck> [opts]"
+                "usage: dstack <figures|tables|simulate|cluster|adaptive|lifecycle|optimize|profile|serve|selfcheck> [opts]"
             );
             std::process::exit(2);
         }
@@ -79,6 +87,13 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let sc = dstack::config::Scenario::from_file(Path::new(path))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     if sc.cluster.is_some() {
+        if sc.lifecycle.is_some() {
+            let rep = dstack::config::run_lifecycle_scenario(&sc);
+            let names = lifecycle_fleet_names(&sc);
+            println!("scenario '{}' lifecycle policy={}", sc.name, rep.policy);
+            print_cluster_report(&names, &rep);
+            return Ok(());
+        }
         let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
         let rep = if sc.adaptive.is_some() {
             dstack::config::run_adaptive_scenario(&sc)
@@ -166,6 +181,24 @@ fn print_cluster_report(names: &[String], rep: &dstack::cluster::ClusterReport) 
         rep.gpu_utilization.len(),
         rep.mean_utilization() * 100.0
     );
+    if let Some(l) = &rep.lifecycle {
+        println!(
+            "memory manager: {} cold starts ({} delayed reqs, p99 delay {:.0} ms), \
+             {} warm hits, {} evictions, {} scale-to-zero, {} MiB loaded ({:.0} ms)",
+            l.cold_starts,
+            l.cold_delayed,
+            l.cold_start_p99_ms,
+            l.warm_hits,
+            l.evictions,
+            l.scale_to_zero,
+            l.mib_loaded,
+            l.load_ms_total,
+        );
+        println!(
+            "goodput {:.0} req/s in SLO; peak resident MiB per GPU {:?}; resident at horizon {:?}",
+            l.goodput_rps, l.peak_resident_mib, l.resident_final
+        );
+    }
     if let Some(a) = &rep.adaptive {
         println!(
             "control plane: {} replans, {} rebalances (+{} / -{} replicas, {:.0} ms migration) at {:?} ms",
@@ -267,6 +300,110 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
     println!(
         "\nadaptive vs static: {a:.0} vs {s:.0} req/s served ({:.2}x)",
         a / s.max(1e-9)
+    );
+    Ok(())
+}
+
+/// Names of the long-tail fleet a lifecycle scenario generates (the
+/// base list cycled through `lifecycle::fleet_name`), for report rows.
+fn lifecycle_fleet_names(sc: &dstack::config::Scenario) -> Vec<String> {
+    let base = sc.profiles();
+    let n = sc.lifecycle.as_ref().map_or(base.len(), |l| l.n_models);
+    (0..n).map(|i| dstack::lifecycle::fleet_name(&base[i % base.len()].name, i)).collect()
+}
+
+fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
+    use dstack::cluster::{GpuSched, PlacementPolicy, RoutingPolicy};
+    use dstack::lifecycle::{
+        longtail_gpus, longtail_workload, serve_longtail, EvictionPolicy, LifecycleCfg,
+    };
+    if let Some(path) = args.get("config") {
+        let mut sc = dstack::config::Scenario::from_file(Path::new(path))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if sc.cluster.is_none() || sc.lifecycle.is_none() {
+            anyhow::bail!("lifecycle needs a scenario with 'cluster' and 'lifecycle' blocks");
+        }
+        sc.horizon_ms = args.get_f64("horizon", sc.horizon_ms);
+        sc.seed = args.get_u64("seed", sc.seed);
+        {
+            let lc = sc.lifecycle.as_mut().expect("checked above");
+            if let Some(e) = args.get("eviction") {
+                lc.cfg.eviction = EvictionPolicy::parse(e).map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            lc.cfg.mem_budget_mib = args.get_u64("mem-budget", lc.cfg.mem_budget_mib);
+            if args.has_flag("oblivious") {
+                lc.cfg.warm_routing = false;
+            }
+            lc.cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        let names = lifecycle_fleet_names(&sc);
+        let rep = dstack::config::run_lifecycle_scenario(&sc);
+        println!("scenario '{}' lifecycle policy={}", sc.name, rep.policy);
+        print_cluster_report(&names, &rep);
+        return Ok(());
+    }
+    // Built-in canonical scenario: 24-model Zipf(1.1) long-tail on
+    // 2×V100 whose combined resident budget holds fewer than half the
+    // fleet; warmness-aware vs warm-oblivious JSQ side by side.
+    let horizon_ms = args.get_f64("horizon", 8_000.0);
+    let seed = args.get_u64("seed", 42);
+    let mut cfg = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
+    if let Some(e) = args.get("eviction") {
+        cfg.eviction = EvictionPolicy::parse(e).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    cfg.mem_budget_mib = args.get_u64("mem-budget", cfg.mem_budget_mib);
+    cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let (profiles, rates, reqs) = longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = longtail_gpus();
+    let names: Vec<String> = profiles.iter().map(|p| p.name.clone()).collect();
+    let total_mem: u64 = profiles.iter().map(|p| p.mem_mib).sum();
+    println!(
+        "24-model Zipf(1.1) long-tail on 2xV100: {} MiB of weights vs {} MiB resident budget, \
+         {:.0} req/s offered, horizon {horizon_ms:.0} ms",
+        total_mem,
+        2 * cfg.mem_budget_mib,
+        600.0
+    );
+
+    let run = |warm: bool| {
+        let c = LifecycleCfg { warm_routing: warm, ..cfg.clone() };
+        serve_longtail(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &c,
+            &reqs,
+            horizon_ms,
+            seed,
+        )
+    };
+    if args.has_flag("oblivious") {
+        let rep = run(false);
+        println!("\n== warm-oblivious JSQ ==");
+        print_cluster_report(&names, &rep);
+        return Ok(());
+    }
+    let cold = run(false);
+    println!("\n== warm-oblivious JSQ ==");
+    print_cluster_report(&names, &cold);
+    let warm = run(true);
+    println!("\n== warmness-aware JSQ ==");
+    print_cluster_report(&names, &warm);
+
+    let (gw, gc) = (
+        warm.lifecycle.as_ref().map_or(0.0, |l| l.goodput_rps),
+        cold.lifecycle.as_ref().map_or(0.0, |l| l.goodput_rps),
+    );
+    println!(
+        "\nwarmness-aware vs warm-oblivious: goodput {gw:.0} vs {gc:.0} req/s ({:.2}x), \
+         viol/s {:.0} vs {:.0}",
+        gw / gc.max(1e-9),
+        warm.violations_per_sec.iter().sum::<f64>(),
+        cold.violations_per_sec.iter().sum::<f64>()
     );
     Ok(())
 }

@@ -54,7 +54,7 @@ pub struct DstackCfg {
     /// Deadline-pressure factor: a dynamic launch fires when the oldest
     /// request's slack falls below `factor × inference latency + 2 ms`.
     /// 2.5 empirically minimizes SLO violations on the C-4 mix (see
-    /// EXPERIMENTS.md §Notes for the sweep).
+    /// docs/EXPERIMENTS.md §Notes for the sweep).
     pub urgency_factor: f64,
 }
 

@@ -235,6 +235,13 @@ impl Sim {
         self.active[local]
     }
 
+    /// Per-slot liveness snapshot — what cluster control planes mask
+    /// policy rebuilds on after tombstone surgery (see
+    /// [`crate::controlplane`] and [`crate::lifecycle`]).
+    pub fn active_mask(&self) -> Vec<bool> {
+        self.active.clone()
+    }
+
     /// Current virtual time (µs).
     pub fn now(&self) -> Us {
         self.now

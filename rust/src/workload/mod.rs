@@ -204,6 +204,22 @@ pub fn drift_rates(horizon_ms: f64) -> Vec<(&'static str, Vec<(f64, f64)>)> {
     ]
 }
 
+/// Zipf-distributed per-model rates for long-tail model fleets
+/// (Nexus/Clipper's serving regime, opened by the lifecycle subsystem):
+/// model `i` (0-based popularity rank) offers
+/// `total_rps · (i+1)^−alpha / Σ_j (j+1)^−alpha` req/s. `alpha = 0`
+/// degenerates to a uniform split; `alpha ≈ 1.1` gives the classic
+/// head-heavy tail where the top model draws ~30% of all traffic and
+/// the tail trickles.
+pub fn zipf_rates(n_models: usize, alpha: f64, total_rps: f64) -> Vec<f64> {
+    assert!(n_models > 0, "zipf_rates needs at least one model");
+    assert!(alpha >= 0.0 && alpha.is_finite(), "alpha must be finite and >= 0");
+    assert!(total_rps >= 0.0, "total_rps must be >= 0");
+    let weights: Vec<f64> = (1..=n_models).map(|i| (i as f64).powf(-alpha)).collect();
+    let sum: f64 = weights.iter().sum();
+    weights.into_iter().map(|w| total_rps * w / sum).collect()
+}
+
 /// The paper's Fig. 11a request-rate assignments for the C-2/3/4/7 mixes.
 /// Returns (model name, rate req/s) pairs.
 pub fn fig11a_rates(mix: &str) -> Vec<(&'static str, f64)> {
@@ -359,6 +375,24 @@ mod tests {
         }
         let c = merged_stream(&specs, 2_000.0, 8);
         assert_ne!(a, c, "different seed, different stream");
+    }
+
+    #[test]
+    fn zipf_rates_shape() {
+        let r = zipf_rates(24, 1.1, 600.0);
+        assert_eq!(r.len(), 24);
+        assert!((r.iter().sum::<f64>() - 600.0).abs() < 1e-9, "rates sum to the total");
+        for w in r.windows(2) {
+            assert!(w[0] > w[1], "popularity must strictly decrease");
+        }
+        // Head-heavy: rank 0 draws > 25% of traffic at alpha = 1.1.
+        assert!(r[0] > 150.0, "head rate {}", r[0]);
+        assert!(r[23] < 10.0, "tail rate {}", r[23]);
+        // alpha = 0 → uniform split.
+        let u = zipf_rates(4, 0.0, 100.0);
+        for v in u {
+            assert!((v - 25.0).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -142,6 +142,31 @@ fn adaptive_cluster_report_matches_golden() {
 }
 
 #[test]
+fn lifecycle_longtail_report_matches_golden() {
+    // A memory-oversubscribed 12-model Zipf fleet at a 2 s horizon: the
+    // run includes preloads, cold starts, evictions and scale-to-zero,
+    // so the store, the residency plan and the warm-routing costs are
+    // all pinned by the golden.
+    use dstack::lifecycle::{longtail_gpus, longtail_workload, serve_longtail, LifecycleCfg};
+    let (profiles, rates, reqs) = longtail_workload(12, 1.1, 400.0, HORIZON_MS, SEED);
+    let cfg = LifecycleCfg { mem_budget_mib: 3_072, idle_timeout_ms: 800.0, ..Default::default() };
+    let rep = serve_longtail(
+        &profiles,
+        &rates,
+        &longtail_gpus(),
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        &reqs,
+        HORIZON_MS,
+        SEED,
+    );
+    assert!(rep.lifecycle.is_some(), "lifecycle stats must be serialized");
+    check_golden("lifecycle_longtail", &rep.to_json());
+}
+
+#[test]
 fn legacy_fig12_cluster_matches_golden() {
     use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
     let (profiles, _rates, reqs) = fig12_workload(HORIZON_MS, SEED);

@@ -1,0 +1,288 @@
+//! Lifecycle subsystem integration + property tests: the long-tail
+//! acceptance scenario (shipped config), request conservation under
+//! cold starts/evictions/scale-to-zero, memory-accounting conservation
+//! of the [`ModelStore`], and router/tombstone safety (JSQ/P2C/RR never
+//! dispatch to a deactivated replica).
+
+use dstack::cluster::{GpuSched, PlacementPolicy, Replica, Router, RoutingPolicy};
+use dstack::lifecycle::{
+    longtail_gpus, longtail_workload, serve_longtail, EvictionPolicy, LifecycleCfg, ModelStore,
+};
+use dstack::prop_assert;
+use dstack::util::prop::Cases;
+use std::path::PathBuf;
+
+fn config_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/cluster_longtail_zipf.json")
+}
+
+#[test]
+fn shipped_longtail_scenario_meets_acceptance() {
+    // The `dstack lifecycle --config rust/configs/cluster_longtail_zipf.json`
+    // acceptance run, at a test-friendly horizon: a 24-model Zipf(1.1)
+    // fleet on 2 GPUs whose combined resident budget holds fewer than
+    // half the fleet's weights.
+    let mut sc = dstack::config::Scenario::from_file(&config_path()).expect("shipped config");
+    sc.horizon_ms = 4_000.0;
+    let lc = sc.lifecycle.clone().expect("lifecycle block");
+    assert_eq!(lc.n_models, 24);
+    let rep = dstack::config::run_lifecycle_scenario(&sc);
+    let stats = rep.lifecycle.as_ref().expect("lifecycle stats attached");
+
+    // The working set really oversubscribes the budget by > 2x.
+    let budgets: u64 = 2 * lc.cfg.mem_budget_mib;
+    let total_mem = 26_700; // 24 cycled zoo models (see profile::zoo)
+    assert!(total_mem > 2 * budgets, "scenario no longer memory-oversubscribed");
+
+    // Eviction and cold-start machinery actually engaged.
+    assert!(stats.cold_starts > 0, "no cold starts");
+    assert!(stats.evictions > 0, "no evictions");
+    assert!(stats.mib_loaded > 0);
+    assert!(stats.warm_hits > 0, "the head should stay warm");
+
+    // Resident memory never exceeded the budget on either GPU, and at
+    // the horizon fewer than half the fleet is resident anywhere.
+    for (g, &peak) in stats.peak_resident_mib.iter().enumerate() {
+        assert!(peak <= lc.cfg.mem_budget_mib, "gpu {g}: peak {peak} MiB over budget");
+    }
+    let resident_total: u64 = stats.resident_final.iter().sum();
+    assert!(resident_total <= 12, "more than half the fleet resident: {resident_total}");
+
+    // Zero admission of requests to never-resident models: a model
+    // without replicas serves nothing and counts every request as
+    // rejected; everything else was admitted deliberately.
+    for m in 0..24 {
+        if !rep.admitted[m] {
+            assert_eq!(rep.served[m], 0, "never-resident model {m} served traffic");
+            assert!(rep.replica_map[m].is_empty());
+        }
+    }
+    assert!(rep.total_throughput() > 0.0);
+    assert!(stats.goodput_rps > 0.0);
+}
+
+#[test]
+fn warmness_aware_routing_beats_oblivious_jsq() {
+    // The bench_lifecycle acceptance pinned as a test: warmness-aware
+    // routing must reach warm-oblivious JSQ's goodput at no worse an
+    // SLO miss rate on the long-tail fleet.
+    let horizon_ms = 3_000.0;
+    let seed = 77;
+    let (profiles, rates, reqs) = longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = longtail_gpus();
+    let run = |warm: bool| {
+        serve_longtail(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &LifecycleCfg { warm_routing: warm, mem_budget_mib: 4_096, ..Default::default() },
+            &reqs,
+            horizon_ms,
+            seed,
+        )
+    };
+    let oblivious = run(false);
+    let warm = run(true);
+    let g = |r: &dstack::cluster::ClusterReport| r.lifecycle.as_ref().unwrap().goodput_rps;
+    let v = |r: &dstack::cluster::ClusterReport| r.violations_per_sec.iter().sum::<f64>();
+    assert!(
+        g(&warm) >= g(&oblivious),
+        "warmness-aware goodput {} < oblivious {}",
+        g(&warm),
+        g(&oblivious)
+    );
+    assert!(
+        v(&warm) <= v(&oblivious) + 1e-9,
+        "warmness-aware viol/s {} > oblivious {}",
+        v(&warm),
+        v(&oblivious)
+    );
+}
+
+#[test]
+fn lifecycle_conserves_requests_on_random_fleets() {
+    Cases::new(6).run(|g| {
+        let n = g.usize_in(4, 10);
+        let total = g.f64_in(100.0, 400.0);
+        let seed = g.u64();
+        let horizon_ms = 800.0;
+        let (profiles, rates, reqs) = longtail_workload(n, 1.1, total, horizon_ms, seed);
+        let cfg = LifecycleCfg {
+            eviction: *g.pick(EvictionPolicy::all()),
+            mem_budget_mib: [2_048, 3_072, 0][g.usize_in(0, 2)],
+            idle_timeout_ms: [0.0, 400.0][g.usize_in(0, 1)],
+            warm_routing: g.bool(),
+            ..Default::default()
+        };
+        let routing = *g.pick(RoutingPolicy::all());
+        let rep = serve_longtail(
+            &profiles,
+            &rates,
+            &longtail_gpus(),
+            PlacementPolicy::LoadBalance,
+            routing,
+            GpuSched::Dstack,
+            &cfg,
+            &reqs,
+            horizon_ms,
+            seed,
+        );
+        // 1. Conservation: every offered request is served, dropped or
+        //    rejected — across cold starts, evictions and re-routes.
+        let mut offered = vec![0u64; n];
+        for r in &reqs {
+            offered[r.model] += 1;
+        }
+        for m in 0..n {
+            prop_assert!(
+                rep.served[m] + rep.dropped[m] + rep.rejected[m] == offered[m],
+                "model {m}: {} + {} + {} != {}",
+                rep.served[m],
+                rep.dropped[m],
+                rep.rejected[m],
+                offered[m]
+            );
+            prop_assert!(rep.admitted[m] || rep.served[m] == 0, "rejected model {m} served");
+        }
+        // 2. Resident memory never exceeded the per-GPU budget.
+        let stats = rep.lifecycle.as_ref().expect("stats");
+        for (gi, &peak) in stats.peak_resident_mib.iter().enumerate() {
+            let budget = if cfg.mem_budget_mib == 0 { 16 * 1024 } else { cfg.mem_budget_mib };
+            prop_assert!(peak <= budget, "gpu {gi}: peak {peak} > budget {budget}");
+        }
+        // 3. Served work only lands on assigned replicas.
+        for (gi, gr) in rep.per_gpu.iter().enumerate() {
+            for share in &gr.models {
+                prop_assert!(
+                    rep.replica_map[share.model].contains(&gi),
+                    "gpu {gi} served model {} without hosting it",
+                    share.model
+                );
+            }
+        }
+        // 4. Determinism.
+        let again = serve_longtail(
+            &profiles,
+            &rates,
+            &longtail_gpus(),
+            PlacementPolicy::LoadBalance,
+            routing,
+            GpuSched::Dstack,
+            &cfg,
+            &reqs,
+            horizon_ms,
+            seed,
+        );
+        prop_assert!(
+            rep.to_json().to_string_compact() == again.to_json().to_string_compact(),
+            "non-deterministic lifecycle report"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn model_store_accounting_conserves_memory() {
+    // Random load/evict/release/reload sequences: `used_mib` always
+    // equals the sum of resident footprints, never exceeds capacity,
+    // and every eviction frees exactly the victim's footprint.
+    Cases::new(128).run(|g| {
+        let capacity = 2_000 + g.usize_in(0, 4_000) as u64;
+        let policy = *g.pick(EvictionPolicy::all());
+        let mut store = ModelStore::new(capacity, policy);
+        let n_models = g.usize_in(3, 12);
+        let mems: Vec<u64> = (0..n_models).map(|_| 200 + g.usize_in(0, 1_500) as u64).collect();
+        let mut now = 0u64;
+        for _ in 0..64 {
+            now += g.usize_in(1, 1_000) as u64;
+            let m = g.usize_in(0, n_models - 1);
+            match g.usize_in(0, 3) {
+                0 => {
+                    if !store.is_resident(m) {
+                        if let Some(victims) = store.begin_load(now, m, mems[m], 300.0, false) {
+                            for v in &victims {
+                                prop_assert!(*v != m, "evicted the model being loaded");
+                                prop_assert!(!store.is_resident(*v), "victim still resident");
+                            }
+                            store.complete_load(now, m);
+                        } else {
+                            prop_assert!(
+                                mems[m] > capacity,
+                                "load of {} MiB failed under capacity {capacity} with no pins",
+                                mems[m]
+                            );
+                        }
+                    }
+                }
+                1 => store.touch(now, m),
+                2 => {
+                    store.release(m);
+                }
+                _ => {
+                    if store.is_warm(m) {
+                        prop_assert!(store.release(m), "warm unpinned release refused");
+                        prop_assert!(!store.is_resident(m));
+                    }
+                }
+            }
+            // Invariant: accounting conserves memory after every op.
+            let sum: u64 = store.residents().iter().map(|r| r.mem_mib).sum();
+            prop_assert!(store.used_mib() == sum, "used {} != sum {sum}", store.used_mib());
+            prop_assert!(store.used_mib() <= capacity, "store over capacity");
+            prop_assert!(store.peak_mib() <= capacity);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_never_dispatches_to_tombstoned_replicas() {
+    // The contract every cluster driver (controlplane, lifecycle)
+    // relies on: the routable set passed to the router excludes
+    // deactivated (tombstoned) replicas, and the router — under every
+    // policy — only ever returns an index into that set. Random replica
+    // sets with random tombstone patterns, all three policies.
+    Cases::new(128).run(|g| {
+        let n_total = g.usize_in(1, 6);
+        let active: Vec<bool> = (0..n_total).map(|_| g.bool()).collect();
+        let all: Vec<(Replica, bool)> = (0..n_total)
+            .map(|i| {
+                let rep = Replica {
+                    gpu: i,
+                    local: g.usize_in(0, 3),
+                    pct: 20 + 10 * (i as u32 % 4),
+                    batch: 16,
+                    capacity_rps: 100.0 + i as f64,
+                };
+                (rep, active[i])
+            })
+            .collect();
+        // The driver-side filter (controlplane::routable_of semantics).
+        let routable: Vec<Replica> =
+            all.iter().filter(|(_, a)| *a).map(|(r, _)| r.clone()).collect();
+        if routable.is_empty() {
+            // Drivers count these requests as rejected and never call
+            // the router — nothing to check.
+            return Ok(());
+        }
+        for policy in RoutingPolicy::all() {
+            let mut router = Router::new(*policy, 1, g.u64());
+            for _ in 0..16 {
+                let backlogs: Vec<usize> =
+                    (0..routable.len()).map(|_| g.usize_in(0, 20)).collect();
+                let pick = router.route(0, &routable, |r| {
+                    backlogs[routable.iter().position(|x| x.gpu == r.gpu).unwrap()]
+                });
+                prop_assert!(pick < routable.len(), "{policy:?} picked out of range");
+                prop_assert!(
+                    active[routable[pick].gpu],
+                    "{policy:?} dispatched to a tombstoned replica"
+                );
+            }
+        }
+        Ok(())
+    });
+}
