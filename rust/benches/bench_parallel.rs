@@ -1,0 +1,138 @@
+//! Serial-vs-parallel wall-clock of the cluster execution core on a
+//! 16-GPU Zipf fleet — the workload class the ROADMAP names as the
+//! wall-clock bottleneck for 10+ GPU sweeps.
+//!
+//! Setup: 32 Zipf(0.9)-popular models knee-packed onto 16 V100s and
+//! served through `run_placement` with JSQ routing and per-GPU D-STACK
+//! schedulers. Arrivals are quantized to a 2 ms ingress tick (a batched
+//! front-end handing the cluster its accepted requests once per tick),
+//! which is also what makes the epochs of the execution core *fat*:
+//! every barrier routes a burst that touches most engines, so the
+//! fanned-out stepping has real work per epoch. Un-quantized streams
+//! barrier at every single arrival; those epochs fall under the core's
+//! fan-out threshold and run inline, so the parallel path degrades to
+//! serial instead of losing time to synchronization.
+//!
+//! Asserts (1) byte-identical reports between `threads = 1` and the
+//! parallel run — determinism is the contract that makes the pool safe
+//! to default on — and (2) wall-clock speedup > 1.0 whenever the host
+//! actually has more than one core. Writes `BENCH_parallel.json` with
+//! the headline serial/parallel wall-clock numbers (best-of-N ms) for
+//! the perf trajectory CI uploads.
+
+use dstack::bench::Bench;
+use dstack::cluster::{
+    place, run_placement_with, GpuSched, Parallelism, PlacementPolicy, RoutingPolicy,
+};
+use dstack::lifecycle::longtail_workload;
+use dstack::profile::{GpuSpec, V100};
+use dstack::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let horizon_ms = 5_000.0;
+    let n_gpus = 16usize;
+    let n_models = 32usize;
+    let total_rps = 6_000.0;
+    const TICK_US: u64 = 2_000;
+
+    let (profiles, rates, mut reqs) =
+        longtail_workload(n_models, 0.9, total_rps, horizon_ms, 99);
+    // Quantize arrivals to the ingress tick (deadlines shift with their
+    // arrival so each request keeps its full SLO window).
+    for r in reqs.iter_mut() {
+        let q = (r.arrival / TICK_US) * TICK_US;
+        r.deadline -= r.arrival - q;
+        r.arrival = q;
+    }
+    let gpus: Vec<GpuSpec> = vec![V100.clone(); n_gpus];
+    let pl = place(&profiles, &rates, &gpus, PlacementPolicy::LoadBalance);
+    let hosted: usize = pl.hosted.iter().map(|h| h.len()).sum();
+    println!(
+        "fleet: {n_models} models ({hosted} replicas) on {n_gpus}xV100, {total_rps:.0} req/s, \
+         {} requests over {horizon_ms:.0} ms, ingress tick {} ms",
+        reqs.len(),
+        TICK_US / 1_000
+    );
+
+    let run = |threads: Parallelism| {
+        run_placement_with(
+            &profiles,
+            &gpus,
+            &pl,
+            &reqs,
+            horizon_ms,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            7,
+            "bench_parallel",
+            threads,
+        )
+    };
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // Determinism first: the parallel report must be byte-identical.
+    let a = run(Parallelism::Threads(1)).to_json().to_string_compact();
+    let b = run(Parallelism::Threads(threads)).to_json().to_string_compact();
+    assert_eq!(a, b, "threads={threads} report diverged from the serial report");
+    println!("determinism: threads=1 and threads={threads} reports are byte-identical");
+
+    // Best-of-5 minima: robust against transient load on shared CI
+    // runners (GitHub-hosted ubuntu runners have 4 vCPUs, which leaves
+    // real margin; a loaded 2-core host is the worst case and still
+    // measures the minimum over five runs of each mode).
+    let cfg = Bench::default()
+        .warmup(Duration::from_millis(200))
+        .measure(Duration::from_millis(1_500))
+        .iters(5, 50);
+    let serial = cfg.run("parallel/serial", || {
+        dstack::bench::black_box(run(Parallelism::Threads(1)));
+    });
+    let parallel = cfg.run(&format!("parallel/threads={threads}"), || {
+        dstack::bench::black_box(run(Parallelism::Threads(threads)));
+    });
+
+    // Best-of-N: wall-clock minima are the robust speedup statistic.
+    let serial_ms = serial.min_ns * 1e-6;
+    let parallel_ms = parallel.min_ns * 1e-6;
+    let speedup = serial_ms / parallel_ms.max(1e-9);
+    println!(
+        "serial {serial_ms:.1} ms vs parallel({threads}) {parallel_ms:.1} ms -> {speedup:.2}x"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("parallel")),
+        ("gpus", Json::from(n_gpus as u64)),
+        ("models", Json::from(n_models as u64)),
+        ("requests", Json::from(reqs.len() as u64)),
+        ("threads", Json::from(threads as u64)),
+        ("serial_ms", Json::from(serial_ms)),
+        ("parallel_ms", Json::from(parallel_ms)),
+        ("speedup", Json::from(speedup)),
+        ("results", Json::Arr(vec![serial.to_json(), parallel.to_json()])),
+    ]);
+    let path = std::path::Path::new("BENCH_parallel.json");
+    dstack::util::write_file(path, &json.to_string_pretty()).unwrap();
+    println!("machine-readable summary: {}", path.display());
+
+    // Single-core hosts (CI fallback runners) can't speed up at all. On
+    // hosts with >= 4 cores (GitHub-hosted runners included) the
+    // fan-out must strictly beat the serial path on this fleet; a
+    // loaded 2-3-core box can't guarantee a strict win over measurement
+    // noise, so there the gate is no-material-regression — the JSON
+    // summary records the exact ratio either way.
+    if threads >= 4 {
+        assert!(
+            speedup > 1.0,
+            "parallel stepping ({parallel_ms:.1} ms on {threads} threads) must beat the \
+             serial path ({serial_ms:.1} ms) on a 16-GPU fleet"
+        );
+    } else if threads > 1 {
+        assert!(
+            speedup > 0.9,
+            "parallel stepping ({parallel_ms:.1} ms on {threads} threads) regressed \
+             materially vs serial ({serial_ms:.1} ms)"
+        );
+    }
+}

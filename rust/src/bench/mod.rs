@@ -112,6 +112,25 @@ impl Bench {
         self
     }
 
+    /// Builder-style warmup override (macro-benches with long iters).
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    /// Builder-style measurement-window override.
+    pub fn measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Builder-style iteration bounds override.
+    pub fn iters(mut self, min: u64, max: u64) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
     /// Run `f` repeatedly and collect per-iteration wall times.
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
         // Warmup.

@@ -1,0 +1,412 @@
+//! Shared cluster execution core: bulk-synchronous engine stepping with
+//! deterministic barriers (the wall-clock backbone of every multi-GPU
+//! driver — see DESIGN.md §4.7).
+//!
+//! The three cluster drivers ([`crate::cluster::run_placement`],
+//! [`crate::controlplane::run_adaptive`],
+//! [`crate::lifecycle::run_lifecycle`]) used to carry one hand-rolled
+//! copy each of the same global-clock loop, stepping every per-GPU
+//! engine on a single thread. The key structural fact they all share:
+//! per-GPU execution is *independent between global interaction points*.
+//! Only three things ever need a cluster-wide view:
+//!
+//! 1. **routing** — a request is dispatched against the live backlog of
+//!    every candidate replica at its arrival instant;
+//! 2. **control ticks** — the adaptive plane samples demand and may
+//!    rebalance replicas across engines;
+//! 3. **lifecycle events** — load maturities, pending replica
+//!    activations and idle expiries mutate engine model tables.
+//!
+//! Everything else an engine does (batch completions, policy timers,
+//! dispatch rounds) touches only its own state. So the core advances the
+//! cluster in *epochs*: compute the next global barrier time (next
+//! arrival, control tick, or lifecycle event), run the driver's serial
+//! barrier work at it — which routes arrivals against engine backlogs
+//! exactly as the serial loops did — then fan the per-engine stepping
+//! out to a worker pool and let each engine replay its own internal
+//! event sequence up to the *next* barrier, in parallel.
+//!
+//! # Determinism
+//!
+//! Thread count is not allowed to change results, byte for byte:
+//!
+//! - Barrier times depend only on the request stream and driver state,
+//!   never on which thread stepped an engine.
+//! - All cross-engine reads (backlog probes, rebalance surgery, idle
+//!   sweeps) happen in the serial barrier phase, when every engine has
+//!   processed exactly its events *strictly before* the barrier — the
+//!   same state the serial loop exposed, because in that loop every
+//!   engine-internal event was itself a global minimum and engines were
+//!   stepped at their own event times.
+//! - Between barriers each engine steps at its own event times in
+//!   order, one [`Sim::step_to`] per event, exactly the call sequence
+//!   the serial loop produced. Engines never share mutable state, so
+//!   partitioning them over threads is pure scheduling.
+//!
+//! Hence a fixed (placement, routing, seed, stream) tuple yields an
+//! identical `ClusterReport` JSON for `threads = 1` and `threads = N` —
+//! the property `rust/tests/parallel_exec.rs` locks in for all three
+//! drivers.
+//!
+//! # Worker pool
+//!
+//! No dependencies are reachable in the build image, so the pool is
+//! plain `std`: scoped threads ([`std::thread::scope`]) that live for
+//! the whole run, fed per-epoch batches over [`std::sync::mpsc`]
+//! channels. Engines *move* into a batch and move back when the worker
+//! returns it (ownership ping-pong), which keeps the pool 100% safe
+//! code — no shared-mutability cells, no unsafe partitioning. Epochs
+//! with fewer than `FANOUT_MIN` busy engines are stepped inline on
+//! the driver thread: for small clusters the pool is pure bypass, and
+//! `threads = 1` skips spawning entirely (the legacy serial path).
+
+use crate::gpu::Us;
+use crate::metrics::RunReport;
+use crate::sim::{Policy, Sim};
+use crate::workload::Request;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Engine-stepping thread budget for a cluster run — the `parallelism`
+/// scenario knob and the CLI `--threads` flag (docs/CONFIG.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// One stepping lane per available core (the default).
+    #[default]
+    Auto,
+    /// Exactly `n` lanes; `1` is the legacy serial path.
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// Parse the config/CLI spelling: `"auto"` or an integer ≥ 1.
+    pub fn parse(s: &str) -> Result<Parallelism, String> {
+        if s == "auto" {
+            return Ok(Parallelism::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Parallelism::Threads(n)),
+            _ => Err(format!("parallelism must be \"auto\" or an integer >= 1, got '{s}'")),
+        }
+    }
+
+    /// Number of stepping lanes this run may use (≥ 1).
+    pub fn resolve(self) -> usize {
+        match self {
+            Parallelism::Auto => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+            Parallelism::Threads(n) => n.max(1),
+        }
+    }
+
+    /// Canonical config spelling (`"auto"` or the number).
+    pub fn label(self) -> String {
+        match self {
+            Parallelism::Auto => "auto".to_string(),
+            Parallelism::Threads(n) => n.to_string(),
+        }
+    }
+}
+
+/// One per-GPU engine: a [`Sim`] plus the policy driving it. Shared by
+/// all cluster drivers; the control plane and the memory manager
+/// additionally rebuild the policy after tombstone surgery
+/// ([`Self::rebuild_policy`]).
+pub(crate) struct ExecEngine {
+    pub(crate) sim: Sim,
+    pub(crate) policy: Box<dyn Policy>,
+}
+
+impl ExecEngine {
+    fn step(&mut self, t: Us, horizon: Us) {
+        self.sim.step_to(t, self.policy.as_mut(), horizon);
+    }
+
+    /// One engine's share of an epoch: finish the barrier time (when it
+    /// was touched by routing/surgery or has an event due there), then
+    /// replay its internal events strictly before the next barrier —
+    /// each at its own timestamp, exactly as the serial global loop
+    /// stepped it.
+    fn advance(&mut self, step_now: bool, now: Us, drain_to: Us, horizon: Us) {
+        if step_now {
+            self.step(now, horizon);
+        }
+        while let Some(w) = self.sim.next_event_time() {
+            if w >= drain_to {
+                break;
+            }
+            self.step(w, horizon);
+        }
+    }
+
+    /// Rebuild the per-GPU policy from the engine's current entry table,
+    /// masking tombstones so retired models hold no plan capacity,
+    /// slices or shares.
+    pub(crate) fn rebuild_policy(&mut self, sched: super::GpuSched) {
+        let mask = self.sim.active_mask();
+        self.policy = sched.build_masked(&self.sim.models, &mask);
+    }
+
+    /// Horizon wrap-up under the engine's own policy name.
+    pub(crate) fn finalize(&mut self, horizon: Us) -> RunReport {
+        let name = self.policy.name();
+        self.sim.finalize(name, horizon)
+    }
+}
+
+/// Driver-specific half of an epoch: everything that needs the global
+/// view, executed serially at each barrier. The core supplies the
+/// arrival stream and the engine stepping; the driver supplies barrier
+/// times of its own (ticks, load maturities, …) and the barrier work.
+pub(crate) trait EpochDriver {
+    /// Earliest pending driver event (control tick, pending activation,
+    /// load maturity, idle expiry). `None` when only arrivals remain.
+    fn next_event(&self) -> Option<Us>;
+
+    /// Barrier work before arrivals are routed (mature loads/activations
+    /// due at `t`). Mark engines whose tables changed in `touched`.
+    fn pre_arrivals(
+        &mut self,
+        _t: Us,
+        _engines: &mut [Option<ExecEngine>],
+        _touched: &mut [bool],
+    ) {
+    }
+
+    /// Route one arrival at `t` (reads live backlogs, injects, marks
+    /// `touched`). Requests arrive owned: injection moves them.
+    fn route(
+        &mut self,
+        t: Us,
+        req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut [bool],
+    );
+
+    /// Barrier work after arrivals (control ticks, idle sweeps).
+    fn post_arrivals(
+        &mut self,
+        _t: Us,
+        _engines: &mut [Option<ExecEngine>],
+        _touched: &mut [bool],
+    ) {
+    }
+}
+
+/// One epoch's worth of engine stepping shipped to a worker: the
+/// engines move in, are advanced, and move back.
+struct Batch {
+    /// (engine slot, engine, step-at-barrier?).
+    items: Vec<(usize, ExecEngine, bool)>,
+    now: Us,
+    drain_to: Us,
+    horizon: Us,
+}
+
+struct Worker {
+    cmd: Sender<Batch>,
+    ret: Receiver<Batch>,
+}
+
+struct Pool {
+    workers: Vec<Worker>,
+}
+
+/// Below this many busy engines an epoch is stepped inline: the fan-out
+/// overhead (one channel round-trip per worker) only pays for itself
+/// when several engines have real work between barriers.
+const FANOUT_MIN: usize = 4;
+
+/// Drive `engines` over `requests` to `horizon` under `driver`,
+/// advancing in bulk-synchronous epochs with up to `threads` stepping
+/// lanes. The stream is cloned once into a work queue up front so every
+/// injection *moves* a request instead of cloning it.
+pub(crate) fn run_epochs<D: EpochDriver>(
+    engines: &mut [Option<ExecEngine>],
+    requests: &[Request],
+    horizon: Us,
+    threads: Parallelism,
+    driver: &mut D,
+) {
+    // More lanes than engines can never help: each engine is stepped by
+    // exactly one lane per epoch. Capping here also bounds the spawn
+    // count for arbitrary user-supplied `--threads` values. Clusters
+    // too small to ever clear the fan-out threshold skip the pool
+    // entirely — no spawns, no channels, pure serial path.
+    let lanes = threads.resolve().min(engines.len());
+    let mut queue: VecDeque<Request> = requests.to_vec().into();
+    if lanes <= 1 || engines.len() < FANOUT_MIN {
+        epoch_loop(engines, &mut queue, horizon, driver, None);
+        return;
+    }
+    std::thread::scope(|s| {
+        // `lanes - 1` workers; the driver thread is the remaining lane.
+        let mut workers = Vec::with_capacity(lanes - 1);
+        for _ in 0..lanes - 1 {
+            let (cmd_tx, cmd_rx) = channel::<Batch>();
+            let (ret_tx, ret_rx) = channel::<Batch>();
+            s.spawn(move || {
+                while let Ok(mut b) = cmd_rx.recv() {
+                    for (_, e, step_now) in b.items.iter_mut() {
+                        e.advance(*step_now, b.now, b.drain_to, b.horizon);
+                    }
+                    if ret_tx.send(b).is_err() {
+                        break;
+                    }
+                }
+            });
+            workers.push(Worker { cmd: cmd_tx, ret: ret_rx });
+        }
+        let mut pool = Pool { workers };
+        epoch_loop(engines, &mut queue, horizon, driver, Some(&mut pool));
+        // Dropping the pool's senders ends the workers; the scope joins.
+    });
+}
+
+fn epoch_loop<D: EpochDriver>(
+    engines: &mut [Option<ExecEngine>],
+    queue: &mut VecDeque<Request>,
+    horizon: Us,
+    driver: &mut D,
+    mut pool: Option<&mut Pool>,
+) {
+    let mut touched = vec![false; engines.len()];
+    // Scratch for advance_phase, reused across epochs (capacity is
+    // bounded by the engine count; un-quantized streams barrier at
+    // every arrival, so this would otherwise allocate per request).
+    let mut work: Vec<(usize, bool)> = Vec::with_capacity(engines.len());
+    loop {
+        let t_arr = queue.front().map(|r| r.arrival);
+        let t_drv = driver.next_event();
+        let Some(t) = [t_arr, t_drv].into_iter().flatten().min() else { break };
+        if t >= horizon {
+            break;
+        }
+        touched.fill(false);
+        driver.pre_arrivals(t, engines, &mut touched);
+        while queue.front().is_some_and(|r| r.arrival <= t) {
+            let r = queue.pop_front().expect("checked front");
+            driver.route(t, r, engines, &mut touched);
+        }
+        driver.post_arrivals(t, engines, &mut touched);
+        // The next barrier is known now — arrivals and driver events
+        // only change during serial phases — so engines can run ahead
+        // to it without any cross-engine coordination.
+        let drain_to = [queue.front().map(|r| r.arrival), driver.next_event()]
+            .into_iter()
+            .flatten()
+            .min()
+            .unwrap_or(horizon)
+            .min(horizon);
+        advance_phase(engines, &touched, &mut work, t, drain_to, horizon, pool.as_deref_mut());
+    }
+    // Tail drain: no barriers remain, but engines may still hold events
+    // inside the horizon (the serial loops processed exactly those).
+    touched.fill(false);
+    advance_phase(engines, &touched, &mut work, 0, horizon, horizon, pool.as_deref_mut());
+}
+
+/// Step every engine with work in `[now, drain_to)`, fanning out to the
+/// pool when enough of them are busy. `work` is caller-owned scratch.
+#[allow(clippy::too_many_arguments)]
+fn advance_phase(
+    engines: &mut [Option<ExecEngine>],
+    touched: &[bool],
+    work: &mut Vec<(usize, bool)>,
+    now: Us,
+    drain_to: Us,
+    horizon: Us,
+    pool: Option<&mut Pool>,
+) {
+    work.clear();
+    for (g, slot) in engines.iter().enumerate() {
+        let Some(e) = slot.as_ref() else { continue };
+        let w = e.sim.next_event_time();
+        let step_now = touched[g] || w.is_some_and(|w| w <= now);
+        if step_now || w.is_some_and(|w| w < drain_to) {
+            work.push((g, step_now));
+        }
+    }
+    match pool {
+        Some(pool) if work.len() >= FANOUT_MIN => {
+            fan_out(pool, engines, work, now, drain_to, horizon);
+        }
+        _ => {
+            for &(g, step_now) in work.iter() {
+                engines[g]
+                    .as_mut()
+                    .expect("busy engine vanished")
+                    .advance(step_now, now, drain_to, horizon);
+            }
+        }
+    }
+}
+
+fn fan_out(
+    pool: &mut Pool,
+    engines: &mut [Option<ExecEngine>],
+    work: &[(usize, bool)],
+    now: Us,
+    drain_to: Us,
+    horizon: Us,
+) {
+    let lanes = pool.workers.len() + 1;
+    let mut batches: Vec<Vec<(usize, ExecEngine, bool)>> =
+        (0..lanes).map(|_| Vec::new()).collect();
+    for (i, &(g, step_now)) in work.iter().enumerate() {
+        let e = engines[g].take().expect("busy engine vanished");
+        batches[i % lanes].push((g, e, step_now));
+    }
+    let mut mine = batches.swap_remove(0);
+    let mut sent: Vec<usize> = Vec::new();
+    for (wi, items) in batches.into_iter().enumerate() {
+        if items.is_empty() {
+            continue;
+        }
+        pool.workers[wi]
+            .cmd
+            .send(Batch { items, now, drain_to, horizon })
+            .expect("exec worker hung up");
+        sent.push(wi);
+    }
+    for (_, e, step_now) in mine.iter_mut() {
+        e.advance(*step_now, now, drain_to, horizon);
+    }
+    for (g, e, _) in mine {
+        engines[g] = Some(e);
+    }
+    for wi in sent {
+        let b = pool.workers[wi].ret.recv().expect("exec worker died");
+        for (g, e, _) in b.items {
+            engines[g] = Some(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_parses_and_resolves() {
+        assert_eq!(Parallelism::parse("auto"), Ok(Parallelism::Auto));
+        assert_eq!(Parallelism::parse("1"), Ok(Parallelism::Threads(1)));
+        assert_eq!(Parallelism::parse("8"), Ok(Parallelism::Threads(8)));
+        assert!(Parallelism::parse("0").is_err());
+        assert!(Parallelism::parse("-2").is_err());
+        assert!(Parallelism::parse("fast").is_err());
+        assert_eq!(Parallelism::Threads(3).resolve(), 3);
+        assert!(Parallelism::Auto.resolve() >= 1);
+        assert_eq!(Parallelism::Auto.label(), "auto");
+        assert_eq!(Parallelism::Threads(4).label(), "4");
+        assert_eq!(Parallelism::default(), Parallelism::Auto);
+    }
+
+    #[test]
+    fn exec_engine_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ExecEngine>();
+        assert_send::<Batch>();
+    }
+}

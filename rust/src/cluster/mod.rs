@@ -15,7 +15,13 @@
 //!   a single global virtual clock, feeding them *routed* requests
 //!   instead of pre-split streams, and aggregates a [`ClusterReport`]
 //!   with per-GPU packing, per-model replica map, reject/shed counts and
-//!   p99 latency per model.
+//!   p99 latency per model;
+//! - [`exec`] is the execution core all three cluster drivers (this
+//!   module, [`crate::controlplane`], [`crate::lifecycle`]) run on:
+//!   bulk-synchronous epochs whose barriers are the routing/control
+//!   instants, with per-GPU engine stepping fanned out to a worker pool
+//!   ([`Parallelism`], the `--threads` flag) — byte-identical results
+//!   for any thread count.
 //!
 //! The paper's fixed scenarios ([`ClusterPolicy`]) are retained as thin
 //! layouts over the same engine: every GPU runs an independent scheduler
@@ -29,15 +35,17 @@
 //! drift detector fires and migrates replicas incrementally, reusing
 //! this module's engine/routing machinery unchanged.
 
+pub mod exec;
 pub mod placement;
 pub mod routing;
 
+pub use exec::Parallelism;
 pub use placement::{
     op_point, place, plan_residency, Placement, PlacementPolicy, Replica, ResidencyPlan,
 };
 pub use routing::{Router, RoutingPolicy};
 
-use crate::gpu::ms_to_us;
+use crate::gpu::{ms_to_us, Us};
 use crate::metrics::RunReport;
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sched::{dstack::Dstack, gslice::Gslice, temporal::Temporal, triton::Triton};
@@ -45,6 +53,8 @@ use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::workload::Request;
+use exec::{run_epochs, EpochDriver, ExecEngine};
+use routing::BacklogCache;
 
 /// Which scheduler runs on each GPU of the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -272,34 +282,57 @@ pub fn entries_for_gpu(profiles: &[ModelProfile], gpu: &GpuSpec) -> Vec<ModelEnt
         .collect()
 }
 
-struct Engine {
-    sim: Sim,
-    policy: Box<dyn Policy>,
+/// The static driver's barrier work: admission, routing, injection.
+/// Placement never changes mid-run, so there are no driver events and
+/// no pre/post barrier phases — every barrier is an arrival instant.
+struct PlacementDriver<'a> {
+    pl: &'a Placement,
+    router: Router,
+    cache: BacklogCache,
+    rejected: Vec<u64>,
 }
 
-/// One per-GPU engine whose model table is reconfigured at runtime
-/// (control-plane migrations, lifecycle loads/evictions). Shared by
-/// [`crate::controlplane`] and [`crate::lifecycle`] so masked policy
-/// rebuilds have a single definition.
-pub(crate) struct MaskedEngine {
-    pub(crate) sim: Sim,
-    pub(crate) policy: Box<dyn Policy>,
-}
+impl EpochDriver for PlacementDriver<'_> {
+    fn next_event(&self) -> Option<Us> {
+        None
+    }
 
-impl MaskedEngine {
-    /// Rebuild the per-GPU policy from the engine's current entry
-    /// table, masking tombstones so retired models hold no plan
-    /// capacity, slices or shares.
-    pub(crate) fn rebuild_policy(&mut self, sched: GpuSched) {
-        let mask = self.sim.active_mask();
-        self.policy = sched.build_masked(&self.sim.models, &mask);
+    fn pre_arrivals(
+        &mut self,
+        _t: Us,
+        _engines: &mut [Option<ExecEngine>],
+        _touched: &mut [bool],
+    ) {
+        self.cache.reset();
+    }
+
+    fn route(
+        &mut self,
+        _t: Us,
+        mut req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut [bool],
+    ) {
+        if !self.pl.admitted[req.model] {
+            self.rejected[req.model] += 1;
+            return;
+        }
+        let reps = &self.pl.replicas[req.model];
+        let cache = &mut self.cache;
+        let pick = self.router.route(req.model, reps, |rep| cache.backlog(engines, rep));
+        let rep = &reps[pick];
+        req.model = rep.local;
+        engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
+        cache.note_inject(rep.gpu, rep.local);
+        touched[rep.gpu] = true;
     }
 }
 
 /// Drive one engine per GPU over `requests` under `placement`, routing
-/// each request at its arrival instant. Deterministic: a fixed
+/// each request at its arrival instant, with the default
+/// ([`Parallelism::Auto`]) stepping budget. Deterministic: a fixed
 /// (placement, routing, seed, stream) tuple always yields the same
-/// [`ClusterReport`].
+/// [`ClusterReport`] — for *any* thread count (see [`exec`]).
 #[allow(clippy::too_many_arguments)]
 pub fn run_placement(
     profiles: &[ModelProfile],
@@ -312,6 +345,34 @@ pub fn run_placement(
     seed: u64,
     label: &str,
 ) -> ClusterReport {
+    run_placement_with(
+        profiles,
+        gpus,
+        pl,
+        requests,
+        horizon_ms,
+        routing,
+        sched,
+        seed,
+        label,
+        Parallelism::default(),
+    )
+}
+
+/// [`run_placement`] with an explicit engine-stepping thread budget.
+#[allow(clippy::too_many_arguments)]
+pub fn run_placement_with(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    pl: &Placement,
+    requests: &[Request],
+    horizon_ms: f64,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    seed: u64,
+    label: &str,
+    threads: Parallelism,
+) -> ClusterReport {
     assert_eq!(pl.n_gpus(), gpus.len(), "placement built for a different cluster");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
@@ -319,7 +380,7 @@ pub fn run_placement(
     debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
 
     // One engine per GPU that hosts anything; empty GPUs stay idle.
-    let mut engines: Vec<Option<Engine>> = (0..n_gpus)
+    let mut engines: Vec<Option<ExecEngine>> = (0..n_gpus)
         .map(|g| {
             if pl.hosted[g].is_empty() {
                 return None;
@@ -336,70 +397,22 @@ pub fn run_placement(
                 .collect();
             let policy = sched.build(&entries);
             let cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
-            Some(Engine { sim: Sim::new(cfg, entries), policy })
+            Some(ExecEngine { sim: Sim::new(cfg, entries), policy })
         })
         .collect();
 
-    let mut router = Router::new(routing, n_models, seed);
-    let mut rejected = vec![0u64; n_models];
-    let mut cursor = 0usize;
-    let mut touched = vec![false; n_gpus];
-
-    loop {
-        let t_arr = requests.get(cursor).map(|r| r.arrival);
-        let t_eng = engines
-            .iter()
-            .flatten()
-            .filter_map(|e| e.sim.next_event_time())
-            .min();
-        let Some(t) = [t_arr, t_eng].into_iter().flatten().min() else { break };
-        if t >= horizon {
-            break;
-        }
-
-        // 1. Route every arrival at t to a replica and inject it.
-        touched.fill(false);
-        while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
-            let r = &requests[cursor];
-            cursor += 1;
-            if !pl.admitted[r.model] {
-                rejected[r.model] += 1;
-                continue;
-            }
-            let reps = &pl.replicas[r.model];
-            let pick = router.route(r.model, reps, |rep| {
-                engines[rep.gpu]
-                    .as_ref()
-                    .map_or(usize::MAX, |e| e.sim.backlog_items(rep.local))
-            });
-            let rep = &reps[pick];
-            let mut req = r.clone();
-            req.model = rep.local;
-            engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
-            touched[rep.gpu] = true;
-        }
-
-        // 2. Step every engine that has due events or new arrivals. Each
-        //    engine sees exactly the event sequence it would see running
-        //    alone on its routed sub-stream.
-        for (g, slot) in engines.iter_mut().enumerate() {
-            let Some(engine) = slot else { continue };
-            let due = touched[g]
-                || engine.sim.next_event_time().is_some_and(|w| w <= t);
-            if due {
-                engine.sim.step_to(t, engine.policy.as_mut(), horizon);
-            }
-        }
-    }
+    let mut driver = PlacementDriver {
+        pl,
+        router: Router::new(routing, n_models, seed),
+        cache: BacklogCache::default(),
+        rejected: vec![0u64; n_models],
+    };
+    run_epochs(&mut engines, requests, horizon, threads, &mut driver);
+    let rejected = driver.rejected;
 
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
-        .map(|slot| {
-            slot.as_mut().map(|e| {
-                let name = e.policy.name();
-                e.sim.finalize(name, horizon)
-            })
-        })
+        .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
         .collect();
 
     // Aggregate per global model index.
@@ -487,10 +500,38 @@ pub fn serve_cluster(
     horizon_ms: f64,
     seed: u64,
 ) -> ClusterReport {
+    serve_cluster_with(
+        profiles,
+        offered_rps,
+        gpus,
+        placement,
+        routing,
+        sched,
+        requests,
+        horizon_ms,
+        seed,
+        Parallelism::default(),
+    )
+}
+
+/// [`serve_cluster`] with an explicit engine-stepping thread budget.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_cluster_with(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+    threads: Parallelism,
+) -> ClusterReport {
     let pl = place(profiles, offered_rps, gpus, placement);
     let label = format!("{}+{}+{}", placement.name(), routing.name(), sched.name());
-    run_placement(
-        profiles, gpus, &pl, requests, horizon_ms, routing, sched, seed, &label,
+    run_placement_with(
+        profiles, gpus, &pl, requests, horizon_ms, routing, sched, seed, &label, threads,
     )
 }
 

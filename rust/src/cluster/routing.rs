@@ -20,8 +20,10 @@
 //! the closure, which makes JSQ/P2C tie-break toward warm replicas with
 //! no router changes.
 
+use super::exec::ExecEngine;
 use super::placement::Replica;
 use crate::util::rng::Pcg32;
+use std::collections::HashMap;
 
 /// Replica-selection discipline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -119,6 +121,52 @@ impl Router {
     }
 }
 
+/// Memoizes [`crate::sim::Sim::backlog_items`] probes within one
+/// routing round (one barrier of the execution core). JSQ and P2C probe
+/// the same engines once per candidate per request, and a barrier can
+/// route dozens of requests; the probe walks the engine's running set,
+/// so re-probing is the routing hot path. Within a round a replica's
+/// backlog only changes through this module's own actions — an
+/// injection adds one item ([`Self::note_inject`]), tombstone surgery
+/// drains a queue ([`Self::invalidate`]) — so the memo can be kept
+/// exactly in sync with the live value and the cached round is
+/// byte-identical to a re-probing one.
+#[derive(Default)]
+pub(crate) struct BacklogCache {
+    /// (gpu, engine-local model) → items queued + in flight.
+    map: HashMap<(usize, usize), usize>,
+}
+
+impl BacklogCache {
+    /// Start a new routing round (call at every barrier).
+    pub(crate) fn reset(&mut self) {
+        self.map.clear();
+    }
+
+    /// The replica's backlog: cached, or probed from the live engine on
+    /// first use. Idle GPUs report `usize::MAX` (never preferred), as
+    /// the uncached probes did.
+    pub(crate) fn backlog(&mut self, engines: &[Option<ExecEngine>], rep: &Replica) -> usize {
+        *self.map.entry((rep.gpu, rep.local)).or_insert_with(|| {
+            engines[rep.gpu].as_ref().map_or(usize::MAX, |e| e.sim.backlog_items(rep.local))
+        })
+    }
+
+    /// Keep a cached entry in sync with an injection into that replica.
+    pub(crate) fn note_inject(&mut self, gpu: usize, local: usize) {
+        if let Some(v) = self.map.get_mut(&(gpu, local)) {
+            *v = v.saturating_add(1);
+        }
+    }
+
+    /// Drop a cached entry whose queue was mutated out of band
+    /// (eviction / rebalance surgery drained it): the next probe
+    /// re-reads the live engine.
+    pub(crate) fn invalidate(&mut self, gpu: usize, local: usize) {
+        self.map.remove(&(gpu, local));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +175,37 @@ mod tests {
         (0..n)
             .map(|g| Replica { gpu: g, local: 0, pct: 40, batch: 16, capacity_rps: 100.0 })
             .collect()
+    }
+
+    #[test]
+    fn backlog_cache_stays_in_sync_with_live_engine() {
+        use crate::profile::by_name;
+        use crate::sim::{entries_at_optimum, Sim, SimConfig};
+        use crate::workload::Request;
+        let entries = entries_at_optimum(&[by_name("alexnet").unwrap()]);
+        let policy = super::super::GpuSched::Dstack.build(&entries);
+        let sim = Sim::new(SimConfig::default(), entries);
+        let mut engines = vec![Some(ExecEngine { sim, policy }), None];
+        let rep = Replica { gpu: 0, local: 0, pct: 40, batch: 16, capacity_rps: 100.0 };
+        let mut cache = BacklogCache::default();
+        assert_eq!(cache.backlog(&engines, &rep), 0);
+        // Injection keeps the memo equal to the live probe.
+        engines[0]
+            .as_mut()
+            .unwrap()
+            .sim
+            .inject(Request { id: 0, model: 0, arrival: 0, deadline: 1_000 });
+        cache.note_inject(0, 0);
+        assert_eq!(cache.backlog(&engines, &rep), 1);
+        assert_eq!(engines[0].as_ref().unwrap().sim.backlog_items(0), 1);
+        // Invalidation and reset both fall back to a fresh probe.
+        cache.invalidate(0, 0);
+        assert_eq!(cache.backlog(&engines, &rep), 1);
+        cache.reset();
+        assert_eq!(cache.backlog(&engines, &rep), 1);
+        // Idle GPUs are never preferred.
+        let idle = Replica { gpu: 1, local: 0, pct: 40, batch: 16, capacity_rps: 100.0 };
+        assert_eq!(cache.backlog(&engines, &idle), usize::MAX);
     }
 
     #[test]

@@ -114,6 +114,10 @@ pub struct Scenario {
     pub models: Vec<ModelSpec>,
     /// Poisson (true) or uniform-jitter arrivals.
     pub poisson: bool,
+    /// Engine-stepping thread budget for cluster paths (`"auto"` or an
+    /// integer ≥ 1; `1` = serial). Thread count never changes results —
+    /// see [`crate::cluster::exec`].
+    pub parallelism: crate::cluster::Parallelism,
     /// Optional cluster block — see [`ClusterCfg`].
     pub cluster: Option<ClusterCfg>,
     /// Optional adaptive control-plane block (requires `cluster`) —
@@ -284,6 +288,20 @@ impl Scenario {
             }
             None => None,
         };
+        let parallelism = match j.get("parallelism") {
+            None => crate::cluster::Parallelism::Auto,
+            Some(v) => match (v.as_str(), v.as_u64()) {
+                (Some(s), _) => crate::cluster::Parallelism::parse(s)?,
+                (None, Some(n)) if n >= 1 => {
+                    crate::cluster::Parallelism::Threads(n as usize)
+                }
+                _ => {
+                    return Err(
+                        "'parallelism' must be \"auto\" or an integer >= 1".into()
+                    )
+                }
+            },
+        };
         Ok(Scenario {
             name: j.opt_str("name", "scenario").to_string(),
             gpu,
@@ -293,6 +311,7 @@ impl Scenario {
             seed: j.opt_u64("seed", 42),
             models,
             poisson: j.opt_bool("poisson", true),
+            parallelism,
             cluster,
             adaptive,
             lifecycle,
@@ -340,6 +359,7 @@ impl Scenario {
             ("horizon_ms", Json::from(self.horizon_ms)),
             ("seed", Json::from(self.seed)),
             ("poisson", Json::from(self.poisson)),
+            ("parallelism", Json::from(self.parallelism.label().as_str())),
             ("models", Json::Arr(models)),
         ];
         if let Some(c) = &self.cluster {
@@ -522,7 +542,7 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         .collect();
     let reqs = merged_stream(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::cluster::serve_cluster(
+    crate::cluster::serve_cluster_with(
         &profiles,
         &rates,
         &gpus,
@@ -532,6 +552,7 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         &reqs,
         sc.horizon_ms,
         sc.seed,
+        sc.parallelism,
     )
 }
 
@@ -554,7 +575,7 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         .collect();
     let reqs = merged_stream(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::controlplane::run_adaptive(
+    crate::controlplane::run_adaptive_with(
         &profiles,
         &initial,
         &gpus,
@@ -565,6 +586,7 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         &reqs,
         sc.horizon_ms,
         sc.seed,
+        sc.parallelism,
     )
 }
 
@@ -586,7 +608,7 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.seed,
     );
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::lifecycle::serve_longtail(
+    crate::lifecycle::serve_longtail_with(
         &profiles,
         &rates,
         &gpus,
@@ -597,6 +619,7 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         &reqs,
         sc.horizon_ms,
         sc.seed,
+        sc.parallelism,
     )
 }
 
@@ -816,6 +839,36 @@ mod tests {
         ] {
             assert!(Scenario::from_json(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn parallelism_parses_validates_and_roundtrips() {
+        use crate::cluster::Parallelism;
+        // Default is auto.
+        let sc = Scenario::from_json(EXAMPLE).unwrap();
+        assert_eq!(sc.parallelism, Parallelism::Auto);
+        // Accepted spellings: "auto", a JSON integer, a numeric string.
+        let with = |v: &str| {
+            Scenario::from_json(&format!(
+                r#"{{"parallelism": {v}, "models": [{{"name": "alexnet", "rate": 1}}]}}"#
+            ))
+        };
+        assert_eq!(with("\"auto\"").unwrap().parallelism, Parallelism::Auto);
+        assert_eq!(with("4").unwrap().parallelism, Parallelism::Threads(4));
+        assert_eq!(with("\"2\"").unwrap().parallelism, Parallelism::Threads(2));
+        assert_eq!(with("1").unwrap().parallelism, Parallelism::Threads(1));
+        // Rejected: zero, negatives, fractions, junk.
+        for bad in ["0", "-1", "2.5", "\"fast\"", "true"] {
+            assert!(with(bad).is_err(), "{bad}");
+        }
+        // Round-trips through to_json.
+        let mut sc = Scenario::from_json(CLUSTER_EXAMPLE).unwrap();
+        sc.parallelism = Parallelism::Threads(3);
+        let sc2 = Scenario::from_json(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sc2.parallelism, Parallelism::Threads(3));
+        sc.parallelism = Parallelism::Auto;
+        let sc3 = Scenario::from_json(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sc3.parallelism, Parallelism::Auto);
     }
 
     #[test]

@@ -52,9 +52,11 @@
 //! adaptive-vs-static comparison is a first-class reportable figure
 //! (`figures::fig13`, `dstack adaptive`).
 
+use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine};
+use crate::cluster::routing::BacklogCache;
 use crate::cluster::{
-    place, ClusterReport, GpuModelShare, GpuReport, GpuSched, MaskedEngine as AdEngine,
-    Placement, PlacementPolicy, Replica, Router, RoutingPolicy,
+    place, ClusterReport, GpuModelShare, GpuReport, GpuSched, Parallelism, Placement,
+    PlacementPolicy, Replica, Router, RoutingPolicy,
 };
 use crate::gpu::{ms_to_us, Us};
 use crate::metrics::RunReport;
@@ -354,7 +356,7 @@ struct LiveRep {
 /// the updated entry table. Fills in `rep.local`.
 #[allow(clippy::too_many_arguments)]
 fn activate_replica(
-    engines: &mut [Option<AdEngine>],
+    engines: &mut [Option<ExecEngine>],
     local_map: &mut [Vec<usize>],
     profiles: &[ModelProfile],
     gpus: &[GpuSpec],
@@ -366,7 +368,7 @@ fn activate_replica(
     let g = rep.gpu;
     if engines[g].is_none() {
         let sim_cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
-        engines[g] = Some(AdEngine {
+        engines[g] = Some(ExecEngine {
             sim: Sim::new(sim_cfg, Vec::new()),
             policy: sched.build(&[]),
         });
@@ -389,36 +391,6 @@ fn activate_replica(
     engine.rebuild_policy(sched);
 }
 
-/// Route one request of `model` to a replica (JSQ/P2C probe the live
-/// engine backlogs) and inject it, or count it rejected when the model
-/// has no routable replica. Shared by arrival routing and the
-/// re-routing of queues drained from removed replicas.
-fn route_and_inject(
-    router: &mut Router,
-    routable: &[Vec<Replica>],
-    engines: &mut [Option<AdEngine>],
-    rejected: &mut [u64],
-    touched: &mut [bool],
-    model: usize,
-    req: &Request,
-) {
-    let reps = &routable[model];
-    if reps.is_empty() {
-        rejected[model] += 1;
-        return;
-    }
-    let pick = router.route(model, reps, |rep| {
-        engines[rep.gpu]
-            .as_ref()
-            .map_or(usize::MAX, |e| e.sim.backlog_items(rep.local))
-    });
-    let rep = &reps[pick];
-    let mut q = req.clone();
-    q.model = rep.local;
-    engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(q);
-    touched[rep.gpu] = true;
-}
-
 /// Routable replicas of `model`: live entries whose engine slot is
 /// assigned (pending migrations are excluded until they mature).
 fn routable_of(live: &[Vec<LiveRep>], model: usize) -> Vec<Replica> {
@@ -435,11 +407,219 @@ fn routable_of(live: &[Vec<LiveRep>], model: usize) -> Vec<Replica> {
         .collect()
 }
 
+/// The adaptive driver's barrier work on the cluster execution core
+/// ([`crate::cluster::exec`]): mature pending activations before
+/// arrivals, route demand-counted arrivals, and run the
+/// estimate→detect→rebalance control tick after them.
+struct AdaptiveDriver<'a> {
+    profiles: &'a [ModelProfile],
+    gpus: &'a [GpuSpec],
+    placement: PlacementPolicy,
+    sched: GpuSched,
+    cfg: &'a AdaptiveCfg,
+    horizon_ms: f64,
+    horizon: Us,
+    interval: Us,
+    migration_us: Us,
+    window_s: f64,
+    live: Vec<Vec<LiveRep>>,
+    /// Routable view handed to the router: rebuilt whenever `live`
+    /// changes.
+    routable: Vec<Vec<Replica>>,
+    /// gpu → engine-local index → global model index.
+    local_map: Vec<Vec<usize>>,
+    knee_load: Vec<u32>,
+    shed_rps: Vec<f64>,
+    estimator: RateEstimator,
+    detector: DriftDetector,
+    planned_rates: Vec<f64>,
+    window_counts: Vec<u64>,
+    stats: AdaptiveStats,
+    /// (effective_at, model, index into live[model]) of pending adds.
+    pending: Vec<(Us, usize, usize)>,
+    router: Router,
+    cache: BacklogCache,
+    rejected: Vec<u64>,
+    next_tick: Us,
+}
+
+impl AdaptiveDriver<'_> {
+    /// Route one request of `model` to a replica (JSQ/P2C probe the
+    /// live engine backlogs through the per-barrier cache) and inject
+    /// it, or count it rejected when the model has no routable replica.
+    /// Shared by arrival routing and the re-routing of queues drained
+    /// from removed replicas.
+    fn route_and_inject(
+        &mut self,
+        model: usize,
+        req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut [bool],
+    ) {
+        let reps = &self.routable[model];
+        if reps.is_empty() {
+            self.rejected[model] += 1;
+            return;
+        }
+        let cache = &mut self.cache;
+        let pick = self.router.route(model, reps, |rep| cache.backlog(engines, rep));
+        let rep = &reps[pick];
+        let mut q = req;
+        q.model = rep.local;
+        engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(q);
+        cache.note_inject(rep.gpu, rep.local);
+        touched[rep.gpu] = true;
+    }
+}
+
+impl EpochDriver for AdaptiveDriver<'_> {
+    fn next_event(&self) -> Option<Us> {
+        let t_act = self.pending.iter().map(|&(at, _, _)| at).min();
+        let t_tick = if self.next_tick < self.horizon { Some(self.next_tick) } else { None };
+        [t_act, t_tick].into_iter().flatten().min()
+    }
+
+    /// Mature pending replica activations due at t.
+    fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+        self.cache.reset();
+        if !self.pending.iter().any(|&(at, _, _)| at <= t) {
+            return;
+        }
+        let due: Vec<(Us, usize, usize)> =
+            self.pending.iter().copied().filter(|&(at, _, _)| at <= t).collect();
+        self.pending.retain(|&(at, _, _)| at > t);
+        let mut refreshed = Vec::new();
+        for (_, m, idx) in due {
+            let mut lr = self.live[m][idx].clone();
+            activate_replica(
+                engines,
+                &mut self.local_map,
+                self.profiles,
+                self.gpus,
+                self.horizon_ms,
+                self.sched,
+                m,
+                &mut lr,
+            );
+            touched[lr.gpu] = true;
+            self.live[m][idx] = lr;
+            refreshed.push(m);
+        }
+        for m in refreshed {
+            self.routable[m] = routable_of(&self.live, m);
+        }
+    }
+
+    /// Route an arrival (counted into the estimator window whether or
+    /// not it is admitted — demand, not service).
+    fn route(
+        &mut self,
+        _t: Us,
+        req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut [bool],
+    ) {
+        let model = req.model;
+        self.window_counts[model] += 1;
+        self.route_and_inject(model, req, engines, touched);
+    }
+
+    /// Control tick: estimate, detect drift, rebalance.
+    fn post_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+        if t != self.next_tick {
+            return;
+        }
+        self.next_tick += self.interval;
+        self.estimator.observe(&self.window_counts, self.window_s);
+        self.window_counts.fill(0);
+        if !self.detector.tick(self.estimator.rates(), &self.planned_rates) {
+            return;
+        }
+        self.stats.replans += 1;
+        self.planned_rates = self.estimator.rates().to_vec();
+        let target = place(self.profiles, &self.planned_rates, self.gpus, self.placement);
+        let current: Vec<Vec<(usize, u32)>> = self
+            .live
+            .iter()
+            .map(|reps| reps.iter().map(|r| (r.gpu, r.pct)).collect())
+            .collect();
+        let delta = placement_delta(&current, &target);
+        if !delta.is_empty() {
+            // Budget invariant: removals-then-additions never pushes a
+            // GPU past 100% knee load.
+            let (_, after) = apply_delta_to_knee_load(&self.knee_load, &delta);
+            // Tear down removed replicas: drain queues, re-route
+            // survivors' way (or count as rejected when the model lost
+            // its last replica).
+            let mut drained: Vec<(usize, Request)> = Vec::new();
+            for &(m, gpu, _) in &delta.remove {
+                let idx = self.live[m]
+                    .iter()
+                    .position(|r| r.gpu == gpu)
+                    .expect("removing unknown replica");
+                let lr = self.live[m].remove(idx);
+                if let Some(local) = lr.local {
+                    let engine = engines[gpu].as_mut().expect("live replica without engine");
+                    for req in engine.sim.deactivate_model(local) {
+                        drained.push((m, req));
+                    }
+                    engine.rebuild_policy(self.sched);
+                    // The drained queue changed this slot's backlog out
+                    // of band; drop any memoized probe.
+                    self.cache.invalidate(gpu, local);
+                    touched[gpu] = true;
+                    self.stats.replicas_removed += 1;
+                } else {
+                    // Still pending: cancel the migration and refund its
+                    // accounting — the replica never materialized, so it
+                    // is neither an add nor a remove.
+                    self.pending.retain(|&(_, pm, pidx)| !(pm == m && pidx == idx));
+                    self.stats.replicas_added -= 1;
+                    self.stats.migration_ms -= self.cfg.migration_cost_ms;
+                }
+                // Pending entries index into live[m]; the removal
+                // shifted everything behind it down by one.
+                for p in self.pending.iter_mut() {
+                    if p.1 == m && p.2 > idx {
+                        p.2 -= 1;
+                    }
+                }
+            }
+            // Bring up added replicas after the migration delay.
+            for (m, r) in &delta.add {
+                let lr = LiveRep {
+                    gpu: r.gpu,
+                    pct: r.pct,
+                    batch: r.batch,
+                    capacity_rps: r.capacity_rps,
+                    local: None,
+                };
+                self.live[*m].push(lr);
+                self.pending.push((t + self.migration_us, *m, self.live[*m].len() - 1));
+                self.stats.replicas_added += 1;
+                self.stats.migration_ms += self.cfg.migration_cost_ms;
+            }
+            self.knee_load = after;
+            for m in 0..self.live.len() {
+                self.routable[m] = routable_of(&self.live, m);
+            }
+            // Re-route drained requests among surviving replicas.
+            for (m, req) in drained {
+                self.route_and_inject(m, req, engines, touched);
+            }
+            self.stats.rebalances += 1;
+            self.stats.rebalance_times_us.push(t);
+        }
+        self.shed_rps = target.shed_rps.clone();
+    }
+}
+
 /// Serve `requests` on `gpus` with the adaptive control plane: initial
 /// knee-packed placement for `initial_rates`, then per-tick estimation,
 /// drift detection and incremental rebalancing as described in the
 /// module docs. Deterministic: a fixed (inputs, seed) tuple always
-/// yields the same report, including the rebalance schedule.
+/// yields the same report, including the rebalance schedule — for any
+/// thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn run_adaptive(
     profiles: &[ModelProfile],
@@ -453,6 +633,36 @@ pub fn run_adaptive(
     horizon_ms: f64,
     seed: u64,
 ) -> ClusterReport {
+    run_adaptive_with(
+        profiles,
+        initial_rates,
+        gpus,
+        placement,
+        routing,
+        sched,
+        cfg,
+        requests,
+        horizon_ms,
+        seed,
+        Parallelism::default(),
+    )
+}
+
+/// [`run_adaptive`] with an explicit engine-stepping thread budget.
+#[allow(clippy::too_many_arguments)]
+pub fn run_adaptive_with(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &AdaptiveCfg,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+    threads: Parallelism,
+) -> ClusterReport {
     cfg.validate().expect("invalid adaptive config");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
@@ -464,11 +674,8 @@ pub fn run_adaptive(
     // --- initial placement --------------------------------------------------
     let initial = place(profiles, initial_rates, gpus, placement);
     let mut live: Vec<Vec<LiveRep>> = vec![Vec::new(); n_models];
-    let mut knee_load: Vec<u32> = initial.knee_load.clone();
-    let mut shed_rps: Vec<f64> = initial.shed_rps.clone();
 
-    let mut engines: Vec<Option<AdEngine>> = (0..n_gpus).map(|_| None).collect();
-    // gpu → engine-local index → global model index.
+    let mut engines: Vec<Option<ExecEngine>> = (0..n_gpus).map(|_| None).collect();
     let mut local_map: Vec<Vec<usize>> = vec![Vec::new(); n_gpus];
 
     for (m, reps) in initial.replicas.iter().enumerate() {
@@ -494,199 +701,45 @@ pub fn run_adaptive(
         }
     }
 
-    // Routable view handed to the router: rebuilt whenever `live` changes.
-    let mut routable: Vec<Vec<Replica>> = (0..n_models).map(|m| routable_of(&live, m)).collect();
+    let routable: Vec<Vec<Replica>> = (0..n_models).map(|m| routable_of(&live, m)).collect();
+    let mut driver = AdaptiveDriver {
+        profiles,
+        gpus,
+        placement,
+        sched,
+        cfg,
+        horizon_ms,
+        horizon,
+        interval,
+        migration_us,
+        window_s: cfg.interval_ms / 1_000.0,
+        live,
+        routable,
+        local_map,
+        knee_load: initial.knee_load.clone(),
+        shed_rps: initial.shed_rps.clone(),
+        estimator: RateEstimator::new(cfg.alpha, initial_rates),
+        detector: DriftDetector::new(cfg, n_models),
+        planned_rates: initial_rates.to_vec(),
+        window_counts: vec![0u64; n_models],
+        stats: AdaptiveStats::default(),
+        pending: Vec::new(),
+        router: Router::new(routing, n_models, seed),
+        cache: BacklogCache::default(),
+        rejected: vec![0u64; n_models],
+        next_tick: interval,
+    };
+    run_epochs(&mut engines, requests, horizon, threads, &mut driver);
 
-    // --- control state ------------------------------------------------------
-    let mut estimator = RateEstimator::new(cfg.alpha, initial_rates);
-    let mut detector = DriftDetector::new(cfg, n_models);
-    let mut planned_rates: Vec<f64> = initial_rates.to_vec();
-    let mut window_counts = vec![0u64; n_models];
-    let window_s = cfg.interval_ms / 1_000.0;
-    let mut stats = AdaptiveStats::default();
-    // (effective_at, model, index into live[model]) of pending adds.
-    let mut pending: Vec<(Us, usize, usize)> = Vec::new();
-
-    let mut router = Router::new(routing, n_models, seed);
-    let mut rejected = vec![0u64; n_models];
-    let mut cursor = 0usize;
-    let mut touched = vec![false; n_gpus];
-    let mut next_tick: Us = interval;
-
-    // --- event loop ---------------------------------------------------------
-    loop {
-        let t_arr = requests.get(cursor).map(|r| r.arrival);
-        let t_eng = engines
-            .iter()
-            .flatten()
-            .filter_map(|e| e.sim.next_event_time())
-            .min();
-        let t_act = pending.iter().map(|&(at, _, _)| at).min();
-        let t_tick = if next_tick < horizon { Some(next_tick) } else { None };
-        let Some(t) = [t_arr, t_eng, t_act, t_tick].into_iter().flatten().min() else {
-            break;
-        };
-        if t >= horizon {
-            break;
-        }
-        touched.fill(false);
-
-        // 1. Mature pending replica activations due at t.
-        if pending.iter().any(|&(at, _, _)| at <= t) {
-            let due: Vec<(Us, usize, usize)> =
-                pending.iter().copied().filter(|&(at, _, _)| at <= t).collect();
-            pending.retain(|&(at, _, _)| at > t);
-            let mut refreshed = Vec::new();
-            for (_, m, idx) in due {
-                let mut lr = live[m][idx].clone();
-                activate_replica(
-                    &mut engines,
-                    &mut local_map,
-                    profiles,
-                    gpus,
-                    horizon_ms,
-                    sched,
-                    m,
-                    &mut lr,
-                );
-                touched[lr.gpu] = true;
-                live[m][idx] = lr;
-                refreshed.push(m);
-            }
-            for m in refreshed {
-                routable[m] = routable_of(&live, m);
-            }
-        }
-
-        // 2. Route every arrival at t (counted into the estimator window
-        //    whether or not it is admitted — demand, not service).
-        while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
-            let r = &requests[cursor];
-            cursor += 1;
-            window_counts[r.model] += 1;
-            route_and_inject(
-                &mut router,
-                &routable,
-                &mut engines,
-                &mut rejected,
-                &mut touched,
-                r.model,
-                r,
-            );
-        }
-
-        // 3. Control tick: estimate, detect drift, rebalance.
-        if t == next_tick {
-            next_tick += interval;
-            estimator.observe(&window_counts, window_s);
-            window_counts.fill(0);
-            if detector.tick(estimator.rates(), &planned_rates) {
-                stats.replans += 1;
-                planned_rates = estimator.rates().to_vec();
-                let target = place(profiles, &planned_rates, gpus, placement);
-                let current: Vec<Vec<(usize, u32)>> = live
-                    .iter()
-                    .map(|reps| reps.iter().map(|r| (r.gpu, r.pct)).collect())
-                    .collect();
-                let delta = placement_delta(&current, &target);
-                if !delta.is_empty() {
-                    // Budget invariant: removals-then-additions never
-                    // pushes a GPU past 100% knee load.
-                    let (_, after) = apply_delta_to_knee_load(&knee_load, &delta);
-                    // Tear down removed replicas: drain queues, re-route
-                    // survivors' way (or count as rejected when the model
-                    // lost its last replica).
-                    let mut drained: Vec<(usize, Request)> = Vec::new();
-                    for &(m, gpu, _) in &delta.remove {
-                        let idx = live[m]
-                            .iter()
-                            .position(|r| r.gpu == gpu)
-                            .expect("removing unknown replica");
-                        let lr = live[m].remove(idx);
-                        if let Some(local) = lr.local {
-                            let engine =
-                                engines[gpu].as_mut().expect("live replica without engine");
-                            for req in engine.sim.deactivate_model(local) {
-                                drained.push((m, req));
-                            }
-                            engine.rebuild_policy(sched);
-                            touched[gpu] = true;
-                            stats.replicas_removed += 1;
-                        } else {
-                            // Still pending: cancel the migration and
-                            // refund its accounting — the replica never
-                            // materialized, so it is neither an add nor
-                            // a remove.
-                            pending.retain(|&(_, pm, pidx)| !(pm == m && pidx == idx));
-                            stats.replicas_added -= 1;
-                            stats.migration_ms -= cfg.migration_cost_ms;
-                        }
-                        // Pending entries index into live[m]; the removal
-                        // shifted everything behind it down by one.
-                        for p in pending.iter_mut() {
-                            if p.1 == m && p.2 > idx {
-                                p.2 -= 1;
-                            }
-                        }
-                    }
-                    // Bring up added replicas after the migration delay.
-                    for (m, r) in &delta.add {
-                        let lr = LiveRep {
-                            gpu: r.gpu,
-                            pct: r.pct,
-                            batch: r.batch,
-                            capacity_rps: r.capacity_rps,
-                            local: None,
-                        };
-                        live[*m].push(lr);
-                        pending.push((t + migration_us, *m, live[*m].len() - 1));
-                        stats.replicas_added += 1;
-                        stats.migration_ms += cfg.migration_cost_ms;
-                    }
-                    knee_load = after;
-                    for m in 0..n_models {
-                        routable[m] = routable_of(&live, m);
-                    }
-                    // Re-route drained requests among surviving replicas.
-                    for (m, req) in drained {
-                        route_and_inject(
-                            &mut router,
-                            &routable,
-                            &mut engines,
-                            &mut rejected,
-                            &mut touched,
-                            m,
-                            &req,
-                        );
-                    }
-                    stats.rebalances += 1;
-                    stats.rebalance_times_us.push(t);
-                }
-                shed_rps = target.shed_rps.clone();
-            }
-        }
-
-        // 4. Step every engine with due events or new work.
-        for (g, slot) in engines.iter_mut().enumerate() {
-            let Some(engine) = slot else { continue };
-            let due = touched[g] || engine.sim.next_event_time().is_some_and(|w| w <= t);
-            if due {
-                engine.sim.step_to(t, engine.policy.as_mut(), horizon);
-            }
-        }
-    }
-
+    let AdaptiveDriver {
+        live, local_map, knee_load, shed_rps, estimator, mut stats, rejected, ..
+    } = driver;
     stats.est_rates = estimator.rates().to_vec();
 
     // --- finalize + aggregate ----------------------------------------------
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
-        .map(|slot| {
-            slot.as_mut().map(|e| {
-                let name = e.policy.name();
-                e.sim.finalize(name, horizon)
-            })
-        })
+        .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
         .collect();
 
     let horizon_s = horizon_ms / 1_000.0;

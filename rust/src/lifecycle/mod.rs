@@ -46,9 +46,11 @@ pub mod store;
 
 pub use store::{EvictionPolicy, ModelStore};
 
+use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine};
+use crate::cluster::routing::BacklogCache;
 use crate::cluster::{
-    ClusterReport, GpuModelShare, GpuReport, GpuSched, MaskedEngine as LcEngine, Replica,
-    ResidencyPlan, Router, RoutingPolicy,
+    ClusterReport, GpuModelShare, GpuReport, GpuSched, Parallelism, Replica, ResidencyPlan,
+    Router, RoutingPolicy,
 };
 use crate::gpu::{ms_to_us, us_to_ms, ReconfigModel, Us};
 use crate::metrics::RunReport;
@@ -246,13 +248,247 @@ pub fn longtail_workload_from(
     (profiles, rates, reqs)
 }
 
+/// The lifecycle driver's barrier work on the cluster execution core
+/// ([`crate::cluster::exec`]): mature weight loads before arrivals,
+/// dispatch arrivals (with warmness-aware routing, cold-start parking
+/// and eviction cascades), and sweep idle residents to zero after them.
+struct LifecycleDriver<'a> {
+    profiles: &'a [ModelProfile],
+    plan: &'a ResidencyPlan,
+    cfg: &'a LifecycleCfg,
+    sched: GpuSched,
+    pinned: Vec<bool>,
+    /// gpu → global model → engine-local slot.
+    local_of: Vec<Vec<Option<usize>>>,
+    stores: Vec<ModelStore>,
+    router: Router,
+    cache: BacklogCache,
+    rejected: Vec<u64>,
+    /// (gpu, model) → virtual time its in-flight load completes.
+    loading: BTreeMap<(usize, usize), Us>,
+    /// (gpu, model) → requests parked until the load completes.
+    held: BTreeMap<(usize, usize), Vec<Request>>,
+    cold_delays_ms: Vec<f64>,
+    stats: LifecycleStats,
+    idle_timeout: Option<Us>,
+    /// Reusable cascade queue for [`Self::dispatch`] (always drained
+    /// empty between requests; hoisted so the routing hot path does not
+    /// allocate per request).
+    scratch: VecDeque<(usize, Request)>,
+}
+
+impl LifecycleDriver<'_> {
+    /// One request dispatch, shared by arrivals and eviction re-routes.
+    /// Victim queues drained by an eviction are appended to `work` so
+    /// cascades stay iterative (loading residents are unevictable,
+    /// which bounds the cascade by the resident count).
+    fn dispatch(
+        &mut self,
+        t: Us,
+        model: usize,
+        req: Request,
+        work: &mut VecDeque<(usize, Request)>,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut [bool],
+    ) {
+        let reps: &[Replica] = &self.plan.placement.replicas[model];
+        if reps.is_empty() {
+            self.rejected[model] += 1;
+            return;
+        }
+        let cache = &mut self.cache;
+        let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
+        let (cfg, profiles) = (self.cfg, self.profiles);
+        let pick = self.router.route(model, reps, |rep| {
+            let backlog = cache.backlog(engines, rep);
+            let parked = held.get(&(rep.gpu, model)).map_or(0, |v| v.len());
+            let base = backlog.saturating_add(parked);
+            if !cfg.warm_routing || stores[rep.gpu].is_warm(model) {
+                return base;
+            }
+            // Cold cost: the items this replica could have served while
+            // the (remaining) weight upload streams in.
+            let remaining_ms = match loading.get(&(rep.gpu, model)) {
+                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                // Pre-route estimate: the post-eviction sharing set is
+                // unknowable here, so assume today's warm residents.
+                None => cfg
+                    .reconfig
+                    .cold_load_ms(profiles[model].load_ms, stores[rep.gpu].n_warm()),
+            };
+            base.saturating_add((remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize)
+        });
+        // Dispatch on the routed replica, falling back across the
+        // model's other replicas (index order) when a GPU cannot start
+        // a load right now (pinned or mid-load residents crowd its
+        // budget): a warm replica serves immediately, an in-flight load
+        // parks the request, a loadable GPU faults the model in. Only a
+        // model with no path to residency anywhere rejects.
+        let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
+        for i in order {
+            let r = &reps[i];
+            let g = r.gpu;
+            if self.stores[g].is_warm(model) {
+                self.stores[g].touch(t, model);
+                let mut q = req;
+                q.model = r.local;
+                engines[g].as_mut().expect("warm replica on idle GPU").sim.inject(q);
+                self.cache.note_inject(g, r.local);
+                touched[g] = true;
+                self.stats.warm_hits += 1;
+                return;
+            }
+            if let Some(&ready) = self.loading.get(&(g, model)) {
+                self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+                self.held.entry((g, model)).or_default().push(req);
+                self.stats.cold_delayed += 1;
+                return;
+            }
+            // Cold start: reserve memory now (evicting if needed), park
+            // the request until the weights have streamed in.
+            let Some(victims) = self.stores[g].begin_load(
+                t,
+                model,
+                self.profiles[model].mem_mib,
+                self.profiles[model].load_ms,
+                self.pinned[model],
+            ) else {
+                continue; // crowded out here — try the next replica
+            };
+            // Charge the upload against the *post-eviction* sharing set:
+            // only warm survivors can share parameters during the load
+            // (the loading model itself is excluded by n_warm).
+            let load_ms = self
+                .cfg
+                .reconfig
+                .cold_load_ms(self.profiles[model].load_ms, self.stores[g].n_warm());
+            if !victims.is_empty() {
+                let engine = engines[g].as_mut().expect("cold replica on idle GPU");
+                for v in victims {
+                    let vl = self.local_of[g][v].expect("evicting unassigned model");
+                    for dr in engine.sim.deactivate_model(vl) {
+                        work.push_back((v, dr));
+                    }
+                    // The drained victim queue changed this slot's
+                    // backlog out of band; drop any memoized probe.
+                    self.cache.invalidate(g, vl);
+                }
+                // The mask changed (victims tombstoned); the loading
+                // model itself stays inactive until complete_load
+                // rebuilds again.
+                engine.rebuild_policy(self.sched);
+                touched[g] = true;
+            }
+            let ready = t + ms_to_us(load_ms).max(1);
+            self.loading.insert((g, model), ready);
+            self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+            self.held.entry((g, model)).or_default().push(req);
+            self.stats.cold_delayed += 1;
+            self.stats.load_ms_total += load_ms;
+            return;
+        }
+        self.rejected[model] += 1;
+    }
+}
+
+impl EpochDriver for LifecycleDriver<'_> {
+    fn next_event(&self) -> Option<Us> {
+        let t_load = self.loading.values().min().copied();
+        let t_idle = self
+            .idle_timeout
+            .and_then(|to| self.stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
+        [t_load, t_idle].into_iter().flatten().min()
+    }
+
+    /// Mature loads due at t: the model becomes warm, its tombstone
+    /// slot reactivates, parked requests inject with their original
+    /// arrival times (cold delay shows up as end-to-end latency).
+    fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+        self.cache.reset();
+        let due: Vec<(usize, usize)> = self
+            .loading
+            .iter()
+            .filter(|&(_, &ready)| ready <= t)
+            .map(|(&k, _)| k)
+            .collect();
+        for (g, m) in due {
+            self.loading.remove(&(g, m));
+            self.stores[g].complete_load(t, m);
+            let local = self.local_of[g][m].expect("loaded model without a slot");
+            let rep = self.plan.placement.replicas[m]
+                .iter()
+                .find(|r| r.gpu == g)
+                .expect("loaded model without a replica");
+            let engine = engines[g].as_mut().expect("load on idle GPU");
+            engine.sim.reactivate_model(
+                local,
+                ModelEntry {
+                    profile: self.profiles[m].clone(),
+                    pct: rep.pct,
+                    batch: rep.batch,
+                },
+            );
+            engine.rebuild_policy(self.sched);
+            for mut r in self.held.remove(&(g, m)).unwrap_or_default() {
+                self.stores[g].touch(t, m);
+                r.model = local;
+                engine.sim.inject(r);
+            }
+            touched[g] = true;
+        }
+    }
+
+    /// Route one arrival, draining any eviction cascade it triggers.
+    fn route(
+        &mut self,
+        t: Us,
+        req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut [bool],
+    ) {
+        let mut work = std::mem::take(&mut self.scratch);
+        debug_assert!(work.is_empty());
+        work.push_back((req.model, req));
+        while let Some((m, q)) = work.pop_front() {
+            self.dispatch(t, m, q, &mut work, engines, touched);
+        }
+        // Hand the (empty) queue back so its capacity is reused.
+        self.scratch = work;
+    }
+
+    /// Scale-to-zero sweep: idle warm residents with an empty backlog
+    /// release memory and knee budget; residents that are idle by the
+    /// clock but still draining are re-armed (they are in use, not
+    /// idle).
+    fn post_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+        let Some(to) = self.idle_timeout else { return };
+        for g in 0..self.stores.len() {
+            for m in self.stores[g].idle_candidates(t, to) {
+                let local = self.local_of[g][m].expect("resident without a slot");
+                let engine = engines[g].as_mut().expect("resident on idle GPU");
+                if engine.sim.backlog_items(local) == 0 {
+                    let released = self.stores[g].release(m);
+                    debug_assert!(released, "idle candidate refused release");
+                    let drained = engine.sim.deactivate_model(local);
+                    debug_assert!(drained.is_empty(), "empty backlog drained requests");
+                    engine.rebuild_policy(self.sched);
+                    self.stats.scale_to_zero += 1;
+                    touched[g] = true;
+                } else {
+                    self.stores[g].touch(t, m);
+                }
+            }
+        }
+    }
+}
+
 /// Serve `requests` on `gpus` under the lifecycle memory manager:
 /// `plan` assigns models and the t = 0 resident sets; everything beyond
 /// the resident sets is faulted in on demand (evicting per
 /// `cfg.eviction`), idles out per `cfg.idle_timeout_ms`, and routes per
 /// `routing` with warmness-aware costs when `cfg.warm_routing`.
 /// Deterministic: a fixed (inputs, seed) tuple always yields the same
-/// report, including the load/eviction schedule.
+/// report, including the load/eviction schedule — for any thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn run_lifecycle(
     profiles: &[ModelProfile],
@@ -264,6 +500,34 @@ pub fn run_lifecycle(
     requests: &[Request],
     horizon_ms: f64,
     seed: u64,
+) -> ClusterReport {
+    run_lifecycle_with(
+        profiles,
+        gpus,
+        plan,
+        routing,
+        sched,
+        cfg,
+        requests,
+        horizon_ms,
+        seed,
+        Parallelism::default(),
+    )
+}
+
+/// [`run_lifecycle`] with an explicit engine-stepping thread budget.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lifecycle_with(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    plan: &ResidencyPlan,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+    threads: Parallelism,
 ) -> ClusterReport {
     cfg.validate().expect("invalid lifecycle config");
     let n_models = profiles.len();
@@ -281,7 +545,7 @@ pub fn run_lifecycle(
 
     // --- engines, stores, index maps ---------------------------------------
     let mut local_of: Vec<Vec<Option<usize>>> = vec![vec![None; n_models]; n_gpus];
-    let mut engines: Vec<Option<LcEngine>> = (0..n_gpus)
+    let mut engines: Vec<Option<ExecEngine>> = (0..n_gpus)
         .map(|g| {
             if plan.placement.hosted[g].is_empty() {
                 return None;
@@ -311,11 +575,11 @@ pub fn run_lifecycle(
             }
             let mask = sim.active_mask();
             let policy = sched.build_masked(&sim.models, &mask);
-            Some(LcEngine { sim, policy })
+            Some(ExecEngine { sim, policy })
         })
         .collect();
 
-    let mut stores: Vec<ModelStore> = (0..n_gpus)
+    let stores: Vec<ModelStore> = (0..n_gpus)
         .map(|g| {
             let mut s = ModelStore::new(plan.mem_budget_mib[g], cfg.eviction);
             for &m in &plan.resident0[g] {
@@ -326,244 +590,31 @@ pub fn run_lifecycle(
         })
         .collect();
 
-    // --- driver state -------------------------------------------------------
-    let mut router = Router::new(routing, n_models, seed);
-    let mut rejected = vec![0u64; n_models];
-    let mut cursor = 0usize;
-    let mut touched = vec![false; n_gpus];
-    // (gpu, model) → virtual time its in-flight load completes.
-    let mut loading: BTreeMap<(usize, usize), Us> = BTreeMap::new();
-    // (gpu, model) → requests parked until the load completes.
-    let mut held: BTreeMap<(usize, usize), Vec<Request>> = BTreeMap::new();
-    let mut cold_delays_ms: Vec<f64> = Vec::new();
-    let mut stats = LifecycleStats::default();
-
-    // One request dispatch, shared by arrivals and eviction re-routes.
-    // Victim queues drained by an eviction are appended to `work` so
-    // cascades stay iterative (loading residents are unevictable, which
-    // bounds the cascade by the resident count).
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch(
-        t: Us,
-        model: usize,
-        req: Request,
-        work: &mut VecDeque<(usize, Request)>,
-        profiles: &[ModelProfile],
-        plan: &ResidencyPlan,
-        cfg: &LifecycleCfg,
-        pinned: &[bool],
-        router: &mut Router,
-        engines: &mut [Option<LcEngine>],
-        stores: &mut [ModelStore],
-        local_of: &[Vec<Option<usize>>],
-        loading: &mut BTreeMap<(usize, usize), Us>,
-        held: &mut BTreeMap<(usize, usize), Vec<Request>>,
-        sched: GpuSched,
-        touched: &mut [bool],
-        rejected: &mut [u64],
-        cold_delays_ms: &mut Vec<f64>,
-        stats: &mut LifecycleStats,
-    ) {
-        let reps: &[Replica] = &plan.placement.replicas[model];
-        if reps.is_empty() {
-            rejected[model] += 1;
-            return;
-        }
-        let pick = router.route(model, reps, |rep| {
-            let engine = engines[rep.gpu].as_ref().expect("replica on idle GPU");
-            let backlog = engine.sim.backlog_items(rep.local);
-            let parked = held.get(&(rep.gpu, model)).map_or(0, |v| v.len());
-            let base = backlog + parked;
-            if !cfg.warm_routing || stores[rep.gpu].is_warm(model) {
-                return base;
-            }
-            // Cold cost: the items this replica could have served while
-            // the (remaining) weight upload streams in.
-            let remaining_ms = match loading.get(&(rep.gpu, model)) {
-                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
-                // Pre-route estimate: the post-eviction sharing set is
-                // unknowable here, so assume today's warm residents.
-                None => cfg
-                    .reconfig
-                    .cold_load_ms(profiles[model].load_ms, stores[rep.gpu].n_warm()),
-            };
-            base + (remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize
-        });
-        // Dispatch on the routed replica, falling back across the
-        // model's other replicas (index order) when a GPU cannot start
-        // a load right now (pinned or mid-load residents crowd its
-        // budget): a warm replica serves immediately, an in-flight load
-        // parks the request, a loadable GPU faults the model in. Only a
-        // model with no path to residency anywhere rejects.
-        let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
-        for i in order {
-            let r = &reps[i];
-            let g = r.gpu;
-            if stores[g].is_warm(model) {
-                stores[g].touch(t, model);
-                let mut q = req;
-                q.model = r.local;
-                engines[g].as_mut().expect("warm replica on idle GPU").sim.inject(q);
-                touched[g] = true;
-                stats.warm_hits += 1;
-                return;
-            }
-            if let Some(&ready) = loading.get(&(g, model)) {
-                cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
-                held.entry((g, model)).or_default().push(req);
-                stats.cold_delayed += 1;
-                return;
-            }
-            // Cold start: reserve memory now (evicting if needed), park
-            // the request until the weights have streamed in.
-            let Some(victims) = stores[g].begin_load(
-                t,
-                model,
-                profiles[model].mem_mib,
-                profiles[model].load_ms,
-                pinned[model],
-            ) else {
-                continue; // crowded out here — try the next replica
-            };
-            // Charge the upload against the *post-eviction* sharing set:
-            // only warm survivors can share parameters during the load
-            // (the loading model itself is excluded by n_warm).
-            let load_ms = cfg
-                .reconfig
-                .cold_load_ms(profiles[model].load_ms, stores[g].n_warm());
-            if !victims.is_empty() {
-                let engine = engines[g].as_mut().expect("cold replica on idle GPU");
-                for v in victims {
-                    let vl = local_of[g][v].expect("evicting unassigned model");
-                    for dr in engine.sim.deactivate_model(vl) {
-                        work.push_back((v, dr));
-                    }
-                }
-                // The mask changed (victims tombstoned); the loading
-                // model itself stays inactive until complete_load
-                // rebuilds again.
-                engine.rebuild_policy(sched);
-                touched[g] = true;
-            }
-            let ready = t + ms_to_us(load_ms).max(1);
-            loading.insert((g, model), ready);
-            cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
-            held.entry((g, model)).or_default().push(req);
-            stats.cold_delayed += 1;
-            stats.load_ms_total += load_ms;
-            return;
-        }
-        rejected[model] += 1;
-    }
-
-    // --- event loop ---------------------------------------------------------
-    loop {
-        let t_arr = requests.get(cursor).map(|r| r.arrival);
-        let t_eng = engines
-            .iter()
-            .flatten()
-            .filter_map(|e| e.sim.next_event_time())
-            .min();
-        let t_load = loading.values().min().copied();
-        let t_idle = idle_timeout
-            .and_then(|to| stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
-        let Some(t) = [t_arr, t_eng, t_load, t_idle].into_iter().flatten().min() else {
-            break;
-        };
-        if t >= horizon {
-            break;
-        }
-        touched.fill(false);
-
-        // 1. Mature loads due at t: the model becomes warm, its
-        //    tombstone slot reactivates, parked requests inject with
-        //    their original arrival times (cold delay shows up as
-        //    end-to-end latency).
-        let due: Vec<(usize, usize)> = loading
-            .iter()
-            .filter(|&(_, &ready)| ready <= t)
-            .map(|(&k, _)| k)
-            .collect();
-        for (g, m) in due {
-            loading.remove(&(g, m));
-            stores[g].complete_load(t, m);
-            let local = local_of[g][m].expect("loaded model without a slot");
-            let rep = plan.placement.replicas[m]
-                .iter()
-                .find(|r| r.gpu == g)
-                .expect("loaded model without a replica");
-            let engine = engines[g].as_mut().expect("load on idle GPU");
-            engine.sim.reactivate_model(
-                local,
-                ModelEntry { profile: profiles[m].clone(), pct: rep.pct, batch: rep.batch },
-            );
-            engine.rebuild_policy(sched);
-            for mut r in held.remove(&(g, m)).unwrap_or_default() {
-                stores[g].touch(t, m);
-                r.model = local;
-                engine.sim.inject(r);
-            }
-            touched[g] = true;
-        }
-
-        // 2. Route every arrival at t.
-        let mut work: VecDeque<(usize, Request)> = VecDeque::new();
-        while requests.get(cursor).is_some_and(|r| r.arrival <= t) {
-            let r = requests[cursor].clone();
-            cursor += 1;
-            work.push_back((r.model, r));
-            while let Some((m, req)) = work.pop_front() {
-                dispatch(
-                    t, m, req, &mut work, profiles, plan, cfg, &pinned, &mut router,
-                    &mut engines, &mut stores, &local_of, &mut loading, &mut held, sched,
-                    &mut touched, &mut rejected, &mut cold_delays_ms, &mut stats,
-                );
-            }
-        }
-
-        // 3. Scale-to-zero sweep: idle warm residents with an empty
-        //    backlog release memory and knee budget; residents that are
-        //    idle by the clock but still draining are re-armed (they are
-        //    in use, not idle).
-        if let Some(to) = idle_timeout {
-            for g in 0..n_gpus {
-                for m in stores[g].idle_candidates(t, to) {
-                    let local = local_of[g][m].expect("resident without a slot");
-                    let engine = engines[g].as_mut().expect("resident on idle GPU");
-                    if engine.sim.backlog_items(local) == 0 {
-                        let released = stores[g].release(m);
-                        debug_assert!(released, "idle candidate refused release");
-                        let drained = engine.sim.deactivate_model(local);
-                        debug_assert!(drained.is_empty(), "empty backlog drained requests");
-                        engine.rebuild_policy(sched);
-                        stats.scale_to_zero += 1;
-                        touched[g] = true;
-                    } else {
-                        stores[g].touch(t, m);
-                    }
-                }
-            }
-        }
-
-        // 4. Step every engine with due events or new work.
-        for (g, slot) in engines.iter_mut().enumerate() {
-            let Some(engine) = slot else { continue };
-            let due = touched[g] || engine.sim.next_event_time().is_some_and(|w| w <= t);
-            if due {
-                engine.sim.step_to(t, engine.policy.as_mut(), horizon);
-            }
-        }
-    }
+    let mut driver = LifecycleDriver {
+        profiles,
+        plan,
+        cfg,
+        sched,
+        pinned,
+        local_of,
+        stores,
+        router: Router::new(routing, n_models, seed),
+        cache: BacklogCache::default(),
+        rejected: vec![0u64; n_models],
+        loading: BTreeMap::new(),
+        held: BTreeMap::new(),
+        cold_delays_ms: Vec::new(),
+        stats: LifecycleStats::default(),
+        idle_timeout,
+        scratch: VecDeque::new(),
+    };
+    run_epochs(&mut engines, requests, horizon, threads, &mut driver);
+    let LifecycleDriver { stores, rejected, held, cold_delays_ms, mut stats, .. } = driver;
 
     // --- finalize + aggregate ----------------------------------------------
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
-        .map(|slot| {
-            slot.as_mut().map(|e| {
-                let name = e.policy.name();
-                e.sim.finalize(name, horizon)
-            })
-        })
+        .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
         .collect();
 
     let horizon_s = horizon_ms / 1_000.0;
@@ -680,6 +731,36 @@ pub fn serve_longtail(
     horizon_ms: f64,
     seed: u64,
 ) -> ClusterReport {
+    serve_longtail_with(
+        profiles,
+        offered_rps,
+        gpus,
+        placement,
+        routing,
+        sched,
+        cfg,
+        requests,
+        horizon_ms,
+        seed,
+        Parallelism::default(),
+    )
+}
+
+/// [`serve_longtail`] with an explicit engine-stepping thread budget.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_longtail_with(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: crate::cluster::PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    requests: &[Request],
+    horizon_ms: f64,
+    seed: u64,
+    threads: Parallelism,
+) -> ClusterReport {
     let budgets = cfg.budgets(gpus);
     assert!(
         budgets.iter().all(|&b| b > 0),
@@ -694,7 +775,9 @@ pub fn serve_longtail(
         &budgets,
         cfg.min_replicas,
     );
-    run_lifecycle(profiles, gpus, &plan, routing, sched, cfg, requests, horizon_ms, seed)
+    run_lifecycle_with(
+        profiles, gpus, &plan, routing, sched, cfg, requests, horizon_ms, seed, threads,
+    )
 }
 
 /// The 2×V100 cluster the canonical long-tail scenario is sized for.

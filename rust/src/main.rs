@@ -5,28 +5,34 @@
 //! Subcommands:
 //!   figures  --fig <2|3|4|...|14|all> [--out results]
 //!   tables   --table <1|2|3|6|all>    [--out results]
-//!   simulate --config <scenario.json>   (scenarios with a "cluster"
-//!            block run on the placement/routing cluster engine; adding
-//!            an "adaptive" block runs the adaptive control plane; a
-//!            "lifecycle" block runs the long-tail memory manager)
+//!   simulate --config <scenario.json> [--threads N|auto]   (scenarios
+//!            with a "cluster" block run on the placement/routing
+//!            cluster engine; adding an "adaptive" block runs the
+//!            adaptive control plane; a "lifecycle" block runs the
+//!            long-tail memory manager)
 //!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
 //!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
-//!            [--horizon ms] [--seed N]   — Fig. 12 workload on an
-//!            arbitrary cluster
+//!            [--horizon ms] [--seed N] [--threads N|auto]   — Fig. 12
+//!            workload on an arbitrary cluster
 //!   adaptive [--config <scenario.json>] [--horizon ms] [--seed N]
 //!            [--interval ms] [--alpha X] [--threshold X] [--rearm X]
-//!            [--cooldown N] [--migration-cost ms]   — adaptive control
-//!            plane vs static placement on the drifting-rate workload
+//!            [--cooldown N] [--migration-cost ms] [--threads N|auto]
+//!            — adaptive control plane vs static placement on the
+//!            drifting-rate workload
 //!   lifecycle [--config <scenario.json>] [--horizon ms] [--seed N]
 //!            [--eviction lru|lfu|cost] [--mem-budget MiB]
-//!            [--oblivious]   — long-tail Zipf fleet under the memory
-//!            manager; without --config, runs the canonical 24-model
-//!            scenario and compares warmness-aware vs warm-oblivious
-//!            routing
+//!            [--oblivious] [--threads N|auto]   — long-tail Zipf fleet
+//!            under the memory manager; without --config, runs the
+//!            canonical 24-model scenario and compares warmness-aware
+//!            vs warm-oblivious routing
 //!   optimize --model <name> [--slo ms]
 //!   profile  --model <name> [--batch N]
 //!   serve    [--seconds N] [--rate-scale X] [--policy dstack|fifo]
 //!   selfcheck
+//!
+//! All cluster paths accept `--threads N|auto`: the engine-stepping
+//! thread budget (`auto` = one per core, `1` = serial). Thread count
+//! never changes results — reports are byte-identical for any value.
 
 use dstack::util::cli::Args;
 use std::path::Path;
@@ -77,6 +83,18 @@ fn figures(args: &Args, which: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--threads N|auto` → engine-stepping budget, overriding `base` (a
+/// scenario's `parallelism` field or the default) when given.
+fn threads_from_args(
+    args: &Args,
+    base: dstack::cluster::Parallelism,
+) -> anyhow::Result<dstack::cluster::Parallelism> {
+    match args.get("threads") {
+        Some(s) => dstack::cluster::Parallelism::parse(s).map_err(|e| anyhow::anyhow!("{e}")),
+        None => Ok(base),
+    }
+}
+
 fn simulate(args: &Args) -> anyhow::Result<()> {
     let path = args
         .positional
@@ -84,8 +102,9 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         .map(String::as_str)
         .or(args.get("config"))
         .ok_or_else(|| anyhow::anyhow!("simulate needs a scenario file"))?;
-    let sc = dstack::config::Scenario::from_file(Path::new(path))
+    let mut sc = dstack::config::Scenario::from_file(Path::new(path))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    sc.parallelism = threads_from_args(args, sc.parallelism)?;
     if sc.cluster.is_some() {
         if sc.lifecycle.is_some() {
             let rep = dstack::config::run_lifecycle_scenario(&sc);
@@ -237,8 +256,8 @@ fn adaptive_cfg_from_args(
 }
 
 fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
-    use dstack::cluster::{serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy};
-    use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive, AdaptiveCfg};
+    use dstack::cluster::{serve_cluster_with, GpuSched, PlacementPolicy, RoutingPolicy};
+    use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive_with, AdaptiveCfg};
     if let Some(path) = args.get("config") {
         let mut sc = dstack::config::Scenario::from_file(Path::new(path))
             .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -247,6 +266,7 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         }
         sc.horizon_ms = args.get_f64("horizon", sc.horizon_ms);
         sc.seed = args.get_u64("seed", sc.seed);
+        sc.parallelism = threads_from_args(args, sc.parallelism)?;
         sc.adaptive =
             Some(adaptive_cfg_from_args(args, sc.adaptive.clone().unwrap_or_default())?);
         let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
@@ -257,6 +277,7 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
     }
     let horizon_ms = args.get_f64("horizon", 10_000.0);
     let seed = args.get_u64("seed", 42);
+    let threads = threads_from_args(args, dstack::cluster::Parallelism::Auto)?;
     let cfg = adaptive_cfg_from_args(args, AdaptiveCfg::default())?;
 
     let (profiles, initial, peak, reqs) = drift_workload(horizon_ms, seed);
@@ -267,7 +288,7 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         horizon_ms / 2.0
     );
 
-    let stat = serve_cluster(
+    let stat = serve_cluster_with(
         &profiles,
         &peak,
         &gpus,
@@ -277,11 +298,12 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         &reqs,
         horizon_ms,
         seed,
+        threads,
     );
     println!("\n== static placement (solved once, for per-model peak rates) ==");
     print_cluster_report(&names, &stat);
 
-    let adap = run_adaptive(
+    let adap = run_adaptive_with(
         &profiles,
         &initial,
         &gpus,
@@ -292,6 +314,7 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         &reqs,
         horizon_ms,
         seed,
+        threads,
     );
     println!("\n== adaptive control plane ==");
     print_cluster_report(&names, &adap);
@@ -315,7 +338,7 @@ fn lifecycle_fleet_names(sc: &dstack::config::Scenario) -> Vec<String> {
 fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
     use dstack::cluster::{GpuSched, PlacementPolicy, RoutingPolicy};
     use dstack::lifecycle::{
-        longtail_gpus, longtail_workload, serve_longtail, EvictionPolicy, LifecycleCfg,
+        longtail_gpus, longtail_workload, serve_longtail_with, EvictionPolicy, LifecycleCfg,
     };
     if let Some(path) = args.get("config") {
         let mut sc = dstack::config::Scenario::from_file(Path::new(path))
@@ -325,6 +348,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
         }
         sc.horizon_ms = args.get_f64("horizon", sc.horizon_ms);
         sc.seed = args.get_u64("seed", sc.seed);
+        sc.parallelism = threads_from_args(args, sc.parallelism)?;
         {
             let lc = sc.lifecycle.as_mut().expect("checked above");
             if let Some(e) = args.get("eviction") {
@@ -347,6 +371,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
     // fleet; warmness-aware vs warm-oblivious JSQ side by side.
     let horizon_ms = args.get_f64("horizon", 8_000.0);
     let seed = args.get_u64("seed", 42);
+    let threads = threads_from_args(args, dstack::cluster::Parallelism::Auto)?;
     let mut cfg = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
     if let Some(e) = args.get("eviction") {
         cfg.eviction = EvictionPolicy::parse(e).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -368,7 +393,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
 
     let run = |warm: bool| {
         let c = LifecycleCfg { warm_routing: warm, ..cfg.clone() };
-        serve_longtail(
+        serve_longtail_with(
             &profiles,
             &rates,
             &gpus,
@@ -379,6 +404,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
             &reqs,
             horizon_ms,
             seed,
+            threads,
         )
     };
     if args.has_flag("oblivious") {
@@ -409,7 +435,9 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
-    use dstack::cluster::{fig12_workload, serve_cluster, GpuSched, PlacementPolicy, RoutingPolicy};
+    use dstack::cluster::{
+        fig12_workload, serve_cluster_with, GpuSched, PlacementPolicy, RoutingPolicy,
+    };
     let gpu_names = args.get_or("gpus", "T4,T4,T4,T4");
     let mut gpus = Vec::new();
     for n in gpu_names.split(',') {
@@ -426,11 +454,12 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
         GpuSched::parse(args.get_or("sched", "dstack")).map_err(|e| anyhow::anyhow!("{e}"))?;
     let horizon_ms = args.get_f64("horizon", 8_000.0);
     let seed = args.get_u64("seed", 77);
+    let threads = threads_from_args(args, dstack::cluster::Parallelism::Auto)?;
 
     // The Fig. 12 asymmetric-demand workload over the chosen cluster.
     let (profiles, rates, reqs) = fig12_workload(horizon_ms, seed);
-    let rep = serve_cluster(
-        &profiles, &rates, &gpus, placement, routing, sched, &reqs, horizon_ms, seed,
+    let rep = serve_cluster_with(
+        &profiles, &rates, &gpus, placement, routing, sched, &reqs, horizon_ms, seed, threads,
     );
     println!(
         "cluster [{}] placement={} routing={} sched={} horizon={:.0}ms",

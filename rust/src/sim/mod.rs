@@ -74,7 +74,13 @@ impl<'a> SimView<'a> {
 }
 
 /// Scheduling policy interface. Implementations live in [`crate::sched`].
-pub trait Policy {
+///
+/// `Send` is a supertrait: the cluster execution core
+/// (`cluster::exec`) fans per-GPU engines — each a [`Sim`] plus its
+/// boxed policy — out to a worker pool between barriers, so policies
+/// must be movable across threads. All implementations are plain owned
+/// data; `rust/tests/parallel_exec.rs` pins the bound for each one.
+pub trait Policy: Send {
     fn name(&self) -> String;
 
     /// Return launches to perform *now*. Called repeatedly after every

@@ -68,13 +68,31 @@ impl Online {
 
 /// Percentile of a sample set (linear interpolation between order stats).
 /// `q` is in `[0, 100]`. Returns 0.0 on empty input.
+///
+/// O(n) via quickselect (`select_nth_unstable_by`) instead of a full
+/// O(n log n) sort: this runs once per model per report over latency
+/// vectors that grow with the horizon, and only the two order
+/// statistics around the rank are ever needed. Results are bit-identical
+/// to sorting first (the same order statistics feed the same
+/// interpolation).
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
-    let mut sorted: Vec<f64> = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    percentile_sorted(&sorted, q)
+    let mut scratch: Vec<f64> = samples.to_vec();
+    let q = q.clamp(0.0, 100.0);
+    let rank = q / 100.0 * (scratch.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let frac = rank - lo as f64;
+    let (_, &mut lo_v, rest) =
+        scratch.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+    if frac == 0.0 {
+        return lo_v;
+    }
+    // The (lo+1)-th order statistic is the minimum of the partition
+    // right of the pivot (non-empty whenever frac > 0).
+    let hi_v = rest.iter().copied().fold(f64::INFINITY, f64::min);
+    lo_v * (1.0 - frac) + hi_v * frac
 }
 
 /// Percentile over an already-sorted slice.
@@ -225,6 +243,23 @@ mod tests {
         assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.0], 90.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_matches_sorted_reference() {
+        // Quickselect path vs the sort-based reference: bit-identical
+        // on unsorted, duplicate-heavy input across the whole q range.
+        let mut xs = Vec::new();
+        let mut state = 0x9E37u64;
+        for _ in 0..257 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            xs.push(((state >> 33) % 1000) as f64 / 7.0);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 25.0, 50.0, 63.7, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(percentile(&xs, q), percentile_sorted(&sorted, q), "q={q}");
+        }
     }
 
     #[test]
