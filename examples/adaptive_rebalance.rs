@@ -33,7 +33,7 @@ fn main() {
             PlacementPolicy::FirstFitDecreasing,
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         );
@@ -58,7 +58,7 @@ fn main() {
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
         &AdaptiveCfg::default(),
-        &reqs,
+        reqs.clone(),
         horizon_ms,
         seed,
     );

@@ -19,7 +19,7 @@ fn main() {
     println!("== paper scenarios (fixed layouts, 4xT4, round-robin split) ==");
     println!("{:<22} {:>12}  per-model  mean-util%", "policy", "total(req/s)");
     for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
-        let r = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol);
+        let r = run_cluster(&profiles, &T4, 4, reqs.clone(), horizon_ms, pol);
         println!(
             "{:<22} {:>12.0}  {:?}  {:>6.1}",
             r.policy,
@@ -40,7 +40,8 @@ fn main() {
     ];
     for (label, gpus, placement, routing) in scenarios {
         let r = serve_cluster(
-            &profiles, &rates, gpus, placement, routing, GpuSched::Dstack, &reqs, horizon_ms, 77,
+            &profiles, &rates, gpus, placement, routing, GpuSched::Dstack, reqs.clone(), horizon_ms,
+            77,
         );
         println!(
             "{:<22} {:>12.0}  {:?}  {:>6.1}",

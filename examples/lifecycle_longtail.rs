@@ -38,7 +38,7 @@ fn main() {
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
             &LifecycleCfg { warm_routing: warm, ..cfg.clone() },
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         )

@@ -26,7 +26,7 @@ fn main() {
             PlacementPolicy::FirstFitDecreasing,
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         );
@@ -47,7 +47,7 @@ fn main() {
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
             &acfg,
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         );

@@ -22,7 +22,8 @@ fn main() {
     for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
         let mut total = 0.0;
         bench(&format!("cluster/{pol:?}"), &cfg, || {
-            total = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol).total_throughput();
+            total = run_cluster(&profiles, &T4, 4, reqs.clone(), horizon_ms, pol)
+                .total_throughput();
         });
         println!("    -> total {total:.0} req/s");
         if pol == ClusterPolicy::DstackAll {
@@ -48,7 +49,7 @@ fn main() {
                 PlacementPolicy::FirstFitDecreasing,
                 routing,
                 GpuSched::Dstack,
-                &reqs,
+                reqs.clone(),
                 horizon_ms,
                 7,
             )

@@ -33,7 +33,7 @@ fn main() {
                 RoutingPolicy::JoinShortestQueue,
                 GpuSched::Dstack,
                 &lcfg,
-                &reqs,
+                reqs.clone(),
                 horizon_ms,
                 seed,
             );

@@ -1,83 +1,52 @@
-//! Serial-vs-parallel wall-clock of the cluster execution core on a
-//! 16-GPU Zipf fleet — the workload class the ROADMAP names as the
-//! wall-clock bottleneck for 10+ GPU sweeps.
+//! Wall-clock of the cluster execution core on a 16-GPU Zipf fleet —
+//! the workload class the ROADMAP names as the bottleneck for 10+ GPU
+//! sweeps. Two cases:
 //!
-//! Setup: 32 Zipf(0.9)-popular models knee-packed onto 16 V100s and
-//! served through `run_placement` with JSQ routing and per-GPU D-STACK
-//! schedulers. Arrivals are quantized to a 2 ms ingress tick (a batched
-//! front-end handing the cluster its accepted requests once per tick),
-//! which is also what makes the epochs of the execution core *fat*:
-//! every barrier routes a burst that touches most engines, so the
-//! fanned-out stepping has real work per epoch. Un-quantized streams
-//! barrier at every single arrival; those epochs fall under the core's
-//! fan-out threshold and run inline, so the parallel path degrades to
-//! serial instead of losing time to synchronization.
+//! **Quantized** (2 ms ingress ticks, JSQ): a batched front-end hands
+//! the cluster its accepted requests once per tick, so barriers are
+//! *fat* — every one routes a burst touching most engines — and the
+//! worker-pool fan-out is what pays. Asserts serial-vs-parallel
+//! byte-identity and (on multi-core hosts) parallel speedup > 1.0.
 //!
-//! Asserts (1) byte-identical reports between `threads = 1` and the
-//! parallel run — determinism is the contract that makes the pool safe
-//! to default on — and (2) wall-clock speedup > 1.0 whenever the host
-//! actually has more than one core. Writes `BENCH_parallel.json` with
-//! the headline serial/parallel wall-clock numbers (best-of-N ms) for
-//! the perf trajectory CI uploads.
+//! **Un-quantized** (raw Poisson arrivals, Zipf(1.1), RR): every
+//! arrival is its own barrier, the epoch loop's worst case — one epoch
+//! per request and an O(GPUs) scan each time, O(G·R) coordination for
+//! engine-local work. The sparse core routes the same stream through
+//! per-engine lookahead + barrier elision (whole inter-event spans
+//! batched into timestamped injection rounds). Asserts epoch-vs-sparse
+//! byte-identity and (on multi-core hosts) sparse wall-clock ≤ epoch
+//! wall-clock, and records the sparse-vs-epoch speedup plus the
+//! barrier-elision ratio in `BENCH_parallel.json` for the CI summary.
 
 use dstack::bench::Bench;
 use dstack::cluster::{
-    place, run_placement_with, GpuSched, Parallelism, PlacementPolicy, RoutingPolicy,
+    place, run_placement_with, ExecMode, ExecOpts, GpuSched, Parallelism, PlacementPolicy,
+    RoutingPolicy,
 };
 use dstack::lifecycle::longtail_workload;
 use dstack::profile::{GpuSpec, V100};
 use dstack::util::json::Json;
+use dstack::workload::Request;
 use std::time::Duration;
 
-fn main() {
-    let horizon_ms = 5_000.0;
-    let n_gpus = 16usize;
-    let n_models = 32usize;
-    let total_rps = 6_000.0;
-    const TICK_US: u64 = 2_000;
+const N_GPUS: usize = 16;
+const N_MODELS: usize = 32;
 
-    let (profiles, rates, mut reqs) =
-        longtail_workload(n_models, 0.9, total_rps, horizon_ms, 99);
-    // Quantize arrivals to the ingress tick (deadlines shift with their
-    // arrival so each request keeps its full SLO window).
-    for r in reqs.iter_mut() {
-        let q = (r.arrival / TICK_US) * TICK_US;
-        r.deadline -= r.arrival - q;
-        r.arrival = q;
-    }
-    let gpus: Vec<GpuSpec> = vec![V100.clone(); n_gpus];
+fn fleet(
+    alpha: f64,
+    total_rps: f64,
+    horizon_ms: f64,
+    seed: u64,
+) -> (Vec<dstack::profile::ModelProfile>, Vec<GpuSpec>, dstack::cluster::Placement, Vec<Request>)
+{
+    let (profiles, rates, reqs) = longtail_workload(N_MODELS, alpha, total_rps, horizon_ms, seed);
+    let gpus: Vec<GpuSpec> = vec![V100.clone(); N_GPUS];
     let pl = place(&profiles, &rates, &gpus, PlacementPolicy::LoadBalance);
-    let hosted: usize = pl.hosted.iter().map(|h| h.len()).sum();
-    println!(
-        "fleet: {n_models} models ({hosted} replicas) on {n_gpus}xV100, {total_rps:.0} req/s, \
-         {} requests over {horizon_ms:.0} ms, ingress tick {} ms",
-        reqs.len(),
-        TICK_US / 1_000
-    );
+    (profiles, gpus, pl, reqs)
+}
 
-    let run = |threads: Parallelism| {
-        run_placement_with(
-            &profiles,
-            &gpus,
-            &pl,
-            &reqs,
-            horizon_ms,
-            RoutingPolicy::JoinShortestQueue,
-            GpuSched::Dstack,
-            7,
-            "bench_parallel",
-            threads,
-        )
-    };
-
+fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-
-    // Determinism first: the parallel report must be byte-identical.
-    let a = run(Parallelism::Threads(1)).to_json().to_string_compact();
-    let b = run(Parallelism::Threads(threads)).to_json().to_string_compact();
-    assert_eq!(a, b, "threads={threads} report diverged from the serial report");
-    println!("determinism: threads=1 and threads={threads} reports are byte-identical");
-
     // Best-of-5 minima: robust against transient load on shared CI
     // runners (GitHub-hosted ubuntu runners have 4 vCPUs, which leaves
     // real margin; a loaded 2-core host is the worst case and still
@@ -86,11 +55,53 @@ fn main() {
         .warmup(Duration::from_millis(200))
         .measure(Duration::from_millis(1_500))
         .iters(5, 50);
+
+    // ---- case 1: quantized ingress ticks, JSQ, serial vs parallel ----
+    let horizon_ms = 5_000.0;
+    const TICK_US: u64 = 2_000;
+    let (profiles, gpus, pl, mut reqs) = fleet(0.9, 6_000.0, horizon_ms, 99);
+    // Quantize arrivals to the ingress tick (deadlines shift with their
+    // arrival so each request keeps its full SLO window).
+    for r in reqs.iter_mut() {
+        let q = (r.arrival / TICK_US) * TICK_US;
+        r.deadline -= r.arrival - q;
+        r.arrival = q;
+    }
+    let hosted: usize = pl.hosted.iter().map(|h| h.len()).sum();
+    println!(
+        "fleet: {N_MODELS} models ({hosted} replicas) on {N_GPUS}xV100, 6000 req/s, \
+         {} requests over {horizon_ms:.0} ms, ingress tick {} ms",
+        reqs.len(),
+        TICK_US / 1_000
+    );
+    let run_q = |opts: ExecOpts| {
+        run_placement_with(
+            &profiles,
+            &gpus,
+            &pl,
+            reqs.clone(),
+            horizon_ms,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            7,
+            "bench_parallel",
+            opts,
+        )
+    };
+
+    // Determinism first: the parallel report must be byte-identical.
+    let a = run_q(ExecOpts::with_threads(Parallelism::Threads(1))).to_json().to_string_compact();
+    let b = run_q(ExecOpts::with_threads(Parallelism::Threads(threads)))
+        .to_json()
+        .to_string_compact();
+    assert_eq!(a, b, "threads={threads} report diverged from the serial report");
+    println!("determinism: threads=1 and threads={threads} reports are byte-identical");
+
     let serial = cfg.run("parallel/serial", || {
-        dstack::bench::black_box(run(Parallelism::Threads(1)));
+        dstack::bench::black_box(run_q(ExecOpts::with_threads(Parallelism::Threads(1))));
     });
     let parallel = cfg.run(&format!("parallel/threads={threads}"), || {
-        dstack::bench::black_box(run(Parallelism::Threads(threads)));
+        dstack::bench::black_box(run_q(ExecOpts::with_threads(Parallelism::Threads(threads))));
     });
 
     // Best-of-N: wall-clock minima are the robust speedup statistic.
@@ -101,27 +112,97 @@ fn main() {
         "serial {serial_ms:.1} ms vs parallel({threads}) {parallel_ms:.1} ms -> {speedup:.2}x"
     );
 
+    // ---- case 2: un-quantized Zipf(1.1) arrivals, RR, epoch vs sparse ----
+    let unq_horizon_ms = 4_000.0;
+    let (uprofiles, ugpus, upl, ureqs) = fleet(1.1, 6_000.0, unq_horizon_ms, 101);
+    println!(
+        "un-quantized case: Zipf(1.1), {} raw arrivals over {unq_horizon_ms:.0} ms, RR routing",
+        ureqs.len()
+    );
+    let run_u = |mode: ExecMode| {
+        run_placement_with(
+            &uprofiles,
+            &ugpus,
+            &upl,
+            ureqs.clone(),
+            unq_horizon_ms,
+            RoutingPolicy::RoundRobin,
+            GpuSched::Dstack,
+            7,
+            "bench_parallel_unq",
+            ExecOpts { threads: Parallelism::Threads(threads), mode },
+        )
+    };
+    let epoch_rep = run_u(ExecMode::Epoch);
+    let sparse_rep = run_u(ExecMode::Sparse);
+    assert_eq!(
+        epoch_rep.to_json().to_string_compact(),
+        sparse_rep.to_json().to_string_compact(),
+        "sparse report diverged from the epoch report"
+    );
+    println!("determinism: epoch and sparse reports are byte-identical");
+    let sparse_stats = sparse_rep.exec.expect("exec stats attached");
+
+    let epoch = cfg.run("parallel/unquantized_epoch", || {
+        dstack::bench::black_box(run_u(ExecMode::Epoch));
+    });
+    let sparse = cfg.run("parallel/unquantized_sparse", || {
+        dstack::bench::black_box(run_u(ExecMode::Sparse));
+    });
+    let epoch_ms = epoch.min_ns * 1e-6;
+    let sparse_ms = sparse.min_ns * 1e-6;
+    let sparse_speedup = epoch_ms / sparse_ms.max(1e-9);
+    println!(
+        "un-quantized: epoch {epoch_ms:.1} ms vs sparse {sparse_ms:.1} ms -> \
+         {sparse_speedup:.2}x ({} of {} barriers elided, {:.0}%, max lookahead {:.1} ms)",
+        sparse_stats.barriers_elided,
+        sparse_stats.barriers_elided + sparse_stats.epochs,
+        sparse_stats.elision_ratio() * 100.0,
+        sparse_stats.max_lookahead_us as f64 / 1_000.0
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::from("parallel")),
-        ("gpus", Json::from(n_gpus as u64)),
-        ("models", Json::from(n_models as u64)),
+        ("gpus", Json::from(N_GPUS as u64)),
+        ("models", Json::from(N_MODELS as u64)),
         ("requests", Json::from(reqs.len() as u64)),
         ("threads", Json::from(threads as u64)),
         ("serial_ms", Json::from(serial_ms)),
         ("parallel_ms", Json::from(parallel_ms)),
         ("speedup", Json::from(speedup)),
-        ("results", Json::Arr(vec![serial.to_json(), parallel.to_json()])),
+        (
+            "unquantized",
+            Json::obj(vec![
+                ("requests", Json::from(ureqs.len() as u64)),
+                ("epoch_ms", Json::from(epoch_ms)),
+                ("sparse_ms", Json::from(sparse_ms)),
+                ("sparse_speedup", Json::from(sparse_speedup)),
+                ("elision_ratio", Json::from(sparse_stats.elision_ratio())),
+                ("exec", sparse_stats.to_json()),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(vec![
+                serial.to_json(),
+                parallel.to_json(),
+                epoch.to_json(),
+                sparse.to_json(),
+            ]),
+        ),
     ]);
     let path = std::path::Path::new("BENCH_parallel.json");
     dstack::util::write_file(path, &json.to_string_pretty()).unwrap();
     println!("machine-readable summary: {}", path.display());
 
-    // Single-core hosts (CI fallback runners) can't speed up at all. On
-    // hosts with >= 4 cores (GitHub-hosted runners included) the
-    // fan-out must strictly beat the serial path on this fleet; a
-    // loaded 2-3-core box can't guarantee a strict win over measurement
-    // noise, so there the gate is no-material-regression — the JSON
-    // summary records the exact ratio either way.
+    // Gates. Single-core hosts (CI fallback runners) can't speed up at
+    // all; on multi-core hosts the fan-out must beat serial stepping on
+    // the quantized fleet, and sparse barriers must not lose to epoch
+    // barriers on the un-quantized fleet (elision removes per-arrival
+    // coordination entirely, so the margin is wide). A loaded 2-3-core
+    // box can't guarantee a strict quantized win over measurement
+    // noise, so there that gate is no-material-regression — the JSON
+    // summary records the exact ratios either way.
     if threads >= 4 {
         assert!(
             speedup > 1.0,
@@ -133,6 +214,28 @@ fn main() {
             speedup > 0.9,
             "parallel stepping ({parallel_ms:.1} ms on {threads} threads) regressed \
              materially vs serial ({serial_ms:.1} ms)"
+        );
+    }
+    if threads >= 4 {
+        assert!(
+            sparse_speedup > 1.0,
+            "sparse barriers ({sparse_ms:.1} ms) must not lose to epoch barriers \
+             ({epoch_ms:.1} ms) on the un-quantized Zipf stream"
+        );
+    } else if threads > 1 {
+        // Same rationale as the quantized gate: a loaded 2-3-core box
+        // can't guarantee a strict win over measurement noise.
+        assert!(
+            sparse_speedup > 0.9,
+            "sparse barriers ({sparse_ms:.1} ms) regressed materially vs epoch \
+             ({epoch_ms:.1} ms) on the un-quantized Zipf stream"
+        );
+    }
+    if threads > 1 {
+        assert!(
+            sparse_stats.elision_ratio() > 0.5,
+            "RR stream should elide most barriers, got {:.2}",
+            sparse_stats.elision_ratio()
         );
     }
 }

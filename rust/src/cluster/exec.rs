@@ -1,6 +1,6 @@
-//! Shared cluster execution core: bulk-synchronous engine stepping with
-//! deterministic barriers (the wall-clock backbone of every multi-GPU
-//! driver — see DESIGN.md §4.7).
+//! Shared cluster execution core: deterministic engine stepping with
+//! bulk-synchronous *or* sparse barriers (the wall-clock backbone of
+//! every multi-GPU driver — see DESIGN.md §4.7–4.8).
 //!
 //! The three cluster drivers ([`crate::cluster::run_placement`],
 //! [`crate::controlplane::run_adaptive`],
@@ -18,53 +18,101 @@
 //!    activations and idle expiries mutate engine model tables.
 //!
 //! Everything else an engine does (batch completions, policy timers,
-//! dispatch rounds) touches only its own state. So the core advances the
-//! cluster in *epochs*: compute the next global barrier time (next
-//! arrival, control tick, or lifecycle event), run the driver's serial
-//! barrier work at it — which routes arrivals against engine backlogs
-//! exactly as the serial loops did — then fan the per-engine stepping
-//! out to a worker pool and let each engine replay its own internal
-//! event sequence up to the *next* barrier, in parallel.
+//! dispatch rounds) touches only its own state.
+//!
+//! # Epoch mode ([`ExecMode::Epoch`])
+//!
+//! The PR 4 loop: advance the cluster in global epochs — compute the
+//! next barrier time (next arrival, control tick, or lifecycle event),
+//! run the driver's serial barrier work at it, then fan the per-engine
+//! stepping out to a worker pool and let each engine replay its own
+//! internal event sequence up to the *next* barrier, in parallel. Every
+//! engine synchronizes at every barrier, so an un-quantized arrival
+//! stream degenerates to one epoch per request and the per-epoch
+//! full-slice engine scan makes coordination O(GPUs × requests).
+//!
+//! # Sparse mode ([`ExecMode::Sparse`], the default)
+//!
+//! An arrival only needs the engines that host replicas of the arriving
+//! model — the *candidate set*, exposed by the driver through
+//! [`EpochDriver::candidates`]. Every other engine is irrelevant to the
+//! barrier: nothing reads or writes it, so it may keep running ahead to
+//! its *own* next relevant barrier. The core maintains
+//!
+//! - a per-model → candidate-engine index (inverted into engine →
+//!   hosted models, rebuilt only when a driver event may have changed
+//!   the topology), and
+//! - a per-engine `safe_until` frontier: the earliest instant the
+//!   engine can matter again — the next arrival of a model it hosts,
+//!   the next driver event (conservatively: any driver event may touch
+//!   any engine), or the horizon —
+//!
+//! kept in a min-heap keyed on each engine's frontier. Selecting the
+//! engines that must synchronize at a barrier is then O(k log G) for k
+//! candidates instead of the epoch loop's O(G) full-slice scan, and an
+//! engine whose hosted models stay silent for a hundred arrivals is
+//! advanced once, not re-scanned a hundred times — the big win for
+//! un-quantized long-tail Zipf streams.
+//!
+//! For routing policies that never read backlogs (round-robin / static
+//! splits, [`crate::cluster::routing::RoutingPolicy::reads_backlogs`]),
+//! the stepping barrier is elided entirely: every arrival strictly
+//! before the next driver event is routed serially through the pure
+//! decision hook [`EpochDriver::route_free`] and delivered as a
+//! *timestamped injection*; each engine then replays its events and its
+//! injections interleaved in time order — the same per-engine call
+//! sequence, with zero intervening barriers and one fat parallel round
+//! per span.
 //!
 //! # Determinism
 //!
-//! Thread count is not allowed to change results, byte for byte:
+//! Neither thread count nor `exec_mode` is allowed to change results,
+//! byte for byte:
 //!
-//! - Barrier times depend only on the request stream and driver state,
-//!   never on which thread stepped an engine.
+//! - A [`crate::sim::Sim`]'s trajectory is a pure function of its
+//!   (step-time, injection) call sequence. Both modes produce the exact
+//!   sequence of the original serial loop for every engine: internal
+//!   events replay at their own timestamps in order, injections land
+//!   at their arrival instants before the step at that instant.
 //! - All cross-engine reads (backlog probes, rebalance surgery, idle
-//!   sweeps) happen in the serial barrier phase, when every engine has
-//!   processed exactly its events *strictly before* the barrier — the
-//!   same state the serial loop exposed, because in that loop every
-//!   engine-internal event was itself a global minimum and engines were
-//!   stepped at their own event times.
-//! - Between barriers each engine steps at its own event times in
-//!   order, one [`Sim::step_to`] per event, exactly the call sequence
-//!   the serial loop produced. Engines never share mutable state, so
-//!   partitioning them over threads is pure scheduling.
+//!   sweeps) happen in serial phases, when every engine that can be
+//!   read has processed exactly its events *strictly before* the
+//!   barrier. In sparse mode only candidate engines are forced to the
+//!   arrival instant before the backlog probe — sufficient because a
+//!   probe of model *m* only ever reads engines hosting *m*, which are
+//!   candidates by construction.
+//! - The frontier invariant makes run-ahead safe: an engine hosting
+//!   model *m* has `safe_until` ≤ the next arrival of *m* (arrival
+//!   times only ever pop from the per-model queues, never appear
+//!   earlier), so no engine can ever have run past a barrier that needs
+//!   it. Driver events conservatively bound *every* frontier; a driver
+//!   may therefore only create a new event at a barrier, with a time
+//!   strictly in the future — which all three drivers satisfy (debug
+//!   asserts enforce both directions).
 //!
 //! Hence a fixed (placement, routing, seed, stream) tuple yields an
-//! identical `ClusterReport` JSON for `threads = 1` and `threads = N` —
-//! the property `rust/tests/parallel_exec.rs` locks in for all three
-//! drivers.
+//! identical `ClusterReport` JSON for any `threads` × `exec_mode`
+//! combination — the property `rust/tests/parallel_exec.rs` locks in
+//! for all three drivers.
 //!
 //! # Worker pool
 //!
 //! No dependencies are reachable in the build image, so the pool is
 //! plain `std`: scoped threads ([`std::thread::scope`]) that live for
-//! the whole run, fed per-epoch batches over [`std::sync::mpsc`]
-//! channels. Engines *move* into a batch and move back when the worker
-//! returns it (ownership ping-pong), which keeps the pool 100% safe
-//! code — no shared-mutability cells, no unsafe partitioning. Epochs
-//! with fewer than `FANOUT_MIN` busy engines are stepped inline on
-//! the driver thread: for small clusters the pool is pure bypass, and
-//! `threads = 1` skips spawning entirely (the legacy serial path).
+//! the whole run, fed batches of [`WorkItem`]s over
+//! [`std::sync::mpsc`] channels. Engines *move* into a batch and move
+//! back when the worker returns it (ownership ping-pong), which keeps
+//! the pool 100% safe code — no shared-mutability cells, no unsafe.
+//! Rounds with fewer than `FANOUT_MIN` busy engines are stepped inline
+//! on the driver thread, and `threads = 1` skips spawning entirely.
 
 use crate::gpu::Us;
 use crate::metrics::RunReport;
 use crate::sim::{Policy, Sim};
+use crate::util::json::Json;
 use crate::workload::Request;
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 /// Engine-stepping thread budget for a cluster run — the `parallelism`
@@ -109,6 +157,165 @@ impl Parallelism {
     }
 }
 
+/// Barrier discipline of the execution core — the `exec_mode` scenario
+/// knob and the CLI `--exec-mode` flag (docs/CONFIG.md). Mode never
+/// changes results, only wall-clock; sparse is the default and epoch is
+/// kept in-tree so the equivalence stays testable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// PR 4 bulk-synchronous loop: every engine barriers at every
+    /// global arrival/driver event.
+    Epoch,
+    /// Per-engine relevant-arrival lookahead + routing-aware barrier
+    /// elision (the default).
+    #[default]
+    Sparse,
+}
+
+impl ExecMode {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Result<ExecMode, String> {
+        match s {
+            "epoch" => Ok(ExecMode::Epoch),
+            "sparse" => Ok(ExecMode::Sparse),
+            other => Err(format!("exec_mode must be \"epoch\" or \"sparse\", got '{other}'")),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecMode::Epoch => "epoch",
+            ExecMode::Sparse => "sparse",
+        }
+    }
+}
+
+/// Execution-core options every cluster driver accepts (the `_with`
+/// run variants): stepping thread budget plus barrier discipline.
+/// Neither field changes results — see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecOpts {
+    pub threads: Parallelism,
+    pub mode: ExecMode,
+}
+
+impl ExecOpts {
+    pub fn new(threads: Parallelism, mode: ExecMode) -> ExecOpts {
+        ExecOpts { threads, mode }
+    }
+
+    /// Default mode with an explicit thread budget.
+    pub fn with_threads(threads: Parallelism) -> ExecOpts {
+        ExecOpts { threads, ..Default::default() }
+    }
+}
+
+/// Out-of-band execution telemetry attached to a
+/// [`crate::cluster::ClusterReport`] (its `exec` field). Deliberately
+/// **never serialized** into the report JSON: `exec_mode` and thread
+/// count must not change the report bytes, and these counters do.
+/// Surfaced by `dstack … --verbose` and recorded by
+/// `benches/bench_parallel.rs` into `BENCH_parallel.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecStats {
+    pub mode: ExecMode,
+    /// Serial barrier rounds run (epoch-mode epochs, sparse-mode
+    /// barriers + elision rounds).
+    pub epochs: u64,
+    /// Arrival instants folded into batched injection rounds instead of
+    /// getting their own stepping barrier (sparse mode, backlog-free
+    /// routing only).
+    pub barriers_elided: u64,
+    /// Arrivals routed through batched injection rounds.
+    pub arrivals_batched: u64,
+    /// Longest run-ahead window granted to an engine past a barrier
+    /// before its next forced resync (µs).
+    pub max_lookahead_us: Us,
+}
+
+impl ExecStats {
+    fn new(mode: ExecMode) -> ExecStats {
+        ExecStats { mode, ..Default::default() }
+    }
+
+    fn note_lookahead(&mut self, d: Us) {
+        self.max_lookahead_us = self.max_lookahead_us.max(d);
+    }
+
+    /// Fraction of would-be barriers the sparse core elided:
+    /// `elided / (elided + serial rounds)`. 0 in epoch mode.
+    pub fn elision_ratio(&self) -> f64 {
+        let total = self.barriers_elided + self.epochs;
+        if total == 0 {
+            0.0
+        } else {
+            self.barriers_elided as f64 / total as f64
+        }
+    }
+
+    /// JSON form for bench summaries (NOT part of `ClusterReport` JSON).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::from(self.mode.label())),
+            ("epochs", Json::from(self.epochs)),
+            ("barriers_elided", Json::from(self.barriers_elided)),
+            ("arrivals_batched", Json::from(self.arrivals_batched)),
+            ("max_lookahead_us", Json::from(self.max_lookahead_us)),
+        ])
+    }
+
+    /// One-line human form for `--verbose` CLI output.
+    pub fn render(&self) -> String {
+        format!(
+            "exec core: mode={} serial_rounds={} barriers_elided={} ({:.0}%) \
+             arrivals_batched={} max_lookahead={:.1} ms",
+            self.mode.label(),
+            self.epochs,
+            self.barriers_elided,
+            self.elision_ratio() * 100.0,
+            self.arrivals_batched,
+            self.max_lookahead_us as f64 / 1_000.0
+        )
+    }
+}
+
+/// Engines a driver marked at a barrier (injections, tombstone
+/// surgery). List-backed so clearing is O(marked), not O(GPUs) — the
+/// epoch loop used to refill a full bool slice at every barrier.
+pub(crate) struct Touched {
+    flags: Vec<bool>,
+    list: Vec<usize>,
+}
+
+impl Touched {
+    pub(crate) fn new(n: usize) -> Touched {
+        Touched { flags: vec![false; n], list: Vec::with_capacity(n) }
+    }
+
+    /// Mark engine `g` as mutated at the current barrier.
+    pub(crate) fn mark(&mut self, g: usize) {
+        if !self.flags[g] {
+            self.flags[g] = true;
+            self.list.push(g);
+        }
+    }
+
+    pub(crate) fn is(&self, g: usize) -> bool {
+        self.flags[g]
+    }
+
+    pub(crate) fn list(&self) -> &[usize] {
+        &self.list
+    }
+
+    pub(crate) fn clear(&mut self) {
+        for &g in &self.list {
+            self.flags[g] = false;
+        }
+        self.list.clear();
+    }
+}
+
 /// One per-GPU engine: a [`Sim`] plus the policy driving it. Shared by
 /// all cluster drivers; the control plane and the memory manager
 /// additionally rebuild the policy after tombstone surgery
@@ -123,14 +330,43 @@ impl ExecEngine {
         self.sim.step_to(t, self.policy.as_mut(), horizon);
     }
 
-    /// One engine's share of an epoch: finish the barrier time (when it
+    /// One engine's share of a round: finish the barrier time (when it
     /// was touched by routing/surgery or has an event due there), then
-    /// replay its internal events strictly before the next barrier —
-    /// each at its own timestamp, exactly as the serial global loop
-    /// stepped it.
+    /// replay its internal events strictly before `drain_to` — each at
+    /// its own timestamp, exactly as the serial global loop stepped it.
     fn advance(&mut self, step_now: bool, now: Us, drain_to: Us, horizon: Us) {
         if step_now {
             self.step(now, horizon);
+        }
+        while let Some(w) = self.sim.next_event_time() {
+            if w >= drain_to {
+                break;
+            }
+            self.step(w, horizon);
+        }
+    }
+
+    /// Elided-barrier replay: interleave internal events with
+    /// timestamped injections (nondecreasing arrival order) — replay
+    /// events strictly before each arrival instant, inject everything
+    /// due at it, step at it — then drain remaining events before
+    /// `drain_to`. This is exactly the call sequence [`Sim::run`] (and
+    /// hence the barrier-per-arrival loops) produces.
+    fn advance_injecting(&mut self, inj: Vec<(Us, Request)>, drain_to: Us, horizon: Us) {
+        debug_assert!(inj.windows(2).all(|w| w[0].0 <= w[1].0), "injections out of order");
+        let mut it = inj.into_iter().peekable();
+        while let Some(&(a, _)) = it.peek() {
+            while let Some(w) = self.sim.next_event_time() {
+                if w >= a {
+                    break;
+                }
+                self.step(w, horizon);
+            }
+            while it.peek().is_some_and(|&(t, _)| t == a) {
+                let (_, r) = it.next().expect("peeked");
+                self.sim.inject(r);
+            }
+            self.step(a, horizon);
         }
         while let Some(w) = self.sim.next_event_time() {
             if w >= drain_to {
@@ -155,14 +391,63 @@ impl ExecEngine {
     }
 }
 
-/// Driver-specific half of an epoch: everything that needs the global
-/// view, executed serially at each barrier. The core supplies the
-/// arrival stream and the engine stepping; the driver supplies barrier
-/// times of its own (ticks, load maturities, …) and the barrier work.
+/// Driver-specific half of a barrier: everything that needs the global
+/// view, executed serially. The core supplies the arrival stream and
+/// the engine stepping; the driver supplies barrier times of its own
+/// (ticks, load maturities, …), the routing/topology hooks, and the
+/// barrier work.
+///
+/// # Contract (what makes sparse barriers safe)
+///
+/// - [`Self::candidates`] must cover every engine [`Self::route`] can
+///   read or write for that request — including fallback replicas and
+///   any engine an eviction/re-route cascade may reach. A driver whose
+///   cascades are unbounded (the lifecycle memory manager) declares
+///   *all* engines and degrades gracefully to epoch behavior.
+/// - Topology (the candidate index) may only change at barriers where
+///   [`Self::next_event`] was due.
+/// - A new driver event may only be created at a barrier, with a time
+///   strictly greater than that barrier, and only if `next_event()` at
+///   every earlier barrier was no later than the creating barrier (true
+///   for periodic ticks and for maturities spawned by ticks/loads).
+/// - When [`Self::elides_barriers`] is true, `pre_arrivals` /
+///   `post_arrivals` must be no-ops at barriers without a due driver
+///   event, and [`Self::route_free`] must reproduce [`Self::route`]'s
+///   driver-state mutations exactly while never touching an engine.
 pub(crate) trait EpochDriver {
+    /// Number of global models (the candidate-index domain).
+    fn n_models(&self) -> usize;
+
     /// Earliest pending driver event (control tick, pending activation,
     /// load maturity, idle expiry). `None` when only arrivals remain.
     fn next_event(&self) -> Option<Us>;
+
+    /// Engines hosting a routable replica of `model` — the engines an
+    /// arrival of that model synchronizes in sparse mode. An empty
+    /// slice means arrivals of the model are rejected without touching
+    /// any engine.
+    fn candidates_of(&self, model: usize) -> &[usize];
+
+    /// Candidate engines of one arriving request (the sparse core's
+    /// per-arrival hook; defaults to the model-level index).
+    fn candidates(&self, req: &Request) -> &[usize] {
+        self.candidates_of(req.model)
+    }
+
+    /// True when routing decisions never read engine state (round-robin
+    /// / static splits): the sparse core may then elide stepping
+    /// barriers and batch arrivals through [`Self::route_free`].
+    fn elides_barriers(&self) -> bool {
+        false
+    }
+
+    /// Pure routing decision for the elided path: admission + replica
+    /// choice with all driver-side bookkeeping (demand counters, reject
+    /// counts), returning the destination `(gpu, engine-local model)`
+    /// or `None` when rejected. Must not touch any engine.
+    fn route_free(&mut self, _t: Us, _req: &Request) -> Option<(usize, usize)> {
+        unreachable!("driver did not declare barrier-free routing")
+    }
 
     /// Barrier work before arrivals are routed (mature loads/activations
     /// due at `t`). Mark engines whose tables changed in `touched`.
@@ -170,7 +455,7 @@ pub(crate) trait EpochDriver {
         &mut self,
         _t: Us,
         _engines: &mut [Option<ExecEngine>],
-        _touched: &mut [bool],
+        _touched: &mut Touched,
     ) {
     }
 
@@ -181,7 +466,7 @@ pub(crate) trait EpochDriver {
         t: Us,
         req: Request,
         engines: &mut [Option<ExecEngine>],
-        touched: &mut [bool],
+        touched: &mut Touched,
     );
 
     /// Barrier work after arrivals (control ticks, idle sweeps).
@@ -189,18 +474,42 @@ pub(crate) trait EpochDriver {
         &mut self,
         _t: Us,
         _engines: &mut [Option<ExecEngine>],
-        _touched: &mut [bool],
+        _touched: &mut Touched,
     ) {
     }
 }
 
-/// One epoch's worth of engine stepping shipped to a worker: the
-/// engines move in, are advanced, and move back.
-struct Batch {
-    /// (engine slot, engine, step-at-barrier?).
-    items: Vec<(usize, ExecEngine, bool)>,
-    now: Us,
+/// One engine's share of a stepping round, shipped by value to a
+/// worker: the engine moves in, is advanced, and moves back.
+struct WorkItem {
+    /// Engine slot index.
+    g: usize,
+    engine: ExecEngine,
+    /// Step at the round's barrier instant first (the engine was
+    /// injected into or mutated there).
+    step_now: bool,
+    /// Replay internal events strictly before this instant (per-item:
+    /// sparse engines run ahead to their *own* frontier).
     drain_to: Us,
+    /// Timestamped injections for the elided-barrier path (empty
+    /// otherwise).
+    inj: Vec<(Us, Request)>,
+}
+
+impl WorkItem {
+    fn run(&mut self, now: Us, horizon: Us) {
+        if self.inj.is_empty() {
+            self.engine.advance(self.step_now, now, self.drain_to, horizon);
+        } else {
+            let inj = std::mem::take(&mut self.inj);
+            self.engine.advance_injecting(inj, self.drain_to, horizon);
+        }
+    }
+}
+
+struct Batch {
+    items: Vec<WorkItem>,
+    now: Us,
     horizon: Us,
 }
 
@@ -213,32 +522,94 @@ struct Pool {
     workers: Vec<Worker>,
 }
 
-/// Below this many busy engines an epoch is stepped inline: the fan-out
+/// Below this many busy engines a round is stepped inline: the fan-out
 /// overhead (one channel round-trip per worker) only pays for itself
 /// when several engines have real work between barriers.
 const FANOUT_MIN: usize = 4;
 
-/// Drive `engines` over `requests` to `horizon` under `driver`,
-/// advancing in bulk-synchronous epochs with up to `threads` stepping
-/// lanes. The stream is cloned once into a work queue up front so every
-/// injection *moves* a request instead of cloning it.
+/// Run a round of work items: inline on the driver thread when small,
+/// round-robined over the pool's lanes when fat. Engines return to
+/// their slots either way. `items` is caller-owned scratch, drained
+/// here so its capacity is reused across rounds — un-quantized streams
+/// barrier at every arrival, so this would otherwise allocate per
+/// request.
+fn run_items(
+    pool: &mut Option<&mut Pool>,
+    engines: &mut [Option<ExecEngine>],
+    items: &mut Vec<WorkItem>,
+    now: Us,
+    horizon: Us,
+) {
+    if items.is_empty() {
+        return;
+    }
+    match pool {
+        Some(pool) if items.len() >= FANOUT_MIN => {
+            let lanes = pool.workers.len() + 1;
+            let mut batches: Vec<Vec<WorkItem>> = (0..lanes).map(|_| Vec::new()).collect();
+            for (i, item) in items.drain(..).enumerate() {
+                batches[i % lanes].push(item);
+            }
+            let mut mine = batches.swap_remove(0);
+            let mut sent: Vec<usize> = Vec::new();
+            for (wi, items) in batches.into_iter().enumerate() {
+                if items.is_empty() {
+                    continue;
+                }
+                pool.workers[wi]
+                    .cmd
+                    .send(Batch { items, now, horizon })
+                    .expect("exec worker hung up");
+                sent.push(wi);
+            }
+            for item in mine.iter_mut() {
+                item.run(now, horizon);
+            }
+            for item in mine {
+                engines[item.g] = Some(item.engine);
+            }
+            for wi in sent {
+                let b = pool.workers[wi].ret.recv().expect("exec worker died");
+                for item in b.items {
+                    engines[item.g] = Some(item.engine);
+                }
+            }
+        }
+        _ => {
+            for mut item in items.drain(..) {
+                item.run(now, horizon);
+                engines[item.g] = Some(item.engine);
+            }
+        }
+    }
+}
+
+/// Drive `engines` over `requests` to `horizon` under `driver`. The
+/// stream is owned: every injection *moves* a request — no full-stream
+/// clone anywhere on the path. Returns the run's [`ExecStats`].
 pub(crate) fn run_epochs<D: EpochDriver>(
     engines: &mut [Option<ExecEngine>],
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon: Us,
-    threads: Parallelism,
+    opts: ExecOpts,
     driver: &mut D,
-) {
+) -> ExecStats {
     // More lanes than engines can never help: each engine is stepped by
-    // exactly one lane per epoch. Capping here also bounds the spawn
+    // exactly one lane per round. Capping here also bounds the spawn
     // count for arbitrary user-supplied `--threads` values. Clusters
     // too small to ever clear the fan-out threshold skip the pool
     // entirely — no spawns, no channels, pure serial path.
-    let lanes = threads.resolve().min(engines.len());
-    let mut queue: VecDeque<Request> = requests.to_vec().into();
+    let lanes = opts.threads.resolve().min(engines.len());
+    let mut queue: VecDeque<Request> = requests.into();
+    let mut stats = ExecStats::new(opts.mode);
     if lanes <= 1 || engines.len() < FANOUT_MIN {
-        epoch_loop(engines, &mut queue, horizon, driver, None);
-        return;
+        match opts.mode {
+            ExecMode::Epoch => epoch_loop(engines, &mut queue, horizon, driver, None, &mut stats),
+            ExecMode::Sparse => {
+                sparse_loop(engines, &mut queue, horizon, driver, None, &mut stats)
+            }
+        }
+        return stats;
     }
     std::thread::scope(|s| {
         // `lanes - 1` workers; the driver thread is the remaining lane.
@@ -248,8 +619,8 @@ pub(crate) fn run_epochs<D: EpochDriver>(
             let (ret_tx, ret_rx) = channel::<Batch>();
             s.spawn(move || {
                 while let Ok(mut b) = cmd_rx.recv() {
-                    for (_, e, step_now) in b.items.iter_mut() {
-                        e.advance(*step_now, b.now, b.drain_to, b.horizon);
+                    for item in b.items.iter_mut() {
+                        item.run(b.now, b.horizon);
                     }
                     if ret_tx.send(b).is_err() {
                         break;
@@ -259,23 +630,56 @@ pub(crate) fn run_epochs<D: EpochDriver>(
             workers.push(Worker { cmd: cmd_tx, ret: ret_rx });
         }
         let mut pool = Pool { workers };
-        epoch_loop(engines, &mut queue, horizon, driver, Some(&mut pool));
+        match opts.mode {
+            ExecMode::Epoch => {
+                epoch_loop(engines, &mut queue, horizon, driver, Some(&mut pool), &mut stats)
+            }
+            ExecMode::Sparse => {
+                sparse_loop(engines, &mut queue, horizon, driver, Some(&mut pool), &mut stats)
+            }
+        }
         // Dropping the pool's senders ends the workers; the scope joins.
     });
+    stats
 }
 
+/// Tail drain shared by both loops: no barriers remain, but engines may
+/// still hold events inside the horizon (the serial loops processed
+/// exactly those).
+fn drain_tail(
+    engines: &mut [Option<ExecEngine>],
+    horizon: Us,
+    pool: &mut Option<&mut Pool>,
+) {
+    let mut items = Vec::new();
+    for (g, slot) in engines.iter_mut().enumerate() {
+        let Some(e) = slot.as_ref() else { continue };
+        if e.sim.next_event_time().is_some_and(|w| w < horizon) {
+            items.push(WorkItem {
+                g,
+                engine: slot.take().expect("checked some"),
+                step_now: false,
+                drain_to: horizon,
+                inj: Vec::new(),
+            });
+        }
+    }
+    run_items(pool, engines, &mut items, 0, horizon);
+}
+
+/// The PR 4 bulk-synchronous loop: every engine barriers at every
+/// global arrival / driver event.
 fn epoch_loop<D: EpochDriver>(
     engines: &mut [Option<ExecEngine>],
     queue: &mut VecDeque<Request>,
     horizon: Us,
     driver: &mut D,
     mut pool: Option<&mut Pool>,
+    stats: &mut ExecStats,
 ) {
-    let mut touched = vec![false; engines.len()];
-    // Scratch for advance_phase, reused across epochs (capacity is
-    // bounded by the engine count; un-quantized streams barrier at
-    // every arrival, so this would otherwise allocate per request).
-    let mut work: Vec<(usize, bool)> = Vec::with_capacity(engines.len());
+    let mut touched = Touched::new(engines.len());
+    // Reused round scratch (capacity bounded by the engine count).
+    let mut items: Vec<WorkItem> = Vec::with_capacity(engines.len());
     loop {
         let t_arr = queue.front().map(|r| r.arrival);
         let t_drv = driver.next_event();
@@ -283,13 +687,14 @@ fn epoch_loop<D: EpochDriver>(
         if t >= horizon {
             break;
         }
-        touched.fill(false);
+        touched.clear();
         driver.pre_arrivals(t, engines, &mut touched);
         while queue.front().is_some_and(|r| r.arrival <= t) {
             let r = queue.pop_front().expect("checked front");
             driver.route(t, r, engines, &mut touched);
         }
         driver.post_arrivals(t, engines, &mut touched);
+        stats.epochs += 1;
         // The next barrier is known now — arrivals and driver events
         // only change during serial phases — so engines can run ahead
         // to it without any cross-engine coordination.
@@ -299,94 +704,273 @@ fn epoch_loop<D: EpochDriver>(
             .min()
             .unwrap_or(horizon)
             .min(horizon);
-        advance_phase(engines, &touched, &mut work, t, drain_to, horizon, pool.as_deref_mut());
-    }
-    // Tail drain: no barriers remain, but engines may still hold events
-    // inside the horizon (the serial loops processed exactly those).
-    touched.fill(false);
-    advance_phase(engines, &touched, &mut work, 0, horizon, horizon, pool.as_deref_mut());
-}
-
-/// Step every engine with work in `[now, drain_to)`, fanning out to the
-/// pool when enough of them are busy. `work` is caller-owned scratch.
-#[allow(clippy::too_many_arguments)]
-fn advance_phase(
-    engines: &mut [Option<ExecEngine>],
-    touched: &[bool],
-    work: &mut Vec<(usize, bool)>,
-    now: Us,
-    drain_to: Us,
-    horizon: Us,
-    pool: Option<&mut Pool>,
-) {
-    work.clear();
-    for (g, slot) in engines.iter().enumerate() {
-        let Some(e) = slot.as_ref() else { continue };
-        let w = e.sim.next_event_time();
-        let step_now = touched[g] || w.is_some_and(|w| w <= now);
-        if step_now || w.is_some_and(|w| w < drain_to) {
-            work.push((g, step_now));
-        }
-    }
-    match pool {
-        Some(pool) if work.len() >= FANOUT_MIN => {
-            fan_out(pool, engines, work, now, drain_to, horizon);
-        }
-        _ => {
-            for &(g, step_now) in work.iter() {
-                engines[g]
-                    .as_mut()
-                    .expect("busy engine vanished")
-                    .advance(step_now, now, drain_to, horizon);
+        stats.note_lookahead(drain_to.saturating_sub(t));
+        for (g, slot) in engines.iter_mut().enumerate() {
+            let Some(e) = slot.as_ref() else { continue };
+            let w = e.sim.next_event_time();
+            let step_now = touched.is(g) || w.is_some_and(|w| w <= t);
+            if step_now || w.is_some_and(|w| w < drain_to) {
+                items.push(WorkItem {
+                    g,
+                    engine: slot.take().expect("checked some"),
+                    step_now,
+                    drain_to,
+                    inj: Vec::new(),
+                });
             }
         }
+        run_items(&mut pool, engines, &mut items, t, horizon);
+    }
+    drain_tail(engines, horizon, &mut pool);
+}
+
+/// An engine's next relevant barrier: the earliest arrival of a model
+/// it hosts, the next driver event (conservative — any driver event may
+/// touch any engine), or the horizon.
+fn safe_until(hosted: &[usize], arr: &[VecDeque<Us>], t_drv: Option<Us>, horizon: Us) -> Us {
+    let mut f = t_drv.unwrap_or(horizon).min(horizon);
+    for &m in hosted {
+        if let Some(&a) = arr[m].front() {
+            f = f.min(a);
+        }
+    }
+    f
+}
+
+/// Invert the driver's model → candidate-engine index into engine →
+/// hosted models. Only called at topology-change points (start, driver
+/// events).
+fn rebuild_hosted<D: EpochDriver + ?Sized>(
+    hosted: &mut [Vec<usize>],
+    driver: &D,
+    n_models: usize,
+) {
+    for h in hosted.iter_mut() {
+        h.clear();
+    }
+    for m in 0..n_models {
+        for &g in driver.candidates_of(m) {
+            hosted[g].push(m);
+        }
     }
 }
 
-fn fan_out(
-    pool: &mut Pool,
+/// Sparse-barrier loop: candidate-set sync at arrivals, global sync at
+/// driver events, frontier-heap work selection, and barrier elision for
+/// backlog-free routing. See the module docs for the determinism
+/// argument.
+fn sparse_loop<D: EpochDriver>(
     engines: &mut [Option<ExecEngine>],
-    work: &[(usize, bool)],
-    now: Us,
-    drain_to: Us,
+    queue: &mut VecDeque<Request>,
     horizon: Us,
+    driver: &mut D,
+    mut pool: Option<&mut Pool>,
+    stats: &mut ExecStats,
 ) {
-    let lanes = pool.workers.len() + 1;
-    let mut batches: Vec<Vec<(usize, ExecEngine, bool)>> =
-        (0..lanes).map(|_| Vec::new()).collect();
-    for (i, &(g, step_now)) in work.iter().enumerate() {
-        let e = engines[g].take().expect("busy engine vanished");
-        batches[i % lanes].push((g, e, step_now));
+    let n_g = engines.len();
+    let n_models = driver.n_models();
+    // Degenerate candidate index: a driver that declares *every* engine
+    // a candidate of every model (the lifecycle memory manager, whose
+    // eviction cascades can reach any engine; legacy all-models-on-all-
+    // GPUs layouts under JSQ) makes every arrival a global barrier —
+    // sparse bookkeeping would only add frontier/heap overhead on top
+    // of epoch behavior. Run the epoch loop directly; it is the same
+    // call sequence (byte-identity is mode-independent anyway).
+    // Backlog-free routing still benefits from elision, so it stays on
+    // the sparse path.
+    if !driver.elides_barriers()
+        && n_g > 0
+        && (0..n_models).all(|m| driver.candidates_of(m).len() == n_g)
+    {
+        return epoch_loop(engines, queue, horizon, driver, pool, stats);
     }
-    let mut mine = batches.swap_remove(0);
-    let mut sent: Vec<usize> = Vec::new();
-    for (wi, items) in batches.into_iter().enumerate() {
-        if items.is_empty() {
+    // Per-model pending arrival times, popped in lockstep with `queue`:
+    // what frontiers are computed from. Times only ever pop, so a
+    // frontier computed earlier can never exceed a model's next arrival
+    // — the invariant that makes run-ahead safe.
+    let mut arr: Vec<VecDeque<Us>> = vec![VecDeque::new(); n_models];
+    for r in queue.iter() {
+        arr[r.model].push_back(r.arrival);
+    }
+    let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); n_g];
+    rebuild_hosted(&mut hosted, driver, n_models);
+    // `frontier[g]` is authoritative; the heap holds (frontier, g)
+    // entries with lazy deletion (an entry is stale when it no longer
+    // matches `frontier[g]`). Frontiers are monotone per engine, so
+    // stale entries always pop before the live one.
+    let mut frontier: Vec<Us> = vec![0; n_g];
+    let mut heap: BinaryHeap<Reverse<(Us, usize)>> = BinaryHeap::with_capacity(n_g * 2);
+    {
+        let t_drv = driver.next_event();
+        for g in 0..n_g {
+            frontier[g] = safe_until(&hosted[g], &arr, t_drv, horizon);
+            heap.push(Reverse((frontier[g], g)));
+        }
+    }
+    let mut touched = Touched::new(n_g);
+    let mut sync: Vec<usize> = Vec::with_capacity(n_g);
+    let mut inj: Vec<Vec<(Us, Request)>> = vec![Vec::new(); n_g];
+    // Reused round scratch (capacity bounded by the engine count).
+    let mut items: Vec<WorkItem> = Vec::with_capacity(n_g);
+
+    loop {
+        let t_arr = queue.front().map(|r| r.arrival);
+        let t_drv = driver.next_event();
+        let Some(t) = [t_arr, t_drv].into_iter().flatten().min() else { break };
+        if t >= horizon {
+            break;
+        }
+        let drv_due = t_drv == Some(t);
+
+        if !drv_due && driver.elides_barriers() {
+            // ---- elided span [t, span_end): no driver event inside,
+            // routing reads no engine state, so every arrival becomes a
+            // timestamped injection and the whole span is one round.
+            let span_end = t_drv.unwrap_or(horizon).min(horizon);
+            let mut last = None;
+            while queue.front().is_some_and(|r| r.arrival < span_end) {
+                let r = queue.pop_front().expect("checked front");
+                arr[r.model].pop_front();
+                if last != Some(r.arrival) {
+                    stats.barriers_elided += 1;
+                    last = Some(r.arrival);
+                }
+                stats.arrivals_batched += 1;
+                if let Some((g, local)) = driver.route_free(r.arrival, &r) {
+                    let mut q = r;
+                    q.model = local;
+                    inj[g].push((q.arrival, q));
+                }
+            }
+            stats.epochs += 1;
+            stats.note_lookahead(span_end - t);
+            for (g, slot) in engines.iter_mut().enumerate() {
+                let Some(e) = slot.as_ref() else { continue };
+                if !inj[g].is_empty() || e.sim.next_event_time().is_some_and(|w| w < span_end)
+                {
+                    items.push(WorkItem {
+                        g,
+                        engine: slot.take().expect("checked some"),
+                        step_now: false,
+                        drain_to: span_end,
+                        inj: std::mem::take(&mut inj[g]),
+                    });
+                }
+            }
+            debug_assert!(
+                inj.iter().all(|v| v.is_empty()),
+                "elided injections routed to an engine-less slot"
+            );
+            run_items(&mut pool, engines, &mut items, t, horizon);
+            // Every engine advanced to span_end: restart the frontier
+            // bookkeeping from a clean heap.
+            heap.clear();
+            let t_next = driver.next_event();
+            for g in 0..n_g {
+                frontier[g] = safe_until(&hosted[g], &arr, t_next, horizon);
+                heap.push(Reverse((frontier[g], g)));
+            }
             continue;
         }
-        pool.workers[wi]
-            .cmd
-            .send(Batch { items, now, drain_to, horizon })
-            .expect("exec worker hung up");
-        sent.push(wi);
-    }
-    for (_, e, step_now) in mine.iter_mut() {
-        e.advance(*step_now, now, drain_to, horizon);
-    }
-    for (g, e, _) in mine {
-        engines[g] = Some(e);
-    }
-    for wi in sent {
-        let b = pool.workers[wi].ret.recv().expect("exec worker died");
-        for (g, e, _) in b.items {
-            engines[g] = Some(e);
+
+        // ---- regular sparse barrier at t ----
+        // Engines whose frontier expired must reach the barrier: the
+        // candidates of every model arriving at t (by the frontier
+        // invariant), plus — at driver events — everyone.
+        sync.clear();
+        if drv_due {
+            heap.clear();
+            sync.extend((0..n_g).filter(|&g| engines[g].is_some()));
+        } else {
+            while let Some(&Reverse((f, g))) = heap.peek() {
+                if f > t {
+                    break;
+                }
+                heap.pop();
+                if frontier[g] == f {
+                    sync.push(g);
+                }
+            }
         }
+        // Catch-up: replay events strictly before t, so serial-phase
+        // reads see exactly the pre-barrier state (same as epoch mode).
+        for &g in &sync {
+            let Some(e) = engines[g].as_ref() else { continue };
+            debug_assert!(e.sim.now() <= t, "engine {g} ran ahead of barrier {t}");
+            if e.sim.next_event_time().is_some_and(|w| w < t) {
+                items.push(WorkItem {
+                    g,
+                    engine: engines[g].take().expect("checked some"),
+                    step_now: false,
+                    drain_to: t,
+                    inj: Vec::new(),
+                });
+            }
+        }
+        run_items(&mut pool, engines, &mut items, t, horizon);
+
+        touched.clear();
+        driver.pre_arrivals(t, engines, &mut touched);
+        while queue.front().is_some_and(|r| r.arrival <= t) {
+            let r = queue.pop_front().expect("checked front");
+            arr[r.model].pop_front();
+            debug_assert!(
+                driver.candidates(&r).iter().all(|&g| frontier[g] <= t),
+                "candidate engine not synchronized at its model's arrival"
+            );
+            driver.route(t, r, engines, &mut touched);
+        }
+        driver.post_arrivals(t, engines, &mut touched);
+        stats.epochs += 1;
+        if drv_due {
+            // Topology may only change at driver-event barriers.
+            rebuild_hosted(&mut hosted, driver, n_models);
+        }
+
+        // Advance: synced + touched engines get a fresh frontier and
+        // run ahead to it. At driver events re-collect from the slots —
+        // the serial phase may have created engines (pending replica
+        // activations). At arrival barriers touched ⊆ sync: a driver
+        // can only have mutated candidates of the arriving models.
+        let t_next = driver.next_event();
+        debug_assert!(t_next.map_or(true, |d| d > t), "driver event not consumed at {t}");
+        if drv_due {
+            sync.clear();
+            sync.extend((0..n_g).filter(|&g| engines[g].is_some()));
+        } else {
+            debug_assert!(
+                touched.list().iter().all(|&g| sync.contains(&g)),
+                "driver touched an engine outside the arrival's candidate set"
+            );
+        }
+        for &g in &sync {
+            let Some(e) = engines[g].as_ref() else { continue };
+            frontier[g] = safe_until(&hosted[g], &arr, t_next, horizon);
+            debug_assert!(frontier[g] >= t);
+            stats.note_lookahead(frontier[g] - t);
+            heap.push(Reverse((frontier[g], g)));
+            let step_now = touched.is(g);
+            if step_now || e.sim.next_event_time().is_some_and(|w| w < frontier[g]) {
+                items.push(WorkItem {
+                    g,
+                    engine: engines[g].take().expect("checked some"),
+                    step_now,
+                    drain_to: frontier[g],
+                    inj: Vec::new(),
+                });
+            }
+        }
+        run_items(&mut pool, engines, &mut items, t, horizon);
     }
+    drain_tail(engines, horizon, &mut pool);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::GpuSched;
+    use crate::profile::by_name;
+    use crate::sim::{entries_at_optimum, SimConfig};
 
     #[test]
     fn parallelism_parses_and_resolves() {
@@ -404,9 +988,204 @@ mod tests {
     }
 
     #[test]
+    fn exec_mode_parses_and_defaults_sparse() {
+        assert_eq!(ExecMode::parse("epoch"), Ok(ExecMode::Epoch));
+        assert_eq!(ExecMode::parse("sparse"), Ok(ExecMode::Sparse));
+        assert!(ExecMode::parse("fast").is_err());
+        assert_eq!(ExecMode::default(), ExecMode::Sparse);
+        assert_eq!(ExecMode::Epoch.label(), "epoch");
+        assert_eq!(ExecOpts::default().mode, ExecMode::Sparse);
+        assert_eq!(ExecOpts::default().threads, Parallelism::Auto);
+        assert_eq!(ExecOpts::with_threads(Parallelism::Threads(2)).mode, ExecMode::Sparse);
+    }
+
+    #[test]
+    fn exec_stats_ratio_and_json() {
+        let mut s = ExecStats::new(ExecMode::Sparse);
+        assert_eq!(s.elision_ratio(), 0.0);
+        s.epochs = 25;
+        s.barriers_elided = 75;
+        s.arrivals_batched = 90;
+        s.note_lookahead(1_500);
+        s.note_lookahead(300);
+        assert!((s.elision_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(s.max_lookahead_us, 1_500);
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"mode\":\"sparse\""), "{j}");
+        assert!(j.contains("\"barriers_elided\":75"), "{j}");
+        assert!(s.render().contains("75%"), "{}", s.render());
+    }
+
+    #[test]
+    fn touched_marks_dedups_and_clears_cheaply() {
+        let mut t = Touched::new(4);
+        t.mark(2);
+        t.mark(2);
+        t.mark(0);
+        assert!(t.is(2) && t.is(0) && !t.is(1));
+        assert_eq!(t.list(), &[2, 0]);
+        t.clear();
+        assert!(!t.is(2) && !t.is(0));
+        assert!(t.list().is_empty());
+    }
+
+    #[test]
     fn exec_engine_is_send() {
         fn assert_send<T: Send>() {}
         assert_send::<ExecEngine>();
         assert_send::<Batch>();
+    }
+
+    // ---- candidate-index / frontier edge cases on a minimal driver ----
+
+    /// Two-engine driver: model 0 → engine 0, model 1 → engine 1,
+    /// model 2 → no replicas (always rejected). One optional surgery
+    /// event mid-stream tombstones engine 1's model and re-routes its
+    /// queue to engine 0 — a driver event that changes topology.
+    struct MiniDriver {
+        cand: Vec<Vec<usize>>,
+        rejected: Vec<u64>,
+        surgery_at: Option<Us>,
+    }
+
+    impl EpochDriver for MiniDriver {
+        fn n_models(&self) -> usize {
+            self.cand.len()
+        }
+
+        fn next_event(&self) -> Option<Us> {
+            self.surgery_at
+        }
+
+        fn candidates_of(&self, model: usize) -> &[usize] {
+            &self.cand[model]
+        }
+
+        fn route(
+            &mut self,
+            _t: Us,
+            mut req: Request,
+            engines: &mut [Option<ExecEngine>],
+            touched: &mut Touched,
+        ) {
+            let m = req.model;
+            let Some(&g) = self.cand[m].first() else {
+                self.rejected[m] += 1;
+                return;
+            };
+            req.model = 0; // every engine hosts exactly one local model
+            engines[g].as_mut().expect("candidate engine").sim.inject(req);
+            touched.mark(g);
+        }
+
+        fn post_arrivals(
+            &mut self,
+            t: Us,
+            engines: &mut [Option<ExecEngine>],
+            touched: &mut Touched,
+        ) {
+            if self.surgery_at != Some(t) {
+                return;
+            }
+            self.surgery_at = None;
+            // Tombstone engine 1's model; re-route its queue to engine 0.
+            let drained = engines[1].as_mut().expect("engine 1").sim.deactivate_model(0);
+            touched.mark(1);
+            self.cand[1] = vec![0];
+            for mut r in drained {
+                r.model = 0;
+                engines[0].as_mut().expect("engine 0").sim.inject(r);
+                touched.mark(0);
+            }
+        }
+    }
+
+    fn mini_cluster() -> Vec<Option<ExecEngine>> {
+        let profiles = vec![by_name("alexnet").unwrap()];
+        (0..2)
+            .map(|_| {
+                let entries = entries_at_optimum(&profiles);
+                let policy = GpuSched::Dstack.build(&entries);
+                let sim = Sim::new(
+                    SimConfig { horizon_ms: 100.0, ..Default::default() },
+                    entries,
+                );
+                Some(ExecEngine { sim, policy })
+            })
+            .collect()
+    }
+
+    fn mini_stream() -> Vec<Request> {
+        // Interleaved arrivals of all three models, several per instant.
+        let mut reqs = Vec::new();
+        let mut id = 0;
+        for k in 0..40u64 {
+            let t = 317 * k;
+            for m in 0..3usize {
+                if (k + m as u64) % 2 == 0 {
+                    reqs.push(Request { id, model: m, arrival: t, deadline: t + 50_000 });
+                    id += 1;
+                }
+            }
+        }
+        reqs
+    }
+
+    fn mini_run(mode: ExecMode, surgery: bool) -> (Vec<String>, Vec<u64>) {
+        let mut engines = mini_cluster();
+        let mut driver = MiniDriver {
+            cand: vec![vec![0], vec![1], Vec::new()],
+            rejected: vec![0; 3],
+            surgery_at: surgery.then_some(6_000),
+        };
+        let horizon = 100_000;
+        run_epochs(
+            &mut engines,
+            mini_stream(),
+            horizon,
+            ExecOpts { threads: Parallelism::Threads(1), mode },
+            &mut driver,
+        );
+        let reports: Vec<String> = engines
+            .iter_mut()
+            .map(|e| {
+                let r = e.as_mut().unwrap().finalize(horizon);
+                format!("{:?} {:?}", r.per_model[0].served, r.per_model[0].latencies_ms)
+            })
+            .collect();
+        (reports, driver.rejected)
+    }
+
+    #[test]
+    fn zero_replica_models_reject_identically_across_modes() {
+        let (re, rj_e) = mini_run(ExecMode::Epoch, false);
+        let (rs, rj_s) = mini_run(ExecMode::Sparse, false);
+        assert_eq!(re, rs, "per-engine outcomes diverged");
+        assert_eq!(rj_e, rj_s);
+        assert!(rj_e[2] > 0, "model without replicas must reject");
+        assert_eq!(rj_e[0], 0);
+    }
+
+    #[test]
+    fn mid_stream_surgery_is_identical_across_modes() {
+        let (re, rj_e) = mini_run(ExecMode::Epoch, true);
+        let (rs, rj_s) = mini_run(ExecMode::Sparse, true);
+        assert_eq!(re, rs, "surgery outcomes diverged between epoch and sparse");
+        assert_eq!(rj_e, rj_s);
+    }
+
+    #[test]
+    fn safe_until_takes_earliest_relevant_arrival() {
+        let mut arr = vec![VecDeque::new(), VecDeque::new(), VecDeque::new()];
+        arr[0].push_back(900);
+        arr[2].push_back(400);
+        // Hosts models 0 and 1 (1 has no pending arrivals).
+        assert_eq!(safe_until(&[0, 1], &arr, None, 10_000), 900);
+        // A driver event before the arrival wins.
+        assert_eq!(safe_until(&[0, 1], &arr, Some(600), 10_000), 600);
+        // Hosting nothing pending ⇒ horizon (or the driver event).
+        assert_eq!(safe_until(&[1], &arr, None, 10_000), 10_000);
+        // Model 2 is not hosted here, so its earlier arrival is ignored.
+        assert_eq!(safe_until(&[0], &arr, None, 10_000), 900);
     }
 }

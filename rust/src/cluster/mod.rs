@@ -39,7 +39,7 @@ pub mod exec;
 pub mod placement;
 pub mod routing;
 
-pub use exec::Parallelism;
+pub use exec::{ExecMode, ExecOpts, ExecStats, Parallelism};
 pub use placement::{
     op_point, place, plan_residency, Placement, PlacementPolicy, Replica, ResidencyPlan,
 };
@@ -53,7 +53,7 @@ use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::workload::Request;
-use exec::{run_epochs, EpochDriver, ExecEngine};
+use exec::{run_epochs, EpochDriver, ExecEngine, Touched};
 use routing::BacklogCache;
 
 /// Which scheduler runs on each GPU of the cluster.
@@ -177,6 +177,11 @@ pub struct ClusterReport {
     /// ([`crate::lifecycle::run_lifecycle`]); serialized only when
     /// present, so static and adaptive golden shapes are unchanged.
     pub lifecycle: Option<crate::lifecycle::LifecycleStats>,
+    /// Execution-core telemetry (barriers run/elided, lookahead).
+    /// **Never serialized** by [`Self::to_json`]: `exec_mode` and
+    /// thread count must not change report bytes. Surfaced by
+    /// `dstack … --verbose` and by `benches/bench_parallel.rs`.
+    pub exec: Option<ExecStats>,
 }
 
 impl ClusterReport {
@@ -284,24 +289,52 @@ pub fn entries_for_gpu(profiles: &[ModelProfile], gpu: &GpuSpec) -> Vec<ModelEnt
 
 /// The static driver's barrier work: admission, routing, injection.
 /// Placement never changes mid-run, so there are no driver events and
-/// no pre/post barrier phases — every barrier is an arrival instant.
+/// no pre/post barrier phases — every barrier is an arrival instant,
+/// the candidate index is fixed (`cand[m]` = GPUs hosting a replica of
+/// `m`), and RR-routed runs elide stepping barriers entirely.
 struct PlacementDriver<'a> {
     pl: &'a Placement,
+    /// model → hosting GPUs (the sparse core's candidate index).
+    cand: Vec<Vec<usize>>,
     router: Router,
     cache: BacklogCache,
     rejected: Vec<u64>,
 }
 
 impl EpochDriver for PlacementDriver<'_> {
+    fn n_models(&self) -> usize {
+        self.rejected.len()
+    }
+
     fn next_event(&self) -> Option<Us> {
         None
+    }
+
+    fn candidates_of(&self, model: usize) -> &[usize] {
+        &self.cand[model]
+    }
+
+    fn elides_barriers(&self) -> bool {
+        !self.router.policy().reads_backlogs()
+    }
+
+    fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
+        if !self.pl.admitted[req.model] {
+            self.rejected[req.model] += 1;
+            return None;
+        }
+        let reps = &self.pl.replicas[req.model];
+        // Backlog-free by contract: the closure is never consulted.
+        let pick = self.router.route(req.model, reps, |_| 0);
+        let rep = &reps[pick];
+        Some((rep.gpu, rep.local))
     }
 
     fn pre_arrivals(
         &mut self,
         _t: Us,
         _engines: &mut [Option<ExecEngine>],
-        _touched: &mut [bool],
+        _touched: &mut Touched,
     ) {
         self.cache.reset();
     }
@@ -311,7 +344,7 @@ impl EpochDriver for PlacementDriver<'_> {
         _t: Us,
         mut req: Request,
         engines: &mut [Option<ExecEngine>],
-        touched: &mut [bool],
+        touched: &mut Touched,
     ) {
         if !self.pl.admitted[req.model] {
             self.rejected[req.model] += 1;
@@ -324,21 +357,23 @@ impl EpochDriver for PlacementDriver<'_> {
         req.model = rep.local;
         engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
         cache.note_inject(rep.gpu, rep.local);
-        touched[rep.gpu] = true;
+        touched.mark(rep.gpu);
     }
 }
 
 /// Drive one engine per GPU over `requests` under `placement`, routing
 /// each request at its arrival instant, with the default
-/// ([`Parallelism::Auto`]) stepping budget. Deterministic: a fixed
-/// (placement, routing, seed, stream) tuple always yields the same
-/// [`ClusterReport`] — for *any* thread count (see [`exec`]).
+/// ([`ExecOpts::default`]) execution options. The stream is owned:
+/// injections move requests, no full-stream clone is made.
+/// Deterministic: a fixed (placement, routing, seed, stream) tuple
+/// always yields the same [`ClusterReport`] — for *any* thread count
+/// and either `exec_mode` (see [`exec`]).
 #[allow(clippy::too_many_arguments)]
 pub fn run_placement(
     profiles: &[ModelProfile],
     gpus: &[GpuSpec],
     pl: &Placement,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     routing: RoutingPolicy,
     sched: GpuSched,
@@ -355,23 +390,24 @@ pub fn run_placement(
         sched,
         seed,
         label,
-        Parallelism::default(),
+        ExecOpts::default(),
     )
 }
 
-/// [`run_placement`] with an explicit engine-stepping thread budget.
+/// [`run_placement`] with explicit execution options (thread budget +
+/// barrier mode).
 #[allow(clippy::too_many_arguments)]
 pub fn run_placement_with(
     profiles: &[ModelProfile],
     gpus: &[GpuSpec],
     pl: &Placement,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     routing: RoutingPolicy,
     sched: GpuSched,
     seed: u64,
     label: &str,
-    threads: Parallelism,
+    opts: ExecOpts,
 ) -> ClusterReport {
     assert_eq!(pl.n_gpus(), gpus.len(), "placement built for a different cluster");
     let n_models = profiles.len();
@@ -401,13 +437,19 @@ pub fn run_placement_with(
         })
         .collect();
 
+    let cand: Vec<Vec<usize>> = pl
+        .replicas
+        .iter()
+        .map(|reps| reps.iter().map(|r| r.gpu).collect())
+        .collect();
     let mut driver = PlacementDriver {
         pl,
+        cand,
         router: Router::new(routing, n_models, seed),
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
     };
-    run_epochs(&mut engines, requests, horizon, threads, &mut driver);
+    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
     let rejected = driver.rejected;
 
     let reports: Vec<Option<RunReport>> = engines
@@ -483,6 +525,7 @@ pub fn run_placement_with(
         per_gpu,
         adaptive: None,
         lifecycle: None,
+        exec: Some(exec_stats),
     }
 }
 
@@ -496,7 +539,7 @@ pub fn serve_cluster(
     placement: PlacementPolicy,
     routing: RoutingPolicy,
     sched: GpuSched,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
 ) -> ClusterReport {
@@ -510,11 +553,11 @@ pub fn serve_cluster(
         requests,
         horizon_ms,
         seed,
-        Parallelism::default(),
+        ExecOpts::default(),
     )
 }
 
-/// [`serve_cluster`] with an explicit engine-stepping thread budget.
+/// [`serve_cluster`] with explicit execution options.
 #[allow(clippy::too_many_arguments)]
 pub fn serve_cluster_with(
     profiles: &[ModelProfile],
@@ -523,15 +566,15 @@ pub fn serve_cluster_with(
     placement: PlacementPolicy,
     routing: RoutingPolicy,
     sched: GpuSched,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
-    threads: Parallelism,
+    opts: ExecOpts,
 ) -> ClusterReport {
     let pl = place(profiles, offered_rps, gpus, placement);
     let label = format!("{}+{}+{}", placement.name(), routing.name(), sched.name());
     run_placement_with(
-        profiles, gpus, &pl, requests, horizon_ms, routing, sched, seed, &label, threads,
+        profiles, gpus, &pl, requests, horizon_ms, routing, sched, seed, &label, opts,
     )
 }
 
@@ -543,7 +586,7 @@ pub fn run_cluster(
     profiles: &[ModelProfile],
     gpu: &GpuSpec,
     n_gpus: usize,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     policy: ClusterPolicy,
 ) -> ClusterReport {
@@ -610,9 +653,11 @@ mod tests {
         // Fig. 12: D-STACK ≥ 1.6× temporal / exclusive on the 4×T4
         // cluster; temporal ≈ exclusive.
         let (profiles, _rates, reqs) = fig12_setup(4_000.0);
-        let excl = run_cluster(&profiles, &T4, 4, &reqs, 4_000.0, ClusterPolicy::Exclusive);
-        let temp = run_cluster(&profiles, &T4, 4, &reqs, 4_000.0, ClusterPolicy::TemporalAll);
-        let dstk = run_cluster(&profiles, &T4, 4, &reqs, 4_000.0, ClusterPolicy::DstackAll);
+        let excl =
+            run_cluster(&profiles, &T4, 4, reqs.clone(), 4_000.0, ClusterPolicy::Exclusive);
+        let temp =
+            run_cluster(&profiles, &T4, 4, reqs.clone(), 4_000.0, ClusterPolicy::TemporalAll);
+        let dstk = run_cluster(&profiles, &T4, 4, reqs, 4_000.0, ClusterPolicy::DstackAll);
         let (e, t, d) =
             (excl.total_throughput(), temp.total_throughput(), dstk.total_throughput());
         assert!(d > 1.1 * t, "dstack {d} vs temporal {t}");
@@ -638,7 +683,7 @@ mod tests {
         // GPUs of light models sit mostly idle while the heavy models'
         // GPUs drop requests.
         let (profiles, _rates, reqs) = fig12_setup(3_000.0);
-        let excl = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::Exclusive);
+        let excl = run_cluster(&profiles, &T4, 4, reqs, 3_000.0, ClusterPolicy::Exclusive);
         // GPU 0 hosts mobilenet (light, 150/s): mostly idle.
         assert!(
             excl.gpu_utilization[0] < 0.6,
@@ -655,7 +700,7 @@ mod tests {
     #[should_panic(expected = "exclusive placement")]
     fn exclusive_requires_enough_gpus() {
         let (profiles, _rates, reqs) = fig12_setup(500.0);
-        run_cluster(&profiles, &T4, 2, &reqs, 500.0, ClusterPolicy::Exclusive);
+        run_cluster(&profiles, &T4, 2, reqs, 500.0, ClusterPolicy::Exclusive);
     }
 
     #[test]
@@ -668,7 +713,7 @@ mod tests {
             PlacementPolicy::FirstFitDecreasing,
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
-            &reqs,
+            reqs.clone(),
             2_000.0,
             7,
         );
@@ -707,7 +752,7 @@ mod tests {
                 PlacementPolicy::FirstFitDecreasing,
                 routing,
                 GpuSched::Dstack,
-                &reqs,
+                reqs.clone(),
                 3_000.0,
                 3,
             )
@@ -740,7 +785,7 @@ mod tests {
             PlacementPolicy::FirstFitDecreasing,
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
-            &reqs,
+            reqs,
             1_500.0,
             1,
         );
@@ -768,7 +813,7 @@ mod tests {
                 PlacementPolicy::LoadBalance,
                 RoutingPolicy::PowerOfTwoChoices,
                 GpuSched::Dstack,
-                &reqs,
+                reqs.clone(),
                 1_000.0,
                 21,
             )
@@ -790,7 +835,7 @@ mod debug_cluster {
     fn debug_fig12() {
         let (profiles, reqs) = setup(6_000.0);
         for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
-            let r = run_cluster(&profiles, &crate::profile::T4, 4, &reqs, 6_000.0, pol);
+            let r = run_cluster(&profiles, &crate::profile::T4, 4, reqs.clone(), 6_000.0, pol);
             eprintln!("{:?}: total={:.0} per-model={:?} utils={:?} viol={:?}",
                 pol, r.total_throughput(),
                 r.throughput.iter().map(|t| t.round()).collect::<Vec<_>>(),

@@ -63,6 +63,15 @@ impl RoutingPolicy {
             RoutingPolicy::PowerOfTwoChoices,
         ]
     }
+
+    /// Does picking a replica read live engine backlogs? Round-robin
+    /// never does — its decisions are pure router state — which is what
+    /// lets the sparse execution core ([`crate::cluster::exec`]) elide
+    /// stepping barriers and batch whole arrival spans into one
+    /// injection round for RR-routed streams.
+    pub fn reads_backlogs(&self) -> bool {
+        !matches!(self, RoutingPolicy::RoundRobin)
+    }
 }
 
 /// Per-run router state (round-robin counters, P2C sampling stream).
@@ -206,6 +215,13 @@ mod tests {
         // Idle GPUs are never preferred.
         let idle = Replica { gpu: 1, local: 0, pct: 40, batch: 16, capacity_rps: 100.0 };
         assert_eq!(cache.backlog(&engines, &idle), usize::MAX);
+    }
+
+    #[test]
+    fn only_round_robin_is_backlog_free() {
+        assert!(!RoutingPolicy::RoundRobin.reads_backlogs());
+        assert!(RoutingPolicy::JoinShortestQueue.reads_backlogs());
+        assert!(RoutingPolicy::PowerOfTwoChoices.reads_backlogs());
     }
 
     #[test]

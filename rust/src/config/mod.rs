@@ -118,6 +118,10 @@ pub struct Scenario {
     /// integer ≥ 1; `1` = serial). Thread count never changes results —
     /// see [`crate::cluster::exec`].
     pub parallelism: crate::cluster::Parallelism,
+    /// Barrier discipline of the execution core (`"sparse"` default |
+    /// `"epoch"`). Mode never changes results, only wall-clock — see
+    /// [`crate::cluster::exec`]; the CLI `--exec-mode` flag overrides.
+    pub exec_mode: crate::cluster::ExecMode,
     /// Optional cluster block — see [`ClusterCfg`].
     pub cluster: Option<ClusterCfg>,
     /// Optional adaptive control-plane block (requires `cluster`) —
@@ -302,6 +306,15 @@ impl Scenario {
                 }
             },
         };
+        let exec_mode = match j.get("exec_mode") {
+            None => crate::cluster::ExecMode::default(),
+            Some(v) => match v.as_str() {
+                Some(s) => crate::cluster::ExecMode::parse(s)?,
+                None => {
+                    return Err("'exec_mode' must be \"epoch\" or \"sparse\"".into())
+                }
+            },
+        };
         Ok(Scenario {
             name: j.opt_str("name", "scenario").to_string(),
             gpu,
@@ -312,6 +325,7 @@ impl Scenario {
             models,
             poisson: j.opt_bool("poisson", true),
             parallelism,
+            exec_mode,
             cluster,
             adaptive,
             lifecycle,
@@ -360,6 +374,7 @@ impl Scenario {
             ("seed", Json::from(self.seed)),
             ("poisson", Json::from(self.poisson)),
             ("parallelism", Json::from(self.parallelism.label().as_str())),
+            ("exec_mode", Json::from(self.exec_mode.label())),
             ("models", Json::Arr(models)),
         ];
         if let Some(c) = &self.cluster {
@@ -467,6 +482,12 @@ impl Scenario {
         self.arrivals().iter().map(|a| a.rate_at(0.0)).collect()
     }
 
+    /// Execution-core options for the cluster path: the scenario's
+    /// thread budget + barrier mode in the form the drivers take.
+    pub fn exec_opts(&self) -> crate::cluster::ExecOpts {
+        crate::cluster::ExecOpts { threads: self.parallelism, mode: self.exec_mode }
+    }
+
     /// Per-GPU scheduler for the cluster path, derived from the
     /// scenario's policy (cluster engines run one scheduler per GPU).
     pub fn gpu_sched(&self) -> crate::cluster::GpuSched {
@@ -549,10 +570,10 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         cl.placement,
         cl.routing,
         sc.gpu_sched(),
-        &reqs,
+        reqs,
         sc.horizon_ms,
         sc.seed,
-        sc.parallelism,
+        sc.exec_opts(),
     )
 }
 
@@ -583,10 +604,10 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         cl.routing,
         sc.gpu_sched(),
         &adaptive,
-        &reqs,
+        reqs,
         sc.horizon_ms,
         sc.seed,
-        sc.parallelism,
+        sc.exec_opts(),
     )
 }
 
@@ -616,10 +637,10 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         cl.routing,
         sc.gpu_sched(),
         &lc.cfg,
-        &reqs,
+        reqs,
         sc.horizon_ms,
         sc.seed,
-        sc.parallelism,
+        sc.exec_opts(),
     )
 }
 
@@ -869,6 +890,33 @@ mod tests {
         sc.parallelism = Parallelism::Auto;
         let sc3 = Scenario::from_json(&sc.to_json().to_string_pretty()).unwrap();
         assert_eq!(sc3.parallelism, Parallelism::Auto);
+    }
+
+    #[test]
+    fn exec_mode_parses_validates_and_roundtrips() {
+        use crate::cluster::{ExecMode, Parallelism};
+        // Default is sparse.
+        let sc = Scenario::from_json(EXAMPLE).unwrap();
+        assert_eq!(sc.exec_mode, ExecMode::Sparse);
+        let with = |v: &str| {
+            Scenario::from_json(&format!(
+                r#"{{"exec_mode": {v}, "models": [{{"name": "alexnet", "rate": 1}}]}}"#
+            ))
+        };
+        assert_eq!(with("\"epoch\"").unwrap().exec_mode, ExecMode::Epoch);
+        assert_eq!(with("\"sparse\"").unwrap().exec_mode, ExecMode::Sparse);
+        for bad in ["\"fast\"", "1", "true"] {
+            assert!(with(bad).is_err(), "{bad}");
+        }
+        // Round-trips through to_json, and exec_opts carries both knobs.
+        let mut sc = Scenario::from_json(CLUSTER_EXAMPLE).unwrap();
+        sc.exec_mode = ExecMode::Epoch;
+        sc.parallelism = Parallelism::Threads(2);
+        let sc2 = Scenario::from_json(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sc2.exec_mode, ExecMode::Epoch);
+        let opts = sc2.exec_opts();
+        assert_eq!(opts.mode, ExecMode::Epoch);
+        assert_eq!(opts.threads, Parallelism::Threads(2));
     }
 
     #[test]

@@ -52,10 +52,10 @@
 //! adaptive-vs-static comparison is a first-class reportable figure
 //! (`figures::fig13`, `dstack adaptive`).
 
-use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine};
+use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine, Touched};
 use crate::cluster::routing::BacklogCache;
 use crate::cluster::{
-    place, ClusterReport, GpuModelShare, GpuReport, GpuSched, Parallelism, Placement,
+    place, ClusterReport, ExecOpts, GpuModelShare, GpuReport, GpuSched, Placement,
     PlacementPolicy, Replica, Router, RoutingPolicy,
 };
 use crate::gpu::{ms_to_us, Us};
@@ -426,6 +426,9 @@ struct AdaptiveDriver<'a> {
     /// Routable view handed to the router: rebuilt whenever `live`
     /// changes.
     routable: Vec<Vec<Replica>>,
+    /// model → GPUs with a routable replica (the sparse core's
+    /// candidate index), kept in lockstep with `routable`.
+    cand: Vec<Vec<usize>>,
     /// gpu → engine-local index → global model index.
     local_map: Vec<Vec<usize>>,
     knee_load: Vec<u32>,
@@ -444,6 +447,14 @@ struct AdaptiveDriver<'a> {
 }
 
 impl AdaptiveDriver<'_> {
+    /// Rebuild `routable[m]` and the candidate index after `live[m]`
+    /// changed (activation, rebalance surgery) — both only ever happen
+    /// at driver-event barriers, as the sparse core requires.
+    fn refresh_routable(&mut self, m: usize) {
+        self.routable[m] = routable_of(&self.live, m);
+        self.cand[m] = self.routable[m].iter().map(|r| r.gpu).collect();
+    }
+
     /// Route one request of `model` to a replica (JSQ/P2C probe the
     /// live engine backlogs through the per-barrier cache) and inject
     /// it, or count it rejected when the model has no routable replica.
@@ -454,7 +465,7 @@ impl AdaptiveDriver<'_> {
         model: usize,
         req: Request,
         engines: &mut [Option<ExecEngine>],
-        touched: &mut [bool],
+        touched: &mut Touched,
     ) {
         let reps = &self.routable[model];
         if reps.is_empty() {
@@ -468,11 +479,40 @@ impl AdaptiveDriver<'_> {
         q.model = rep.local;
         engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(q);
         cache.note_inject(rep.gpu, rep.local);
-        touched[rep.gpu] = true;
+        touched.mark(rep.gpu);
     }
 }
 
 impl EpochDriver for AdaptiveDriver<'_> {
+    fn n_models(&self) -> usize {
+        self.routable.len()
+    }
+
+    fn candidates_of(&self, model: usize) -> &[usize] {
+        &self.cand[model]
+    }
+
+    fn elides_barriers(&self) -> bool {
+        // RR decisions are pure router state; arrivals between control
+        // ticks then batch into injection rounds. Demand counting
+        // (`window_counts`) happens in `route_free`, identically.
+        !self.router.policy().reads_backlogs()
+    }
+
+    fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
+        let model = req.model;
+        self.window_counts[model] += 1;
+        let reps = &self.routable[model];
+        if reps.is_empty() {
+            self.rejected[model] += 1;
+            return None;
+        }
+        // Backlog-free by contract: the closure is never consulted.
+        let pick = self.router.route(model, reps, |_| 0);
+        let rep = &reps[pick];
+        Some((rep.gpu, rep.local))
+    }
+
     fn next_event(&self) -> Option<Us> {
         let t_act = self.pending.iter().map(|&(at, _, _)| at).min();
         let t_tick = if self.next_tick < self.horizon { Some(self.next_tick) } else { None };
@@ -480,7 +520,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
     }
 
     /// Mature pending replica activations due at t.
-    fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+    fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
         self.cache.reset();
         if !self.pending.iter().any(|&(at, _, _)| at <= t) {
             return;
@@ -501,12 +541,12 @@ impl EpochDriver for AdaptiveDriver<'_> {
                 m,
                 &mut lr,
             );
-            touched[lr.gpu] = true;
+            touched.mark(lr.gpu);
             self.live[m][idx] = lr;
             refreshed.push(m);
         }
         for m in refreshed {
-            self.routable[m] = routable_of(&self.live, m);
+            self.refresh_routable(m);
         }
     }
 
@@ -517,7 +557,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
         _t: Us,
         req: Request,
         engines: &mut [Option<ExecEngine>],
-        touched: &mut [bool],
+        touched: &mut Touched,
     ) {
         let model = req.model;
         self.window_counts[model] += 1;
@@ -525,7 +565,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
     }
 
     /// Control tick: estimate, detect drift, rebalance.
-    fn post_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+    fn post_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
         if t != self.next_tick {
             return;
         }
@@ -567,7 +607,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
                     // The drained queue changed this slot's backlog out
                     // of band; drop any memoized probe.
                     self.cache.invalidate(gpu, local);
-                    touched[gpu] = true;
+                    touched.mark(gpu);
                     self.stats.replicas_removed += 1;
                 } else {
                     // Still pending: cancel the migration and refund its
@@ -601,7 +641,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
             }
             self.knee_load = after;
             for m in 0..self.live.len() {
-                self.routable[m] = routable_of(&self.live, m);
+                self.refresh_routable(m);
             }
             // Re-route drained requests among surviving replicas.
             for (m, req) in drained {
@@ -629,7 +669,7 @@ pub fn run_adaptive(
     routing: RoutingPolicy,
     sched: GpuSched,
     cfg: &AdaptiveCfg,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
 ) -> ClusterReport {
@@ -644,11 +684,12 @@ pub fn run_adaptive(
         requests,
         horizon_ms,
         seed,
-        Parallelism::default(),
+        ExecOpts::default(),
     )
 }
 
-/// [`run_adaptive`] with an explicit engine-stepping thread budget.
+/// [`run_adaptive`] with explicit execution options (thread budget +
+/// barrier mode).
 #[allow(clippy::too_many_arguments)]
 pub fn run_adaptive_with(
     profiles: &[ModelProfile],
@@ -658,10 +699,10 @@ pub fn run_adaptive_with(
     routing: RoutingPolicy,
     sched: GpuSched,
     cfg: &AdaptiveCfg,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
-    threads: Parallelism,
+    opts: ExecOpts,
 ) -> ClusterReport {
     cfg.validate().expect("invalid adaptive config");
     let n_models = profiles.len();
@@ -702,6 +743,10 @@ pub fn run_adaptive_with(
     }
 
     let routable: Vec<Vec<Replica>> = (0..n_models).map(|m| routable_of(&live, m)).collect();
+    let cand: Vec<Vec<usize>> = routable
+        .iter()
+        .map(|reps| reps.iter().map(|r| r.gpu).collect())
+        .collect();
     let mut driver = AdaptiveDriver {
         profiles,
         gpus,
@@ -715,6 +760,7 @@ pub fn run_adaptive_with(
         window_s: cfg.interval_ms / 1_000.0,
         live,
         routable,
+        cand,
         local_map,
         knee_load: initial.knee_load.clone(),
         shed_rps: initial.shed_rps.clone(),
@@ -729,7 +775,7 @@ pub fn run_adaptive_with(
         rejected: vec![0u64; n_models],
         next_tick: interval,
     };
-    run_epochs(&mut engines, requests, horizon, threads, &mut driver);
+    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
 
     let AdaptiveDriver {
         live, local_map, knee_load, shed_rps, estimator, mut stats, rejected, ..
@@ -825,6 +871,7 @@ pub fn run_adaptive_with(
         per_gpu,
         adaptive: Some(stats),
         lifecycle: None,
+        exec: Some(exec_stats),
     }
 }
 

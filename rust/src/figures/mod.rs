@@ -642,7 +642,7 @@ pub fn fig12() -> FigData {
         ]);
     };
     for pol in [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll] {
-        let r = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, pol);
+        let r = run_cluster(&profiles, &T4, 4, reqs.clone(), horizon_ms, pol);
         push(r.policy.clone(), &r);
     }
     let t4x4 = vec![T4.clone(); 4];
@@ -665,7 +665,15 @@ pub fn fig12() -> FigData {
     ];
     for (label, gpus, placement, routing) in placed {
         let r = serve_cluster(
-            &profiles, &rates, gpus, placement, routing, GpuSched::Dstack, &reqs, horizon_ms, 77,
+            &profiles,
+            &rates,
+            gpus,
+            placement,
+            routing,
+            GpuSched::Dstack,
+            reqs.clone(),
+            horizon_ms,
+            77,
         );
         push(label.to_string(), &r);
     }
@@ -711,7 +719,7 @@ pub fn fig13() -> FigData {
             PlacementPolicy::FirstFitDecreasing,
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         )
@@ -727,7 +735,7 @@ pub fn fig13() -> FigData {
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
         &cfg,
-        &reqs,
+        reqs,
         horizon_ms,
         seed,
     );
@@ -778,7 +786,7 @@ pub fn fig14() -> FigData {
                 RoutingPolicy::JoinShortestQueue,
                 GpuSched::Dstack,
                 &cfg,
-                &reqs,
+                reqs.clone(),
                 horizon_ms,
                 seed,
             );

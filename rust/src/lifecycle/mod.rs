@@ -46,10 +46,10 @@ pub mod store;
 
 pub use store::{EvictionPolicy, ModelStore};
 
-use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine};
+use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine, Touched};
 use crate::cluster::routing::BacklogCache;
 use crate::cluster::{
-    ClusterReport, GpuModelShare, GpuReport, GpuSched, Parallelism, Replica, ResidencyPlan,
+    ClusterReport, ExecOpts, GpuModelShare, GpuReport, GpuSched, Replica, ResidencyPlan,
     Router, RoutingPolicy,
 };
 use crate::gpu::{ms_to_us, us_to_ms, ReconfigModel, Us};
@@ -255,6 +255,12 @@ pub fn longtail_workload_from(
 struct LifecycleDriver<'a> {
     profiles: &'a [ModelProfile],
     plan: &'a ResidencyPlan,
+    /// Every engine, 0..n_gpus: the conservative candidate set. An
+    /// eviction cascade triggered by one arrival can drain a victim on
+    /// the routed GPU and re-dispatch its queue to *any* other GPU, so
+    /// no smaller set is safe — lifecycle arrivals stay global barriers
+    /// (sparse mode degrades gracefully to epoch behavior here).
+    all_gpus: Vec<usize>,
     cfg: &'a LifecycleCfg,
     sched: GpuSched,
     pinned: Vec<bool>,
@@ -289,7 +295,7 @@ impl LifecycleDriver<'_> {
         req: Request,
         work: &mut VecDeque<(usize, Request)>,
         engines: &mut [Option<ExecEngine>],
-        touched: &mut [bool],
+        touched: &mut Touched,
     ) {
         let reps: &[Replica] = &self.plan.placement.replicas[model];
         if reps.is_empty() {
@@ -334,7 +340,7 @@ impl LifecycleDriver<'_> {
                 q.model = r.local;
                 engines[g].as_mut().expect("warm replica on idle GPU").sim.inject(q);
                 self.cache.note_inject(g, r.local);
-                touched[g] = true;
+                touched.mark(g);
                 self.stats.warm_hits += 1;
                 return;
             }
@@ -377,7 +383,7 @@ impl LifecycleDriver<'_> {
                 // model itself stays inactive until complete_load
                 // rebuilds again.
                 engine.rebuild_policy(self.sched);
-                touched[g] = true;
+                touched.mark(g);
             }
             let ready = t + ms_to_us(load_ms).max(1);
             self.loading.insert((g, model), ready);
@@ -392,6 +398,14 @@ impl LifecycleDriver<'_> {
 }
 
 impl EpochDriver for LifecycleDriver<'_> {
+    fn n_models(&self) -> usize {
+        self.rejected.len()
+    }
+
+    fn candidates_of(&self, _model: usize) -> &[usize] {
+        &self.all_gpus
+    }
+
     fn next_event(&self) -> Option<Us> {
         let t_load = self.loading.values().min().copied();
         let t_idle = self
@@ -403,7 +417,7 @@ impl EpochDriver for LifecycleDriver<'_> {
     /// Mature loads due at t: the model becomes warm, its tombstone
     /// slot reactivates, parked requests inject with their original
     /// arrival times (cold delay shows up as end-to-end latency).
-    fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+    fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
         self.cache.reset();
         let due: Vec<(usize, usize)> = self
             .loading
@@ -434,7 +448,7 @@ impl EpochDriver for LifecycleDriver<'_> {
                 r.model = local;
                 engine.sim.inject(r);
             }
-            touched[g] = true;
+            touched.mark(g);
         }
     }
 
@@ -444,7 +458,7 @@ impl EpochDriver for LifecycleDriver<'_> {
         t: Us,
         req: Request,
         engines: &mut [Option<ExecEngine>],
-        touched: &mut [bool],
+        touched: &mut Touched,
     ) {
         let mut work = std::mem::take(&mut self.scratch);
         debug_assert!(work.is_empty());
@@ -460,7 +474,7 @@ impl EpochDriver for LifecycleDriver<'_> {
     /// release memory and knee budget; residents that are idle by the
     /// clock but still draining are re-armed (they are in use, not
     /// idle).
-    fn post_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut [bool]) {
+    fn post_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
         let Some(to) = self.idle_timeout else { return };
         for g in 0..self.stores.len() {
             for m in self.stores[g].idle_candidates(t, to) {
@@ -473,7 +487,7 @@ impl EpochDriver for LifecycleDriver<'_> {
                     debug_assert!(drained.is_empty(), "empty backlog drained requests");
                     engine.rebuild_policy(self.sched);
                     self.stats.scale_to_zero += 1;
-                    touched[g] = true;
+                    touched.mark(g);
                 } else {
                     self.stores[g].touch(t, m);
                 }
@@ -497,7 +511,7 @@ pub fn run_lifecycle(
     routing: RoutingPolicy,
     sched: GpuSched,
     cfg: &LifecycleCfg,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
 ) -> ClusterReport {
@@ -511,11 +525,12 @@ pub fn run_lifecycle(
         requests,
         horizon_ms,
         seed,
-        Parallelism::default(),
+        ExecOpts::default(),
     )
 }
 
-/// [`run_lifecycle`] with an explicit engine-stepping thread budget.
+/// [`run_lifecycle`] with explicit execution options (thread budget +
+/// barrier mode).
 #[allow(clippy::too_many_arguments)]
 pub fn run_lifecycle_with(
     profiles: &[ModelProfile],
@@ -524,10 +539,10 @@ pub fn run_lifecycle_with(
     routing: RoutingPolicy,
     sched: GpuSched,
     cfg: &LifecycleCfg,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
-    threads: Parallelism,
+    opts: ExecOpts,
 ) -> ClusterReport {
     cfg.validate().expect("invalid lifecycle config");
     let n_models = profiles.len();
@@ -593,6 +608,7 @@ pub fn run_lifecycle_with(
     let mut driver = LifecycleDriver {
         profiles,
         plan,
+        all_gpus: (0..n_gpus).collect(),
         cfg,
         sched,
         pinned,
@@ -608,7 +624,7 @@ pub fn run_lifecycle_with(
         idle_timeout,
         scratch: VecDeque::new(),
     };
-    run_epochs(&mut engines, requests, horizon, threads, &mut driver);
+    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
     let LifecycleDriver { stores, rejected, held, cold_delays_ms, mut stats, .. } = driver;
 
     // --- finalize + aggregate ----------------------------------------------
@@ -713,6 +729,7 @@ pub fn run_lifecycle_with(
         per_gpu,
         adaptive: None,
         lifecycle: Some(stats),
+        exec: Some(exec_stats),
     }
 }
 
@@ -727,7 +744,7 @@ pub fn serve_longtail(
     routing: RoutingPolicy,
     sched: GpuSched,
     cfg: &LifecycleCfg,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
 ) -> ClusterReport {
@@ -742,11 +759,11 @@ pub fn serve_longtail(
         requests,
         horizon_ms,
         seed,
-        Parallelism::default(),
+        ExecOpts::default(),
     )
 }
 
-/// [`serve_longtail`] with an explicit engine-stepping thread budget.
+/// [`serve_longtail`] with explicit execution options.
 #[allow(clippy::too_many_arguments)]
 pub fn serve_longtail_with(
     profiles: &[ModelProfile],
@@ -756,10 +773,10 @@ pub fn serve_longtail_with(
     routing: RoutingPolicy,
     sched: GpuSched,
     cfg: &LifecycleCfg,
-    requests: &[Request],
+    requests: Vec<Request>,
     horizon_ms: f64,
     seed: u64,
-    threads: Parallelism,
+    opts: ExecOpts,
 ) -> ClusterReport {
     let budgets = cfg.budgets(gpus);
     assert!(
@@ -776,7 +793,7 @@ pub fn serve_longtail_with(
         cfg.min_replicas,
     );
     run_lifecycle_with(
-        profiles, gpus, &plan, routing, sched, cfg, requests, horizon_ms, seed, threads,
+        profiles, gpus, &plan, routing, sched, cfg, requests, horizon_ms, seed, opts,
     )
 }
 
@@ -810,7 +827,7 @@ mod tests {
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
             cfg,
-            &reqs,
+            reqs,
             horizon_ms,
             seed,
         )

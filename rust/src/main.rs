@@ -5,7 +5,8 @@
 //! Subcommands:
 //!   figures  --fig <2|3|4|...|14|all> [--out results]
 //!   tables   --table <1|2|3|6|all>    [--out results]
-//!   simulate --config <scenario.json> [--threads N|auto]   (scenarios
+//!   simulate --config <scenario.json> [--threads N|auto]
+//!            [--exec-mode sparse|epoch] [--verbose]   (scenarios
 //!            with a "cluster" block run on the placement/routing
 //!            cluster engine; adding an "adaptive" block runs the
 //!            adaptive control plane; a "lifecycle" block runs the
@@ -30,9 +31,13 @@
 //!   serve    [--seconds N] [--rate-scale X] [--policy dstack|fifo]
 //!   selfcheck
 //!
-//! All cluster paths accept `--threads N|auto`: the engine-stepping
-//! thread budget (`auto` = one per core, `1` = serial). Thread count
-//! never changes results — reports are byte-identical for any value.
+//! All cluster paths accept `--threads N|auto` (the engine-stepping
+//! thread budget: `auto` = one per core, `1` = serial),
+//! `--exec-mode sparse|epoch` (barrier discipline of the execution
+//! core; sparse is the default) and `--verbose` (print execution-core
+//! telemetry: barriers run/elided, batched arrivals, max lookahead).
+//! Neither threads nor exec-mode ever changes results — reports are
+//! byte-identical for any combination.
 
 use dstack::util::cli::Args;
 use std::path::Path;
@@ -83,15 +88,43 @@ fn figures(args: &Args, which: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `--threads N|auto` → engine-stepping budget, overriding `base` (a
-/// scenario's `parallelism` field or the default) when given.
-fn threads_from_args(
+/// `--threads N|auto` + `--exec-mode sparse|epoch` → execution-core
+/// options, overriding `base` (a scenario's `parallelism`/`exec_mode`
+/// fields or the defaults) where given.
+fn exec_opts_from_args(
     args: &Args,
-    base: dstack::cluster::Parallelism,
-) -> anyhow::Result<dstack::cluster::Parallelism> {
-    match args.get("threads") {
-        Some(s) => dstack::cluster::Parallelism::parse(s).map_err(|e| anyhow::anyhow!("{e}")),
-        None => Ok(base),
+    base: dstack::cluster::ExecOpts,
+) -> anyhow::Result<dstack::cluster::ExecOpts> {
+    let threads = match args.get("threads") {
+        Some(s) => dstack::cluster::Parallelism::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => base.threads,
+    };
+    let mode = match args.get("exec-mode") {
+        Some(s) => dstack::cluster::ExecMode::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => base.mode,
+    };
+    Ok(dstack::cluster::ExecOpts { threads, mode })
+}
+
+/// Overlay the exec flags onto a loaded scenario's own knobs.
+fn overlay_exec_args(args: &Args, sc: &mut dstack::config::Scenario) -> anyhow::Result<()> {
+    let opts = exec_opts_from_args(
+        args,
+        dstack::cluster::ExecOpts { threads: sc.parallelism, mode: sc.exec_mode },
+    )?;
+    sc.parallelism = opts.threads;
+    sc.exec_mode = opts.mode;
+    Ok(())
+}
+
+/// `--verbose`: print the execution core's out-of-band telemetry
+/// (never part of the report JSON — see `cluster::exec::ExecStats`).
+fn print_exec_stats(args: &Args, rep: &dstack::cluster::ClusterReport) {
+    if !args.has_flag("verbose") {
+        return;
+    }
+    if let Some(x) = &rep.exec {
+        println!("{}", x.render());
     }
 }
 
@@ -104,13 +137,14 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("simulate needs a scenario file"))?;
     let mut sc = dstack::config::Scenario::from_file(Path::new(path))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    sc.parallelism = threads_from_args(args, sc.parallelism)?;
+    overlay_exec_args(args, &mut sc)?;
     if sc.cluster.is_some() {
         if sc.lifecycle.is_some() {
             let rep = dstack::config::run_lifecycle_scenario(&sc);
             let names = lifecycle_fleet_names(&sc);
             println!("scenario '{}' lifecycle policy={}", sc.name, rep.policy);
             print_cluster_report(&names, &rep);
+            print_exec_stats(args, &rep);
             return Ok(());
         }
         let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
@@ -121,6 +155,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         };
         println!("scenario '{}' cluster policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);
+        print_exec_stats(args, &rep);
         return Ok(());
     }
     let rep = dstack::config::run_scenario(&sc);
@@ -266,18 +301,19 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         }
         sc.horizon_ms = args.get_f64("horizon", sc.horizon_ms);
         sc.seed = args.get_u64("seed", sc.seed);
-        sc.parallelism = threads_from_args(args, sc.parallelism)?;
+        overlay_exec_args(args, &mut sc)?;
         sc.adaptive =
             Some(adaptive_cfg_from_args(args, sc.adaptive.clone().unwrap_or_default())?);
         let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
         let rep = dstack::config::run_adaptive_scenario(&sc);
         println!("scenario '{}' adaptive policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);
+        print_exec_stats(args, &rep);
         return Ok(());
     }
     let horizon_ms = args.get_f64("horizon", 10_000.0);
     let seed = args.get_u64("seed", 42);
-    let threads = threads_from_args(args, dstack::cluster::Parallelism::Auto)?;
+    let opts = exec_opts_from_args(args, dstack::cluster::ExecOpts::default())?;
     let cfg = adaptive_cfg_from_args(args, AdaptiveCfg::default())?;
 
     let (profiles, initial, peak, reqs) = drift_workload(horizon_ms, seed);
@@ -295,13 +331,14 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         PlacementPolicy::FirstFitDecreasing,
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
-        &reqs,
+        reqs.clone(),
         horizon_ms,
         seed,
-        threads,
+        opts,
     );
     println!("\n== static placement (solved once, for per-model peak rates) ==");
     print_cluster_report(&names, &stat);
+    print_exec_stats(args, &stat);
 
     let adap = run_adaptive_with(
         &profiles,
@@ -311,13 +348,14 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
         &cfg,
-        &reqs,
+        reqs,
         horizon_ms,
         seed,
-        threads,
+        opts,
     );
     println!("\n== adaptive control plane ==");
     print_cluster_report(&names, &adap);
+    print_exec_stats(args, &adap);
 
     let (s, a) = (stat.total_throughput(), adap.total_throughput());
     println!(
@@ -348,7 +386,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
         }
         sc.horizon_ms = args.get_f64("horizon", sc.horizon_ms);
         sc.seed = args.get_u64("seed", sc.seed);
-        sc.parallelism = threads_from_args(args, sc.parallelism)?;
+        overlay_exec_args(args, &mut sc)?;
         {
             let lc = sc.lifecycle.as_mut().expect("checked above");
             if let Some(e) = args.get("eviction") {
@@ -364,6 +402,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
         let rep = dstack::config::run_lifecycle_scenario(&sc);
         println!("scenario '{}' lifecycle policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);
+        print_exec_stats(args, &rep);
         return Ok(());
     }
     // Built-in canonical scenario: 24-model Zipf(1.1) long-tail on
@@ -371,7 +410,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
     // fleet; warmness-aware vs warm-oblivious JSQ side by side.
     let horizon_ms = args.get_f64("horizon", 8_000.0);
     let seed = args.get_u64("seed", 42);
-    let threads = threads_from_args(args, dstack::cluster::Parallelism::Auto)?;
+    let opts = exec_opts_from_args(args, dstack::cluster::ExecOpts::default())?;
     let mut cfg = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
     if let Some(e) = args.get("eviction") {
         cfg.eviction = EvictionPolicy::parse(e).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -401,16 +440,17 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
             &c,
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
-            threads,
+            opts,
         )
     };
     if args.has_flag("oblivious") {
         let rep = run(false);
         println!("\n== warm-oblivious JSQ ==");
         print_cluster_report(&names, &rep);
+        print_exec_stats(args, &rep);
         return Ok(());
     }
     let cold = run(false);
@@ -419,6 +459,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
     let warm = run(true);
     println!("\n== warmness-aware JSQ ==");
     print_cluster_report(&names, &warm);
+    print_exec_stats(args, &warm);
 
     let (gw, gc) = (
         warm.lifecycle.as_ref().map_or(0.0, |l| l.goodput_rps),
@@ -454,12 +495,12 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
         GpuSched::parse(args.get_or("sched", "dstack")).map_err(|e| anyhow::anyhow!("{e}"))?;
     let horizon_ms = args.get_f64("horizon", 8_000.0);
     let seed = args.get_u64("seed", 77);
-    let threads = threads_from_args(args, dstack::cluster::Parallelism::Auto)?;
+    let opts = exec_opts_from_args(args, dstack::cluster::ExecOpts::default())?;
 
     // The Fig. 12 asymmetric-demand workload over the chosen cluster.
     let (profiles, rates, reqs) = fig12_workload(horizon_ms, seed);
     let rep = serve_cluster_with(
-        &profiles, &rates, &gpus, placement, routing, sched, &reqs, horizon_ms, seed, threads,
+        &profiles, &rates, &gpus, placement, routing, sched, reqs, horizon_ms, seed, opts,
     );
     println!(
         "cluster [{}] placement={} routing={} sched={} horizon={:.0}ms",
@@ -471,6 +512,7 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     );
     let model_names: Vec<String> = profiles.iter().map(|p| p.name.clone()).collect();
     print_cluster_report(&model_names, &rep);
+    print_exec_stats(args, &rep);
     Ok(())
 }
 

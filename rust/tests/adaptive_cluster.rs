@@ -25,7 +25,7 @@ fn run_adaptive_drift(horizon_ms: f64, seed: u64) -> ClusterReport {
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
         &acfg(),
-        &reqs,
+        reqs,
         horizon_ms,
         seed,
     )
@@ -40,7 +40,7 @@ fn run_static_peak(horizon_ms: f64, seed: u64) -> ClusterReport {
         PlacementPolicy::FirstFitDecreasing,
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
-        &reqs,
+        reqs,
         horizon_ms,
         seed,
     )
@@ -167,7 +167,7 @@ fn adaptive_without_drift_stays_quiet() {
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
         &acfg(),
-        &reqs,
+        reqs.clone(),
         3_000.0,
         11,
     );
@@ -182,7 +182,7 @@ fn adaptive_without_drift_stays_quiet() {
         PlacementPolicy::FirstFitDecreasing,
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
-        &reqs,
+        reqs,
         3_000.0,
         11,
     );

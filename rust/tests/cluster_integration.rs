@@ -18,8 +18,8 @@ fn setup() -> (Vec<dstack::profile::ModelProfile>, Vec<dstack::workload::Request
 #[test]
 fn cluster_runs_deterministic() {
     let (profiles, reqs) = setup();
-    let a = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::DstackAll);
-    let b = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::DstackAll);
+    let a = run_cluster(&profiles, &T4, 4, reqs.clone(), 3_000.0, ClusterPolicy::DstackAll);
+    let b = run_cluster(&profiles, &T4, 4, reqs, 3_000.0, ClusterPolicy::DstackAll);
     assert_eq!(a.throughput, b.throughput);
     assert_eq!(a.gpu_utilization, b.gpu_utilization);
 }
@@ -33,8 +33,8 @@ fn more_gpus_more_throughput_under_overload() {
         .map(|p| (Arrivals::Poisson { rate: 2_000.0 }, p.slo_ms))
         .collect();
     let reqs = merged_stream(&specs, 3_000.0, 6);
-    let two = run_cluster(&profiles, &T4, 2, &reqs, 3_000.0, ClusterPolicy::DstackAll);
-    let four = run_cluster(&profiles, &T4, 4, &reqs, 3_000.0, ClusterPolicy::DstackAll);
+    let two = run_cluster(&profiles, &T4, 2, reqs.clone(), 3_000.0, ClusterPolicy::DstackAll);
+    let four = run_cluster(&profiles, &T4, 4, reqs, 3_000.0, ClusterPolicy::DstackAll);
     assert!(
         four.total_throughput() > 1.5 * two.total_throughput(),
         "2 GPUs {} vs 4 GPUs {}",
@@ -57,5 +57,5 @@ fn operating_points_adapt_to_gpu() {
 #[should_panic(expected = "exclusive placement")]
 fn exclusive_requires_enough_gpus() {
     let (profiles, reqs) = setup();
-    run_cluster(&profiles, &T4, 2, &reqs, 1_000.0, ClusterPolicy::Exclusive);
+    run_cluster(&profiles, &T4, 2, reqs, 1_000.0, ClusterPolicy::Exclusive);
 }

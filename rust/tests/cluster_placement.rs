@@ -104,8 +104,15 @@ fn routed_cluster_invariants_hold_end_to_end() {
 
         let run = || {
             serve_cluster(
-                &profiles, &rates, &gpus, placement, routing, GpuSched::Dstack, &reqs,
-                horizon_ms, seed,
+                &profiles,
+                &rates,
+                &gpus,
+                placement,
+                routing,
+                GpuSched::Dstack,
+                reqs.clone(),
+                horizon_ms,
+                seed,
             )
         };
         let rep = run();
@@ -166,7 +173,8 @@ fn heterogeneous_jsq_cluster_beats_legacy_round_robin_split() {
     let horizon_ms = 2_000.0;
     let (profiles, rates, reqs) = fig12_workload(horizon_ms, 77);
 
-    let legacy = run_cluster(&profiles, &T4, 4, &reqs, horizon_ms, ClusterPolicy::DstackAll);
+    let legacy =
+        run_cluster(&profiles, &T4, 4, reqs.clone(), horizon_ms, ClusterPolicy::DstackAll);
     let hetero_gpus = [V100.clone(), V100.clone(), T4.clone(), T4.clone()];
     let placed = serve_cluster(
         &profiles,
@@ -175,7 +183,7 @@ fn heterogeneous_jsq_cluster_beats_legacy_round_robin_split() {
         PlacementPolicy::FirstFitDecreasing,
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
-        &reqs,
+        reqs,
         horizon_ms,
         7,
     );

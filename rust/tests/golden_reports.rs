@@ -106,7 +106,7 @@ fn cluster_reports_match_goldens() {
             placement,
             routing,
             GpuSched::Dstack,
-            &reqs,
+            reqs.clone(),
             HORIZON_MS,
             SEED,
         );
@@ -133,7 +133,7 @@ fn adaptive_cluster_report_matches_golden() {
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
         &cfg,
-        &reqs,
+        reqs,
         HORIZON_MS,
         SEED,
     );
@@ -158,7 +158,7 @@ fn lifecycle_longtail_report_matches_golden() {
         RoutingPolicy::JoinShortestQueue,
         GpuSched::Dstack,
         &cfg,
-        &reqs,
+        reqs,
         HORIZON_MS,
         SEED,
     );
@@ -173,7 +173,7 @@ fn legacy_fig12_cluster_matches_golden() {
     for policy in
         [ClusterPolicy::Exclusive, ClusterPolicy::TemporalAll, ClusterPolicy::DstackAll]
     {
-        let rep = run_cluster(&profiles, &T4, 4, &reqs, HORIZON_MS, policy);
+        let rep = run_cluster(&profiles, &T4, 4, reqs.clone(), HORIZON_MS, policy);
         check_golden(&format!("fig12_{:?}", policy), &rep.to_json());
     }
 }

@@ -79,7 +79,7 @@ fn warmness_aware_routing_beats_oblivious_jsq() {
             RoutingPolicy::JoinShortestQueue,
             GpuSched::Dstack,
             &LifecycleCfg { warm_routing: warm, mem_budget_mib: 4_096, ..Default::default() },
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         )
@@ -126,7 +126,7 @@ fn lifecycle_conserves_requests_on_random_fleets() {
             routing,
             GpuSched::Dstack,
             &cfg,
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         );
@@ -172,7 +172,7 @@ fn lifecycle_conserves_requests_on_random_fleets() {
             routing,
             GpuSched::Dstack,
             &cfg,
-            &reqs,
+            reqs.clone(),
             horizon_ms,
             seed,
         );

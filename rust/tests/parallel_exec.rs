@@ -1,129 +1,240 @@
 //! Determinism contract of the cluster execution core
 //! (`cluster::exec`): a fixed (placement, routing, seed, stream) tuple
 //! must produce a byte-identical `ClusterReport` JSON for any thread
-//! count, on all three cluster drivers — static placement, adaptive
-//! control plane, and lifecycle memory manager. Plus the compile-time
-//! `Send` assertions that keep every `Policy` implementation eligible
-//! for the worker pool.
+//! count AND either barrier discipline (`exec_mode` epoch | sparse), on
+//! all three cluster drivers — static placement, adaptive control
+//! plane, and lifecycle memory manager. The scenario matrix includes a
+//! round-robin row (exercising sparse mode's barrier-elision path), a
+//! rejected-model row (zero-replica candidate sets), and the drifting
+//! workload (mid-stream tombstone surgery + pending activations). Plus
+//! the compile-time `Send` assertions that keep every `Policy`
+//! implementation eligible for the worker pool.
 
 use dstack::cluster::{
-    fig12_workload, place, run_placement_with, GpuSched, Parallelism, PlacementPolicy,
-    RoutingPolicy,
+    fig12_workload, place, run_placement_with, ExecMode, ExecOpts, GpuSched, Parallelism,
+    PlacementPolicy, RoutingPolicy,
 };
 use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive_with, AdaptiveCfg};
 use dstack::lifecycle::{longtail_gpus, longtail_workload, serve_longtail_with, LifecycleCfg};
 use dstack::profile::{T4, V100};
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+const MODES: [ExecMode; 2] = [ExecMode::Epoch, ExecMode::Sparse];
 
-/// Render the canonical scenarios' reports under `threads`.
-fn report_strings(threads: usize) -> [String; 4] {
-    let t = Parallelism::Threads(threads);
+const SCENARIOS: [&str; 7] = [
+    "static-jsq",
+    "static-wide-jsq",
+    "static-wide-rr",
+    "static-rejected",
+    "adaptive-jsq",
+    "adaptive-rr",
+    "lifecycle",
+];
+
+/// Render the canonical scenarios' reports under `opts`.
+fn report_strings(opts: ExecOpts) -> Vec<String> {
+    let mut out = Vec::with_capacity(SCENARIOS.len());
 
     // Static: the Fig. 12 mix knee-packed onto a heterogeneous cluster,
     // JSQ-routed (backlog probes at every barrier).
     let (profiles, rates, reqs) = fig12_workload(1_500.0, 77);
     let gpus = [V100.clone(), T4.clone(), T4.clone()];
     let pl = place(&profiles, &rates, &gpus, PlacementPolicy::FirstFitDecreasing);
-    let stat = run_placement_with(
-        &profiles,
-        &gpus,
-        &pl,
-        &reqs,
-        1_500.0,
-        RoutingPolicy::JoinShortestQueue,
-        GpuSched::Dstack,
-        7,
-        "det",
-        t,
-    )
-    .to_json()
-    .to_string_pretty();
+    out.push(
+        run_placement_with(
+            &profiles,
+            &gpus,
+            &pl,
+            reqs.clone(),
+            1_500.0,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            7,
+            "det",
+            opts,
+        )
+        .to_json()
+        .to_string_pretty(),
+    );
 
     // Static, wide: 6 GPUs clears the core's fan-out threshold, so the
     // worker pool actually runs (the 2-3 GPU scenarios above take the
     // serial bypass) — this row is what makes the property non-vacuous.
+    // Once JSQ (per-arrival candidate sync + backlog probes)...
     let gpus6 = vec![T4.clone(); 6];
     let pl6 = place(&profiles, &rates, &gpus6, PlacementPolicy::LoadBalance);
-    let wide = run_placement_with(
-        &profiles,
-        &gpus6,
-        &pl6,
-        &reqs,
-        1_500.0,
-        RoutingPolicy::JoinShortestQueue,
-        GpuSched::Dstack,
-        7,
-        "det6",
-        t,
-    )
-    .to_json()
-    .to_string_pretty();
+    out.push(
+        run_placement_with(
+            &profiles,
+            &gpus6,
+            &pl6,
+            reqs.clone(),
+            1_500.0,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            7,
+            "det6",
+            opts,
+        )
+        .to_json()
+        .to_string_pretty(),
+    );
+    // ...and once round-robin: backlog-free routing, so sparse mode
+    // elides every stepping barrier and batches the whole un-quantized
+    // stream into timestamped injection rounds.
+    out.push(
+        run_placement_with(
+            &profiles,
+            &gpus6,
+            &pl6,
+            reqs.clone(),
+            1_500.0,
+            RoutingPolicy::RoundRobin,
+            GpuSched::Dstack,
+            7,
+            "det6rr",
+            opts,
+        )
+        .to_json()
+        .to_string_pretty(),
+    );
+
+    // Static, overloaded: a single T4 cannot admit the whole mix, so
+    // some models run with *zero replicas* — empty candidate sets whose
+    // arrivals must reject without synchronizing (or touching) anyone.
+    let gpus1 = [T4.clone()];
+    let pl1 = place(&profiles, &rates, &gpus1, PlacementPolicy::FirstFitDecreasing);
+    out.push(
+        run_placement_with(
+            &profiles,
+            &gpus1,
+            &pl1,
+            reqs,
+            1_500.0,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            7,
+            "det1",
+            opts,
+        )
+        .to_json()
+        .to_string_pretty(),
+    );
 
     // Adaptive: the canonical drifting workload long enough to cross
     // the midpoint swap, so control ticks, replans and replica surgery
-    // all land inside the horizon.
+    // all land inside the horizon — JSQ and (elidable) RR variants.
     let (profiles, initial, _peak, reqs) = drift_workload(3_000.0, 11);
     let cfg = AdaptiveCfg { interval_ms: 250.0, cooldown_ticks: 1, ..Default::default() };
-    let adap = run_adaptive_with(
-        &profiles,
-        &initial,
-        &drift_gpus(),
-        PlacementPolicy::FirstFitDecreasing,
-        RoutingPolicy::JoinShortestQueue,
-        GpuSched::Dstack,
-        &cfg,
-        &reqs,
-        3_000.0,
-        11,
-        t,
-    )
-    .to_json()
-    .to_string_pretty();
+    for routing in [RoutingPolicy::JoinShortestQueue, RoutingPolicy::RoundRobin] {
+        out.push(
+            run_adaptive_with(
+                &profiles,
+                &initial,
+                &drift_gpus(),
+                PlacementPolicy::FirstFitDecreasing,
+                routing,
+                GpuSched::Dstack,
+                &cfg,
+                reqs.clone(),
+                3_000.0,
+                11,
+                opts,
+            )
+            .to_json()
+            .to_string_pretty(),
+        );
+    }
 
     // Lifecycle: a memory-pressured long-tail fleet, so cold starts,
-    // evictions, parking and scale-to-zero all fire.
+    // evictions, parking and scale-to-zero all fire (conservative
+    // all-engines candidate sets in sparse mode).
     let (profiles, rates, reqs) = longtail_workload(10, 1.1, 350.0, 1_500.0, 13);
     let lcfg = LifecycleCfg {
         mem_budget_mib: 2_048,
         idle_timeout_ms: 400.0,
         ..Default::default()
     };
-    let lc = serve_longtail_with(
-        &profiles,
-        &rates,
-        &longtail_gpus(),
-        PlacementPolicy::LoadBalance,
-        RoutingPolicy::JoinShortestQueue,
-        GpuSched::Dstack,
-        &lcfg,
-        &reqs,
-        1_500.0,
-        13,
-        t,
-    )
-    .to_json()
-    .to_string_pretty();
+    out.push(
+        serve_longtail_with(
+            &profiles,
+            &rates,
+            &longtail_gpus(),
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &lcfg,
+            reqs,
+            1_500.0,
+            13,
+            opts,
+        )
+        .to_json()
+        .to_string_pretty(),
+    );
 
-    [stat, wide, adap, lc]
+    out
 }
 
 #[test]
-fn reports_are_byte_identical_across_thread_counts() {
-    let baseline = report_strings(THREAD_COUNTS[0]);
+fn reports_are_byte_identical_across_threads_and_modes() {
+    let baseline =
+        report_strings(ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Epoch });
     // The scenarios must actually exercise their machinery, or the
     // property would vacuously pass on an idle cluster.
-    assert!(baseline[2].contains("\"adaptive\""), "no adaptive stats attached");
-    assert!(baseline[3].contains("\"lifecycle\""), "no lifecycle stats attached");
-    for &threads in &THREAD_COUNTS[1..] {
-        let got = report_strings(threads);
-        for (i, name) in ["static", "static-wide", "adaptive", "lifecycle"].iter().enumerate() {
-            assert_eq!(
-                baseline[i], got[i],
-                "{name} report diverged between threads=1 and threads={threads}"
-            );
+    assert!(baseline[4].contains("\"adaptive\""), "no adaptive stats attached");
+    assert!(baseline[6].contains("\"lifecycle\""), "no lifecycle stats attached");
+    assert!(baseline[3].contains("false"), "single-T4 scenario rejected no model");
+    for mode in MODES {
+        for &threads in &THREAD_COUNTS {
+            if mode == ExecMode::Epoch && threads == THREAD_COUNTS[0] {
+                continue; // the baseline itself
+            }
+            let got = report_strings(ExecOpts { threads: Parallelism::Threads(threads), mode });
+            for (i, name) in SCENARIOS.iter().enumerate() {
+                assert_eq!(
+                    baseline[i],
+                    got[i],
+                    "{name} report diverged from (epoch, threads=1) at \
+                     ({mode:?}, threads={threads})"
+                );
+            }
         }
     }
+}
+
+#[test]
+fn sparse_mode_actually_elides_rr_barriers() {
+    // The elision path must really engage on round-robin streams (the
+    // identity test above would pass even if sparse silently fell back
+    // to per-arrival barriers).
+    let (profiles, rates, reqs) = fig12_workload(1_000.0, 21);
+    let gpus = vec![T4.clone(); 4];
+    let pl = place(&profiles, &rates, &gpus, PlacementPolicy::LoadBalance);
+    let run = |routing| {
+        run_placement_with(
+            &profiles,
+            &gpus,
+            &pl,
+            reqs.clone(),
+            1_000.0,
+            routing,
+            GpuSched::Dstack,
+            3,
+            "elide",
+            ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+        )
+        .exec
+        .expect("exec stats attached")
+    };
+    let rr = run(RoutingPolicy::RoundRobin);
+    assert!(rr.barriers_elided > 0, "RR stream elided no barriers: {rr:?}");
+    assert!(rr.arrivals_batched > 0);
+    assert!(rr.elision_ratio() > 0.5, "elision ratio {:.2}", rr.elision_ratio());
+    // JSQ reads backlogs at every arrival: nothing may be elided.
+    let jsq = run(RoutingPolicy::JoinShortestQueue);
+    assert_eq!(jsq.barriers_elided, 0, "JSQ must not elide barriers: {jsq:?}");
+    assert_eq!(jsq.arrivals_batched, 0);
 }
 
 #[test]
@@ -138,13 +249,13 @@ fn auto_parallelism_matches_serial() {
             &profiles,
             &gpus,
             &pl,
-            &reqs,
+            reqs.clone(),
             1_000.0,
             RoutingPolicy::PowerOfTwoChoices,
             GpuSched::Dstack,
             3,
             "auto",
-            t,
+            ExecOpts::with_threads(t),
         )
         .to_json()
         .to_string_compact()
