@@ -17,14 +17,23 @@
 //! byte-identity and (on multi-core hosts) sparse wall-clock ≤ epoch
 //! wall-clock, and records the sparse-vs-epoch speedup plus the
 //! barrier-elision ratio in `BENCH_parallel.json` for the CI summary.
+//!
+//! **Unified** (drifting Zipf(1.1) popularity, RR, full-device memory):
+//! the unified control plane replans mid-flight (drift-triggered
+//! replica surgery at tick barriers) while the warm span between
+//! control events stays elidable — the proof that lifecycle-style
+//! drivers ride the sparse fast path instead of falling back to
+//! per-arrival epoch barriers. Asserts epoch-vs-sparse byte-identity
+//! and `barriers_elided > 0` across replans.
 
 use dstack::bench::Bench;
 use dstack::cluster::{
     place, run_placement_with, ExecMode, ExecOpts, GpuSched, Parallelism, PlacementPolicy,
     RoutingPolicy,
 };
-use dstack::lifecycle::longtail_workload;
+use dstack::lifecycle::{longtail_workload, LifecycleCfg};
 use dstack::profile::{GpuSpec, V100};
+use dstack::unified::{drifting_longtail_workload, run_unified_with, unified_gpus, UnifiedCfg};
 use dstack::util::json::Json;
 use dstack::workload::Request;
 use std::time::Duration;
@@ -161,6 +170,77 @@ fn main() {
         sparse_stats.max_lookahead_us as f64 / 1_000.0
     );
 
+    // ---- case 3: unified control plane, RR, drift replans mid-span ----
+    // Full-device budgets keep every replica warm at t=0, so the warm
+    // span is elidable from the first arrival; the popularity rotation
+    // then forces drift replans whose replica surgery lands at tick
+    // barriers *inside* the elided stream.
+    let uni_horizon_ms = 4_000.0;
+    let (nprofiles, nrates, nreqs) =
+        drifting_longtail_workload(N_MODELS, 1.1, 6_000.0, uni_horizon_ms, 103);
+    let ngpus = unified_gpus(N_GPUS);
+    let ucfg = UnifiedCfg {
+        lifecycle: LifecycleCfg {
+            mem_budget_mib: 0, // full device: the whole fleet stays resident
+            idle_timeout_ms: 0.0,
+            min_replicas: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    println!(
+        "unified case: drifting Zipf(1.1), {} raw arrivals over {uni_horizon_ms:.0} ms, \
+         RR routing, full-device residency",
+        nreqs.len()
+    );
+    let run_uni = |mode: ExecMode| {
+        run_unified_with(
+            &nprofiles,
+            &nrates,
+            &ngpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::RoundRobin,
+            GpuSched::Dstack,
+            &ucfg,
+            nreqs.clone(),
+            uni_horizon_ms,
+            103,
+            ExecOpts { threads: Parallelism::Threads(threads), mode },
+        )
+    };
+    let uni_epoch_rep = run_uni(ExecMode::Epoch);
+    let uni_sparse_rep = run_uni(ExecMode::Sparse);
+    assert_eq!(
+        uni_epoch_rep.to_json().to_string_compact(),
+        uni_sparse_rep.to_json().to_string_compact(),
+        "unified sparse report diverged from the epoch report"
+    );
+    println!("determinism: unified epoch and sparse reports are byte-identical");
+    let uni_stats = uni_sparse_rep.exec.expect("exec stats attached");
+    let uni_replans = uni_sparse_rep.adaptive.as_ref().map_or(0, |a| a.replans);
+    assert!(
+        uni_stats.barriers_elided > 0,
+        "unified driver fell back to per-arrival epoch barriers: {uni_stats:?}"
+    );
+    assert!(uni_replans > 0, "popularity rotation triggered no replans");
+
+    let uni_epoch = cfg.run("parallel/unified_epoch", || {
+        dstack::bench::black_box(run_uni(ExecMode::Epoch));
+    });
+    let uni_sparse = cfg.run("parallel/unified_sparse", || {
+        dstack::bench::black_box(run_uni(ExecMode::Sparse));
+    });
+    let uni_epoch_ms = uni_epoch.min_ns * 1e-6;
+    let uni_sparse_ms = uni_sparse.min_ns * 1e-6;
+    let uni_speedup = uni_epoch_ms / uni_sparse_ms.max(1e-9);
+    println!(
+        "unified: epoch {uni_epoch_ms:.1} ms vs sparse {uni_sparse_ms:.1} ms -> \
+         {uni_speedup:.2}x ({} barriers elided across {} replans, {:.0}% elision)",
+        uni_stats.barriers_elided,
+        uni_replans,
+        uni_stats.elision_ratio() * 100.0
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::from("parallel")),
         ("gpus", Json::from(N_GPUS as u64)),
@@ -182,12 +262,26 @@ fn main() {
             ]),
         ),
         (
+            "unified",
+            Json::obj(vec![
+                ("requests", Json::from(nreqs.len() as u64)),
+                ("epoch_ms", Json::from(uni_epoch_ms)),
+                ("sparse_ms", Json::from(uni_sparse_ms)),
+                ("sparse_speedup", Json::from(uni_speedup)),
+                ("replans", Json::from(uni_replans)),
+                ("elision_ratio", Json::from(uni_stats.elision_ratio())),
+                ("exec", uni_stats.to_json()),
+            ]),
+        ),
+        (
             "results",
             Json::Arr(vec![
                 serial.to_json(),
                 parallel.to_json(),
                 epoch.to_json(),
                 sparse.to_json(),
+                uni_epoch.to_json(),
+                uni_sparse.to_json(),
             ]),
         ),
     ]);

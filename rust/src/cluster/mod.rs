@@ -41,7 +41,8 @@ pub mod routing;
 
 pub use exec::{ExecMode, ExecOpts, ExecStats, Parallelism};
 pub use placement::{
-    op_point, place, plan_residency, Placement, PlacementPolicy, Replica, ResidencyPlan,
+    op_point, place, plan_residency, plan_residency_biased, Placement, PlacementPolicy, Replica,
+    ResidencyPlan,
 };
 pub use routing::{Router, RoutingPolicy};
 

@@ -288,6 +288,39 @@ pub fn plan_residency(
     mem_budget_mib: &[u64],
     min_replicas: usize,
 ) -> ResidencyPlan {
+    plan_residency_biased(
+        profiles,
+        offered_rps,
+        gpus,
+        policy,
+        mem_budget_mib,
+        min_replicas,
+        |_, _| false,
+    )
+}
+
+/// [`plan_residency`] with a residency bias: `is_warm(gpu, model)`
+/// reports whether the model's weights are *currently* loaded on that
+/// GPU, and the packer prefers warm targets so a mid-flight replan
+/// (the unified control plane's drift/eviction-pressure replans) moves
+/// replicas onto GPUs where the weights already sit — a warm replica
+/// costs zero `cold_load_ms`, a cold one pays the full footprint.
+///
+/// The bias is a *preference*, not a constraint: FFD tie-breaks its
+/// first-fit scan warm-before-cold (then lowest index), LoadBalance
+/// picks warm GPUs first and only then falls back to most-residual
+/// budget. With a constant-`false` predicate the selection collapses to
+/// the unbiased packer exactly, which is how [`plan_residency`] keeps
+/// its historical (golden-covered) output byte-identical.
+pub fn plan_residency_biased(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    policy: PlacementPolicy,
+    mem_budget_mib: &[u64],
+    min_replicas: usize,
+    is_warm: impl Fn(usize, usize) -> bool,
+) -> ResidencyPlan {
     assert_eq!(profiles.len(), offered_rps.len(), "one offered rate per model required");
     assert_eq!(gpus.len(), mem_budget_mib.len(), "one memory budget per GPU required");
     assert!(min_replicas >= 1, "min_replicas must be >= 1");
@@ -337,11 +370,17 @@ pub fn plan_residency(
                         && free_eff[g] >= eff(m, g)
                         && !hosted[g].contains(&m)
                 });
+                // Residency bias: warm GPUs sort strictly before cold
+                // ones under both disciplines; with no warm GPU the
+                // selection is identical to the unbiased packer.
                 match policy {
-                    PlacementPolicy::FirstFitDecreasing => fits.min(),
+                    PlacementPolicy::FirstFitDecreasing => {
+                        fits.min_by_key(|&g| (!is_warm(g, m), g))
+                    }
                     PlacementPolicy::LoadBalance => fits.max_by(|&a, &b| {
-                        free_eff[a]
-                            .total_cmp(&free_eff[b])
+                        is_warm(a, m)
+                            .cmp(&is_warm(b, m))
+                            .then(free_eff[a].total_cmp(&free_eff[b]))
                             .then(b.cmp(&a)) // ties to the lowest index
                     }),
                 }
@@ -547,6 +586,34 @@ mod tests {
         assert!(plan.placement.admitted[0]);
         assert!(!plan.placement.admitted[1], "vgg19 can never fit a 1 GiB budget");
         assert!(plan.placement.replicas[1].is_empty());
+    }
+
+    #[test]
+    fn residency_bias_prefers_warm_targets() {
+        // Two identical GPUs, one light model wanting a single replica:
+        // the unbiased packer (FFD) picks GPU 0; telling the packer the
+        // weights are warm on GPU 1 flips the choice — and the
+        // constant-false predicate reproduces plan_residency exactly.
+        let ms = models(&["mobilenet"]);
+        let rates = [50.0];
+        let gpus = [V100.clone(), V100.clone()];
+        let budgets = [8_000u64, 8_000];
+        for &pol in PlacementPolicy::all() {
+            let cold = plan_residency(&ms, &rates, &gpus, pol, &budgets, 1);
+            let same =
+                plan_residency_biased(&ms, &rates, &gpus, pol, &budgets, 1, |_, _| false);
+            assert_eq!(
+                format!("{:?}", cold.placement.hosted),
+                format!("{:?}", same.placement.hosted),
+                "{pol:?}: false predicate must not change the plan"
+            );
+            let warm =
+                plan_residency_biased(&ms, &rates, &gpus, pol, &budgets, 1, |g, _| g == 1);
+            assert_eq!(
+                warm.placement.replicas[0][0].gpu, 1,
+                "{pol:?}: warm GPU 1 should win the placement"
+            );
+        }
     }
 
     #[test]

@@ -102,6 +102,23 @@ pub struct LifecycleScenario {
     pub cfg: crate::lifecycle::LifecycleCfg,
 }
 
+/// Unified block of a scenario: the lifecycle fleet served under the
+/// merged control plane (requires `cluster` AND `lifecycle`; an
+/// `adaptive` block is optional and defaults). The fleet itself —
+/// `n_models`, `alpha`, `total_rps`, memory knobs — comes from the
+/// `lifecycle` block; this block only adds what the composition needs.
+#[derive(Debug, Clone)]
+pub struct UnifiedScenario {
+    /// Rotate the fleet's popularity ranking at the horizon midpoint
+    /// (the canonical drift + pressure stress, see
+    /// [`crate::unified::drifting_longtail_workload`]); `false` serves
+    /// steady Zipf rates (pressure-only regime).
+    pub drift: bool,
+    /// Cluster-wide evictions per control interval that force a replan
+    /// without drift; `0` disables the pressure trigger.
+    pub eviction_replan_threshold: u64,
+}
+
 /// A full serving scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -130,6 +147,10 @@ pub struct Scenario {
     /// Optional lifecycle block (requires `cluster`) — the scenario
     /// runs through [`crate::lifecycle::run_lifecycle`].
     pub lifecycle: Option<LifecycleScenario>,
+    /// Optional unified block (requires `cluster` + `lifecycle`) — the
+    /// scenario runs through [`crate::unified::run_unified`], composing
+    /// the lifecycle fleet with the (optional) `adaptive` knobs.
+    pub unified: Option<UnifiedScenario>,
 }
 
 impl Scenario {
@@ -292,6 +313,22 @@ impl Scenario {
             }
             None => None,
         };
+        let unified = match j.get("unified") {
+            Some(uj) => {
+                if lifecycle.is_none() {
+                    return Err(
+                        "'unified' requires a 'lifecycle' block (the fleet definition)".into(),
+                    );
+                }
+                let cfg = crate::unified::UnifiedCfg::default();
+                Some(UnifiedScenario {
+                    drift: uj.opt_bool("drift", true),
+                    eviction_replan_threshold: uj
+                        .opt_u64("eviction_replan_threshold", cfg.eviction_replan_threshold),
+                })
+            }
+            None => None,
+        };
         let parallelism = match j.get("parallelism") {
             None => crate::cluster::Parallelism::Auto,
             Some(v) => match (v.as_str(), v.as_u64()) {
@@ -329,6 +366,7 @@ impl Scenario {
             cluster,
             adaptive,
             lifecycle,
+            unified,
         })
     }
 
@@ -419,6 +457,18 @@ impl Scenario {
                     (
                         "pinned",
                         Json::Arr(l.cfg.pinned.iter().map(|n| Json::from(n.as_str())).collect()),
+                    ),
+                ]),
+            ));
+        }
+        if let Some(u) = &self.unified {
+            pairs.push((
+                "unified",
+                Json::obj(vec![
+                    ("drift", Json::from(u.drift)),
+                    (
+                        "eviction_replan_threshold",
+                        Json::from(u.eviction_replan_threshold),
                     ),
                 ]),
             ));
@@ -644,6 +694,56 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
     )
 }
 
+/// Run a scenario's unified block: the lifecycle fleet (drifting or
+/// steady per `unified.drift`) served under the merged cold-start-aware
+/// control plane — residency-priced replans on drift or eviction
+/// pressure. Panics without `cluster`/`lifecycle`/`unified` blocks;
+/// the `adaptive` block is optional (defaults apply).
+pub fn run_unified_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
+    let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
+    let lc = sc.lifecycle.as_ref().expect("scenario has no lifecycle block");
+    let un = sc.unified.as_ref().expect("scenario has no unified block");
+    let ucfg = crate::unified::UnifiedCfg {
+        adaptive: sc.adaptive.clone().unwrap_or_default(),
+        lifecycle: lc.cfg.clone(),
+        eviction_replan_threshold: un.eviction_replan_threshold,
+    };
+    let base = sc.profiles();
+    let (profiles, rates, reqs) = if un.drift {
+        crate::unified::drifting_longtail_workload_from(
+            &base,
+            lc.n_models,
+            lc.alpha,
+            lc.total_rps,
+            sc.horizon_ms,
+            sc.seed,
+        )
+    } else {
+        crate::lifecycle::longtail_workload_from(
+            &base,
+            lc.n_models,
+            lc.alpha,
+            lc.total_rps,
+            sc.horizon_ms,
+            sc.seed,
+        )
+    };
+    let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
+    crate::unified::run_unified_with(
+        &profiles,
+        &rates,
+        &gpus,
+        cl.placement,
+        cl.routing,
+        sc.gpu_sched(),
+        &ucfg,
+        reqs,
+        sc.horizon_ms,
+        sc.seed,
+        sc.exec_opts(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -860,6 +960,67 @@ mod tests {
         ] {
             assert!(Scenario::from_json(bad).is_err(), "{bad}");
         }
+    }
+
+    const UNIFIED_EXAMPLE: &str = r#"{
+        "name": "unified_mini",
+        "policy": "dstack",
+        "horizon_ms": 900,
+        "seed": 5,
+        "cluster": {"gpus": ["V100", "V100"], "placement": "lb", "routing": "jsq"},
+        "adaptive": {"interval_ms": 250},
+        "lifecycle": {"n_models": 8, "alpha": 1.1, "total_rps": 250,
+                      "mem_budget_mib": 3072, "min_replicas": 1},
+        "unified": {"drift": true, "eviction_replan_threshold": 4},
+        "models": [
+            {"name": "mobilenet"},
+            {"name": "alexnet"},
+            {"name": "resnet50"}
+        ]
+    }"#;
+
+    #[test]
+    fn unified_block_parses_roundtrips_and_runs() {
+        let sc = Scenario::from_json(UNIFIED_EXAMPLE).unwrap();
+        let u = sc.unified.as_ref().expect("unified block parsed");
+        assert!(u.drift);
+        assert_eq!(u.eviction_replan_threshold, 4);
+        let text = sc.to_json().to_string_pretty();
+        let sc2 = Scenario::from_json(&text).unwrap();
+        let u2 = sc2.unified.as_ref().unwrap();
+        assert_eq!(u.drift, u2.drift);
+        assert_eq!(u.eviction_replan_threshold, u2.eviction_replan_threshold);
+        let rep = run_unified_scenario(&sc);
+        assert!(rep.adaptive.is_some(), "control-plane stats attached");
+        assert!(rep.lifecycle.is_some(), "memory-manager stats attached");
+        assert!(
+            rep.adaptive.as_ref().unwrap().cold_migration_ms.is_some(),
+            "unified path prices migrations"
+        );
+        assert_eq!(rep.throughput.len(), 8);
+        assert!(rep.total_throughput() > 0.0);
+    }
+
+    #[test]
+    fn unified_requires_lifecycle_and_defaults_apply() {
+        // No lifecycle block → the fleet is undefined → reject.
+        let no_lifecycle = r#"{
+            "cluster": {"gpus": ["V100"]}, "unified": {},
+            "models": [{"name": "alexnet", "rate": 1}]}"#;
+        assert!(Scenario::from_json(no_lifecycle).is_err());
+        // Empty unified block inherits defaults (drift on, threshold 8).
+        let minimal = r#"{
+            "cluster": {"gpus": ["V100"]},
+            "lifecycle": {"n_models": 4, "total_rps": 50},
+            "unified": {},
+            "models": [{"name": "alexnet"}]}"#;
+        let sc = Scenario::from_json(minimal).unwrap();
+        let u = sc.unified.as_ref().unwrap();
+        assert!(u.drift);
+        assert_eq!(
+            u.eviction_replan_threshold,
+            crate::unified::UnifiedCfg::default().eviction_replan_threshold
+        );
     }
 
     #[test]

@@ -298,8 +298,16 @@ pub struct AdaptiveStats {
     pub rebalances: u64,
     pub replicas_added: u64,
     pub replicas_removed: u64,
-    /// Total model-load time charged to migrations (ms).
+    /// Total model-load time charged to migrations (ms) at the legacy
+    /// flat `migration_cost_ms` — kept flat-cost exact so old configs
+    /// and the adaptive golden shape never move.
     pub migration_ms: f64,
+    /// Footprint-aware migration cost (ms): each replica add priced by
+    /// the `cold_load_ms` of the weights actually loaded at its target
+    /// (parameter sharing included). `None` on the legacy adaptive path
+    /// — only the unified control plane fills (and serializes) it, so
+    /// adaptive report bytes are unchanged.
+    pub cold_migration_ms: Option<f64>,
     /// Virtual times of applied (non-empty) rebalances (µs).
     pub rebalance_times_us: Vec<Us>,
     /// Final EWMA rate estimates (req/s per model).
@@ -318,13 +326,20 @@ impl AdaptiveStats {
     }
 
     /// Deterministic JSON form (embedded in `ClusterReport::to_json`).
+    /// `cold_migration_ms` is emitted only when set (unified runs), so
+    /// legacy adaptive shapes — and their goldens — stay byte-stable.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("replans", Json::from(self.replans)),
             ("rebalances", Json::from(self.rebalances)),
             ("replicas_added", Json::from(self.replicas_added)),
             ("replicas_removed", Json::from(self.replicas_removed)),
             ("migration_ms", Json::from(self.migration_ms)),
+        ];
+        if let Some(cold) = self.cold_migration_ms {
+            fields.push(("cold_migration_ms", Json::from(cold)));
+        }
+        fields.extend([
             (
                 "rebalance_times_us",
                 Json::Arr(self.rebalance_times_us.iter().map(|&t| Json::from(t)).collect()),
@@ -332,7 +347,8 @@ impl AdaptiveStats {
             ("est_rates", Json::arr_f64(&self.est_rates)),
             ("p99_before_ms", Json::arr_f64(&self.p99_before_ms)),
             ("p99_after_ms", Json::arr_f64(&self.p99_after_ms)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 }
 
@@ -1084,6 +1100,18 @@ mod tests {
             remove: Vec::new(),
         };
         apply_delta_to_knee_load(&[70], &delta);
+    }
+
+    #[test]
+    fn adaptive_stats_shape_is_legacy_unless_cold_priced() {
+        // The adaptive golden must never grow a key: cold_migration_ms
+        // appears only when the unified path fills it.
+        let mut s = AdaptiveStats::default();
+        assert!(!s.to_json().to_string_compact().contains("cold_migration_ms"));
+        s.cold_migration_ms = Some(123.5);
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"cold_migration_ms\""), "{j}");
+        assert!(j.contains("\"migration_ms\""), "legacy field must survive: {j}");
     }
 
     #[test]

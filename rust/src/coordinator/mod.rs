@@ -187,10 +187,12 @@ impl Coordinator {
                 .collect();
             let mut count = 0u64;
             loop {
+                // total_cmp: a NaN arrival time (degenerate rate input)
+                // sorts last instead of panicking the generator thread.
                 let (i, t) = next
                     .iter()
                     .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .min_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, t)| (i, *t))
                     .unwrap();
                 if t.is_infinite() || t > duration.as_secs_f64() {
@@ -324,28 +326,16 @@ impl Coordinator {
         // (on a backend with no batch amortization this is the smallest
         // batch; on accelerators it grows — learned, not assumed).
         let b_star = |i: usize| -> u32 {
-            *batches_of[i]
-                .iter()
-                .max_by(|&&a, &&b| {
-                    let ea = a as f64 / est.get(i, a);
-                    let eb = b as f64 / est.get(i, b);
-                    ea.partial_cmp(&eb).unwrap()
-                })
+            most_efficacious(batches_of[i].iter().copied(), |b| b as f64 / est.get(i, b))
                 .unwrap()
         };
         let best_batch = |i: usize| -> u32 {
             let queued = queues[i].len() as u32;
             // Most efficacious batch the queue can fill, else smallest.
-            batches_of[i]
-                .iter()
-                .filter(|&&b| b <= queued)
-                .max_by(|&&a, &&b| {
-                    let ea = a as f64 / est.get(i, a);
-                    let eb = b as f64 / est.get(i, b);
-                    ea.partial_cmp(&eb).unwrap()
-                })
-                .copied()
-                .unwrap_or(batches_of[i][0])
+            most_efficacious(batches_of[i].iter().copied().filter(|&b| b <= queued), |b| {
+                b as f64 / est.get(i, b)
+            })
+            .unwrap_or(batches_of[i][0])
         };
         match cfg.policy {
             ServePolicy::Fifo => {
@@ -394,6 +384,19 @@ impl Coordinator {
     }
 }
 
+/// Largest-efficacy batch among `batches` under the learned items/s
+/// score `eff` (= b / estimated latency). Comparison uses
+/// [`f64::total_cmp`]: a NaN score — a corrupt or zero latency estimate
+/// — ranks above every finite value instead of panicking the dispatcher
+/// mid-serve, so the batch still launches and the next EMA measurement
+/// washes the bad estimate out.
+fn most_efficacious<I>(batches: I, mut eff: impl FnMut(u32) -> f64) -> Option<u32>
+where
+    I: IntoIterator<Item = u32>,
+{
+    batches.into_iter().max_by(|&a, &b| eff(a).total_cmp(&eff(b)))
+}
+
 /// Deterministic synthetic payload (stands in for a decoded image or
 /// embedded sentence — the workload content does not affect scheduling).
 fn fill_payload(buf: &mut [f32], seed: u64) {
@@ -427,5 +430,32 @@ mod tests {
         est.update(0, 16, 20.0);
         let v = est.get(0, 16);
         assert!(v > 10.0 && v < 20.0, "{v}");
+    }
+
+    #[test]
+    fn batch_selection_survives_nan_estimate() {
+        // Regression: a single NaN latency estimate used to abort the
+        // whole serving loop through partial_cmp().unwrap() in the
+        // efficacy comparators. With total_cmp the selection completes;
+        // the poisoned batch may win one round but the dispatcher lives
+        // to re-measure it.
+        let mut est = LatEst { est: vec![Default::default()] };
+        est.update(0, 1, 4.0);
+        est.update(0, 8, f64::NAN); // corrupt measurement
+        est.update(0, 16, 12.0);
+        let batches = [1u32, 8, 16];
+        let picked = most_efficacious(batches.iter().copied(), |b| b as f64 / est.get(0, b));
+        assert!(picked.is_some(), "selection must not panic on NaN efficacy");
+        // The queue-filtered variant (best_batch path) must survive too.
+        let filtered =
+            most_efficacious(batches.iter().copied().filter(|&b| b <= 8), |b| {
+                b as f64 / est.get(0, b)
+            });
+        assert!(filtered.is_some());
+        // And over clean estimates the comparator still picks max items/s.
+        let clean = most_efficacious([1u32, 16].iter().copied(), |b| {
+            b as f64 / est.get(0, b)
+        });
+        assert_eq!(clean, Some(16), "16/12 items/ms beats 1/4");
     }
 }

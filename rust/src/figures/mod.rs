@@ -806,6 +806,86 @@ pub fn fig14() -> FigData {
     out
 }
 
+/// Fig. 15 (beyond the paper): the unified control plane vs the naive
+/// composition of its halves. A 24-model Zipf(1.1) fleet whose
+/// popularity ranking rotates mid-stream serves on 4×V100 under two
+/// memory budgets; "naive" runs the lifecycle manager alone on the
+/// frozen t=0 residency plan (no replanning — the drift detector and
+/// the memory manager never talk), while "unified" reprices replica
+/// moves by the cold-load footprint actually paid and replans on both
+/// rate drift and eviction pressure.
+pub fn fig15() -> FigData {
+    use crate::cluster::{GpuSched, PlacementPolicy, RoutingPolicy};
+    use crate::lifecycle::{serve_longtail, LifecycleCfg};
+    use crate::unified::{drifting_longtail_workload, run_unified, unified_gpus, UnifiedCfg};
+    let mut out = FigData::new(
+        "fig15",
+        "unified control plane vs naive composition under drift + memory pressure (4xV100)",
+        &[
+            "policy",
+            "budget_mib",
+            "goodput_rps",
+            "total_rps",
+            "cold_p99_ms",
+            "cold_starts",
+            "evictions",
+            "replans",
+            "cold_mig_ms",
+            "viol_per_s",
+        ],
+    );
+    let horizon_ms = 6_000.0;
+    let seed = 42;
+    let (profiles, rates, reqs) = drifting_longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = unified_gpus(4);
+    let mut push = |label: &str, budget: u64, rep: &crate::cluster::ClusterReport| {
+        let stats = rep.lifecycle.as_ref().expect("lifecycle stats");
+        out.push(vec![
+            label.to_string(),
+            budget.to_string(),
+            f(stats.goodput_rps),
+            f(rep.total_throughput()),
+            f(stats.cold_start_p99_ms),
+            stats.cold_starts.to_string(),
+            stats.evictions.to_string(),
+            rep.adaptive.as_ref().map_or(0, |a| a.replans).to_string(),
+            f(rep.adaptive.as_ref().and_then(|a| a.cold_migration_ms).unwrap_or(0.0)),
+            f(rep.violations_per_sec.iter().sum::<f64>()),
+        ]);
+    };
+    for budget in [4_096u64, 8_192] {
+        let lcfg = LifecycleCfg { mem_budget_mib: budget, min_replicas: 1, ..Default::default() };
+        let naive = serve_longtail(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &lcfg,
+            reqs.clone(),
+            horizon_ms,
+            seed,
+        );
+        push("naive (frozen t=0 plan)", budget, &naive);
+        let ucfg = UnifiedCfg { lifecycle: lcfg, ..Default::default() };
+        let unified = run_unified(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &ucfg,
+            reqs.clone(),
+            horizon_ms,
+            seed,
+        );
+        push("unified", budget, &unified);
+    }
+    out
+}
+
 /// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
 pub fn generate(which: &str) -> Vec<FigData> {
     match which {
@@ -826,6 +906,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
         "12" => vec![fig12()],
         "13" | "adaptive" => vec![fig13()],
         "14" | "lifecycle" => vec![fig14()],
+        "15" | "unified" => vec![fig15()],
         "tables" => vec![table1(), table2(), table3(), table6()],
         "ablation" => vec![ablation()],
         "all" => {
@@ -846,6 +927,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
                 fig12(),
                 fig13(),
                 fig14(),
+                fig15(),
             ];
             v.extend([table1(), table2(), table3(), table6()]);
             v

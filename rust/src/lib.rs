@@ -35,5 +35,6 @@ pub mod profile;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod unified;
 pub mod util;
 pub mod workload;

@@ -248,6 +248,69 @@ pub fn longtail_workload_from(
     (profiles, rates, reqs)
 }
 
+/// Victim→replica reachability closure over a static hosting table:
+/// for each model, the full set of engines an arrival of that model can
+/// read or write — its own replicas, plus (transitively) the replicas
+/// of every model an eviction cascade starting there can drain.
+///
+/// A cold start on GPU `g` may evict any model hosted on `g`; the
+/// victim's queue is then re-dispatched against the *victim's* replica
+/// set, which may trigger further evictions there. The closure of that
+/// relation is exactly the connected component of the bipartite
+/// model↔GPU hosting graph, so every model's candidate set is its
+/// component's (sorted) GPU list. Because the lifecycle hosting table
+/// is fixed at plan time, the index is computed once up front — this is
+/// what lets the sparse execution core sync a component instead of the
+/// whole cluster (the old "conservatively all engines" answer forced it
+/// back to the epoch loop).
+///
+/// Models hosted nowhere get an empty set: their arrivals reject
+/// without synchronizing any engine.
+pub fn reachability_candidates(hosted: &[Vec<usize>], n_models: usize) -> Vec<Vec<usize>> {
+    let n_gpus = hosted.len();
+    let mut gpus_of: Vec<Vec<usize>> = vec![Vec::new(); n_models];
+    for (g, ms) in hosted.iter().enumerate() {
+        for &m in ms {
+            gpus_of[m].push(g);
+        }
+    }
+    let mut comp_of_gpu = vec![usize::MAX; n_gpus];
+    let mut seen_model = vec![false; n_models];
+    let mut components: Vec<Vec<usize>> = Vec::new();
+    for g0 in 0..n_gpus {
+        if comp_of_gpu[g0] != usize::MAX || hosted[g0].is_empty() {
+            continue;
+        }
+        let c = components.len();
+        let mut members = Vec::new();
+        let mut stack = vec![g0];
+        comp_of_gpu[g0] = c;
+        while let Some(g) = stack.pop() {
+            members.push(g);
+            for &m in &hosted[g] {
+                if seen_model[m] {
+                    continue;
+                }
+                seen_model[m] = true;
+                for &g2 in &gpus_of[m] {
+                    if comp_of_gpu[g2] == usize::MAX {
+                        comp_of_gpu[g2] = c;
+                        stack.push(g2);
+                    }
+                }
+            }
+        }
+        members.sort_unstable();
+        components.push(members);
+    }
+    (0..n_models)
+        .map(|m| match gpus_of[m].first() {
+            Some(&g) => components[comp_of_gpu[g]].clone(),
+            None => Vec::new(),
+        })
+        .collect()
+}
+
 /// The lifecycle driver's barrier work on the cluster execution core
 /// ([`crate::cluster::exec`]): mature weight loads before arrivals,
 /// dispatch arrivals (with warmness-aware routing, cold-start parking
@@ -255,12 +318,14 @@ pub fn longtail_workload_from(
 struct LifecycleDriver<'a> {
     profiles: &'a [ModelProfile],
     plan: &'a ResidencyPlan,
-    /// Every engine, 0..n_gpus: the conservative candidate set. An
-    /// eviction cascade triggered by one arrival can drain a victim on
-    /// the routed GPU and re-dispatch its queue to *any* other GPU, so
-    /// no smaller set is safe — lifecycle arrivals stay global barriers
-    /// (sparse mode degrades gracefully to epoch behavior here).
-    all_gpus: Vec<usize>,
+    /// Per-model victim→replica reachability closure
+    /// ([`reachability_candidates`]): the bounded candidate sets that
+    /// keep lifecycle runs on the sparse path instead of degrading to
+    /// the epoch loop.
+    cand: Vec<Vec<usize>>,
+    /// Routing never reads backlogs (round-robin / static splits) —
+    /// precondition for eliding barriers over fully-warm spans.
+    free_routing: bool,
     cfg: &'a LifecycleCfg,
     sched: GpuSched,
     pinned: Vec<bool>,
@@ -397,13 +462,69 @@ impl LifecycleDriver<'_> {
     }
 }
 
+impl LifecycleDriver<'_> {
+    /// True when no arrival can trigger a cold start right now: every
+    /// replica of every admitted model is warm or already mid-load.
+    /// Warm hits only touch driver state + inject; parks only touch
+    /// driver state; and nothing inside a span can turn a warm replica
+    /// cold (evictions need cold starts, scale-to-zero and load
+    /// maturities are driver events that end the span) — so under
+    /// backlog-free routing a whole such span is elidable.
+    fn warm_span_ready(&self) -> bool {
+        self.plan.placement.replicas.iter().enumerate().all(|(m, reps)| {
+            reps.iter().all(|r| {
+                self.stores[r.gpu].is_warm(m) || self.loading.contains_key(&(r.gpu, m))
+            })
+        })
+    }
+}
+
 impl EpochDriver for LifecycleDriver<'_> {
     fn n_models(&self) -> usize {
         self.rejected.len()
     }
 
-    fn candidates_of(&self, _model: usize) -> &[usize] {
-        &self.all_gpus
+    fn candidates_of(&self, model: usize) -> &[usize] {
+        &self.cand[model]
+    }
+
+    fn elides_barriers(&self) -> bool {
+        self.free_routing && self.warm_span_ready()
+    }
+
+    /// Barrier-free routing inside a fully-warm span: reproduces
+    /// [`Self::dispatch`]'s decision and driver-state mutations (RR
+    /// cursor, store touch, warm/park counters) without touching any
+    /// engine. Cold starts cannot occur here — [`Self::elides_barriers`]
+    /// only admits spans where every replica is warm or mid-load.
+    fn route_free(&mut self, t: Us, req: &Request) -> Option<(usize, usize)> {
+        let model = req.model;
+        let reps: &[Replica] = &self.plan.placement.replicas[model];
+        if reps.is_empty() {
+            self.rejected[model] += 1;
+            return None;
+        }
+        // Backlog-free policies never call the cost closure.
+        let pick = self.router.route(model, reps, |_| 0);
+        let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
+        for i in order {
+            let r = &reps[i];
+            let g = r.gpu;
+            if self.stores[g].is_warm(model) {
+                self.stores[g].touch(t, model);
+                self.stats.warm_hits += 1;
+                return Some((g, r.local));
+            }
+            if let Some(&ready) = self.loading.get(&(g, model)) {
+                self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+                self.held.entry((g, model)).or_default().push(req.clone());
+                self.stats.cold_delayed += 1;
+                return None;
+            }
+            debug_assert!(false, "cold start inside an elided warm span");
+        }
+        self.rejected[model] += 1;
+        None
     }
 
     fn next_event(&self) -> Option<Us> {
@@ -608,7 +729,8 @@ pub fn run_lifecycle_with(
     let mut driver = LifecycleDriver {
         profiles,
         plan,
-        all_gpus: (0..n_gpus).collect(),
+        cand: reachability_candidates(&plan.placement.hosted, n_models),
+        free_routing: !routing.reads_backlogs(),
         cfg,
         sched,
         pinned,
@@ -930,6 +1052,100 @@ mod tests {
         assert!(LifecycleCfg { mem_budget_mib: 100, headroom_mib: 100, ..Default::default() }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn reachability_candidates_follow_cohosting_components() {
+        // g0 hosts {m0, m1}, g1 hosts {m1}, g2 hosts {m2}; m3 nowhere.
+        // An arrival of m0 can evict m1 on g0, whose queue re-routes to
+        // g1 — so m0's candidate set must include g1 despite m0 having
+        // no replica there. m2 is isolated; m3 rejects engine-free.
+        let hosted = vec![vec![0, 1], vec![1], vec![2]];
+        let cand = reachability_candidates(&hosted, 4);
+        assert_eq!(cand[0], vec![0, 1]);
+        assert_eq!(cand[1], vec![0, 1]);
+        assert_eq!(cand[2], vec![2]);
+        assert!(cand[3].is_empty());
+    }
+
+    #[test]
+    fn reachability_closure_is_transitive() {
+        // Chain g0{0,1} g1{1,2} g2{2,3}: a cascade starting at m0 can
+        // reach g2 through two eviction hops, so the whole chain is one
+        // component; g3{4} stays separate (bounded — NOT all engines).
+        let hosted = vec![vec![0, 1], vec![1, 2], vec![2, 3], vec![4]];
+        let cand = reachability_candidates(&hosted, 5);
+        for m in 0..4 {
+            assert_eq!(cand[m], vec![0, 1, 2], "model {m}");
+        }
+        assert_eq!(cand[4], vec![3]);
+    }
+
+    #[test]
+    fn sparse_candidates_contain_eviction_cascades() {
+        // Memory-pressured sparse run: the exec core's debug asserts
+        // check every engine a cascade touches sits inside the arriving
+        // model's candidate set; byte-identity with epoch mode pins the
+        // behavior (the old all-engines answer silently fell back to
+        // the epoch loop, making this vacuous).
+        use crate::cluster::{ExecMode, Parallelism};
+        let cfg = LifecycleCfg { mem_budget_mib: 2_048, ..Default::default() };
+        let (profiles, rates, reqs) = longtail_workload(10, 1.1, 400.0, 1_500.0, 3);
+        let run = |mode| {
+            serve_longtail_with(
+                &profiles,
+                &rates,
+                &longtail_gpus(),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &cfg,
+                reqs.clone(),
+                1_500.0,
+                3,
+                ExecOpts { threads: Parallelism::Threads(1), mode },
+            )
+        };
+        let sparse = run(ExecMode::Sparse);
+        let stats = sparse.lifecycle.as_ref().unwrap();
+        assert!(stats.evictions > 0, "pressure scenario must actually cascade");
+        let epoch = run(ExecMode::Epoch);
+        assert_eq!(
+            sparse.to_json().to_string_pretty(),
+            epoch.to_json().to_string_pretty(),
+            "bounded candidate sets changed lifecycle results"
+        );
+    }
+
+    #[test]
+    fn warm_rr_spans_elide_barriers() {
+        // Ample memory + round-robin routing: once the fleet is warm no
+        // arrival can cold-start, so the driver's warm-span elision must
+        // engage on the sparse path (this is the lifecycle analogue of
+        // the static RR elision test in parallel_exec.rs).
+        use crate::cluster::{ExecMode, Parallelism};
+        let cfg = LifecycleCfg {
+            mem_budget_mib: 0,
+            idle_timeout_ms: 0.0,
+            ..Default::default()
+        };
+        let (profiles, rates, reqs) = longtail_workload(8, 1.1, 300.0, 1_500.0, 9);
+        let rep = serve_longtail_with(
+            &profiles,
+            &rates,
+            &longtail_gpus(),
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::RoundRobin,
+            GpuSched::Dstack,
+            &cfg,
+            reqs,
+            1_500.0,
+            9,
+            ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+        );
+        let exec = rep.exec.expect("exec stats attached");
+        assert!(exec.barriers_elided > 0, "warm RR span elided nothing: {exec:?}");
+        assert!(exec.arrivals_batched > 0);
     }
 
     #[test]

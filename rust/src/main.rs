@@ -3,14 +3,15 @@
 //! figure of the paper.
 //!
 //! Subcommands:
-//!   figures  --fig <2|3|4|...|14|all> [--out results]
+//!   figures  --fig <2|3|4|...|15|all> [--out results]
 //!   tables   --table <1|2|3|6|all>    [--out results]
 //!   simulate --config <scenario.json> [--threads N|auto]
 //!            [--exec-mode sparse|epoch] [--verbose]   (scenarios
 //!            with a "cluster" block run on the placement/routing
 //!            cluster engine; adding an "adaptive" block runs the
 //!            adaptive control plane; a "lifecycle" block runs the
-//!            long-tail memory manager)
+//!            long-tail memory manager; a "unified" block runs the
+//!            merged cold-start-aware control plane)
 //!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
 //!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
 //!            [--horizon ms] [--seed N] [--threads N|auto]   — Fig. 12
@@ -26,6 +27,14 @@
 //!            under the memory manager; without --config, runs the
 //!            canonical 24-model scenario and compares warmness-aware
 //!            vs warm-oblivious routing
+//!   unified  [--config <scenario.json>] [--horizon ms] [--seed N]
+//!            [--gpus N] [--eviction lru|lfu|cost] [--mem-budget MiB]
+//!            [--pressure-threshold N] [--no-drift] [--threads N|auto]
+//!            — drift + memory-pressure stress under the merged
+//!            cold-start-aware control plane; without --config, runs
+//!            the canonical 24-model rotating-Zipf scenario on N V100s
+//!            (default 4, sweepable to 64+) and compares the unified
+//!            driver against the naive lifecycle-only composition
 //!   optimize --model <name> [--slo ms]
 //!   profile  --model <name> [--batch N]
 //!   serve    [--seconds N] [--rate-scale X] [--policy dstack|fifo]
@@ -55,13 +64,14 @@ fn main() -> anyhow::Result<()> {
         Some("cluster") => cluster_cmd(&args),
         Some("adaptive") => adaptive_cmd(&args),
         Some("lifecycle") => lifecycle_cmd(&args),
+        Some("unified") => unified_cmd(&args),
         Some("optimize") => optimize(&args),
         Some("profile") => profile_cmd(&args),
         Some("serve") => serve(&args),
         Some("selfcheck") => selfcheck(),
         _ => {
             eprintln!(
-                "usage: dstack <figures|tables|simulate|cluster|adaptive|lifecycle|optimize|profile|serve|selfcheck> [opts]"
+                "usage: dstack <figures|tables|simulate|cluster|adaptive|lifecycle|unified|optimize|profile|serve|selfcheck> [opts]"
             );
             std::process::exit(2);
         }
@@ -139,6 +149,14 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     overlay_exec_args(args, &mut sc)?;
     if sc.cluster.is_some() {
+        if sc.unified.is_some() {
+            let rep = dstack::config::run_unified_scenario(&sc);
+            let names = lifecycle_fleet_names(&sc);
+            println!("scenario '{}' unified policy={}", sc.name, rep.policy);
+            print_cluster_report(&names, &rep);
+            print_exec_stats(args, &rep);
+            return Ok(());
+        }
         if sc.lifecycle.is_some() {
             let rep = dstack::config::run_lifecycle_scenario(&sc);
             let names = lifecycle_fleet_names(&sc);
@@ -254,13 +272,18 @@ fn print_cluster_report(names: &[String], rep: &dstack::cluster::ClusterReport) 
         );
     }
     if let Some(a) = &rep.adaptive {
+        let cold = a
+            .cold_migration_ms
+            .map(|c| format!(", {c:.0} ms cold-priced"))
+            .unwrap_or_default();
         println!(
-            "control plane: {} replans, {} rebalances (+{} / -{} replicas, {:.0} ms migration) at {:?} ms",
+            "control plane: {} replans, {} rebalances (+{} / -{} replicas, {:.0} ms migration{}) at {:?} ms",
             a.replans,
             a.rebalances,
             a.replicas_added,
             a.replicas_removed,
             a.migration_ms,
+            cold,
             a.rebalance_times_us.iter().map(|t| t / 1_000).collect::<Vec<_>>()
         );
         println!(
@@ -471,6 +494,130 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
         gw / gc.max(1e-9),
         warm.violations_per_sec.iter().sum::<f64>(),
         cold.violations_per_sec.iter().sum::<f64>()
+    );
+    Ok(())
+}
+
+fn unified_cmd(args: &Args) -> anyhow::Result<()> {
+    use dstack::cluster::{GpuSched, PlacementPolicy, RoutingPolicy};
+    use dstack::lifecycle::{serve_longtail_with, EvictionPolicy, LifecycleCfg};
+    use dstack::unified::{
+        drifting_longtail_workload, run_unified_with, unified_gpus, UnifiedCfg,
+    };
+    if let Some(path) = args.get("config") {
+        let mut sc = dstack::config::Scenario::from_file(Path::new(path))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if sc.cluster.is_none() || sc.lifecycle.is_none() {
+            anyhow::bail!("unified needs a scenario with 'cluster' and 'lifecycle' blocks");
+        }
+        sc.horizon_ms = args.get_f64("horizon", sc.horizon_ms);
+        sc.seed = args.get_u64("seed", sc.seed);
+        overlay_exec_args(args, &mut sc)?;
+        {
+            let lc = sc.lifecycle.as_mut().expect("checked above");
+            if let Some(e) = args.get("eviction") {
+                lc.cfg.eviction = EvictionPolicy::parse(e).map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            lc.cfg.mem_budget_mib = args.get_u64("mem-budget", lc.cfg.mem_budget_mib);
+            lc.cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        // A missing "unified" block defaults on; flags override it.
+        let mut un = sc.unified.clone().unwrap_or(dstack::config::UnifiedScenario {
+            drift: true,
+            eviction_replan_threshold: UnifiedCfg::default().eviction_replan_threshold,
+        });
+        un.eviction_replan_threshold =
+            args.get_u64("pressure-threshold", un.eviction_replan_threshold);
+        if args.has_flag("no-drift") {
+            un.drift = false;
+        }
+        sc.unified = Some(un);
+        let names = lifecycle_fleet_names(&sc);
+        let rep = dstack::config::run_unified_scenario(&sc);
+        println!("scenario '{}' unified policy={}", sc.name, rep.policy);
+        print_cluster_report(&names, &rep);
+        print_exec_stats(args, &rep);
+        return Ok(());
+    }
+    // Built-in canonical stress: the 24-model Zipf(1.1) long-tail whose
+    // popularity ranking rotates at the midpoint, on N V100s whose
+    // resident budgets force eviction pressure — the unified driver
+    // (drift + pressure replans, residency-priced) against the naive
+    // composition (memory manager under the frozen t = 0 plan).
+    let horizon_ms = args.get_f64("horizon", 8_000.0);
+    let seed = args.get_u64("seed", 42);
+    let n_gpus = args.get_u64("gpus", 4) as usize;
+    if n_gpus == 0 {
+        anyhow::bail!("--gpus must be >= 1");
+    }
+    let opts = exec_opts_from_args(args, dstack::cluster::ExecOpts::default())?;
+    let mut lcfg = LifecycleCfg { mem_budget_mib: 4_096, min_replicas: 1, ..Default::default() };
+    if let Some(e) = args.get("eviction") {
+        lcfg.eviction = EvictionPolicy::parse(e).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    lcfg.mem_budget_mib = args.get_u64("mem-budget", lcfg.mem_budget_mib);
+    lcfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = UnifiedCfg {
+        lifecycle: lcfg.clone(),
+        eviction_replan_threshold: args.get_u64("pressure-threshold", 8),
+        ..Default::default()
+    };
+
+    let (profiles, rates, reqs) = drifting_longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = unified_gpus(n_gpus);
+    let names: Vec<String> = profiles.iter().map(|p| p.name.clone()).collect();
+    let total_mem: u64 = profiles.iter().map(|p| p.mem_mib).sum();
+    println!(
+        "24-model rotating Zipf(1.1) on {n_gpus}xV100: {} MiB of weights vs {} MiB resident \
+         budget, 600 req/s offered, popularity rotates at {:.0} ms, horizon {horizon_ms:.0} ms",
+        total_mem,
+        n_gpus as u64 * cfg.lifecycle.mem_budget_mib,
+        horizon_ms / 2.0
+    );
+
+    let naive = serve_longtail_with(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &lcfg,
+        reqs.clone(),
+        horizon_ms,
+        seed,
+        opts,
+    );
+    println!("\n== naive composition: memory manager under the frozen t=0 plan ==");
+    print_cluster_report(&names, &naive);
+
+    let uni = run_unified_with(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        reqs,
+        horizon_ms,
+        seed,
+        opts,
+    );
+    println!("\n== unified control plane: residency-priced drift + pressure replans ==");
+    print_cluster_report(&names, &uni);
+    print_exec_stats(args, &uni);
+
+    let (gu, gn) = (
+        uni.lifecycle.as_ref().map_or(0.0, |l| l.goodput_rps),
+        naive.lifecycle.as_ref().map_or(0.0, |l| l.goodput_rps),
+    );
+    println!(
+        "\nunified vs naive composition: goodput {gu:.0} vs {gn:.0} req/s ({:.2}x), \
+         viol/s {:.0} vs {:.0}",
+        gu / gn.max(1e-9),
+        uni.violations_per_sec.iter().sum::<f64>(),
+        naive.violations_per_sec.iter().sum::<f64>()
     );
     Ok(())
 }

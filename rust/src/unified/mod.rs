@@ -1,0 +1,1131 @@
+//! Unified cold-start-aware control plane: drift rebalancing and
+//! lifecycle residency as one driver.
+//!
+//! [`crate::controlplane`] and [`crate::lifecycle`] each run alone: the
+//! rebalancer migrates replicas with a flat `migration_cost_ms` and no
+//! idea what is warm, while the memory manager faults weights in and out
+//! under a placement that never moves. Run against the same fleet those
+//! blind spots compound — a replan can move a model *off* the only GPU
+//! holding its weights, and eviction thrash never feeds back into the
+//! placement at all. D-STACK's premise is that these decisions must be
+//! co-designed; DARIS (PAPERS.md) shows oversubscribed spatio-temporal
+//! schedulers only hold deadlines when migration/load costs are modeled
+//! explicitly. This module is that co-design, one
+//! [`EpochDriver`] composing both subsystems:
+//!
+//! - **Footprint-priced migrations** — each replica added by a replan is
+//!   priced by the [`crate::gpu::ReconfigModel::cold_load_ms`] of the
+//!   weights actually loaded at its target (parameter sharing included),
+//!   accumulated in `AdaptiveStats::cold_migration_ms`; the legacy flat
+//!   `migration_ms` stays exact for comparison. An added replica is not
+//!   a pending activation with a fixed delay (the adaptive path's model)
+//!   but a *cold engine slot*: its first arrival faults the weights in
+//!   through the lifecycle machinery, so the modeled price and the paid
+//!   price come from the same cost model.
+//! - **Residency-aware replanning** — the replan target is solved by
+//!   [`crate::cluster::placement::plan_residency_biased`] with
+//!   `is_warm` wired to the live per-GPU [`ModelStore`]s: warm GPUs win
+//!   the packing scan, so a migration lands where the weights already
+//!   sit whenever the knee budget allows (cost zero instead of a cold
+//!   load).
+//! - **Eviction-pressure replans** — the control tick fires not only on
+//!   rate drift but also when the stores evicted at least
+//!   `eviction_replan_threshold` residents since the previous tick:
+//!   thrash means the assignment no longer matches the popularity
+//!   distribution, drift detector or no.
+//!
+//! The driver keeps the lifecycle path's sparse-execution contract:
+//! candidate sets are the victim→replica reachability closure
+//! ([`crate::lifecycle::reachability_candidates`]) over the *current*
+//! replica hosting (recomputed only at tick barriers, where the sparse
+//! core rebuilds its index), and fully-warm spans under backlog-free
+//! routing elide stepping barriers exactly as in the standalone
+//! lifecycle driver — see DESIGN.md §4.9 for why replan surgery at
+//! driver-event barriers preserves the determinism argument.
+//!
+//! The canonical stress scenario is [`drifting_longtail_workload`]: a
+//! long-tail Zipf fleet whose popularity ranking rotates at the horizon
+//! midpoint, served under memory pressure — rate drift *and* eviction
+//! pressure at once (`figures::fig15`, `dstack unified`,
+//! `rust/configs/cluster_unified_drift.json`), sweepable to 64+ GPUs via
+//! [`unified_gpus`].
+
+use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine, Touched};
+use crate::cluster::placement::plan_residency_biased;
+use crate::cluster::routing::BacklogCache;
+use crate::cluster::{
+    plan_residency, ClusterReport, ExecOpts, GpuModelShare, GpuReport, GpuSched,
+    PlacementPolicy, Replica, Router, RoutingPolicy,
+};
+use crate::controlplane::{
+    placement_delta, AdaptiveCfg, AdaptiveStats, DriftDetector, RateEstimator,
+};
+use crate::gpu::{ms_to_us, us_to_ms, Us};
+use crate::lifecycle::{reachability_candidates, LifecycleCfg, LifecycleStats, ModelStore};
+use crate::metrics::RunReport;
+use crate::profile::{GpuSpec, ModelProfile};
+use crate::sim::{ModelEntry, Sim, SimConfig};
+use crate::util::stats::percentile;
+use crate::workload::Request;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Unified control-plane configuration (the scenario `"unified"` block —
+/// see `docs/CONFIG.md`): the adaptive and lifecycle knobs plus the
+/// coupling parameter between them.
+#[derive(Debug, Clone)]
+pub struct UnifiedCfg {
+    /// Estimation / drift-detection / tick cadence knobs. The flat
+    /// `migration_cost_ms` is still charged into the legacy
+    /// `migration_ms` stat for comparison, but no longer gates when an
+    /// added replica becomes routable — cold loads do.
+    pub adaptive: AdaptiveCfg,
+    /// Memory budgets, eviction policy, scale-to-zero and warm routing.
+    pub lifecycle: LifecycleCfg,
+    /// Evictions across the cluster within one control interval at
+    /// which the tick replans even without rate drift (the memory
+    /// manager telling the placement it no longer fits). `0` disables
+    /// the pressure trigger.
+    pub eviction_replan_threshold: u64,
+}
+
+impl Default for UnifiedCfg {
+    fn default() -> Self {
+        UnifiedCfg {
+            adaptive: AdaptiveCfg::default(),
+            lifecycle: LifecycleCfg::default(),
+            eviction_replan_threshold: 8,
+        }
+    }
+}
+
+impl UnifiedCfg {
+    /// Validate both sub-configs; returns a message naming the offending
+    /// field.
+    pub fn validate(&self) -> Result<(), String> {
+        self.adaptive.validate()?;
+        self.lifecycle.validate()
+    }
+}
+
+/// The unified driver: lifecycle residency machinery (stores, cold
+/// starts, eviction cascades, scale-to-zero) under a *mutable* replica
+/// assignment that the control tick re-solves residency-aware.
+struct UnifiedDriver<'a> {
+    profiles: &'a [ModelProfile],
+    gpus: &'a [GpuSpec],
+    placement: PlacementPolicy,
+    sched: GpuSched,
+    cfg: &'a UnifiedCfg,
+    horizon_ms: f64,
+    horizon: Us,
+    interval: Us,
+    window_s: f64,
+    /// Per-GPU resident-memory budgets the plans are solved for (MiB).
+    budgets: Vec<u64>,
+    min_replicas: usize,
+    pinned: Vec<bool>,
+    /// model → live replicas (engine slots always assigned; warmth is
+    /// the store's business). Mutated only at tick barriers.
+    replicas: Vec<Vec<Replica>>,
+    /// gpu → global model → engine-local slot (`None` = never hosted).
+    local_of: Vec<Vec<Option<usize>>>,
+    /// gpu → engine-local slot → global model.
+    local_map: Vec<Vec<usize>>,
+    /// gpu → Σ assigned knee% (may exceed 100: temporal sharing).
+    knee_load: Vec<u32>,
+    shed_rps: Vec<f64>,
+    stores: Vec<ModelStore>,
+    /// Victim→replica reachability closure over the current hosting —
+    /// recomputed after every rebalance (a tick barrier, where the
+    /// sparse core rebuilds its own index).
+    cand: Vec<Vec<usize>>,
+    /// Routing never reads backlogs — precondition for warm-span
+    /// barrier elision.
+    free_routing: bool,
+    router: Router,
+    cache: BacklogCache,
+    rejected: Vec<u64>,
+    /// (gpu, model) → virtual time its in-flight load completes.
+    loading: BTreeMap<(usize, usize), Us>,
+    /// (gpu, model) → requests parked until the load completes.
+    held: BTreeMap<(usize, usize), Vec<Request>>,
+    cold_delays_ms: Vec<f64>,
+    lstats: LifecycleStats,
+    astats: AdaptiveStats,
+    idle_timeout: Option<Us>,
+    estimator: RateEstimator,
+    detector: DriftDetector,
+    planned_rates: Vec<f64>,
+    window_counts: Vec<u64>,
+    next_tick: Us,
+    /// Cluster-wide eviction count at the previous tick (pressure
+    /// trigger baseline).
+    evictions_at_tick: u64,
+    /// Reusable cascade queue (always drained empty between uses).
+    scratch: VecDeque<(usize, Request)>,
+}
+
+impl UnifiedDriver<'_> {
+    /// One request dispatch with warmness-aware routing, cold-start
+    /// parking and eviction cascades — the lifecycle dispatch, reading
+    /// the driver's *live* replica table instead of a frozen plan.
+    fn dispatch(
+        &mut self,
+        t: Us,
+        model: usize,
+        req: Request,
+        work: &mut VecDeque<(usize, Request)>,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        let reps: &[Replica] = &self.replicas[model];
+        if reps.is_empty() {
+            self.rejected[model] += 1;
+            return;
+        }
+        let cache = &mut self.cache;
+        let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
+        let (lcfg, profiles) = (&self.cfg.lifecycle, self.profiles);
+        let pick = self.router.route(model, reps, |rep| {
+            let backlog = cache.backlog(engines, rep);
+            let parked = held.get(&(rep.gpu, model)).map_or(0, |v| v.len());
+            let base = backlog.saturating_add(parked);
+            if !lcfg.warm_routing || stores[rep.gpu].is_warm(model) {
+                return base;
+            }
+            let remaining_ms = match loading.get(&(rep.gpu, model)) {
+                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                None => lcfg
+                    .reconfig
+                    .cold_load_ms(profiles[model].load_ms, stores[rep.gpu].n_warm()),
+            };
+            base.saturating_add((remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize)
+        });
+        let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
+        for i in order {
+            let r = &self.replicas[model][i];
+            let (g, local) = (r.gpu, r.local);
+            if self.stores[g].is_warm(model) {
+                self.stores[g].touch(t, model);
+                let mut q = req;
+                q.model = local;
+                engines[g].as_mut().expect("warm replica on idle GPU").sim.inject(q);
+                self.cache.note_inject(g, local);
+                touched.mark(g);
+                self.lstats.warm_hits += 1;
+                return;
+            }
+            if let Some(&ready) = self.loading.get(&(g, model)) {
+                self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+                self.held.entry((g, model)).or_default().push(req);
+                self.lstats.cold_delayed += 1;
+                return;
+            }
+            let Some(victims) = self.stores[g].begin_load(
+                t,
+                model,
+                self.profiles[model].mem_mib,
+                self.profiles[model].load_ms,
+                self.pinned[model],
+            ) else {
+                continue; // crowded out here — try the next replica
+            };
+            let load_ms = self
+                .cfg
+                .lifecycle
+                .reconfig
+                .cold_load_ms(self.profiles[model].load_ms, self.stores[g].n_warm());
+            if !victims.is_empty() {
+                let engine = engines[g].as_mut().expect("cold replica on idle GPU");
+                for v in victims {
+                    let vl = self.local_of[g][v].expect("evicting unassigned model");
+                    for dr in engine.sim.deactivate_model(vl) {
+                        work.push_back((v, dr));
+                    }
+                    self.cache.invalidate(g, vl);
+                }
+                engine.rebuild_policy(self.sched);
+                touched.mark(g);
+            }
+            let ready = t + ms_to_us(load_ms).max(1);
+            self.loading.insert((g, model), ready);
+            self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+            self.held.entry((g, model)).or_default().push(req);
+            self.lstats.cold_delayed += 1;
+            self.lstats.load_ms_total += load_ms;
+            return;
+        }
+        self.rejected[model] += 1;
+    }
+
+    /// True when no arrival can trigger a cold start right now (see the
+    /// lifecycle driver's identical argument — warmth is monotone
+    /// between driver events, and control ticks *are* driver events, so
+    /// replan surgery can never land inside an elided span).
+    fn warm_span_ready(&self) -> bool {
+        self.replicas.iter().enumerate().all(|(m, reps)| {
+            reps.iter().all(|r| {
+                self.stores[r.gpu].is_warm(m) || self.loading.contains_key(&(r.gpu, m))
+            })
+        })
+    }
+
+    /// Scale-to-zero sweep (identical to the lifecycle driver's).
+    fn idle_sweep(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        let Some(to) = self.idle_timeout else { return };
+        for g in 0..self.stores.len() {
+            for m in self.stores[g].idle_candidates(t, to) {
+                let local = self.local_of[g][m].expect("resident without a slot");
+                let engine = engines[g].as_mut().expect("resident on idle GPU");
+                if engine.sim.backlog_items(local) == 0 {
+                    let released = self.stores[g].release(m);
+                    debug_assert!(released, "idle candidate refused release");
+                    let drained = engine.sim.deactivate_model(local);
+                    debug_assert!(drained.is_empty(), "empty backlog drained requests");
+                    engine.rebuild_policy(self.sched);
+                    self.lstats.scale_to_zero += 1;
+                    touched.mark(g);
+                } else {
+                    self.stores[g].touch(t, m);
+                }
+            }
+        }
+    }
+
+    /// Control tick: estimate, detect (drift OR eviction pressure),
+    /// re-solve residency-aware, apply the delta with footprint pricing.
+    fn control_tick(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        self.next_tick += self.interval;
+        self.estimator.observe(&self.window_counts, self.window_s);
+        self.window_counts.fill(0);
+        let drift = self.detector.tick(self.estimator.rates(), &self.planned_rates);
+        let ev_now: u64 = self.stores.iter().map(|s| s.evictions).sum();
+        let pressure = self.cfg.eviction_replan_threshold > 0
+            && ev_now - self.evictions_at_tick >= self.cfg.eviction_replan_threshold;
+        self.evictions_at_tick = ev_now;
+        if !(drift || pressure) {
+            return;
+        }
+        self.astats.replans += 1;
+        self.planned_rates = self.estimator.rates().to_vec();
+        let stores = &self.stores;
+        let target = plan_residency_biased(
+            self.profiles,
+            &self.planned_rates,
+            self.gpus,
+            self.placement,
+            &self.budgets,
+            self.min_replicas,
+            |g, m| stores[g].is_warm(m),
+        );
+        let current: Vec<Vec<(usize, u32)>> = self
+            .replicas
+            .iter()
+            .map(|reps| reps.iter().map(|r| (r.gpu, r.pct)).collect())
+            .collect();
+        let mut delta = placement_delta(&current, &target.placement);
+        // Deferred removals: a mid-load replica holds store state the
+        // manager cannot release (the upload is in flight, requests are
+        // parked behind it) and pinned models keep their residency by
+        // contract — both stay until a later tick finds them removable.
+        delta
+            .remove
+            .retain(|&(m, g, _)| !self.pinned[m] && !self.loading.contains_key(&(g, m)));
+        if !delta.is_empty() {
+            // Tear down removed replicas: release residency, drain and
+            // re-dispatch their queues, free the assigned knee budget.
+            let mut drained: Vec<(usize, Request)> = Vec::new();
+            for &(m, g, pct) in &delta.remove {
+                let idx = self.replicas[m]
+                    .iter()
+                    .position(|r| r.gpu == g)
+                    .expect("removing unknown replica");
+                let rep = self.replicas[m].remove(idx);
+                self.knee_load[g] -= pct;
+                if self.stores[g].is_warm(m) {
+                    let released = self.stores[g].release(m);
+                    debug_assert!(released, "warm unpinned resident refused release");
+                }
+                let engine = engines[g].as_mut().expect("replica without engine");
+                if engine.sim.is_active(rep.local) {
+                    for q in engine.sim.deactivate_model(rep.local) {
+                        drained.push((m, q));
+                    }
+                    engine.rebuild_policy(self.sched);
+                    self.cache.invalidate(g, rep.local);
+                    touched.mark(g);
+                }
+                self.astats.replicas_removed += 1;
+            }
+            // Bring up added replicas as *cold slots*: the engine slot
+            // is registered (tombstoned) now, the weights fault in on
+            // first arrival. Price the move by the cold load it implies
+            // at the target — zero when the planner found a warm GPU.
+            for (m, r) in &delta.add {
+                let g = r.gpu;
+                if engines[g].is_none() {
+                    let sim_cfg = SimConfig {
+                        gpu: self.gpus[g].clone(),
+                        horizon_ms: self.horizon_ms,
+                        ..Default::default()
+                    };
+                    engines[g] = Some(ExecEngine {
+                        sim: Sim::new(sim_cfg, Vec::new()),
+                        policy: self.sched.build(&[]),
+                    });
+                }
+                let engine = engines[g].as_mut().expect("engine just created");
+                let local = match self.local_of[g][*m] {
+                    Some(li) => {
+                        debug_assert!(!engine.sim.is_active(li), "added over an active slot");
+                        li
+                    }
+                    None => {
+                        let entry = ModelEntry {
+                            profile: self.profiles[*m].clone(),
+                            pct: r.pct,
+                            batch: r.batch,
+                        };
+                        let li = engine.sim.add_model(entry);
+                        debug_assert_eq!(li, self.local_map[g].len());
+                        self.local_map[g].push(*m);
+                        self.local_of[g][*m] = Some(li);
+                        let dr = engine.sim.deactivate_model(li);
+                        debug_assert!(dr.is_empty(), "fresh slot drained requests");
+                        engine.rebuild_policy(self.sched);
+                        touched.mark(g);
+                        li
+                    }
+                };
+                self.replicas[*m].push(Replica {
+                    gpu: g,
+                    local,
+                    pct: r.pct,
+                    batch: r.batch,
+                    capacity_rps: r.capacity_rps,
+                });
+                self.knee_load[g] += r.pct;
+                self.astats.replicas_added += 1;
+                self.astats.migration_ms += self.cfg.adaptive.migration_cost_ms;
+                let cold = if self.stores[g].is_warm(*m) {
+                    0.0
+                } else {
+                    self.cfg
+                        .lifecycle
+                        .reconfig
+                        .cold_load_ms(self.profiles[*m].load_ms, self.stores[g].n_warm())
+                };
+                *self.astats.cold_migration_ms.get_or_insert(0.0) += cold;
+            }
+            // The hosting graph changed: recompute the reachability
+            // index before anything routes against it. (We are at a
+            // driver-event barrier — the sparse core rebuilds its
+            // inverted index right after this returns.)
+            let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); self.gpus.len()];
+            for (m, reps) in self.replicas.iter().enumerate() {
+                for r in reps {
+                    hosted[r.gpu].push(m);
+                }
+            }
+            self.cand = reachability_candidates(&hosted, self.replicas.len());
+            // Re-route drained queues through the full cascade dispatch
+            // (cold starts and evictions included — they are priced and
+            // counted like any other).
+            let mut work = std::mem::take(&mut self.scratch);
+            debug_assert!(work.is_empty());
+            for (m, q) in drained {
+                work.push_back((m, q));
+            }
+            while let Some((m, q)) = work.pop_front() {
+                self.dispatch(t, m, q, &mut work, engines, touched);
+            }
+            self.scratch = work;
+            self.astats.rebalances += 1;
+            self.astats.rebalance_times_us.push(t);
+        }
+        self.shed_rps = target.placement.shed_rps.clone();
+    }
+}
+
+impl EpochDriver for UnifiedDriver<'_> {
+    fn n_models(&self) -> usize {
+        self.rejected.len()
+    }
+
+    fn candidates_of(&self, model: usize) -> &[usize] {
+        &self.cand[model]
+    }
+
+    fn elides_barriers(&self) -> bool {
+        self.free_routing && self.warm_span_ready()
+    }
+
+    /// Barrier-free routing inside a fully-warm span (the lifecycle
+    /// version plus demand counting, which the adaptive contract
+    /// requires to be identical on both paths).
+    fn route_free(&mut self, t: Us, req: &Request) -> Option<(usize, usize)> {
+        let model = req.model;
+        self.window_counts[model] += 1;
+        let reps: &[Replica] = &self.replicas[model];
+        if reps.is_empty() {
+            self.rejected[model] += 1;
+            return None;
+        }
+        // Backlog-free by contract: the closure is never consulted.
+        let pick = self.router.route(model, reps, |_| 0);
+        let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
+        for i in order {
+            let r = &self.replicas[model][i];
+            let (g, local) = (r.gpu, r.local);
+            if self.stores[g].is_warm(model) {
+                self.stores[g].touch(t, model);
+                self.lstats.warm_hits += 1;
+                return Some((g, local));
+            }
+            if let Some(&ready) = self.loading.get(&(g, model)) {
+                self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
+                self.held.entry((g, model)).or_default().push(req.clone());
+                self.lstats.cold_delayed += 1;
+                return None;
+            }
+            debug_assert!(false, "cold start inside an elided warm span");
+        }
+        self.rejected[model] += 1;
+        None
+    }
+
+    fn next_event(&self) -> Option<Us> {
+        let t_load = self.loading.values().min().copied();
+        let t_idle = self
+            .idle_timeout
+            .and_then(|to| self.stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
+        let t_tick = if self.next_tick < self.horizon { Some(self.next_tick) } else { None };
+        [t_load, t_idle, t_tick].into_iter().flatten().min()
+    }
+
+    /// Mature weight loads due at t (lifecycle semantics: parked
+    /// requests inject with their original arrival times).
+    fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        self.cache.reset();
+        let due: Vec<(usize, usize)> = self
+            .loading
+            .iter()
+            .filter(|&(_, &ready)| ready <= t)
+            .map(|(&k, _)| k)
+            .collect();
+        for (g, m) in due {
+            self.loading.remove(&(g, m));
+            self.stores[g].complete_load(t, m);
+            let local = self.local_of[g][m].expect("loaded model without a slot");
+            let rep = self.replicas[m]
+                .iter()
+                .find(|r| r.gpu == g)
+                .expect("loaded model without a replica");
+            let engine = engines[g].as_mut().expect("load on idle GPU");
+            engine.sim.reactivate_model(
+                local,
+                ModelEntry {
+                    profile: self.profiles[m].clone(),
+                    pct: rep.pct,
+                    batch: rep.batch,
+                },
+            );
+            engine.rebuild_policy(self.sched);
+            for mut r in self.held.remove(&(g, m)).unwrap_or_default() {
+                self.stores[g].touch(t, m);
+                r.model = local;
+                engine.sim.inject(r);
+            }
+            touched.mark(g);
+        }
+    }
+
+    /// Route one arrival (demand-counted), draining any eviction
+    /// cascade it triggers.
+    fn route(
+        &mut self,
+        t: Us,
+        req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        self.window_counts[req.model] += 1;
+        let mut work = std::mem::take(&mut self.scratch);
+        debug_assert!(work.is_empty());
+        work.push_back((req.model, req));
+        while let Some((m, q)) = work.pop_front() {
+            self.dispatch(t, m, q, &mut work, engines, touched);
+        }
+        self.scratch = work;
+    }
+
+    /// Idle sweep, then the control tick — the tick sees post-sweep
+    /// warmth, so a replan never prefers a GPU whose resident just
+    /// scaled to zero.
+    fn post_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        self.idle_sweep(t, engines, touched);
+        if t == self.next_tick {
+            self.control_tick(t, engines, touched);
+        }
+    }
+}
+
+/// Serve `requests` on `gpus` under the unified control plane:
+/// residency plan at t = 0 (solved for `initial_rates` against
+/// `cfg.lifecycle`'s memory budgets), lifecycle cold starts / eviction /
+/// scale-to-zero throughout, and residency-aware drift- or
+/// pressure-triggered rebalancing at `cfg.adaptive`'s tick cadence.
+/// Deterministic: a fixed (inputs, seed) tuple always yields the same
+/// report — for any thread count and either exec mode.
+#[allow(clippy::too_many_arguments)]
+pub fn run_unified(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &UnifiedCfg,
+    requests: Vec<Request>,
+    horizon_ms: f64,
+    seed: u64,
+) -> ClusterReport {
+    run_unified_with(
+        profiles,
+        initial_rates,
+        gpus,
+        placement,
+        routing,
+        sched,
+        cfg,
+        requests,
+        horizon_ms,
+        seed,
+        ExecOpts::default(),
+    )
+}
+
+/// [`run_unified`] with explicit execution options (thread budget +
+/// barrier mode).
+#[allow(clippy::too_many_arguments)]
+pub fn run_unified_with(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &UnifiedCfg,
+    requests: Vec<Request>,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+) -> ClusterReport {
+    cfg.validate().expect("invalid unified config");
+    let n_models = profiles.len();
+    let n_gpus = gpus.len();
+    let horizon = ms_to_us(horizon_ms);
+    let lcfg = &cfg.lifecycle;
+    let budgets = lcfg.budgets(gpus);
+    assert!(
+        budgets.iter().all(|&b| b > 0),
+        "unified memory budget is zero after headroom ({budgets:?} MiB) — \
+         lower headroom_mib or raise mem_budget_mib"
+    );
+    let idle_timeout: Option<Us> = if lcfg.idle_timeout_ms > 0.0 {
+        Some(ms_to_us(lcfg.idle_timeout_ms).max(1))
+    } else {
+        None
+    };
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    let pinned: Vec<bool> =
+        profiles.iter().map(|p| lcfg.pinned.iter().any(|n| n == &p.name)).collect();
+
+    // --- t = 0: unbiased residency plan (nothing is warm yet) --------------
+    let plan = plan_residency(
+        profiles,
+        initial_rates,
+        gpus,
+        placement,
+        &budgets,
+        lcfg.min_replicas,
+    );
+
+    let mut local_of: Vec<Vec<Option<usize>>> = vec![vec![None; n_models]; n_gpus];
+    let mut engines: Vec<Option<ExecEngine>> = (0..n_gpus)
+        .map(|g| {
+            if plan.placement.hosted[g].is_empty() {
+                return None;
+            }
+            let entries: Vec<ModelEntry> = plan.placement.hosted[g]
+                .iter()
+                .enumerate()
+                .map(|(local, &m)| {
+                    local_of[g][m] = Some(local);
+                    let rep = plan.placement.replicas[m]
+                        .iter()
+                        .find(|r| r.gpu == g)
+                        .expect("hosted model without a replica entry");
+                    debug_assert_eq!(rep.local, local, "plan local indices drifted");
+                    ModelEntry { profile: profiles[m].clone(), pct: rep.pct, batch: rep.batch }
+                })
+                .collect();
+            let sim_cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+            let mut sim = Sim::new(sim_cfg, entries);
+            for (local, &m) in plan.placement.hosted[g].iter().enumerate() {
+                if !plan.resident0[g].contains(&m) {
+                    let drained = sim.deactivate_model(local);
+                    debug_assert!(drained.is_empty());
+                }
+            }
+            let mask = sim.active_mask();
+            let policy = sched.build_masked(&sim.models, &mask);
+            Some(ExecEngine { sim, policy })
+        })
+        .collect();
+
+    let stores: Vec<ModelStore> = (0..n_gpus)
+        .map(|g| {
+            let mut s = ModelStore::new(plan.mem_budget_mib[g], lcfg.eviction);
+            for &m in &plan.resident0[g] {
+                let ok = s.preload(0, m, profiles[m].mem_mib, profiles[m].load_ms, pinned[m]);
+                assert!(ok, "resident0 oversubscribes gpu {g}'s memory budget");
+            }
+            s
+        })
+        .collect();
+
+    let interval = ms_to_us(cfg.adaptive.interval_ms).max(1);
+    let mut driver = UnifiedDriver {
+        profiles,
+        gpus,
+        placement,
+        sched,
+        cfg,
+        horizon_ms,
+        horizon,
+        interval,
+        window_s: cfg.adaptive.interval_ms / 1_000.0,
+        budgets,
+        min_replicas: lcfg.min_replicas,
+        pinned,
+        replicas: plan.placement.replicas.clone(),
+        local_of,
+        local_map: plan.placement.hosted.clone(),
+        knee_load: plan.placement.knee_load.clone(),
+        shed_rps: plan.placement.shed_rps.clone(),
+        stores,
+        cand: reachability_candidates(&plan.placement.hosted, n_models),
+        free_routing: !routing.reads_backlogs(),
+        router: Router::new(routing, n_models, seed),
+        cache: BacklogCache::default(),
+        rejected: vec![0u64; n_models],
+        loading: BTreeMap::new(),
+        held: BTreeMap::new(),
+        cold_delays_ms: Vec::new(),
+        lstats: LifecycleStats::default(),
+        // The unified path always serializes cold_migration_ms —
+        // Some(0.0) until the first priced migration.
+        astats: AdaptiveStats { cold_migration_ms: Some(0.0), ..Default::default() },
+        idle_timeout,
+        estimator: RateEstimator::new(cfg.adaptive.alpha, initial_rates),
+        detector: DriftDetector::new(&cfg.adaptive, n_models),
+        planned_rates: initial_rates.to_vec(),
+        window_counts: vec![0u64; n_models],
+        next_tick: interval,
+        evictions_at_tick: 0,
+        scratch: VecDeque::new(),
+    };
+    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
+    let UnifiedDriver {
+        replicas,
+        local_map,
+        knee_load,
+        shed_rps,
+        stores,
+        rejected,
+        held,
+        cold_delays_ms,
+        mut lstats,
+        mut astats,
+        estimator,
+        ..
+    } = driver;
+    astats.est_rates = estimator.rates().to_vec();
+
+    // --- finalize + aggregate ----------------------------------------------
+    let reports: Vec<Option<RunReport>> = engines
+        .iter_mut()
+        .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
+        .collect();
+
+    let horizon_s = horizon_ms / 1_000.0;
+    let split_at = astats.first_rebalance_us();
+    let mut throughput = vec![0.0; n_models];
+    let mut violations = vec![0.0; n_models];
+    let mut served = vec![0u64; n_models];
+    let mut served_in_slo = 0u64;
+    let mut dropped = vec![0u64; n_models];
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut lat_before: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut lat_after: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut gpu_utilization = Vec::with_capacity(n_gpus);
+    let mut per_gpu = Vec::with_capacity(n_gpus);
+    for g in 0..n_gpus {
+        let (util, shares) = match &reports[g] {
+            Some(rep) => {
+                let mut shares = Vec::with_capacity(rep.per_model.len());
+                for (local, mm) in rep.per_model.iter().enumerate() {
+                    let global = local_map[g][local];
+                    throughput[global] += mm.served as f64 / horizon_s;
+                    violations[global] += mm.slo_violations() as f64 / horizon_s;
+                    served[global] += mm.served;
+                    served_in_slo += mm.served_in_slo;
+                    dropped[global] += mm.dropped;
+                    latencies[global].extend_from_slice(&mm.latencies_ms);
+                    for (lat, &done) in mm.latencies_ms.iter().zip(&mm.completions_us) {
+                        match split_at {
+                            Some(cut) if done >= cut => lat_after[global].push(*lat),
+                            _ => lat_before[global].push(*lat),
+                        }
+                    }
+                    // Shares list the final *resident* packing only.
+                    let engine = engines[g].as_ref().expect("reported engine");
+                    if engine.sim.is_active(local) {
+                        let entry = &engine.sim.models[local];
+                        shares.push(GpuModelShare {
+                            model: global,
+                            pct: entry.pct,
+                            batch: entry.batch,
+                            served: mm.served,
+                        });
+                    }
+                }
+                (rep.gpu_utilization[0], shares)
+            }
+            None => (0.0, Vec::new()),
+        };
+        gpu_utilization.push(util);
+        per_gpu.push(GpuReport {
+            gpu: gpus[g].name.to_string(),
+            knee_load_pct: knee_load[g],
+            utilization: util,
+            models: shares,
+        });
+    }
+    // Conservation: requests parked behind loads that never matured
+    // count as dropped (and as violations), exactly as in lifecycle.
+    for ((_, m), reqs) in &held {
+        dropped[*m] += reqs.len() as u64;
+        violations[*m] += reqs.len() as f64 / horizon_s;
+    }
+    for m in 0..n_models {
+        violations[m] += rejected[m] as f64 / horizon_s;
+    }
+    astats.p99_before_ms = lat_before.iter().map(|l| percentile(l, 99.0)).collect();
+    astats.p99_after_ms = lat_after.iter().map(|l| percentile(l, 99.0)).collect();
+    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let replica_map: Vec<Vec<usize>> = replicas
+        .iter()
+        .map(|reps| reps.iter().map(|r| r.gpu).collect())
+        .collect();
+    let admitted: Vec<bool> = replicas.iter().map(|reps| !reps.is_empty()).collect();
+
+    lstats.cold_starts = stores.iter().map(|s| s.loads).sum();
+    lstats.evictions = stores.iter().map(|s| s.evictions).sum();
+    lstats.mib_loaded = stores.iter().map(|s| s.mib_loaded).sum();
+    lstats.cold_start_p99_ms = percentile(&cold_delays_ms, 99.0);
+    lstats.goodput_rps = served_in_slo as f64 / horizon_s;
+    lstats.peak_resident_mib = stores.iter().map(|s| s.peak_mib()).collect();
+    lstats.resident_final = stores.iter().map(|s| s.n_resident() as u64).collect();
+
+    ClusterReport {
+        policy: format!(
+            "unified+{}+{}+{}{}+{}",
+            placement.name(),
+            lcfg.eviction.name(),
+            if lcfg.warm_routing { "warm-" } else { "" },
+            routing.name(),
+            sched.name()
+        ),
+        throughput,
+        gpu_utilization,
+        violations_per_sec: violations,
+        p99_ms,
+        served,
+        dropped,
+        rejected,
+        replica_map,
+        shed_rps,
+        admitted,
+        per_gpu,
+        adaptive: Some(astats),
+        lifecycle: Some(lstats),
+        exec: Some(exec_stats),
+    }
+}
+
+/// The canonical drift + memory-pressure stress workload: a long-tail
+/// Zipf(`alpha`) fleet (same clone-the-zoo derivation as
+/// [`crate::lifecycle::longtail_workload`]) whose popularity *ranking
+/// rotates* at the horizon midpoint — model `i` inherits the rate of
+/// model `(i + n/2) mod n`, so the head becomes the tail and the cold
+/// tail becomes the hot head. Under a constrained memory budget this
+/// exercises every unified mechanism at once: the rotation drives the
+/// drift detector, the newly-hot tail faults in cold, and the resulting
+/// eviction pressure feeds the pressure trigger.
+///
+/// Returns (profiles, initial rates, merged request stream).
+pub fn drifting_longtail_workload(
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+    horizon_ms: f64,
+    seed: u64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+    let base = crate::profile::zoo();
+    drifting_longtail_workload_from(&base, n_models, alpha, total_rps, horizon_ms, seed)
+}
+
+/// [`drifting_longtail_workload`] over an explicit base model list (the
+/// config path cycles the scenario's `models` entries).
+pub fn drifting_longtail_workload_from(
+    base: &[ModelProfile],
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+    horizon_ms: f64,
+    seed: u64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+    assert!(!base.is_empty(), "long-tail fleet needs at least one base model");
+    use crate::workload::{merged_stream, zipf_rates, Arrivals};
+    let profiles: Vec<ModelProfile> = (0..n_models)
+        .map(|i| {
+            let mut p = base[i % base.len()].clone();
+            p.name = crate::lifecycle::fleet_name(&p.name, i);
+            p.load_ms = 150.0 + 0.15 * p.mem_mib as f64;
+            p
+        })
+        .collect();
+    let r0 = zipf_rates(n_models, alpha, total_rps);
+    let mid = horizon_ms / 2.0;
+    let r1: Vec<f64> = (0..n_models).map(|i| r0[(i + n_models / 2) % n_models]).collect();
+    let specs: Vec<_> = profiles
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (Arrivals::trace(vec![(0.0, r0[i]), (mid, r1[i])]), p.slo_ms))
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    (profiles, r0, reqs)
+}
+
+/// A homogeneous V100 cluster of `n` GPUs — the canonical unified
+/// scenario runs on 4, and sweeps to 64+ by just raising `n`.
+pub fn unified_gpus(n: usize) -> Vec<GpuSpec> {
+    vec![crate::profile::V100.clone(); n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ExecMode, Parallelism};
+
+    /// The canonical stress scenario at unit-test scale: 12 models on
+    /// 4 V100s, 3 GiB budgets, popularity rotation at the midpoint.
+    fn stress_cfg() -> UnifiedCfg {
+        UnifiedCfg {
+            adaptive: AdaptiveCfg { interval_ms: 250.0, ..Default::default() },
+            lifecycle: LifecycleCfg {
+                mem_budget_mib: 3_072,
+                min_replicas: 1,
+                ..Default::default()
+            },
+            eviction_replan_threshold: 8,
+        }
+    }
+
+    fn run_stress(cfg: &UnifiedCfg, routing: RoutingPolicy, opts: ExecOpts) -> ClusterReport {
+        let (profiles, rates, reqs) = drifting_longtail_workload(12, 1.1, 500.0, 2_500.0, 11);
+        run_unified_with(
+            &profiles,
+            &rates,
+            &unified_gpus(4),
+            PlacementPolicy::LoadBalance,
+            routing,
+            GpuSched::Dstack,
+            cfg,
+            reqs,
+            2_500.0,
+            11,
+            opts,
+        )
+    }
+
+    #[test]
+    fn drifting_longtail_rotates_popularity() {
+        let (profiles, r0, reqs) = drifting_longtail_workload(8, 1.1, 400.0, 1_000.0, 7);
+        assert_eq!(profiles.len(), 8);
+        assert_eq!(profiles[0].name, "mobilenet_00");
+        // Zipf head at t = 0 …
+        assert!(r0[0] > r0[7]);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        // … and the head's arrivals thin out after the midpoint while
+        // the rotated-in model's pick up: count per half.
+        let count = |m: usize, lo: f64, hi: f64| {
+            reqs.iter()
+                .filter(|r| r.model == m && (lo..hi).contains(&(r.arrival as f64 / 1_000.0)))
+                .count() as f64
+        };
+        assert!(
+            count(0, 0.0, 500.0) > 2.0 * count(0, 500.0, 1_000.0),
+            "head model must cool down after the rotation"
+        );
+        assert!(
+            count(4, 500.0, 1_000.0) > 2.0 * count(4, 0.0, 500.0),
+            "rotated-in model must heat up"
+        );
+    }
+
+    #[test]
+    fn unified_run_is_deterministic_and_reports_both_planes() {
+        let cfg = stress_cfg();
+        let opts = ExecOpts::default();
+        let a = run_stress(&cfg, RoutingPolicy::JoinShortestQueue, opts);
+        let b = run_stress(&cfg, RoutingPolicy::JoinShortestQueue, opts);
+        let (ja, jb) = (a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+        assert_eq!(ja, jb, "same seed ⇒ identical unified report");
+        assert!(ja.contains("\"adaptive\""), "control-plane stats attached");
+        assert!(ja.contains("\"lifecycle\""), "memory-manager stats attached");
+        assert!(ja.contains("\"cold_migration_ms\""), "unified always prices migrations");
+        assert!(ja.starts_with("{\n  \"policy\": \"unified+"));
+    }
+
+    #[test]
+    fn rotation_under_pressure_prices_migrations_by_cold_load() {
+        let cfg = stress_cfg();
+        let rep = run_stress(&cfg, RoutingPolicy::JoinShortestQueue, ExecOpts::default());
+        let astats = rep.adaptive.as_ref().expect("adaptive stats");
+        let lstats = rep.lifecycle.as_ref().expect("lifecycle stats");
+        assert!(astats.replans > 0, "rotation must trip the drift detector");
+        assert!(astats.rebalances > 0, "rotation must move replicas: {astats:?}");
+        assert!(astats.replicas_added > 0, "{astats:?}");
+        let cold = astats.cold_migration_ms.expect("unified fills cold pricing");
+        // Footprint pricing diverges from the flat legacy charge: even a
+        // parameter-shared reload of the smallest fleet model costs
+        // ≥ 0.6 × 150 ms = 90 ms, vs the 50 ms flat rate per add.
+        assert!(
+            cold > astats.migration_ms,
+            "cold pricing {cold} ms should exceed flat {} ms",
+            astats.migration_ms
+        );
+        assert!(lstats.cold_starts > 0, "the rotated-in tail faults in cold");
+        // Conservation still holds through replan surgery.
+        let total = rep.served.iter().sum::<u64>()
+            + rep.dropped.iter().sum::<u64>()
+            + rep.rejected.iter().sum::<u64>();
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn eviction_pressure_alone_triggers_replans() {
+        // Detector effectively disabled (absurd fire threshold): any
+        // replan must come from the pressure trigger. Tight budgets +
+        // long-tail traffic guarantee eviction thrash.
+        use crate::lifecycle::longtail_workload;
+        let mk = |threshold: u64| UnifiedCfg {
+            adaptive: AdaptiveCfg {
+                interval_ms: 250.0,
+                drift_threshold: 1e12,
+                rearm_threshold: 1e9,
+                ..Default::default()
+            },
+            lifecycle: LifecycleCfg {
+                mem_budget_mib: 2_048,
+                min_replicas: 1,
+                ..Default::default()
+            },
+            eviction_replan_threshold: threshold,
+        };
+        let (profiles, rates, reqs) = longtail_workload(10, 1.1, 400.0, 2_000.0, 3);
+        let run = |cfg: &UnifiedCfg| {
+            run_unified(
+                &profiles,
+                &rates,
+                &unified_gpus(2),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                cfg,
+                reqs.clone(),
+                2_000.0,
+                3,
+            )
+        };
+        let pressured = run(&mk(2));
+        let pa = pressured.adaptive.as_ref().unwrap();
+        let pl = pressured.lifecycle.as_ref().unwrap();
+        assert!(pl.evictions > 0, "2 GiB budgets must thrash");
+        assert!(pa.replans > 0, "eviction pressure must fire the tick: {pa:?}");
+        let disabled = run(&mk(0));
+        let da = disabled.adaptive.as_ref().unwrap();
+        assert_eq!(da.replans, 0, "threshold 0 disables the pressure trigger");
+    }
+
+    #[test]
+    fn unified_sparse_matches_epoch_bytes() {
+        let cfg = stress_cfg();
+        let run = |mode| {
+            run_stress(
+                &cfg,
+                RoutingPolicy::JoinShortestQueue,
+                ExecOpts { threads: Parallelism::Threads(1), mode },
+            )
+        };
+        let sparse = run(ExecMode::Sparse).to_json().to_string_pretty();
+        let epoch = run(ExecMode::Epoch).to_json().to_string_pretty();
+        assert_eq!(sparse, epoch, "replan surgery broke sparse determinism");
+    }
+
+    #[test]
+    fn warm_rr_fleet_elides_barriers_across_replans() {
+        // Ample memory (everything preloads warm) + RR routing: spans
+        // between control ticks are fully warm and backlog-free, so the
+        // sparse core must elide stepping barriers even while drift
+        // replans rewire the placement at tick boundaries.
+        let cfg = UnifiedCfg {
+            adaptive: AdaptiveCfg { interval_ms: 250.0, ..Default::default() },
+            lifecycle: LifecycleCfg {
+                mem_budget_mib: 0,
+                idle_timeout_ms: 0.0,
+                min_replicas: 1,
+                ..Default::default()
+            },
+            eviction_replan_threshold: 8,
+        };
+        let rep = run_stress(
+            &cfg,
+            RoutingPolicy::RoundRobin,
+            ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+        );
+        let exec = rep.exec.expect("exec stats attached");
+        assert!(exec.barriers_elided > 0, "warm RR spans elided nothing: {exec:?}");
+        assert!(exec.arrivals_batched > 0);
+    }
+
+    #[test]
+    fn config_validation_covers_both_planes() {
+        assert!(UnifiedCfg::default().validate().is_ok());
+        let bad_adaptive = UnifiedCfg {
+            adaptive: AdaptiveCfg { alpha: 0.0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(bad_adaptive.validate().is_err());
+        let bad_lifecycle = UnifiedCfg {
+            lifecycle: LifecycleCfg { min_replicas: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(bad_lifecycle.validate().is_err());
+    }
+}

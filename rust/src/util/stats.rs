@@ -75,6 +75,14 @@ impl Online {
 /// statistics around the rank are ever needed. Results are bit-identical
 /// to sorting first (the same order statistics feed the same
 /// interpolation).
+///
+/// NaN ordering: comparisons use [`f64::total_cmp`], under which NaN
+/// sorts *after* `+inf` (for the positive-sign NaN bit patterns the
+/// arithmetic here produces). A NaN sample therefore lands in the top
+/// order statistics and poisons only the highest percentiles instead of
+/// panicking mid-report — the serving loop survives a corrupt latency
+/// estimate. NaN-free inputs are unaffected: `total_cmp` agrees with
+/// the old `partial_cmp().unwrap()` on every ordinary value.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
@@ -84,8 +92,7 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
     let rank = q / 100.0 * (scratch.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let frac = rank - lo as f64;
-    let (_, &mut lo_v, rest) =
-        scratch.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+    let (_, &mut lo_v, rest) = scratch.select_nth_unstable_by(lo, |a, b| a.total_cmp(b));
     if frac == 0.0 {
         return lo_v;
     }
@@ -193,9 +200,11 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// NaN samples sort last ([`f64::total_cmp`]) — they skew `max` and
+    /// the top percentiles instead of panicking the report path.
     pub fn from_samples(samples: &[f64]) -> Summary {
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mean = if sorted.is_empty() {
             0.0
         } else {
@@ -256,9 +265,41 @@ mod tests {
             xs.push(((state >> 33) % 1000) as f64 / 7.0);
         }
         let mut sorted = xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         for q in [0.0, 0.1, 25.0, 50.0, 63.7, 90.0, 99.0, 99.9, 100.0] {
             assert_eq!(percentile(&xs, q), percentile_sorted(&sorted, q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_stays_exact_without() {
+        // A NaN sample must not panic the quickselect comparator (the
+        // old partial_cmp().unwrap() aborted the whole report); under
+        // total_cmp it sorts past +inf, so low/mid percentiles of the
+        // clean prefix are still returned.
+        let poisoned = [3.0, f64::NAN, 1.0, 2.0, 4.0];
+        let p0 = percentile(&poisoned, 0.0);
+        assert_eq!(p0, 1.0);
+        let p25 = percentile(&poisoned, 25.0);
+        assert_eq!(p25, 2.0);
+        // The top percentile interpolates against the NaN order stat.
+        assert!(percentile(&poisoned, 100.0).is_nan());
+        // Summary over NaN-bearing samples must not panic either.
+        let s = Summary::from_samples(&poisoned);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.min, 1.0);
+        // Golden-safety: on NaN-free input the total_cmp comparator is
+        // bit-identical to the old partial_cmp path (they agree on every
+        // ordinary float), including signed zeros and duplicates.
+        let clean = [0.25, -0.0, 0.0, 7.5, 0.25, 1e-300, -3.0, 7.5];
+        let mut sorted = clean.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(
+                percentile(&clean, q).to_bits(),
+                percentile_sorted(&sorted, q).to_bits(),
+                "q={q}"
+            );
         }
     }
 

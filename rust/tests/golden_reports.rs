@@ -167,6 +167,41 @@ fn lifecycle_longtail_report_matches_golden() {
 }
 
 #[test]
+fn unified_drift_pressure_report_matches_golden() {
+    // The merged control plane on a rotating-popularity, memory-pressured
+    // Zipf fleet at a 2 s horizon: drift replans, footprint-priced
+    // replica surgery, cold starts and evictions all land inside the
+    // window, so the unified driver's tick loop, residency-biased
+    // replanner and cold-migration pricing are all pinned by the golden.
+    use dstack::lifecycle::LifecycleCfg;
+    use dstack::unified::{drifting_longtail_workload, run_unified, unified_gpus, UnifiedCfg};
+    let (profiles, rates, reqs) = drifting_longtail_workload(12, 1.1, 450.0, HORIZON_MS, SEED);
+    let cfg = UnifiedCfg {
+        lifecycle: LifecycleCfg { mem_budget_mib: 3_072, min_replicas: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let rep = run_unified(
+        &profiles,
+        &rates,
+        &unified_gpus(4),
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        reqs,
+        HORIZON_MS,
+        SEED,
+    );
+    assert!(rep.adaptive.is_some(), "adaptive stats must be serialized");
+    assert!(rep.lifecycle.is_some(), "lifecycle stats must be serialized");
+    assert!(
+        rep.adaptive.as_ref().unwrap().cold_migration_ms.is_some(),
+        "unified runs must price migrations by cold-load footprint"
+    );
+    check_golden("unified_drift_pressure", &rep.to_json());
+}
+
+#[test]
 fn legacy_fig12_cluster_matches_golden() {
     use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
     let (profiles, _rates, reqs) = fig12_workload(HORIZON_MS, SEED);

@@ -17,11 +17,12 @@ use dstack::cluster::{
 use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive_with, AdaptiveCfg};
 use dstack::lifecycle::{longtail_gpus, longtail_workload, serve_longtail_with, LifecycleCfg};
 use dstack::profile::{T4, V100};
+use dstack::unified::{drifting_longtail_workload, run_unified_with, unified_gpus, UnifiedCfg};
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 const MODES: [ExecMode; 2] = [ExecMode::Epoch, ExecMode::Sparse];
 
-const SCENARIOS: [&str; 7] = [
+const SCENARIOS: [&str; 8] = [
     "static-jsq",
     "static-wide-jsq",
     "static-wide-rr",
@@ -29,6 +30,7 @@ const SCENARIOS: [&str; 7] = [
     "adaptive-jsq",
     "adaptive-rr",
     "lifecycle",
+    "unified",
 ];
 
 /// Render the canonical scenarios' reports under `opts`.
@@ -173,6 +175,33 @@ fn report_strings(opts: ExecOpts) -> Vec<String> {
         .to_string_pretty(),
     );
 
+    // Unified: the drift + memory-pressure stress scenario — replan
+    // surgery (tombstone adds, warm releases, drained re-dispatch) on
+    // top of cold starts, evictions and component-bounded candidate
+    // sets, all mid-flight. The hardest determinism row in the matrix.
+    let (profiles, rates, reqs) = drifting_longtail_workload(12, 1.1, 450.0, 2_000.0, 17);
+    let ucfg = UnifiedCfg {
+        lifecycle: LifecycleCfg { mem_budget_mib: 3_072, min_replicas: 1, ..Default::default() },
+        ..Default::default()
+    };
+    out.push(
+        run_unified_with(
+            &profiles,
+            &rates,
+            &unified_gpus(4),
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &ucfg,
+            reqs,
+            2_000.0,
+            17,
+            opts,
+        )
+        .to_json()
+        .to_string_pretty(),
+    );
+
     out
 }
 
@@ -185,6 +214,16 @@ fn reports_are_byte_identical_across_threads_and_modes() {
     assert!(baseline[4].contains("\"adaptive\""), "no adaptive stats attached");
     assert!(baseline[6].contains("\"lifecycle\""), "no lifecycle stats attached");
     assert!(baseline[3].contains("false"), "single-T4 scenario rejected no model");
+    // The unified row must carry BOTH control planes and actually pay
+    // footprint-priced migrations, or its identity check is vacuous.
+    assert!(
+        baseline[7].contains("\"adaptive\"") && baseline[7].contains("\"lifecycle\""),
+        "unified scenario lost a control plane"
+    );
+    assert!(
+        baseline[7].contains("\"cold_migration_ms\""),
+        "unified scenario did not price migrations"
+    );
     for mode in MODES {
         for &threads in &THREAD_COUNTS {
             if mode == ExecMode::Epoch && threads == THREAD_COUNTS[0] {
