@@ -110,9 +110,9 @@ use crate::gpu::Us;
 use crate::metrics::RunReport;
 use crate::sim::{Policy, Sim};
 use crate::util::json::Json;
-use crate::workload::Request;
+use crate::workload::{ArrivalStream, MaterializedStream, Request};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 /// Engine-stepping thread budget for a cluster run — the `parallelism`
@@ -231,6 +231,13 @@ pub struct ExecStats {
     /// Longest run-ahead window granted to an engine past a barrier
     /// before its next forced resync (µs).
     pub max_lookahead_us: Us,
+    /// Requests pulled from the arrival stream over the whole run.
+    pub requests_streamed: u64,
+    /// Peak requests simultaneously held by the arrival source plus the
+    /// current routing round — the peak-RSS proxy `bench_streaming`
+    /// asserts stays O(backlog) for lazy streams (the materialized
+    /// adapters report ≈ the full stream length here).
+    pub peak_in_flight: u64,
 }
 
 impl ExecStats {
@@ -240,6 +247,10 @@ impl ExecStats {
 
     fn note_lookahead(&mut self, d: Us) {
         self.max_lookahead_us = self.max_lookahead_us.max(d);
+    }
+
+    fn note_in_flight(&mut self, n: u64) {
+        self.peak_in_flight = self.peak_in_flight.max(n);
     }
 
     /// Fraction of would-be barriers the sparse core elided:
@@ -261,6 +272,8 @@ impl ExecStats {
             ("barriers_elided", Json::from(self.barriers_elided)),
             ("arrivals_batched", Json::from(self.arrivals_batched)),
             ("max_lookahead_us", Json::from(self.max_lookahead_us)),
+            ("requests_streamed", Json::from(self.requests_streamed)),
+            ("peak_in_flight", Json::from(self.peak_in_flight)),
         ])
     }
 
@@ -268,13 +281,15 @@ impl ExecStats {
     pub fn render(&self) -> String {
         format!(
             "exec core: mode={} serial_rounds={} barriers_elided={} ({:.0}%) \
-             arrivals_batched={} max_lookahead={:.1} ms",
+             arrivals_batched={} max_lookahead={:.1} ms streamed={} peak_in_flight={}",
             self.mode.label(),
             self.epochs,
             self.barriers_elided,
             self.elision_ratio() * 100.0,
             self.arrivals_batched,
-            self.max_lookahead_us as f64 / 1_000.0
+            self.max_lookahead_us as f64 / 1_000.0,
+            self.requests_streamed,
+            self.peak_in_flight
         )
     }
 }
@@ -584,12 +599,29 @@ fn run_items(
     }
 }
 
-/// Drive `engines` over `requests` to `horizon` under `driver`. The
-/// stream is owned: every injection *moves* a request — no full-stream
-/// clone anywhere on the path. Returns the run's [`ExecStats`].
+/// Drive `engines` over a materialized `requests` vector — the legacy
+/// entry point, now a thin adapter over [`run_epochs_stream`] via
+/// [`MaterializedStream`] (which preserves the exact pre-streaming
+/// bookkeeping, so report bytes are unchanged).
 pub(crate) fn run_epochs<D: EpochDriver>(
     engines: &mut [Option<ExecEngine>],
     requests: Vec<Request>,
+    horizon: Us,
+    opts: ExecOpts,
+    driver: &mut D,
+) -> ExecStats {
+    let n_models = driver.n_models();
+    run_epochs_stream(engines, MaterializedStream::new(requests, n_models), horizon, opts, driver)
+}
+
+/// Drive `engines` over the arrivals pulled lazily from `stream` to
+/// `horizon` under `driver`. The stream is owned: every injection
+/// *moves* a request — no full-stream clone anywhere on the path, and
+/// memory stays O(stream backlog) for lazy sources. Returns the run's
+/// [`ExecStats`].
+pub(crate) fn run_epochs_stream<D: EpochDriver, S: ArrivalStream>(
+    engines: &mut [Option<ExecEngine>],
+    mut stream: S,
     horizon: Us,
     opts: ExecOpts,
     driver: &mut D,
@@ -600,13 +632,14 @@ pub(crate) fn run_epochs<D: EpochDriver>(
     // too small to ever clear the fan-out threshold skip the pool
     // entirely — no spawns, no channels, pure serial path.
     let lanes = opts.threads.resolve().min(engines.len());
-    let mut queue: VecDeque<Request> = requests.into();
     let mut stats = ExecStats::new(opts.mode);
     if lanes <= 1 || engines.len() < FANOUT_MIN {
         match opts.mode {
-            ExecMode::Epoch => epoch_loop(engines, &mut queue, horizon, driver, None, &mut stats),
+            ExecMode::Epoch => {
+                epoch_loop(engines, &mut stream, horizon, driver, None, &mut stats)
+            }
             ExecMode::Sparse => {
-                sparse_loop(engines, &mut queue, horizon, driver, None, &mut stats)
+                sparse_loop(engines, &mut stream, horizon, driver, None, &mut stats)
             }
         }
         return stats;
@@ -632,10 +665,10 @@ pub(crate) fn run_epochs<D: EpochDriver>(
         let mut pool = Pool { workers };
         match opts.mode {
             ExecMode::Epoch => {
-                epoch_loop(engines, &mut queue, horizon, driver, Some(&mut pool), &mut stats)
+                epoch_loop(engines, &mut stream, horizon, driver, Some(&mut pool), &mut stats)
             }
             ExecMode::Sparse => {
-                sparse_loop(engines, &mut queue, horizon, driver, Some(&mut pool), &mut stats)
+                sparse_loop(engines, &mut stream, horizon, driver, Some(&mut pool), &mut stats)
             }
         }
         // Dropping the pool's senders ends the workers; the scope joins.
@@ -669,9 +702,9 @@ fn drain_tail(
 
 /// The PR 4 bulk-synchronous loop: every engine barriers at every
 /// global arrival / driver event.
-fn epoch_loop<D: EpochDriver>(
+fn epoch_loop<D: EpochDriver, S: ArrivalStream>(
     engines: &mut [Option<ExecEngine>],
-    queue: &mut VecDeque<Request>,
+    stream: &mut S,
     horizon: Us,
     driver: &mut D,
     mut pool: Option<&mut Pool>,
@@ -681,7 +714,8 @@ fn epoch_loop<D: EpochDriver>(
     // Reused round scratch (capacity bounded by the engine count).
     let mut items: Vec<WorkItem> = Vec::with_capacity(engines.len());
     loop {
-        let t_arr = queue.front().map(|r| r.arrival);
+        stats.note_in_flight(stream.buffered() as u64);
+        let t_arr = stream.peek_time();
         let t_drv = driver.next_event();
         let Some(t) = [t_arr, t_drv].into_iter().flatten().min() else { break };
         if t >= horizon {
@@ -689,8 +723,9 @@ fn epoch_loop<D: EpochDriver>(
         }
         touched.clear();
         driver.pre_arrivals(t, engines, &mut touched);
-        while queue.front().is_some_and(|r| r.arrival <= t) {
-            let r = queue.pop_front().expect("checked front");
+        while stream.peek_time().is_some_and(|a| a <= t) {
+            let r = stream.next_request().expect("peeked");
+            stats.requests_streamed += 1;
             driver.route(t, r, engines, &mut touched);
         }
         driver.post_arrivals(t, engines, &mut touched);
@@ -698,7 +733,7 @@ fn epoch_loop<D: EpochDriver>(
         // The next barrier is known now — arrivals and driver events
         // only change during serial phases — so engines can run ahead
         // to it without any cross-engine coordination.
-        let drain_to = [queue.front().map(|r| r.arrival), driver.next_event()]
+        let drain_to = [stream.peek_time(), driver.next_event()]
             .into_iter()
             .flatten()
             .min()
@@ -724,13 +759,22 @@ fn epoch_loop<D: EpochDriver>(
     drain_tail(engines, horizon, &mut pool);
 }
 
-/// An engine's next relevant barrier: the earliest arrival of a model
-/// it hosts, the next driver event (conservative — any driver event may
-/// touch any engine), or the horizon.
-fn safe_until(hosted: &[usize], arr: &[VecDeque<Us>], t_drv: Option<Us>, horizon: Us) -> Us {
+/// An engine's next relevant barrier: the earliest pending arrival of a
+/// model it hosts (per [`ArrivalStream::peek_model`] — exact for
+/// materialized/merged streams, conservatively the global head for
+/// trace replays), the next driver event (conservative — any driver
+/// event may touch any engine), or the horizon. Conservative peeks
+/// shrink the run-ahead window but never the call sequence, so results
+/// stay byte-identical (stream module docs).
+fn safe_until<S: ArrivalStream>(
+    hosted: &[usize],
+    stream: &S,
+    t_drv: Option<Us>,
+    horizon: Us,
+) -> Us {
     let mut f = t_drv.unwrap_or(horizon).min(horizon);
     for &m in hosted {
-        if let Some(&a) = arr[m].front() {
+        if let Some(a) = stream.peek_model(m) {
             f = f.min(a);
         }
     }
@@ -755,13 +799,23 @@ fn rebuild_hosted<D: EpochDriver + ?Sized>(
     }
 }
 
+/// Cap on arrivals popped from the stream per elided round. Without it
+/// a driver-event-free span would pull the *entire* stream into the
+/// per-engine injection vectors — O(total requests) memory, defeating
+/// the lazy stream. When the cap cuts a span short, the round drains
+/// only to the next pending arrival, which preserves each engine's
+/// (step-time, injection) call sequence exactly: events strictly before
+/// that arrival replay identically whether the span was split or not,
+/// and same-instant arrivals are never split across rounds.
+const ELIDE_CHUNK: usize = 1024;
+
 /// Sparse-barrier loop: candidate-set sync at arrivals, global sync at
 /// driver events, frontier-heap work selection, and barrier elision for
 /// backlog-free routing. See the module docs for the determinism
 /// argument.
-fn sparse_loop<D: EpochDriver>(
+fn sparse_loop<D: EpochDriver, S: ArrivalStream>(
     engines: &mut [Option<ExecEngine>],
-    queue: &mut VecDeque<Request>,
+    stream: &mut S,
     horizon: Us,
     driver: &mut D,
     mut pool: Option<&mut Pool>,
@@ -782,16 +836,12 @@ fn sparse_loop<D: EpochDriver>(
         && n_g > 0
         && (0..n_models).all(|m| driver.candidates_of(m).len() == n_g)
     {
-        return epoch_loop(engines, queue, horizon, driver, pool, stats);
+        return epoch_loop(engines, stream, horizon, driver, pool, stats);
     }
-    // Per-model pending arrival times, popped in lockstep with `queue`:
-    // what frontiers are computed from. Times only ever pop, so a
+    // Frontiers are computed from the stream's per-model peeks. Arrival
+    // times only ever pop from the stream, never appear earlier, so a
     // frontier computed earlier can never exceed a model's next arrival
     // — the invariant that makes run-ahead safe.
-    let mut arr: Vec<VecDeque<Us>> = vec![VecDeque::new(); n_models];
-    for r in queue.iter() {
-        arr[r.model].push_back(r.arrival);
-    }
     let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); n_g];
     rebuild_hosted(&mut hosted, driver, n_models);
     // `frontier[g]` is authoritative; the heap holds (frontier, g)
@@ -803,7 +853,7 @@ fn sparse_loop<D: EpochDriver>(
     {
         let t_drv = driver.next_event();
         for g in 0..n_g {
-            frontier[g] = safe_until(&hosted[g], &arr, t_drv, horizon);
+            frontier[g] = safe_until(&hosted[g], stream, t_drv, horizon);
             heap.push(Reverse((frontier[g], g)));
         }
     }
@@ -814,7 +864,7 @@ fn sparse_loop<D: EpochDriver>(
     let mut items: Vec<WorkItem> = Vec::with_capacity(n_g);
 
     loop {
-        let t_arr = queue.front().map(|r| r.arrival);
+        let t_arr = stream.peek_time();
         let t_drv = driver.next_event();
         let Some(t) = [t_arr, t_drv].into_iter().flatten().min() else { break };
         if t >= horizon {
@@ -825,12 +875,20 @@ fn sparse_loop<D: EpochDriver>(
         if !drv_due && driver.elides_barriers() {
             // ---- elided span [t, span_end): no driver event inside,
             // routing reads no engine state, so every arrival becomes a
-            // timestamped injection and the whole span is one round.
+            // timestamped injection and the span is one fat round —
+            // chunked to ELIDE_CHUNK arrivals so a lazy stream is never
+            // materialized wholesale (same-instant arrivals always stay
+            // in one chunk: splitting an instant would split its
+            // inject-all-then-step call group).
             let span_end = t_drv.unwrap_or(horizon).min(horizon);
             let mut last = None;
-            while queue.front().is_some_and(|r| r.arrival < span_end) {
-                let r = queue.pop_front().expect("checked front");
-                arr[r.model].pop_front();
+            let mut popped: usize = 0;
+            while stream.peek_time().is_some_and(|a| {
+                a < span_end && (popped < ELIDE_CHUNK || last == Some(a))
+            }) {
+                let r = stream.next_request().expect("peeked");
+                stats.requests_streamed += 1;
+                popped += 1;
                 if last != Some(r.arrival) {
                     stats.barriers_elided += 1;
                     last = Some(r.arrival);
@@ -842,17 +900,25 @@ fn sparse_loop<D: EpochDriver>(
                     inj[g].push((q.arrival, q));
                 }
             }
+            // Chunk-limited rounds drain only to the next pending
+            // arrival; the next loop iteration opens a fresh elided
+            // round there, replaying the identical call sequence.
+            let round_end = match stream.peek_time() {
+                Some(a) if a < span_end => a,
+                _ => span_end,
+            };
+            stats.note_in_flight(stream.buffered() as u64 + popped as u64);
             stats.epochs += 1;
-            stats.note_lookahead(span_end - t);
+            stats.note_lookahead(round_end - t);
             for (g, slot) in engines.iter_mut().enumerate() {
                 let Some(e) = slot.as_ref() else { continue };
-                if !inj[g].is_empty() || e.sim.next_event_time().is_some_and(|w| w < span_end)
+                if !inj[g].is_empty() || e.sim.next_event_time().is_some_and(|w| w < round_end)
                 {
                     items.push(WorkItem {
                         g,
                         engine: slot.take().expect("checked some"),
                         step_now: false,
-                        drain_to: span_end,
+                        drain_to: round_end,
                         inj: std::mem::take(&mut inj[g]),
                     });
                 }
@@ -862,18 +928,19 @@ fn sparse_loop<D: EpochDriver>(
                 "elided injections routed to an engine-less slot"
             );
             run_items(&mut pool, engines, &mut items, t, horizon);
-            // Every engine advanced to span_end: restart the frontier
+            // Every engine advanced to round_end: restart the frontier
             // bookkeeping from a clean heap.
             heap.clear();
             let t_next = driver.next_event();
             for g in 0..n_g {
-                frontier[g] = safe_until(&hosted[g], &arr, t_next, horizon);
+                frontier[g] = safe_until(&hosted[g], stream, t_next, horizon);
                 heap.push(Reverse((frontier[g], g)));
             }
             continue;
         }
 
         // ---- regular sparse barrier at t ----
+        stats.note_in_flight(stream.buffered() as u64);
         // Engines whose frontier expired must reach the barrier: the
         // candidates of every model arriving at t (by the frontier
         // invariant), plus — at driver events — everyone.
@@ -911,9 +978,9 @@ fn sparse_loop<D: EpochDriver>(
 
         touched.clear();
         driver.pre_arrivals(t, engines, &mut touched);
-        while queue.front().is_some_and(|r| r.arrival <= t) {
-            let r = queue.pop_front().expect("checked front");
-            arr[r.model].pop_front();
+        while stream.peek_time().is_some_and(|a| a <= t) {
+            let r = stream.next_request().expect("peeked");
+            stats.requests_streamed += 1;
             debug_assert!(
                 driver.candidates(&r).iter().all(|&g| frontier[g] <= t),
                 "candidate engine not synchronized at its model's arrival"
@@ -945,7 +1012,7 @@ fn sparse_loop<D: EpochDriver>(
         }
         for &g in &sync {
             let Some(e) = engines[g].as_ref() else { continue };
-            frontier[g] = safe_until(&hosted[g], &arr, t_next, horizon);
+            frontier[g] = safe_until(&hosted[g], stream, t_next, horizon);
             debug_assert!(frontier[g] >= t);
             stats.note_lookahead(frontier[g] - t);
             heap.push(Reverse((frontier[g], g)));
@@ -1010,9 +1077,13 @@ mod tests {
         s.note_lookahead(300);
         assert!((s.elision_ratio() - 0.75).abs() < 1e-12);
         assert_eq!(s.max_lookahead_us, 1_500);
+        s.note_in_flight(40);
+        s.note_in_flight(12);
+        assert_eq!(s.peak_in_flight, 40);
         let j = s.to_json().to_string_compact();
         assert!(j.contains("\"mode\":\"sparse\""), "{j}");
         assert!(j.contains("\"barriers_elided\":75"), "{j}");
+        assert!(j.contains("\"peak_in_flight\":40"), "{j}");
         assert!(s.render().contains("75%"), "{}", s.render());
     }
 
@@ -1139,13 +1210,19 @@ mod tests {
             surgery_at: surgery.then_some(6_000),
         };
         let horizon = 100_000;
-        run_epochs(
+        let stats = run_epochs(
             &mut engines,
             mini_stream(),
             horizon,
             ExecOpts { threads: Parallelism::Threads(1), mode },
             &mut driver,
         );
+        assert_eq!(
+            stats.requests_streamed,
+            mini_stream().len() as u64,
+            "every request must be pulled from the stream"
+        );
+        assert!(stats.peak_in_flight > 0);
         let reports: Vec<String> = engines
             .iter_mut()
             .map(|e| {
@@ -1176,16 +1253,18 @@ mod tests {
 
     #[test]
     fn safe_until_takes_earliest_relevant_arrival() {
-        let mut arr = vec![VecDeque::new(), VecDeque::new(), VecDeque::new()];
-        arr[0].push_back(900);
-        arr[2].push_back(400);
+        let reqs = vec![
+            Request { id: 0, model: 2, arrival: 400, deadline: 10_400 },
+            Request { id: 1, model: 0, arrival: 900, deadline: 10_900 },
+        ];
+        let s = MaterializedStream::new(reqs, 3);
         // Hosts models 0 and 1 (1 has no pending arrivals).
-        assert_eq!(safe_until(&[0, 1], &arr, None, 10_000), 900);
+        assert_eq!(safe_until(&[0, 1], &s, None, 10_000), 900);
         // A driver event before the arrival wins.
-        assert_eq!(safe_until(&[0, 1], &arr, Some(600), 10_000), 600);
+        assert_eq!(safe_until(&[0, 1], &s, Some(600), 10_000), 600);
         // Hosting nothing pending ⇒ horizon (or the driver event).
-        assert_eq!(safe_until(&[1], &arr, None, 10_000), 10_000);
+        assert_eq!(safe_until(&[1], &s, None, 10_000), 10_000);
         // Model 2 is not hosted here, so its earlier arrival is ignored.
-        assert_eq!(safe_until(&[0], &arr, None, 10_000), 900);
+        assert_eq!(safe_until(&[0], &s, None, 10_000), 900);
     }
 }

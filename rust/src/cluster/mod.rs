@@ -53,8 +53,8 @@ use crate::sched::{dstack::Dstack, gslice::Gslice, temporal::Temporal, triton::T
 use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
 use crate::util::json::Json;
 use crate::util::stats::percentile;
-use crate::workload::Request;
-use exec::{run_epochs, EpochDriver, ExecEngine, Touched};
+use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
+use exec::{run_epochs_stream, EpochDriver, ExecEngine, Touched};
 use routing::BacklogCache;
 
 /// Which scheduler runs on each GPU of the cluster.
@@ -260,20 +260,31 @@ pub fn fig12_workload(
     horizon_ms: f64,
     seed: u64,
 ) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
-    use crate::workload::{fig12_rates, merged_stream, Arrivals};
+    use crate::workload::merged_stream;
+    let (profiles, rates, specs) = fig12_specs();
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    (profiles, rates, reqs)
+}
+
+/// The Fig. 12 workload's arrival *specs* (profiles, offered rates,
+/// per-model `(process, slo_ms)` pairs) — what
+/// [`crate::workload::MergedStream`] turns into a lazy stream; the
+/// streamed leg of the equivalence matrix and `bench_streaming` build
+/// from these so the mix stays byte-identical to [`fig12_workload`].
+pub fn fig12_specs() -> (Vec<ModelProfile>, Vec<f64>, Vec<(Arrivals, f64)>) {
+    use crate::workload::fig12_rates;
     let spec = fig12_rates();
     let profiles: Vec<ModelProfile> = spec
         .iter()
         .map(|(n, _)| crate::profile::by_name(n).expect("fig12 model in zoo"))
         .collect();
     let rates: Vec<f64> = spec.iter().map(|&(_, r)| r).collect();
-    let arrivals: Vec<_> = profiles
+    let specs: Vec<(Arrivals, f64)> = profiles
         .iter()
         .zip(&rates)
         .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
         .collect();
-    let reqs = merged_stream(&arrivals, horizon_ms, seed);
-    (profiles, rates, reqs)
+    (profiles, rates, specs)
 }
 
 /// Operating points recomputed for a cluster's GPU type (knees differ
@@ -396,7 +407,9 @@ pub fn run_placement(
 }
 
 /// [`run_placement`] with explicit execution options (thread budget +
-/// barrier mode).
+/// barrier mode). Thin adapter over [`run_placement_stream`]: the
+/// vector becomes a [`MaterializedStream`], preserving the exact
+/// pre-streaming call sequence (and hence report bytes).
 #[allow(clippy::too_many_arguments)]
 pub fn run_placement_with(
     profiles: &[ModelProfile],
@@ -410,11 +423,33 @@ pub fn run_placement_with(
     label: &str,
     opts: ExecOpts,
 ) -> ClusterReport {
+    let stream = MaterializedStream::new(requests, profiles.len());
+    run_placement_stream(
+        profiles, gpus, pl, stream, horizon_ms, routing, sched, seed, label, opts,
+    )
+}
+
+/// [`run_placement`] pulling arrivals lazily from any
+/// [`ArrivalStream`] — memory stays O(stream backlog) instead of
+/// O(total requests). Byte-identical to the materialized path for the
+/// same arrival sequence (`tests/parallel_exec.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_placement_stream<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    pl: &Placement,
+    stream: S,
+    horizon_ms: f64,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    seed: u64,
+    label: &str,
+    opts: ExecOpts,
+) -> ClusterReport {
     assert_eq!(pl.n_gpus(), gpus.len(), "placement built for a different cluster");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
     let horizon = ms_to_us(horizon_ms);
-    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
 
     // One engine per GPU that hosts anything; empty GPUs stay idle.
     let mut engines: Vec<Option<ExecEngine>> = (0..n_gpus)
@@ -450,7 +485,7 @@ pub fn run_placement_with(
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
     };
-    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
+    let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
     let rejected = driver.rejected;
 
     let reports: Vec<Option<RunReport>> = engines
@@ -572,10 +607,32 @@ pub fn serve_cluster_with(
     seed: u64,
     opts: ExecOpts,
 ) -> ClusterReport {
+    let stream = MaterializedStream::new(requests, profiles.len());
+    serve_cluster_stream(
+        profiles, offered_rps, gpus, placement, routing, sched, stream, horizon_ms, seed, opts,
+    )
+}
+
+/// [`serve_cluster`] pulling arrivals lazily from any [`ArrivalStream`]
+/// (a [`crate::workload::MergedStream`] over generator specs, or a
+/// [`crate::workload::TraceStream`] replaying a production log).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_cluster_stream<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+) -> ClusterReport {
     let pl = place(profiles, offered_rps, gpus, placement);
     let label = format!("{}+{}+{}", placement.name(), routing.name(), sched.name());
-    run_placement_with(
-        profiles, gpus, &pl, requests, horizon_ms, routing, sched, seed, &label, opts,
+    run_placement_stream(
+        profiles, gpus, &pl, stream, horizon_ms, routing, sched, seed, &label, opts,
     )
 }
 

@@ -83,6 +83,26 @@ pub struct ModelSpec {
     pub trace: Vec<(f64, f64)>,
     /// Optional SLO override (ms); default = profile SLO.
     pub slo_ms: Option<f64>,
+    /// Optional explicit arrival process (an `"arrivals"` block with
+    /// `"kind": "poisson"|"uniform"|"mmpp"|"diurnal"|"flash"`). Takes
+    /// precedence over `rate`/`trace`/`poisson`; placement sizing uses
+    /// its [`crate::workload::Arrivals::peak_rate`].
+    pub arrivals: Option<crate::workload::Arrivals>,
+}
+
+/// Trace-replay block of a scenario (`"workload": {"trace": {...}}`):
+/// arrivals come from a recorded request log streamed through
+/// [`crate::workload::TraceStream`] instead of synthetic generators.
+/// Requires a `cluster` block (replay runs on the streaming execution
+/// core) and is incompatible with `lifecycle`/`unified` fleets, whose
+/// model names are generated rather than declared.
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    /// CSV or JSON-lines request log; a relative path is resolved
+    /// against the scenario file's directory by [`Scenario::from_file`].
+    pub path: std::path::PathBuf,
+    /// Out-of-order timestamp policy (`"reject"` default | `"sort"`).
+    pub on_unsorted: crate::workload::UnsortedPolicy,
 }
 
 /// Lifecycle block of a scenario: a long-tail Zipf fleet served under
@@ -151,6 +171,118 @@ pub struct Scenario {
     /// scenario runs through [`crate::unified::run_unified`], composing
     /// the lifecycle fleet with the (optional) `adaptive` knobs.
     pub unified: Option<UnifiedScenario>,
+    /// Optional trace-replay block — see [`TraceReplay`]. Present ⇒
+    /// arrivals stream from the recorded log (per-model `rate`s are
+    /// still used for placement sizing).
+    pub workload: Option<TraceReplay>,
+}
+
+/// Parse a per-model `"arrivals"` generator block.
+fn parse_arrivals(aj: &Json) -> Result<crate::workload::Arrivals, String> {
+    use crate::workload::Arrivals;
+    let nonneg = |key: &str, v: f64| -> Result<f64, String> {
+        if v.is_finite() && v >= 0.0 {
+            Ok(v)
+        } else {
+            Err(format!("arrivals.{key} must be finite and >= 0 (got {v})"))
+        }
+    };
+    let positive = |key: &str, v: f64| -> Result<f64, String> {
+        if v.is_finite() && v > 0.0 {
+            Ok(v)
+        } else {
+            Err(format!("arrivals.{key} must be finite and > 0 (got {v})"))
+        }
+    };
+    Ok(match aj.req_str("kind")? {
+        "poisson" => Arrivals::Poisson { rate: nonneg("rate", aj.req_f64("rate")?)? },
+        "uniform" => {
+            let jitter = aj.opt_f64("jitter", 0.5);
+            if !(0.0..=1.0).contains(&jitter) {
+                return Err(format!("arrivals.jitter must be in [0, 1] (got {jitter})"));
+            }
+            Arrivals::Uniform { rate: nonneg("rate", aj.req_f64("rate")?)?, jitter }
+        }
+        "mmpp" => Arrivals::Mmpp {
+            rate_low: nonneg("rate_low", aj.req_f64("rate_low")?)?,
+            rate_high: nonneg("rate_high", aj.req_f64("rate_high")?)?,
+            dwell_low_ms: positive("dwell_low_ms", aj.opt_f64("dwell_low_ms", 500.0))?,
+            dwell_high_ms: positive("dwell_high_ms", aj.opt_f64("dwell_high_ms", 500.0))?,
+        },
+        "diurnal" => Arrivals::Diurnal {
+            base: nonneg("base", aj.req_f64("base")?)?,
+            amplitude: {
+                let a = aj.opt_f64("amplitude", 0.0);
+                if !a.is_finite() {
+                    return Err(format!("arrivals.amplitude must be finite (got {a})"));
+                }
+                a
+            },
+            period_ms: positive("period_ms", aj.req_f64("period_ms")?)?,
+            phase: {
+                let p = aj.opt_f64("phase", 0.0);
+                if !p.is_finite() {
+                    return Err(format!("arrivals.phase must be finite (got {p})"));
+                }
+                p
+            },
+        },
+        "flash" => Arrivals::Flash {
+            base: nonneg("base", aj.req_f64("base")?)?,
+            mult: nonneg("mult", aj.opt_f64("mult", 1.0))?,
+            spike_start_ms: nonneg("spike_start_ms", aj.req_f64("spike_start_ms")?)?,
+            spike_ms: nonneg("spike_ms", aj.req_f64("spike_ms")?)?,
+        },
+        other => {
+            return Err(format!(
+                "unknown arrivals kind '{other}' (expected poisson|uniform|mmpp|diurnal|flash)"
+            ))
+        }
+    })
+}
+
+/// Serialize an arrival process back to its `"arrivals"` block form.
+fn arrivals_to_json(a: &crate::workload::Arrivals) -> Json {
+    use crate::workload::Arrivals;
+    match a {
+        Arrivals::Poisson { rate } => Json::obj(vec![
+            ("kind", Json::from("poisson")),
+            ("rate", Json::from(*rate)),
+        ]),
+        Arrivals::Uniform { rate, jitter } => Json::obj(vec![
+            ("kind", Json::from("uniform")),
+            ("rate", Json::from(*rate)),
+            ("jitter", Json::from(*jitter)),
+        ]),
+        // A `Trace` process round-trips through the model's `trace`
+        // field, not an arrivals block; emitting one here keeps
+        // to_json total for hand-built scenarios.
+        Arrivals::Trace { segments } => Json::obj(vec![
+            ("kind", Json::from("poisson")),
+            ("rate", Json::from(segments.iter().map(|&(_, r)| r).fold(0.0, f64::max))),
+        ]),
+        Arrivals::Mmpp { rate_low, rate_high, dwell_low_ms, dwell_high_ms } => Json::obj(vec![
+            ("kind", Json::from("mmpp")),
+            ("rate_low", Json::from(*rate_low)),
+            ("rate_high", Json::from(*rate_high)),
+            ("dwell_low_ms", Json::from(*dwell_low_ms)),
+            ("dwell_high_ms", Json::from(*dwell_high_ms)),
+        ]),
+        Arrivals::Diurnal { base, amplitude, period_ms, phase } => Json::obj(vec![
+            ("kind", Json::from("diurnal")),
+            ("base", Json::from(*base)),
+            ("amplitude", Json::from(*amplitude)),
+            ("period_ms", Json::from(*period_ms)),
+            ("phase", Json::from(*phase)),
+        ]),
+        Arrivals::Flash { base, mult, spike_start_ms, spike_ms } => Json::obj(vec![
+            ("kind", Json::from("flash")),
+            ("base", Json::from(*base)),
+            ("mult", Json::from(*mult)),
+            ("spike_start_ms", Json::from(*spike_start_ms)),
+            ("spike_ms", Json::from(*spike_ms)),
+        ]),
+    }
 }
 
 impl Scenario {
@@ -187,11 +319,16 @@ impl Scenario {
                 }
                 _ => Vec::new(),
             };
+            let arrivals = match mj.get("arrivals") {
+                Some(aj) => Some(parse_arrivals(aj)?),
+                None => None,
+            };
             models.push(ModelSpec {
                 name,
                 rate: mj.opt_f64("rate", 0.0),
                 trace,
                 slo_ms: mj.get("slo_ms").and_then(Json::as_f64),
+                arrivals,
             });
         }
         let cluster = match j.get("cluster") {
@@ -329,6 +466,29 @@ impl Scenario {
             }
             None => None,
         };
+        let workload = match j.get("workload") {
+            Some(wj) => {
+                let tj = wj.req("trace")?;
+                if cluster.is_none() {
+                    return Err("'workload.trace' requires a 'cluster' block \
+                                (replay runs on the streaming cluster core)"
+                        .into());
+                }
+                if lifecycle.is_some() {
+                    return Err("'workload.trace' is incompatible with a 'lifecycle' block \
+                                (fleet model names are generated, a trace cannot \
+                                 address them)"
+                        .into());
+                }
+                Some(TraceReplay {
+                    path: std::path::PathBuf::from(tj.req_str("path")?),
+                    on_unsorted: crate::workload::UnsortedPolicy::parse(
+                        tj.opt_str("on_unsorted", "reject"),
+                    )?,
+                })
+            }
+            None => None,
+        };
         let parallelism = match j.get("parallelism") {
             None => crate::cluster::Parallelism::Auto,
             Some(v) => match (v.as_str(), v.as_u64()) {
@@ -367,13 +527,24 @@ impl Scenario {
             adaptive,
             lifecycle,
             unified,
+            workload,
         })
     }
 
     pub fn from_file(path: &Path) -> Result<Scenario, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
-        Scenario::from_json(&text)
+        let mut sc = Scenario::from_json(&text)?;
+        // A relative trace path means "next to the scenario file", so
+        // shipped configs work from any working directory.
+        if let Some(w) = &mut sc.workload {
+            if w.path.is_relative() {
+                if let Some(dir) = path.parent() {
+                    w.path = dir.join(&w.path);
+                }
+            }
+        }
+        Ok(sc)
     }
 
     /// Serialize back to JSON (round-trip support for tooling).
@@ -399,6 +570,9 @@ impl Scenario {
                 }
                 if let Some(slo) = m.slo_ms {
                     pairs.push(("slo_ms", Json::from(slo)));
+                }
+                if let Some(a) = &m.arrivals {
+                    pairs.push(("arrivals", arrivals_to_json(a)));
                 }
                 Json::obj(pairs)
             })
@@ -473,6 +647,18 @@ impl Scenario {
                 ]),
             ));
         }
+        if let Some(w) = &self.workload {
+            pairs.push((
+                "workload",
+                Json::obj(vec![(
+                    "trace",
+                    Json::obj(vec![
+                        ("path", Json::from(w.path.display().to_string().as_str())),
+                        ("on_unsorted", Json::from(w.on_unsorted.label())),
+                    ]),
+                )]),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -490,13 +676,16 @@ impl Scenario {
             .collect()
     }
 
-    /// Build the arrival processes for each model.
+    /// Build the arrival processes for each model. An explicit
+    /// `arrivals` generator block wins over `trace`/`rate`/`poisson`.
     pub fn arrivals(&self) -> Vec<crate::workload::Arrivals> {
         use crate::workload::Arrivals;
         self.models
             .iter()
             .map(|m| {
-                if !m.trace.is_empty() {
+                if let Some(a) = &m.arrivals {
+                    a.clone()
+                } else if !m.trace.is_empty() {
                     Arrivals::trace(m.trace.clone())
                 } else if self.poisson {
                     Arrivals::Poisson { rate: m.rate }
@@ -507,19 +696,16 @@ impl Scenario {
             .collect()
     }
 
-    /// Offered rate per model (req/s) for placement sizing: the flat
-    /// rate, or the peak segment rate of a trace (place for the peak).
+    /// Offered rate per model (req/s) for placement sizing: the peak
+    /// rate of the model's arrival process — the flat rate, the peak
+    /// segment rate of a trace, or the peak of a generator block
+    /// (place for the peak). Trace replay has no generator to ask, so
+    /// the declared per-model `rate`s size the placement there.
     pub fn offered_rates(&self) -> Vec<f64> {
-        self.models
-            .iter()
-            .map(|m| {
-                if m.trace.is_empty() {
-                    m.rate
-                } else {
-                    m.trace.iter().map(|&(_, r)| r).fold(0.0, f64::max)
-                }
-            })
-            .collect()
+        if self.workload.is_some() {
+            return self.models.iter().map(|m| m.rate).collect();
+        }
+        self.arrivals().iter().map(|a| a.peak_rate()).collect()
     }
 
     /// Offered rate per model at t = 0 — what the adaptive control plane
@@ -601,7 +787,10 @@ pub fn run_scenario(sc: &Scenario) -> crate::metrics::RunReport {
 /// Panics if the scenario has no `cluster` block — callers branch on
 /// [`Scenario::cluster`].
 pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
-    use crate::workload::merged_stream;
+    use crate::workload::MergedStream;
+    if sc.workload.is_some() {
+        return run_trace_scenario(sc).expect("trace replay failed");
+    }
     let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
     let profiles = sc.profiles();
     let rates = sc.offered_rates();
@@ -611,20 +800,78 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         .zip(profiles.iter())
         .map(|(a, p)| (a, p.slo_ms))
         .collect();
-    let reqs = merged_stream(&specs, sc.horizon_ms, sc.seed);
+    // Arrivals flow lazily: generators → k-way merge → execution core,
+    // never materialized (byte-identical to the collected path).
+    let stream = MergedStream::new(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::cluster::serve_cluster_with(
+    crate::cluster::serve_cluster_stream(
         &profiles,
         &rates,
         &gpus,
         cl.placement,
         cl.routing,
         sc.gpu_sched(),
-        reqs,
+        stream,
         sc.horizon_ms,
         sc.seed,
         sc.exec_opts(),
     )
+}
+
+/// The [`crate::workload::TraceSpec`] a scenario's models induce: the
+/// trace's `model` column resolves against the declared model names
+/// (SLO overrides applied). Panics without a `workload` block.
+pub fn trace_spec(sc: &Scenario) -> crate::workload::TraceSpec {
+    let w = sc.workload.as_ref().expect("scenario has no workload.trace block");
+    crate::workload::TraceSpec {
+        models: sc.profiles().iter().map(|p| (p.name.clone(), p.slo_ms)).collect(),
+        horizon_ms: sc.horizon_ms,
+        policy: w.on_unsorted,
+    }
+}
+
+/// Run a scenario's trace-replay workload: the recorded log streams
+/// through [`crate::workload::TraceStream`] into the cluster engine
+/// (static placement, or the adaptive control plane when an
+/// `adaptive` block is present). Errors on unreadable/malformed/
+/// out-of-order traces instead of panicking — trace files are user
+/// input that only exists at run time.
+pub fn run_trace_scenario(sc: &Scenario) -> Result<crate::cluster::ClusterReport, String> {
+    let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
+    let w = sc.workload.as_ref().expect("scenario has no workload.trace block");
+    let profiles = sc.profiles();
+    let spec = trace_spec(sc);
+    let stream = crate::workload::TraceStream::open(&w.path, &spec)?;
+    let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
+    Ok(if sc.adaptive.is_some() {
+        let adaptive = sc.adaptive.clone().unwrap_or_default();
+        crate::controlplane::run_adaptive_stream(
+            &profiles,
+            &sc.initial_rates(),
+            &gpus,
+            cl.placement,
+            cl.routing,
+            sc.gpu_sched(),
+            &adaptive,
+            stream,
+            sc.horizon_ms,
+            sc.seed,
+            sc.exec_opts(),
+        )
+    } else {
+        crate::cluster::serve_cluster_stream(
+            &profiles,
+            &sc.offered_rates(),
+            &gpus,
+            cl.placement,
+            cl.routing,
+            sc.gpu_sched(),
+            stream,
+            sc.horizon_ms,
+            sc.seed,
+            sc.exec_opts(),
+        )
+    })
 }
 
 /// Run a scenario's cluster block through the adaptive control plane:
@@ -633,7 +880,10 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
 /// default [`crate::controlplane::AdaptiveCfg`] when the scenario has no
 /// `adaptive` block.
 pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
-    use crate::workload::merged_stream;
+    use crate::workload::MergedStream;
+    if sc.workload.is_some() {
+        return run_trace_scenario(sc).expect("trace replay failed");
+    }
     let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
     let adaptive = sc.adaptive.clone().unwrap_or_default();
     let profiles = sc.profiles();
@@ -644,9 +894,9 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         .zip(profiles.iter())
         .map(|(a, p)| (a, p.slo_ms))
         .collect();
-    let reqs = merged_stream(&specs, sc.horizon_ms, sc.seed);
+    let stream = MergedStream::new(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::controlplane::run_adaptive_with(
+    crate::controlplane::run_adaptive_stream(
         &profiles,
         &initial,
         &gpus,
@@ -654,7 +904,7 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         cl.routing,
         sc.gpu_sched(),
         &adaptive,
-        reqs,
+        stream,
         sc.horizon_ms,
         sc.seed,
         sc.exec_opts(),
@@ -1106,6 +1356,124 @@ mod tests {
         )
         .unwrap();
         assert_eq!(sc.offered_rates(), vec![900.0, 250.0]);
+    }
+
+    #[test]
+    fn arrivals_blocks_parse_validate_and_roundtrip() {
+        use crate::workload::Arrivals;
+        let sc = Scenario::from_json(
+            r#"{"horizon_ms": 1000, "models": [
+                {"name": "mobilenet", "rate": 100, "arrivals":
+                    {"kind": "mmpp", "rate_low": 50, "rate_high": 200,
+                     "dwell_low_ms": 400, "dwell_high_ms": 200}},
+                {"name": "alexnet", "arrivals":
+                    {"kind": "diurnal", "base": 100, "amplitude": 80, "period_ms": 500}},
+                {"name": "resnet50", "arrivals":
+                    {"kind": "flash", "base": 50, "mult": 6,
+                     "spike_start_ms": 400, "spike_ms": 100}}
+            ]}"#,
+        )
+        .unwrap();
+        let arr = sc.arrivals();
+        assert!(matches!(arr[0], Arrivals::Mmpp { rate_low: 50.0, rate_high: 200.0, .. }));
+        assert!(matches!(arr[1], Arrivals::Diurnal { base: 100.0, .. }));
+        assert!(matches!(arr[2], Arrivals::Flash { mult: 6.0, .. }));
+        // Placement sizes for the generator peaks, not the `rate` field.
+        assert_eq!(sc.offered_rates(), vec![200.0, 180.0, 300.0]);
+        // t = 0 rates: MMPP reports its stationary mean.
+        let init = sc.initial_rates();
+        assert!((init[0] - 100.0).abs() < 1e-9, "{init:?}");
+        // Round-trips through to_json.
+        let sc2 = Scenario::from_json(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sc2.offered_rates(), sc.offered_rates());
+        assert!(matches!(sc2.arrivals()[0], Arrivals::Mmpp { .. }));
+        // Bad generator blocks are rejected with an error, not a panic.
+        let with = |block: &str| {
+            Scenario::from_json(&format!(
+                r#"{{"models": [{{"name": "alexnet", "arrivals": {block}}}]}}"#
+            ))
+        };
+        for bad in [
+            r#"{"kind": "magic"}"#,
+            r#"{"kind": "poisson"}"#,
+            r#"{"kind": "poisson", "rate": -1}"#,
+            r#"{"kind": "mmpp", "rate_low": 1, "rate_high": 2, "dwell_low_ms": 0}"#,
+            r#"{"kind": "diurnal", "base": 10, "period_ms": 0}"#,
+            r#"{"kind": "uniform", "rate": 10, "jitter": 1.5}"#,
+            r#"{"kind": "flash", "base": 10, "mult": 2}"#,
+        ] {
+            assert!(with(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn workload_trace_block_parses_and_validates() {
+        let good = r#"{
+            "cluster": {"gpus": ["V100"]},
+            "workload": {"trace": {"path": "t.csv", "on_unsorted": "sort"}},
+            "models": [{"name": "alexnet", "rate": 100}]}"#;
+        let sc = Scenario::from_json(good).unwrap();
+        let w = sc.workload.as_ref().expect("workload block parsed");
+        assert_eq!(w.path, std::path::PathBuf::from("t.csv"));
+        assert_eq!(w.on_unsorted, crate::workload::UnsortedPolicy::Sort);
+        // Round-trips (default policy too).
+        let sc2 = Scenario::from_json(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sc2.workload.as_ref().unwrap().on_unsorted, w.on_unsorted);
+        // Trace replay sizes placement from the declared rates.
+        assert_eq!(sc.offered_rates(), vec![100.0]);
+        for bad in [
+            // No cluster block.
+            r#"{"workload": {"trace": {"path": "t.csv"}},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+            // Lifecycle fleets have generated names — incompatible.
+            r#"{"cluster": {"gpus": ["V100"]},
+                "lifecycle": {"n_models": 4, "total_rps": 50},
+                "workload": {"trace": {"path": "t.csv"}},
+                "models": [{"name": "alexnet"}]}"#,
+            // Unknown policy / missing path.
+            r#"{"cluster": {"gpus": ["V100"]},
+                "workload": {"trace": {"path": "t.csv", "on_unsorted": "magic"}},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]},
+                "workload": {"trace": {}},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+        ] {
+            assert!(Scenario::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn trace_replay_runs_end_to_end() {
+        // from_file resolves the trace next to the scenario file.
+        let dir = std::env::temp_dir().join("dstack_cfg_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("t.csv"),
+            "timestamp_ms,model,count\n0,mobilenet,2\n5,resnet50,1\n",
+        )
+        .unwrap();
+        let cfg = r#"{
+            "name": "replay",
+            "horizon_ms": 600,
+            "cluster": {"gpus": ["V100"]},
+            "workload": {"trace": {"path": "t.csv"}},
+            "models": [
+                {"name": "mobilenet", "rate": 150},
+                {"name": "resnet50", "rate": 100}
+            ]}"#;
+        std::fs::write(dir.join("sc.json"), cfg).unwrap();
+        let sc = Scenario::from_file(&dir.join("sc.json")).unwrap();
+        assert_eq!(sc.workload.as_ref().unwrap().path, dir.join("t.csv"));
+        let rep = run_trace_scenario(&sc).unwrap();
+        assert_eq!(rep.served.iter().sum::<u64>(), 3, "all trace requests served");
+        // run_cluster_scenario takes the same path when a workload
+        // block is present.
+        let rep2 = run_cluster_scenario(&sc);
+        assert_eq!(rep.to_json().to_string_compact(), rep2.to_json().to_string_compact());
+        // A missing trace file is an Err, not a panic.
+        let mut missing = sc.clone();
+        missing.workload.as_mut().unwrap().path = dir.join("nope.csv");
+        assert!(run_trace_scenario(&missing).is_err());
     }
 
     #[test]

@@ -52,7 +52,7 @@
 //! adaptive-vs-static comparison is a first-class reportable figure
 //! (`figures::fig13`, `dstack adaptive`).
 
-use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine, Touched};
+use crate::cluster::exec::{run_epochs_stream, EpochDriver, ExecEngine, Touched};
 use crate::cluster::routing::BacklogCache;
 use crate::cluster::{
     place, ClusterReport, ExecOpts, GpuModelShare, GpuReport, GpuSched, Placement,
@@ -64,7 +64,7 @@ use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::json::Json;
 use crate::util::stats::percentile;
-use crate::workload::Request;
+use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
 
 /// Control-plane configuration (the scenario `"adaptive"` block — see
 /// `docs/CONFIG.md`).
@@ -705,7 +705,8 @@ pub fn run_adaptive(
 }
 
 /// [`run_adaptive`] with explicit execution options (thread budget +
-/// barrier mode).
+/// barrier mode). Thin adapter over [`run_adaptive_stream`] via
+/// [`MaterializedStream`] — identical report bytes.
 #[allow(clippy::too_many_arguments)]
 pub fn run_adaptive_with(
     profiles: &[ModelProfile],
@@ -720,13 +721,37 @@ pub fn run_adaptive_with(
     seed: u64,
     opts: ExecOpts,
 ) -> ClusterReport {
+    let stream = MaterializedStream::new(requests, profiles.len());
+    run_adaptive_stream(
+        profiles, initial_rates, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts,
+    )
+}
+
+/// [`run_adaptive`] pulling arrivals lazily from any [`ArrivalStream`]
+/// — the control plane's demand estimation, drift detection and
+/// rebalance schedule are all unchanged (they observe routed requests,
+/// not the source container).
+#[allow(clippy::too_many_arguments)]
+pub fn run_adaptive_stream<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &AdaptiveCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+) -> ClusterReport {
     cfg.validate().expect("invalid adaptive config");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
     let horizon = ms_to_us(horizon_ms);
     let interval = ms_to_us(cfg.interval_ms).max(1);
     let migration_us = ms_to_us(cfg.migration_cost_ms);
-    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
 
     // --- initial placement --------------------------------------------------
     let initial = place(profiles, initial_rates, gpus, placement);
@@ -791,7 +816,7 @@ pub fn run_adaptive_with(
         rejected: vec![0u64; n_models],
         next_tick: interval,
     };
-    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
+    let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
 
     let AdaptiveDriver {
         live, local_map, knee_load, shed_rps, estimator, mut stats, rejected, ..
@@ -905,7 +930,20 @@ pub fn drift_workload(
     horizon_ms: f64,
     seed: u64,
 ) -> (Vec<ModelProfile>, Vec<f64>, Vec<f64>, Vec<Request>) {
-    use crate::workload::{drift_rates, merged_stream, Arrivals};
+    use crate::workload::merged_stream;
+    let (profiles, initial, peak, specs) = drift_specs(horizon_ms);
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    (profiles, initial, peak, reqs)
+}
+
+/// [`drift_workload`]'s arrival *specs* (profiles, initial rates, peak
+/// rates, per-model `(process, slo_ms)` pairs) — feed them to
+/// [`crate::workload::MergedStream`] for the lazy, byte-identical
+/// streamed leg of the equivalence matrix.
+pub fn drift_specs(
+    horizon_ms: f64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<f64>, Vec<(Arrivals, f64)>) {
+    use crate::workload::drift_rates;
     let spec = drift_rates(horizon_ms);
     let profiles: Vec<ModelProfile> = spec
         .iter()
@@ -915,14 +953,13 @@ pub fn drift_workload(
         .iter()
         .map(|(_, tr)| tr.iter().map(|&(_, r)| r).fold(0.0, f64::max))
         .collect();
-    let arrivals: Vec<_> = profiles
+    let arrivals: Vec<(Arrivals, f64)> = profiles
         .iter()
         .zip(&spec)
         .map(|(p, (_, tr))| (Arrivals::trace(tr.clone()), p.slo_ms))
         .collect();
     let initial: Vec<f64> = arrivals.iter().map(|(a, _)| a.rate_at(0.0)).collect();
-    let reqs = merged_stream(&arrivals, horizon_ms, seed);
-    (profiles, initial, peak, reqs)
+    (profiles, initial, peak, arrivals)
 }
 
 /// The 2×V100 GPU set [`drift_workload`] is sized for.

@@ -886,6 +886,67 @@ pub fn fig15() -> FigData {
     out
 }
 
+/// Fig. 16 (beyond the paper): throughput and SLO misses when the same
+/// mean offered load arrives bursty instead of Poisson — the Fig. 12
+/// model mix on 4×T4 under each canonical arrival shape
+/// ([`crate::workload::bursty_arrivals`]): MMPP burst trains, a
+/// diurnal sine, and a 6× flash crowd. Arrivals stream lazily through
+/// the execution core; the last two columns are the streaming
+/// telemetry (total requests pulled, max buffered in flight) showing
+/// the run never materializes the workload.
+pub fn fig_streaming() -> FigData {
+    use crate::cluster::{
+        fig12_specs, serve_cluster_stream, ExecOpts, GpuSched, PlacementPolicy, RoutingPolicy,
+    };
+    use crate::workload::{bursty_arrivals, MergedStream};
+    let mut out = FigData::new(
+        "fig16",
+        "throughput + SLO misses under bursty arrival streams (fig12 mix, 4xT4)",
+        &[
+            "workload",
+            "total_rps",
+            "viol_per_s",
+            "shed_rps",
+            "requests_streamed",
+            "peak_in_flight",
+        ],
+    );
+    let horizon_ms = 4_000.0;
+    let seed = 42;
+    let (profiles, rates, _) = fig12_specs();
+    let gpus: Vec<GpuSpec> = (0..4).map(|_| T4.clone()).collect();
+    for kind in ["poisson", "mmpp", "diurnal", "flash"] {
+        let specs: Vec<_> = profiles
+            .iter()
+            .zip(&rates)
+            .map(|(p, &r)| (bursty_arrivals(kind, r, horizon_ms).expect("known kind"), p.slo_ms))
+            .collect();
+        let stream = MergedStream::new(&specs, horizon_ms, seed);
+        let rep = serve_cluster_stream(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            stream,
+            horizon_ms,
+            seed,
+            ExecOpts::default(),
+        );
+        let x = rep.exec.as_ref().expect("cluster runs attach exec stats");
+        out.push(vec![
+            kind.to_string(),
+            f(rep.total_throughput()),
+            f(rep.violations_per_sec.iter().sum::<f64>()),
+            f(rep.shed_rps.iter().sum::<f64>()),
+            x.requests_streamed.to_string(),
+            x.peak_in_flight.to_string(),
+        ]);
+    }
+    out
+}
+
 /// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
 pub fn generate(which: &str) -> Vec<FigData> {
     match which {
@@ -907,6 +968,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
         "13" | "adaptive" => vec![fig13()],
         "14" | "lifecycle" => vec![fig14()],
         "15" | "unified" => vec![fig15()],
+        "16" | "streaming" => vec![fig_streaming()],
         "tables" => vec![table1(), table2(), table3(), table6()],
         "ablation" => vec![ablation()],
         "all" => {
@@ -928,6 +990,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
                 fig13(),
                 fig14(),
                 fig15(),
+                fig_streaming(),
             ];
             v.extend([table1(), table2(), table3(), table6()]);
             v

@@ -46,7 +46,7 @@ pub mod store;
 
 pub use store::{EvictionPolicy, ModelStore};
 
-use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine, Touched};
+use crate::cluster::exec::{run_epochs_stream, EpochDriver, ExecEngine, Touched};
 use crate::cluster::routing::BacklogCache;
 use crate::cluster::{
     ClusterReport, ExecOpts, GpuModelShare, GpuReport, GpuSched, Replica, ResidencyPlan,
@@ -58,7 +58,7 @@ use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::json::Json;
 use crate::util::stats::percentile;
-use crate::workload::Request;
+use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Lifecycle configuration (the scenario `"lifecycle"` block — see
@@ -228,8 +228,34 @@ pub fn longtail_workload_from(
     horizon_ms: f64,
     seed: u64,
 ) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+    use crate::workload::merged_stream;
+    let (profiles, rates, specs) = longtail_specs_from(base, n_models, alpha, total_rps);
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    (profiles, rates, reqs)
+}
+
+/// [`longtail_workload`]'s arrival *specs* over the default zoo — the
+/// lazy-stream leg of the equivalence matrix builds a
+/// [`crate::workload::MergedStream`] from these.
+pub fn longtail_specs(
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<(Arrivals, f64)>) {
+    let base = crate::profile::zoo();
+    longtail_specs_from(&base, n_models, alpha, total_rps)
+}
+
+/// [`longtail_workload_from`] without the materialization step:
+/// (profiles, rates, per-model `(process, slo_ms)` specs).
+pub fn longtail_specs_from(
+    base: &[ModelProfile],
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<(Arrivals, f64)>) {
     assert!(!base.is_empty(), "long-tail fleet needs at least one base model");
-    use crate::workload::{merged_stream, zipf_rates, Arrivals};
+    use crate::workload::zipf_rates;
     let profiles: Vec<ModelProfile> = (0..n_models)
         .map(|i| {
             let mut p = base[i % base.len()].clone();
@@ -239,13 +265,12 @@ pub fn longtail_workload_from(
         })
         .collect();
     let rates = zipf_rates(n_models, alpha, total_rps);
-    let specs: Vec<_> = profiles
+    let specs: Vec<(Arrivals, f64)> = profiles
         .iter()
         .zip(&rates)
         .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
         .collect();
-    let reqs = merged_stream(&specs, horizon_ms, seed);
-    (profiles, rates, reqs)
+    (profiles, rates, specs)
 }
 
 /// Victim→replica reachability closure over a static hosting table:
@@ -651,7 +676,8 @@ pub fn run_lifecycle(
 }
 
 /// [`run_lifecycle`] with explicit execution options (thread budget +
-/// barrier mode).
+/// barrier mode). Thin adapter over [`run_lifecycle_stream`] via
+/// [`MaterializedStream`] — identical report bytes.
 #[allow(clippy::too_many_arguments)]
 pub fn run_lifecycle_with(
     profiles: &[ModelProfile],
@@ -661,6 +687,28 @@ pub fn run_lifecycle_with(
     sched: GpuSched,
     cfg: &LifecycleCfg,
     requests: Vec<Request>,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+) -> ClusterReport {
+    let stream = MaterializedStream::new(requests, profiles.len());
+    run_lifecycle_stream(
+        profiles, gpus, plan, routing, sched, cfg, stream, horizon_ms, seed, opts,
+    )
+}
+
+/// [`run_lifecycle`] pulling arrivals lazily from any [`ArrivalStream`]
+/// — faults, evictions and idle expiries are driven by routed requests
+/// and driver events, so laziness changes nothing but memory.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lifecycle_stream<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    plan: &ResidencyPlan,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    stream: S,
     horizon_ms: f64,
     seed: u64,
     opts: ExecOpts,
@@ -675,7 +723,6 @@ pub fn run_lifecycle_with(
     } else {
         None
     };
-    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
     let pinned: Vec<bool> =
         profiles.iter().map(|p| cfg.pinned.iter().any(|n| n == &p.name)).collect();
 
@@ -746,7 +793,7 @@ pub fn run_lifecycle_with(
         idle_timeout,
         scratch: VecDeque::new(),
     };
-    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
+    let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
     let LifecycleDriver { stores, rejected, held, cold_delays_ms, mut stats, .. } = driver;
 
     // --- finalize + aggregate ----------------------------------------------
@@ -900,6 +947,29 @@ pub fn serve_longtail_with(
     seed: u64,
     opts: ExecOpts,
 ) -> ClusterReport {
+    let stream = MaterializedStream::new(requests, profiles.len());
+    serve_longtail_stream(
+        profiles, offered_rps, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts,
+    )
+}
+
+/// [`serve_longtail`] pulling arrivals lazily from any
+/// [`ArrivalStream`]: residency planning + the streamed lifecycle run.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_longtail_stream<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: crate::cluster::PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+) -> ClusterReport {
     let budgets = cfg.budgets(gpus);
     assert!(
         budgets.iter().all(|&b| b > 0),
@@ -914,8 +984,8 @@ pub fn serve_longtail_with(
         &budgets,
         cfg.min_replicas,
     );
-    run_lifecycle_with(
-        profiles, gpus, &plan, routing, sched, cfg, requests, horizon_ms, seed, opts,
+    run_lifecycle_stream(
+        profiles, gpus, &plan, routing, sched, cfg, stream, horizon_ms, seed, opts,
     )
 }
 

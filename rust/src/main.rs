@@ -3,7 +3,7 @@
 //! figure of the paper.
 //!
 //! Subcommands:
-//!   figures  --fig <2|3|4|...|15|all> [--out results]
+//!   figures  --fig <2|3|4|...|16|all> [--out results]
 //!   tables   --table <1|2|3|6|all>    [--out results]
 //!   simulate --config <scenario.json> [--threads N|auto]
 //!            [--exec-mode sparse|epoch] [--verbose]   (scenarios
@@ -11,11 +11,17 @@
 //!            cluster engine; adding an "adaptive" block runs the
 //!            adaptive control plane; a "lifecycle" block runs the
 //!            long-tail memory manager; a "unified" block runs the
-//!            merged cold-start-aware control plane)
+//!            merged cold-start-aware control plane; a "workload"
+//!            block with a "trace" entry replays a recorded request
+//!            log through the streaming cluster core)
 //!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
 //!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
-//!            [--horizon ms] [--seed N] [--threads N|auto]   — Fig. 12
-//!            workload on an arbitrary cluster
+//!            [--horizon ms] [--seed N] [--threads N|auto]
+//!            [--workload poisson|mmpp|diurnal|flash]
+//!            [--trace <log.csv|log.jsonl> [--on-unsorted reject|sort]]
+//!            — Fig. 12 model mix on an arbitrary cluster; arrivals
+//!            stream lazily from a synthetic generator or a recorded
+//!            request log (timestamp_ms, model, count columns)
 //!   adaptive [--config <scenario.json>] [--horizon ms] [--seed N]
 //!            [--interval ms] [--alpha X] [--threshold X] [--rearm X]
 //!            [--cooldown N] [--migration-cost ms] [--threads N|auto]
@@ -166,7 +172,10 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             return Ok(());
         }
         let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
-        let rep = if sc.adaptive.is_some() {
+        let rep = if sc.workload.is_some() {
+            // Trace replay: file errors surface as CLI errors, not panics.
+            dstack::config::run_trace_scenario(&sc).map_err(|e| anyhow::anyhow!("{e}"))?
+        } else if sc.adaptive.is_some() {
             dstack::config::run_adaptive_scenario(&sc)
         } else {
             dstack::config::run_cluster_scenario(&sc)
@@ -623,9 +632,8 @@ fn unified_cmd(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
-    use dstack::cluster::{
-        fig12_workload, serve_cluster_with, GpuSched, PlacementPolicy, RoutingPolicy,
-    };
+    use dstack::cluster::{fig12_specs, serve_cluster_stream, GpuSched, PlacementPolicy, RoutingPolicy};
+    use dstack::workload::{bursty_arrivals, Arrivals, MergedStream, TraceSpec, TraceStream, UnsortedPolicy};
     let gpu_names = args.get_or("gpus", "T4,T4,T4,T4");
     let mut gpus = Vec::new();
     for n in gpu_names.split(',') {
@@ -644,17 +652,47 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 77);
     let opts = exec_opts_from_args(args, dstack::cluster::ExecOpts::default())?;
 
-    // The Fig. 12 asymmetric-demand workload over the chosen cluster.
-    let (profiles, rates, reqs) = fig12_workload(horizon_ms, seed);
-    let rep = serve_cluster_with(
-        &profiles, &rates, &gpus, placement, routing, sched, reqs, horizon_ms, seed, opts,
-    );
+    // The Fig. 12 asymmetric-demand model mix over the chosen cluster;
+    // arrivals stream lazily from a recorded trace (`--trace`), a bursty
+    // generator (`--workload mmpp|diurnal|flash`), or Poisson (default).
+    let (profiles, rates, _) = fig12_specs();
+    let rep = if let Some(tp) = args.get("trace") {
+        let policy = UnsortedPolicy::parse(args.get_or("on-unsorted", "reject"))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let spec = TraceSpec {
+            models: profiles.iter().map(|p| (p.name.clone(), p.slo_ms)).collect(),
+            horizon_ms,
+            policy,
+        };
+        let stream =
+            TraceStream::open(Path::new(tp), &spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("replaying trace {tp} ({} requests in horizon)", stream.total_requests());
+        serve_cluster_stream(
+            &profiles, &rates, &gpus, placement, routing, sched, stream, horizon_ms, seed, opts,
+        )
+    } else {
+        let kind = args.get_or("workload", "poisson");
+        let specs: Vec<(Arrivals, f64)> = profiles
+            .iter()
+            .zip(&rates)
+            .map(|(p, &r)| {
+                bursty_arrivals(kind, r, horizon_ms)
+                    .map(|a| (a, p.slo_ms))
+                    .map_err(|e| anyhow::anyhow!("{e}"))
+            })
+            .collect::<Result<_, _>>()?;
+        let stream = MergedStream::new(&specs, horizon_ms, seed);
+        serve_cluster_stream(
+            &profiles, &rates, &gpus, placement, routing, sched, stream, horizon_ms, seed, opts,
+        )
+    };
     println!(
-        "cluster [{}] placement={} routing={} sched={} horizon={:.0}ms",
+        "cluster [{}] placement={} routing={} sched={} workload={} horizon={:.0}ms",
         gpu_names,
         placement.name(),
         routing.name(),
         sched.name(),
+        args.get("trace").map(|_| "trace").unwrap_or(args.get_or("workload", "poisson")),
         horizon_ms
     );
     let model_names: Vec<String> = profiles.iter().map(|p| p.name.clone()).collect();

@@ -50,7 +50,7 @@
 //! `rust/configs/cluster_unified_drift.json`), sweepable to 64+ GPUs via
 //! [`unified_gpus`].
 
-use crate::cluster::exec::{run_epochs, EpochDriver, ExecEngine, Touched};
+use crate::cluster::exec::{run_epochs_stream, EpochDriver, ExecEngine, Touched};
 use crate::cluster::placement::plan_residency_biased;
 use crate::cluster::routing::BacklogCache;
 use crate::cluster::{
@@ -66,7 +66,7 @@ use crate::metrics::RunReport;
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::stats::percentile;
-use crate::workload::Request;
+use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Unified control-plane configuration (the scenario `"unified"` block —
@@ -606,7 +606,8 @@ pub fn run_unified(
 }
 
 /// [`run_unified`] with explicit execution options (thread budget +
-/// barrier mode).
+/// barrier mode). Thin adapter over [`run_unified_stream`] via
+/// [`MaterializedStream`] — identical report bytes.
 #[allow(clippy::too_many_arguments)]
 pub fn run_unified_with(
     profiles: &[ModelProfile],
@@ -617,6 +618,30 @@ pub fn run_unified_with(
     sched: GpuSched,
     cfg: &UnifiedCfg,
     requests: Vec<Request>,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+) -> ClusterReport {
+    let stream = MaterializedStream::new(requests, profiles.len());
+    run_unified_stream(
+        profiles, initial_rates, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts,
+    )
+}
+
+/// [`run_unified`] pulling arrivals lazily from any [`ArrivalStream`] —
+/// drift replans, residency biasing and eviction pressure all observe
+/// routed traffic, so only the memory profile changes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_unified_stream<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &UnifiedCfg,
+    stream: S,
     horizon_ms: f64,
     seed: u64,
     opts: ExecOpts,
@@ -637,7 +662,6 @@ pub fn run_unified_with(
     } else {
         None
     };
-    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
     let pinned: Vec<bool> =
         profiles.iter().map(|p| lcfg.pinned.iter().any(|n| n == &p.name)).collect();
 
@@ -736,7 +760,7 @@ pub fn run_unified_with(
         evictions_at_tick: 0,
         scratch: VecDeque::new(),
     };
-    let exec_stats = run_epochs(&mut engines, requests, horizon, opts, &mut driver);
+    let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
     let UnifiedDriver {
         replicas,
         local_map,
@@ -897,8 +921,37 @@ pub fn drifting_longtail_workload_from(
     horizon_ms: f64,
     seed: u64,
 ) -> (Vec<ModelProfile>, Vec<f64>, Vec<Request>) {
+    use crate::workload::merged_stream;
+    let (profiles, r0, specs) =
+        drifting_longtail_specs_from(base, n_models, alpha, total_rps, horizon_ms);
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    (profiles, r0, reqs)
+}
+
+/// [`drifting_longtail_workload`]'s arrival *specs* over the default
+/// zoo — the streamed leg of the equivalence matrix builds a
+/// [`crate::workload::MergedStream`] from these.
+pub fn drifting_longtail_specs(
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+    horizon_ms: f64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<(Arrivals, f64)>) {
+    let base = crate::profile::zoo();
+    drifting_longtail_specs_from(&base, n_models, alpha, total_rps, horizon_ms)
+}
+
+/// [`drifting_longtail_workload_from`] without the materialization
+/// step: (profiles, initial rates, per-model `(process, slo_ms)` specs).
+pub fn drifting_longtail_specs_from(
+    base: &[ModelProfile],
+    n_models: usize,
+    alpha: f64,
+    total_rps: f64,
+    horizon_ms: f64,
+) -> (Vec<ModelProfile>, Vec<f64>, Vec<(Arrivals, f64)>) {
     assert!(!base.is_empty(), "long-tail fleet needs at least one base model");
-    use crate::workload::{merged_stream, zipf_rates, Arrivals};
+    use crate::workload::zipf_rates;
     let profiles: Vec<ModelProfile> = (0..n_models)
         .map(|i| {
             let mut p = base[i % base.len()].clone();
@@ -910,13 +963,12 @@ pub fn drifting_longtail_workload_from(
     let r0 = zipf_rates(n_models, alpha, total_rps);
     let mid = horizon_ms / 2.0;
     let r1: Vec<f64> = (0..n_models).map(|i| r0[(i + n_models / 2) % n_models]).collect();
-    let specs: Vec<_> = profiles
+    let specs: Vec<(Arrivals, f64)> = profiles
         .iter()
         .enumerate()
         .map(|(i, p)| (Arrivals::trace(vec![(0.0, r0[i]), (mid, r1[i])]), p.slo_ms))
         .collect();
-    let reqs = merged_stream(&specs, horizon_ms, seed);
-    (profiles, r0, reqs)
+    (profiles, r0, specs)
 }
 
 /// A homogeneous V100 cluster of `n` GPUs — the canonical unified

@@ -5,9 +5,27 @@
 //! proportion to their SLOs, and also evaluates dynamically varying
 //! rates (Fig. 11b). This module produces the equivalent open-loop
 //! request streams in virtual time.
+//!
+//! Streams come in two shapes:
+//!
+//! - **Materialized** (`Vec<Request>`): [`merged_stream`] collects every
+//!   arrival up front — fine for test-scale horizons, O(total) memory.
+//! - **Lazy** ([`stream::ArrivalStream`]): [`stream::MergedStream`]
+//!   k-way-merges per-model [`ArrivalIter`]s on demand, and
+//!   [`trace::TraceStream`] replays request logs line by line — both
+//!   O(backlog) memory, which is what lets the execution core serve a
+//!   day of production traffic (10⁷–10⁸ requests) without holding the
+//!   stream in memory. The two shapes are byte-identical by
+//!   construction: `merged_stream` *is* `MergedStream` collected.
 
 use crate::gpu::{ms_to_us, Us};
 use crate::util::rng::Pcg32;
+
+pub mod stream;
+pub mod trace;
+
+pub use stream::{ArrivalStream, MaterializedStream, MergedStream};
+pub use trace::{load_trace, TraceSpec, TraceStream, UnsortedPolicy};
 
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,6 +49,21 @@ pub enum Arrivals {
     /// Piecewise-constant rates: (start_ms, rate) segments, used for the
     /// dynamic-rate experiment (Fig. 11b).
     Trace { segments: Vec<(f64, f64)> },
+    /// 2-state Markov-modulated Poisson process: Poisson arrivals at
+    /// `rate_low` / `rate_high` req/s, dwelling exponentially with the
+    /// given mean in each state (starting low at t = 0). The bursty
+    /// arrival shape serving systems are actually evaluated on
+    /// (cf. SGPRS / Nexus trace studies in PAPERS.md).
+    Mmpp { rate_low: f64, rate_high: f64, dwell_low_ms: f64, dwell_high_ms: f64 },
+    /// Diurnal sine wave: instantaneous rate
+    /// `max(0, base + amplitude·sin(2π(t/period + phase)))` req/s,
+    /// generated exactly by Lewis–Shedler thinning at
+    /// `base + |amplitude|`.
+    Diurnal { base: f64, amplitude: f64, period_ms: f64, phase: f64 },
+    /// Flash crowd: steady `base` req/s except a multiplicative spike —
+    /// `base·mult` over `[spike_start_ms, spike_start_ms + spike_ms)`.
+    /// Sugar for the equivalent piecewise-constant [`Arrivals::Trace`].
+    Flash { base: f64, mult: f64, spike_start_ms: f64, spike_ms: f64 },
 }
 
 impl Arrivals {
@@ -76,16 +109,60 @@ impl Arrivals {
         match self {
             Arrivals::Poisson { rate } | Arrivals::Uniform { rate, .. } => *rate,
             // Public enum fields mean a `Trace` may be built unsorted;
-            // `generate` normalizes once per stream, this path stays
+            // `iter` normalizes once per stream, this path stays
             // correct (if slower) for ad-hoc callers.
             Arrivals::Trace { segments } => {
                 Self::rate_from_sorted(&Self::normalize_segments(segments), t_ms)
             }
+            // The modulation state is random, so "rate at t" can only
+            // mean the stationary mean — which is exactly what placement
+            // sizing and `offered_rates` want from it.
+            Arrivals::Mmpp { rate_low, rate_high, dwell_low_ms, dwell_high_ms } => {
+                (rate_low * dwell_low_ms + rate_high * dwell_high_ms)
+                    / (dwell_low_ms + dwell_high_ms)
+            }
+            Arrivals::Diurnal { base, amplitude, period_ms, phase } => {
+                let w = std::f64::consts::TAU * (t_ms / period_ms + phase);
+                (base + amplitude * w.sin()).max(0.0)
+            }
+            Arrivals::Flash { base, mult, spike_start_ms, spike_ms } => {
+                if t_ms >= *spike_start_ms && t_ms < spike_start_ms + spike_ms {
+                    base * mult
+                } else {
+                    *base
+                }
+            }
         }
+    }
+
+    /// Peak offered rate over the whole horizon — what placement sizing
+    /// should provision for when the process is not constant.
+    pub fn peak_rate(&self) -> f64 {
+        match self {
+            Arrivals::Poisson { rate } | Arrivals::Uniform { rate, .. } => *rate,
+            Arrivals::Trace { segments } => {
+                segments.iter().map(|&(_, r)| r).fold(0.0, f64::max)
+            }
+            Arrivals::Mmpp { rate_low, rate_high, .. } => rate_low.max(*rate_high),
+            Arrivals::Diurnal { base, amplitude, .. } => (base + amplitude.abs()).max(0.0),
+            Arrivals::Flash { base, mult, .. } => base.max(base * mult),
+        }
+    }
+
+    /// Lazy arrival iterator over `[0, horizon_ms)` for `model` with the
+    /// model's SLO. Yields [`Request`]s with `id = 0` — the consumer
+    /// (merge/collect layer) assigns ids. [`Arrivals::generate`] is this
+    /// iterator collected, draw for draw: both paths consume the RNG in
+    /// the identical sequence, which is what makes lazy and materialized
+    /// streams byte-identical.
+    pub fn iter(&self, model: usize, slo_ms: f64, horizon_ms: f64, rng: Pcg32) -> ArrivalIter {
+        ArrivalIter::new(self.clone(), model, slo_ms, horizon_ms, rng)
     }
 
     /// Generate arrivals over `[0, horizon_ms)` for `model` with the
     /// model's SLO; ids are assigned by the caller via `next_id`.
+    /// Implemented as [`Arrivals::iter`] collected (the legacy adapter
+    /// over the streaming path).
     pub fn generate(
         &self,
         model: usize,
@@ -94,57 +171,248 @@ impl Arrivals {
         rng: &mut Pcg32,
         next_id: &mut u64,
     ) -> Vec<Request> {
-        // Sort once per stream; the hot loop below only binary-searches.
-        let sorted: Option<Vec<(f64, f64)>> = match self {
-            Arrivals::Trace { segments } => Some(Self::normalize_segments(segments)),
-            _ => None,
-        };
+        let mut it = self.iter(model, slo_ms, horizon_ms, rng.clone());
         let mut out = Vec::new();
-        let mut t_ms = 0.0;
-        loop {
-            let rate = match &sorted {
-                Some(segs) => Self::rate_from_sorted(segs, t_ms),
-                None => self.rate_at(t_ms),
-            };
-            let gap_ms = if rate <= 0.0 {
-                // Idle span: jump straight to the next segment start (a
-                // constant-rate process at rate 0 stays silent forever).
-                let Some(next) =
-                    sorted.as_ref().and_then(|segs| Self::next_start_after(segs, t_ms))
-                else {
-                    break;
-                };
-                t_ms = next;
-                if t_ms >= horizon_ms {
-                    break;
-                }
-                continue;
-            } else {
-                match self {
-                    Arrivals::Poisson { .. } | Arrivals::Trace { .. } => {
-                        rng.exp(rate) * 1_000.0
-                    }
-                    Arrivals::Uniform { jitter, .. } => {
-                        let mean = 1_000.0 / rate;
-                        mean * rng.f64_range(1.0 - jitter, 1.0 + jitter)
-                    }
-                }
-            };
-            t_ms += gap_ms;
-            if t_ms >= horizon_ms {
-                break;
-            }
-            let arrival = ms_to_us(t_ms);
-            out.push(Request {
-                id: *next_id,
-                model,
-                arrival,
-                deadline: arrival + ms_to_us(slo_ms),
-            });
+        for mut r in it.by_ref() {
+            r.id = *next_id;
             *next_id += 1;
+            out.push(r);
         }
+        // Hand the advanced RNG state back so callers that reuse the
+        // generator across streams see exactly the draws of the old
+        // eager loop.
+        *rng = it.into_rng();
         out
     }
+}
+
+/// Lazy per-model arrival stepper — see [`Arrivals::iter`]. Holds the
+/// process, the (pre-sorted) piecewise segments where applicable, and
+/// the RNG; `next` performs exactly the draws the eager generator made
+/// per emitted request.
+#[derive(Debug, Clone)]
+pub struct ArrivalIter {
+    process: Arrivals,
+    /// Pre-normalized segments for `Trace` (and the lowered `Flash`
+    /// piecewise form), so the hot loop only binary-searches.
+    sorted: Option<Vec<(f64, f64)>>,
+    model: usize,
+    slo_us: Us,
+    horizon_ms: f64,
+    rng: Pcg32,
+    t_ms: f64,
+    done: bool,
+    /// MMPP modulation state: currently in the high-rate phase?
+    high: bool,
+    /// MMPP: absolute time the current dwell expires.
+    switch_ms: f64,
+}
+
+impl ArrivalIter {
+    fn new(process: Arrivals, model: usize, slo_ms: f64, horizon_ms: f64, mut rng: Pcg32) -> Self {
+        let sorted = match &process {
+            Arrivals::Trace { segments } => Some(Arrivals::normalize_segments(segments)),
+            Arrivals::Flash { base, mult, spike_start_ms, spike_ms } => {
+                assert!(*spike_ms >= 0.0 && *spike_start_ms >= 0.0, "flash spike must be in [0,∞)");
+                Some(Arrivals::normalize_segments(&[
+                    (0.0, *base),
+                    (*spike_start_ms, base * mult),
+                    (spike_start_ms + spike_ms, *base),
+                ]))
+            }
+            _ => None,
+        };
+        let mut high = false;
+        let mut switch_ms = f64::INFINITY;
+        if let Arrivals::Mmpp { rate_low, rate_high, dwell_low_ms, dwell_high_ms } = &process {
+            assert!(
+                *dwell_low_ms > 0.0 && *dwell_high_ms > 0.0,
+                "mmpp dwell times must be > 0 (got {dwell_low_ms} / {dwell_high_ms} ms)"
+            );
+            assert!(*rate_low >= 0.0 && *rate_high >= 0.0, "mmpp rates must be >= 0");
+            high = false;
+            switch_ms = dwell_low_ms * rng.exp(1.0);
+        }
+        if let Arrivals::Diurnal { base, period_ms, .. } = &process {
+            assert!(*period_ms > 0.0, "diurnal period must be > 0 (got {period_ms} ms)");
+            assert!(*base >= 0.0, "diurnal base rate must be >= 0 (got {base})");
+        }
+        ArrivalIter {
+            process,
+            sorted,
+            model,
+            slo_us: ms_to_us(slo_ms),
+            horizon_ms,
+            rng,
+            t_ms: 0.0,
+            done: false,
+            high,
+            switch_ms,
+        }
+    }
+
+    /// Consume the iterator, returning the advanced RNG (the legacy
+    /// `generate` adapter writes it back into the caller's generator).
+    pub fn into_rng(self) -> Pcg32 {
+        self.rng
+    }
+
+    fn emit(&self) -> Request {
+        let arrival = ms_to_us(self.t_ms);
+        Request { id: 0, model: self.model, arrival, deadline: arrival + self.slo_us }
+    }
+
+    /// Poisson / Uniform / piecewise-constant (Trace, Flash) arrivals —
+    /// the exact loop of the pre-streaming eager generator.
+    fn next_piecewise(&mut self) -> Option<Request> {
+        loop {
+            let rate = match &self.sorted {
+                Some(segs) => Arrivals::rate_from_sorted(segs, self.t_ms),
+                None => self.process.rate_at(self.t_ms),
+            };
+            if rate <= 0.0 {
+                // Idle span: jump straight to the next segment start (a
+                // constant-rate process at rate 0 stays silent forever).
+                let next = self
+                    .sorted
+                    .as_ref()
+                    .and_then(|segs| Arrivals::next_start_after(segs, self.t_ms));
+                let Some(next) = next else {
+                    self.done = true;
+                    return None;
+                };
+                self.t_ms = next;
+                if self.t_ms >= self.horizon_ms {
+                    self.done = true;
+                    return None;
+                }
+                continue;
+            }
+            let gap_ms = match &self.process {
+                Arrivals::Uniform { jitter, .. } => {
+                    let mean = 1_000.0 / rate;
+                    mean * self.rng.f64_range(1.0 - jitter, 1.0 + jitter)
+                }
+                _ => self.rng.exp(rate) * 1_000.0,
+            };
+            self.t_ms += gap_ms;
+            if self.t_ms >= self.horizon_ms {
+                self.done = true;
+                return None;
+            }
+            return Some(self.emit());
+        }
+    }
+
+    /// 2-state MMPP: exponential gaps at the phase rate; a gap that
+    /// crosses the dwell boundary is discarded and redrawn at the new
+    /// phase's rate — valid because exponentials are memoryless.
+    fn next_mmpp(&mut self) -> Option<Request> {
+        let &Arrivals::Mmpp { rate_low, rate_high, dwell_low_ms, dwell_high_ms } = &self.process
+        else {
+            unreachable!("next_mmpp on a non-mmpp process")
+        };
+        loop {
+            let rate = if self.high { rate_high } else { rate_low };
+            if rate > 0.0 {
+                let gap_ms = self.rng.exp(rate) * 1_000.0;
+                if self.t_ms + gap_ms < self.switch_ms {
+                    self.t_ms += gap_ms;
+                    if self.t_ms >= self.horizon_ms {
+                        self.done = true;
+                        return None;
+                    }
+                    return Some(self.emit());
+                }
+            }
+            // Dwell expired (or the phase is silent): jump to the
+            // switch and draw the next dwell.
+            self.t_ms = self.switch_ms;
+            if self.t_ms >= self.horizon_ms {
+                self.done = true;
+                return None;
+            }
+            self.high = !self.high;
+            let dwell = if self.high { dwell_high_ms } else { dwell_low_ms };
+            self.switch_ms = self.t_ms + dwell * self.rng.exp(1.0);
+        }
+    }
+
+    /// Diurnal sine: Lewis–Shedler thinning against the envelope rate
+    /// `base + |amplitude|` (an exact, not approximate, sampler for an
+    /// inhomogeneous Poisson process).
+    fn next_diurnal(&mut self) -> Option<Request> {
+        let &Arrivals::Diurnal { base, amplitude, .. } = &self.process else {
+            unreachable!("next_diurnal on a non-diurnal process")
+        };
+        let rate_max = base + amplitude.abs();
+        if rate_max <= 0.0 {
+            self.done = true;
+            return None;
+        }
+        loop {
+            self.t_ms += self.rng.exp(rate_max) * 1_000.0;
+            if self.t_ms >= self.horizon_ms {
+                self.done = true;
+                return None;
+            }
+            let r = self.process.rate_at(self.t_ms);
+            if self.rng.f64() * rate_max < r {
+                return Some(self.emit());
+            }
+        }
+    }
+}
+
+impl Iterator for ArrivalIter {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.done {
+            return None;
+        }
+        match &self.process {
+            Arrivals::Mmpp { .. } => self.next_mmpp(),
+            Arrivals::Diurnal { .. } => self.next_diurnal(),
+            _ => self.next_piecewise(),
+        }
+    }
+}
+
+/// Canonical bursty rendition of a flat per-model rate: the named
+/// generator shaped so its *mean* offered rate stays `rate` (MMPP:
+/// 0.5×/2× rates with 400/200 ms dwells — stationary mean exactly
+/// `rate`) or its base does (diurnal: ±0.8×`rate` over half the
+/// horizon; flash: a 6× spike over 10% of the horizon starting at
+/// 40%). The CLI's `--workload` flag and the streaming figure both
+/// resolve through here so they stress the same shapes.
+pub fn bursty_arrivals(kind: &str, rate: f64, horizon_ms: f64) -> Result<Arrivals, String> {
+    Ok(match kind {
+        "poisson" => Arrivals::Poisson { rate },
+        "mmpp" => Arrivals::Mmpp {
+            rate_low: 0.5 * rate,
+            rate_high: 2.0 * rate,
+            dwell_low_ms: 400.0,
+            dwell_high_ms: 200.0,
+        },
+        "diurnal" => Arrivals::Diurnal {
+            base: rate,
+            amplitude: 0.8 * rate,
+            period_ms: horizon_ms / 2.0,
+            phase: 0.0,
+        },
+        "flash" => Arrivals::Flash {
+            base: rate,
+            mult: 6.0,
+            spike_start_ms: 0.4 * horizon_ms,
+            spike_ms: 0.1 * horizon_ms,
+        },
+        other => {
+            return Err(format!(
+                "unknown workload kind '{other}' (expected poisson|mmpp|diurnal|flash)"
+            ))
+        }
+    })
 }
 
 /// Split an aggregate request rate across models inversely proportional
@@ -156,21 +424,17 @@ pub fn slo_proportional_rates(total_rate: f64, slos_ms: &[f64]) -> Vec<f64> {
     weights.iter().map(|w| total_rate * w / sum).collect()
 }
 
-/// Build a merged, time-sorted request stream for a set of models.
+/// Build a merged, time-sorted request stream for a set of models:
+/// [`stream::MergedStream`] collected. The lazy merge and this eager
+/// adapter share one implementation, so a driver fed the stream and a
+/// driver fed the collected `Vec` see the identical request sequence —
+/// ids included (assigned in merge order, ties broken by model index).
 pub fn merged_stream(
     specs: &[(Arrivals, f64)], // (process, slo_ms) per model index
     horizon_ms: f64,
     seed: u64,
 ) -> Vec<Request> {
-    let mut all = Vec::new();
-    let mut next_id = 0u64;
-    for (model, (arr, slo)) in specs.iter().enumerate() {
-        // Independent stream per model for reproducibility under reorder.
-        let mut rng = Pcg32::new(seed, model as u64 + 1);
-        all.extend(arr.generate(model, *slo, horizon_ms, &mut rng, &mut next_id));
-    }
-    all.sort_by_key(|r| (r.arrival, r.id));
-    all
+    MergedStream::new(specs, horizon_ms, seed).collect()
 }
 
 /// The Fig. 12 cluster workload: the 4-model mix with asymmetric demand

@@ -1,0 +1,277 @@
+//! Lazy arrival streams — the O(backlog)-memory request sources the
+//! execution core pulls from (DESIGN.md §4.10).
+//!
+//! Every cluster driver used to take the whole request stream as an
+//! upfront `Vec<Request>`, capping a run at what fits in host memory.
+//! The [`ArrivalStream`] trait replaces that with a peekable, ordered
+//! pull interface; [`crate::cluster::exec`] consumes it directly, and
+//! the `Vec`-taking driver signatures survive as thin adapters over
+//! [`MaterializedStream`].
+//!
+//! # Contract
+//!
+//! Implementations must yield requests in nondecreasing `arrival`
+//! order, and [`ArrivalStream::peek_model`] must obey the *frontier
+//! invariant* the sparse execution core's run-ahead depends on:
+//!
+//! - the returned time must never exceed the model's true next arrival
+//!   time in the remaining stream (a conservative *earlier* bound —
+//!   e.g. the global head, [`ArrivalStream::peek_time`] — is always
+//!   safe: engines merely synchronize more often);
+//! - `None` may only be returned when **no** arrivals of the model
+//!   remain (`None` while arrivals remain would let an engine run past
+//!   a barrier that needs it).
+//!
+//! Conservative peeking never changes results, only scheduling
+//! granularity: a `Sim`'s trajectory is a pure function of its
+//! (step-time, injection) call sequence, and frontiers only decide how
+//! far an engine runs *ahead* between barriers, never which barriers it
+//! observes. That is why a byte-identity test over
+//! {materialized, streamed} × {epoch, sparse} × threads can (and does)
+//! pass — `rust/tests/parallel_exec.rs`.
+
+use super::{ArrivalIter, Arrivals, Request};
+use crate::gpu::Us;
+use crate::util::rng::Pcg32;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Ordered, peekable source of arrivals — what [`crate::cluster::exec`]
+/// drives engines from. See the module docs for the peeking contract.
+pub trait ArrivalStream {
+    /// Arrival time of the globally next request, if any remain.
+    fn peek_time(&self) -> Option<Us>;
+
+    /// Lower bound on `model`'s next arrival time; `None` only when no
+    /// arrivals of the model remain. Returning [`Self::peek_time`] is
+    /// always a safe (conservative) fallback.
+    fn peek_model(&self, model: usize) -> Option<Us>;
+
+    /// Pop the globally next request (ties broken by model index).
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// Requests currently buffered in memory by the source — the
+    /// peak-RSS proxy `bench_streaming` tracks. O(models) for the lazy
+    /// sources, O(remaining) for [`MaterializedStream`].
+    fn buffered(&self) -> usize;
+}
+
+/// Lazy k-way merge of per-model [`ArrivalIter`]s: one buffered head
+/// per model, a min-heap on `(arrival, model)`, ids assigned in merge
+/// order. Memory is O(models) regardless of stream length.
+///
+/// Seeding matches [`super::merged_stream`] exactly — model `m` draws
+/// from `Pcg32::new(seed, m + 1)` — and the `(arrival, model)` heap
+/// order reproduces the materialized path's `(arrival, id)` sort (ids
+/// used to be assigned in per-model blocks, so sorting by id *was*
+/// sorting by model index at equal arrivals). `merged_stream` is this
+/// stream collected.
+pub struct MergedStream {
+    sources: Vec<ArrivalIter>,
+    /// Per-model lookahead head (`id` unassigned until popped).
+    heads: Vec<Option<Request>>,
+    /// One live entry per model with a pending head.
+    heap: BinaryHeap<Reverse<(Us, usize)>>,
+    next_id: u64,
+    buffered: usize,
+}
+
+impl MergedStream {
+    /// Merge the per-model processes in `specs` (`(process, slo_ms)` per
+    /// model index) over `[0, horizon_ms)`.
+    pub fn new(specs: &[(Arrivals, f64)], horizon_ms: f64, seed: u64) -> MergedStream {
+        let mut sources = Vec::with_capacity(specs.len());
+        let mut heads = Vec::with_capacity(specs.len());
+        let mut heap = BinaryHeap::with_capacity(specs.len());
+        let mut buffered = 0;
+        for (model, (arr, slo)) in specs.iter().enumerate() {
+            // Independent stream per model for reproducibility under
+            // reorder — the same seeding as the materialized path.
+            let mut it = arr.iter(model, *slo, horizon_ms, Pcg32::new(seed, model as u64 + 1));
+            let head = it.next();
+            if let Some(r) = &head {
+                heap.push(Reverse((r.arrival, model)));
+                buffered += 1;
+            }
+            sources.push(it);
+            heads.push(head);
+        }
+        MergedStream { sources, heads, heap, next_id: 0, buffered }
+    }
+
+    /// Number of per-model sources (the stream's model-index domain).
+    pub fn n_models(&self) -> usize {
+        self.sources.len()
+    }
+}
+
+impl ArrivalStream for MergedStream {
+    fn peek_time(&self) -> Option<Us> {
+        self.heap.peek().map(|&Reverse((a, _))| a)
+    }
+
+    fn peek_model(&self, model: usize) -> Option<Us> {
+        self.heads.get(model).and_then(|h| h.as_ref().map(|r| r.arrival))
+    }
+
+    fn next_request(&mut self) -> Option<Request> {
+        let Reverse((_, m)) = self.heap.pop()?;
+        let mut r = self.heads[m].take().expect("heap entry without a buffered head");
+        r.id = self.next_id;
+        self.next_id += 1;
+        match self.sources[m].next() {
+            Some(n) => {
+                self.heap.push(Reverse((n.arrival, m)));
+                self.heads[m] = Some(n);
+            }
+            None => self.buffered -= 1,
+        }
+        Some(r)
+    }
+
+    fn buffered(&self) -> usize {
+        self.buffered
+    }
+}
+
+impl Iterator for MergedStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.next_request()
+    }
+}
+
+/// `Vec<Request>` adapter: the legacy materialized path expressed as a
+/// stream, with exact per-model peeking. This is what the `Vec`-taking
+/// driver signatures wrap their input in, so the pre-streaming call
+/// sequence (and hence every report byte) is preserved.
+pub struct MaterializedStream {
+    queue: VecDeque<Request>,
+    /// Per-model pending arrival times, popped in lockstep with
+    /// `queue` — times only ever pop, so an earlier-computed frontier
+    /// can never exceed a model's next arrival.
+    times: Vec<VecDeque<Us>>,
+}
+
+impl MaterializedStream {
+    /// Wrap an arrival-sorted request vector; `n_models` is the global
+    /// model-index domain (every `Request::model` must be below it).
+    pub fn new(requests: Vec<Request>, n_models: usize) -> MaterializedStream {
+        debug_assert!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "request stream must be sorted by arrival time"
+        );
+        let mut times = vec![VecDeque::new(); n_models];
+        for r in &requests {
+            times[r.model].push_back(r.arrival);
+        }
+        MaterializedStream { queue: requests.into(), times }
+    }
+}
+
+impl ArrivalStream for MaterializedStream {
+    fn peek_time(&self) -> Option<Us> {
+        self.queue.front().map(|r| r.arrival)
+    }
+
+    fn peek_model(&self, model: usize) -> Option<Us> {
+        self.times.get(model).and_then(|q| q.front().copied())
+    }
+
+    fn next_request(&mut self) -> Option<Request> {
+        let r = self.queue.pop_front()?;
+        let t = self.times[r.model].pop_front();
+        debug_assert_eq!(t, Some(r.arrival), "per-model times out of lockstep");
+        Some(r)
+    }
+
+    fn buffered(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::merged_stream;
+
+    fn specs() -> Vec<(Arrivals, f64)> {
+        vec![
+            (Arrivals::Poisson { rate: 300.0 }, 25.0),
+            (Arrivals::Uniform { rate: 120.0, jitter: 0.4 }, 50.0),
+            (Arrivals::trace(vec![(0.0, 200.0), (800.0, 50.0)]), 100.0),
+        ]
+    }
+
+    #[test]
+    fn merged_stream_is_lazy_merge_collected() {
+        let eager = merged_stream(&specs(), 1_500.0, 42);
+        let lazy: Vec<Request> = MergedStream::new(&specs(), 1_500.0, 42).collect();
+        assert_eq!(eager, lazy, "eager adapter must equal the lazy merge, ids included");
+        assert!(eager.len() > 300, "stream too small to be meaningful: {}", eager.len());
+        for w in eager.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        // Merge-order ids are dense and sequential.
+        for (i, r) in eager.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn merged_peeks_are_exact_and_buffer_is_o_models() {
+        let mut s = MergedStream::new(&specs(), 1_000.0, 9);
+        assert_eq!(s.n_models(), 3);
+        assert!(s.buffered() <= 3, "lazy merge buffers one head per model");
+        let mut n = 0u64;
+        loop {
+            // The global head must equal the min over per-model heads,
+            // and what pops next must match both.
+            let per_model = (0..3).filter_map(|m| s.peek_model(m)).min();
+            let head = s.peek_time();
+            assert_eq!(head, per_model, "global head must equal the min per-model head");
+            let Some(r) = s.next_request() else { break };
+            assert_eq!(Some(r.arrival), head, "pop disagreed with peek");
+            assert!(s.peek_time().map_or(true, |t| t >= r.arrival), "order violated");
+            assert!(s.buffered() <= 3);
+            n += 1;
+        }
+        assert!(n > 100, "{n}");
+        assert!((0..3).all(|m| s.peek_model(m).is_none()));
+    }
+
+    #[test]
+    fn materialized_stream_round_trips() {
+        let reqs = merged_stream(&specs(), 800.0, 5);
+        let total = reqs.len();
+        let mut s = MaterializedStream::new(reqs.clone(), 3);
+        assert_eq!(s.buffered(), total);
+        let mut out = Vec::new();
+        while let Some(r) = s.next_request() {
+            out.push(r);
+        }
+        assert_eq!(out, reqs);
+        assert_eq!(s.buffered(), 0);
+        assert!(s.peek_time().is_none());
+        assert!(s.peek_model(2).is_none());
+    }
+
+    #[test]
+    fn materialized_peek_model_is_exact() {
+        let reqs = vec![
+            Request { id: 0, model: 1, arrival: 100, deadline: 1_100 },
+            Request { id: 1, model: 0, arrival: 250, deadline: 1_250 },
+            Request { id: 2, model: 1, arrival: 400, deadline: 1_400 },
+        ];
+        let mut s = MaterializedStream::new(reqs, 2);
+        assert_eq!(s.peek_time(), Some(100));
+        assert_eq!(s.peek_model(0), Some(250));
+        assert_eq!(s.peek_model(1), Some(100));
+        s.next_request();
+        assert_eq!(s.peek_model(1), Some(400));
+        s.next_request();
+        assert_eq!(s.peek_model(0), None);
+        assert_eq!(s.peek_model(1), Some(400));
+    }
+}

@@ -1,0 +1,451 @@
+//! Streaming trace loader: replay production-style request logs
+//! (Azure-Functions-shaped columns — timestamp, model, count) through
+//! the [`ArrivalStream`] interface without holding the trace in memory.
+//!
+//! Two on-disk formats, picked by file extension:
+//!
+//! - **CSV** (`.csv`): a header line naming `timestamp_ms` (or
+//!   `timestamp`), `model` and `count` columns (any order, extra
+//!   columns ignored), then one record per line.
+//! - **JSON lines** (`.jsonl` / `.ndjson` / `.json`): one object per
+//!   line with the same fields; `count` defaults to 1 when absent.
+//!
+//! A record `(t, model, count)` expands to `count` requests arriving at
+//! `t` ms (per-minute/per-bucket counts are the shape real serving
+//! traces come in); `model` is a model name from the spec or a numeric
+//! model index. Records at or past the horizon are dropped.
+//!
+//! # Sort-or-reject policy
+//!
+//! Streaming replay requires nondecreasing timestamps. Under
+//! [`UnsortedPolicy::Reject`] (the default) an out-of-order record is a
+//! load error naming the offending line; under [`UnsortedPolicy::Sort`]
+//! the trace is materialized, stably sorted by timestamp and replayed
+//! from memory — a convenience for small, shuffled logs that
+//! deliberately gives up the O(backlog) memory bound.
+//!
+//! [`TraceStream::open`] validates the *entire* file up front (format,
+//! model names, ordering) in one O(1)-memory pass, so a lazily replayed
+//! trace can never fail mid-run; the second pass then streams records
+//! one line at a time. Malformed rows, truncated files and unknown
+//! models are `Err`s with line numbers — never panics.
+
+use super::stream::{ArrivalStream, MaterializedStream};
+use super::Request;
+use crate::gpu::{ms_to_us, Us};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+/// What a replayed trace maps onto: the model-index domain (name →
+/// index via position), per-model SLOs, the replay horizon and the
+/// ordering policy.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// `(name, slo_ms)` per model index — the trace's `model` column
+    /// resolves against the names (or indexes this list directly).
+    pub models: Vec<(String, f64)>,
+    /// Records arriving at or past this are dropped.
+    pub horizon_ms: f64,
+    pub policy: UnsortedPolicy,
+}
+
+/// How to handle out-of-order timestamps — see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum UnsortedPolicy {
+    /// Fail the load with the offending line (keeps replay streaming).
+    #[default]
+    Reject,
+    /// Materialize, stable-sort by timestamp, replay from memory.
+    Sort,
+}
+
+impl UnsortedPolicy {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Result<UnsortedPolicy, String> {
+        match s {
+            "reject" => Ok(UnsortedPolicy::Reject),
+            "sort" => Ok(UnsortedPolicy::Sort),
+            other => Err(format!("on_unsorted must be \"reject\" or \"sort\", got '{other}'")),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            UnsortedPolicy::Reject => "reject",
+            UnsortedPolicy::Sort => "sort",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TraceFormat {
+    Csv,
+    Jsonl,
+}
+
+fn format_of(path: &Path) -> Result<TraceFormat, String> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("csv") => Ok(TraceFormat::Csv),
+        Some("jsonl") | Some("ndjson") | Some("json") => Ok(TraceFormat::Jsonl),
+        _ => Err(format!(
+            "{}: unknown trace format (expected .csv, .jsonl, .ndjson or .json)",
+            path.display()
+        )),
+    }
+}
+
+/// Resolved CSV column indices (header order is free).
+#[derive(Debug, Clone, Copy)]
+struct CsvCols {
+    t: usize,
+    model: usize,
+    count: usize,
+}
+
+/// One parsed trace record before expansion.
+type Record = (f64, usize, u64); // (t_ms, model index, count)
+
+/// Line-by-line record reader shared by the validation and replay
+/// passes. O(1) memory: one line buffer, no record retained.
+struct RecordReader {
+    reader: BufReader<std::fs::File>,
+    format: TraceFormat,
+    cols: Option<CsvCols>,
+    names: Vec<String>,
+    path: String,
+    lineno: usize,
+    buf: String,
+}
+
+impl RecordReader {
+    fn open(path: &Path, spec: &TraceSpec) -> Result<RecordReader, String> {
+        let format = format_of(path)?;
+        let file = std::fs::File::open(path)
+            .map_err(|e| format!("{}: cannot open trace: {e}", path.display()))?;
+        Ok(RecordReader {
+            reader: BufReader::new(file),
+            format,
+            cols: None,
+            names: spec.models.iter().map(|(n, _)| n.clone()).collect(),
+            path: path.display().to_string(),
+            lineno: 0,
+            buf: String::new(),
+        })
+    }
+
+    fn err(&self, msg: impl std::fmt::Display) -> String {
+        format!("{}:{}: {msg}", self.path, self.lineno)
+    }
+
+    fn resolve_model(&self, field: &str) -> Result<usize, String> {
+        // Numeric fields index the spec's model list directly; anything
+        // else must be a known model name.
+        if let Ok(idx) = field.parse::<usize>() {
+            if idx < self.names.len() {
+                return Ok(idx);
+            }
+            return Err(self.err(format!(
+                "model index {idx} out of range (spec has {} models)",
+                self.names.len()
+            )));
+        }
+        self.names.iter().position(|n| n == field).ok_or_else(|| {
+            self.err(format!("unknown model '{field}' (known: {})", self.names.join(", ")))
+        })
+    }
+
+    fn parse_header(&mut self, line: &str) -> Result<CsvCols, String> {
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let find = |cands: &[&str]| {
+            fields.iter().position(|f| cands.iter().any(|c| f.eq_ignore_ascii_case(c)))
+        };
+        let t = find(&["timestamp_ms", "timestamp"]);
+        let model = find(&["model"]);
+        let count = find(&["count"]);
+        match (t, model, count) {
+            (Some(t), Some(model), Some(count)) => Ok(CsvCols { t, model, count }),
+            _ => Err(self.err(format!(
+                "CSV header must name timestamp_ms (or timestamp), model and count \
+                 columns, got '{line}'"
+            ))),
+        }
+    }
+
+    fn parse_csv(&self, line: &str, cols: CsvCols) -> Result<Record, String> {
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let need = cols.t.max(cols.model).max(cols.count) + 1;
+        if fields.len() < need {
+            return Err(
+                self.err(format!("expected at least {need} CSV fields, got {}", fields.len()))
+            );
+        }
+        let t: f64 = fields[cols.t]
+            .parse()
+            .map_err(|_| self.err(format!("bad timestamp '{}'", fields[cols.t])))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(self.err(format!("timestamp must be finite and >= 0, got {t}")));
+        }
+        let model = self.resolve_model(fields[cols.model])?;
+        let count: u64 = fields[cols.count]
+            .parse()
+            .map_err(|_| self.err(format!("bad count '{}'", fields[cols.count])))?;
+        Ok((t, model, count))
+    }
+
+    fn parse_jsonl(&self, line: &str) -> Result<Record, String> {
+        let j = Json::parse(line).map_err(|e| self.err(format!("bad JSON record: {e}")))?;
+        let t = j
+            .get("timestamp_ms")
+            .or_else(|| j.get("timestamp"))
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| self.err("record is missing a numeric timestamp_ms"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(self.err(format!("timestamp must be finite and >= 0, got {t}")));
+        }
+        let mv = j.get("model").ok_or_else(|| self.err("record is missing 'model'"))?;
+        let model = if let Some(name) = mv.as_str() {
+            self.resolve_model(name)?
+        } else if let Some(idx) = mv.as_u64() {
+            self.resolve_model(&idx.to_string())?
+        } else {
+            return Err(self.err("'model' must be a name or a model index"));
+        };
+        let count = match j.get("count") {
+            None => 1,
+            Some(c) => c
+                .as_u64()
+                .ok_or_else(|| self.err("'count' must be a non-negative integer"))?,
+        };
+        Ok((t, model, count))
+    }
+
+    /// Next record, skipping blank lines (and the CSV header).
+    fn next_record(&mut self) -> Result<Option<Record>, String> {
+        loop {
+            self.buf.clear();
+            self.lineno += 1;
+            let n = self
+                .reader
+                .read_line(&mut self.buf)
+                .map_err(|e| format!("{}:{}: read error: {e}", self.path, self.lineno))?;
+            if n == 0 {
+                return Ok(None);
+            }
+            let line = self.buf.trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            match self.format {
+                TraceFormat::Csv => {
+                    let Some(cols) = self.cols else {
+                        self.cols = Some(self.parse_header(&line)?);
+                        continue;
+                    };
+                    return self.parse_csv(&line, cols).map(Some);
+                }
+                TraceFormat::Jsonl => return self.parse_jsonl(&line).map(Some),
+            }
+        }
+    }
+}
+
+/// A trace file replayed as an [`ArrivalStream`]. Under the default
+/// reject policy replay is lazy — memory is O(1) in the trace length
+/// (one line + the current record's remaining count) — and
+/// [`ArrivalStream::peek_model`] falls back to the conservative global
+/// head (safe per the stream contract; a log line does not reveal
+/// per-model lookahead). Under the sort policy the stream is backed by
+/// a sorted [`MaterializedStream`].
+pub struct TraceStream {
+    inner: TraceInner,
+    /// Expanded requests inside the horizon (from the validation pass).
+    total: u64,
+}
+
+enum TraceInner {
+    Lazy {
+        reader: RecordReader,
+        slo_us: Vec<Us>,
+        horizon_ms: f64,
+        /// Current record mid-expansion: (arrival, model, remaining).
+        cur: Option<(Us, usize, u64)>,
+        next_id: u64,
+        done: bool,
+    },
+    Sorted(MaterializedStream),
+}
+
+impl TraceStream {
+    /// Open and fully validate `path` against `spec`; see the module
+    /// docs for formats, policies and error behavior.
+    pub fn open(path: &Path, spec: &TraceSpec) -> Result<TraceStream, String> {
+        assert!(!spec.models.is_empty(), "trace spec needs at least one model");
+        let slo_us: Vec<Us> = spec.models.iter().map(|&(_, slo)| ms_to_us(slo)).collect();
+        match spec.policy {
+            UnsortedPolicy::Reject => {
+                // Pass 1: validate every line (format, models, ordering)
+                // so lazy replay can never fail mid-run.
+                let mut v = RecordReader::open(path, spec)?;
+                let mut prev = f64::NEG_INFINITY;
+                let mut total = 0u64;
+                while let Some((t, _, count)) = v.next_record()? {
+                    if t < prev {
+                        return Err(v.err(format!(
+                            "timestamps out of order ({t} ms after {prev} ms) — \
+                             sort the trace or load it with the \"sort\" policy"
+                        )));
+                    }
+                    prev = t;
+                    if t < spec.horizon_ms {
+                        total += count;
+                    }
+                }
+                // Pass 2: the replay reader.
+                let reader = RecordReader::open(path, spec)?;
+                let mut s = TraceStream {
+                    inner: TraceInner::Lazy {
+                        reader,
+                        slo_us,
+                        horizon_ms: spec.horizon_ms,
+                        cur: None,
+                        next_id: 0,
+                        done: false,
+                    },
+                    total,
+                };
+                s.advance_if_empty();
+                Ok(s)
+            }
+            UnsortedPolicy::Sort => {
+                let mut v = RecordReader::open(path, spec)?;
+                let mut recs: Vec<Record> = Vec::new();
+                while let Some(rec) = v.next_record()? {
+                    if rec.0 < spec.horizon_ms && rec.2 > 0 {
+                        recs.push(rec);
+                    }
+                }
+                recs.sort_by(|a, b| a.0.total_cmp(&b.0));
+                let mut reqs = Vec::new();
+                let mut next_id = 0u64;
+                for (t, m, count) in recs {
+                    let arrival = ms_to_us(t);
+                    for _ in 0..count {
+                        reqs.push(Request {
+                            id: next_id,
+                            model: m,
+                            arrival,
+                            deadline: arrival + slo_us[m],
+                        });
+                        next_id += 1;
+                    }
+                }
+                let total = reqs.len() as u64;
+                Ok(TraceStream {
+                    inner: TraceInner::Sorted(MaterializedStream::new(reqs, spec.models.len())),
+                    total,
+                })
+            }
+        }
+    }
+
+    /// Requests the replay will deliver (counted during validation).
+    pub fn total_requests(&self) -> u64 {
+        self.total
+    }
+
+    /// Pull records until one expands inside the horizon (lazy path).
+    fn advance_if_empty(&mut self) {
+        let TraceInner::Lazy { reader, cur, horizon_ms, done, .. } = &mut self.inner else {
+            return;
+        };
+        if *done || cur.is_some() {
+            return;
+        }
+        loop {
+            match reader.next_record() {
+                Ok(Some((t, m, count))) => {
+                    if t >= *horizon_ms {
+                        // Ordering was validated: everything after is
+                        // at or past the horizon too.
+                        *done = true;
+                        return;
+                    }
+                    if count == 0 {
+                        continue;
+                    }
+                    *cur = Some((ms_to_us(t), m, count));
+                    return;
+                }
+                Ok(None) => {
+                    *done = true;
+                    return;
+                }
+                Err(e) => {
+                    // The validation pass proved the file clean; only a
+                    // mid-run rewrite of the file can land here.
+                    debug_assert!(false, "validated trace failed on replay: {e}");
+                    *done = true;
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl ArrivalStream for TraceStream {
+    fn peek_time(&self) -> Option<Us> {
+        match &self.inner {
+            TraceInner::Lazy { cur, .. } => cur.map(|(a, _, _)| a),
+            TraceInner::Sorted(s) => s.peek_time(),
+        }
+    }
+
+    fn peek_model(&self, model: usize) -> Option<Us> {
+        match &self.inner {
+            // Conservative: the global head is a valid lower bound for
+            // every model with arrivals remaining, and a log file gives
+            // no cheap per-model lookahead. Never returns None while
+            // the stream has records left — the contract's safe side.
+            TraceInner::Lazy { .. } => self.peek_time(),
+            TraceInner::Sorted(s) => s.peek_model(model),
+        }
+    }
+
+    fn next_request(&mut self) -> Option<Request> {
+        match &mut self.inner {
+            TraceInner::Lazy { cur, slo_us, next_id, .. } => {
+                let (arrival, m, remaining) = (*cur)?;
+                let r = Request {
+                    id: *next_id,
+                    model: m,
+                    arrival,
+                    deadline: arrival + slo_us[m],
+                };
+                *next_id += 1;
+                *cur = (remaining > 1).then_some((arrival, m, remaining - 1));
+                self.advance_if_empty();
+                Some(r)
+            }
+            TraceInner::Sorted(s) => s.next_request(),
+        }
+    }
+
+    fn buffered(&self) -> usize {
+        match &self.inner {
+            TraceInner::Lazy { cur, .. } => cur.map(|(_, _, n)| n as usize).unwrap_or(0),
+            TraceInner::Sorted(s) => s.buffered(),
+        }
+    }
+}
+
+/// Materialize a trace into a request vector — the eager adapter tests
+/// and small-scale callers use ([`TraceStream::open`] + collect).
+pub fn load_trace(path: &Path, spec: &TraceSpec) -> Result<Vec<Request>, String> {
+    let mut s = TraceStream::open(path, spec)?;
+    let mut out = Vec::with_capacity(s.total_requests() as usize);
+    while let Some(r) = s.next_request() {
+        out.push(r);
+    }
+    Ok(out)
+}

@@ -202,6 +202,22 @@ fn unified_drift_pressure_report_matches_golden() {
 }
 
 #[test]
+fn trace_replay_report_matches_golden() {
+    // The shipped trace-replay scenario end to end: scenario file →
+    // trace loader (reject policy, relative path resolution) → lazy
+    // `TraceStream` → streaming cluster core. A golden here pins the
+    // whole ingestion pipeline, not just the drivers — any drift in
+    // CSV parsing, request expansion or stream merge shows up as a
+    // report diff.
+    let cfg = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/cluster_trace_replay.json");
+    let sc = dstack::config::Scenario::from_file(&cfg).expect("shipped config must load");
+    let rep = dstack::config::run_trace_scenario(&sc).expect("shipped trace must replay");
+    let total: u64 = rep.served.iter().sum::<u64>() + rep.dropped.iter().sum::<u64>();
+    assert!(total > 1_000, "shipped trace should carry a real workload, got {total} requests");
+    check_golden("trace_replay", &rep.to_json());
+}
+
+#[test]
 fn legacy_fig12_cluster_matches_golden() {
     use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
     let (profiles, _rates, reqs) = fig12_workload(HORIZON_MS, SEED);

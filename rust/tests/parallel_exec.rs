@@ -11,13 +11,22 @@
 //! implementation eligible for the worker pool.
 
 use dstack::cluster::{
-    fig12_workload, place, run_placement_with, ExecMode, ExecOpts, GpuSched, Parallelism,
-    PlacementPolicy, RoutingPolicy,
+    fig12_specs, fig12_workload, place, run_placement_stream, run_placement_with, ExecMode,
+    ExecOpts, GpuSched, Parallelism, PlacementPolicy, RoutingPolicy,
 };
-use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive_with, AdaptiveCfg};
-use dstack::lifecycle::{longtail_gpus, longtail_workload, serve_longtail_with, LifecycleCfg};
+use dstack::controlplane::{
+    drift_gpus, drift_specs, drift_workload, run_adaptive_stream, run_adaptive_with, AdaptiveCfg,
+};
+use dstack::lifecycle::{
+    longtail_gpus, longtail_specs, longtail_workload, serve_longtail_stream, serve_longtail_with,
+    LifecycleCfg,
+};
 use dstack::profile::{T4, V100};
-use dstack::unified::{drifting_longtail_workload, run_unified_with, unified_gpus, UnifiedCfg};
+use dstack::unified::{
+    drifting_longtail_specs, drifting_longtail_workload, run_unified_stream, run_unified_with,
+    unified_gpus, UnifiedCfg,
+};
+use dstack::workload::MergedStream;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 const MODES: [ExecMode; 2] = [ExecMode::Epoch, ExecMode::Sparse];
@@ -33,31 +42,57 @@ const SCENARIOS: [&str; 8] = [
     "unified",
 ];
 
-/// Render the canonical scenarios' reports under `opts`.
-fn report_strings(opts: ExecOpts) -> Vec<String> {
+/// Render the canonical scenarios' reports under `opts`. `streamed`
+/// selects the ingestion path: `false` materializes each workload into
+/// a `Vec<Request>` first (the classic entry points), `true` feeds the
+/// drivers the lazy [`MergedStream`] directly (the `_stream` entry
+/// points) — the contract under test is that the choice is invisible
+/// in the report bytes.
+fn report_strings(opts: ExecOpts, streamed: bool) -> Vec<String> {
     let mut out = Vec::with_capacity(SCENARIOS.len());
 
     // Static: the Fig. 12 mix knee-packed onto a heterogeneous cluster,
     // JSQ-routed (backlog probes at every barrier).
-    let (profiles, rates, reqs) = fig12_workload(1_500.0, 77);
+    let (profiles, rates, specs) = fig12_specs();
+    let (_, _, reqs) = fig12_workload(1_500.0, 77);
     let gpus = [V100.clone(), T4.clone(), T4.clone()];
     let pl = place(&profiles, &rates, &gpus, PlacementPolicy::FirstFitDecreasing);
-    out.push(
-        run_placement_with(
-            &profiles,
-            &gpus,
-            &pl,
-            reqs.clone(),
-            1_500.0,
-            RoutingPolicy::JoinShortestQueue,
-            GpuSched::Dstack,
-            7,
-            "det",
-            opts,
-        )
-        .to_json()
-        .to_string_pretty(),
-    );
+    // One closure per driver keeps the two ingestion paths visibly
+    // identical in everything but the stream argument.
+    let run_static = |gpus: &[dstack::profile::GpuSpec],
+                      pl: &dstack::cluster::Placement,
+                      routing: RoutingPolicy,
+                      label: &str| {
+        let rep = if streamed {
+            run_placement_stream(
+                &profiles,
+                gpus,
+                pl,
+                MergedStream::new(&specs, 1_500.0, 77),
+                1_500.0,
+                routing,
+                GpuSched::Dstack,
+                7,
+                label,
+                opts,
+            )
+        } else {
+            run_placement_with(
+                &profiles,
+                gpus,
+                pl,
+                reqs.clone(),
+                1_500.0,
+                routing,
+                GpuSched::Dstack,
+                7,
+                label,
+                opts,
+            )
+        };
+        rep.to_json().to_string_pretty()
+    };
+    out.push(run_static(&gpus, &pl, RoutingPolicy::JoinShortestQueue, "det"));
 
     // Static, wide: 6 GPUs clears the core's fan-out threshold, so the
     // worker pool actually runs (the 2-3 GPU scenarios above take the
@@ -65,84 +100,56 @@ fn report_strings(opts: ExecOpts) -> Vec<String> {
     // Once JSQ (per-arrival candidate sync + backlog probes)...
     let gpus6 = vec![T4.clone(); 6];
     let pl6 = place(&profiles, &rates, &gpus6, PlacementPolicy::LoadBalance);
-    out.push(
-        run_placement_with(
-            &profiles,
-            &gpus6,
-            &pl6,
-            reqs.clone(),
-            1_500.0,
-            RoutingPolicy::JoinShortestQueue,
-            GpuSched::Dstack,
-            7,
-            "det6",
-            opts,
-        )
-        .to_json()
-        .to_string_pretty(),
-    );
+    out.push(run_static(&gpus6, &pl6, RoutingPolicy::JoinShortestQueue, "det6"));
     // ...and once round-robin: backlog-free routing, so sparse mode
     // elides every stepping barrier and batches the whole un-quantized
     // stream into timestamped injection rounds.
-    out.push(
-        run_placement_with(
-            &profiles,
-            &gpus6,
-            &pl6,
-            reqs.clone(),
-            1_500.0,
-            RoutingPolicy::RoundRobin,
-            GpuSched::Dstack,
-            7,
-            "det6rr",
-            opts,
-        )
-        .to_json()
-        .to_string_pretty(),
-    );
+    out.push(run_static(&gpus6, &pl6, RoutingPolicy::RoundRobin, "det6rr"));
 
     // Static, overloaded: a single T4 cannot admit the whole mix, so
     // some models run with *zero replicas* — empty candidate sets whose
     // arrivals must reject without synchronizing (or touching) anyone.
     let gpus1 = [T4.clone()];
     let pl1 = place(&profiles, &rates, &gpus1, PlacementPolicy::FirstFitDecreasing);
-    out.push(
-        run_placement_with(
-            &profiles,
-            &gpus1,
-            &pl1,
-            reqs,
-            1_500.0,
-            RoutingPolicy::JoinShortestQueue,
-            GpuSched::Dstack,
-            7,
-            "det1",
-            opts,
-        )
-        .to_json()
-        .to_string_pretty(),
-    );
+    out.push(run_static(&gpus1, &pl1, RoutingPolicy::JoinShortestQueue, "det1"));
 
     // Adaptive: the canonical drifting workload long enough to cross
     // the midpoint swap, so control ticks, replans and replica surgery
     // all land inside the horizon — JSQ and (elidable) RR variants.
-    let (profiles, initial, _peak, reqs) = drift_workload(3_000.0, 11);
+    let (profiles, initial, _peak, specs) = drift_specs(3_000.0);
+    let (_, _, _, reqs) = drift_workload(3_000.0, 11);
     let cfg = AdaptiveCfg { interval_ms: 250.0, cooldown_ticks: 1, ..Default::default() };
     for routing in [RoutingPolicy::JoinShortestQueue, RoutingPolicy::RoundRobin] {
         out.push(
-            run_adaptive_with(
-                &profiles,
-                &initial,
-                &drift_gpus(),
-                PlacementPolicy::FirstFitDecreasing,
-                routing,
-                GpuSched::Dstack,
-                &cfg,
-                reqs.clone(),
-                3_000.0,
-                11,
-                opts,
-            )
+            if streamed {
+                run_adaptive_stream(
+                    &profiles,
+                    &initial,
+                    &drift_gpus(),
+                    PlacementPolicy::FirstFitDecreasing,
+                    routing,
+                    GpuSched::Dstack,
+                    &cfg,
+                    MergedStream::new(&specs, 3_000.0, 11),
+                    3_000.0,
+                    11,
+                    opts,
+                )
+            } else {
+                run_adaptive_with(
+                    &profiles,
+                    &initial,
+                    &drift_gpus(),
+                    PlacementPolicy::FirstFitDecreasing,
+                    routing,
+                    GpuSched::Dstack,
+                    &cfg,
+                    reqs.clone(),
+                    3_000.0,
+                    11,
+                    opts,
+                )
+            }
             .to_json()
             .to_string_pretty(),
         );
@@ -151,26 +158,43 @@ fn report_strings(opts: ExecOpts) -> Vec<String> {
     // Lifecycle: a memory-pressured long-tail fleet, so cold starts,
     // evictions, parking and scale-to-zero all fire (conservative
     // all-engines candidate sets in sparse mode).
-    let (profiles, rates, reqs) = longtail_workload(10, 1.1, 350.0, 1_500.0, 13);
+    let (profiles, rates, specs) = longtail_specs(10, 1.1, 350.0);
+    let (_, _, reqs) = longtail_workload(10, 1.1, 350.0, 1_500.0, 13);
     let lcfg = LifecycleCfg {
         mem_budget_mib: 2_048,
         idle_timeout_ms: 400.0,
         ..Default::default()
     };
     out.push(
-        serve_longtail_with(
-            &profiles,
-            &rates,
-            &longtail_gpus(),
-            PlacementPolicy::LoadBalance,
-            RoutingPolicy::JoinShortestQueue,
-            GpuSched::Dstack,
-            &lcfg,
-            reqs,
-            1_500.0,
-            13,
-            opts,
-        )
+        if streamed {
+            serve_longtail_stream(
+                &profiles,
+                &rates,
+                &longtail_gpus(),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &lcfg,
+                MergedStream::new(&specs, 1_500.0, 13),
+                1_500.0,
+                13,
+                opts,
+            )
+        } else {
+            serve_longtail_with(
+                &profiles,
+                &rates,
+                &longtail_gpus(),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &lcfg,
+                reqs,
+                1_500.0,
+                13,
+                opts,
+            )
+        }
         .to_json()
         .to_string_pretty(),
     );
@@ -179,25 +203,42 @@ fn report_strings(opts: ExecOpts) -> Vec<String> {
     // surgery (tombstone adds, warm releases, drained re-dispatch) on
     // top of cold starts, evictions and component-bounded candidate
     // sets, all mid-flight. The hardest determinism row in the matrix.
-    let (profiles, rates, reqs) = drifting_longtail_workload(12, 1.1, 450.0, 2_000.0, 17);
+    let (profiles, rates, specs) = drifting_longtail_specs(12, 1.1, 450.0, 2_000.0);
+    let (_, _, reqs) = drifting_longtail_workload(12, 1.1, 450.0, 2_000.0, 17);
     let ucfg = UnifiedCfg {
         lifecycle: LifecycleCfg { mem_budget_mib: 3_072, min_replicas: 1, ..Default::default() },
         ..Default::default()
     };
     out.push(
-        run_unified_with(
-            &profiles,
-            &rates,
-            &unified_gpus(4),
-            PlacementPolicy::LoadBalance,
-            RoutingPolicy::JoinShortestQueue,
-            GpuSched::Dstack,
-            &ucfg,
-            reqs,
-            2_000.0,
-            17,
-            opts,
-        )
+        if streamed {
+            run_unified_stream(
+                &profiles,
+                &rates,
+                &unified_gpus(4),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &ucfg,
+                MergedStream::new(&specs, 2_000.0, 17),
+                2_000.0,
+                17,
+                opts,
+            )
+        } else {
+            run_unified_with(
+                &profiles,
+                &rates,
+                &unified_gpus(4),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &ucfg,
+                reqs,
+                2_000.0,
+                17,
+                opts,
+            )
+        }
         .to_json()
         .to_string_pretty(),
     );
@@ -208,7 +249,7 @@ fn report_strings(opts: ExecOpts) -> Vec<String> {
 #[test]
 fn reports_are_byte_identical_across_threads_and_modes() {
     let baseline =
-        report_strings(ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Epoch });
+        report_strings(ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Epoch }, false);
     // The scenarios must actually exercise their machinery, or the
     // property would vacuously pass on an idle cluster.
     assert!(baseline[4].contains("\"adaptive\""), "no adaptive stats attached");
@@ -224,22 +265,83 @@ fn reports_are_byte_identical_across_threads_and_modes() {
         baseline[7].contains("\"cold_migration_ms\""),
         "unified scenario did not price migrations"
     );
-    for mode in MODES {
-        for &threads in &THREAD_COUNTS {
-            if mode == ExecMode::Epoch && threads == THREAD_COUNTS[0] {
-                continue; // the baseline itself
-            }
-            let got = report_strings(ExecOpts { threads: Parallelism::Threads(threads), mode });
-            for (i, name) in SCENARIOS.iter().enumerate() {
-                assert_eq!(
-                    baseline[i],
-                    got[i],
-                    "{name} report diverged from (epoch, threads=1) at \
-                     ({mode:?}, threads={threads})"
+    for streamed in [false, true] {
+        for mode in MODES {
+            for &threads in &THREAD_COUNTS {
+                if !streamed && mode == ExecMode::Epoch && threads == THREAD_COUNTS[0] {
+                    continue; // the baseline itself
+                }
+                let got = report_strings(
+                    ExecOpts { threads: Parallelism::Threads(threads), mode },
+                    streamed,
                 );
+                for (i, name) in SCENARIOS.iter().enumerate() {
+                    assert_eq!(
+                        baseline[i],
+                        got[i],
+                        "{name} report diverged from (materialized, epoch, threads=1) at \
+                         (streamed={streamed}, {mode:?}, threads={threads})"
+                    );
+                }
             }
         }
     }
+}
+
+#[test]
+fn streamed_ingestion_is_actually_lazy() {
+    // The identity matrix above would pass even if the `_stream` entry
+    // points secretly collected the stream into a `Vec`. The execution
+    // core's own accounting rules that out: on a round-robin stream in
+    // sparse mode the peak number of requests buffered anywhere between
+    // generator and engines must stay far below the workload size (at
+    // most one elision chunk plus the per-model merge heads).
+    let (profiles, rates, specs) = fig12_specs();
+    let gpus = vec![T4.clone(); 6];
+    let pl = place(&profiles, &rates, &gpus, PlacementPolicy::LoadBalance);
+    let rep = run_placement_stream(
+        &profiles,
+        &gpus,
+        &pl,
+        MergedStream::new(&specs, 1_500.0, 77),
+        1_500.0,
+        RoutingPolicy::RoundRobin,
+        GpuSched::Dstack,
+        7,
+        "lazy",
+        ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+    );
+    let x = rep.exec.expect("exec stats attached");
+    assert!(x.requests_streamed > 2_000, "workload too small to be probative: {x:?}");
+    assert!(x.peak_in_flight > 0, "no in-flight accounting: {x:?}");
+    // Bound: one elision chunk (1024), plus the merge heads, plus the
+    // slack a same-instant group may add when it straddles the cap.
+    assert!(
+        x.peak_in_flight <= 1_024 + 64,
+        "streamed path buffered {} of {} requests — stream was materialized somewhere",
+        x.peak_in_flight,
+        x.requests_streamed
+    );
+    // JSQ drains every arrival at its own barrier: the in-flight peak
+    // collapses to roughly the merge heads plus one same-instant group.
+    let rep = run_placement_stream(
+        &profiles,
+        &gpus,
+        &pl,
+        MergedStream::new(&specs, 1_500.0, 77),
+        1_500.0,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        7,
+        "lazy",
+        ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+    );
+    let x = rep.exec.expect("exec stats attached");
+    assert!(
+        x.peak_in_flight <= 64,
+        "JSQ streamed peak {} should be O(merge heads)",
+        x.peak_in_flight
+    );
 }
 
 #[test]
@@ -300,6 +402,26 @@ fn auto_parallelism_matches_serial() {
         .to_string_compact()
     };
     assert_eq!(run(Parallelism::Threads(1)), run(Parallelism::Auto));
+    // And the streamed path under Auto agrees too.
+    let (sprofiles, srates, specs) = fig12_specs();
+    let spl = place(&sprofiles, &srates, &gpus, PlacementPolicy::LoadBalance);
+    let run_s = |t: Parallelism| {
+        run_placement_stream(
+            &sprofiles,
+            &gpus,
+            &spl,
+            MergedStream::new(&specs, 1_000.0, 21),
+            1_000.0,
+            RoutingPolicy::PowerOfTwoChoices,
+            GpuSched::Dstack,
+            3,
+            "auto",
+            ExecOpts::with_threads(t),
+        )
+        .to_json()
+        .to_string_compact()
+    };
+    assert_eq!(run_s(Parallelism::Threads(1)), run_s(Parallelism::Auto));
 }
 
 /// `Policy: Send` is what lets the execution core ship engines to its

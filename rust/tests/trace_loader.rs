@@ -1,0 +1,151 @@
+//! Robustness tests for the streaming trace loader (DESIGN.md §4.10):
+//! hand-computed goldens for both on-disk formats, the sort-or-reject
+//! ordering policy, line-numbered errors for malformed / truncated /
+//! misaddressed records (never panics), horizon cuts, and the lazy
+//! path's O(1) buffering.
+
+use dstack::workload::{
+    load_trace, ArrivalStream, Request, TraceSpec, TraceStream, UnsortedPolicy,
+};
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
+}
+
+fn spec() -> TraceSpec {
+    TraceSpec {
+        models: vec![
+            ("mobilenet".into(), 100.0),
+            ("alexnet".into(), 50.0),
+            ("resnet50".into(), 25.0),
+        ],
+        horizon_ms: 100.0,
+        policy: UnsortedPolicy::Reject,
+    }
+}
+
+/// The expansion both valid fixtures encode, computed by hand: the CSV
+/// exercises reordered + extra columns and a numeric model index, the
+/// JSONL a defaulted `count` and the bare `timestamp` spelling.
+fn expected() -> Vec<Request> {
+    let rq = |id: u64, model: usize, arrival: u64, slo: u64| Request {
+        id,
+        model,
+        arrival,
+        deadline: arrival + slo,
+    };
+    vec![
+        rq(0, 0, 0, 100_000),
+        rq(1, 0, 0, 100_000),
+        rq(2, 1, 5_000, 50_000),
+        rq(3, 2, 12_500, 25_000),
+        rq(4, 2, 12_500, 25_000),
+        rq(5, 2, 12_500, 25_000),
+    ]
+}
+
+#[test]
+fn valid_traces_match_the_hand_computed_expansion() {
+    for name in ["trace_valid.csv", "trace_valid.jsonl"] {
+        let path = fixture(name);
+        let reqs = load_trace(&path, &spec()).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(reqs, expected(), "{name} diverged from the hand-computed expansion");
+
+        // The streaming interface agrees with the eager adapter: same
+        // total, same peeks, O(1) buffering (never more than the
+        // current record's count), and conservative per-model peeks
+        // equal to the global head.
+        let mut s = TraceStream::open(&path, &spec()).unwrap();
+        assert_eq!(s.total_requests(), 6);
+        let mut drained = Vec::new();
+        while let Some(t) = s.peek_time() {
+            assert_eq!(s.peek_model(0), Some(t), "lazy peek_model must be the global head");
+            assert!(s.buffered() <= 3, "lazy replay buffered a whole trace");
+            let r = s.next_request().unwrap();
+            assert_eq!(r.arrival, t);
+            drained.push(r);
+        }
+        assert_eq!(drained, expected());
+        assert!(s.next_request().is_none());
+    }
+}
+
+#[test]
+fn unsorted_traces_reject_with_the_offending_line_or_sort() {
+    let path = fixture("trace_unsorted.csv");
+    let err = TraceStream::open(&path, &spec()).unwrap_err();
+    assert!(err.contains("out of order"), "unexpected error: {err}");
+    assert!(err.contains("trace_unsorted.csv:3"), "error must name file:line, got: {err}");
+    assert!(err.contains("\"sort\""), "error must point at the sort policy, got: {err}");
+
+    let sort_spec = TraceSpec { policy: UnsortedPolicy::Sort, ..spec() };
+    let sorted = load_trace(&path, &sort_spec).unwrap();
+    let arrivals: Vec<(usize, u64)> = sorted.iter().map(|r| (r.model, r.arrival)).collect();
+    assert_eq!(arrivals, vec![(1, 4_000), (0, 10_000), (2, 20_000)]);
+    for (i, r) in sorted.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "sorted replay must reassign ids in arrival order");
+    }
+}
+
+#[test]
+fn malformed_and_truncated_traces_err_with_line_numbers() {
+    let err = TraceStream::open(&fixture("trace_malformed.csv"), &spec()).unwrap_err();
+    assert!(err.contains("trace_malformed.csv:3"), "error must name file:line, got: {err}");
+    assert!(err.contains("bad timestamp"), "unexpected error: {err}");
+
+    // A half-written JSONL line (interrupted writer) is a load error on
+    // the exact line, not a panic or a silent partial replay.
+    let err = TraceStream::open(&fixture("trace_truncated.jsonl"), &spec()).unwrap_err();
+    assert!(err.contains("trace_truncated.jsonl:2"), "error must name file:line, got: {err}");
+    assert!(err.contains("bad JSON record"), "unexpected error: {err}");
+
+    // Both policies surface the same validation errors.
+    let sort = TraceSpec { policy: UnsortedPolicy::Sort, ..spec() };
+    assert!(TraceStream::open(&fixture("trace_malformed.csv"), &sort).is_err());
+    assert!(TraceStream::open(&fixture("trace_truncated.jsonl"), &sort).is_err());
+}
+
+#[test]
+fn misaddressed_models_and_missing_files_err() {
+    // Shrink the spec to one model: the valid CSV's numeric index 1 is
+    // now out of range — reported with its line number.
+    let narrow = TraceSpec { models: vec![("mobilenet".into(), 100.0)], ..spec() };
+    let err = TraceStream::open(&fixture("trace_valid.csv"), &narrow).unwrap_err();
+    assert!(err.contains("out of range"), "unexpected error: {err}");
+    assert!(err.contains("trace_valid.csv:3"), "error must name file:line, got: {err}");
+
+    // Unknown model *name*: swap the spec's names out from under the CSV.
+    let renamed = TraceSpec {
+        models: vec![("a".into(), 1.0), ("b".into(), 1.0), ("c".into(), 1.0)],
+        ..spec()
+    };
+    let err = TraceStream::open(&fixture("trace_valid.csv"), &renamed).unwrap_err();
+    assert!(err.contains("unknown model 'mobilenet'"), "unexpected error: {err}");
+
+    let err = TraceStream::open(&fixture("no_such_trace.csv"), &spec()).unwrap_err();
+    assert!(err.contains("cannot open trace"), "unexpected error: {err}");
+    let err = TraceStream::open(&fixture("trace_valid.txt"), &spec()).unwrap_err();
+    assert!(err.contains("unknown trace format"), "unexpected error: {err}");
+}
+
+#[test]
+fn horizon_cuts_and_empty_traces() {
+    // Records at or past the horizon are dropped — 12.5 ms is out when
+    // the horizon is 10 ms — and the validated total reflects the cut.
+    let cut = TraceSpec { horizon_ms: 10.0, ..spec() };
+    let path = fixture("trace_valid.csv");
+    let s = TraceStream::open(&path, &cut).unwrap();
+    assert_eq!(s.total_requests(), 3);
+    let reqs = load_trace(&path, &cut).unwrap();
+    assert_eq!(reqs, expected()[..3].to_vec());
+    // A horizon-exact record is excluded (half-open horizon).
+    let exact = TraceSpec { horizon_ms: 12.5, ..spec() };
+    assert_eq!(load_trace(&path, &exact).unwrap().len(), 3);
+
+    // A header-only trace is an empty, well-behaved stream.
+    let mut s = TraceStream::open(&fixture("trace_header_only.csv"), &spec()).unwrap();
+    assert_eq!(s.total_requests(), 0);
+    assert!(s.peek_time().is_none());
+    assert!(s.next_request().is_none());
+}

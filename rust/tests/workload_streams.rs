@@ -1,0 +1,174 @@
+//! Property tests for the arrival generators and the lazy merge layer
+//! (DESIGN.md §4.10): statistical sanity for the bursty processes
+//! (MMPP / diurnal / flash), determinism per seed, global ordering with
+//! model-index tie-breaks, and the boundary cases the execution core
+//! leans on (empty streams, single arrivals, horizon-exact exclusion).
+
+use dstack::util::rng::Pcg32;
+use dstack::workload::{
+    bursty_arrivals, merged_stream, ArrivalStream, Arrivals, MergedStream, Request,
+};
+
+/// Collect a process's arrivals over `[0, horizon_ms)` for model 0.
+fn collect(arr: &Arrivals, horizon_ms: f64, seed: u64) -> Vec<Request> {
+    arr.iter(0, 100.0, horizon_ms, Pcg32::new(seed, 1)).collect()
+}
+
+/// Count arrivals in `[lo_ms, hi_ms)`.
+fn count_in(reqs: &[Request], lo_ms: f64, hi_ms: f64) -> usize {
+    let (lo, hi) = ((lo_ms * 1_000.0) as u64, (hi_ms * 1_000.0) as u64);
+    reqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).count()
+}
+
+#[test]
+fn mmpp_empirical_rate_matches_stationary_mean() {
+    let arr = Arrivals::Mmpp {
+        rate_low: 50.0,
+        rate_high: 200.0,
+        dwell_low_ms: 400.0,
+        dwell_high_ms: 200.0,
+    };
+    // (50·400 + 200·200) / 600 = 100 req/s — the figure `rate_at`
+    // reports at every t (modulation state is random, so "rate at t"
+    // is the stationary mean) and placement sizing budgets for.
+    assert!((arr.rate_at(0.0) - 100.0).abs() < 1e-9);
+    assert!((arr.rate_at(12_345.6) - 100.0).abs() < 1e-9);
+    assert_eq!(arr.peak_rate(), 200.0);
+    // Long-horizon empirical rate converges to that mean: 200 s spans
+    // ~330 dwell cycles, so ±10% is a loose bound.
+    let horizon_s = 200.0;
+    let n = collect(&arr, horizon_s * 1_000.0, 7).len() as f64;
+    let empirical = n / horizon_s;
+    assert!(
+        (empirical - 100.0).abs() < 10.0,
+        "MMPP empirical rate {empirical:.1}/s strayed from the stationary mean 100/s"
+    );
+}
+
+#[test]
+fn generators_are_ordered_deterministic_and_horizon_bounded() {
+    let horizon_ms = 5_000.0;
+    let shapes = [
+        bursty_arrivals("poisson", 120.0, horizon_ms).unwrap(),
+        bursty_arrivals("mmpp", 120.0, horizon_ms).unwrap(),
+        bursty_arrivals("diurnal", 120.0, horizon_ms).unwrap(),
+        bursty_arrivals("flash", 120.0, horizon_ms).unwrap(),
+    ];
+    for arr in &shapes {
+        let a = collect(arr, horizon_ms, 42);
+        assert!(a.len() > 100, "{arr:?} produced only {} arrivals", a.len());
+        // Nondecreasing, strictly inside [0, horizon), deadline = arrival + SLO.
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "{arr:?} emitted out of order");
+        }
+        for r in &a {
+            assert!(r.arrival < (horizon_ms * 1_000.0) as u64, "{arr:?} escaped the horizon");
+            assert_eq!(r.deadline, r.arrival + 100_000, "deadline must be arrival + SLO");
+        }
+        // Same seed → byte-identical stream; fresh seed → a different one.
+        assert_eq!(a, collect(arr, horizon_ms, 42), "{arr:?} is not deterministic per seed");
+        if !matches!(arr, Arrivals::Uniform { .. }) {
+            assert_ne!(a, collect(arr, horizon_ms, 43), "{arr:?} ignored its seed");
+        }
+    }
+    assert!(bursty_arrivals("sawtooth", 120.0, horizon_ms).is_err(), "unknown kind must err");
+}
+
+#[test]
+fn flash_spike_concentrates_arrivals() {
+    // 6× spike over [400, 500) ms against a 50/s base: the spike window
+    // must clearly dominate every quiet window of the same width.
+    let arr = Arrivals::Flash { base: 50.0, mult: 6.0, spike_start_ms: 400.0, spike_ms: 100.0 };
+    let a = collect(&arr, 1_000.0, 11);
+    let spike = count_in(&a, 400.0, 500.0);
+    let quiet_max = (0..10)
+        .filter(|&k| k != 4)
+        .map(|k| count_in(&a, k as f64 * 100.0, (k + 1) as f64 * 100.0))
+        .max()
+        .unwrap();
+    assert!(
+        spike > 2 * quiet_max,
+        "spike window held {spike} arrivals vs quiet max {quiet_max} — no burst visible"
+    );
+}
+
+#[test]
+fn diurnal_counts_follow_the_sine() {
+    // rate(t) = 100 + 80·sin(2πt/1000): crest near t ≡ 250, trough near
+    // t ≡ 750. Summed over 10 periods the contrast is unmistakable.
+    let arr = Arrivals::Diurnal { base: 100.0, amplitude: 80.0, period_ms: 1_000.0, phase: 0.0 };
+    let a = collect(&arr, 10_000.0, 5);
+    let (mut crest, mut trough) = (0, 0);
+    for k in 0..10 {
+        let t0 = k as f64 * 1_000.0;
+        crest += count_in(&a, t0 + 200.0, t0 + 300.0);
+        trough += count_in(&a, t0 + 700.0, t0 + 800.0);
+    }
+    assert!(
+        crest > 3 * trough.max(1),
+        "crest windows held {crest} arrivals vs trough {trough} — no modulation visible"
+    );
+}
+
+#[test]
+fn merged_stream_orders_ties_by_model_index() {
+    // Two zero-jitter uniform processes at the same rate arrive at the
+    // exact same instants (gap = 1000/rate regardless of seed), so the
+    // merge must break every tie by model index, with merge-order ids.
+    let specs = vec![(Arrivals::Uniform { rate: 10.0, jitter: 0.0 }, 50.0); 2];
+    let merged: Vec<Request> = MergedStream::new(&specs, 1_000.0, 3).collect();
+    assert_eq!(merged.len(), 18, "9 deterministic arrivals per model");
+    for (i, pair) in merged.chunks(2).enumerate() {
+        let expect = ((i + 1) as u64) * 100_000;
+        assert_eq!(pair[0].arrival, expect);
+        assert_eq!(pair[1].arrival, expect);
+        assert_eq!((pair[0].model, pair[1].model), (0, 1), "tie not broken by model index");
+    }
+    for (i, r) in merged.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "ids must be dense in merge order");
+    }
+    // And with heterogeneous processes the global order still holds and
+    // matches the eager adapter request for request.
+    let specs = vec![
+        (bursty_arrivals("mmpp", 80.0, 2_000.0).unwrap(), 25.0),
+        (bursty_arrivals("flash", 60.0, 2_000.0).unwrap(), 50.0),
+        (bursty_arrivals("diurnal", 40.0, 2_000.0).unwrap(), 75.0),
+    ];
+    let lazy: Vec<Request> = MergedStream::new(&specs, 2_000.0, 9).collect();
+    assert!(lazy.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    assert_eq!(lazy, merged_stream(&specs, 2_000.0, 9), "eager adapter diverged from lazy merge");
+}
+
+#[test]
+fn boundary_streams_behave() {
+    // Zero-rate and empty-trace processes are silent, not wedged.
+    assert!(collect(&Arrivals::Poisson { rate: 0.0 }, 1_000.0, 1).is_empty());
+    assert!(collect(&Arrivals::trace(vec![]), 1_000.0, 1).is_empty());
+
+    // A 1/s zero-jitter uniform stream lands exactly one request, at
+    // exactly t = 1000 ms, inside a 1500 ms horizon...
+    let one = Arrivals::Uniform { rate: 1.0, jitter: 0.0 };
+    let a = collect(&one, 1_500.0, 1);
+    assert_eq!(a.len(), 1);
+    assert_eq!(a[0].arrival, 1_000_000);
+    assert_eq!(a[0].deadline, 1_100_000);
+    // ...and a horizon-exact arrival is EXCLUDED: the horizon is
+    // half-open, `[0, horizon)`.
+    assert!(collect(&one, 1_000.0, 1).is_empty(), "t = horizon must be excluded");
+
+    // An empty merge (and one whose every source is silent) is a
+    // well-behaved exhausted stream from the first peek.
+    for specs in [vec![], vec![(Arrivals::Poisson { rate: 0.0 }, 10.0); 3]] {
+        let mut s = MergedStream::new(&specs, 1_000.0, 1);
+        assert_eq!(s.peek_time(), None);
+        assert_eq!(s.buffered(), 0);
+        assert!(s.next_request().is_none());
+    }
+    // Single-request merge: peeks agree, then drain to None.
+    let mut s = MergedStream::new(&[(one.clone(), 100.0)], 1_500.0, 1);
+    assert_eq!(s.peek_time(), Some(1_000_000));
+    assert_eq!(s.peek_model(0), Some(1_000_000));
+    let r = s.next_request().unwrap();
+    assert_eq!((r.id, r.model, r.arrival), (0, 0, 1_000_000));
+    assert!(s.peek_time().is_none() && s.peek_model(0).is_none());
+}
