@@ -139,7 +139,7 @@ fn main() {
             GpuSched::Dstack,
             7,
             "bench_parallel_unq",
-            ExecOpts { threads: Parallelism::Threads(threads), mode },
+            ExecOpts { threads: Parallelism::Threads(threads), mode, ..Default::default() },
         )
     };
     let epoch_rep = run_u(ExecMode::Epoch);
@@ -205,7 +205,7 @@ fn main() {
             nreqs.clone(),
             uni_horizon_ms,
             103,
-            ExecOpts { threads: Parallelism::Threads(threads), mode },
+            ExecOpts { threads: Parallelism::Threads(threads), mode, ..Default::default() },
         )
     };
     let uni_epoch_rep = run_uni(ExecMode::Epoch);

@@ -13,7 +13,13 @@
 //! - **flatness**: `peak_in_flight` stays bounded by a constant
 //!   (≤ elision chunk + merge heads) across a 100× size sweep —
 //!   under 1% of the total at 10⁶ and under 0.1% at 10⁷ — while a
-//!   materialized run would hold every request at once.
+//!   materialized run would hold every request at once;
+//! - **observability**: a disabled recorder attaches nothing and an
+//!   enabled one (default knobs) leaves the report bytes untouched;
+//!   with sampling + bounded histograms at the 10⁶-request tier the
+//!   kept-event count and per-window bucket count stay flat while
+//!   candidates scale with the workload, and the recorder's wall-clock
+//!   overhead is measured for the CI job summary.
 //!
 //! Results land in `BENCH_streaming.json` for the CI job summary.
 
@@ -30,7 +36,11 @@ const SEED: u64 = 77;
 
 fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let opts = ExecOpts { threads: Parallelism::Threads(threads), mode: ExecMode::Sparse };
+    let opts = ExecOpts {
+        threads: Parallelism::Threads(threads),
+        mode: ExecMode::Sparse,
+        ..Default::default()
+    };
     let target: u64 = std::env::var("DSTACK_STREAM_REQUESTS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -42,7 +52,7 @@ fn main() {
     // Scale the horizon so the Poisson mix offers ~`n` requests.
     let horizon_for = |n: u64| (n as f64 / total_rps) * 1_000.0;
 
-    let run_streamed = |specs: &[(Arrivals, f64)], horizon_ms: f64| {
+    let run_streamed = |specs: &[(Arrivals, f64)], horizon_ms: f64, o: ExecOpts| {
         let stream = MergedStream::new(specs, horizon_ms, SEED);
         serve_cluster_stream(
             &profiles,
@@ -54,13 +64,13 @@ fn main() {
             stream,
             horizon_ms,
             SEED,
-            opts,
+            o,
         )
     };
 
     // ---- equivalence: streamed vs materialized, byte-identical ----
     let eq_horizon = horizon_for(target.min(100_000));
-    let streamed = run_streamed(&specs, eq_horizon);
+    let streamed = run_streamed(&specs, eq_horizon, opts);
     let reqs = merged_stream(&specs, eq_horizon, SEED);
     let n_eq = reqs.len();
     let materialized = serve_cluster_with(
@@ -92,7 +102,7 @@ fn main() {
     for &n in &sizes {
         let horizon_ms = horizon_for(n);
         let t0 = Instant::now();
-        let rep = run_streamed(&specs, horizon_ms);
+        let rep = run_streamed(&specs, horizon_ms, opts);
         let wall = t0.elapsed();
         let x = rep.exec.as_ref().expect("exec stats attached");
         let (streamed_n, peak) = (x.requests_streamed, x.peak_in_flight);
@@ -129,6 +139,79 @@ fn main() {
         "peak_in_flight {peak_last} is not < 1% of {last} requests"
     );
 
+    // ---- observability: zero cost off, flat memory on ----
+    // Off is the default everywhere above: no payload is attached and
+    // (checked at the equivalence size) turning the recorder ON with
+    // default knobs does not move a byte of the report either.
+    assert!(streamed.obs.is_none(), "recording off must attach no obs payload");
+    let obs_default = dstack::obs::ObsCfg { trace: true, timeseries: true, ..Default::default() };
+    let traced = run_streamed(&specs, eq_horizon, ExecOpts { obs: obs_default, ..opts });
+    assert_eq!(
+        streamed.to_json().to_string_compact(),
+        traced.to_json().to_string_compact(),
+        "enabling the recorder changed the report bytes"
+    );
+    // Sampled recording at the 10^6-request tier: kept events and
+    // histogram buckets stay bounded while candidates scale with the
+    // workload — the flat-memory contract for always-on tracing.
+    let obs_n = (target / 10).max(100_000);
+    let obs_horizon = horizon_for(obs_n);
+    let t0 = Instant::now();
+    let plain = run_streamed(&specs, obs_horizon, opts);
+    let wall_off = t0.elapsed();
+    let sampled = dstack::obs::ObsCfg {
+        trace: true,
+        timeseries: true,
+        sample_request: 256,
+        sample_gpu: 64,
+        exact_latencies: false,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let rep = run_streamed(&specs, obs_horizon, ExecOpts { obs: sampled, ..opts });
+    let wall_on = t0.elapsed();
+    // Counters must not move when exact latency vectors are dropped —
+    // only the p99 source changes (histogram, ~1% relative error).
+    assert_eq!(plain.served, rep.served, "sampled recording changed served counts");
+    assert_eq!(plain.dropped, rep.dropped, "sampled recording changed drop counts");
+    let obs = rep.obs.as_ref().expect("recording on");
+    let served_total: u64 = rep.served.iter().sum();
+    assert!(obs.candidates() > served_total, "recorder witnessed fewer events than completions");
+    assert!(
+        obs.events_recorded() < obs.candidates() / 32,
+        "sampling kept {} of {} candidates — memory is not flat",
+        obs.events_recorded(),
+        obs.candidates()
+    );
+    let max_buckets = obs
+        .lanes
+        .iter()
+        .flat_map(|l| l.windows.iter())
+        .map(|w| w.lat.n_buckets())
+        .max()
+        .unwrap_or(0);
+    assert!(max_buckets <= 1_000, "window histogram grew {max_buckets} buckets — not log-bounded");
+    let overhead_pct =
+        100.0 * (wall_on.as_secs_f64() - wall_off.as_secs_f64()) / wall_off.as_secs_f64().max(1e-9);
+    println!(
+        "observability: n≈{obs_n}: {} events kept of {} candidates ({} windows, \
+         ≤{max_buckets} hist buckets/window), recorder overhead {overhead_pct:+.1}%",
+        obs.events_recorded(),
+        obs.candidates(),
+        obs.n_windows(),
+    );
+    let obs_json = Json::obj(vec![
+        ("target", Json::from(obs_n)),
+        ("candidates", Json::from(obs.candidates())),
+        ("events_recorded", Json::from(obs.events_recorded())),
+        ("sampled_out", Json::from(obs.sampled_out())),
+        ("n_windows", Json::from(obs.n_windows() as u64)),
+        ("max_window_hist_buckets", Json::from(max_buckets as u64)),
+        ("wall_off_s", Json::from(wall_off.as_secs_f64())),
+        ("wall_on_s", Json::from(wall_on.as_secs_f64())),
+        ("overhead_pct", Json::from(overhead_pct)),
+    ]);
+
     let json = Json::obj(vec![
         ("bench", Json::from("streaming")),
         ("models", Json::from(profiles.len() as u64)),
@@ -138,6 +221,7 @@ fn main() {
         ("equivalence_requests", Json::from(n_eq as u64)),
         ("flat_bound", Json::from(FLAT_BOUND)),
         ("sweep", Json::Arr(sweep)),
+        ("observability", obs_json),
     ]);
     let path = std::path::Path::new("BENCH_streaming.json");
     dstack::util::write_file(path, &json.to_string_pretty()).unwrap();

@@ -197,11 +197,15 @@ impl ExecMode {
 pub struct ExecOpts {
     pub threads: Parallelism,
     pub mode: ExecMode,
+    /// Observability knobs (`crate::obs`). Like `threads`/`mode`, never
+    /// changes report bytes: traces and time-series ride the report
+    /// out-of-band (`ClusterReport::obs`) and are exported separately.
+    pub obs: crate::obs::ObsCfg,
 }
 
 impl ExecOpts {
     pub fn new(threads: Parallelism, mode: ExecMode) -> ExecOpts {
-        ExecOpts { threads, mode }
+        ExecOpts { threads, mode, obs: crate::obs::ObsCfg::default() }
     }
 
     /// Default mode with an explicit thread budget.
@@ -1214,7 +1218,7 @@ mod tests {
             &mut engines,
             mini_stream(),
             horizon,
-            ExecOpts { threads: Parallelism::Threads(1), mode },
+            ExecOpts { threads: Parallelism::Threads(1), mode, ..Default::default() },
             &mut driver,
         );
         assert_eq!(

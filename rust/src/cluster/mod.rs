@@ -48,11 +48,12 @@ pub use routing::{Router, RoutingPolicy};
 
 use crate::gpu::{ms_to_us, Us};
 use crate::metrics::RunReport;
+use crate::obs::{EngineObs, EventKind, ObsReport, Recorder};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sched::{dstack::Dstack, gslice::Gslice, temporal::Temporal, triton::Triton};
 use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
 use crate::util::json::Json;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, LogHistogram};
 use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
 use exec::{run_epochs_stream, EpochDriver, ExecEngine, Touched};
 use routing::BacklogCache;
@@ -183,6 +184,12 @@ pub struct ClusterReport {
     /// thread count must not change report bytes. Surfaced by
     /// `dstack … --verbose` and by `benches/bench_parallel.rs`.
     pub exec: Option<ExecStats>,
+    /// Observability payload (event trace + windowed time-series) —
+    /// `Some` only when `ExecOpts::obs` enables recording. Like `exec`,
+    /// **never serialized** by [`Self::to_json`]: traces and series are
+    /// exported out-of-band (`--emit-trace` / `--emit-timeseries`,
+    /// `figures::fig17`), so report and golden bytes are unchanged.
+    pub obs: Option<ObsReport>,
 }
 
 impl ClusterReport {
@@ -311,6 +318,8 @@ struct PlacementDriver<'a> {
     router: Router,
     cache: BacklogCache,
     rejected: Vec<u64>,
+    /// Control-lane recorder: arrive/route/reject, by global model.
+    obs: Recorder,
 }
 
 impl EpochDriver for PlacementDriver<'_> {
@@ -331,14 +340,23 @@ impl EpochDriver for PlacementDriver<'_> {
     }
 
     fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
         if !self.pl.admitted[req.model] {
             self.rejected[req.model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, req.model as u32, req.id, 0);
+            }
             return None;
         }
         let reps = &self.pl.replicas[req.model];
         // Backlog-free by contract: the closure is never consulted.
         let pick = self.router.route(req.model, reps, |_| 0);
         let rep = &reps[pick];
+        if self.obs.on() {
+            self.obs.event(EventKind::Route, req.arrival, req.model as u32, req.id, rep.gpu as u64);
+        }
         Some((rep.gpu, rep.local))
     }
 
@@ -358,14 +376,23 @@ impl EpochDriver for PlacementDriver<'_> {
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
     ) {
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
         if !self.pl.admitted[req.model] {
             self.rejected[req.model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, req.model as u32, req.id, 0);
+            }
             return;
         }
         let reps = &self.pl.replicas[req.model];
         let cache = &mut self.cache;
         let pick = self.router.route(req.model, reps, |rep| cache.backlog(engines, rep));
         let rep = &reps[pick];
+        if self.obs.on() {
+            self.obs.event(EventKind::Route, req.arrival, req.model as u32, req.id, rep.gpu as u64);
+        }
         req.model = rep.local;
         engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
         cache.note_inject(rep.gpu, rep.local);
@@ -468,7 +495,8 @@ pub fn run_placement_stream<S: ArrivalStream>(
                 })
                 .collect();
             let policy = sched.build(&entries);
-            let cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+            let cfg =
+                SimConfig { gpu: gpus[g].clone(), horizon_ms, obs: opts.obs, ..Default::default() };
             Some(ExecEngine { sim: Sim::new(cfg, entries), policy })
         })
         .collect();
@@ -484,14 +512,23 @@ pub fn run_placement_stream<S: ArrivalStream>(
         router: Router::new(routing, n_models, seed),
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
+        obs: Recorder::new(opts.obs, horizon),
     };
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
+    let control_obs = driver.obs.finish(profiles.iter().map(|p| p.name.clone()).collect());
     let rejected = driver.rejected;
 
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
         .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
         .collect();
+    // Engine observability is drained after finalize so horizon drops
+    // and drained completions are included; idle GPUs get empty lanes.
+    let obs_lanes: Vec<EngineObs> = engines
+        .iter_mut()
+        .map(|slot| slot.as_mut().map(|e| e.sim.take_obs()).unwrap_or_default())
+        .collect();
+    let obs = ObsReport::collect(opts.obs, horizon, obs_lanes, control_obs);
 
     // Aggregate per global model index.
     let horizon_s = horizon_ms / 1_000.0;
@@ -500,6 +537,7 @@ pub fn run_placement_stream<S: ArrivalStream>(
     let mut served = vec![0u64; n_models];
     let mut dropped = vec![0u64; n_models];
     let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
     let mut per_gpu = Vec::with_capacity(n_gpus);
     for g in 0..n_gpus {
@@ -513,6 +551,7 @@ pub fn run_placement_stream<S: ArrivalStream>(
                     served[global] += mm.served;
                     dropped[global] += mm.dropped;
                     latencies[global].extend_from_slice(&mm.latencies_ms);
+                    hists[global].merge(&mm.latency_hist);
                     let r = pl.replicas[global]
                         .iter()
                         .find(|r| r.gpu == g)
@@ -539,7 +578,8 @@ pub fn run_placement_stream<S: ArrivalStream>(
     for m in 0..n_models {
         violations[m] += rejected[m] as f64 / horizon_s;
     }
-    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let p99_ms: Vec<f64> =
+        latencies.iter().zip(&hists).map(|(l, h)| p99_of(l, h)).collect();
     let replica_map: Vec<Vec<usize>> = pl
         .replicas
         .iter()
@@ -562,7 +602,19 @@ pub fn run_placement_stream<S: ArrivalStream>(
         adaptive: None,
         lifecycle: None,
         exec: Some(exec_stats),
+        obs,
     }
+}
+
+/// Per-model p99 for cluster aggregation: exact percentile over the
+/// gathered latency vectors when present, falling back to the merged
+/// bounded histogram when `observability.exact_latencies` is off (the
+/// vectors are then empty by design).
+pub(crate) fn p99_of(lat: &[f64], hist: &LogHistogram) -> f64 {
+    if lat.is_empty() && hist.count() > 0 {
+        return hist.quantile(0.99);
+    }
+    percentile(lat, 99.0)
 }
 
 /// Placement + routing + simulation in one call: bin-pack `profiles`

@@ -175,6 +175,10 @@ pub struct Scenario {
     /// arrivals stream from the recorded log (per-model `rate`s are
     /// still used for placement sizing).
     pub workload: Option<TraceReplay>,
+    /// Observability knobs (the `"observability"` block — see
+    /// `docs/CONFIG.md` and [`crate::obs`]). Default-off: no tracing,
+    /// no time-series, exact latency vectors — report bytes unchanged.
+    pub obs: crate::obs::ObsCfg,
 }
 
 /// Parse a per-model `"arrivals"` generator block.
@@ -512,6 +516,33 @@ impl Scenario {
                 }
             },
         };
+        let obs = match j.get("observability") {
+            Some(oj) => {
+                let d = crate::obs::ObsCfg::default();
+                let window_ms = oj.opt_f64("window_ms", crate::gpu::us_to_ms(d.window_us));
+                if !(window_ms.is_finite() && window_ms > 0.0) {
+                    return Err(format!(
+                        "observability.window_ms must be finite and > 0 (got {window_ms})"
+                    ));
+                }
+                let mut o = crate::obs::ObsCfg {
+                    trace: oj.opt_bool("trace", d.trace),
+                    timeseries: oj.opt_bool("timeseries", d.timeseries),
+                    window_us: crate::gpu::ms_to_us(window_ms).max(1),
+                    sampling_seed: oj.opt_u64("seed", d.sampling_seed),
+                    exact_latencies: oj.opt_bool("exact_latencies", d.exact_latencies),
+                    ..d
+                };
+                if let Some(sj) = oj.get("sample") {
+                    o.sample_request = sj.opt_u64("request", d.sample_request as u64) as u32;
+                    o.sample_gpu = sj.opt_u64("gpu", d.sample_gpu as u64) as u32;
+                    o.sample_control = sj.opt_u64("control", d.sample_control as u64) as u32;
+                }
+                o.validate()?;
+                o
+            }
+            None => crate::obs::ObsCfg::default(),
+        };
         Ok(Scenario {
             name: j.opt_str("name", "scenario").to_string(),
             gpu,
@@ -528,6 +559,7 @@ impl Scenario {
             lifecycle,
             unified,
             workload,
+            obs,
         })
     }
 
@@ -659,6 +691,26 @@ impl Scenario {
                 )]),
             ));
         }
+        if self.obs != crate::obs::ObsCfg::default() {
+            pairs.push((
+                "observability",
+                Json::obj(vec![
+                    ("trace", Json::from(self.obs.trace)),
+                    ("timeseries", Json::from(self.obs.timeseries)),
+                    ("window_ms", Json::from(crate::gpu::us_to_ms(self.obs.window_us))),
+                    (
+                        "sample",
+                        Json::obj(vec![
+                            ("request", Json::from(self.obs.sample_request as u64)),
+                            ("gpu", Json::from(self.obs.sample_gpu as u64)),
+                            ("control", Json::from(self.obs.sample_control as u64)),
+                        ]),
+                    ),
+                    ("seed", Json::from(self.obs.sampling_seed)),
+                    ("exact_latencies", Json::from(self.obs.exact_latencies)),
+                ]),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -721,7 +773,7 @@ impl Scenario {
     /// Execution-core options for the cluster path: the scenario's
     /// thread budget + barrier mode in the form the drivers take.
     pub fn exec_opts(&self) -> crate::cluster::ExecOpts {
-        crate::cluster::ExecOpts { threads: self.parallelism, mode: self.exec_mode }
+        crate::cluster::ExecOpts { threads: self.parallelism, mode: self.exec_mode, obs: self.obs }
     }
 
     /// Per-GPU scheduler for the cluster path, derived from the
@@ -1328,6 +1380,40 @@ mod tests {
         let opts = sc2.exec_opts();
         assert_eq!(opts.mode, ExecMode::Epoch);
         assert_eq!(opts.threads, Parallelism::Threads(2));
+    }
+
+    #[test]
+    fn observability_block_parses_validates_and_roundtrips() {
+        // Absent block ⇒ defaults (off, exact vectors) and no block in
+        // the serialized form — goldens stay byte-stable.
+        let sc = Scenario::from_json(EXAMPLE).unwrap();
+        assert_eq!(sc.obs, crate::obs::ObsCfg::default());
+        assert!(!sc.to_json().to_string_pretty().contains("observability"));
+        let with = |block: &str| {
+            Scenario::from_json(&format!(
+                r#"{{"observability": {block}, "models": [{{"name": "alexnet", "rate": 1}}]}}"#
+            ))
+        };
+        let sc = with(
+            r#"{"trace": true, "timeseries": true, "window_ms": 250,
+                "sample": {"request": 8, "gpu": 2}, "seed": 9,
+                "exact_latencies": false}"#,
+        )
+        .unwrap();
+        assert!(sc.obs.trace && sc.obs.timeseries);
+        assert_eq!(sc.obs.window_us, 250_000);
+        assert_eq!(sc.obs.sample_request, 8);
+        assert_eq!(sc.obs.sample_gpu, 2);
+        assert_eq!(sc.obs.sample_control, 1);
+        assert_eq!(sc.obs.sampling_seed, 9);
+        assert!(!sc.obs.exact_latencies);
+        assert_eq!(sc.exec_opts().obs, sc.obs);
+        // Round-trips through to_json.
+        let sc2 = Scenario::from_json(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sc2.obs, sc.obs);
+        // Invalid knobs are rejected with a field-naming message.
+        assert!(with(r#"{"window_ms": 0}"#).is_err());
+        assert!(with(r#"{"sample": {"request": 0}}"#).is_err());
     }
 
     #[test]

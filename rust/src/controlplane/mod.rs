@@ -58,12 +58,14 @@ use crate::cluster::{
     place, ClusterReport, ExecOpts, GpuModelShare, GpuReport, GpuSched, Placement,
     PlacementPolicy, Replica, Router, RoutingPolicy,
 };
+use crate::cluster::p99_of;
 use crate::gpu::{ms_to_us, Us};
 use crate::metrics::RunReport;
+use crate::obs::{EngineObs, EventKind, ObsCfg, ObsReport, Recorder, NO_MODEL};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::json::Json;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, LogHistogram};
 use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
 
 /// Control-plane configuration (the scenario `"adaptive"` block — see
@@ -377,13 +379,15 @@ fn activate_replica(
     profiles: &[ModelProfile],
     gpus: &[GpuSpec],
     horizon_ms: f64,
+    obs_cfg: ObsCfg,
     sched: GpuSched,
     model: usize,
     rep: &mut LiveRep,
 ) {
     let g = rep.gpu;
     if engines[g].is_none() {
-        let sim_cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+        let sim_cfg =
+            SimConfig { gpu: gpus[g].clone(), horizon_ms, obs: obs_cfg, ..Default::default() };
         engines[g] = Some(ExecEngine {
             sim: Sim::new(sim_cfg, Vec::new()),
             policy: sched.build(&[]),
@@ -460,6 +464,10 @@ struct AdaptiveDriver<'a> {
     cache: BacklogCache,
     rejected: Vec<u64>,
     next_tick: Us,
+    /// Observability config copied into engines created mid-run.
+    obs_cfg: ObsCfg,
+    /// Control-lane recorder: arrive/route/reject + replans.
+    obs: Recorder,
 }
 
 impl AdaptiveDriver<'_> {
@@ -486,11 +494,17 @@ impl AdaptiveDriver<'_> {
         let reps = &self.routable[model];
         if reps.is_empty() {
             self.rejected[model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+            }
             return;
         }
         let cache = &mut self.cache;
         let pick = self.router.route(model, reps, |rep| cache.backlog(engines, rep));
         let rep = &reps[pick];
+        if self.obs.on() {
+            self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, rep.gpu as u64);
+        }
         let mut q = req;
         q.model = rep.local;
         engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(q);
@@ -518,14 +532,23 @@ impl EpochDriver for AdaptiveDriver<'_> {
     fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
         let model = req.model;
         self.window_counts[model] += 1;
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, model as u32, req.id, 0);
+        }
         let reps = &self.routable[model];
         if reps.is_empty() {
             self.rejected[model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+            }
             return None;
         }
         // Backlog-free by contract: the closure is never consulted.
         let pick = self.router.route(model, reps, |_| 0);
         let rep = &reps[pick];
+        if self.obs.on() {
+            self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, rep.gpu as u64);
+        }
         Some((rep.gpu, rep.local))
     }
 
@@ -553,6 +576,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
                 self.profiles,
                 self.gpus,
                 self.horizon_ms,
+                self.obs_cfg,
                 self.sched,
                 m,
                 &mut lr,
@@ -577,6 +601,9 @@ impl EpochDriver for AdaptiveDriver<'_> {
     ) {
         let model = req.model;
         self.window_counts[model] += 1;
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, model as u32, req.id, 0);
+        }
         self.route_and_inject(model, req, engines, touched);
     }
 
@@ -594,6 +621,9 @@ impl EpochDriver for AdaptiveDriver<'_> {
         self.stats.replans += 1;
         self.planned_rates = self.estimator.rates().to_vec();
         let target = place(self.profiles, &self.planned_rates, self.gpus, self.placement);
+        if self.obs.on() {
+            self.obs.count_control(EventKind::Replan, t);
+        }
         let current: Vec<Vec<(usize, u32)>> = self
             .live
             .iter()
@@ -665,6 +695,15 @@ impl EpochDriver for AdaptiveDriver<'_> {
             }
             self.stats.rebalances += 1;
             self.stats.rebalance_times_us.push(t);
+        }
+        if self.obs.on() {
+            self.obs.event(
+                EventKind::Replan,
+                t,
+                NO_MODEL,
+                delta.add.len() as u64,
+                delta.remove.len() as u64,
+            );
         }
         self.shed_rps = target.shed_rps.clone();
     }
@@ -775,6 +814,7 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
                 profiles,
                 gpus,
                 horizon_ms,
+                opts.obs,
                 sched,
                 m,
                 &mut lr,
@@ -815,19 +855,27 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
         next_tick: interval,
+        obs_cfg: opts.obs,
+        obs: Recorder::new(opts.obs, horizon),
     };
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
 
     let AdaptiveDriver {
-        live, local_map, knee_load, shed_rps, estimator, mut stats, rejected, ..
+        live, local_map, knee_load, shed_rps, estimator, mut stats, rejected, obs: mut obs_rec, ..
     } = driver;
     stats.est_rates = estimator.rates().to_vec();
+    let control_obs = obs_rec.finish(profiles.iter().map(|p| p.name.clone()).collect());
 
     // --- finalize + aggregate ----------------------------------------------
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
         .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
         .collect();
+    let obs_lanes: Vec<EngineObs> = engines
+        .iter_mut()
+        .map(|slot| slot.as_mut().map(|e| e.sim.take_obs()).unwrap_or_default())
+        .collect();
+    let obs = ObsReport::collect(opts.obs, horizon, obs_lanes, control_obs);
 
     let horizon_s = horizon_ms / 1_000.0;
     let split_at = stats.first_rebalance_us();
@@ -836,6 +884,7 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
     let mut served = vec![0u64; n_models];
     let mut dropped = vec![0u64; n_models];
     let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut lat_before: Vec<Vec<f64>> = vec![Vec::new(); n_models];
     let mut lat_after: Vec<Vec<f64>> = vec![Vec::new(); n_models];
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
@@ -851,6 +900,7 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
                     served[global] += mm.served;
                     dropped[global] += mm.dropped;
                     latencies[global].extend_from_slice(&mm.latencies_ms);
+                    hists[global].merge(&mm.latency_hist);
                     for (lat, &done) in mm.latencies_ms.iter().zip(&mm.completions_us) {
                         match split_at {
                             Some(cut) if done >= cut => lat_after[global].push(*lat),
@@ -890,7 +940,8 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
     }
     stats.p99_before_ms = lat_before.iter().map(|l| percentile(l, 99.0)).collect();
     stats.p99_after_ms = lat_after.iter().map(|l| percentile(l, 99.0)).collect();
-    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let p99_ms: Vec<f64> =
+        latencies.iter().zip(&hists).map(|(l, h)| p99_of(l, h)).collect();
     let replica_map: Vec<Vec<usize>> = live
         .iter()
         .map(|reps| reps.iter().map(|r| r.gpu).collect())
@@ -913,6 +964,7 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
         adaptive: Some(stats),
         lifecycle: None,
         exec: Some(exec_stats),
+        obs,
     }
 }
 

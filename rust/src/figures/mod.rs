@@ -947,6 +947,102 @@ pub fn fig_streaming() -> FigData {
     out
 }
 
+/// Fig. 17 (beyond the paper): the unified drift *timeline* — the
+/// fig15 stress scenario rerun with the deterministic event recorder
+/// on, rendered as one row per virtual-time window: cluster p99 and
+/// mean utilization next to the control plane's replan / eviction /
+/// cold-load / scale-to-zero markers and the warm-set size. The
+/// popularity rotation at the midpoint shows up as a p99 spike, a
+/// burst of cold loads + evictions, then a replan restoring goodput.
+pub fn fig17() -> FigData {
+    fig17_with_artifacts().0
+}
+
+/// [`fig17`] plus the raw observability artifacts of the same run —
+/// the Perfetto trace JSON and the windowed time-series JSON — so CI
+/// uploads them without a second simulation.
+pub fn fig17_with_artifacts() -> (FigData, String, String) {
+    use crate::cluster::{ExecOpts, GpuSched, PlacementPolicy, RoutingPolicy};
+    use crate::lifecycle::LifecycleCfg;
+    use crate::obs::ObsCfg;
+    use crate::unified::{drifting_longtail_workload, run_unified_with, unified_gpus, UnifiedCfg};
+    let horizon_ms = 6_000.0;
+    let seed = 42;
+    let (profiles, rates, reqs) = drifting_longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = unified_gpus(4);
+    let ucfg = UnifiedCfg {
+        lifecycle: LifecycleCfg { mem_budget_mib: 4_096, min_replicas: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let opts = ExecOpts {
+        obs: ObsCfg { trace: true, timeseries: true, ..Default::default() },
+        ..Default::default()
+    };
+    let rep = run_unified_with(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &ucfg,
+        reqs,
+        horizon_ms,
+        seed,
+        opts,
+    );
+    let obs = rep.obs.as_ref().expect("recorder was enabled");
+    let mut out = FigData::new(
+        "fig17",
+        "unified drift timeline: windowed p99/util + replan/eviction markers (4xV100)",
+        &[
+            "t0_ms",
+            "arrivals",
+            "served",
+            "slo_miss",
+            "p99_ms",
+            "mean_util",
+            "warm_models",
+            "replans",
+            "evictions",
+            "cold_loads",
+            "scale_zeros",
+        ],
+    );
+    let n = obs.n_windows();
+    let p99 = obs.per_window_p99();
+    let wus = obs.cfg.window_us;
+    for i in 0..n {
+        let (mut arrivals, mut served, mut slo_miss, mut busy) = (0u64, 0u64, 0u64, 0u64);
+        for l in &obs.lanes {
+            if let Some(w) = l.windows.get(i) {
+                arrivals += w.arrivals;
+                served += w.served;
+                slo_miss += w.slo_miss;
+                busy += w.busy_us;
+            }
+        }
+        let util = busy as f64 / (obs.lanes.len().max(1) as f64 * wus as f64);
+        let cw = obs.control.windows.get(i);
+        out.push(vec![
+            (i as u64 * wus / 1_000).to_string(),
+            arrivals.to_string(),
+            served.to_string(),
+            slo_miss.to_string(),
+            f(p99[i]),
+            f(util),
+            cw.map_or(0, |w| w.warm_by_gpu.iter().sum::<u64>()).to_string(),
+            cw.map_or(0, |w| w.replans).to_string(),
+            cw.map_or(0, |w| w.evictions).to_string(),
+            cw.map_or(0, |w| w.cold_loads).to_string(),
+            cw.map_or(0, |w| w.scale_zeros).to_string(),
+        ]);
+    }
+    let trace = obs.to_perfetto();
+    let series = obs.timeseries_json().to_string_pretty();
+    (out, trace, series)
+}
+
 /// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
 pub fn generate(which: &str) -> Vec<FigData> {
     match which {
@@ -969,6 +1065,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
         "14" | "lifecycle" => vec![fig14()],
         "15" | "unified" => vec![fig15()],
         "16" | "streaming" => vec![fig_streaming()],
+        "17" | "obs" | "timeline" => vec![fig17()],
         "tables" => vec![table1(), table2(), table3(), table6()],
         "ablation" => vec![ablation()],
         "all" => {
@@ -991,6 +1088,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
                 fig14(),
                 fig15(),
                 fig_streaming(),
+                fig17(),
             ];
             v.extend([table1(), table2(), table3(), table6()]);
             v

@@ -30,6 +30,7 @@ pub mod figures;
 pub mod gpu;
 pub mod lifecycle;
 pub mod metrics;
+pub mod obs;
 pub mod optimizer;
 pub mod profile;
 pub mod runtime;

@@ -52,12 +52,14 @@ use crate::cluster::{
     ClusterReport, ExecOpts, GpuModelShare, GpuReport, GpuSched, Replica, ResidencyPlan,
     Router, RoutingPolicy,
 };
+use crate::cluster::p99_of;
 use crate::gpu::{ms_to_us, us_to_ms, ReconfigModel, Us};
 use crate::metrics::RunReport;
+use crate::obs::{EngineObs, EventKind, ObsReport, Recorder};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::json::Json;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, LogHistogram};
 use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
 use std::collections::{BTreeMap, VecDeque};
 
@@ -371,6 +373,9 @@ struct LifecycleDriver<'a> {
     /// empty between requests; hoisted so the routing hot path does not
     /// allocate per request).
     scratch: VecDeque<(usize, Request)>,
+    /// Control-lane recorder: arrive/route/reject plus
+    /// eviction/cold-load/scale-to-zero events and warm-set levels.
+    obs: Recorder,
 }
 
 impl LifecycleDriver<'_> {
@@ -390,6 +395,9 @@ impl LifecycleDriver<'_> {
         let reps: &[Replica] = &self.plan.placement.replicas[model];
         if reps.is_empty() {
             self.rejected[model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+            }
             return;
         }
         let cache = &mut self.cache;
@@ -426,6 +434,9 @@ impl LifecycleDriver<'_> {
             let g = r.gpu;
             if self.stores[g].is_warm(model) {
                 self.stores[g].touch(t, model);
+                if self.obs.on() {
+                    self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, g as u64);
+                }
                 let mut q = req;
                 q.model = r.local;
                 engines[g].as_mut().expect("warm replica on idle GPU").sim.inject(q);
@@ -462,6 +473,16 @@ impl LifecycleDriver<'_> {
                 let engine = engines[g].as_mut().expect("cold replica on idle GPU");
                 for v in victims {
                     let vl = self.local_of[g][v].expect("evicting unassigned model");
+                    if self.obs.on() {
+                        self.obs.event(
+                            EventKind::Evict,
+                            t,
+                            v as u32,
+                            g as u64,
+                            self.profiles[v].mem_mib,
+                        );
+                        self.obs.count_control(EventKind::Evict, t);
+                    }
                     for dr in engine.sim.deactivate_model(vl) {
                         work.push_back((v, dr));
                     }
@@ -476,6 +497,11 @@ impl LifecycleDriver<'_> {
                 touched.mark(g);
             }
             let ready = t + ms_to_us(load_ms).max(1);
+            if self.obs.on() {
+                self.obs.event(EventKind::ColdLoad, t, model as u32, g as u64, ready - t);
+                self.obs.count_control(EventKind::ColdLoad, t);
+                self.obs.warm_level(g, t, self.stores[g].n_warm() as u64);
+            }
             self.loading.insert((g, model), ready);
             self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
             self.held.entry((g, model)).or_default().push(req);
@@ -524,9 +550,15 @@ impl EpochDriver for LifecycleDriver<'_> {
     /// only admits spans where every replica is warm or mid-load.
     fn route_free(&mut self, t: Us, req: &Request) -> Option<(usize, usize)> {
         let model = req.model;
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, model as u32, req.id, 0);
+        }
         let reps: &[Replica] = &self.plan.placement.replicas[model];
         if reps.is_empty() {
             self.rejected[model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+            }
             return None;
         }
         // Backlog-free policies never call the cost closure.
@@ -537,6 +569,9 @@ impl EpochDriver for LifecycleDriver<'_> {
             let g = r.gpu;
             if self.stores[g].is_warm(model) {
                 self.stores[g].touch(t, model);
+                if self.obs.on() {
+                    self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, g as u64);
+                }
                 self.stats.warm_hits += 1;
                 return Some((g, r.local));
             }
@@ -549,6 +584,9 @@ impl EpochDriver for LifecycleDriver<'_> {
             debug_assert!(false, "cold start inside an elided warm span");
         }
         self.rejected[model] += 1;
+        if self.obs.on() {
+            self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+        }
         None
     }
 
@@ -574,6 +612,9 @@ impl EpochDriver for LifecycleDriver<'_> {
         for (g, m) in due {
             self.loading.remove(&(g, m));
             self.stores[g].complete_load(t, m);
+            if self.obs.on() {
+                self.obs.warm_level(g, t, self.stores[g].n_warm() as u64);
+            }
             let local = self.local_of[g][m].expect("loaded model without a slot");
             let rep = self.plan.placement.replicas[m]
                 .iter()
@@ -606,6 +647,9 @@ impl EpochDriver for LifecycleDriver<'_> {
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
     ) {
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
         let mut work = std::mem::take(&mut self.scratch);
         debug_assert!(work.is_empty());
         work.push_back((req.model, req));
@@ -633,6 +677,17 @@ impl EpochDriver for LifecycleDriver<'_> {
                     debug_assert!(drained.is_empty(), "empty backlog drained requests");
                     engine.rebuild_policy(self.sched);
                     self.stats.scale_to_zero += 1;
+                    if self.obs.on() {
+                        self.obs.event(
+                            EventKind::ScaleZero,
+                            t,
+                            m as u32,
+                            g as u64,
+                            self.profiles[m].mem_mib,
+                        );
+                        self.obs.count_control(EventKind::ScaleZero, t);
+                        self.obs.warm_level(g, t, self.stores[g].n_warm() as u64);
+                    }
                     touched.mark(g);
                 } else {
                     self.stores[g].touch(t, m);
@@ -746,7 +801,8 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
                     ModelEntry { profile: profiles[m].clone(), pct: rep.pct, batch: rep.batch }
                 })
                 .collect();
-            let sim_cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+            let sim_cfg =
+                SimConfig { gpu: gpus[g].clone(), horizon_ms, obs: opts.obs, ..Default::default() };
             let mut sim = Sim::new(sim_cfg, entries);
             // Everything outside the t = 0 resident set starts as a
             // tombstone: no knee budget, no traffic until faulted in.
@@ -792,15 +848,48 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
         stats: LifecycleStats::default(),
         idle_timeout,
         scratch: VecDeque::new(),
+        obs: Recorder::new(opts.obs, horizon),
     };
+    // Seed the warm-set timeline with the t = 0 resident sets so the
+    // first window reflects the preloaded state, not zero.
+    if driver.obs.on() {
+        for g in 0..n_gpus {
+            let level = driver.stores[g].n_warm() as u64;
+            driver.obs.warm_level(g, 0, level);
+        }
+    }
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
-    let LifecycleDriver { stores, rejected, held, cold_delays_ms, mut stats, .. } = driver;
+    let LifecycleDriver {
+        stores,
+        rejected,
+        held,
+        cold_delays_ms,
+        mut stats,
+        obs: mut obs_rec,
+        ..
+    } = driver;
+    // Requests still parked behind an immature load never reached an
+    // engine; stamp their drops on the control lane at the horizon.
+    if obs_rec.on() {
+        for ((_, m), reqs) in &held {
+            for r in reqs {
+                obs_rec.event(EventKind::Drop, horizon, *m as u32, r.id, 0);
+                obs_rec.count_drop(horizon);
+            }
+        }
+    }
+    let control_obs = obs_rec.finish(profiles.iter().map(|p| p.name.clone()).collect());
 
     // --- finalize + aggregate ----------------------------------------------
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
         .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
         .collect();
+    let obs_lanes: Vec<EngineObs> = engines
+        .iter_mut()
+        .map(|slot| slot.as_mut().map(|e| e.sim.take_obs()).unwrap_or_default())
+        .collect();
+    let obs = ObsReport::collect(opts.obs, horizon, obs_lanes, control_obs);
 
     let horizon_s = horizon_ms / 1_000.0;
     let mut throughput = vec![0.0; n_models];
@@ -809,6 +898,7 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
     let mut served_in_slo = 0u64;
     let mut dropped = vec![0u64; n_models];
     let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
     let mut per_gpu = Vec::with_capacity(n_gpus);
     for g in 0..n_gpus {
@@ -823,6 +913,7 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
                     served_in_slo += mm.served_in_slo;
                     dropped[global] += mm.dropped;
                     latencies[global].extend_from_slice(&mm.latencies_ms);
+                    hists[global].merge(&mm.latency_hist);
                     // Shares list the final resident set only, keeping
                     // per_gpu consistent with what the GPU holds at the
                     // horizon.
@@ -859,7 +950,7 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
     for m in 0..n_models {
         violations[m] += rejected[m] as f64 / horizon_s;
     }
-    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let p99_ms: Vec<f64> = latencies.iter().zip(&hists).map(|(l, h)| p99_of(l, h)).collect();
     let replica_map: Vec<Vec<usize>> = plan
         .placement
         .replicas
@@ -899,6 +990,7 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
         adaptive: None,
         lifecycle: Some(stats),
         exec: Some(exec_stats),
+        obs,
     }
 }
 
@@ -1173,7 +1265,7 @@ mod tests {
                 reqs.clone(),
                 1_500.0,
                 3,
-                ExecOpts { threads: Parallelism::Threads(1), mode },
+                ExecOpts { threads: Parallelism::Threads(1), mode, ..Default::default() },
             )
         };
         let sparse = run(ExecMode::Sparse);
@@ -1211,7 +1303,11 @@ mod tests {
             reqs,
             1_500.0,
             9,
-            ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+            ExecOpts {
+                threads: Parallelism::Threads(1),
+                mode: ExecMode::Sparse,
+                ..Default::default()
+            },
         );
         let exec = rep.exec.expect("exec stats attached");
         assert!(exec.barriers_elided > 0, "warm RR span elided nothing: {exec:?}");

@@ -3,7 +3,9 @@
 //! figure of the paper.
 //!
 //! Subcommands:
-//!   figures  --fig <2|3|4|...|16|all> [--out results]
+//!   figures  --fig <2|3|4|...|17|all> [--out results]
+//!            (--fig 17 also writes fig17_trace.json +
+//!            fig17_timeseries.json, the observability artifacts)
 //!   tables   --table <1|2|3|6|all>    [--out results]
 //!   simulate --config <scenario.json> [--threads N|auto]
 //!            [--exec-mode sparse|epoch] [--verbose]   (scenarios
@@ -50,9 +52,17 @@
 //! thread budget: `auto` = one per core, `1` = serial),
 //! `--exec-mode sparse|epoch` (barrier discipline of the execution
 //! core; sparse is the default) and `--verbose` (print execution-core
-//! telemetry: barriers run/elided, batched arrivals, max lookahead).
+//! telemetry: barriers run/elided, batched arrivals, max lookahead —
+//! plus the observability digest when a recorder ran).
 //! Neither threads nor exec-mode ever changes results — reports are
 //! byte-identical for any combination.
+//!
+//! Observability (see docs/OBSERVABILITY.md): `--emit-trace <file>`
+//! writes a Perfetto-JSON event trace of the run, `--emit-timeseries
+//! <file>` writes windowed time-series metrics; either flag forces the
+//! matching recorder on (a scenario's `"observability"` block enables
+//! them declaratively). Traces are byte-identical across exec modes
+//! and thread counts, and recording never changes report bytes.
 
 use dstack::util::cli::Args;
 use std::path::Path;
@@ -86,6 +96,17 @@ fn main() -> anyhow::Result<()> {
 
 fn figures(args: &Args, which: &str) -> anyhow::Result<()> {
     let out_dir = Path::new(args.get_or("out", "results")).to_path_buf();
+    if matches!(which, "17" | "obs" | "timeline") {
+        // The dedicated fig17 path also writes the run's observability
+        // artifacts (one simulation serves all three outputs).
+        let (data, trace, series) = dstack::figures::fig17_with_artifacts();
+        println!("{}\n", data.render());
+        data.write_csv(&out_dir)?;
+        dstack::util::write_file(&out_dir.join("fig17_trace.json"), &trace)?;
+        dstack::util::write_file(&out_dir.join("fig17_timeseries.json"), &series)?;
+        println!("(CSV + trace + timeseries written to {})", out_dir.display());
+        return Ok(());
+    }
     for data in dstack::figures::generate(which) {
         println!("{}\n", data.render());
         data.write_csv(&out_dir)?;
@@ -106,7 +127,9 @@ fn figures(args: &Args, which: &str) -> anyhow::Result<()> {
 
 /// `--threads N|auto` + `--exec-mode sparse|epoch` → execution-core
 /// options, overriding `base` (a scenario's `parallelism`/`exec_mode`
-/// fields or the defaults) where given.
+/// fields or the defaults) where given. `--emit-trace`/
+/// `--emit-timeseries` force the matching recorder on; neither ever
+/// changes report bytes.
 fn exec_opts_from_args(
     args: &Args,
     base: dstack::cluster::ExecOpts,
@@ -119,17 +142,25 @@ fn exec_opts_from_args(
         Some(s) => dstack::cluster::ExecMode::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?,
         None => base.mode,
     };
-    Ok(dstack::cluster::ExecOpts { threads, mode })
+    let mut obs = base.obs;
+    if args.get("emit-trace").is_some() {
+        obs.trace = true;
+    }
+    if args.get("emit-timeseries").is_some() {
+        obs.timeseries = true;
+    }
+    Ok(dstack::cluster::ExecOpts { threads, mode, obs })
 }
 
 /// Overlay the exec flags onto a loaded scenario's own knobs.
 fn overlay_exec_args(args: &Args, sc: &mut dstack::config::Scenario) -> anyhow::Result<()> {
     let opts = exec_opts_from_args(
         args,
-        dstack::cluster::ExecOpts { threads: sc.parallelism, mode: sc.exec_mode },
+        dstack::cluster::ExecOpts { threads: sc.parallelism, mode: sc.exec_mode, obs: sc.obs },
     )?;
     sc.parallelism = opts.threads;
     sc.exec_mode = opts.mode;
+    sc.obs = opts.obs;
     Ok(())
 }
 
@@ -142,6 +173,26 @@ fn print_exec_stats(args: &Args, rep: &dstack::cluster::ClusterReport) {
     if let Some(x) = &rep.exec {
         println!("{}", x.render());
     }
+    if let Some(o) = &rep.obs {
+        println!("{}", o.render());
+    }
+}
+
+/// Write the run's observability artifacts where `--emit-trace` /
+/// `--emit-timeseries` point. The report JSON never carries them —
+/// these files are the only way the recorder's output leaves the
+/// process (besides the `--verbose` digest).
+fn emit_obs_artifacts(args: &Args, rep: &dstack::cluster::ClusterReport) -> anyhow::Result<()> {
+    let Some(obs) = &rep.obs else { return Ok(()) };
+    if let Some(path) = args.get("emit-trace") {
+        dstack::util::write_file(Path::new(path), &obs.to_perfetto())?;
+        println!("(trace written to {path})");
+    }
+    if let Some(path) = args.get("emit-timeseries") {
+        dstack::util::write_file(Path::new(path), &obs.timeseries_json().to_string_pretty())?;
+        println!("(timeseries written to {path})");
+    }
+    Ok(())
 }
 
 fn simulate(args: &Args) -> anyhow::Result<()> {
@@ -161,6 +212,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             println!("scenario '{}' unified policy={}", sc.name, rep.policy);
             print_cluster_report(&names, &rep);
             print_exec_stats(args, &rep);
+            emit_obs_artifacts(args, &rep)?;
             return Ok(());
         }
         if sc.lifecycle.is_some() {
@@ -169,6 +221,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             println!("scenario '{}' lifecycle policy={}", sc.name, rep.policy);
             print_cluster_report(&names, &rep);
             print_exec_stats(args, &rep);
+            emit_obs_artifacts(args, &rep)?;
             return Ok(());
         }
         let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
@@ -183,6 +236,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         println!("scenario '{}' cluster policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);
         print_exec_stats(args, &rep);
+        emit_obs_artifacts(args, &rep)?;
         return Ok(());
     }
     let rep = dstack::config::run_scenario(&sc);
@@ -341,6 +395,7 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         println!("scenario '{}' adaptive policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);
         print_exec_stats(args, &rep);
+        emit_obs_artifacts(args, &rep)?;
         return Ok(());
     }
     let horizon_ms = args.get_f64("horizon", 10_000.0);
@@ -388,6 +443,7 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
     println!("\n== adaptive control plane ==");
     print_cluster_report(&names, &adap);
     print_exec_stats(args, &adap);
+    emit_obs_artifacts(args, &adap)?;
 
     let (s, a) = (stat.total_throughput(), adap.total_throughput());
     println!(
@@ -435,6 +491,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
         println!("scenario '{}' lifecycle policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);
         print_exec_stats(args, &rep);
+        emit_obs_artifacts(args, &rep)?;
         return Ok(());
     }
     // Built-in canonical scenario: 24-model Zipf(1.1) long-tail on
@@ -483,6 +540,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
         println!("\n== warm-oblivious JSQ ==");
         print_cluster_report(&names, &rep);
         print_exec_stats(args, &rep);
+        emit_obs_artifacts(args, &rep)?;
         return Ok(());
     }
     let cold = run(false);
@@ -492,6 +550,7 @@ fn lifecycle_cmd(args: &Args) -> anyhow::Result<()> {
     println!("\n== warmness-aware JSQ ==");
     print_cluster_report(&names, &warm);
     print_exec_stats(args, &warm);
+    emit_obs_artifacts(args, &warm)?;
 
     let (gw, gc) = (
         warm.lifecycle.as_ref().map_or(0.0, |l| l.goodput_rps),
@@ -546,6 +605,7 @@ fn unified_cmd(args: &Args) -> anyhow::Result<()> {
         println!("scenario '{}' unified policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);
         print_exec_stats(args, &rep);
+        emit_obs_artifacts(args, &rep)?;
         return Ok(());
     }
     // Built-in canonical stress: the 24-model Zipf(1.1) long-tail whose
@@ -616,6 +676,7 @@ fn unified_cmd(args: &Args) -> anyhow::Result<()> {
     println!("\n== unified control plane: residency-priced drift + pressure replans ==");
     print_cluster_report(&names, &uni);
     print_exec_stats(args, &uni);
+    emit_obs_artifacts(args, &uni)?;
 
     let (gu, gn) = (
         uni.lifecycle.as_ref().map_or(0.0, |l| l.goodput_rps),
@@ -698,6 +759,7 @@ fn cluster_cmd(args: &Args) -> anyhow::Result<()> {
     let model_names: Vec<String> = profiles.iter().map(|p| p.name.clone()).collect();
     print_cluster_report(&model_names, &rep);
     print_exec_stats(args, &rep);
+    emit_obs_artifacts(args, &rep)?;
     Ok(())
 }
 

@@ -4,7 +4,7 @@
 
 use crate::gpu::{us_to_ms, Us};
 use crate::util::json::Json;
-use crate::util::stats::{jain_fairness, Summary};
+use crate::util::stats::{jain_fairness, LogHistogram, Summary};
 
 /// Per-model counters collected during a run.
 #[derive(Debug, Clone, Default)]
@@ -26,6 +26,12 @@ pub struct ModelMetrics {
     pub batches: u64,
     /// Sum of batch sizes (for mean batch size).
     pub batch_items: u64,
+    /// Bounded-memory latency distribution (~1% relative error). Only
+    /// maintained when the exact vectors are disabled
+    /// (`observability.exact_latencies = false`); then it is the source
+    /// of [`Self::latency_summary`] quantiles, keeping a 10⁷-request
+    /// run's memory flat. Never serialized.
+    pub latency_hist: LogHistogram,
 }
 
 impl ModelMetrics {
@@ -47,6 +53,9 @@ impl ModelMetrics {
     }
 
     pub fn latency_summary(&self) -> Summary {
+        if self.latencies_ms.is_empty() && self.latency_hist.count() > 0 {
+            return self.latency_hist.summary();
+        }
         Summary::from_samples(&self.latencies_ms)
     }
 
@@ -95,8 +104,12 @@ impl RunReport {
         us_to_ms(self.horizon_us) / 1_000.0
     }
 
-    /// Per-model throughput in served requests/s.
+    /// Per-model throughput in served requests/s. A zero-length horizon
+    /// offers no time to serve anything — rates are zero, not Inf/NaN.
     pub fn throughput(&self) -> Vec<f64> {
+        if self.horizon_us == 0 {
+            return vec![0.0; self.per_model.len()];
+        }
         let s = self.horizon_s();
         self.per_model.iter().map(|m| m.served as f64 / s).collect()
     }
@@ -105,8 +118,12 @@ impl RunReport {
         self.throughput().iter().sum()
     }
 
-    /// Per-model SLO violations per second.
+    /// Per-model SLO violations per second (zero-horizon guard as in
+    /// [`Self::throughput`]).
     pub fn violations_per_sec(&self) -> Vec<f64> {
+        if self.horizon_us == 0 {
+            return vec![0.0; self.per_model.len()];
+        }
         let s = self.horizon_s();
         self.per_model.iter().map(|m| m.slo_violations() as f64 / s).collect()
     }
@@ -165,6 +182,7 @@ mod tests {
             completions_us: vec![1_000; served as usize],
             batches: served / 4,
             batch_items: served,
+            ..Default::default()
         }
     }
 
@@ -219,5 +237,47 @@ mod tests {
         let m = mm(100, 100, 0);
         assert!((m.mean_batch() - 4.0).abs() < 1e-12);
         assert_eq!(ModelMetrics::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn zero_horizon_rates_are_zero_not_inf() {
+        // Regression: horizon_us == 0 used to divide by zero, leaking
+        // Inf (and NaN for 0/0) into throughput and violations/s.
+        let r = RunReport {
+            policy: "test".into(),
+            horizon_us: 0,
+            per_model: vec![mm(10, 8, 2), mm(0, 0, 0)],
+            gpu_utilization: vec![0.0],
+            busy_ms: vec![0.0, 0.0],
+            last_completion_us: 0,
+        };
+        assert_eq!(r.throughput(), vec![0.0, 0.0]);
+        assert_eq!(r.violations_per_sec(), vec![0.0, 0.0]);
+        assert_eq!(r.total_throughput(), 0.0);
+        assert_eq!(r.total_violations_per_sec(), 0.0);
+        assert!(r.throughput().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn latency_summary_falls_back_to_histogram() {
+        // With exact vectors disabled, quantiles come from the bounded
+        // histogram instead of collapsing to zero.
+        let mut m = ModelMetrics { name: "m".into(), served: 3, ..Default::default() };
+        for x in [10.0, 20.0, 30.0] {
+            m.latency_hist.push(x);
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.count, 3);
+        assert!((s.mean - 20.0).abs() < 1e-9);
+        assert!(s.p99 >= 29.0 && s.p99 <= 30.0, "p99 {}", s.p99);
+        // Exact vector present → exact path wins, as before.
+        m.latencies_ms = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.latency_summary().max, 3.0);
+        // Serialized form carries the histogram-backed summary but
+        // never the histogram itself.
+        m.latencies_ms.clear();
+        let j = m.to_json();
+        assert!(j.get("latency_hist").is_none());
+        assert!(j.get("latency_ms").unwrap().get("p99").is_some());
     }
 }

@@ -1,0 +1,1002 @@
+//! Deterministic observability: virtual-time event tracing and windowed
+//! time-series metrics (DESIGN.md §4.11).
+//!
+//! Every run used to collapse into end-of-run aggregates
+//! ([`crate::metrics::RunReport`] / [`crate::cluster::ClusterReport`]),
+//! which hides exactly the phenomena the unified driver exists to
+//! manage: drift replans, eviction cascades, cold-start stalls, flash
+//! crowds. This module adds a [`Recorder`] that every per-GPU engine
+//! ([`crate::sim::Sim`]) and every cluster driver carries, capturing
+//!
+//! - **request lifecycle events** — arrive → route → enqueue →
+//!   complete / drop / reject;
+//! - **GPU occupancy spans** — one span per launched batch, with its
+//!   deployed GPU% and useful (knee-capped) GPU%;
+//! - **control-plane events** — replan, eviction, cold load,
+//!   scale-to-zero;
+//!
+//! into per-lane buffers that [`ObsReport`] merges by the
+//! mode-invariant key `(virtual_time, lane, kind, kind_seq)` and
+//! exports as Chrome/Perfetto trace-event JSON
+//! ([`ObsReport::to_perfetto`], `dstack … --emit-trace`).
+//!
+//! # Why trace bytes are identical across `exec_mode` × threads
+//!
+//! The execution core's contract (exec.rs, DESIGN.md §4.7–4.8) is that
+//! each engine's *trajectory* — its sequence of injections, launches,
+//! completions and drops, each stamped with its own virtual time — is a
+//! pure function of the scenario, independent of barrier granularity
+//! and thread count. The recorder only ever records at those
+//! state-mutation points, never at bare `step_to` calls, so each
+//! per-lane buffer holds the same multiset of events in any mode. What
+//! *can* differ between modes is the cross-kind interleaving within a
+//! buffer (a run-ahead engine drains a completion before a barrier-time
+//! injection is recorded; an epoch engine records them in the opposite
+//! order). Two consequences:
+//!
+//! - sampling counters are **per event kind** ([`Recorder`] keeps one
+//!   counter per [`EventKind`]), because the per-kind sequence *is*
+//!   mode-invariant while the cross-kind record order is not;
+//! - the merge key ends with `(kind, kind_seq)`, not buffer position,
+//!   so the final sort is independent of record order.
+//!
+//! Sampling is a deterministic keep-1-in-N per category
+//! ([`ObsCfg::sample_request`] / `sample_gpu` / `sample_control`): an
+//! event is kept iff `splitmix(seed, kind, kind_seq) % N == 0`. The
+//! same seed always keeps the same events, in any mode, at any thread
+//! count — that is what `tests/obs_trace.rs` locks.
+//!
+//! # Windowed time-series
+//!
+//! With `timeseries` on, the recorder also accumulates fixed
+//! virtual-time windows ([`ObsCfg::window_us`] wide) of per-model
+//! throughput, queue depth (sampled at window boundaries), SLO misses,
+//! drops, per-GPU busy/knee occupancy, a per-window latency histogram,
+//! and — on the control lane — replan/eviction/cold-load/scale-to-zero
+//! counts plus per-GPU warm-set size. Counter metrics land in the
+//! window containing their event time; level metrics (queue depth,
+//! warm-set size) are sampled at each window's start boundary, with a
+//! mutation at exactly `k·W` counted *after* the `k`-th sample. Events
+//! at `t ≥ horizon` (batches draining past the horizon) clamp into the
+//! last window. The merged series serializes via
+//! [`ObsReport::timeseries_json`] (`--emit-timeseries`) and renders as
+//! `figures::fig17`; it is **never** part of
+//! [`crate::cluster::ClusterReport::to_json`], so existing report and
+//! golden bytes are unchanged whether or not recording is enabled.
+
+use crate::gpu::Us;
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// Observability configuration — rides on
+/// [`crate::cluster::ExecOpts`] into every driver and on
+/// [`crate::sim::SimConfig`] into every engine. All-integer fields so
+/// the carrying structs stay `Copy + Eq`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsCfg {
+    /// Record discrete events (the Perfetto trace).
+    pub trace: bool,
+    /// Accumulate windowed time-series metrics.
+    pub timeseries: bool,
+    /// Time-series window width in virtual µs (> 0).
+    pub window_us: u64,
+    /// Keep 1 in N request-lifecycle events (arrive/route/reject/
+    /// enqueue/complete/drop). 1 = keep all.
+    pub sample_request: u32,
+    /// Keep 1 in N GPU occupancy spans (batch launches).
+    pub sample_gpu: u32,
+    /// Keep 1 in N control-plane events.
+    pub sample_control: u32,
+    /// Seed of the deterministic sampling hash.
+    pub sampling_seed: u64,
+    /// Keep the exact per-request latency vectors
+    /// (`ModelMetrics::latencies_ms` / `completions_us`). Default
+    /// *true* — report bytes and goldens are unchanged. `false` bounds
+    /// memory at 10⁷-request scale: quantiles then come from the
+    /// ~1%-relative-error [`LogHistogram`] instead.
+    pub exact_latencies: bool,
+}
+
+impl Default for ObsCfg {
+    fn default() -> Self {
+        ObsCfg {
+            trace: false,
+            timeseries: false,
+            window_us: 500_000,
+            sample_request: 1,
+            sample_gpu: 1,
+            sample_control: 1,
+            sampling_seed: 0,
+            exact_latencies: true,
+        }
+    }
+}
+
+impl ObsCfg {
+    /// Any event/time-series recording at all? (`exact_latencies` alone
+    /// is not recording — it only gates the metrics vectors.)
+    pub fn enabled(&self) -> bool {
+        self.trace || self.timeseries
+    }
+
+    /// Validate invariants shared by config parsing and CLI overlays.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.window_us == 0 {
+            return Err("observability.window_ms must be > 0".into());
+        }
+        if self.sample_request == 0 || self.sample_gpu == 0 || self.sample_control == 0 {
+            return Err("observability sampling rates must be ≥ 1 (keep 1 in N)".into());
+        }
+        Ok(())
+    }
+}
+
+/// What happened. Discriminants are the merge tie-break rank.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// Request arrived at the front door (driver lane; `a` = request id).
+    Arrive = 0,
+    /// Router picked a replica (`a` = request id, `b` = target GPU).
+    Route = 1,
+    /// Admission control turned the request away (`a` = request id).
+    Reject = 2,
+    /// Request entered an engine queue (`a` = request id).
+    Enqueue = 3,
+    /// Batch occupancy span (`a` = batch size, `b` = duration µs;
+    /// `pct`/`useful` ride in the span payload).
+    Batch = 4,
+    /// Request completed (`a` = request id, `b` = latency µs).
+    Complete = 5,
+    /// Request dropped — expired or still queued at the horizon
+    /// (`a` = request id).
+    Drop = 6,
+    /// Control plane re-solved placement (`a` = trigger code).
+    Replan = 7,
+    /// Model evicted from a GPU's store (`a` = GPU, `b` = MiB freed).
+    Evict = 8,
+    /// Cold weight load began (`a` = GPU, `b` = load ms).
+    ColdLoad = 9,
+    /// Idle model scaled to zero (`a` = GPU).
+    ScaleZero = 10,
+}
+
+pub(crate) const N_KINDS: usize = 11;
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrive => "arrive",
+            EventKind::Route => "route",
+            EventKind::Reject => "reject",
+            EventKind::Enqueue => "enqueue",
+            EventKind::Batch => "batch",
+            EventKind::Complete => "complete",
+            EventKind::Drop => "drop",
+            EventKind::Replan => "replan",
+            EventKind::Evict => "evict",
+            EventKind::ColdLoad => "cold_load",
+            EventKind::ScaleZero => "scale_to_zero",
+        }
+    }
+
+    /// Sampling/filter category.
+    pub fn category(&self) -> Category {
+        match self {
+            EventKind::Arrive
+            | EventKind::Route
+            | EventKind::Reject
+            | EventKind::Enqueue
+            | EventKind::Complete
+            | EventKind::Drop => Category::Request,
+            EventKind::Batch => Category::Gpu,
+            EventKind::Replan
+            | EventKind::Evict
+            | EventKind::ColdLoad
+            | EventKind::ScaleZero => Category::Control,
+        }
+    }
+}
+
+/// Event-category filter/sampling domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    Request,
+    Gpu,
+    Control,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Request => "request",
+            Category::Gpu => "gpu",
+            Category::Control => "control",
+        }
+    }
+}
+
+/// One recorded event. `model` indexes the recording lane's name table
+/// ([`EngineObs::names`]); payload semantics per [`EventKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Virtual time (µs).
+    pub t: Us,
+    pub kind: EventKind,
+    /// Lane-local model index (`u32::MAX` = none, e.g. replans).
+    pub model: u32,
+    /// Per-kind sequence number at record time (pre-sampling) — the
+    /// mode-invariant merge tie-break.
+    pub kseq: u64,
+    pub a: u64,
+    pub b: u64,
+    /// Deployed GPU% (Batch spans only).
+    pub pct: u32,
+    /// Useful (knee-capped) GPU% (Batch spans only).
+    pub useful: u32,
+}
+
+pub(crate) const NO_MODEL: u32 = u32::MAX;
+
+/// One fixed virtual-time bucket of the time-series. Engine lanes fill
+/// the request/GPU fields; the control lane fills the control fields.
+#[derive(Debug, Clone, Default)]
+pub struct Window {
+    pub arrivals: u64,
+    pub served: u64,
+    pub slo_miss: u64,
+    pub dropped: u64,
+    /// GPU busy µs attributed to this window (span overlap).
+    pub busy_us: u64,
+    /// Knee-capped useful GPU%·µs attributed to this window — divide by
+    /// `100 · window_us` for knee load 0..1.
+    pub knee_pct_us: u64,
+    /// Backlog (queued + in-flight items) at the window's start
+    /// boundary.
+    pub queue_depth: u64,
+    /// Served counts per lane-local model index.
+    pub served_by_model: Vec<u64>,
+    /// Latencies (ms) of completions in this window.
+    pub lat: LogHistogram,
+    pub replans: u64,
+    pub evictions: u64,
+    pub cold_loads: u64,
+    pub scale_zeros: u64,
+    /// Warm-set size per GPU at the window's start boundary (control
+    /// lane only).
+    pub warm_by_gpu: Vec<u64>,
+}
+
+/// Boundary-sampling level tracker: `flush(t)` writes the current level
+/// into every not-yet-sampled window whose start boundary is ≤ `t`,
+/// *before* the mutation at `t` applies — so an event exactly on a
+/// boundary lands after that boundary's sample.
+#[derive(Debug, Clone, Default)]
+struct LevelTrack {
+    level: i64,
+    /// Next window index whose start boundary still needs a sample.
+    /// Window 0's start (t = 0) always samples the initial level.
+    next: u64,
+}
+
+/// Per-lane deterministic recorder. One lives inside every
+/// [`crate::sim::Sim`]; each cluster driver owns one more for the
+/// control lane. Cheap when disabled: every hook early-outs on two
+/// bools.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    cfg: ObsCfg,
+    horizon: Us,
+    n_windows: u64,
+    events: Vec<Event>,
+    windows: Vec<Window>,
+    kind_seq: [u64; N_KINDS],
+    sampled_out: u64,
+    depth: LevelTrack,
+    warm: Vec<LevelTrack>,
+}
+
+impl Recorder {
+    pub fn new(cfg: ObsCfg, horizon: Us) -> Recorder {
+        let n_windows =
+            if cfg.enabled() && horizon > 0 { horizon.div_ceil(cfg.window_us.max(1)) } else { 0 };
+        Recorder {
+            cfg,
+            horizon,
+            n_windows,
+            events: Vec::new(),
+            windows: Vec::new(),
+            kind_seq: [0; N_KINDS],
+            sampled_out: 0,
+            depth: LevelTrack::default(),
+            warm: Vec::new(),
+        }
+    }
+
+    /// Disabled singleton — what a `Sim` built without observability
+    /// carries. Zero allocations.
+    pub fn off() -> Recorder {
+        Recorder::new(ObsCfg::default(), 0)
+    }
+
+    /// Any recording at all? Hooks guard on this first.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.cfg.trace || self.cfg.timeseries
+    }
+
+    #[inline]
+    pub fn cfg(&self) -> &ObsCfg {
+        &self.cfg
+    }
+
+    fn sample_every(&self, cat: Category) -> u32 {
+        match cat {
+            Category::Request => self.cfg.sample_request,
+            Category::Gpu => self.cfg.sample_gpu,
+            Category::Control => self.cfg.sample_control,
+        }
+    }
+
+    /// Record one event candidate: bump the per-kind counter, apply the
+    /// deterministic sampling decision, keep or drop.
+    pub fn event(&mut self, kind: EventKind, t: Us, model: u32, a: u64, b: u64) {
+        self.span(kind, t, model, a, b, 0, 0)
+    }
+
+    /// [`Self::event`] with occupancy payload (Batch spans).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &mut self,
+        kind: EventKind,
+        t: Us,
+        model: u32,
+        a: u64,
+        b: u64,
+        pct: u32,
+        useful: u32,
+    ) {
+        if !self.cfg.trace {
+            return;
+        }
+        let kseq = self.kind_seq[kind as usize];
+        self.kind_seq[kind as usize] += 1;
+        let every = self.sample_every(kind.category());
+        if !keep(self.cfg.sampling_seed, kind as u8, kseq, every) {
+            self.sampled_out += 1;
+            return;
+        }
+        self.events.push(Event { t, kind, model, kseq, a, b, pct, useful });
+    }
+
+    /// Window index for an event at `t` (clamped into the last window
+    /// for `t ≥ horizon`); `None` when the series is off or empty.
+    fn widx(&self, t: Us) -> Option<usize> {
+        if !self.cfg.timeseries || self.n_windows == 0 {
+            return None;
+        }
+        Some(((t / self.cfg.window_us) as usize).min(self.n_windows as usize - 1))
+    }
+
+    fn window_mut(&mut self, t: Us) -> Option<&mut Window> {
+        let i = self.widx(t)?;
+        if self.windows.len() <= i {
+            self.windows.resize_with(i + 1, Window::default);
+        }
+        Some(&mut self.windows[i])
+    }
+
+    /// An arrival entered this lane's queues at `t`.
+    pub fn count_arrival(&mut self, t: Us) {
+        if let Some(w) = self.window_mut(t) {
+            w.arrivals += 1;
+        }
+        self.depth_delta(t, 1);
+    }
+
+    /// A request of lane-local `model` completed at `t`.
+    pub fn count_completion(&mut self, t: Us, model: usize, lat_ms: f64, in_slo: bool) {
+        if let Some(w) = self.window_mut(t) {
+            w.served += 1;
+            if !in_slo {
+                w.slo_miss += 1;
+            }
+            if w.served_by_model.len() <= model {
+                w.served_by_model.resize(model + 1, 0);
+            }
+            w.served_by_model[model] += 1;
+            w.lat.push(lat_ms);
+        }
+    }
+
+    /// A request was dropped at `t` (expired, or queued at horizon).
+    pub fn count_drop(&mut self, t: Us) {
+        if let Some(w) = self.window_mut(t) {
+            w.dropped += 1;
+        }
+        self.depth_delta(t, -1);
+    }
+
+    /// Attribute a batch occupancy span `[t0, t0 + dur)` with useful
+    /// GPU% `useful` across the windows it overlaps, and drop `batch`
+    /// items from the backlog level.
+    pub fn count_span(&mut self, t0: Us, dur: Us, useful: u32, batch: u32) {
+        self.depth_delta(t0, -(batch as i64));
+        if !self.cfg.timeseries || self.n_windows == 0 {
+            return;
+        }
+        let wus = self.cfg.window_us;
+        let mut t = t0;
+        let end = t0 + dur;
+        while t < end {
+            let i = self.widx(t).expect("timeseries on");
+            // Window i covers [i·W, (i+1)·W), except the last, which
+            // absorbs everything to `end` (horizon clamp).
+            let wend = if i as u64 + 1 >= self.n_windows { end } else { (i as u64 + 1) * wus };
+            let overlap = wend.min(end) - t;
+            let w = self.window_mut(t).expect("timeseries on");
+            w.busy_us += overlap;
+            w.knee_pct_us += useful as u64 * overlap;
+            t = wend.max(t + 1);
+        }
+    }
+
+    fn depth_delta(&mut self, t: Us, delta: i64) {
+        if !self.cfg.timeseries || self.n_windows == 0 {
+            return;
+        }
+        // Sample every boundary ≤ t before applying the mutation.
+        let bound = (t / self.cfg.window_us).min(self.n_windows - 1);
+        while self.depth.next <= bound {
+            let i = self.depth.next as usize;
+            if self.windows.len() <= i {
+                self.windows.resize_with(i + 1, Window::default);
+            }
+            self.windows[i].queue_depth = self.depth.level.max(0) as u64;
+            self.depth.next += 1;
+        }
+        self.depth.level += delta;
+    }
+
+    /// Control-lane counter events that also mark the window
+    /// (replan/evict/cold-load/scale-to-zero tallies).
+    pub fn count_control(&mut self, kind: EventKind, t: Us) {
+        if let Some(w) = self.window_mut(t) {
+            match kind {
+                EventKind::Replan => w.replans += 1,
+                EventKind::Evict => w.evictions += 1,
+                EventKind::ColdLoad => w.cold_loads += 1,
+                EventKind::ScaleZero => w.scale_zeros += 1,
+                _ => {}
+            }
+        }
+    }
+
+    /// Set GPU `g`'s warm-set size to `level` at `t` (control lane;
+    /// boundary-sampled like queue depth).
+    pub fn warm_level(&mut self, g: usize, t: Us, level: u64) {
+        if !self.cfg.timeseries || self.n_windows == 0 {
+            return;
+        }
+        if self.warm.len() <= g {
+            self.warm.resize_with(g + 1, LevelTrack::default);
+        }
+        let bound = (t / self.cfg.window_us).min(self.n_windows - 1);
+        while self.warm[g].next <= bound {
+            let i = self.warm[g].next as usize;
+            if self.windows.len() <= i {
+                self.windows.resize_with(i + 1, Window::default);
+            }
+            let w = &mut self.windows[i];
+            if w.warm_by_gpu.len() <= g {
+                w.warm_by_gpu.resize(g + 1, 0);
+            }
+            w.warm_by_gpu[g] = self.warm[g].level.max(0) as u64;
+            self.warm[g].next += 1;
+        }
+        self.warm[g].level = level as i64;
+    }
+
+    /// Events recorded so far (post-sampling).
+    pub fn events_recorded(&self) -> u64 {
+        self.events.len() as u64
+    }
+
+    /// Flush level tracks through the horizon, pad the window vector to
+    /// its full length, and hand the lane's data over. `names` is the
+    /// lane's model-index → name table for export.
+    pub fn finish(&mut self, names: Vec<String>) -> EngineObs {
+        if self.cfg.timeseries && self.n_windows > 0 {
+            // Terminal flush: sample every remaining boundary at the
+            // final level, then pad.
+            let last = self.horizon;
+            self.depth_delta(last, 0);
+            for g in 0..self.warm.len() {
+                let lvl = self.warm[g].level.max(0) as u64;
+                self.warm_level(g, last, lvl);
+            }
+            if self.windows.len() < self.n_windows as usize {
+                self.windows.resize_with(self.n_windows as usize, Window::default);
+            }
+        }
+        let candidates: u64 = self.kind_seq.iter().sum();
+        EngineObs {
+            events: std::mem::take(&mut self.events),
+            windows: std::mem::take(&mut self.windows),
+            names,
+            candidates,
+            sampled_out: self.sampled_out,
+        }
+    }
+}
+
+/// Deterministic keep-1-in-N decision (splitmix64 finalizer over
+/// `(seed, kind, per-kind seq)` — the per-kind sequence is
+/// mode-invariant, see the module docs).
+fn keep(seed: u64, kind: u8, seq: u64, every: u32) -> bool {
+    if every <= 1 {
+        return true;
+    }
+    let mut x = seed
+        ^ (kind as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ seq.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x % every as u64 == 0
+}
+
+/// One lane's finished observability data (an engine's, or the
+/// driver's control lane).
+#[derive(Debug, Clone, Default)]
+pub struct EngineObs {
+    pub events: Vec<Event>,
+    pub windows: Vec<Window>,
+    /// Lane-local model index → model name.
+    pub names: Vec<String>,
+    /// Event candidates seen (pre-sampling).
+    pub candidates: u64,
+    /// Candidates dropped by sampling.
+    pub sampled_out: u64,
+}
+
+/// The run's merged observability report. Rides on
+/// [`crate::cluster::ClusterReport::obs`] but — like `ExecStats` — is
+/// **never** serialized by `ClusterReport::to_json`, so enabling
+/// recording cannot move report or golden bytes.
+#[derive(Debug, Clone)]
+pub struct ObsReport {
+    pub cfg: ObsCfg,
+    pub horizon_us: Us,
+    /// One lane per GPU (index = GPU index; idle GPUs contribute an
+    /// empty lane).
+    pub lanes: Vec<EngineObs>,
+    /// The driver's control lane (lane id = `lanes.len()` on export).
+    pub control: EngineObs,
+}
+
+impl ObsReport {
+    /// Merge per-lane buffers into one report. Drivers call this after
+    /// finalizing engines; returns `None` when recording was off.
+    pub fn collect(
+        cfg: ObsCfg,
+        horizon_us: Us,
+        lanes: Vec<EngineObs>,
+        control: EngineObs,
+    ) -> Option<ObsReport> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(ObsReport { cfg, horizon_us, lanes, control })
+    }
+
+    pub fn events_recorded(&self) -> u64 {
+        self.lanes.iter().map(|l| l.events.len() as u64).sum::<u64>()
+            + self.control.events.len() as u64
+    }
+
+    pub fn candidates(&self) -> u64 {
+        self.lanes.iter().map(|l| l.candidates).sum::<u64>() + self.control.candidates
+    }
+
+    pub fn sampled_out(&self) -> u64 {
+        self.lanes.iter().map(|l| l.sampled_out).sum::<u64>() + self.control.sampled_out
+    }
+
+    /// Number of time-series windows (0 when the series is off).
+    pub fn n_windows(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.windows.len())
+            .chain(std::iter::once(self.control.windows.len()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// All events across lanes, sorted by the mode-invariant key
+    /// `(t, lane, kind, kind_seq)`. The control lane sorts after the
+    /// engine lanes (`lane = lanes.len()`).
+    pub fn merged_events(&self) -> Vec<(usize, &Event)> {
+        let mut all: Vec<(usize, &Event)> = Vec::with_capacity(self.events_recorded() as usize);
+        for (lane, l) in self.lanes.iter().enumerate() {
+            all.extend(l.events.iter().map(|e| (lane, e)));
+        }
+        let cl = self.lanes.len();
+        all.extend(self.control.events.iter().map(|e| (cl, e)));
+        all.sort_unstable_by_key(|(lane, e)| (e.t, *lane, e.kind as u8, e.kseq));
+        all
+    }
+
+    fn lane_name(&self, lane: usize, model: u32) -> &str {
+        if model == NO_MODEL {
+            return "";
+        }
+        let names =
+            if lane < self.lanes.len() { &self.lanes[lane].names } else { &self.control.names };
+        names.get(model as usize).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Chrome/Perfetto trace-event JSON (the `--emit-trace` payload).
+    /// Deterministic byte-for-byte: integers only, fixed field order,
+    /// events in merged-key order. Load via `chrome://tracing` or
+    /// <https://ui.perfetto.dev>.
+    pub fn to_perfetto(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(64 + self.events_recorded() as usize * 96);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        for (lane, e) in self.merged_events() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let name = self.lane_name(lane, e.model);
+            let cat = e.kind.category().name();
+            match e.kind {
+                EventKind::Batch => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                         \"pid\":0,\"tid\":{},\"args\":{{\"model\":\"{}\",\"batch\":{},\"pct\":{},\"useful_pct\":{}}}}}",
+                        e.kind.name(),
+                        cat,
+                        e.t,
+                        e.b.max(1),
+                        lane,
+                        name,
+                        e.a,
+                        e.pct,
+                        e.useful
+                    );
+                }
+                _ => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"ts\":{},\"pid\":0,\
+                         \"tid\":{},\"s\":\"t\",\"args\":{{\"model\":\"{}\",\"a\":{},\"b\":{},\"kseq\":{}}}}}",
+                        e.kind.name(),
+                        cat,
+                        e.t,
+                        lane,
+                        name,
+                        e.a,
+                        e.b,
+                        e.kseq
+                    );
+                }
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Cluster-wide per-window p99 latency (ms); 0 for empty windows.
+    pub fn per_window_p99(&self) -> Vec<f64> {
+        let n = self.n_windows();
+        (0..n)
+            .map(|i| {
+                let mut h = LogHistogram::default();
+                for l in &self.lanes {
+                    if let Some(w) = l.windows.get(i) {
+                        h.merge(&w.lat);
+                    }
+                }
+                if h.count() == 0 { 0.0 } else { h.quantile(0.99) }
+            })
+            .collect()
+    }
+
+    /// The optional `timeseries` section (`--emit-timeseries`,
+    /// `figures::fig17`): merged cluster-wide windows, per-GPU
+    /// occupancy, per-model served counts by name, and the control
+    /// lane's event tallies. Deterministic (BTreeMap-backed objects).
+    pub fn timeseries_json(&self) -> Json {
+        let n = self.n_windows();
+        let wus = self.cfg.window_us;
+        let p99 = self.per_window_p99();
+        let mut windows = Vec::with_capacity(n);
+        // name → per-window served counts, merged across lanes.
+        let mut per_model: std::collections::BTreeMap<String, Vec<u64>> =
+            std::collections::BTreeMap::new();
+        for i in 0..n {
+            let mut arrivals = 0u64;
+            let mut served = 0u64;
+            let mut slo_miss = 0u64;
+            let mut dropped = 0u64;
+            let mut depth = 0u64;
+            for l in &self.lanes {
+                if let Some(w) = l.windows.get(i) {
+                    arrivals += w.arrivals;
+                    served += w.served;
+                    slo_miss += w.slo_miss;
+                    dropped += w.dropped;
+                    depth += w.queue_depth;
+                    for (m, &s) in w.served_by_model.iter().enumerate() {
+                        if s > 0 {
+                            if let Some(name) = l.names.get(m) {
+                                let series =
+                                    per_model.entry(name.clone()).or_insert_with(|| vec![0; n]);
+                                series[i] += s;
+                            }
+                        }
+                    }
+                }
+            }
+            let cw = self.control.windows.get(i);
+            windows.push(Json::obj(vec![
+                ("t0_us", Json::from(i as u64 * wus)),
+                ("arrivals", Json::from(arrivals)),
+                ("served", Json::from(served)),
+                ("slo_miss", Json::from(slo_miss)),
+                ("dropped", Json::from(dropped)),
+                ("queue_depth", Json::from(depth)),
+                ("p99_ms", Json::from(p99[i])),
+                ("replans", Json::from(cw.map_or(0, |w| w.replans))),
+                ("evictions", Json::from(cw.map_or(0, |w| w.evictions))),
+                ("cold_loads", Json::from(cw.map_or(0, |w| w.cold_loads))),
+                ("scale_zeros", Json::from(cw.map_or(0, |w| w.scale_zeros))),
+            ]));
+        }
+        let per_gpu: Vec<Json> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(g, l)| {
+                let util: Vec<f64> = (0..n)
+                    .map(|i| {
+                        l.windows.get(i).map_or(0.0, |w| w.busy_us as f64 / wus as f64)
+                    })
+                    .collect();
+                let knee: Vec<f64> = (0..n)
+                    .map(|i| {
+                        l.windows
+                            .get(i)
+                            .map_or(0.0, |w| w.knee_pct_us as f64 / (100.0 * wus as f64))
+                    })
+                    .collect();
+                let depth: Vec<Json> = (0..n)
+                    .map(|i| Json::from(l.windows.get(i).map_or(0, |w| w.queue_depth)))
+                    .collect();
+                Json::obj(vec![
+                    ("gpu", Json::from(g)),
+                    ("utilization", Json::arr_f64(&util)),
+                    ("knee_load", Json::arr_f64(&knee)),
+                    ("queue_depth", Json::Arr(depth)),
+                ])
+            })
+            .collect();
+        let warm: Vec<Json> = (0..n)
+            .map(|i| {
+                let row = self
+                    .control
+                    .windows
+                    .get(i)
+                    .map(|w| w.warm_by_gpu.clone())
+                    .unwrap_or_default();
+                Json::Arr(row.into_iter().map(Json::from).collect())
+            })
+            .collect();
+        let pm: Vec<(String, Json)> = per_model
+            .into_iter()
+            .map(|(name, series)| {
+                (name, Json::Arr(series.into_iter().map(Json::from).collect()))
+            })
+            .collect();
+        Json::obj(vec![
+            ("window_us", Json::from(wus)),
+            ("n_windows", Json::from(n as u64)),
+            ("windows", Json::Arr(windows)),
+            ("per_gpu", Json::Arr(per_gpu)),
+            ("per_model_served", Json::obj_owned(pm)),
+            ("warm_by_gpu", Json::Arr(warm)),
+        ])
+    }
+
+    /// One-line digest for `--verbose` (never serialized), mirroring
+    /// `ExecStats::render`.
+    pub fn render(&self) -> String {
+        let buckets: usize = self
+            .lanes
+            .iter()
+            .flat_map(|l| l.windows.iter())
+            .map(|w| w.lat.n_buckets())
+            .sum();
+        format!(
+            "obs: {} events recorded ({} candidates, {} sampled out), {} windows × {} µs, {} hist buckets",
+            self.events_recorded(),
+            self.candidates(),
+            self.sampled_out(),
+            self.n_windows(),
+            self.cfg.window_us,
+            buckets
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_all() -> ObsCfg {
+        ObsCfg { trace: true, timeseries: true, window_us: 1_000, ..Default::default() }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_thins() {
+        let hits = |seed: u64, every: u32| -> Vec<u64> {
+            (0..10_000).filter(|&s| keep(seed, 5, s, every)).collect()
+        };
+        assert_eq!(hits(7, 16), hits(7, 16), "same seed ⇒ same kept set");
+        assert_ne!(hits(7, 16), hits(8, 16), "different seed ⇒ different kept set");
+        let n = hits(7, 16).len() as f64;
+        assert!((n - 625.0).abs() < 200.0, "keep-1-in-16 of 10k ≈ 625, got {n}");
+        assert_eq!(hits(7, 1).len(), 10_000, "rate 1 keeps everything");
+    }
+
+    #[test]
+    fn recorder_off_records_nothing() {
+        let mut r = Recorder::off();
+        assert!(!r.on());
+        r.event(EventKind::Enqueue, 5, 0, 1, 0);
+        r.count_arrival(5);
+        r.count_completion(9, 0, 1.0, true);
+        let o = r.finish(vec!["m".into()]);
+        assert!(o.events.is_empty());
+        assert!(o.windows.is_empty());
+        assert_eq!(o.candidates, 0);
+    }
+
+    #[test]
+    fn window_boundaries_and_horizon_clamp() {
+        let mut r = Recorder::new(cfg_all(), 3_000);
+        // Exactly on a boundary → lands in the window it opens.
+        r.count_completion(1_000, 0, 2.0, true);
+        // Mid-window.
+        r.count_completion(1_500, 0, 2.0, false);
+        // Horizon-exact completion clamps into the last window.
+        r.count_completion(3_000, 0, 2.0, true);
+        // Past-horizon drain too.
+        r.count_completion(3_456, 0, 2.0, true);
+        let o = r.finish(vec!["m".into()]);
+        assert_eq!(o.windows.len(), 3);
+        assert_eq!(o.windows[0].served, 0, "empty window survives");
+        assert_eq!(o.windows[1].served, 2);
+        assert_eq!(o.windows[1].slo_miss, 1);
+        assert_eq!(o.windows[2].served, 2, "t = horizon and beyond clamp to last");
+    }
+
+    #[test]
+    fn empty_windows_mid_run_are_materialized() {
+        let mut r = Recorder::new(cfg_all(), 5_000);
+        r.count_arrival(100);
+        r.count_arrival(4_900);
+        let o = r.finish(vec![]);
+        assert_eq!(o.windows.len(), 5);
+        assert_eq!(o.windows[0].arrivals, 1);
+        assert!(o.windows[1..4].iter().all(|w| w.arrivals == 0));
+        assert_eq!(o.windows[4].arrivals, 1);
+    }
+
+    #[test]
+    fn queue_depth_samples_window_starts() {
+        let mut r = Recorder::new(cfg_all(), 4_000);
+        r.count_arrival(100); // depth 0 → 1 (window 0 start sampled at 0)
+        r.count_arrival(500); // 1 → 2
+        // Mutation exactly on the w1 boundary: sample (depth 2) first.
+        r.count_arrival(1_000); // 2 → 3
+        r.count_span(2_500, 10, 50, 3); // 3 → 0; samples w2 start at 3
+        let o = r.finish(vec![]);
+        let depths: Vec<u64> = o.windows.iter().map(|w| w.queue_depth).collect();
+        assert_eq!(depths, vec![0, 2, 3, 0]);
+    }
+
+    #[test]
+    fn span_attribution_splits_across_windows() {
+        let mut r = Recorder::new(cfg_all(), 3_000);
+        // 1.5 windows of busy at 40% useful: [500, 2000).
+        r.count_span(500, 1_500, 40, 1);
+        let o = r.finish(vec![]);
+        assert_eq!(o.windows[0].busy_us, 500);
+        assert_eq!(o.windows[1].busy_us, 1_000);
+        assert_eq!(o.windows[2].busy_us, 0);
+        assert_eq!(o.windows[0].knee_pct_us, 40 * 500);
+        assert_eq!(o.windows[1].knee_pct_us, 40 * 1_000);
+    }
+
+    #[test]
+    fn merge_key_is_record_order_independent() {
+        let cfg = ObsCfg { trace: true, ..Default::default() };
+        // Lane A records (complete@150 then enqueue@200); lane A' — the
+        // same lane under another exec mode — records them in the
+        // opposite buffer order. Merged output must be identical.
+        let mut a = Recorder::new(cfg, 1_000);
+        a.event(EventKind::Complete, 150, 0, 1, 0);
+        a.event(EventKind::Enqueue, 200, 0, 2, 0);
+        let mut b = Recorder::new(cfg, 1_000);
+        b.event(EventKind::Enqueue, 200, 0, 2, 0);
+        b.event(EventKind::Complete, 150, 0, 1, 0);
+        let la = vec![a.finish(vec!["m".into()])];
+        let ra = ObsReport::collect(cfg, 1_000, la, EngineObs::default()).unwrap();
+        let lb = vec![b.finish(vec!["m".into()])];
+        let rb = ObsReport::collect(cfg, 1_000, lb, EngineObs::default()).unwrap();
+        assert_eq!(ra.to_perfetto(), rb.to_perfetto());
+        let kinds: Vec<EventKind> = ra.merged_events().iter().map(|(_, e)| e.kind).collect();
+        assert_eq!(kinds, vec![EventKind::Complete, EventKind::Enqueue]);
+    }
+
+    #[test]
+    fn perfetto_output_is_valid_json() {
+        let mut r = Recorder::new(cfg_all(), 2_000);
+        r.event(EventKind::Arrive, 10, 0, 7, 0);
+        r.span(EventKind::Batch, 20, 0, 4, 300, 50, 40);
+        r.event(EventKind::Replan, 1_500, NO_MODEL, 1, 0);
+        let o = ObsReport::collect(
+            cfg_all(),
+            2_000,
+            vec![r.finish(vec!["vgg19".into()])],
+            EngineObs::default(),
+        )
+        .unwrap();
+        let s = o.to_perfetto();
+        let j = Json::parse(&s).expect("perfetto export parses as JSON");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].req_str("name").unwrap(), "arrive");
+        assert_eq!(evs[1].req_str("ph").unwrap(), "X");
+        assert_eq!(evs[1].req_u64("dur").unwrap(), 300);
+        assert_eq!(evs[2].req_str("cat").unwrap(), "control");
+    }
+
+    #[test]
+    fn timeseries_json_merges_lanes_by_name() {
+        let cfg = cfg_all();
+        let mut a = Recorder::new(cfg, 2_000);
+        a.count_completion(100, 0, 5.0, true);
+        let mut b = Recorder::new(cfg, 2_000);
+        b.count_completion(150, 1, 5.0, true);
+        let o = ObsReport::collect(
+            cfg,
+            2_000,
+            vec![a.finish(vec!["vgg19".into()]), b.finish(vec!["resnet50".into(), "vgg19".into()])],
+            EngineObs::default(),
+        )
+        .unwrap();
+        let ts = o.timeseries_json();
+        let pm = ts.get("per_model_served").unwrap();
+        let vgg = pm.get("vgg19").unwrap().as_arr().unwrap();
+        assert_eq!(vgg[0].as_u64(), Some(2), "same model on two lanes merges");
+        assert_eq!(ts.get("n_windows").unwrap().as_u64(), Some(2));
+        assert!(o.render().contains("events recorded"));
+    }
+
+    #[test]
+    fn obscfg_validation() {
+        assert!(ObsCfg::default().validate().is_ok());
+        assert!(ObsCfg { window_us: 0, ..Default::default() }.validate().is_err());
+        assert!(ObsCfg { sample_request: 0, ..Default::default() }.validate().is_err());
+        assert!(!ObsCfg::default().enabled());
+        assert!(ObsCfg { trace: true, ..Default::default() }.enabled());
+    }
+}

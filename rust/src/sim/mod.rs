@@ -9,6 +9,7 @@
 
 use crate::gpu::{ms_to_us, GpuSim, Us};
 use crate::metrics::{ModelMetrics, RunReport};
+use crate::obs::{EngineObs, EventKind, ObsCfg, Recorder};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::workload::Request;
 use std::collections::{BTreeSet, BinaryHeap, VecDeque};
@@ -112,6 +113,11 @@ pub struct SimConfig {
     pub drop_expired: bool,
     /// Allow aggregate GPU% > 100 (uncontrolled default MPS baseline).
     pub allow_oversub: bool,
+    /// Observability: event tracing, windowed time-series, and the
+    /// exact-vs-histogram latency switch (see [`crate::obs`]). The
+    /// default records nothing and keeps the exact vectors — byte-
+    /// identical behavior to a pre-observability build.
+    pub obs: ObsCfg,
 }
 
 impl Default for SimConfig {
@@ -122,6 +128,7 @@ impl Default for SimConfig {
             gantt: false,
             drop_expired: false,
             allow_oversub: false,
+            obs: ObsCfg::default(),
         }
     }
 }
@@ -170,6 +177,11 @@ pub struct Sim {
     seq: u64,
     now: Us,
     last_completion: Us,
+    /// This engine's observability lane (see [`crate::obs`]): records
+    /// enqueue/complete/drop events and occupancy spans at the engine's
+    /// own state-mutation points — whose sequence is a pure function of
+    /// the scenario, so traces are exec-mode- and thread-invariant.
+    obs: Recorder,
 }
 
 impl Sim {
@@ -181,6 +193,7 @@ impl Sim {
             .iter()
             .map(|m| ModelMetrics { name: m.profile.name.clone(), ..Default::default() })
             .collect();
+        let obs = Recorder::new(cfg.obs, ms_to_us(cfg.horizon_ms));
         Sim {
             cfg,
             models,
@@ -193,6 +206,39 @@ impl Sim {
             seq: 0,
             now: 0,
             last_completion: 0,
+            obs,
+        }
+    }
+
+    /// Hand over this engine's finished observability lane (events,
+    /// windows, model-name table). Drivers call this once, after
+    /// [`Self::finalize`].
+    pub fn take_obs(&mut self) -> EngineObs {
+        let names = self.metrics.iter().map(|m| m.name.clone()).collect();
+        self.obs.finish(names)
+    }
+
+    /// Record one completed request into metrics + observability — the
+    /// single code path `step_to` and `finalize` share, so both stamp
+    /// identical events at the completion's own virtual time.
+    fn note_completion(&mut self, t: Us, model: usize, r: &Request) {
+        let exact = self.cfg.obs.exact_latencies;
+        let lat_ms = (t - r.arrival) as f64 / 1_000.0;
+        let in_slo = t <= r.deadline;
+        let m = &mut self.metrics[model];
+        m.served += 1;
+        if in_slo {
+            m.served_in_slo += 1;
+        }
+        if exact {
+            m.latencies_ms.push(lat_ms);
+            m.completions_us.push(t);
+        } else {
+            m.latency_hist.push(lat_ms);
+        }
+        if self.obs.on() {
+            self.obs.event(EventKind::Complete, t, model as u32, r.id, t - r.arrival);
+            self.obs.count_completion(t, model, lat_ms, in_slo);
         }
     }
 
@@ -268,6 +314,10 @@ impl Sim {
     /// arrivals both enter through here.
     pub fn inject(&mut self, r: Request) {
         debug_assert!(r.model < self.queues.len(), "inject: unknown local model {}", r.model);
+        if self.obs.on() {
+            self.obs.event(EventKind::Enqueue, r.arrival, r.model as u32, r.id, 0);
+            self.obs.count_arrival(r.arrival);
+        }
         self.queues[r.model].push_back(r);
     }
 
@@ -296,14 +346,8 @@ impl Sim {
             let c = self.completions.pop().unwrap();
             self.gpu.complete(t, c.inst);
             self.last_completion = self.last_completion.max(c.t);
-            let m = &mut self.metrics[c.model];
             for r in &c.reqs {
-                m.served += 1;
-                if t <= r.deadline {
-                    m.served_in_slo += 1;
-                }
-                m.latencies_ms.push((t - r.arrival) as f64 / 1_000.0);
-                m.completions_us.push(t);
+                self.note_completion(t, c.model, r);
             }
             policy.on_complete(c.model, t);
         }
@@ -322,19 +366,19 @@ impl Sim {
         self.now = horizon;
         while let Some(c) = self.completions.pop() {
             self.last_completion = self.last_completion.max(c.t);
-            let m = &mut self.metrics[c.model];
             for r in &c.reqs {
-                m.served += 1;
-                if c.t <= r.deadline {
-                    m.served_in_slo += 1;
-                }
-                m.latencies_ms.push((c.t - r.arrival) as f64 / 1_000.0);
-                m.completions_us.push(c.t);
+                self.note_completion(c.t, c.model, r);
             }
         }
         // Anything still queued at the horizon was never served.
         for q in 0..self.queues.len() {
             self.metrics[q].dropped += self.queues[q].len() as u64;
+            if self.obs.on() {
+                while let Some(r) = self.queues[q].pop_front() {
+                    self.obs.event(EventKind::Drop, horizon, q as u32, r.id, 0);
+                    self.obs.count_drop(horizon);
+                }
+            }
             self.queues[q].clear();
         }
         let util = self.gpu.utilization(horizon);
@@ -377,10 +421,15 @@ impl Sim {
         if !self.cfg.drop_expired {
             return;
         }
+        let now = self.now;
         for (i, q) in self.queues.iter_mut().enumerate() {
-            while q.front().is_some_and(|r| r.deadline < self.now) {
-                q.pop_front();
+            while q.front().is_some_and(|r| r.deadline < now) {
+                let r = q.pop_front().unwrap();
                 self.metrics[i].dropped += 1;
+                if self.obs.on() {
+                    self.obs.event(EventKind::Drop, now, i as u32, r.id, 0);
+                    self.obs.count_drop(now);
+                }
             }
         }
     }
@@ -439,6 +488,11 @@ impl Sim {
         // extra SMs idle (the paper computes utilization via Knee%).
         let useful = l.pct.min(entry.profile.knee_pct_on(&self.gpu.spec, l.batch));
         let inst = self.gpu.launch_useful(self.now, l.model, l.batch, l.pct, useful, dur);
+        if self.obs.on() {
+            let (model, batch) = (l.model as u32, l.batch as u64);
+            self.obs.span(EventKind::Batch, self.now, model, batch, dur, l.pct, useful);
+            self.obs.count_span(self.now, dur, useful, l.batch);
+        }
         let m = &mut self.metrics[l.model];
         m.batches += 1;
         m.batch_items += l.batch as u64;

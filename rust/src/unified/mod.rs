@@ -60,12 +60,14 @@ use crate::cluster::{
 use crate::controlplane::{
     placement_delta, AdaptiveCfg, AdaptiveStats, DriftDetector, RateEstimator,
 };
+use crate::cluster::p99_of;
 use crate::gpu::{ms_to_us, us_to_ms, Us};
 use crate::lifecycle::{reachability_candidates, LifecycleCfg, LifecycleStats, ModelStore};
 use crate::metrics::RunReport;
+use crate::obs::{EngineObs, EventKind, ObsCfg, ObsReport, Recorder, NO_MODEL};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, LogHistogram};
 use crate::workload::{ArrivalStream, Arrivals, MaterializedStream, Request};
 use std::collections::{BTreeMap, VecDeque};
 
@@ -163,6 +165,10 @@ struct UnifiedDriver<'a> {
     evictions_at_tick: u64,
     /// Reusable cascade queue (always drained empty between uses).
     scratch: VecDeque<(usize, Request)>,
+    /// Copied into engines created mid-run by replan surgery.
+    obs_cfg: ObsCfg,
+    /// Control-lane event recorder (routing + both planes' decisions).
+    obs: Recorder,
 }
 
 impl UnifiedDriver<'_> {
@@ -181,6 +187,9 @@ impl UnifiedDriver<'_> {
         let reps: &[Replica] = &self.replicas[model];
         if reps.is_empty() {
             self.rejected[model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+            }
             return;
         }
         let cache = &mut self.cache;
@@ -207,6 +216,9 @@ impl UnifiedDriver<'_> {
             let (g, local) = (r.gpu, r.local);
             if self.stores[g].is_warm(model) {
                 self.stores[g].touch(t, model);
+                if self.obs.on() {
+                    self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, g as u64);
+                }
                 let mut q = req;
                 q.model = local;
                 engines[g].as_mut().expect("warm replica on idle GPU").sim.inject(q);
@@ -239,6 +251,16 @@ impl UnifiedDriver<'_> {
                 let engine = engines[g].as_mut().expect("cold replica on idle GPU");
                 for v in victims {
                     let vl = self.local_of[g][v].expect("evicting unassigned model");
+                    if self.obs.on() {
+                        self.obs.event(
+                            EventKind::Evict,
+                            t,
+                            v as u32,
+                            g as u64,
+                            self.profiles[v].mem_mib,
+                        );
+                        self.obs.count_control(EventKind::Evict, t);
+                    }
                     for dr in engine.sim.deactivate_model(vl) {
                         work.push_back((v, dr));
                     }
@@ -248,6 +270,11 @@ impl UnifiedDriver<'_> {
                 touched.mark(g);
             }
             let ready = t + ms_to_us(load_ms).max(1);
+            if self.obs.on() {
+                self.obs.event(EventKind::ColdLoad, t, model as u32, g as u64, ready - t);
+                self.obs.count_control(EventKind::ColdLoad, t);
+                self.obs.warm_level(g, t, self.stores[g].n_warm() as u64);
+            }
             self.loading.insert((g, model), ready);
             self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
             self.held.entry((g, model)).or_default().push(req);
@@ -256,6 +283,9 @@ impl UnifiedDriver<'_> {
             return;
         }
         self.rejected[model] += 1;
+        if self.obs.on() {
+            self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+        }
     }
 
     /// True when no arrival can trigger a cold start right now (see the
@@ -284,6 +314,17 @@ impl UnifiedDriver<'_> {
                     debug_assert!(drained.is_empty(), "empty backlog drained requests");
                     engine.rebuild_policy(self.sched);
                     self.lstats.scale_to_zero += 1;
+                    if self.obs.on() {
+                        self.obs.event(
+                            EventKind::ScaleZero,
+                            t,
+                            m as u32,
+                            g as u64,
+                            self.profiles[m].mem_mib,
+                        );
+                        self.obs.count_control(EventKind::ScaleZero, t);
+                        self.obs.warm_level(g, t, self.stores[g].n_warm() as u64);
+                    }
                     touched.mark(g);
                 } else {
                     self.stores[g].touch(t, m);
@@ -307,6 +348,9 @@ impl UnifiedDriver<'_> {
             return;
         }
         self.astats.replans += 1;
+        if self.obs.on() {
+            self.obs.count_control(EventKind::Replan, t);
+        }
         self.planned_rates = self.estimator.rates().to_vec();
         let stores = &self.stores;
         let target = plan_residency_biased(
@@ -331,6 +375,15 @@ impl UnifiedDriver<'_> {
         delta
             .remove
             .retain(|&(m, g, _)| !self.pinned[m] && !self.loading.contains_key(&(g, m)));
+        if self.obs.on() {
+            self.obs.event(
+                EventKind::Replan,
+                t,
+                NO_MODEL,
+                delta.add.len() as u64,
+                delta.remove.len() as u64,
+            );
+        }
         if !delta.is_empty() {
             // Tear down removed replicas: release residency, drain and
             // re-dispatch their queues, free the assigned knee budget.
@@ -345,6 +398,9 @@ impl UnifiedDriver<'_> {
                 if self.stores[g].is_warm(m) {
                     let released = self.stores[g].release(m);
                     debug_assert!(released, "warm unpinned resident refused release");
+                    if self.obs.on() {
+                        self.obs.warm_level(g, t, self.stores[g].n_warm() as u64);
+                    }
                 }
                 let engine = engines[g].as_mut().expect("replica without engine");
                 if engine.sim.is_active(rep.local) {
@@ -367,6 +423,7 @@ impl UnifiedDriver<'_> {
                     let sim_cfg = SimConfig {
                         gpu: self.gpus[g].clone(),
                         horizon_ms: self.horizon_ms,
+                        obs: self.obs_cfg,
                         ..Default::default()
                     };
                     engines[g] = Some(ExecEngine {
@@ -466,9 +523,15 @@ impl EpochDriver for UnifiedDriver<'_> {
     fn route_free(&mut self, t: Us, req: &Request) -> Option<(usize, usize)> {
         let model = req.model;
         self.window_counts[model] += 1;
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, model as u32, req.id, 0);
+        }
         let reps: &[Replica] = &self.replicas[model];
         if reps.is_empty() {
             self.rejected[model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+            }
             return None;
         }
         // Backlog-free by contract: the closure is never consulted.
@@ -479,6 +542,9 @@ impl EpochDriver for UnifiedDriver<'_> {
             let (g, local) = (r.gpu, r.local);
             if self.stores[g].is_warm(model) {
                 self.stores[g].touch(t, model);
+                if self.obs.on() {
+                    self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, g as u64);
+                }
                 self.lstats.warm_hits += 1;
                 return Some((g, local));
             }
@@ -491,6 +557,9 @@ impl EpochDriver for UnifiedDriver<'_> {
             debug_assert!(false, "cold start inside an elided warm span");
         }
         self.rejected[model] += 1;
+        if self.obs.on() {
+            self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+        }
         None
     }
 
@@ -516,6 +585,9 @@ impl EpochDriver for UnifiedDriver<'_> {
         for (g, m) in due {
             self.loading.remove(&(g, m));
             self.stores[g].complete_load(t, m);
+            if self.obs.on() {
+                self.obs.warm_level(g, t, self.stores[g].n_warm() as u64);
+            }
             let local = self.local_of[g][m].expect("loaded model without a slot");
             let rep = self.replicas[m]
                 .iter()
@@ -550,6 +622,9 @@ impl EpochDriver for UnifiedDriver<'_> {
         touched: &mut Touched,
     ) {
         self.window_counts[req.model] += 1;
+        if self.obs.on() {
+            self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
         let mut work = std::mem::take(&mut self.scratch);
         debug_assert!(work.is_empty());
         work.push_back((req.model, req));
@@ -694,7 +769,8 @@ pub fn run_unified_stream<S: ArrivalStream>(
                     ModelEntry { profile: profiles[m].clone(), pct: rep.pct, batch: rep.batch }
                 })
                 .collect();
-            let sim_cfg = SimConfig { gpu: gpus[g].clone(), horizon_ms, ..Default::default() };
+            let sim_cfg =
+                SimConfig { gpu: gpus[g].clone(), horizon_ms, obs: opts.obs, ..Default::default() };
             let mut sim = Sim::new(sim_cfg, entries);
             for (local, &m) in plan.placement.hosted[g].iter().enumerate() {
                 if !plan.resident0[g].contains(&m) {
@@ -759,7 +835,17 @@ pub fn run_unified_stream<S: ArrivalStream>(
         next_tick: interval,
         evictions_at_tick: 0,
         scratch: VecDeque::new(),
+        obs_cfg: opts.obs,
+        obs: Recorder::new(opts.obs, horizon),
     };
+    // Seed the warm-set timeline with the t = 0 resident sets so the
+    // first window reflects the preloaded state, not zero.
+    if driver.obs.on() {
+        for g in 0..n_gpus {
+            let level = driver.stores[g].n_warm() as u64;
+            driver.obs.warm_level(g, 0, level);
+        }
+    }
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
     let UnifiedDriver {
         replicas,
@@ -773,15 +859,32 @@ pub fn run_unified_stream<S: ArrivalStream>(
         mut lstats,
         mut astats,
         estimator,
+        obs: mut obs_rec,
         ..
     } = driver;
     astats.est_rates = estimator.rates().to_vec();
+    // Requests still parked behind an immature load never reached an
+    // engine; stamp their drops on the control lane at the horizon.
+    if obs_rec.on() {
+        for ((_, m), reqs) in &held {
+            for r in reqs {
+                obs_rec.event(EventKind::Drop, horizon, *m as u32, r.id, 0);
+                obs_rec.count_drop(horizon);
+            }
+        }
+    }
+    let control_obs = obs_rec.finish(profiles.iter().map(|p| p.name.clone()).collect());
 
     // --- finalize + aggregate ----------------------------------------------
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
         .map(|slot| slot.as_mut().map(|e| e.finalize(horizon)))
         .collect();
+    let obs_lanes: Vec<EngineObs> = engines
+        .iter_mut()
+        .map(|slot| slot.as_mut().map(|e| e.sim.take_obs()).unwrap_or_default())
+        .collect();
+    let obs = ObsReport::collect(opts.obs, horizon, obs_lanes, control_obs);
 
     let horizon_s = horizon_ms / 1_000.0;
     let split_at = astats.first_rebalance_us();
@@ -791,6 +894,7 @@ pub fn run_unified_stream<S: ArrivalStream>(
     let mut served_in_slo = 0u64;
     let mut dropped = vec![0u64; n_models];
     let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut lat_before: Vec<Vec<f64>> = vec![Vec::new(); n_models];
     let mut lat_after: Vec<Vec<f64>> = vec![Vec::new(); n_models];
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
@@ -807,6 +911,7 @@ pub fn run_unified_stream<S: ArrivalStream>(
                     served_in_slo += mm.served_in_slo;
                     dropped[global] += mm.dropped;
                     latencies[global].extend_from_slice(&mm.latencies_ms);
+                    hists[global].merge(&mm.latency_hist);
                     for (lat, &done) in mm.latencies_ms.iter().zip(&mm.completions_us) {
                         match split_at {
                             Some(cut) if done >= cut => lat_after[global].push(*lat),
@@ -848,7 +953,7 @@ pub fn run_unified_stream<S: ArrivalStream>(
     }
     astats.p99_before_ms = lat_before.iter().map(|l| percentile(l, 99.0)).collect();
     astats.p99_after_ms = lat_after.iter().map(|l| percentile(l, 99.0)).collect();
-    let p99_ms: Vec<f64> = latencies.iter().map(|l| percentile(l, 99.0)).collect();
+    let p99_ms: Vec<f64> = latencies.iter().zip(&hists).map(|(l, h)| p99_of(l, h)).collect();
     let replica_map: Vec<Vec<usize>> = replicas
         .iter()
         .map(|reps| reps.iter().map(|r| r.gpu).collect())
@@ -886,6 +991,7 @@ pub fn run_unified_stream<S: ArrivalStream>(
         adaptive: Some(astats),
         lifecycle: Some(lstats),
         exec: Some(exec_stats),
+        obs,
     }
 }
 
@@ -1132,7 +1238,7 @@ mod tests {
             run_stress(
                 &cfg,
                 RoutingPolicy::JoinShortestQueue,
-                ExecOpts { threads: Parallelism::Threads(1), mode },
+                ExecOpts { threads: Parallelism::Threads(1), mode, ..Default::default() },
             )
         };
         let sparse = run(ExecMode::Sparse).to_json().to_string_pretty();
@@ -1159,7 +1265,11 @@ mod tests {
         let rep = run_stress(
             &cfg,
             RoutingPolicy::RoundRobin,
-            ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+            ExecOpts {
+                threads: Parallelism::Threads(1),
+                mode: ExecMode::Sparse,
+                ..Default::default()
+            },
         );
         let exec = rep.exec.expect("exec stats attached");
         assert!(exec.barriers_elided > 0, "warm RR spans elided nothing: {exec:?}");

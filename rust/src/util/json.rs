@@ -231,6 +231,11 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// [`Self::obj`] for keys computed at runtime (owned strings).
+    pub fn obj_owned(pairs: Vec<(String, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().collect())
+    }
+
     pub fn arr_f64(values: &[f64]) -> Json {
         Json::Arr(values.iter().map(|v| Json::Num(*v)).collect())
     }

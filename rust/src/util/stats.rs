@@ -222,6 +222,155 @@ impl Summary {
     }
 }
 
+/// Log-bucketed histogram with ~±1% relative error and bounded memory —
+/// the streaming replacement for materializing one `f64` per served
+/// request (`ModelMetrics::latencies_ms`) at 10⁷-request scale.
+///
+/// Buckets grow geometrically by [`LogHistogram::GROWTH`] (2%/bucket);
+/// a sample is reported as the geometric midpoint of its bucket, so the
+/// relative error is at most `√GROWTH − 1 ≈ 1%`. Storage is a sparse
+/// `BTreeMap<bucket, count>` — for latencies spanning 1 µs..100 s
+/// that is at most ~930 live buckets, independent of sample count.
+/// Non-positive and non-finite samples land in a dedicated underflow
+/// bucket (reported as `min`), so totals are conserved. `min`, `max`
+/// and the mean are tracked exactly; only interior quantiles are
+/// approximate. Mergeable across engines/windows ([`Self::merge`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LogHistogram {
+    buckets: std::collections::BTreeMap<i32, u64>,
+    underflow: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Geometric bucket growth factor.
+    pub const GROWTH: f64 = 1.02;
+
+    fn bucket_of(x: f64) -> i32 {
+        (x.ln() / Self::GROWTH.ln()).floor() as i32
+    }
+
+    /// Geometric midpoint of bucket `b` — the reported value for any
+    /// sample that landed there.
+    fn bucket_mid(b: i32) -> f64 {
+        Self::GROWTH.powf(b as f64 + 0.5)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            if x < self.min {
+                self.min = x;
+            }
+            if x > self.max {
+                self.max = x;
+            }
+        }
+        self.count += 1;
+        self.sum += x;
+        if x > 0.0 && x.is_finite() {
+            *self.buckets.entry(Self::bucket_of(x)).or_insert(0) += 1;
+        } else {
+            self.underflow += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Live buckets (the memory footprint proxy).
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len() + usize::from(self.underflow > 0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Absorb another histogram (per-engine → cluster, per-window →
+    /// run). Exact for counts/sum; min/max stay exact.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.underflow += other.underflow;
+        for (&b, &c) in &other.buckets {
+            *self.buckets.entry(b).or_insert(0) += c;
+        }
+    }
+
+    /// Quantile `q ∈ [0, 1]` with ≤ ~1% relative error, clamped into
+    /// `[min, max]` so the histogram can never report outside the
+    /// observed range.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.min();
+        }
+        for (&b, &c) in &self.buckets {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_mid(b).clamp(self.min, self.max);
+            }
+        }
+        self.max()
+    }
+
+    /// [`Summary`] computed from the histogram — the bounded-memory
+    /// substitute for [`Summary::from_samples`] when exact latency
+    /// vectors are disabled (`observability.exact_latencies = false`).
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.count as usize,
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,5 +482,65 @@ mod tests {
         assert!((s.mean - 2.5).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_within_one_percent() {
+        // Uniform latencies over 1..10_000 ms: every quantile estimate
+        // must land within the advertised √1.02−1 ≈ 1% relative error
+        // of the exact order statistic.
+        let xs: Vec<f64> = (1..=10_000).map(|i| i as f64).collect();
+        let mut h = LogHistogram::default();
+        for &x in &xs {
+            h.push(x);
+        }
+        assert_eq!(h.count(), 10_000);
+        for q in [0.01, 0.1, 0.5, 0.9, 0.99, 0.999] {
+            let exact = percentile(&xs, q * 100.0);
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.011, "q={q}: exact {exact} approx {approx} rel {rel}");
+        }
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 10_000.0);
+        assert!((h.mean() - 5_000.5).abs() < 1e-9);
+        // Memory is bucket-bound, not sample-bound.
+        assert!(h.n_buckets() < 600, "{} buckets", h.n_buckets());
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_combined_push() {
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        let mut all = LogHistogram::default();
+        for i in 1..500 {
+            let x = (i * i % 977) as f64 + 0.5;
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a, all, "merge must equal pushing the union");
+        for q in [0.5, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn log_histogram_edge_cases() {
+        let h = LogHistogram::default();
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.summary().count, 0);
+        let mut h = LogHistogram::default();
+        h.push(0.0); // non-positive → underflow bucket
+        h.push(-3.0);
+        h.push(f64::INFINITY);
+        h.push(5.0);
+        assert_eq!(h.count(), 4, "totals conserved across underflow");
+        assert_eq!(h.quantile(0.1), -3.0, "low quantiles report min for underflow mass");
+        // Single-sample histogram reports the sample, clamped exactly.
+        let mut one = LogHistogram::default();
+        one.push(42.0);
+        assert_eq!(one.quantile(0.5), 42.0);
+        assert_eq!(one.summary().p99, 42.0);
     }
 }

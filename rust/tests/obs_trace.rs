@@ -1,0 +1,231 @@
+//! Determinism contract of the observability layer (`dstack::obs`,
+//! DESIGN.md §4.11): with recording enabled, the exported Perfetto
+//! trace and time-series JSON must be **byte-identical** across
+//! `exec_mode` (epoch | sparse) × thread count — the same contract the
+//! report bytes already obey (`tests/parallel_exec.rs`) — and enabling
+//! recording must not move a single byte of the `ClusterReport` JSON
+//! itself. Sampling must be a pure function of the seed (same seed ⇒
+//! same kept set, in any mode), and the windowed series must cover the
+//! horizon exactly and conserve completion counts against the report.
+
+use dstack::cluster::{
+    ClusterReport, ExecMode, ExecOpts, GpuSched, Parallelism, PlacementPolicy, RoutingPolicy,
+};
+use dstack::lifecycle::{longtail_gpus, longtail_workload, serve_longtail_with, LifecycleCfg};
+use dstack::obs::ObsCfg;
+use dstack::unified::{drifting_longtail_workload, run_unified_with, unified_gpus, UnifiedCfg};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+const MODES: [ExecMode; 2] = [ExecMode::Epoch, ExecMode::Sparse];
+
+fn opts(mode: ExecMode, threads: usize, obs: ObsCfg) -> ExecOpts {
+    ExecOpts { threads: Parallelism::Threads(threads), mode, obs }
+}
+
+/// The hardest trace scenario: the unified driver's drift + memory
+/// pressure stress (replan surgery, cold starts, evictions, held
+/// requests) — every event kind the control lane can emit.
+fn run_unified(o: ExecOpts) -> ClusterReport {
+    let (profiles, rates, reqs) = drifting_longtail_workload(12, 1.1, 450.0, 2_000.0, 17);
+    let cfg = UnifiedCfg {
+        lifecycle: LifecycleCfg { mem_budget_mib: 3_072, min_replicas: 1, ..Default::default() },
+        ..Default::default()
+    };
+    run_unified_with(
+        &profiles,
+        &rates,
+        &unified_gpus(4),
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        reqs,
+        2_000.0,
+        17,
+        o,
+    )
+}
+
+/// The lifecycle driver's long-tail scenario — the other control-lane
+/// implementation (scale-to-zero, parking) gets its own identity row.
+fn run_lifecycle(o: ExecOpts) -> ClusterReport {
+    let (profiles, rates, reqs) = longtail_workload(10, 1.1, 350.0, 1_500.0, 13);
+    let cfg = LifecycleCfg { mem_budget_mib: 2_048, idle_timeout_ms: 400.0, ..Default::default() };
+    serve_longtail_with(
+        &profiles,
+        &rates,
+        &longtail_gpus(),
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        reqs,
+        1_500.0,
+        13,
+        o,
+    )
+}
+
+fn obs_all() -> ObsCfg {
+    ObsCfg { trace: true, timeseries: true, ..Default::default() }
+}
+
+/// (trace bytes, timeseries bytes) for a finished run.
+fn artifacts(rep: &ClusterReport) -> (String, String) {
+    let obs = rep.obs.as_ref().expect("recording was enabled");
+    (obs.to_perfetto(), obs.timeseries_json().to_string_pretty())
+}
+
+#[test]
+fn traces_are_byte_identical_across_modes_and_threads() {
+    let baseline = run_unified(opts(ExecMode::Epoch, 1, obs_all()));
+    let (trace0, series0) = artifacts(&baseline);
+    // Non-vacuity: the scenario must actually exercise the full event
+    // vocabulary, or identity would hold trivially on an empty trace.
+    for kind in ["arrive", "enqueue", "batch", "complete", "replan", "cold_load"] {
+        assert!(trace0.contains(&format!("\"name\":\"{kind}\"")), "no {kind} events in trace");
+    }
+    let obs = baseline.obs.as_ref().unwrap();
+    assert!(obs.events_recorded() > 1_000, "trace too small to be probative");
+    assert_eq!(obs.sampled_out(), 0, "default config must keep every event");
+    for mode in MODES {
+        for &threads in &THREAD_COUNTS {
+            if mode == ExecMode::Epoch && threads == 1 {
+                continue; // the baseline itself
+            }
+            let rep = run_unified(opts(mode, threads, obs_all()));
+            let (trace, series) = artifacts(&rep);
+            assert_eq!(trace0, trace, "unified trace diverged at ({mode:?}, threads={threads})");
+            assert_eq!(
+                series0, series,
+                "unified timeseries diverged at ({mode:?}, threads={threads})"
+            );
+        }
+    }
+    // And the lifecycle driver's control lane (scale-to-zero, parking).
+    let lbase = run_lifecycle(opts(ExecMode::Epoch, 1, obs_all()));
+    let (ltrace0, lseries0) = artifacts(&lbase);
+    for kind in ["scale_to_zero", "cold_load"] {
+        assert!(ltrace0.contains(&format!("\"name\":\"{kind}\"")), "no {kind} events in trace");
+    }
+    for mode in MODES {
+        for &threads in &THREAD_COUNTS {
+            let rep = run_lifecycle(opts(mode, threads, obs_all()));
+            let (trace, series) = artifacts(&rep);
+            assert_eq!(ltrace0, trace, "lifecycle trace diverged at ({mode:?}, threads={threads})");
+            assert_eq!(
+                lseries0, series,
+                "lifecycle timeseries diverged at ({mode:?}, threads={threads})"
+            );
+        }
+    }
+}
+
+#[test]
+fn enabling_observability_does_not_move_report_bytes() {
+    let off = run_unified(opts(ExecMode::Sparse, 2, ObsCfg::default()));
+    assert!(off.obs.is_none(), "recording off must attach no payload");
+    let on = run_unified(opts(ExecMode::Sparse, 2, obs_all()));
+    assert!(on.obs.is_some(), "recording on must attach the payload");
+    assert_eq!(
+        off.to_json().to_string_pretty(),
+        on.to_json().to_string_pretty(),
+        "enabling tracing/timeseries changed the report JSON"
+    );
+}
+
+#[test]
+fn sampling_is_deterministic_and_mode_invariant() {
+    let sampled = ObsCfg {
+        trace: true,
+        sample_request: 8,
+        sample_gpu: 4,
+        sample_control: 2,
+        sampling_seed: 7,
+        ..Default::default()
+    };
+    let base = run_unified(opts(ExecMode::Epoch, 1, sampled));
+    let trace0 = base.obs.as_ref().unwrap().to_perfetto();
+    // Same seed, different exec mode and thread count: the kept set is
+    // a pure function of (seed, kind, per-kind sequence), so the trace
+    // bytes cannot move.
+    let again = run_unified(opts(ExecMode::Sparse, 8, sampled));
+    assert_eq!(trace0, again.obs.as_ref().unwrap().to_perfetto());
+    // The thinning is real: candidate counts match the unsampled run,
+    // kept events are strictly fewer.
+    let full = run_unified(opts(ExecMode::Epoch, 1, ObsCfg { trace: true, ..Default::default() }));
+    let (fo, so) = (full.obs.as_ref().unwrap(), base.obs.as_ref().unwrap());
+    assert_eq!(fo.candidates(), so.candidates(), "sampling must not change what is witnessed");
+    assert!(so.events_recorded() < fo.events_recorded(), "sampling kept everything");
+    assert_eq!(so.events_recorded() + so.sampled_out(), so.candidates());
+    // A different seed keeps a different set.
+    let other = run_unified(opts(ExecMode::Epoch, 1, ObsCfg { sampling_seed: 8, ..sampled }));
+    assert_ne!(trace0, other.obs.as_ref().unwrap().to_perfetto());
+}
+
+#[test]
+fn windows_cover_horizon_and_conserve_completions() {
+    // 100 ms windows over a 2 000 ms horizon: exactly 20 buckets.
+    let cfg = ObsCfg { timeseries: true, window_us: 100_000, ..Default::default() };
+    let rep = run_unified(opts(ExecMode::Epoch, 1, cfg));
+    let obs = rep.obs.as_ref().unwrap();
+    assert_eq!(obs.n_windows(), 20, "windows must tile the horizon exactly");
+    for lane in &obs.lanes {
+        assert_eq!(lane.windows.len(), 20, "every lane pads to the full horizon");
+    }
+    // Completion conservation: windowed served counts sum to the
+    // report's own served totals (horizon-exact completions clamp into
+    // the last window rather than falling off the series).
+    let windowed: u64 =
+        obs.lanes.iter().flat_map(|l| l.windows.iter()).map(|w| w.served).sum();
+    let reported: u64 = rep.served.iter().sum();
+    assert_eq!(windowed, reported, "windowed served diverged from report served");
+    // The series is non-trivial: traffic lands in many distinct
+    // windows, and the drift scenario leaves some windows busier than
+    // others (a flat series would make fig17 meaningless).
+    let series = obs.timeseries_json();
+    let rows = series.get("windows").unwrap().as_arr().unwrap().len();
+    assert_eq!(rows, 20);
+    assert_eq!(series.get("n_windows").unwrap().as_u64(), Some(20));
+    let active = (0..20)
+        .filter(|&i| obs.lanes.iter().any(|l| l.windows[i].served > 0))
+        .count();
+    assert!(active >= 10, "served traffic concentrated in only {active}/20 windows");
+}
+
+#[test]
+fn histogram_quantiles_track_exact_quantiles() {
+    // `exact_latencies: false` swaps the per-model p99 source from the
+    // exact latency vectors to the log-bucketed histogram. The
+    // histogram's ~1% relative-error guarantee must hold end-to-end on
+    // a real run for every model that served traffic.
+    let exact = run_unified(opts(ExecMode::Epoch, 1, ObsCfg::default()));
+    let hist = run_unified(opts(
+        ExecMode::Epoch,
+        1,
+        ObsCfg { exact_latencies: false, ..Default::default() },
+    ));
+    assert_eq!(exact.p99_ms.len(), hist.p99_ms.len());
+    // Gate the relative-error check on sample count: below ~50 samples
+    // the exact path's rank interpolation and the histogram's
+    // ceil-rank pick can legitimately straddle an order-statistic gap.
+    let mut checked = 0;
+    for (m, (&e, &h)) in exact.p99_ms.iter().zip(&hist.p99_ms).enumerate() {
+        if exact.served[m] == 0 {
+            assert_eq!(h, e, "unserved model {m} must report identical (empty) p99");
+            continue;
+        }
+        if exact.served[m] < 50 {
+            continue;
+        }
+        checked += 1;
+        let rel = (h - e).abs() / e.max(1e-9);
+        assert!(rel < 0.05, "model {m} p99 drifted {rel:.4} (exact {e:.3} ms, hist {h:.3} ms)");
+    }
+    assert!(checked >= 3, "only {checked} models served ≥ 50 requests — scenario too small");
+    // Everything else in the report is counter-driven and must not
+    // move when the exact vectors are dropped.
+    assert_eq!(exact.served, hist.served);
+    assert_eq!(exact.dropped, hist.dropped);
+    assert_eq!(exact.rejected, hist.rejected);
+}

@@ -248,8 +248,9 @@ fn report_strings(opts: ExecOpts, streamed: bool) -> Vec<String> {
 
 #[test]
 fn reports_are_byte_identical_across_threads_and_modes() {
-    let baseline =
-        report_strings(ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Epoch }, false);
+    let base_opts =
+        ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Epoch, ..Default::default() };
+    let baseline = report_strings(base_opts, false);
     // The scenarios must actually exercise their machinery, or the
     // property would vacuously pass on an idle cluster.
     assert!(baseline[4].contains("\"adaptive\""), "no adaptive stats attached");
@@ -272,7 +273,7 @@ fn reports_are_byte_identical_across_threads_and_modes() {
                     continue; // the baseline itself
                 }
                 let got = report_strings(
-                    ExecOpts { threads: Parallelism::Threads(threads), mode },
+                    ExecOpts { threads: Parallelism::Threads(threads), mode, ..Default::default() },
                     streamed,
                 );
                 for (i, name) in SCENARIOS.iter().enumerate() {
@@ -309,7 +310,7 @@ fn streamed_ingestion_is_actually_lazy() {
         GpuSched::Dstack,
         7,
         "lazy",
-        ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+        ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse, ..Default::default() },
     );
     let x = rep.exec.expect("exec stats attached");
     assert!(x.requests_streamed > 2_000, "workload too small to be probative: {x:?}");
@@ -334,7 +335,7 @@ fn streamed_ingestion_is_actually_lazy() {
         GpuSched::Dstack,
         7,
         "lazy",
-        ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+        ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse, ..Default::default() },
     );
     let x = rep.exec.expect("exec stats attached");
     assert!(
@@ -363,7 +364,11 @@ fn sparse_mode_actually_elides_rr_barriers() {
             GpuSched::Dstack,
             3,
             "elide",
-            ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Sparse },
+            ExecOpts {
+                threads: Parallelism::Threads(1),
+                mode: ExecMode::Sparse,
+                ..Default::default()
+            },
         )
         .exec
         .expect("exec stats attached")
