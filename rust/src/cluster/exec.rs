@@ -95,6 +95,23 @@
 //! combination — the property `rust/tests/parallel_exec.rs` locks in
 //! for all three drivers.
 //!
+//! # Fault barriers ([`crate::faults`])
+//!
+//! Fault-injection timelines ride the same machinery with no new core
+//! hooks: the resilience layer surfaces its next scheduled instant
+//! (fault event, restore maturity, or hedge-sweep tick) through
+//! [`EpochDriver::next_event`], so every fault lands on a *driver-event
+//! barrier* — a serial phase where all engines have synchronized.
+//! Drain/re-route surgery, cold restores and hedged queue moves are
+//! therefore ordinary barrier work, covered by the determinism argument
+//! above verbatim: the timeline is fixed virtual-time data, the barrier
+//! set it induces is identical for every `threads` × `exec_mode`
+//! combination, and drivers with an active fault timeline report
+//! `elides_barriers() == false` so no arrival span can skip the
+//! stepping barrier a hedge sweep or admission probe needs. Byte
+//! identity for fault scenarios is locked in by the ninth
+//! `rust/tests/parallel_exec.rs` scenario and `rust/tests/resilience.rs`.
+//!
 //! # Worker pool
 //!
 //! No dependencies are reachable in the build image, so the pool is

@@ -46,9 +46,12 @@ pub use placement::{
 };
 pub use routing::{Router, RoutingPolicy};
 
+use crate::faults::{
+    pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg, ResilienceStats,
+};
 use crate::gpu::{ms_to_us, Us};
 use crate::metrics::RunReport;
-use crate::obs::{EngineObs, EventKind, ObsReport, Recorder};
+use crate::obs::{EngineObs, EventKind, ObsReport, Recorder, NO_MODEL};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sched::{dstack::Dstack, gslice::Gslice, temporal::Temporal, triton::Triton};
 use crate::sim::{ModelEntry, Policy, Sim, SimConfig};
@@ -179,6 +182,10 @@ pub struct ClusterReport {
     /// ([`crate::lifecycle::run_lifecycle`]); serialized only when
     /// present, so static and adaptive golden shapes are unchanged.
     pub lifecycle: Option<crate::lifecycle::LifecycleStats>,
+    /// Fault-injection / front-door telemetry ([`crate::faults`]) —
+    /// `Some` only when a `"faults"` config is active; serialized only
+    /// when present, so every pre-existing golden shape is unchanged.
+    pub resilience: Option<ResilienceStats>,
     /// Execution-core telemetry (barriers run/elided, lookahead).
     /// **Never serialized** by [`Self::to_json`]: `exec_mode` and
     /// thread count must not change report bytes. Surfaced by
@@ -255,6 +262,9 @@ impl ClusterReport {
         if let Some(stats) = &self.lifecycle {
             pairs.push(("lifecycle", stats.to_json()));
         }
+        if let Some(stats) = &self.resilience {
+            pairs.push(("resilience", stats.to_json()));
+        }
         Json::obj(pairs)
     }
 }
@@ -307,19 +317,326 @@ pub fn entries_for_gpu(profiles: &[ModelProfile], gpu: &GpuSpec) -> Vec<ModelEnt
 }
 
 /// The static driver's barrier work: admission, routing, injection.
-/// Placement never changes mid-run, so there are no driver events and
-/// no pre/post barrier phases — every barrier is an arrival instant,
-/// the candidate index is fixed (`cand[m]` = GPUs hosting a replica of
-/// `m`), and RR-routed runs elide stepping barriers entirely.
+/// Placement never changes mid-run, so without fault injection there
+/// are no driver events and no pre/post barrier phases — every barrier
+/// is an arrival instant, the candidate index is fixed (`cand[m]` =
+/// GPUs hosting a replica of `m`), and RR-routed runs elide stepping
+/// barriers entirely. With a fault timeline attached
+/// ([`crate::faults::Resilience`]), fault applications, restore
+/// maturities and hedge sweeps become driver events — global barriers
+/// in sparse mode — and barrier elision is off (the front door probes
+/// backlogs and queue ages).
 struct PlacementDriver<'a> {
     pl: &'a Placement,
+    /// Global profile table (cold `load_ms` for failure recovery).
+    profiles: &'a [ModelProfile],
+    sched: GpuSched,
     /// model → hosting GPUs (the sparse core's candidate index).
     cand: Vec<Vec<usize>>,
     router: Router,
     cache: BacklogCache,
     rejected: Vec<u64>,
+    /// Fault timeline + front-door state — `None` for plain runs, in
+    /// which case every hook below is pass-through.
+    res: Option<Resilience>,
     /// Control-lane recorder: arrive/route/reject, by global model.
     obs: Recorder,
+}
+
+impl PlacementDriver<'_> {
+    /// Admission + health filter + routing + injection for one request
+    /// (`req.model` is global). `rerouted` marks failure-cascade
+    /// re-dispatches: they skip deadline admission (admitted once
+    /// already) and count into `rerouted_on_failure` on success.
+    fn dispatch_one(
+        &mut self,
+        t: Us,
+        mut req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+        rerouted: bool,
+    ) {
+        let m = req.model;
+        let all = &self.pl.replicas[m];
+        // The filtered clone is only built while an engine is actually
+        // unroutable; the no-fault path routes the shared slice as
+        // before (zero allocation, identical picks and bytes).
+        let filtered: Vec<Replica>;
+        let reps: &[Replica] = match &self.res {
+            Some(res) if res.any_unroutable() => {
+                filtered = all.iter().filter(|r| res.routable(r.gpu)).cloned().collect();
+                &filtered
+            }
+            _ => all,
+        };
+        if reps.is_empty() {
+            // Zero-routable window: every replica down/draining. Typed
+            // reject instead of a silent hold-until-horizon drop.
+            self.rejected[m] += 1;
+            if let Some(res) = &mut self.res {
+                res.note_unroutable();
+            }
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
+            }
+            return;
+        }
+        let cache = &mut self.cache;
+        let res = self.res.as_ref();
+        if !rerouted && res.is_some_and(|r| r.cfg.admission) {
+            // Deadline-aware admission: best-case queue+batch estimate
+            // across the routable replicas vs the remaining budget.
+            let best = reps
+                .iter()
+                .map(|rep| {
+                    let load = cache
+                        .backlog(engines, rep)
+                        .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)));
+                    queue_est_us(load, rep.batch, rep.capacity_rps)
+                })
+                .min()
+                .unwrap_or(Us::MAX);
+            if t.saturating_add(best) > req.deadline {
+                self.rejected[m] += 1;
+                if let Some(res) = &mut self.res {
+                    res.note_deadline_reject(m);
+                }
+                if self.obs.on() {
+                    self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
+                }
+                return;
+            }
+        }
+        let res = self.res.as_ref();
+        let cache = &mut self.cache;
+        let pick = self.router.route(m, reps, |rep| {
+            cache
+                .backlog(engines, rep)
+                .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)))
+        });
+        let (rep_gpu, rep_local) = (reps[pick].gpu, reps[pick].local);
+        if self.obs.on() {
+            let at = if rerouted { t } else { req.arrival };
+            self.obs.event(EventKind::Route, at, m as u32, req.id, rep_gpu as u64);
+        }
+        req.model = rep_local;
+        engines[rep_gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
+        self.cache.note_inject(rep_gpu, rep_local);
+        touched.mark(rep_gpu);
+        if rerouted {
+            if let Some(res) = &mut self.res {
+                res.note_reroute(1);
+            }
+        }
+    }
+
+    /// Apply timeline faults, restore maturities and the hedge sweep
+    /// due at barrier `t`. All three are driver events
+    /// ([`Resilience::next_event`]), so in sparse mode every engine is
+    /// synchronized here — cross-engine drains and moves are safe and
+    /// mode-invariant.
+    fn apply_faults(
+        &mut self,
+        t: Us,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        let due = self.res.as_mut().expect("faults without resilience").due_faults(t);
+        for e in &due {
+            match e.kind {
+                FaultKind::Down => self.on_down(t, e.gpu, engines, touched),
+                FaultKind::Degraded => {
+                    if self.obs.on() {
+                        self.obs.event(EventKind::EngineDown, t, NO_MODEL, e.gpu as u64, 1);
+                    }
+                }
+                FaultKind::Up => {
+                    // Recovery from a hard down is cold: every hosted
+                    // model re-loads its weights; the engine is routable
+                    // again only when the slowest load matures. Degraded
+                    // engines recover in place (nothing drained) and
+                    // need no restore.
+                    let res = self.res.as_mut().expect("faults without resilience");
+                    if res.restoring(e.gpu) {
+                        let cold = self.pl.hosted[e.gpu]
+                            .iter()
+                            .map(|&m| ms_to_us(self.profiles[m].load_ms).max(1))
+                            .max()
+                            .unwrap_or(1);
+                        res.schedule_restore(e.gpu, t + cold);
+                    } else if self.obs.on() {
+                        self.obs.event(EventKind::EngineUp, t, NO_MODEL, e.gpu as u64, 0);
+                    }
+                }
+            }
+        }
+        let due = self.res.as_mut().expect("faults without resilience").due_restores(t);
+        for g in due {
+            self.on_restore(t, g, engines, touched);
+        }
+        if self.res.as_mut().expect("faults without resilience").hedge_due(t) {
+            self.hedge_sweep(t, engines, touched);
+        }
+    }
+
+    /// Engine `g` failed: drain every active local queue, re-route the
+    /// drained requests through the normal dispatch path (the health
+    /// filter excludes `g` now), rebuild the policy over the tombstoned
+    /// table. With `reroute` off (the naive baseline), drained requests
+    /// are typed rejects instead — conservation holds either way.
+    fn on_down(
+        &mut self,
+        t: Us,
+        g: usize,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        if self.obs.on() {
+            self.obs.event(EventKind::EngineDown, t, NO_MODEL, g as u64, 0);
+        }
+        let mut drained: Vec<Request> = Vec::new();
+        if let Some(eng) = engines[g].as_mut() {
+            for (local, &global) in self.pl.hosted[g].iter().enumerate() {
+                if !eng.sim.is_active(local) {
+                    continue;
+                }
+                for mut r in eng.sim.deactivate_model(local) {
+                    r.model = global;
+                    drained.push(r);
+                }
+                self.cache.invalidate(g, local);
+            }
+            eng.rebuild_policy(self.sched);
+            touched.mark(g);
+        }
+        let reroute = self.res.as_ref().is_none_or(|r| r.cfg.reroute);
+        for r in drained {
+            if reroute {
+                self.dispatch_one(t, r, engines, touched, true);
+            } else {
+                self.rejected[r.model] += 1;
+                if self.obs.on() {
+                    self.obs.event(EventKind::Reject, t, r.model as u32, r.id, 0);
+                }
+            }
+        }
+    }
+
+    /// Engine `g`'s cold re-activation matured: re-activate every
+    /// hosted model at its original operating point and mark the
+    /// engine routable.
+    fn on_restore(
+        &mut self,
+        t: Us,
+        g: usize,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        if let Some(eng) = engines[g].as_mut() {
+            for local in 0..eng.sim.models.len() {
+                if !eng.sim.is_active(local) {
+                    let entry = eng.sim.models[local].clone();
+                    eng.sim.reactivate_model(local, entry);
+                }
+            }
+            eng.rebuild_policy(self.sched);
+            touched.mark(g);
+        }
+        self.res.as_mut().expect("restore without resilience").mark_restored(g, t);
+        if self.obs.on() {
+            self.obs.event(EventKind::EngineUp, t, NO_MODEL, g as u64, 0);
+        }
+    }
+
+    /// Hedged re-dispatch: for each degraded engine, move requests
+    /// stuck past their class threshold to the analytically-best other
+    /// replica — first-completion-wins with ties broken by engine index
+    /// ([`pick_hedge_target`]); when the stuck copy wins, nothing
+    /// moves (the hedge copy is the one cancelled).
+    fn hedge_sweep(
+        &mut self,
+        t: Us,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        for g in 0..engines.len() {
+            if !self.res.as_ref().is_some_and(|r| r.degraded(g)) || engines[g].is_none() {
+                continue;
+            }
+            for (local, &global) in self.pl.hosted[g].iter().enumerate() {
+                let res = self.res.as_ref().expect("hedge without resilience");
+                let cutoff = t.saturating_sub(res.hedge_threshold_us(global));
+                let eng = engines[g].as_ref().expect("checked some");
+                if !eng.sim.is_active(local) {
+                    continue;
+                }
+                let stuck = eng.sim.queued_before(local, cutoff) as u64;
+                if stuck == 0 {
+                    continue;
+                }
+                let src = self.pl.replicas[global]
+                    .iter()
+                    .find(|r| r.gpu == g)
+                    .expect("hosted model without replica");
+                let cache = &mut self.cache;
+                let src_est = queue_est_us(
+                    cache.backlog(engines, src).saturating_add(res.penalty_items(g)),
+                    src.batch,
+                    src.capacity_rps,
+                );
+                let cands: Vec<(Us, usize)> = self.pl.replicas[global]
+                    .iter()
+                    .filter(|r| r.gpu != g && res.routable(r.gpu))
+                    .map(|r| {
+                        let load =
+                            cache.backlog(engines, r).saturating_add(res.penalty_items(r.gpu));
+                        (queue_est_us(load, r.batch, r.capacity_rps), r.gpu)
+                    })
+                    .collect();
+                match pick_hedge_target((src_est, g), &cands) {
+                    None => {
+                        // Stuck copy wins: hedge fired, copy cancelled.
+                        self.res.as_mut().expect("checked").note_hedges(stuck, 0);
+                    }
+                    Some(win) => {
+                        let target = self.pl.replicas[global]
+                            .iter()
+                            .find(|r| r.gpu == win)
+                            .expect("winner without replica");
+                        let (t_gpu, t_local) = (target.gpu, target.local);
+                        let moved = engines[g]
+                            .as_mut()
+                            .expect("checked some")
+                            .sim
+                            .take_queued_before(local, cutoff);
+                        let n = moved.len() as u64;
+                        for mut r in moved {
+                            if self.obs.on() {
+                                self.obs.event(
+                                    EventKind::Hedge,
+                                    t,
+                                    global as u32,
+                                    r.id,
+                                    t_gpu as u64,
+                                );
+                            }
+                            r.model = t_local;
+                            engines[t_gpu]
+                                .as_mut()
+                                .expect("routable replica on idle GPU")
+                                .sim
+                                .inject(r);
+                            self.cache.note_inject(t_gpu, t_local);
+                        }
+                        self.cache.invalidate(g, local);
+                        touched.mark(g);
+                        touched.mark(t_gpu);
+                        self.res.as_mut().expect("checked").note_hedges(n, n);
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl EpochDriver for PlacementDriver<'_> {
@@ -328,7 +645,7 @@ impl EpochDriver for PlacementDriver<'_> {
     }
 
     fn next_event(&self) -> Option<Us> {
-        None
+        self.res.as_ref().and_then(|r| r.next_event())
     }
 
     fn candidates_of(&self, model: usize) -> &[usize] {
@@ -336,7 +653,7 @@ impl EpochDriver for PlacementDriver<'_> {
     }
 
     fn elides_barriers(&self) -> bool {
-        !self.router.policy().reads_backlogs()
+        !self.router.policy().reads_backlogs() && self.res.is_none()
     }
 
     fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
@@ -362,17 +679,20 @@ impl EpochDriver for PlacementDriver<'_> {
 
     fn pre_arrivals(
         &mut self,
-        _t: Us,
-        _engines: &mut [Option<ExecEngine>],
-        _touched: &mut Touched,
+        t: Us,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
     ) {
         self.cache.reset();
+        if self.res.is_some() {
+            self.apply_faults(t, engines, touched);
+        }
     }
 
     fn route(
         &mut self,
-        _t: Us,
-        mut req: Request,
+        t: Us,
+        req: Request,
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
     ) {
@@ -386,17 +706,7 @@ impl EpochDriver for PlacementDriver<'_> {
             }
             return;
         }
-        let reps = &self.pl.replicas[req.model];
-        let cache = &mut self.cache;
-        let pick = self.router.route(req.model, reps, |rep| cache.backlog(engines, rep));
-        let rep = &reps[pick];
-        if self.obs.on() {
-            self.obs.event(EventKind::Route, req.arrival, req.model as u32, req.id, rep.gpu as u64);
-        }
-        req.model = rep.local;
-        engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
-        cache.note_inject(rep.gpu, rep.local);
-        touched.mark(rep.gpu);
+        self.dispatch_one(t, req, engines, touched, false);
     }
 }
 
@@ -473,6 +783,30 @@ pub fn run_placement_stream<S: ArrivalStream>(
     label: &str,
     opts: ExecOpts,
 ) -> ClusterReport {
+    run_placement_stream_faults(
+        profiles, gpus, pl, stream, horizon_ms, routing, sched, seed, label, opts, None,
+    )
+}
+
+/// [`run_placement_stream`] with an optional fault timeline + SLO-class
+/// front door ([`crate::faults`]). With `faults: None` this is the
+/// exact plain path (no allocation, no behavior change); with a config,
+/// engine down/up/degraded events play out as driver-event barriers and
+/// the report carries [`ClusterReport::resilience`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_placement_stream_faults<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    pl: &Placement,
+    stream: S,
+    horizon_ms: f64,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    seed: u64,
+    label: &str,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+) -> ClusterReport {
     assert_eq!(pl.n_gpus(), gpus.len(), "placement built for a different cluster");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
@@ -506,17 +840,25 @@ pub fn run_placement_stream<S: ArrivalStream>(
         .iter()
         .map(|reps| reps.iter().map(|r| r.gpu).collect())
         .collect();
+    let res = faults.map(|cfg| {
+        Resilience::new(cfg.clone(), profiles, n_gpus, horizon)
+            .expect("invalid faults config (validate at the config layer)")
+    });
     let mut driver = PlacementDriver {
         pl,
+        profiles,
+        sched,
         cand,
         router: Router::new(routing, n_models, seed),
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
+        res,
         obs: Recorder::new(opts.obs, horizon),
     };
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
     let control_obs = driver.obs.finish(profiles.iter().map(|p| p.name.clone()).collect());
     let rejected = driver.rejected;
+    let res = driver.res;
 
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
@@ -540,6 +882,10 @@ pub fn run_placement_stream<S: ArrivalStream>(
     let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
     let mut per_gpu = Vec::with_capacity(n_gpus);
+    // Completion instants + SLO outcome, fed to the degraded-goodput
+    // accounting (only gathered when a fault timeline is attached;
+    // empty when `exact_latencies` is off — goodput then reads 0).
+    let mut comps: Vec<(Us, bool)> = Vec::new();
     for g in 0..n_gpus {
         let (util, shares) = match &reports[g] {
             Some(rep) => {
@@ -552,6 +898,12 @@ pub fn run_placement_stream<S: ArrivalStream>(
                     dropped[global] += mm.dropped;
                     latencies[global].extend_from_slice(&mm.latencies_ms);
                     hists[global].merge(&mm.latency_hist);
+                    if res.is_some() {
+                        let slo = profiles[global].slo_ms;
+                        for (lat, &done) in mm.latencies_ms.iter().zip(&mm.completions_us) {
+                            comps.push((done, *lat <= slo));
+                        }
+                    }
                     let r = pl.replicas[global]
                         .iter()
                         .find(|r| r.gpu == g)
@@ -601,6 +953,7 @@ pub fn run_placement_stream<S: ArrivalStream>(
         per_gpu,
         adaptive: None,
         lifecycle: None,
+        resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
         exec: Some(exec_stats),
         obs,
     }
@@ -681,10 +1034,32 @@ pub fn serve_cluster_stream<S: ArrivalStream>(
     seed: u64,
     opts: ExecOpts,
 ) -> ClusterReport {
+    serve_cluster_stream_faults(
+        profiles, offered_rps, gpus, placement, routing, sched, stream, horizon_ms, seed, opts,
+        None,
+    )
+}
+
+/// [`serve_cluster_stream`] with an optional fault timeline + SLO-class
+/// front door (see [`run_placement_stream_faults`]).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_cluster_stream_faults<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+) -> ClusterReport {
     let pl = place(profiles, offered_rps, gpus, placement);
     let label = format!("{}+{}+{}", placement.name(), routing.name(), sched.name());
-    run_placement_stream(
-        profiles, gpus, &pl, stream, horizon_ms, routing, sched, seed, &label, opts,
+    run_placement_stream_faults(
+        profiles, gpus, &pl, stream, horizon_ms, routing, sched, seed, &label, opts, faults,
     )
 }
 

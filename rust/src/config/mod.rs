@@ -175,6 +175,11 @@ pub struct Scenario {
     /// arrivals stream from the recorded log (per-model `rate`s are
     /// still used for placement sizing).
     pub workload: Option<TraceReplay>,
+    /// Optional fault-injection + front-door block (requires `cluster`)
+    /// — see [`crate::faults::ResilienceCfg`] and docs/CONFIG.md. The
+    /// timeline is validated at load; the report gains a `resilience`
+    /// block only when this is present.
+    pub faults: Option<crate::faults::ResilienceCfg>,
     /// Observability knobs (the `"observability"` block — see
     /// `docs/CONFIG.md` and [`crate::obs`]). Default-off: no tracing,
     /// no time-series, exact latency vectors — report bytes unchanged.
@@ -493,6 +498,82 @@ impl Scenario {
             }
             None => None,
         };
+        let horizon_ms = j.opt_f64("horizon_ms", 10_000.0);
+        let faults = match j.get("faults") {
+            Some(fj) => {
+                let cl = match &cluster {
+                    Some(c) => c,
+                    None => {
+                        return Err("'faults' requires a 'cluster' block \
+                                    (fault injection acts on cluster engines)"
+                            .into())
+                    }
+                };
+                let d = crate::faults::ResilienceCfg::default();
+                let mut events = Vec::new();
+                if let Some(ev) = fj.get("events") {
+                    let evs = ev.as_arr().ok_or("'faults.events' must be an array")?;
+                    for ej in evs {
+                        let t_ms = ej.req_f64("t_ms")?;
+                        if !t_ms.is_finite() || t_ms <= 0.0 {
+                            return Err(format!(
+                                "faults.events t_ms must be finite and > 0 (got {t_ms})"
+                            ));
+                        }
+                        let kind = ej.req_str("kind")?;
+                        let kind = crate::faults::FaultKind::from_name(kind).ok_or(format!(
+                            "unknown fault kind '{kind}' (expected \
+                             engine_down|engine_up|engine_degraded)"
+                        ))?;
+                        events.push(crate::faults::FaultEvent {
+                            t: crate::gpu::ms_to_us(t_ms).max(1),
+                            gpu: ej.req_u64("gpu")? as usize,
+                            kind,
+                        });
+                    }
+                }
+                let bulk_models = match fj.get("bulk_models") {
+                    Some(Json::Arr(names)) => {
+                        let mut out = Vec::new();
+                        for n in names {
+                            out.push(
+                                n.as_str()
+                                    .ok_or("'faults.bulk_models' entries must be strings")?
+                                    .to_string(),
+                            );
+                        }
+                        out
+                    }
+                    _ => Vec::new(),
+                };
+                let cfg = crate::faults::ResilienceCfg {
+                    events,
+                    mtbf_ms: fj.opt_f64("mtbf_ms", d.mtbf_ms),
+                    mttr_ms: fj.opt_f64("mttr_ms", d.mttr_ms),
+                    seed: fj.opt_u64("seed", d.seed),
+                    bulk_models,
+                    admission: fj.opt_bool("admission", d.admission),
+                    reroute: fj.opt_bool("reroute", d.reroute),
+                    hedge: fj.opt_bool("hedge", d.hedge),
+                    hedge_check_ms: fj.opt_f64("hedge_check_ms", d.hedge_check_ms),
+                    hedge_critical_ms: fj.opt_f64("hedge_critical_ms", d.hedge_critical_ms),
+                    hedge_bulk_ms: fj.opt_f64("hedge_bulk_ms", d.hedge_bulk_ms),
+                    degraded_penalty_items: fj
+                        .opt_u64("degraded_penalty_items", d.degraded_penalty_items as u64)
+                        as usize,
+                };
+                // Build the full timeline (scripted + generated) here so
+                // a bad block fails at load, not mid-run: per-engine
+                // alternation, GPU indices in range, times > 0.
+                crate::faults::build_timeline(
+                    &cfg,
+                    cl.gpus.len(),
+                    crate::gpu::ms_to_us(horizon_ms),
+                )?;
+                Some(cfg)
+            }
+            None => None,
+        };
         let parallelism = match j.get("parallelism") {
             None => crate::cluster::Parallelism::Auto,
             Some(v) => match (v.as_str(), v.as_u64()) {
@@ -548,7 +629,7 @@ impl Scenario {
             gpu,
             n_gpus: j.opt_u64("n_gpus", 1) as usize,
             policy,
-            horizon_ms: j.opt_f64("horizon_ms", 10_000.0),
+            horizon_ms,
             seed: j.opt_u64("seed", 42),
             models,
             poisson: j.opt_bool("poisson", true),
@@ -559,6 +640,7 @@ impl Scenario {
             lifecycle,
             unified,
             workload,
+            faults,
             obs,
         })
     }
@@ -689,6 +771,42 @@ impl Scenario {
                         ("on_unsorted", Json::from(w.on_unsorted.label())),
                     ]),
                 )]),
+            ));
+        }
+        if let Some(f) = &self.faults {
+            pairs.push((
+                "faults",
+                Json::obj(vec![
+                    (
+                        "events",
+                        Json::Arr(
+                            f.events
+                                .iter()
+                                .map(|e| {
+                                    Json::obj(vec![
+                                        ("t_ms", Json::from(crate::gpu::us_to_ms(e.t))),
+                                        ("gpu", Json::from(e.gpu as u64)),
+                                        ("kind", Json::from(e.kind.name())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("mtbf_ms", Json::from(f.mtbf_ms)),
+                    ("mttr_ms", Json::from(f.mttr_ms)),
+                    ("seed", Json::from(f.seed)),
+                    (
+                        "bulk_models",
+                        Json::Arr(f.bulk_models.iter().map(|n| Json::from(n.as_str())).collect()),
+                    ),
+                    ("admission", Json::from(f.admission)),
+                    ("reroute", Json::from(f.reroute)),
+                    ("hedge", Json::from(f.hedge)),
+                    ("hedge_check_ms", Json::from(f.hedge_check_ms)),
+                    ("hedge_critical_ms", Json::from(f.hedge_critical_ms)),
+                    ("hedge_bulk_ms", Json::from(f.hedge_bulk_ms)),
+                    ("degraded_penalty_items", Json::from(f.degraded_penalty_items as u64)),
+                ]),
             ));
         }
         if self.obs != crate::obs::ObsCfg::default() {
@@ -856,7 +974,7 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
     // never materialized (byte-identical to the collected path).
     let stream = MergedStream::new(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::cluster::serve_cluster_stream(
+    crate::cluster::serve_cluster_stream_faults(
         &profiles,
         &rates,
         &gpus,
@@ -867,6 +985,7 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.horizon_ms,
         sc.seed,
         sc.exec_opts(),
+        sc.faults.as_ref(),
     )
 }
 
@@ -897,7 +1016,7 @@ pub fn run_trace_scenario(sc: &Scenario) -> Result<crate::cluster::ClusterReport
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
     Ok(if sc.adaptive.is_some() {
         let adaptive = sc.adaptive.clone().unwrap_or_default();
-        crate::controlplane::run_adaptive_stream(
+        crate::controlplane::run_adaptive_stream_faults(
             &profiles,
             &sc.initial_rates(),
             &gpus,
@@ -909,9 +1028,10 @@ pub fn run_trace_scenario(sc: &Scenario) -> Result<crate::cluster::ClusterReport
             sc.horizon_ms,
             sc.seed,
             sc.exec_opts(),
+            sc.faults.as_ref(),
         )
     } else {
-        crate::cluster::serve_cluster_stream(
+        crate::cluster::serve_cluster_stream_faults(
             &profiles,
             &sc.offered_rates(),
             &gpus,
@@ -922,6 +1042,7 @@ pub fn run_trace_scenario(sc: &Scenario) -> Result<crate::cluster::ClusterReport
             sc.horizon_ms,
             sc.seed,
             sc.exec_opts(),
+            sc.faults.as_ref(),
         )
     })
 }
@@ -948,7 +1069,7 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         .collect();
     let stream = MergedStream::new(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::controlplane::run_adaptive_stream(
+    crate::controlplane::run_adaptive_stream_faults(
         &profiles,
         &initial,
         &gpus,
@@ -960,6 +1081,7 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.horizon_ms,
         sc.seed,
         sc.exec_opts(),
+        sc.faults.as_ref(),
     )
 }
 
@@ -981,7 +1103,8 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.seed,
     );
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::lifecycle::serve_longtail_with(
+    let stream = crate::workload::MaterializedStream::new(reqs, profiles.len());
+    crate::lifecycle::serve_longtail_stream_faults(
         &profiles,
         &rates,
         &gpus,
@@ -989,10 +1112,11 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         cl.routing,
         sc.gpu_sched(),
         &lc.cfg,
-        reqs,
+        stream,
         sc.horizon_ms,
         sc.seed,
         sc.exec_opts(),
+        sc.faults.as_ref(),
     )
 }
 
@@ -1031,7 +1155,8 @@ pub fn run_unified_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         )
     };
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::unified::run_unified_with(
+    let stream = crate::workload::MaterializedStream::new(reqs, profiles.len());
+    crate::unified::run_unified_stream_faults(
         &profiles,
         &rates,
         &gpus,
@@ -1039,10 +1164,11 @@ pub fn run_unified_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         cl.routing,
         sc.gpu_sched(),
         &ucfg,
-        reqs,
+        stream,
         sc.horizon_ms,
         sc.seed,
         sc.exec_opts(),
+        sc.faults.as_ref(),
     )
 }
 
@@ -1560,6 +1686,104 @@ mod tests {
         let mut missing = sc.clone();
         missing.workload.as_mut().unwrap().path = dir.join("nope.csv");
         assert!(run_trace_scenario(&missing).is_err());
+    }
+
+    const FAULTS_EXAMPLE: &str = r#"{
+        "name": "failure_mini",
+        "policy": "dstack",
+        "horizon_ms": 800,
+        "seed": 11,
+        "cluster": {"gpus": ["V100", "V100"], "placement": "ffd", "routing": "jsq"},
+        "faults": {
+            "events": [
+                {"t_ms": 200, "gpu": 1, "kind": "engine_degraded"},
+                {"t_ms": 300, "gpu": 1, "kind": "engine_down"},
+                {"t_ms": 500, "gpu": 1, "kind": "engine_up"}
+            ],
+            "bulk_models": ["resnet50"],
+            "admission": true,
+            "hedge_critical_ms": 10
+        },
+        "models": [
+            {"name": "mobilenet", "rate": 150},
+            {"name": "resnet50", "rate": 120}
+        ]
+    }"#;
+
+    #[test]
+    fn faults_block_parses_roundtrips_and_runs() {
+        use crate::faults::FaultKind;
+        let sc = Scenario::from_json(FAULTS_EXAMPLE).unwrap();
+        let f = sc.faults.as_ref().expect("faults block parsed");
+        assert_eq!(f.events.len(), 3);
+        assert_eq!(f.events[0].t, 200_000, "t_ms converts to µs");
+        assert_eq!(f.events[1].kind, FaultKind::Down);
+        assert!(f.admission);
+        assert_eq!(f.bulk_models, vec!["resnet50".to_string()]);
+        assert_eq!(f.hedge_critical_ms, 10.0);
+        let text = sc.to_json().to_string_pretty();
+        let sc2 = Scenario::from_json(&text).unwrap();
+        assert_eq!(sc2.faults.as_ref().unwrap(), f, "faults block round-trips");
+        let rep = run_cluster_scenario(&sc);
+        let r = rep.resilience.as_ref().expect("resilience stats attached");
+        assert_eq!(r.fault_events, 3);
+        assert_eq!(r.engine_downs, 1);
+        assert!(rep.total_throughput() > 0.0);
+        assert!(
+            rep.to_json().to_string_compact().contains("\"resilience\""),
+            "fault runs serialize the resilience block"
+        );
+        // No faults block ⇒ no resilience field, no serialized block.
+        let plain = Scenario::from_json(CLUSTER_EXAMPLE).unwrap();
+        assert!(plain.faults.is_none());
+        assert!(!plain.to_json().to_string_pretty().contains("faults"));
+        let rep = run_cluster_scenario(&plain);
+        assert!(rep.resilience.is_none());
+        assert!(!rep.to_json().to_string_compact().contains("\"resilience\""));
+    }
+
+    #[test]
+    fn faults_block_requires_cluster_and_valid_timeline() {
+        for bad in [
+            // No cluster block.
+            r#"{"faults": {}, "models": [{"name": "alexnet", "rate": 1}]}"#,
+            // GPU index out of range for the declared cluster.
+            r#"{"cluster": {"gpus": ["V100"]},
+                "faults": {"events": [{"t_ms": 100, "gpu": 3, "kind": "down"}]},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+            // Up without a preceding down/degraded.
+            r#"{"cluster": {"gpus": ["V100"]},
+                "faults": {"events": [{"t_ms": 100, "gpu": 0, "kind": "engine_up"}]},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+            // Unknown kind / non-positive time / bad knobs.
+            r#"{"cluster": {"gpus": ["V100"]},
+                "faults": {"events": [{"t_ms": 100, "gpu": 0, "kind": "explode"}]},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]},
+                "faults": {"events": [{"t_ms": 0, "gpu": 0, "kind": "down"}]},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]},
+                "faults": {"mtbf_ms": 100, "mttr_ms": 0},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+            r#"{"cluster": {"gpus": ["V100"]},
+                "faults": {"hedge_check_ms": 0},
+                "models": [{"name": "alexnet", "rate": 1}]}"#,
+        ] {
+            assert!(Scenario::from_json(bad).is_err(), "{bad}");
+        }
+        // Faults compose with every cluster-family block.
+        let lc = r#"{
+            "cluster": {"gpus": ["V100", "V100"]},
+            "lifecycle": {"n_models": 6, "total_rps": 120, "mem_budget_mib": 3072},
+            "faults": {"events": [{"t_ms": 200, "gpu": 1, "kind": "down"},
+                                   {"t_ms": 400, "gpu": 1, "kind": "up"}]},
+            "horizon_ms": 700,
+            "models": [{"name": "mobilenet"}, {"name": "alexnet"}]}"#;
+        let sc = Scenario::from_json(lc).unwrap();
+        let rep = run_lifecycle_scenario(&sc);
+        assert!(rep.lifecycle.is_some());
+        assert!(rep.resilience.is_some(), "lifecycle path attaches resilience stats");
+        assert!(rep.resilience.as_ref().unwrap().engine_downs == 1);
     }
 
     #[test]

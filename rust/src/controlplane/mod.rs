@@ -59,6 +59,7 @@ use crate::cluster::{
     PlacementPolicy, Replica, Router, RoutingPolicy,
 };
 use crate::cluster::p99_of;
+use crate::faults::{pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg};
 use crate::gpu::{ms_to_us, Us};
 use crate::metrics::RunReport;
 use crate::obs::{EngineObs, EventKind, ObsCfg, ObsReport, Recorder, NO_MODEL};
@@ -464,6 +465,9 @@ struct AdaptiveDriver<'a> {
     cache: BacklogCache,
     rejected: Vec<u64>,
     next_tick: Us,
+    /// Fault timeline + front-door state — `None` for plain runs, in
+    /// which case every fault hook is pass-through.
+    res: Option<Resilience>,
     /// Observability config copied into engines created mid-run.
     obs_cfg: ObsCfg,
     /// Control-lane recorder: arrive/route/reject + replans.
@@ -482,34 +486,268 @@ impl AdaptiveDriver<'_> {
     /// Route one request of `model` to a replica (JSQ/P2C probe the
     /// live engine backlogs through the per-barrier cache) and inject
     /// it, or count it rejected when the model has no routable replica.
-    /// Shared by arrival routing and the re-routing of queues drained
-    /// from removed replicas.
+    /// Shared by arrival routing, the re-routing of queues drained from
+    /// removed replicas, and (`on_failure`) the failure cascade of a
+    /// downed engine. With faults active, unhealthy engines are
+    /// filtered out and degraded replicas carry the routing-cost
+    /// penalty; `None` leaves the path byte-identical.
     fn route_and_inject(
         &mut self,
         model: usize,
         req: Request,
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
+        on_failure: bool,
     ) {
-        let reps = &self.routable[model];
+        let all = &self.routable[model];
+        let filtered: Vec<Replica>;
+        let reps: &[Replica] = match &self.res {
+            Some(res) if res.any_unroutable() => {
+                filtered = all.iter().filter(|r| res.routable(r.gpu)).cloned().collect();
+                &filtered
+            }
+            _ => all,
+        };
         if reps.is_empty() {
             self.rejected[model] += 1;
+            if let Some(res) = &mut self.res {
+                res.note_unroutable();
+            }
             if self.obs.on() {
                 self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
             }
             return;
         }
         let cache = &mut self.cache;
-        let pick = self.router.route(model, reps, |rep| cache.backlog(engines, rep));
-        let rep = &reps[pick];
+        let res = self.res.as_ref();
+        let pick = self.router.route(model, reps, |rep| {
+            cache
+                .backlog(engines, rep)
+                .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)))
+        });
+        let (rep_gpu, rep_local) = (reps[pick].gpu, reps[pick].local);
         if self.obs.on() {
-            self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, rep.gpu as u64);
+            self.obs.event(EventKind::Route, req.arrival, model as u32, req.id, rep_gpu as u64);
         }
         let mut q = req;
-        q.model = rep.local;
-        engines[rep.gpu].as_mut().expect("replica on idle GPU").sim.inject(q);
-        cache.note_inject(rep.gpu, rep.local);
-        touched.mark(rep.gpu);
+        q.model = rep_local;
+        engines[rep_gpu].as_mut().expect("replica on idle GPU").sim.inject(q);
+        self.cache.note_inject(rep_gpu, rep_local);
+        touched.mark(rep_gpu);
+        if on_failure {
+            if let Some(res) = &mut self.res {
+                res.note_reroute(1);
+            }
+        }
+    }
+
+    /// Apply timeline faults, restore maturities and the hedge sweep
+    /// due at barrier `t` (all surfaced as driver events, so in sparse
+    /// mode every engine is synchronized here).
+    fn apply_faults(
+        &mut self,
+        t: Us,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        let due = self.res.as_mut().expect("faults without resilience").due_faults(t);
+        for e in &due {
+            match e.kind {
+                FaultKind::Down => self.on_down(t, e.gpu, engines, touched),
+                FaultKind::Degraded => {
+                    if self.obs.on() {
+                        self.obs.event(EventKind::EngineDown, t, NO_MODEL, e.gpu as u64, 1);
+                    }
+                }
+                FaultKind::Up => {
+                    let res = self.res.as_mut().expect("faults without resilience");
+                    if res.restoring(e.gpu) {
+                        // Cold recovery: the slowest re-load among the
+                        // models a live replica still claims on this
+                        // engine gates routability.
+                        let cold = self.local_map[e.gpu]
+                            .iter()
+                            .filter(|&&m| self.live[m].iter().any(|r| r.gpu == e.gpu))
+                            .map(|&m| ms_to_us(self.profiles[m].load_ms).max(1))
+                            .max()
+                            .unwrap_or(1);
+                        res.schedule_restore(e.gpu, t + cold);
+                    } else if self.obs.on() {
+                        self.obs.event(EventKind::EngineUp, t, NO_MODEL, e.gpu as u64, 0);
+                    }
+                }
+            }
+        }
+        let due = self.res.as_mut().expect("faults without resilience").due_restores(t);
+        for g in due {
+            self.on_restore(t, g, engines, touched);
+        }
+        if self.res.as_mut().expect("faults without resilience").hedge_due(t) {
+            self.hedge_sweep(t, engines, touched);
+        }
+    }
+
+    /// Engine `g` failed: drain every active local, cascade-re-route the
+    /// drained requests (or reject them in the naive `reroute: false`
+    /// baseline), tombstone-rebuild the policy. Live replicas stay in
+    /// the book — the engine is simply unroutable until restored, and
+    /// the rebalancer keeps reasoning about the same placement.
+    fn on_down(
+        &mut self,
+        t: Us,
+        g: usize,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        if self.obs.on() {
+            self.obs.event(EventKind::EngineDown, t, NO_MODEL, g as u64, 0);
+        }
+        let mut drained: Vec<Request> = Vec::new();
+        if let Some(eng) = engines[g].as_mut() {
+            for local in 0..self.local_map[g].len() {
+                if !eng.sim.is_active(local) {
+                    continue;
+                }
+                let global = self.local_map[g][local];
+                for mut r in eng.sim.deactivate_model(local) {
+                    r.model = global;
+                    drained.push(r);
+                }
+                self.cache.invalidate(g, local);
+            }
+            eng.rebuild_policy(self.sched);
+            touched.mark(g);
+        }
+        let reroute = self.res.as_ref().is_none_or(|r| r.cfg.reroute);
+        for r in drained {
+            if reroute {
+                let m = r.model;
+                self.route_and_inject(m, r, engines, touched, true);
+            } else {
+                self.rejected[r.model] += 1;
+                if self.obs.on() {
+                    self.obs.event(EventKind::Reject, t, r.model as u32, r.id, 0);
+                }
+            }
+        }
+    }
+
+    /// Engine `g`'s cold re-activation matured: re-activate every local
+    /// a live replica still claims (migrated-off tombstones stay
+    /// tombstoned) and mark the engine routable.
+    fn on_restore(
+        &mut self,
+        t: Us,
+        g: usize,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        if let Some(eng) = engines[g].as_mut() {
+            for local in 0..self.local_map[g].len() {
+                if eng.sim.is_active(local) {
+                    continue;
+                }
+                let global = self.local_map[g][local];
+                if !self.live[global].iter().any(|r| r.gpu == g && r.local == Some(local)) {
+                    continue;
+                }
+                let entry = eng.sim.models[local].clone();
+                eng.sim.reactivate_model(local, entry);
+            }
+            eng.rebuild_policy(self.sched);
+            touched.mark(g);
+        }
+        self.res.as_mut().expect("restore without resilience").mark_restored(g, t);
+        if self.obs.on() {
+            self.obs.event(EventKind::EngineUp, t, NO_MODEL, g as u64, 0);
+        }
+    }
+
+    /// Hedged re-dispatch off degraded engines (see
+    /// [`crate::faults::pick_hedge_target`] for the analytic
+    /// first-completion-wins rule).
+    fn hedge_sweep(
+        &mut self,
+        t: Us,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        for g in 0..engines.len() {
+            if !self.res.as_ref().is_some_and(|r| r.degraded(g)) || engines[g].is_none() {
+                continue;
+            }
+            for local in 0..self.local_map[g].len() {
+                let global = self.local_map[g][local];
+                let res = self.res.as_ref().expect("hedge without resilience");
+                let cutoff = t.saturating_sub(res.hedge_threshold_us(global));
+                let eng = engines[g].as_ref().expect("checked some");
+                if !eng.sim.is_active(local) {
+                    continue;
+                }
+                let stuck = eng.sim.queued_before(local, cutoff) as u64;
+                if stuck == 0 {
+                    continue;
+                }
+                let Some(src) = self.routable[global].iter().find(|r| r.gpu == g) else {
+                    continue;
+                };
+                let cache = &mut self.cache;
+                let src_est = queue_est_us(
+                    cache.backlog(engines, src).saturating_add(res.penalty_items(g)),
+                    src.batch,
+                    src.capacity_rps,
+                );
+                let cands: Vec<(Us, usize)> = self.routable[global]
+                    .iter()
+                    .filter(|r| r.gpu != g && res.routable(r.gpu))
+                    .map(|r| {
+                        let load =
+                            cache.backlog(engines, r).saturating_add(res.penalty_items(r.gpu));
+                        (queue_est_us(load, r.batch, r.capacity_rps), r.gpu)
+                    })
+                    .collect();
+                match pick_hedge_target((src_est, g), &cands) {
+                    None => {
+                        self.res.as_mut().expect("checked").note_hedges(stuck, 0);
+                    }
+                    Some(win) => {
+                        let target = self.routable[global]
+                            .iter()
+                            .find(|r| r.gpu == win)
+                            .expect("winner without replica");
+                        let (t_gpu, t_local) = (target.gpu, target.local);
+                        let moved = engines[g]
+                            .as_mut()
+                            .expect("checked some")
+                            .sim
+                            .take_queued_before(local, cutoff);
+                        let n = moved.len() as u64;
+                        for mut r in moved {
+                            if self.obs.on() {
+                                self.obs.event(
+                                    EventKind::Hedge,
+                                    t,
+                                    global as u32,
+                                    r.id,
+                                    t_gpu as u64,
+                                );
+                            }
+                            r.model = t_local;
+                            engines[t_gpu]
+                                .as_mut()
+                                .expect("routable replica on idle GPU")
+                                .sim
+                                .inject(r);
+                            self.cache.note_inject(t_gpu, t_local);
+                        }
+                        self.cache.invalidate(g, local);
+                        touched.mark(g);
+                        touched.mark(t_gpu);
+                        self.res.as_mut().expect("checked").note_hedges(n, n);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -525,8 +763,9 @@ impl EpochDriver for AdaptiveDriver<'_> {
     fn elides_barriers(&self) -> bool {
         // RR decisions are pure router state; arrivals between control
         // ticks then batch into injection rounds. Demand counting
-        // (`window_counts`) happens in `route_free`, identically.
-        !self.router.policy().reads_backlogs()
+        // (`window_counts`) happens in `route_free`, identically. Fault
+        // runs never elide: the front door probes backlogs and ages.
+        !self.router.policy().reads_backlogs() && self.res.is_none()
     }
 
     fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
@@ -555,12 +794,18 @@ impl EpochDriver for AdaptiveDriver<'_> {
     fn next_event(&self) -> Option<Us> {
         let t_act = self.pending.iter().map(|&(at, _, _)| at).min();
         let t_tick = if self.next_tick < self.horizon { Some(self.next_tick) } else { None };
-        [t_act, t_tick].into_iter().flatten().min()
+        let t_res = self.res.as_ref().and_then(|r| r.next_event());
+        [t_act, t_tick, t_res].into_iter().flatten().min()
     }
 
-    /// Mature pending replica activations due at t.
+    /// Mature pending replica activations due at t (faults first: a
+    /// replica activating onto an engine that just went down stays
+    /// active-but-unroutable until the restore).
     fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
         self.cache.reset();
+        if self.res.is_some() {
+            self.apply_faults(t, engines, touched);
+        }
         if !self.pending.iter().any(|&(at, _, _)| at <= t) {
             return;
         }
@@ -594,7 +839,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
     /// not it is admitted — demand, not service).
     fn route(
         &mut self,
-        _t: Us,
+        t: Us,
         req: Request,
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
@@ -604,7 +849,33 @@ impl EpochDriver for AdaptiveDriver<'_> {
         if self.obs.on() {
             self.obs.event(EventKind::Arrive, req.arrival, model as u32, req.id, 0);
         }
-        self.route_and_inject(model, req, engines, touched);
+        if self.res.as_ref().is_some_and(|r| r.cfg.admission) {
+            // Deadline-aware admission: best-case estimate across the
+            // healthy replicas vs the remaining budget. No healthy
+            // replica at all falls through to the unroutable reject.
+            let res = self.res.as_ref().expect("checked");
+            let cache = &mut self.cache;
+            let best = self.routable[model]
+                .iter()
+                .filter(|rep| res.routable(rep.gpu))
+                .map(|rep| {
+                    let load =
+                        cache.backlog(engines, rep).saturating_add(res.penalty_items(rep.gpu));
+                    queue_est_us(load, rep.batch, rep.capacity_rps)
+                })
+                .min();
+            if let Some(best) = best {
+                if t.saturating_add(best) > req.deadline {
+                    self.rejected[model] += 1;
+                    self.res.as_mut().expect("checked").note_deadline_reject(model);
+                    if self.obs.on() {
+                        self.obs.event(EventKind::Reject, t, model as u32, req.id, 0);
+                    }
+                    return;
+                }
+            }
+        }
+        self.route_and_inject(model, req, engines, touched, false);
     }
 
     /// Control tick: estimate, detect drift, rebalance.
@@ -646,8 +917,12 @@ impl EpochDriver for AdaptiveDriver<'_> {
                 let lr = self.live[m].remove(idx);
                 if let Some(local) = lr.local {
                     let engine = engines[gpu].as_mut().expect("live replica without engine");
-                    for req in engine.sim.deactivate_model(local) {
-                        drained.push((m, req));
+                    // A fault may have drained this local already; a
+                    // tombstoned slot has nothing left to hand over.
+                    if engine.sim.is_active(local) {
+                        for req in engine.sim.deactivate_model(local) {
+                            drained.push((m, req));
+                        }
                     }
                     engine.rebuild_policy(self.sched);
                     // The drained queue changed this slot's backlog out
@@ -691,7 +966,7 @@ impl EpochDriver for AdaptiveDriver<'_> {
             }
             // Re-route drained requests among surviving replicas.
             for (m, req) in drained {
-                self.route_and_inject(m, req, engines, touched);
+                self.route_and_inject(m, req, engines, touched, false);
             }
             self.stats.rebalances += 1;
             self.stats.rebalance_times_us.push(t);
@@ -785,6 +1060,31 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
     seed: u64,
     opts: ExecOpts,
 ) -> ClusterReport {
+    run_adaptive_stream_faults(
+        profiles, initial_rates, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts, None,
+    )
+}
+
+/// [`run_adaptive_stream`] with an optional fault timeline + SLO-class
+/// front door ([`crate::faults`]). `faults: None` is the exact plain
+/// path; with a config, the report carries
+/// [`crate::cluster::ClusterReport::resilience`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_adaptive_stream_faults<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &AdaptiveCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+) -> ClusterReport {
     cfg.validate().expect("invalid adaptive config");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
@@ -855,13 +1155,26 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
         next_tick: interval,
+        res: faults.map(|fc| {
+            Resilience::new(fc.clone(), profiles, n_gpus, horizon)
+                .expect("invalid faults config (validate at the config layer)")
+        }),
         obs_cfg: opts.obs,
         obs: Recorder::new(opts.obs, horizon),
     };
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
 
     let AdaptiveDriver {
-        live, local_map, knee_load, shed_rps, estimator, mut stats, rejected, obs: mut obs_rec, ..
+        live,
+        local_map,
+        knee_load,
+        shed_rps,
+        estimator,
+        mut stats,
+        rejected,
+        res,
+        obs: mut obs_rec,
+        ..
     } = driver;
     stats.est_rates = estimator.rates().to_vec();
     let control_obs = obs_rec.finish(profiles.iter().map(|p| p.name.clone()).collect());
@@ -887,6 +1200,9 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
     let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut lat_before: Vec<Vec<f64>> = vec![Vec::new(); n_models];
     let mut lat_after: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    // Completion instants + SLO outcome for degraded-goodput accounting
+    // (gathered only when a fault timeline is attached).
+    let mut comps: Vec<(Us, bool)> = Vec::new();
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
     let mut per_gpu = Vec::with_capacity(n_gpus);
     for g in 0..n_gpus {
@@ -905,6 +1221,9 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
                         match split_at {
                             Some(cut) if done >= cut => lat_after[global].push(*lat),
                             _ => lat_before[global].push(*lat),
+                        }
+                        if res.is_some() {
+                            comps.push((done, *lat <= profiles[global].slo_ms));
                         }
                     }
                     // Shares describe the *final* packing: tombstones
@@ -963,6 +1282,7 @@ pub fn run_adaptive_stream<S: ArrivalStream>(
         per_gpu,
         adaptive: Some(stats),
         lifecycle: None,
+        resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
         exec: Some(exec_stats),
         obs,
     }

@@ -1,0 +1,876 @@
+//! Fault injection and the resilient front door (DESIGN.md §4.12).
+//!
+//! Production fleets lose engines mid-flight; D-STACK's evaluation
+//! assumes they never do. This module closes that gap with three
+//! cooperating pieces, all deterministic on the virtual clock:
+//!
+//! 1. **Fault timeline** — `engine_down` / `engine_up` /
+//!    `engine_degraded` events, scripted via the `"faults"` config block
+//!    or generated from seeded exponential MTBF/MTTR processes
+//!    ([`ResilienceCfg::mtbf_ms`]). The timeline is built and validated
+//!    once up front; every driver surfaces the next fault as a *driver
+//!    event* through [`crate::cluster::exec::EpochDriver::next_event`],
+//!    so in sparse mode each fault is a global barrier — the same
+//!    mechanism that already makes control ticks and load maturities
+//!    mode-invariant (DESIGN.md §4.7).
+//! 2. **Failure semantics** — a downed engine drains: its queued
+//!    requests cascade-re-route through the existing tombstone-surgery
+//!    path ([`crate::sim::Sim::deactivate_model`]) and are counted in
+//!    [`ResilienceStats::rerouted_on_failure`]; recovery re-activates
+//!    the engine *cold*, charging `cold_load_ms` for every re-resident
+//!    model (drivers with a [`crate::lifecycle::ModelStore`] reload on
+//!    demand instead, which charges the same cost model). A *degraded*
+//!    engine keeps serving but is deprioritized by a routing-cost
+//!    penalty ([`ResilienceCfg::degraded_penalty_items`]) and becomes
+//!    hedge-eligible.
+//! 3. **Front door** — requests carry a per-model SLO class
+//!    (`latency_critical` vs cold-start-tolerant `bulk`,
+//!    [`SloClass`]); deadline-aware admission rejects a request whose
+//!    remaining budget cannot cover the best-case queue+batch(+cold)
+//!    estimate across its routable replicas; and a periodic hedge sweep
+//!    ([`ResilienceCfg::hedge_check_ms`], armed only while an engine is
+//!    degraded) speculatively re-dispatches requests stuck past their
+//!    class threshold on a degraded engine to the next-best replica.
+//!    First-completion-wins is decided analytically — both completion
+//!    estimates are computable in virtual time — with ties broken by
+//!    engine index ([`pick_hedge_target`]); the loser's copy is
+//!    cancelled eagerly, so no request is ever double-served.
+//!
+//! The shared [`Resilience`] helper is *embedded* in each driver
+//! (`res: Option<Resilience>`), not a wrapper driver: fault application
+//! and hedging need each driver's own routing/cascade machinery. When
+//! it is `None`, every fault hook is dead code and report bytes are
+//! untouched ([`ResilienceStats`] serializes only for fault runs).
+
+use crate::gpu::{ms_to_us, Us};
+use crate::profile::ModelProfile;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+/// What happened to an engine at a timeline point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// Engine fails: drains, queued requests re-route, unroutable until
+    /// the matching `Up` (plus its cold re-activation) completes.
+    Down,
+    /// Engine recovers — cold: re-resident models pay `cold_load_ms`.
+    Up,
+    /// Engine keeps serving at full speed in virtual time but is
+    /// deprioritized by routing and eligible for hedged re-dispatch
+    /// (the "doomed/slow replica" the hedge exists for).
+    Degraded,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Down => "engine_down",
+            FaultKind::Up => "engine_up",
+            FaultKind::Degraded => "engine_degraded",
+        }
+    }
+
+    /// Parse a config-file kind name.
+    pub fn from_name(s: &str) -> Option<FaultKind> {
+        match s {
+            "engine_down" | "down" => Some(FaultKind::Down),
+            "engine_up" | "up" => Some(FaultKind::Up),
+            "engine_degraded" | "degraded" => Some(FaultKind::Degraded),
+            _ => None,
+        }
+    }
+}
+
+/// One scripted or generated fault-timeline entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Virtual time (µs). Must be > 0 — the timeline exists before the
+    /// run starts, and driver events must be strictly future.
+    pub t: Us,
+    pub gpu: usize,
+    pub kind: FaultKind,
+}
+
+/// Per-model SLO class carried by the front door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloClass {
+    /// Default: tight hedge threshold, strict deadline admission.
+    LatencyCritical,
+    /// Cold-start-tolerant batch traffic: wide hedge threshold.
+    Bulk,
+}
+
+impl SloClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::LatencyCritical => "latency_critical",
+            SloClass::Bulk => "bulk",
+        }
+    }
+}
+
+/// Fault-injection + front-door configuration (the scenario `"faults"`
+/// block — see `docs/CONFIG.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceCfg {
+    /// Scripted timeline entries (merged with any generated ones).
+    pub events: Vec<FaultEvent>,
+    /// Mean time between failures per engine (ms); `0` disables the
+    /// generated down/up process (scripted events still apply).
+    pub mtbf_ms: f64,
+    /// Mean time to repair per engine (ms); used when `mtbf_ms > 0`.
+    pub mttr_ms: f64,
+    /// Seed of the MTBF/MTTR exponential processes (one independent
+    /// Pcg32 stream per GPU).
+    pub seed: u64,
+    /// Profile names served as [`SloClass::Bulk`]. A name matches
+    /// exactly, or as the base of a `{name}_{NN}` fleet clone
+    /// ([`crate::lifecycle::fleet_name`]).
+    pub bulk_models: Vec<String>,
+    /// Deadline-aware admission: reject on arrival when the remaining
+    /// deadline budget cannot cover the best-case service estimate.
+    pub admission: bool,
+    /// Re-route a downed engine's drained queue through the driver's
+    /// dispatch path. `false` = the naive baseline: drained requests
+    /// are rejected (counted, conservation holds).
+    pub reroute: bool,
+    /// Enable the hedged re-dispatch sweep on degraded engines.
+    pub hedge: bool,
+    /// Hedge sweep cadence (ms) while any engine is degraded.
+    pub hedge_check_ms: f64,
+    /// Stuck-age threshold for `latency_critical` requests (ms).
+    pub hedge_critical_ms: f64,
+    /// Stuck-age threshold for `bulk` requests (ms).
+    pub hedge_bulk_ms: f64,
+    /// Queue-items-equivalent cost added to a degraded replica in the
+    /// routing/hedge cost comparison (JSQ/P2C deprioritization; RR
+    /// ignores costs by design).
+    pub degraded_penalty_items: usize,
+}
+
+impl Default for ResilienceCfg {
+    fn default() -> Self {
+        ResilienceCfg {
+            events: Vec::new(),
+            mtbf_ms: 0.0,
+            mttr_ms: 500.0,
+            seed: 0,
+            bulk_models: Vec::new(),
+            admission: false,
+            reroute: true,
+            hedge: true,
+            hedge_check_ms: 50.0,
+            hedge_critical_ms: 20.0,
+            hedge_bulk_ms: 200.0,
+            degraded_penalty_items: 64,
+        }
+    }
+}
+
+impl ResilienceCfg {
+    /// Validate ranges; returns a message naming the offending field.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mtbf_ms < 0.0 || self.mtbf_ms.is_nan() {
+            return Err("faults.mtbf_ms must be >= 0".into());
+        }
+        if self.mtbf_ms > 0.0 && (self.mttr_ms <= 0.0 || self.mttr_ms.is_nan()) {
+            return Err("faults.mttr_ms must be > 0 when mtbf_ms > 0".into());
+        }
+        if self.hedge_check_ms <= 0.0 || self.hedge_check_ms.is_nan() {
+            return Err("faults.hedge_check_ms must be > 0".into());
+        }
+        if self.hedge_critical_ms < 0.0 || self.hedge_bulk_ms < 0.0 {
+            return Err("faults.hedge thresholds must be >= 0".into());
+        }
+        for e in &self.events {
+            if e.t == 0 {
+                return Err("faults.events times must be > 0".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// True when this config actually injects or changes anything — the
+    /// gate for attaching [`ResilienceStats`] to a report.
+    pub fn active(&self) -> bool {
+        !self.events.is_empty()
+            || self.mtbf_ms > 0.0
+            || !self.bulk_models.is_empty()
+            || self.admission
+    }
+}
+
+/// Engine health as the drivers see it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Up,
+    /// Serving but deprioritized and hedge-eligible.
+    Degraded,
+    /// Drained; unroutable.
+    Down,
+    /// Recovery announced (`Up` event seen) but the cold re-activation
+    /// has not matured yet; still unroutable.
+    Restoring,
+}
+
+/// Front-door telemetry attached to a fault run's
+/// [`crate::cluster::ClusterReport`] (`resilience` block, serialized
+/// only when a `"faults"` config is active).
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceStats {
+    /// Timeline entries applied (down + up + degraded).
+    pub fault_events: u64,
+    /// `engine_down` events applied.
+    pub engine_downs: u64,
+    /// Requests drained from a downed engine and successfully
+    /// re-dispatched elsewhere.
+    pub rerouted_on_failure: u64,
+    /// Stuck requests for which a hedge was fired (speculative
+    /// re-dispatch attempted).
+    pub hedges_fired: u64,
+    /// Hedges whose re-dispatched copy won first-completion (the
+    /// request actually moved; the stuck copy was cancelled).
+    pub hedges_won: u64,
+    /// Deadline-admission rejects of `latency_critical` requests.
+    pub deadline_rejects_critical: u64,
+    /// Deadline-admission rejects of `bulk` requests.
+    pub deadline_rejects_bulk: u64,
+    /// Requests rejected because every replica of their model was
+    /// down/draining (the zero-routable guard).
+    pub unroutable_rejects: u64,
+    /// Served-within-SLO throughput during cluster-unhealthy windows
+    /// (any engine not fully up), req/s over those windows.
+    pub degraded_goodput_rps: f64,
+    /// Engine-uptime integral: 100 × (1 − Σ downtime / (engines ×
+    /// horizon)). Degraded time counts as up; restore time as down.
+    pub availability_pct: f64,
+}
+
+impl ResilienceStats {
+    /// Deterministic JSON form (embedded in `ClusterReport::to_json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fault_events", Json::from(self.fault_events)),
+            ("engine_downs", Json::from(self.engine_downs)),
+            ("rerouted_on_failure", Json::from(self.rerouted_on_failure)),
+            ("hedges_fired", Json::from(self.hedges_fired)),
+            ("hedges_won", Json::from(self.hedges_won)),
+            ("deadline_rejects_critical", Json::from(self.deadline_rejects_critical)),
+            ("deadline_rejects_bulk", Json::from(self.deadline_rejects_bulk)),
+            ("unroutable_rejects", Json::from(self.unroutable_rejects)),
+            ("degraded_goodput_rps", Json::from(self.degraded_goodput_rps)),
+            ("availability_pct", Json::from(self.availability_pct)),
+        ])
+    }
+}
+
+/// Build the merged, sorted timeline (scripted events + the generated
+/// MTBF/MTTR process) and validate per-engine alternation: `Down` only
+/// from `Up`/`Degraded`, `Degraded` only from `Up`, `Up` only from
+/// `Down`/`Degraded`. Rejects out-of-range GPU indices.
+pub fn build_timeline(
+    cfg: &ResilienceCfg,
+    n_gpus: usize,
+    horizon: Us,
+) -> Result<Vec<FaultEvent>, String> {
+    cfg.validate()?;
+    let mut timeline = cfg.events.clone();
+    if cfg.mtbf_ms > 0.0 {
+        for g in 0..n_gpus {
+            // One independent stream per engine: fleet size changes do
+            // not reshuffle other engines' fault histories.
+            let mut rng = Pcg32::new(cfg.seed, 0xFA17 + g as u64);
+            let mut t: Us = 0;
+            loop {
+                t += exp_us(&mut rng, cfg.mtbf_ms);
+                if t >= horizon {
+                    break;
+                }
+                timeline.push(FaultEvent { t, gpu: g, kind: FaultKind::Down });
+                t += exp_us(&mut rng, cfg.mttr_ms);
+                if t >= horizon {
+                    break; // stays down through the horizon
+                }
+                timeline.push(FaultEvent { t, gpu: g, kind: FaultKind::Up });
+            }
+        }
+    }
+    timeline.sort_by_key(|e| (e.t, e.gpu, e.kind));
+    // Alternation check: replay the health machine per engine.
+    let mut state = vec![Health::Up; n_gpus];
+    for e in &timeline {
+        if e.gpu >= n_gpus {
+            return Err(format!(
+                "faults.events: gpu {} out of range (cluster has {n_gpus})",
+                e.gpu
+            ));
+        }
+        let s = state[e.gpu];
+        let ok = match e.kind {
+            FaultKind::Down => matches!(s, Health::Up | Health::Degraded),
+            FaultKind::Degraded => s == Health::Up,
+            FaultKind::Up => matches!(s, Health::Down | Health::Degraded),
+        };
+        if !ok {
+            return Err(format!(
+                "faults.events: {} on gpu {} at t = {} µs while engine is {s:?}",
+                e.kind.name(),
+                e.gpu,
+                e.t
+            ));
+        }
+        state[e.gpu] = match e.kind {
+            FaultKind::Down => Health::Down,
+            FaultKind::Degraded => Health::Degraded,
+            FaultKind::Up => Health::Up,
+        };
+    }
+    Ok(timeline)
+}
+
+/// Exponential inter-event gap in µs with the given mean (ms), floored
+/// at 1 µs so consecutive events never collapse onto one instant.
+fn exp_us(rng: &mut Pcg32, mean_ms: f64) -> Us {
+    let u = 1.0 - rng.f64(); // (0, 1]: ln never sees 0
+    ms_to_us(-mean_ms * u.ln()).max(1)
+}
+
+/// First-completion-wins: among `candidates` (each a `(est_us, gpu)`
+/// completion estimate for the hedged copy), return the GPU of the
+/// strict lexicographic minimum *iff* it beats the stuck copy's
+/// `source` estimate — ties broken by lower engine index, so the
+/// decision is total and deterministic. `None` = the stuck copy wins;
+/// the hedge is cancelled and the request stays put.
+pub fn pick_hedge_target(source: (Us, usize), candidates: &[(Us, usize)]) -> Option<usize> {
+    let best = candidates.iter().min()?;
+    if *best < source {
+        Some(best.1)
+    } else {
+        None
+    }
+}
+
+/// Best-case service estimate (µs) for one replica: the queue ahead
+/// plus one full batch, at the replica's calibrated capacity. The
+/// admission check and the hedge comparison both build on this.
+pub fn queue_est_us(backlog_items: usize, batch: u32, capacity_rps: f64) -> Us {
+    if capacity_rps <= 0.0 {
+        return Us::MAX / 4;
+    }
+    (((backlog_items as f64 + batch as f64) / capacity_rps) * 1e6).ceil() as Us
+}
+
+/// Served-in-SLO rate over the cluster-unhealthy windows: completions
+/// `(t_done, in_slo)` falling inside any window, divided by the total
+/// window duration. `0` when no window opened.
+pub fn degraded_goodput_rps(
+    windows: &[(Us, Us)],
+    completions: impl Iterator<Item = (Us, bool)>,
+) -> f64 {
+    let total_us: Us = windows.iter().map(|(a, b)| b.saturating_sub(*a)).sum();
+    if total_us == 0 {
+        return 0.0;
+    }
+    let mut served = 0u64;
+    for (t, in_slo) in completions {
+        if in_slo && windows.iter().any(|&(a, b)| t >= a && t < b) {
+            served += 1;
+        }
+    }
+    served as f64 / (total_us as f64 / 1e6)
+}
+
+/// The per-run fault/front-door state machine every driver embeds as
+/// `res: Option<Resilience>`. All mutation happens at driver-event
+/// barriers (fault application, restore maturation, hedge cadence), so
+/// the sparse execution core's global sync at driver events keeps the
+/// whole layer byte-identical across exec modes and thread counts.
+#[derive(Debug)]
+pub struct Resilience {
+    pub cfg: ResilienceCfg,
+    timeline: Vec<FaultEvent>,
+    cursor: usize,
+    health: Vec<Health>,
+    /// Per-model bulk class (resolved once against profile names).
+    bulk: Vec<bool>,
+    /// gpu → virtual time its cold re-activation matures.
+    restore_at: BTreeMap<usize, Us>,
+    /// Next hedge sweep; armed only while an engine is degraded.
+    next_hedge: Option<Us>,
+    down_since: Vec<Option<Us>>,
+    downtime_us: Vec<Us>,
+    /// Open cluster-unhealthy window start (any engine not `Up`).
+    unhealthy_since: Option<Us>,
+    /// Closed cluster-unhealthy windows, in order.
+    pub unhealthy_windows: Vec<(Us, Us)>,
+    pub stats: ResilienceStats,
+}
+
+impl Resilience {
+    /// Build the runtime: timeline (validated), per-model class table,
+    /// all engines healthy.
+    pub fn new(
+        cfg: ResilienceCfg,
+        profiles: &[ModelProfile],
+        n_gpus: usize,
+        horizon: Us,
+    ) -> Result<Resilience, String> {
+        let timeline = build_timeline(&cfg, n_gpus, horizon)?;
+        let bulk = profiles.iter().map(|p| is_bulk_name(&cfg.bulk_models, &p.name)).collect();
+        Ok(Resilience {
+            cfg,
+            timeline,
+            cursor: 0,
+            health: vec![Health::Up; n_gpus],
+            bulk,
+            restore_at: BTreeMap::new(),
+            next_hedge: None,
+            down_since: vec![None; n_gpus],
+            downtime_us: vec![0; n_gpus],
+            unhealthy_since: None,
+            unhealthy_windows: Vec::new(),
+            stats: ResilienceStats::default(),
+        })
+    }
+
+    pub fn class(&self, model: usize) -> SloClass {
+        if self.bulk.get(model).copied().unwrap_or(false) {
+            SloClass::Bulk
+        } else {
+            SloClass::LatencyCritical
+        }
+    }
+
+    /// Stuck-age threshold (µs) for `model`'s class.
+    pub fn hedge_threshold_us(&self, model: usize) -> Us {
+        let ms = match self.class(model) {
+            SloClass::LatencyCritical => self.cfg.hedge_critical_ms,
+            SloClass::Bulk => self.cfg.hedge_bulk_ms,
+        };
+        ms_to_us(ms).max(1)
+    }
+
+    pub fn health(&self, g: usize) -> Health {
+        self.health[g]
+    }
+
+    /// Can the router send traffic to engine `g` right now?
+    pub fn routable(&self, g: usize) -> bool {
+        matches!(self.health[g], Health::Up | Health::Degraded)
+    }
+
+    pub fn degraded(&self, g: usize) -> bool {
+        self.health[g] == Health::Degraded
+    }
+
+    /// True while engine `g` awaits its cold re-activation — the
+    /// driver's cue (after [`Self::due_faults`] returned an `Up` event)
+    /// that a restore must be scheduled; a `Degraded` engine recovers in
+    /// place and never enters this state.
+    pub fn restoring(&self, g: usize) -> bool {
+        self.health[g] == Health::Restoring
+    }
+
+    /// Any engine currently unroutable? (Gates the replica-filter
+    /// allocation on the routing hot path.)
+    pub fn any_unroutable(&self) -> bool {
+        self.health.iter().any(|h| matches!(h, Health::Down | Health::Restoring))
+    }
+
+    pub fn any_degraded(&self) -> bool {
+        self.health.iter().any(|&h| h == Health::Degraded)
+    }
+
+    /// Degraded-replica cost penalty in queue-items units.
+    pub fn penalty_items(&self, g: usize) -> usize {
+        if self.degraded(g) {
+            self.cfg.degraded_penalty_items
+        } else {
+            0
+        }
+    }
+
+    /// Earliest pending fault / restore / hedge time — merged into the
+    /// embedding driver's `next_event`.
+    pub fn next_event(&self) -> Option<Us> {
+        let t_fault = self.timeline.get(self.cursor).map(|e| e.t);
+        let t_restore = self.restore_at.values().min().copied();
+        [t_fault, t_restore, self.next_hedge].into_iter().flatten().min()
+    }
+
+    /// Pop timeline entries due at `t`, applying health transitions and
+    /// availability accounting. The caller (a driver, at its barrier)
+    /// performs the engine-side effects per returned event: drain on
+    /// `Down`, schedule/perform the cold re-activation on `Up`.
+    pub fn due_faults(&mut self, t: Us) -> Vec<FaultEvent> {
+        let mut due = Vec::new();
+        while let Some(&e) = self.timeline.get(self.cursor) {
+            if e.t > t {
+                break;
+            }
+            self.cursor += 1;
+            self.stats.fault_events += 1;
+            match e.kind {
+                FaultKind::Down => {
+                    self.stats.engine_downs += 1;
+                    self.health[e.gpu] = Health::Down;
+                    self.down_since[e.gpu].get_or_insert(e.t);
+                    self.restore_at.remove(&e.gpu); // re-failed mid-restore
+                    self.open_window(e.t);
+                }
+                FaultKind::Degraded => {
+                    self.health[e.gpu] = Health::Degraded;
+                    self.open_window(e.t);
+                }
+                FaultKind::Up => {
+                    if self.health[e.gpu] == Health::Degraded {
+                        // Recovery in place: nothing was drained, no
+                        // cold re-activation owed.
+                        self.health[e.gpu] = Health::Up;
+                        self.close_window_if_healthy(e.t);
+                    } else {
+                        // Unroutable until the driver's restore matures;
+                        // the driver either schedules one or marks
+                        // restored now ([`Self::restoring`] tells it
+                        // which case this is).
+                        self.health[e.gpu] = Health::Restoring;
+                    }
+                }
+            }
+            due.push(e);
+        }
+        self.rearm_hedge(t);
+        due
+    }
+
+    /// Register the cold re-activation of engine `g` maturing at `at`.
+    pub fn schedule_restore(&mut self, g: usize, at: Us) {
+        debug_assert_eq!(self.health[g], Health::Restoring);
+        self.restore_at.insert(g, at);
+    }
+
+    /// Restores due at `t` (the embedding driver re-activates the
+    /// engine's models, then calls [`Self::mark_restored`]).
+    pub fn due_restores(&mut self, t: Us) -> Vec<usize> {
+        let due: Vec<usize> =
+            self.restore_at.iter().filter(|&(_, &at)| at <= t).map(|(&g, _)| g).collect();
+        for g in &due {
+            self.restore_at.remove(g);
+        }
+        due
+    }
+
+    /// Engine `g` is fully back: routable, downtime closed.
+    pub fn mark_restored(&mut self, g: usize, t: Us) {
+        self.health[g] = Health::Up;
+        if let Some(since) = self.down_since[g].take() {
+            self.downtime_us[g] += t.saturating_sub(since);
+        }
+        self.close_window_if_healthy(t);
+        self.rearm_hedge(t);
+    }
+
+    /// Is a hedge sweep due at `t`? Advances the cadence when it fires;
+    /// disarms when no engine is degraded anymore.
+    pub fn hedge_due(&mut self, t: Us) -> bool {
+        if !self.cfg.hedge || !self.any_degraded() {
+            self.next_hedge = None;
+            return false;
+        }
+        match self.next_hedge {
+            Some(h) if h <= t => {
+                self.next_hedge = Some(t + ms_to_us(self.cfg.hedge_check_ms).max(1));
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn rearm_hedge(&mut self, t: Us) {
+        if self.cfg.hedge && self.any_degraded() {
+            if self.next_hedge.is_none() {
+                self.next_hedge = Some(t + ms_to_us(self.cfg.hedge_check_ms).max(1));
+            }
+        } else {
+            self.next_hedge = None;
+        }
+    }
+
+    fn open_window(&mut self, t: Us) {
+        self.unhealthy_since.get_or_insert(t);
+    }
+
+    fn close_window_if_healthy(&mut self, t: Us) {
+        if self.health.iter().all(|&h| h == Health::Up) {
+            if let Some(since) = self.unhealthy_since.take() {
+                if t > since {
+                    self.unhealthy_windows.push((since, t));
+                }
+            }
+        }
+    }
+
+    pub fn note_reroute(&mut self, n: u64) {
+        self.stats.rerouted_on_failure += n;
+    }
+
+    pub fn note_unroutable(&mut self) {
+        self.stats.unroutable_rejects += 1;
+    }
+
+    pub fn note_deadline_reject(&mut self, model: usize) {
+        match self.class(model) {
+            SloClass::LatencyCritical => self.stats.deadline_rejects_critical += 1,
+            SloClass::Bulk => self.stats.deadline_rejects_bulk += 1,
+        }
+    }
+
+    pub fn note_hedges(&mut self, fired: u64, won: u64) {
+        self.stats.hedges_fired += fired;
+        self.stats.hedges_won += won;
+    }
+
+    /// Close open windows/downtime at the horizon and fill the derived
+    /// stats. `completions` feeds the degraded-window goodput.
+    pub fn finalize(
+        &mut self,
+        horizon: Us,
+        completions: impl Iterator<Item = (Us, bool)>,
+    ) -> ResilienceStats {
+        for g in 0..self.health.len() {
+            if let Some(since) = self.down_since[g].take() {
+                self.downtime_us[g] += horizon.saturating_sub(since);
+            }
+        }
+        if let Some(since) = self.unhealthy_since.take() {
+            if horizon > since {
+                self.unhealthy_windows.push((since, horizon));
+            }
+        }
+        let total_down: Us = self.downtime_us.iter().sum();
+        let span = self.health.len() as f64 * horizon as f64;
+        self.stats.availability_pct =
+            if span > 0.0 { 100.0 * (1.0 - total_down as f64 / span) } else { 100.0 };
+        self.stats.degraded_goodput_rps =
+            degraded_goodput_rps(&self.unhealthy_windows, completions);
+        self.stats.clone()
+    }
+}
+
+/// Does `name` belong to the bulk class? Matches an entry exactly or as
+/// the base of a `{entry}_{NN}` fleet clone.
+fn is_bulk_name(bulk_models: &[String], name: &str) -> bool {
+    bulk_models.iter().any(|b| {
+        name == b
+            || name
+                .strip_prefix(b.as_str())
+                .and_then(|rest| rest.strip_prefix('_'))
+                .is_some_and(|d| !d.is_empty() && d.chars().all(|c| c.is_ascii_digit()))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profiles(names: &[&str]) -> Vec<ModelProfile> {
+        names
+            .iter()
+            .map(|n| {
+                let mut p = crate::profile::zoo()[0].clone();
+                p.name = (*n).to_string();
+                p
+            })
+            .collect()
+    }
+
+    fn ev(t: Us, gpu: usize, kind: FaultKind) -> FaultEvent {
+        FaultEvent { t, gpu, kind }
+    }
+
+    #[test]
+    fn timeline_sorts_and_validates_alternation() {
+        let cfg = ResilienceCfg {
+            events: vec![
+                ev(500_000, 1, FaultKind::Up),
+                ev(100_000, 1, FaultKind::Down),
+                ev(200_000, 0, FaultKind::Degraded),
+            ],
+            ..Default::default()
+        };
+        let tl = build_timeline(&cfg, 2, 1_000_000).expect("valid alternation");
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl[0].t, 100_000);
+        assert_eq!(tl[2].kind, FaultKind::Up);
+        // Up without a preceding Down rejects.
+        let bad = ResilienceCfg {
+            events: vec![ev(100, 0, FaultKind::Up)],
+            ..Default::default()
+        };
+        assert!(build_timeline(&bad, 2, 1_000_000).is_err());
+        // Double-down rejects.
+        let bad2 = ResilienceCfg {
+            events: vec![ev(100, 0, FaultKind::Down), ev(200, 0, FaultKind::Down)],
+            ..Default::default()
+        };
+        assert!(build_timeline(&bad2, 2, 1_000_000).is_err());
+        // Out-of-range GPU rejects.
+        let bad3 = ResilienceCfg {
+            events: vec![ev(100, 5, FaultKind::Down)],
+            ..Default::default()
+        };
+        assert!(build_timeline(&bad3, 2, 1_000_000).is_err());
+        // t = 0 rejects (driver events must be strictly future).
+        let bad4 = ResilienceCfg {
+            events: vec![ev(0, 0, FaultKind::Down)],
+            ..Default::default()
+        };
+        assert!(build_timeline(&bad4, 2, 1_000_000).is_err());
+    }
+
+    #[test]
+    fn mtbf_generation_is_seeded_and_alternates() {
+        let cfg = ResilienceCfg { mtbf_ms: 300.0, mttr_ms: 100.0, seed: 9, ..Default::default() };
+        let a = build_timeline(&cfg, 3, ms_to_us(5_000.0)).unwrap();
+        let b = build_timeline(&cfg, 3, ms_to_us(5_000.0)).unwrap();
+        assert_eq!(a, b, "same seed ⇒ same generated timeline");
+        assert!(!a.is_empty(), "5 s at 300 ms MTBF must generate failures");
+        let other = ResilienceCfg { seed: 10, ..cfg.clone() };
+        assert_ne!(a, build_timeline(&other, 3, ms_to_us(5_000.0)).unwrap());
+        // Per-GPU independence: dropping to 2 GPUs leaves gpu 0/1
+        // histories untouched.
+        let two = build_timeline(&cfg, 2, ms_to_us(5_000.0)).unwrap();
+        let first_two: Vec<FaultEvent> = a.iter().filter(|e| e.gpu < 2).copied().collect();
+        assert_eq!(two, first_two);
+    }
+
+    #[test]
+    fn class_resolution_matches_fleet_clones() {
+        let cfg = ResilienceCfg {
+            bulk_models: vec!["resnet50".into()],
+            ..Default::default()
+        };
+        let ps = profiles(&["mobilenet", "resnet50", "resnet50_07", "resnet50x"]);
+        let r = Resilience::new(cfg, &ps, 1, 1_000).unwrap();
+        assert_eq!(r.class(0), SloClass::LatencyCritical);
+        assert_eq!(r.class(1), SloClass::Bulk);
+        assert_eq!(r.class(2), SloClass::Bulk, "fleet clone inherits the base class");
+        assert_eq!(r.class(3), SloClass::LatencyCritical, "prefix without _NN is distinct");
+        assert!(r.hedge_threshold_us(1) > r.hedge_threshold_us(0));
+    }
+
+    #[test]
+    fn hedge_target_ties_break_by_engine_index() {
+        // Strictly better estimate wins.
+        assert_eq!(pick_hedge_target((1_000, 2), &[(900, 3)]), Some(3));
+        // Equal estimate: lower engine index wins.
+        assert_eq!(pick_hedge_target((1_000, 2), &[(1_000, 1)]), Some(1));
+        assert_eq!(pick_hedge_target((1_000, 2), &[(1_000, 3)]), None);
+        // Among targets, min (est, gpu) is chosen.
+        assert_eq!(
+            pick_hedge_target((1_000, 0), &[(900, 3), (900, 1), (950, 2)]),
+            Some(1)
+        );
+        assert_eq!(pick_hedge_target((100, 0), &[]), None);
+    }
+
+    #[test]
+    fn health_machine_counts_downtime_and_windows() {
+        let cfg = ResilienceCfg {
+            events: vec![
+                ev(100, 0, FaultKind::Down),
+                ev(300, 0, FaultKind::Up),
+                ev(600, 1, FaultKind::Degraded),
+            ],
+            ..Default::default()
+        };
+        let ps = profiles(&["m"]);
+        let mut r = Resilience::new(cfg, &ps, 2, 1_000).unwrap();
+        assert_eq!(r.next_event(), Some(100));
+        let due = r.due_faults(100);
+        assert_eq!(due.len(), 1);
+        assert!(!r.routable(0));
+        assert!(r.any_unroutable());
+        let due = r.due_faults(300);
+        assert_eq!(due[0].kind, FaultKind::Up);
+        assert_eq!(r.health(0), Health::Restoring);
+        assert!(!r.routable(0), "restoring engines stay unroutable");
+        r.schedule_restore(0, 450);
+        assert_eq!(r.next_event(), Some(450));
+        assert_eq!(r.due_restores(450), vec![0]);
+        r.mark_restored(0, 450);
+        assert!(r.routable(0));
+        // Degraded at 600: routable but penalized, hedge armed.
+        r.due_faults(600);
+        assert!(r.routable(1));
+        assert!(r.degraded(1));
+        assert!(r.penalty_items(1) > 0);
+        assert_eq!(r.penalty_items(0), 0);
+        assert!(r.next_event().is_some(), "hedge cadence armed");
+        assert!(!r.hedge_due(600), "first sweep is one cadence after arming");
+        let h = r.next_event().unwrap();
+        assert!(r.hedge_due(h));
+        let stats = r.finalize(1_000, std::iter::empty());
+        assert_eq!(stats.fault_events, 3);
+        assert_eq!(stats.engine_downs, 1);
+        // Downtime: gpu 0 down 100→450 of a 2 × 1000 span.
+        let expect = 100.0 * (1.0 - 350.0 / 2_000.0);
+        assert!((stats.availability_pct - expect).abs() < 1e-9, "{}", stats.availability_pct);
+        // Unhealthy windows: [100, 450) then [600, 1000).
+        assert_eq!(r.unhealthy_windows, vec![(100, 450), (600, 1_000)]);
+    }
+
+    #[test]
+    fn degraded_engine_recovers_in_place() {
+        let cfg = ResilienceCfg {
+            events: vec![ev(100, 0, FaultKind::Degraded), ev(400, 0, FaultKind::Up)],
+            ..Default::default()
+        };
+        let ps = profiles(&["m"]);
+        let mut r = Resilience::new(cfg, &ps, 1, 1_000).unwrap();
+        r.due_faults(100);
+        assert!(r.degraded(0));
+        let due = r.due_faults(400);
+        assert_eq!(due[0].kind, FaultKind::Up);
+        assert!(!r.restoring(0), "degraded recovery owes no cold restore");
+        assert!(r.routable(0));
+        let stats = r.finalize(1_000, std::iter::empty());
+        assert!((stats.availability_pct - 100.0).abs() < 1e-9, "degraded counts as up");
+        assert_eq!(r.unhealthy_windows, vec![(100, 400)]);
+    }
+
+    #[test]
+    fn degraded_goodput_counts_in_window_slo_completions() {
+        let windows = vec![(100, 200), (400, 500)];
+        // 2 in-window in-SLO, 1 in-window miss, 1 out-of-window.
+        let comps = vec![(150, true), (450, true), (120, false), (300, true)];
+        let g = degraded_goodput_rps(&windows, comps.into_iter());
+        // 2 served over 200 µs = 10⁴ req/s.
+        assert!((g - 10_000.0).abs() < 1e-6, "{g}");
+        assert_eq!(degraded_goodput_rps(&[], std::iter::empty()), 0.0);
+    }
+
+    #[test]
+    fn queue_estimates_scale_with_backlog() {
+        assert!(queue_est_us(10, 4, 100.0) > queue_est_us(2, 4, 100.0));
+        assert_eq!(queue_est_us(6, 4, 100.0), 100_000);
+        assert!(queue_est_us(1, 1, 0.0) > 1_000_000_000, "zero capacity ⇒ effectively never");
+    }
+
+    #[test]
+    fn cfg_validation_and_activity() {
+        assert!(ResilienceCfg::default().validate().is_ok());
+        assert!(!ResilienceCfg::default().active());
+        assert!(ResilienceCfg { mtbf_ms: -1.0, ..Default::default() }.validate().is_err());
+        assert!(ResilienceCfg { mtbf_ms: 100.0, mttr_ms: 0.0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ResilienceCfg { hedge_check_ms: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ResilienceCfg { mtbf_ms: 100.0, ..Default::default() }.active());
+        assert!(ResilienceCfg { admission: true, ..Default::default() }.active());
+        assert!(
+            ResilienceCfg { bulk_models: vec!["x".into()], ..Default::default() }.active()
+        );
+    }
+}

@@ -1043,6 +1043,114 @@ pub fn fig17_with_artifacts() -> (FigData, String, String) {
     (out, trace, series)
 }
 
+/// Fig. 18 (beyond the paper): the resilience timeline through an
+/// engine-failure cycle — the canonical 24-model long-tail fleet on
+/// 2×V100 with a scripted degrade→down→up timeline on GPU 1, served
+/// twice: once behind the resilient front door (cascade re-route of
+/// the drained queue + hedged re-dispatch off the degraded engine)
+/// and once naive (drained requests rejected, no hedging). One row
+/// per virtual-time window: goodput (served-in-SLO) and p99 for each
+/// variant side by side, plus how many engines were down. The outage
+/// window shows the hedged run holding goodput while the naive run
+/// sheds its share; recovery converges both.
+pub fn fig18() -> FigData {
+    use crate::cluster::{ExecOpts, GpuSched, PlacementPolicy, RoutingPolicy};
+    use crate::faults::{FaultEvent, FaultKind, ResilienceCfg};
+    use crate::gpu::ms_to_us;
+    use crate::lifecycle::{
+        longtail_gpus, longtail_workload, serve_longtail_stream_faults, LifecycleCfg,
+    };
+    use crate::obs::ObsCfg;
+    use crate::workload::MaterializedStream;
+    let horizon_ms = 6_000.0;
+    let seed = 42;
+    let (down_ms, up_ms) = (2_500.0, 4_000.0);
+    let (profiles, rates, reqs) = longtail_workload(24, 1.1, 600.0, horizon_ms, seed);
+    let gpus = longtail_gpus();
+    let lcfg = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
+    let events = vec![
+        FaultEvent { t: ms_to_us(1_500.0), gpu: 1, kind: FaultKind::Degraded },
+        FaultEvent { t: ms_to_us(down_ms), gpu: 1, kind: FaultKind::Down },
+        FaultEvent { t: ms_to_us(up_ms), gpu: 1, kind: FaultKind::Up },
+    ];
+    let opts = ExecOpts {
+        obs: ObsCfg { timeseries: true, ..Default::default() },
+        ..Default::default()
+    };
+    let run = |fcfg: &ResilienceCfg| {
+        serve_longtail_stream_faults(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &lcfg,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            horizon_ms,
+            seed,
+            opts,
+            Some(fcfg),
+        )
+    };
+    let hedged = run(&ResilienceCfg { events: events.clone(), ..Default::default() });
+    let naive = run(&ResilienceCfg {
+        events,
+        reroute: false,
+        hedge: false,
+        ..Default::default()
+    });
+    // Per-window goodput (served − SLO misses), p99 and miss count.
+    let summarize = |rep: &crate::cluster::ClusterReport| {
+        let obs = rep.obs.as_ref().expect("recorder was enabled");
+        let p99 = obs.per_window_p99();
+        (0..obs.n_windows())
+            .map(|i| {
+                let (mut served, mut miss) = (0u64, 0u64);
+                for l in &obs.lanes {
+                    if let Some(w) = l.windows.get(i) {
+                        served += w.served;
+                        miss += w.slo_miss;
+                    }
+                }
+                (served.saturating_sub(miss), p99[i], miss)
+            })
+            .collect::<Vec<_>>()
+    };
+    let (h, n) = (summarize(&hedged), summarize(&naive));
+    let wus = hedged.obs.as_ref().expect("recorder was enabled").cfg.window_us;
+    let mut out = FigData::new(
+        "fig18",
+        "engine-failure timeline: goodput + p99, hedged front door vs naive (24 models, 2xV100)",
+        &[
+            "t0_ms",
+            "goodput_hedged",
+            "goodput_naive",
+            "p99_hedged_ms",
+            "p99_naive_ms",
+            "miss_hedged",
+            "miss_naive",
+            "engines_down",
+        ],
+    );
+    for i in 0..h.len().min(n.len()) {
+        let t0 = i as crate::gpu::Us * wus;
+        let engines_down =
+            u64::from(t0 >= ms_to_us(down_ms) && t0 < ms_to_us(up_ms));
+        out.push(vec![
+            (t0 / 1_000).to_string(),
+            h[i].0.to_string(),
+            n[i].0.to_string(),
+            f(h[i].1),
+            f(n[i].1),
+            h[i].2.to_string(),
+            n[i].2.to_string(),
+            engines_down.to_string(),
+        ]);
+    }
+    out
+}
+
 /// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
 pub fn generate(which: &str) -> Vec<FigData> {
     match which {
@@ -1066,6 +1174,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
         "15" | "unified" => vec![fig15()],
         "16" | "streaming" => vec![fig_streaming()],
         "17" | "obs" | "timeline" => vec![fig17()],
+        "18" | "resilience" | "failure" => vec![fig18()],
         "tables" => vec![table1(), table2(), table3(), table6()],
         "ablation" => vec![ablation()],
         "all" => {
@@ -1089,6 +1198,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
                 fig15(),
                 fig_streaming(),
                 fig17(),
+                fig18(),
             ];
             v.extend([table1(), table2(), table3(), table6()]);
             v

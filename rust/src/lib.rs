@@ -26,6 +26,7 @@ pub mod cluster;
 pub mod config;
 pub mod controlplane;
 pub mod coordinator;
+pub mod faults;
 pub mod figures;
 pub mod gpu;
 pub mod lifecycle;

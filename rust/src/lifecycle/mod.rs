@@ -53,9 +53,10 @@ use crate::cluster::{
     Router, RoutingPolicy,
 };
 use crate::cluster::p99_of;
+use crate::faults::{pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg};
 use crate::gpu::{ms_to_us, us_to_ms, ReconfigModel, Us};
 use crate::metrics::RunReport;
-use crate::obs::{EngineObs, EventKind, ObsReport, Recorder};
+use crate::obs::{EngineObs, EventKind, ObsReport, Recorder, NO_MODEL};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::json::Json;
@@ -373,6 +374,10 @@ struct LifecycleDriver<'a> {
     /// empty between requests; hoisted so the routing hot path does not
     /// allocate per request).
     scratch: VecDeque<(usize, Request)>,
+    /// Fault timeline + SLO-class front door ([`crate::faults`]);
+    /// `None` outside fault scenarios (zero overhead, golden shapes
+    /// untouched).
+    res: Option<Resilience>,
     /// Control-lane recorder: arrive/route/reject plus
     /// eviction/cold-load/scale-to-zero events and warm-set levels.
     obs: Recorder,
@@ -392,21 +397,44 @@ impl LifecycleDriver<'_> {
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
     ) {
-        let reps: &[Replica] = &self.plan.placement.replicas[model];
-        if reps.is_empty() {
+        let all: &[Replica] = &self.plan.placement.replicas[model];
+        if all.is_empty() {
             self.rejected[model] += 1;
             if self.obs.on() {
                 self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
             }
             return;
         }
+        // Health filter: downed engines drop out of the candidate set.
+        // The clone only happens while some engine is unroutable — the
+        // no-fault hot path stays allocation-free.
+        let filtered: Vec<Replica>;
+        let reps: &[Replica] = match self.res.as_ref() {
+            Some(res) if res.any_unroutable() => {
+                filtered = all.iter().filter(|r| res.routable(r.gpu)).cloned().collect();
+                &filtered
+            }
+            _ => all,
+        };
+        if reps.is_empty() {
+            // Placed, but every hosting engine is down right now.
+            self.rejected[model] += 1;
+            self.res.as_mut().expect("unroutable without resilience").note_unroutable();
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, t, model as u32, req.id, 0);
+            }
+            return;
+        }
         let cache = &mut self.cache;
+        let res = self.res.as_ref();
         let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
         let (cfg, profiles) = (self.cfg, self.profiles);
         let pick = self.router.route(model, reps, |rep| {
             let backlog = cache.backlog(engines, rep);
             let parked = held.get(&(rep.gpu, model)).map_or(0, |v| v.len());
-            let base = backlog.saturating_add(parked);
+            let base = backlog
+                .saturating_add(parked)
+                .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)));
             if !cfg.warm_routing || stores[rep.gpu].is_warm(model) {
                 return base;
             }
@@ -528,6 +556,197 @@ impl LifecycleDriver<'_> {
             })
         })
     }
+
+    /// Apply every fault-timeline event due at `t`, then run the hedge
+    /// sweep if its cadence tick is due. Called at the head of every
+    /// barrier — driver events surface the timeline's instants, so the
+    /// schedule lands on the same virtual-time barriers regardless of
+    /// exec mode or thread count.
+    fn apply_faults(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        let due = match self.res.as_mut() {
+            Some(r) => r.due_faults(t),
+            None => return,
+        };
+        for e in due {
+            match e.kind {
+                FaultKind::Down => self.on_down(t, e.gpu, engines, touched),
+                FaultKind::Degraded => {
+                    if self.obs.on() {
+                        self.obs.event(EventKind::EngineDown, t, NO_MODEL, e.gpu as u64, 1);
+                    }
+                }
+                FaultKind::Up => {
+                    // ModelStore drivers recover *on demand*: the engine
+                    // is routable again immediately, and every model
+                    // faults back in through the ordinary cold-start
+                    // path — the same §3.2 cost model the eager-restore
+                    // drivers charge up front, paid lazily per model.
+                    let res = self.res.as_mut().expect("fault event without resilience");
+                    if res.restoring(e.gpu) {
+                        res.mark_restored(e.gpu, t);
+                    }
+                    if self.obs.on() {
+                        self.obs.event(EventKind::EngineUp, t, NO_MODEL, e.gpu as u64, 0);
+                    }
+                }
+            }
+        }
+        if self.res.as_ref().is_some_and(|r| r.hedge_due(t)) {
+            self.hedge_sweep(t, engines, touched);
+        }
+    }
+
+    /// Hard engine failure: the serving process and its device memory
+    /// are gone. Drain every active slot, cancel in-flight weight
+    /// uploads (their parked requests join the drained queues), wipe
+    /// the store, and cascade the orphans through the ordinary
+    /// dispatch path — they may fault their models in elsewhere. With
+    /// rerouting disabled (the naive baseline) the orphans are plain
+    /// rejects instead.
+    fn on_down(&mut self, t: Us, g: usize, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        if self.obs.on() {
+            self.obs.event(EventKind::EngineDown, t, NO_MODEL, g as u64, 0);
+        }
+        let mut orphans: Vec<(usize, Request)> = Vec::new();
+        if let Some(engine) = engines[g].as_mut() {
+            let mut drained_any = false;
+            for (local, &global) in self.plan.placement.hosted[g].iter().enumerate() {
+                if !engine.sim.is_active(local) {
+                    continue; // tombstone (cold / scaled to zero) — nothing queued
+                }
+                for r in engine.sim.deactivate_model(local) {
+                    orphans.push((global, r));
+                }
+                self.cache.invalidate(g, local);
+                drained_any = true;
+            }
+            if drained_any {
+                engine.rebuild_policy(self.sched);
+            }
+            touched.mark(g);
+        }
+        let dead_loads: Vec<(usize, usize)> =
+            self.loading.keys().filter(|k| k.0 == g).copied().collect();
+        for key in dead_loads {
+            self.loading.remove(&key);
+            for r in self.held.remove(&key).unwrap_or_default() {
+                orphans.push((key.1, r));
+            }
+        }
+        self.stores[g].crash();
+        if self.obs.on() {
+            self.obs.warm_level(g, t, 0);
+        }
+        let reroute = self.res.as_ref().is_none_or(|r| r.cfg.reroute);
+        if reroute {
+            let n = orphans.len() as u64;
+            let mut work = std::mem::take(&mut self.scratch);
+            debug_assert!(work.is_empty());
+            for (m, mut r) in orphans {
+                r.model = m;
+                work.push_back((m, r));
+            }
+            while let Some((m, q)) = work.pop_front() {
+                self.dispatch(t, m, q, &mut work, engines, touched);
+            }
+            self.scratch = work;
+            if let Some(res) = self.res.as_mut() {
+                res.note_reroute(n);
+            }
+        } else {
+            for (m, r) in orphans {
+                self.rejected[m] += 1;
+                if self.obs.on() {
+                    self.obs.event(EventKind::Reject, t, m as u32, r.id, 0);
+                }
+            }
+        }
+    }
+
+    /// Hedged re-dispatch off degraded engines: requests queued past
+    /// their SLO class's threshold move to the analytically best *warm*,
+    /// healthy peer replica when its estimate strictly beats the source
+    /// (ties to the lower engine index — [`pick_hedge_target`]). The
+    /// sim is work-conserving, so moving the stuck queue prefix *is*
+    /// first-completion-wins with the losing copy cancelled eagerly.
+    fn hedge_sweep(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        for g in 0..engines.len() {
+            if !self.res.as_ref().is_some_and(|r| r.degraded(g)) || engines[g].is_none() {
+                continue;
+            }
+            for (local, &global) in self.plan.placement.hosted[g].iter().enumerate() {
+                let res = self.res.as_ref().expect("degraded without resilience");
+                let cutoff = t.saturating_sub(res.hedge_threshold_us(global));
+                let stuck = engines[g].as_ref().unwrap().sim.queued_before(local, cutoff);
+                if stuck == 0 {
+                    continue;
+                }
+                let Some(src_rep) =
+                    self.plan.placement.replicas[global].iter().find(|r| r.gpu == g)
+                else {
+                    continue;
+                };
+                let cache = &mut self.cache;
+                let stores = &self.stores;
+                let src_est = queue_est_us(
+                    cache.backlog(engines, src_rep).saturating_add(res.penalty_items(g)),
+                    src_rep.batch,
+                    src_rep.capacity_rps,
+                );
+                let cands: Vec<(Us, usize)> = self.plan.placement.replicas[global]
+                    .iter()
+                    .filter(|r| {
+                        r.gpu != g && res.routable(r.gpu) && stores[r.gpu].is_warm(global)
+                    })
+                    .map(|r| {
+                        let backlog = cache
+                            .backlog(engines, r)
+                            .saturating_add(res.penalty_items(r.gpu));
+                        (queue_est_us(backlog, r.batch, r.capacity_rps), r.gpu)
+                    })
+                    .collect();
+                match pick_hedge_target((src_est, g), &cands) {
+                    None => {
+                        // Stuck copy wins: hedge fired, copy cancelled.
+                        self.res.as_mut().expect("checked").note_hedges(stuck as u64, 0);
+                    }
+                    Some(win) => {
+                        let target = self.plan.placement.replicas[global]
+                            .iter()
+                            .find(|r| r.gpu == win)
+                            .expect("hedge winner is a replica");
+                        let (t_gpu, t_local) = (target.gpu, target.local);
+                        let moved =
+                            engines[g].as_mut().unwrap().sim.take_queued_before(local, cutoff);
+                        let n = moved.len() as u64;
+                        for mut r in moved {
+                            if self.obs.on() {
+                                self.obs.event(
+                                    EventKind::Hedge,
+                                    t,
+                                    global as u32,
+                                    r.id,
+                                    t_gpu as u64,
+                                );
+                            }
+                            r.model = t_local;
+                            engines[t_gpu]
+                                .as_mut()
+                                .expect("warm hedge target on idle GPU")
+                                .sim
+                                .inject(r);
+                            self.cache.note_inject(t_gpu, t_local);
+                        }
+                        self.stores[t_gpu].touch(t, global);
+                        self.cache.invalidate(g, local);
+                        touched.mark(g);
+                        touched.mark(t_gpu);
+                        self.res.as_mut().expect("checked").note_hedges(n, n);
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl EpochDriver for LifecycleDriver<'_> {
@@ -540,7 +759,9 @@ impl EpochDriver for LifecycleDriver<'_> {
     }
 
     fn elides_barriers(&self) -> bool {
-        self.free_routing && self.warm_span_ready()
+        // Fault timelines, hedge sweeps and admission all read engine
+        // state at barriers — never elide while resilience is on.
+        self.free_routing && self.warm_span_ready() && self.res.is_none()
     }
 
     /// Barrier-free routing inside a fully-warm span: reproduces
@@ -595,7 +816,8 @@ impl EpochDriver for LifecycleDriver<'_> {
         let t_idle = self
             .idle_timeout
             .and_then(|to| self.stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
-        [t_load, t_idle].into_iter().flatten().min()
+        let t_res = self.res.as_ref().and_then(|r| r.next_event());
+        [t_load, t_idle, t_res].into_iter().flatten().min()
     }
 
     /// Mature loads due at t: the model becomes warm, its tombstone
@@ -603,6 +825,11 @@ impl EpochDriver for LifecycleDriver<'_> {
     /// arrival times (cold delay shows up as end-to-end latency).
     fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
         self.cache.reset();
+        // Faults first: an engine going down at t cancels its in-flight
+        // loads before the maturation sweep below could complete them.
+        if self.res.is_some() {
+            self.apply_faults(t, engines, touched);
+        }
         let due: Vec<(usize, usize)> = self
             .loading
             .iter()
@@ -649,6 +876,57 @@ impl EpochDriver for LifecycleDriver<'_> {
     ) {
         if self.obs.on() {
             self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
+        // Deadline-aware admission (fresh arrivals only — cascade
+        // re-routes inside `dispatch` already carry sunk work): reject
+        // outright when even the best-case replica — shortest analytic
+        // queue estimate plus any remaining weight upload — cannot meet
+        // the request's deadline.
+        let admitted = match self.res.as_ref() {
+            Some(res) if res.cfg.admission => {
+                let m = req.model;
+                let cache = &mut self.cache;
+                let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
+                let (cfg, profiles) = (self.cfg, self.profiles);
+                let best = self.plan.placement.replicas[m]
+                    .iter()
+                    .filter(|r| res.routable(r.gpu))
+                    .map(|r| {
+                        let backlog = cache
+                            .backlog(engines, r)
+                            .saturating_add(held.get(&(r.gpu, m)).map_or(0, |v| v.len()))
+                            .saturating_add(res.penalty_items(r.gpu));
+                        let mut est = queue_est_us(backlog, r.batch, r.capacity_rps);
+                        if !stores[r.gpu].is_warm(m) {
+                            let remaining_ms = match loading.get(&(r.gpu, m)) {
+                                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                                None => cfg
+                                    .reconfig
+                                    .cold_load_ms(profiles[m].load_ms, stores[r.gpu].n_warm()),
+                            };
+                            est = est.saturating_add(ms_to_us(remaining_ms));
+                        }
+                        est
+                    })
+                    .min();
+                // No routable replica ⇒ fall through to dispatch's
+                // unroutable reject (counted there, not as a deadline
+                // miss).
+                match best {
+                    Some(best) => t.saturating_add(best) <= req.deadline,
+                    None => true,
+                }
+            }
+            _ => true,
+        };
+        if !admitted {
+            let m = req.model;
+            self.rejected[m] += 1;
+            self.res.as_mut().expect("admission without resilience").note_deadline_reject(m);
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
+            }
+            return;
         }
         let mut work = std::mem::take(&mut self.scratch);
         debug_assert!(work.is_empty());
@@ -768,6 +1046,32 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
     seed: u64,
     opts: ExecOpts,
 ) -> ClusterReport {
+    run_lifecycle_stream_faults(
+        profiles, gpus, plan, routing, sched, cfg, stream, horizon_ms, seed, opts, None,
+    )
+}
+
+/// [`run_lifecycle_stream`] with an optional fault timeline + SLO-class
+/// front door ([`crate::faults`]): engine failures crash the store
+/// (weights are gone), drain queues into the eviction-cascade
+/// re-dispatch path, and recover *on demand* — the restored engine
+/// comes back empty and every model faults back in through the
+/// ordinary cold-start machinery, paying the same §3.2 load cost the
+/// eager-restore drivers charge up front.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lifecycle_stream_faults<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    plan: &ResidencyPlan,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+) -> ClusterReport {
     cfg.validate().expect("invalid lifecycle config");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
@@ -848,6 +1152,10 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
         stats: LifecycleStats::default(),
         idle_timeout,
         scratch: VecDeque::new(),
+        res: faults.map(|f| {
+            Resilience::new(f.clone(), profiles, n_gpus, horizon)
+                .expect("invalid faults config (validate at the config layer)")
+        }),
         obs: Recorder::new(opts.obs, horizon),
     };
     // Seed the warm-set timeline with the t = 0 resident sets so the
@@ -865,6 +1173,7 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
         held,
         cold_delays_ms,
         mut stats,
+        res,
         obs: mut obs_rec,
         ..
     } = driver;
@@ -901,6 +1210,9 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
     let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
     let mut per_gpu = Vec::with_capacity(n_gpus);
+    // (completion time, in-SLO) pairs for the degraded-goodput stat —
+    // only collected when a fault timeline is active.
+    let mut comps: Vec<(Us, bool)> = Vec::new();
     for g in 0..n_gpus {
         let (util, shares) = match &reports[g] {
             Some(rep) => {
@@ -911,6 +1223,11 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
                     violations[global] += mm.slo_violations() as f64 / horizon_s;
                     served[global] += mm.served;
                     served_in_slo += mm.served_in_slo;
+                    if res.is_some() {
+                        for (lat, &done) in mm.latencies_ms.iter().zip(&mm.completions_us) {
+                            comps.push((done, *lat <= profiles[global].slo_ms));
+                        }
+                    }
                     dropped[global] += mm.dropped;
                     latencies[global].extend_from_slice(&mm.latencies_ms);
                     hists[global].merge(&mm.latency_hist);
@@ -989,6 +1306,7 @@ pub fn run_lifecycle_stream<S: ArrivalStream>(
         per_gpu,
         adaptive: None,
         lifecycle: Some(stats),
+        resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
         exec: Some(exec_stats),
         obs,
     }
@@ -1062,6 +1380,29 @@ pub fn serve_longtail_stream<S: ArrivalStream>(
     seed: u64,
     opts: ExecOpts,
 ) -> ClusterReport {
+    serve_longtail_stream_faults(
+        profiles, offered_rps, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts, None,
+    )
+}
+
+/// [`serve_longtail_stream`] with an optional fault timeline
+/// ([`run_lifecycle_stream_faults`]).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_longtail_stream_faults<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: crate::cluster::PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+) -> ClusterReport {
     let budgets = cfg.budgets(gpus);
     assert!(
         budgets.iter().all(|&b| b > 0),
@@ -1076,8 +1417,8 @@ pub fn serve_longtail_stream<S: ArrivalStream>(
         &budgets,
         cfg.min_replicas,
     );
-    run_lifecycle_stream(
-        profiles, gpus, &plan, routing, sched, cfg, stream, horizon_ms, seed, opts,
+    run_lifecycle_stream_faults(
+        profiles, gpus, &plan, routing, sched, cfg, stream, horizon_ms, seed, opts, faults,
     )
 }
 

@@ -302,6 +302,21 @@ impl ModelStore {
         true
     }
 
+    /// Wipe the store after an engine failure: every resident — pinned
+    /// and mid-load included — is dropped and its memory freed. Returns
+    /// the dropped model indices in model order. Not counted as
+    /// evictions (the weights were lost, not sacrificed); load/traffic
+    /// counters are preserved so report totals still reflect the work
+    /// actually done before the crash.
+    pub fn crash(&mut self) -> Vec<usize> {
+        let mut dropped: Vec<usize> = self.residents.iter().map(|r| r.model).collect();
+        dropped.sort_unstable();
+        self.used_mib = 0;
+        self.residents.clear();
+        self.debug_check();
+        dropped
+    }
+
     /// Warm, unpinned residents idle since before `now − timeout`, in
     /// model order.
     pub fn idle_candidates(&self, now: Us, timeout: Us) -> Vec<usize> {
@@ -449,6 +464,21 @@ mod tests {
         s.release(1);
         assert_eq!(s.used_mib(), 1_000);
         assert_eq!(s.peak_mib(), 2_500, "peak is monotone");
+    }
+
+    #[test]
+    fn crash_wipes_everything_including_pinned_and_loading() {
+        let mut s = store(4_000, EvictionPolicy::Lru);
+        s.preload(0, 0, 1_000, 300.0, true); // pinned
+        s.preload(0, 1, 1_000, 300.0, false);
+        s.begin_load(10, 2, 1_000, 300.0, false).unwrap(); // mid-load
+        assert_eq!(s.crash(), vec![0, 1, 2]);
+        assert_eq!(s.n_resident(), 0);
+        assert_eq!(s.used_mib(), 0);
+        assert_eq!(s.evictions, 0, "a crash is not an eviction");
+        assert_eq!(s.loads, 1, "load counters survive the crash");
+        // The store is immediately usable again.
+        assert!(s.preload(20, 0, 1_000, 300.0, true));
     }
 
     #[test]

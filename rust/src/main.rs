@@ -3,9 +3,12 @@
 //! figure of the paper.
 //!
 //! Subcommands:
-//!   figures  --fig <2|3|4|...|17|all> [--out results]
+//!   figures  --fig <2|3|4|...|18|all> [--out results]
 //!            (--fig 17 also writes fig17_trace.json +
-//!            fig17_timeseries.json, the observability artifacts)
+//!            fig17_timeseries.json, the observability artifacts;
+//!            --fig 18 is the engine-failure resilience timeline:
+//!            goodput + per-class p99 through a degrade→down→up
+//!            cycle, hedged front door vs naive)
 //!   tables   --table <1|2|3|6|all>    [--out results]
 //!   simulate --config <scenario.json> [--threads N|auto]
 //!            [--exec-mode sparse|epoch] [--verbose]   (scenarios
@@ -15,7 +18,11 @@
 //!            long-tail memory manager; a "unified" block runs the
 //!            merged cold-start-aware control plane; a "workload"
 //!            block with a "trace" entry replays a recorded request
-//!            log through the streaming cluster core)
+//!            log through the streaming cluster core; a "faults"
+//!            block injects a deterministic engine-failure timeline
+//!            and arms the resilient front door — SLO classes,
+//!            deadline admission, hedged re-dispatch — on any of
+//!            those paths, see configs/cluster_engine_failure.json)
 //!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
 //!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
 //!            [--horizon ms] [--seed N] [--threads N|auto]
@@ -353,6 +360,26 @@ fn print_cluster_report(names: &[String], rep: &dstack::cluster::ClusterReport) 
             "p99 before/after first rebalance (ms): {:?} / {:?}",
             a.p99_before_ms.iter().map(|v| v.round()).collect::<Vec<_>>(),
             a.p99_after_ms.iter().map(|v| v.round()).collect::<Vec<_>>()
+        );
+    }
+    if let Some(r) = &rep.resilience {
+        println!(
+            "resilience: {} fault events ({} engine-downs), {} rerouted on failure, \
+             hedges {}/{} won, availability {:.2}%",
+            r.fault_events,
+            r.engine_downs,
+            r.rerouted_on_failure,
+            r.hedges_won,
+            r.hedges_fired,
+            r.availability_pct,
+        );
+        println!(
+            "front door: {} deadline rejects (critical) + {} (bulk), {} unroutable rejects; \
+             goodput in unhealthy windows {:.0} req/s",
+            r.deadline_rejects_critical,
+            r.deadline_rejects_bulk,
+            r.unroutable_rejects,
+            r.degraded_goodput_rps,
         );
     }
 }

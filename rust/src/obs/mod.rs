@@ -159,9 +159,17 @@ pub enum EventKind {
     ColdLoad = 9,
     /// Idle model scaled to zero (`a` = GPU).
     ScaleZero = 10,
+    /// Engine failed or degraded — fault injection ([`crate::faults`]);
+    /// `a` = GPU, `b` = 1 for `engine_degraded`, 0 for a hard down.
+    EngineDown = 11,
+    /// Engine back in service (restore matured; `a` = GPU).
+    EngineUp = 12,
+    /// Stuck request speculatively re-dispatched off a degraded engine
+    /// (`a` = request id, `b` = winning target GPU).
+    Hedge = 13,
 }
 
-pub(crate) const N_KINDS: usize = 11;
+pub(crate) const N_KINDS: usize = 14;
 
 impl EventKind {
     pub fn name(&self) -> &'static str {
@@ -177,6 +185,9 @@ impl EventKind {
             EventKind::Evict => "evict",
             EventKind::ColdLoad => "cold_load",
             EventKind::ScaleZero => "scale_to_zero",
+            EventKind::EngineDown => "engine_down",
+            EventKind::EngineUp => "engine_up",
+            EventKind::Hedge => "hedge",
         }
     }
 
@@ -193,7 +204,10 @@ impl EventKind {
             EventKind::Replan
             | EventKind::Evict
             | EventKind::ColdLoad
-            | EventKind::ScaleZero => Category::Control,
+            | EventKind::ScaleZero
+            | EventKind::EngineDown
+            | EventKind::EngineUp
+            | EventKind::Hedge => Category::Control,
         }
     }
 }

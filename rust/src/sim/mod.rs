@@ -282,6 +282,29 @@ impl Sim {
         self.queues[local].drain(..).collect()
     }
 
+    /// Requests queued for `local` that arrived at or before `cutoff` —
+    /// the "stuck past the hedge threshold" count the resilience sweep
+    /// probes before deciding whether to pull anything
+    /// ([`crate::faults`]). Queues are FIFO by arrival, so this is a
+    /// prefix count.
+    pub fn queued_before(&self, local: usize, cutoff: Us) -> usize {
+        self.queues[local].iter().take_while(|r| r.arrival <= cutoff).count()
+    }
+
+    /// Remove and return the queued prefix that arrived at or before
+    /// `cutoff`, oldest first. The hedged-dispatch path uses this to
+    /// move stuck requests off a degraded engine once a strictly better
+    /// replica is known — pulling only after the target is chosen keeps
+    /// the FIFO-by-arrival queue invariant (re-injecting into the same
+    /// queue would reorder it). In-flight batches are untouched.
+    pub fn take_queued_before(&mut self, local: usize, cutoff: Us) -> Vec<Request> {
+        let mut out = Vec::new();
+        while self.queues[local].front().is_some_and(|r| r.arrival <= cutoff) {
+            out.push(self.queues[local].pop_front().unwrap());
+        }
+        out
+    }
+
     /// Is the local model currently accepting traffic?
     pub fn is_active(&self, local: usize) -> bool {
         self.active[local]
@@ -708,6 +731,26 @@ mod tests {
         assert_eq!(sim.add_model(e2), 1);
         assert_eq!(sim.models.len(), 2);
         assert!(sim.is_active(1));
+    }
+
+    #[test]
+    fn take_queued_before_pulls_the_stuck_prefix() {
+        let (mut sim, reqs) = setup(&["alexnet"], 200.0, 1_000.0, 8);
+        let n = reqs.len().min(6);
+        for r in &reqs[..n] {
+            sim.inject(r.clone());
+        }
+        // Cut between the 3rd and 4th arrival: exactly 3 are "stuck".
+        let cutoff = reqs[2].arrival;
+        assert!(reqs[3].arrival > cutoff, "seed must not collide arrivals");
+        assert_eq!(sim.queued_before(0, cutoff), 3);
+        let pulled = sim.take_queued_before(0, cutoff);
+        assert_eq!(pulled.len(), 3);
+        assert!(pulled.windows(2).all(|w| w[0].arrival <= w[1].arrival), "oldest first");
+        // The remainder is untouched and still FIFO.
+        assert_eq!(sim.backlog_items(0), n - 3);
+        assert_eq!(sim.queued_before(0, cutoff), 0);
+        assert_eq!(sim.take_queued_before(0, cutoff), Vec::new());
     }
 
     #[test]

@@ -61,6 +61,7 @@ use crate::controlplane::{
     placement_delta, AdaptiveCfg, AdaptiveStats, DriftDetector, RateEstimator,
 };
 use crate::cluster::p99_of;
+use crate::faults::{pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg};
 use crate::gpu::{ms_to_us, us_to_ms, Us};
 use crate::lifecycle::{reachability_candidates, LifecycleCfg, LifecycleStats, ModelStore};
 use crate::metrics::RunReport;
@@ -165,6 +166,9 @@ struct UnifiedDriver<'a> {
     evictions_at_tick: u64,
     /// Reusable cascade queue (always drained empty between uses).
     scratch: VecDeque<(usize, Request)>,
+    /// Fault timeline + SLO-class front door ([`crate::faults`]);
+    /// `None` outside fault scenarios.
+    res: Option<Resilience>,
     /// Copied into engines created mid-run by replan surgery.
     obs_cfg: ObsCfg,
     /// Control-lane event recorder (routing + both planes' decisions).
@@ -184,21 +188,43 @@ impl UnifiedDriver<'_> {
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
     ) {
-        let reps: &[Replica] = &self.replicas[model];
-        if reps.is_empty() {
+        let all: &[Replica] = &self.replicas[model];
+        if all.is_empty() {
             self.rejected[model] += 1;
             if self.obs.on() {
                 self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
             }
             return;
         }
+        // Health filter: downed engines drop out of the candidate set
+        // (the clone only happens while some engine is unroutable).
+        let filtered: Vec<Replica>;
+        let reps: &[Replica] = match self.res.as_ref() {
+            Some(res) if res.any_unroutable() => {
+                filtered = all.iter().filter(|r| res.routable(r.gpu)).cloned().collect();
+                &filtered
+            }
+            _ => all,
+        };
+        if reps.is_empty() {
+            // Placed, but every hosting engine is down right now.
+            self.rejected[model] += 1;
+            self.res.as_mut().expect("unroutable without resilience").note_unroutable();
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, t, model as u32, req.id, 0);
+            }
+            return;
+        }
         let cache = &mut self.cache;
+        let res = self.res.as_ref();
         let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
         let (lcfg, profiles) = (&self.cfg.lifecycle, self.profiles);
         let pick = self.router.route(model, reps, |rep| {
             let backlog = cache.backlog(engines, rep);
             let parked = held.get(&(rep.gpu, model)).map_or(0, |v| v.len());
-            let base = backlog.saturating_add(parked);
+            let base = backlog
+                .saturating_add(parked)
+                .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)));
             if !lcfg.warm_routing || stores[rep.gpu].is_warm(model) {
                 return base;
             }
@@ -212,8 +238,7 @@ impl UnifiedDriver<'_> {
         });
         let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
         for i in order {
-            let r = &self.replicas[model][i];
-            let (g, local) = (r.gpu, r.local);
+            let (g, local) = (reps[i].gpu, reps[i].local);
             if self.stores[g].is_warm(model) {
                 self.stores[g].touch(t, model);
                 if self.obs.on() {
@@ -298,6 +323,188 @@ impl UnifiedDriver<'_> {
                 self.stores[r.gpu].is_warm(m) || self.loading.contains_key(&(r.gpu, m))
             })
         })
+    }
+
+    /// Apply every fault-timeline event due at `t`, then the hedge
+    /// sweep if its cadence tick is due (see the lifecycle driver's
+    /// identical determinism argument).
+    fn apply_faults(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        let due = match self.res.as_mut() {
+            Some(r) => r.due_faults(t),
+            None => return,
+        };
+        for e in due {
+            match e.kind {
+                FaultKind::Down => self.on_down(t, e.gpu, engines, touched),
+                FaultKind::Degraded => {
+                    if self.obs.on() {
+                        self.obs.event(EventKind::EngineDown, t, NO_MODEL, e.gpu as u64, 1);
+                    }
+                }
+                FaultKind::Up => {
+                    // ModelStore driver: recovery is on demand — the
+                    // engine is routable again immediately, weights
+                    // fault back in through the cold-start path.
+                    let res = self.res.as_mut().expect("fault event without resilience");
+                    if res.restoring(e.gpu) {
+                        res.mark_restored(e.gpu, t);
+                    }
+                    if self.obs.on() {
+                        self.obs.event(EventKind::EngineUp, t, NO_MODEL, e.gpu as u64, 0);
+                    }
+                }
+            }
+        }
+        if self.res.as_ref().is_some_and(|r| r.hedge_due(t)) {
+            self.hedge_sweep(t, engines, touched);
+        }
+    }
+
+    /// Hard engine failure (lifecycle semantics: drain, cancel loads,
+    /// crash the store, cascade the orphans). The replica table is NOT
+    /// touched — the engine's replicas stay booked but unroutable, so a
+    /// later control tick replans around them with full knowledge of
+    /// the assignment, and recovery needs no table surgery at all.
+    fn on_down(&mut self, t: Us, g: usize, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        if self.obs.on() {
+            self.obs.event(EventKind::EngineDown, t, NO_MODEL, g as u64, 0);
+        }
+        let mut orphans: Vec<(usize, Request)> = Vec::new();
+        if let Some(engine) = engines[g].as_mut() {
+            let mut drained_any = false;
+            for (local, &global) in self.local_map[g].iter().enumerate() {
+                if !engine.sim.is_active(local) {
+                    continue; // tombstone (cold / scaled to zero / migrated off)
+                }
+                for r in engine.sim.deactivate_model(local) {
+                    orphans.push((global, r));
+                }
+                self.cache.invalidate(g, local);
+                drained_any = true;
+            }
+            if drained_any {
+                engine.rebuild_policy(self.sched);
+            }
+            touched.mark(g);
+        }
+        let dead_loads: Vec<(usize, usize)> =
+            self.loading.keys().filter(|k| k.0 == g).copied().collect();
+        for key in dead_loads {
+            self.loading.remove(&key);
+            for r in self.held.remove(&key).unwrap_or_default() {
+                orphans.push((key.1, r));
+            }
+        }
+        self.stores[g].crash();
+        if self.obs.on() {
+            self.obs.warm_level(g, t, 0);
+        }
+        let reroute = self.res.as_ref().is_none_or(|r| r.cfg.reroute);
+        if reroute {
+            let n = orphans.len() as u64;
+            let mut work = std::mem::take(&mut self.scratch);
+            debug_assert!(work.is_empty());
+            for (m, mut r) in orphans {
+                r.model = m;
+                work.push_back((m, r));
+            }
+            while let Some((m, q)) = work.pop_front() {
+                self.dispatch(t, m, q, &mut work, engines, touched);
+            }
+            self.scratch = work;
+            if let Some(res) = self.res.as_mut() {
+                res.note_reroute(n);
+            }
+        } else {
+            for (m, r) in orphans {
+                self.rejected[m] += 1;
+                if self.obs.on() {
+                    self.obs.event(EventKind::Reject, t, m as u32, r.id, 0);
+                }
+            }
+        }
+    }
+
+    /// Hedged re-dispatch off degraded engines (lifecycle semantics:
+    /// targets must be warm, healthy replicas of the same model).
+    fn hedge_sweep(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
+        for g in 0..engines.len() {
+            if !self.res.as_ref().is_some_and(|r| r.degraded(g)) || engines[g].is_none() {
+                continue;
+            }
+            for local in 0..self.local_map[g].len() {
+                let global = self.local_map[g][local];
+                let res = self.res.as_ref().expect("degraded without resilience");
+                let cutoff = t.saturating_sub(res.hedge_threshold_us(global));
+                let stuck = engines[g].as_ref().unwrap().sim.queued_before(local, cutoff);
+                if stuck == 0 {
+                    continue;
+                }
+                let Some(src_idx) = self.replicas[global].iter().position(|r| r.gpu == g)
+                else {
+                    continue; // migrated off — queue drains where it sits
+                };
+                let cache = &mut self.cache;
+                let stores = &self.stores;
+                let src_rep = &self.replicas[global][src_idx];
+                let src_est = queue_est_us(
+                    cache.backlog(engines, src_rep).saturating_add(res.penalty_items(g)),
+                    src_rep.batch,
+                    src_rep.capacity_rps,
+                );
+                let cands: Vec<(Us, usize)> = self.replicas[global]
+                    .iter()
+                    .filter(|r| {
+                        r.gpu != g && res.routable(r.gpu) && stores[r.gpu].is_warm(global)
+                    })
+                    .map(|r| {
+                        let backlog = cache
+                            .backlog(engines, r)
+                            .saturating_add(res.penalty_items(r.gpu));
+                        (queue_est_us(backlog, r.batch, r.capacity_rps), r.gpu)
+                    })
+                    .collect();
+                match pick_hedge_target((src_est, g), &cands) {
+                    None => {
+                        // Stuck copy wins: hedge fired, copy cancelled.
+                        self.res.as_mut().expect("checked").note_hedges(stuck as u64, 0);
+                    }
+                    Some(win) => {
+                        let target = self.replicas[global]
+                            .iter()
+                            .find(|r| r.gpu == win)
+                            .expect("hedge winner is a replica");
+                        let (t_gpu, t_local) = (target.gpu, target.local);
+                        let moved =
+                            engines[g].as_mut().unwrap().sim.take_queued_before(local, cutoff);
+                        let n = moved.len() as u64;
+                        for mut r in moved {
+                            if self.obs.on() {
+                                self.obs.event(
+                                    EventKind::Hedge,
+                                    t,
+                                    global as u32,
+                                    r.id,
+                                    t_gpu as u64,
+                                );
+                            }
+                            r.model = t_local;
+                            engines[t_gpu]
+                                .as_mut()
+                                .expect("warm hedge target on idle GPU")
+                                .sim
+                                .inject(r);
+                            self.cache.note_inject(t_gpu, t_local);
+                        }
+                        self.stores[t_gpu].touch(t, global);
+                        self.cache.invalidate(g, local);
+                        touched.mark(g);
+                        touched.mark(t_gpu);
+                        self.res.as_mut().expect("checked").note_hedges(n, n);
+                    }
+                }
+            }
+        }
     }
 
     /// Scale-to-zero sweep (identical to the lifecycle driver's).
@@ -514,7 +721,9 @@ impl EpochDriver for UnifiedDriver<'_> {
     }
 
     fn elides_barriers(&self) -> bool {
-        self.free_routing && self.warm_span_ready()
+        // Fault timelines, hedge sweeps and admission all read engine
+        // state at barriers — never elide while resilience is on.
+        self.free_routing && self.warm_span_ready() && self.res.is_none()
     }
 
     /// Barrier-free routing inside a fully-warm span (the lifecycle
@@ -569,13 +778,19 @@ impl EpochDriver for UnifiedDriver<'_> {
             .idle_timeout
             .and_then(|to| self.stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
         let t_tick = if self.next_tick < self.horizon { Some(self.next_tick) } else { None };
-        [t_load, t_idle, t_tick].into_iter().flatten().min()
+        let t_res = self.res.as_ref().and_then(|r| r.next_event());
+        [t_load, t_idle, t_tick, t_res].into_iter().flatten().min()
     }
 
     /// Mature weight loads due at t (lifecycle semantics: parked
     /// requests inject with their original arrival times).
     fn pre_arrivals(&mut self, t: Us, engines: &mut [Option<ExecEngine>], touched: &mut Touched) {
         self.cache.reset();
+        // Faults first: an engine going down at t cancels its in-flight
+        // loads before the maturation sweep below could complete them.
+        if self.res.is_some() {
+            self.apply_faults(t, engines, touched);
+        }
         let due: Vec<(usize, usize)> = self
             .loading
             .iter()
@@ -624,6 +839,55 @@ impl EpochDriver for UnifiedDriver<'_> {
         self.window_counts[req.model] += 1;
         if self.obs.on() {
             self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
+        // Deadline-aware admission (fresh arrivals only): reject
+        // outright when even the best-case replica — shortest analytic
+        // queue estimate plus any remaining weight upload — cannot meet
+        // the request's deadline.
+        let admitted = match self.res.as_ref() {
+            Some(res) if res.cfg.admission => {
+                let m = req.model;
+                let cache = &mut self.cache;
+                let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
+                let (lcfg, profiles) = (&self.cfg.lifecycle, self.profiles);
+                let best = self.replicas[m]
+                    .iter()
+                    .filter(|r| res.routable(r.gpu))
+                    .map(|r| {
+                        let backlog = cache
+                            .backlog(engines, r)
+                            .saturating_add(held.get(&(r.gpu, m)).map_or(0, |v| v.len()))
+                            .saturating_add(res.penalty_items(r.gpu));
+                        let mut est = queue_est_us(backlog, r.batch, r.capacity_rps);
+                        if !stores[r.gpu].is_warm(m) {
+                            let remaining_ms = match loading.get(&(r.gpu, m)) {
+                                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                                None => lcfg
+                                    .reconfig
+                                    .cold_load_ms(profiles[m].load_ms, stores[r.gpu].n_warm()),
+                            };
+                            est = est.saturating_add(ms_to_us(remaining_ms));
+                        }
+                        est
+                    })
+                    .min();
+                // No routable replica ⇒ fall through to dispatch's
+                // unroutable reject.
+                match best {
+                    Some(best) => t.saturating_add(best) <= req.deadline,
+                    None => true,
+                }
+            }
+            _ => true,
+        };
+        if !admitted {
+            let m = req.model;
+            self.rejected[m] += 1;
+            self.res.as_mut().expect("admission without resilience").note_deadline_reject(m);
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
+            }
+            return;
         }
         let mut work = std::mem::take(&mut self.scratch);
         debug_assert!(work.is_empty());
@@ -720,6 +984,32 @@ pub fn run_unified_stream<S: ArrivalStream>(
     horizon_ms: f64,
     seed: u64,
     opts: ExecOpts,
+) -> ClusterReport {
+    run_unified_stream_faults(
+        profiles, initial_rates, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts, None,
+    )
+}
+
+/// [`run_unified_stream`] with an optional fault timeline + SLO-class
+/// front door ([`crate::faults`]). Failure semantics follow the
+/// lifecycle driver (store crash, on-demand recovery); the replica
+/// table survives the fault, so control ticks keep replanning with the
+/// full assignment in view.
+#[allow(clippy::too_many_arguments)]
+pub fn run_unified_stream_faults<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &UnifiedCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
 ) -> ClusterReport {
     cfg.validate().expect("invalid unified config");
     let n_models = profiles.len();
@@ -835,6 +1125,10 @@ pub fn run_unified_stream<S: ArrivalStream>(
         next_tick: interval,
         evictions_at_tick: 0,
         scratch: VecDeque::new(),
+        res: faults.map(|f| {
+            Resilience::new(f.clone(), profiles, n_gpus, horizon)
+                .expect("invalid faults config (validate at the config layer)")
+        }),
         obs_cfg: opts.obs,
         obs: Recorder::new(opts.obs, horizon),
     };
@@ -859,6 +1153,7 @@ pub fn run_unified_stream<S: ArrivalStream>(
         mut lstats,
         mut astats,
         estimator,
+        res,
         obs: mut obs_rec,
         ..
     } = driver;
@@ -897,6 +1192,9 @@ pub fn run_unified_stream<S: ArrivalStream>(
     let mut hists: Vec<LogHistogram> = vec![LogHistogram::default(); n_models];
     let mut lat_before: Vec<Vec<f64>> = vec![Vec::new(); n_models];
     let mut lat_after: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    // (completion time, in-SLO) pairs for the degraded-goodput stat —
+    // only collected when a fault timeline is active.
+    let mut comps: Vec<(Us, bool)> = Vec::new();
     let mut gpu_utilization = Vec::with_capacity(n_gpus);
     let mut per_gpu = Vec::with_capacity(n_gpus);
     for g in 0..n_gpus {
@@ -916,6 +1214,9 @@ pub fn run_unified_stream<S: ArrivalStream>(
                         match split_at {
                             Some(cut) if done >= cut => lat_after[global].push(*lat),
                             _ => lat_before[global].push(*lat),
+                        }
+                        if res.is_some() {
+                            comps.push((done, *lat <= profiles[global].slo_ms));
                         }
                     }
                     // Shares list the final *resident* packing only.
@@ -990,6 +1291,7 @@ pub fn run_unified_stream<S: ArrivalStream>(
         per_gpu,
         adaptive: Some(astats),
         lifecycle: Some(lstats),
+        resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
         exec: Some(exec_stats),
         obs,
     }

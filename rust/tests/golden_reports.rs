@@ -218,6 +218,23 @@ fn trace_replay_report_matches_golden() {
 }
 
 #[test]
+fn engine_failure_report_matches_golden() {
+    // The shipped fault scenario end to end: scenario file → validated
+    // fault timeline → streaming cluster core with the resilient front
+    // door armed (deadline admission, SLO classes, hedging). The golden
+    // pins the whole robustness layer — health machine, drain cascade,
+    // cold restore, hedge accounting and the serialized `resilience`
+    // block — against behavioral drift.
+    let cfg =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/cluster_engine_failure.json");
+    let sc = dstack::config::Scenario::from_file(&cfg).expect("shipped config must load");
+    let rep = dstack::config::run_cluster_scenario(&sc);
+    let res = rep.resilience.as_ref().expect("fault runs must serialize resilience stats");
+    assert!(res.engine_downs >= 1, "the shipped timeline must take an engine down");
+    check_golden("engine_failure", &rep.to_json());
+}
+
+#[test]
 fn legacy_fig12_cluster_matches_golden() {
     use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
     let (profiles, _rates, reqs) = fig12_workload(HORIZON_MS, SEED);

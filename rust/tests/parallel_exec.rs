@@ -17,21 +17,23 @@ use dstack::cluster::{
 use dstack::controlplane::{
     drift_gpus, drift_specs, drift_workload, run_adaptive_stream, run_adaptive_with, AdaptiveCfg,
 };
+use dstack::faults::{FaultEvent, FaultKind, ResilienceCfg};
+use dstack::gpu::ms_to_us;
 use dstack::lifecycle::{
-    longtail_gpus, longtail_specs, longtail_workload, serve_longtail_stream, serve_longtail_with,
-    LifecycleCfg,
+    longtail_gpus, longtail_specs, longtail_workload, serve_longtail_stream,
+    serve_longtail_stream_faults, serve_longtail_with, LifecycleCfg,
 };
 use dstack::profile::{T4, V100};
 use dstack::unified::{
     drifting_longtail_specs, drifting_longtail_workload, run_unified_stream, run_unified_with,
     unified_gpus, UnifiedCfg,
 };
-use dstack::workload::MergedStream;
+use dstack::workload::{MaterializedStream, MergedStream};
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 const MODES: [ExecMode; 2] = [ExecMode::Epoch, ExecMode::Sparse];
 
-const SCENARIOS: [&str; 8] = [
+const SCENARIOS: [&str; 9] = [
     "static-jsq",
     "static-wide-jsq",
     "static-wide-rr",
@@ -40,6 +42,7 @@ const SCENARIOS: [&str; 8] = [
     "adaptive-rr",
     "lifecycle",
     "unified",
+    "lifecycle-faults",
 ];
 
 /// Render the canonical scenarios' reports under `opts`. `streamed`
@@ -243,6 +246,66 @@ fn report_strings(opts: ExecOpts, streamed: bool) -> Vec<String> {
         .to_string_pretty(),
     );
 
+    // Faults: the memory-pressured long-tail fleet again, now through a
+    // scripted degrade→down→up cycle with the full front door armed
+    // (deadline admission + hedged re-dispatch + SLO classes). Store
+    // crashes, cascade re-routes of the drained queue, hedge sweeps and
+    // cold on-demand recovery must all land on driver-event barriers —
+    // this row is what pins the tentpole claim that fault scenarios stay
+    // byte-identical across exec modes, thread counts and ingestion.
+    let (fprofiles, frates, fspecs) = longtail_specs(10, 1.1, 350.0);
+    let (_, _, freqs) = longtail_workload(10, 1.1, 350.0, 1_500.0, 13);
+    let flcfg = LifecycleCfg {
+        mem_budget_mib: 2_048,
+        idle_timeout_ms: 400.0,
+        ..Default::default()
+    };
+    let fcfg = ResilienceCfg {
+        events: vec![
+            FaultEvent { t: ms_to_us(350.0), gpu: 0, kind: FaultKind::Degraded },
+            FaultEvent { t: ms_to_us(600.0), gpu: 1, kind: FaultKind::Down },
+            FaultEvent { t: ms_to_us(1_000.0), gpu: 1, kind: FaultKind::Up },
+        ],
+        bulk_models: vec!["vgg19".into(), "bert".into()],
+        admission: true,
+        ..Default::default()
+    };
+    out.push(
+        if streamed {
+            serve_longtail_stream_faults(
+                &fprofiles,
+                &frates,
+                &longtail_gpus(),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &flcfg,
+                MergedStream::new(&fspecs, 1_500.0, 13),
+                1_500.0,
+                13,
+                opts,
+                Some(&fcfg),
+            )
+        } else {
+            serve_longtail_stream_faults(
+                &fprofiles,
+                &frates,
+                &longtail_gpus(),
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                &flcfg,
+                MaterializedStream::new(freqs, fprofiles.len()),
+                1_500.0,
+                13,
+                opts,
+                Some(&fcfg),
+            )
+        }
+        .to_json()
+        .to_string_pretty(),
+    );
+
     out
 }
 
@@ -265,6 +328,12 @@ fn reports_are_byte_identical_across_threads_and_modes() {
     assert!(
         baseline[7].contains("\"cold_migration_ms\""),
         "unified scenario did not price migrations"
+    );
+    // The fault row must actually attach front-door telemetry, or its
+    // identity check degenerates into the plain lifecycle row.
+    assert!(
+        baseline[8].contains("\"resilience\""),
+        "fault scenario attached no resilience stats"
     );
     for streamed in [false, true] {
         for mode in MODES {

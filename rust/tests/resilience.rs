@@ -1,0 +1,439 @@
+//! Fault injection and the resilient front door (`faults`,
+//! DESIGN.md §4.12), driver-level: timeline validation at the config
+//! boundary, drain conservation through engine-down/up cycles (no
+//! request lost or double-served — served + dropped + rejected always
+//! equals the offered stream per model), the zero-routable-replica
+//! guard, deadline admission by SLO class, and hedge determinism (two
+//! identical runs are byte-identical, and so are epoch vs sparse at any
+//! thread count). Complements the unit tests in `faults::tests` (health
+//! machine, MTBF generation, tie-breaks) and the full mode × thread ×
+//! ingestion identity matrix in `tests/parallel_exec.rs`.
+
+use dstack::cluster::{
+    serve_cluster_stream_faults, ClusterReport, ExecMode, ExecOpts, GpuSched, Parallelism,
+    PlacementPolicy, RoutingPolicy,
+};
+use dstack::config::Scenario;
+use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive_stream_faults, AdaptiveCfg};
+use dstack::faults::{FaultEvent, FaultKind, ResilienceCfg};
+use dstack::gpu::ms_to_us;
+use dstack::lifecycle::{
+    longtail_gpus, longtail_workload, serve_longtail_stream_faults, LifecycleCfg,
+};
+use dstack::profile::{by_name, ModelProfile, T4, V100};
+use dstack::workload::{merged_stream, Arrivals, MaterializedStream, Request};
+use std::path::PathBuf;
+
+fn offered_counts(reqs: &[Request], n_models: usize) -> Vec<u64> {
+    let mut off = vec![0u64; n_models];
+    for r in reqs {
+        off[r.model] += 1;
+    }
+    off
+}
+
+/// The drain-conservation invariant: whatever faults, re-routes, hedges
+/// and rejects happened, every offered request is accounted exactly
+/// once per model.
+fn assert_conserved(rep: &ClusterReport, offered: &[u64], label: &str) {
+    for m in 0..offered.len() {
+        assert_eq!(
+            rep.served[m] + rep.dropped[m] + rep.rejected[m],
+            offered[m],
+            "{label}: model {m} lost or double-served requests \
+             (served {} + dropped {} + rejected {} != offered {})",
+            rep.served[m],
+            rep.dropped[m],
+            rep.rejected[m],
+            offered[m]
+        );
+    }
+}
+
+fn c4() -> (Vec<ModelProfile>, Vec<f64>) {
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let rates = vec![700.0, 700.0, 320.0, 160.0];
+    (profiles, rates)
+}
+
+fn c4_requests(rates: &[f64], profiles: &[ModelProfile], horizon_ms: f64, seed: u64) -> Vec<Request> {
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    merged_stream(&specs, horizon_ms, seed)
+}
+
+fn ev(t_ms: f64, gpu: usize, kind: FaultKind) -> FaultEvent {
+    FaultEvent { t: ms_to_us(t_ms), gpu, kind }
+}
+
+// ---------------------------------------------------------------------------
+// Timeline parsing/validation at the config boundary.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn config_rejects_invalid_fault_timelines() {
+    let base = |faults: &str| {
+        format!(
+            r#"{{"name": "t", "horizon_ms": 1000,
+                 "cluster": {{"gpus": ["T4", "T4"], "placement": "lb", "routing": "jsq"}},
+                 "models": [{{"name": "alexnet", "rate": 100}}],
+                 "faults": {faults}}}"#
+        )
+    };
+    // GPU index out of range.
+    assert!(Scenario::from_json(&base(
+        r#"{"events": [{"t_ms": 100, "gpu": 7, "kind": "engine_down"}]}"#
+    ))
+    .is_err());
+    // Illegal transition: up without a preceding down/degraded.
+    assert!(Scenario::from_json(&base(
+        r#"{"events": [{"t_ms": 100, "gpu": 0, "kind": "engine_up"}]}"#
+    ))
+    .is_err());
+    // Double down on the same engine.
+    assert!(Scenario::from_json(&base(
+        r#"{"events": [{"t_ms": 100, "gpu": 0, "kind": "down"},
+                        {"t_ms": 200, "gpu": 0, "kind": "down"}]}"#
+    ))
+    .is_err());
+    // Unknown kind and non-positive time.
+    assert!(Scenario::from_json(&base(
+        r#"{"events": [{"t_ms": 100, "gpu": 0, "kind": "explode"}]}"#
+    ))
+    .is_err());
+    assert!(Scenario::from_json(&base(
+        r#"{"events": [{"t_ms": 0, "gpu": 0, "kind": "down"}]}"#
+    ))
+    .is_err());
+    // A legal cycle parses, and short kind aliases work.
+    let sc = Scenario::from_json(&base(
+        r#"{"events": [{"t_ms": 100, "gpu": 0, "kind": "degraded"},
+                        {"t_ms": 200, "gpu": 0, "kind": "down"},
+                        {"t_ms": 400, "gpu": 0, "kind": "up"}],
+             "bulk_models": ["alexnet"], "admission": true}"#,
+    ))
+    .expect("legal timeline must parse");
+    let f = sc.faults.as_ref().expect("faults block attached");
+    assert_eq!(f.events.len(), 3);
+    assert!(f.admission);
+}
+
+// ---------------------------------------------------------------------------
+// Drain conservation through down/up cycles, all recovery models.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lifecycle_cycle_conserves_and_reroutes() {
+    // ModelStore driver: the downed engine's store crashes and recovery
+    // is on demand (weights fault back in per arrival). The drained
+    // queue cascades through the re-route path and lands somewhere —
+    // nothing may be lost across the cycle.
+    let (profiles, rates, reqs) = longtail_workload(16, 1.1, 500.0, 3_000.0, 7);
+    let offered = offered_counts(&reqs, profiles.len());
+    let lcfg = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
+    let fcfg = ResilienceCfg {
+        events: vec![ev(1_200.0, 1, FaultKind::Down), ev(2_000.0, 1, FaultKind::Up)],
+        ..Default::default()
+    };
+    let rep = serve_longtail_stream_faults(
+        &profiles,
+        &rates,
+        &longtail_gpus(),
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &lcfg,
+        MaterializedStream::new(reqs, profiles.len()),
+        3_000.0,
+        7,
+        ExecOpts::default(),
+        Some(&fcfg),
+    );
+    assert_conserved(&rep, &offered, "lifecycle cycle");
+    let res = rep.resilience.expect("fault run must attach resilience stats");
+    assert_eq!(res.fault_events, 2);
+    assert_eq!(res.engine_downs, 1);
+    assert!(
+        res.rerouted_on_failure > 0,
+        "a 500 req/s memory-pressured fleet must have had a queue to drain"
+    );
+    assert!(
+        res.availability_pct > 0.0 && res.availability_pct < 100.0,
+        "one engine down for >=800 ms of a 2x3000 ms span: got {}",
+        res.availability_pct
+    );
+}
+
+#[test]
+fn naive_front_door_rejects_the_drained_queue() {
+    // reroute = false is the naive baseline: the drained queue is
+    // rejected instead of cascaded. Conservation must still hold, and
+    // the reroute counter must stay at zero.
+    let (profiles, rates, reqs) = longtail_workload(16, 1.1, 500.0, 3_000.0, 7);
+    let offered = offered_counts(&reqs, profiles.len());
+    let lcfg = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
+    let fcfg = ResilienceCfg {
+        events: vec![ev(1_200.0, 1, FaultKind::Down), ev(2_000.0, 1, FaultKind::Up)],
+        reroute: false,
+        hedge: false,
+        ..Default::default()
+    };
+    let rep = serve_longtail_stream_faults(
+        &profiles,
+        &rates,
+        &longtail_gpus(),
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &lcfg,
+        MaterializedStream::new(reqs, profiles.len()),
+        3_000.0,
+        7,
+        ExecOpts::default(),
+        Some(&fcfg),
+    );
+    assert_conserved(&rep, &offered, "naive cycle");
+    let res = rep.resilience.expect("resilience stats");
+    assert_eq!(res.rerouted_on_failure, 0, "naive mode must not re-route");
+    assert_eq!(res.hedges_fired, 0, "naive mode must not hedge");
+    assert!(
+        rep.rejected.iter().sum::<u64>() > 0,
+        "the drained queue must surface as typed rejects"
+    );
+}
+
+#[test]
+fn static_cycle_conserves_and_recovers_cold() {
+    // Static driver: eager restore — the engine re-activates after a
+    // cold re-load of everything it hosts, and the report still
+    // balances.
+    let (profiles, rates) = c4();
+    let reqs = c4_requests(&rates, &profiles, 2_000.0, 5);
+    let offered = offered_counts(&reqs, profiles.len());
+    let gpus = [V100.clone(), T4.clone(), T4.clone()];
+    let fcfg = ResilienceCfg {
+        events: vec![ev(600.0, 1, FaultKind::Down), ev(1_200.0, 1, FaultKind::Up)],
+        ..Default::default()
+    };
+    let rep = serve_cluster_stream_faults(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        MaterializedStream::new(reqs, profiles.len()),
+        2_000.0,
+        5,
+        ExecOpts::default(),
+        Some(&fcfg),
+    );
+    assert_conserved(&rep, &offered, "static cycle");
+    let res = rep.resilience.expect("resilience stats");
+    assert_eq!(res.engine_downs, 1);
+    assert!(res.availability_pct > 0.0 && res.availability_pct < 100.0);
+}
+
+#[test]
+fn adaptive_cycle_conserves_with_eager_restore() {
+    // Adaptive driver: the cycle overlaps control ticks and a drift
+    // replan; the estimator and the fault layer must not double-count.
+    let (profiles, initial, _peak, reqs) = drift_workload(2_000.0, 11);
+    let offered = offered_counts(&reqs, profiles.len());
+    let cfg = AdaptiveCfg { interval_ms: 250.0, cooldown_ticks: 1, ..Default::default() };
+    let fcfg = ResilienceCfg {
+        events: vec![ev(700.0, 0, FaultKind::Down), ev(1_400.0, 0, FaultKind::Up)],
+        ..Default::default()
+    };
+    let rep = run_adaptive_stream_faults(
+        &profiles,
+        &initial,
+        &drift_gpus(),
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        &cfg,
+        MaterializedStream::new(reqs, profiles.len()),
+        2_000.0,
+        11,
+        ExecOpts::default(),
+        Some(&fcfg),
+    );
+    assert_conserved(&rep, &offered, "adaptive cycle");
+    let res = rep.resilience.expect("resilience stats");
+    assert_eq!(res.engine_downs, 1);
+    assert!(rep.adaptive.is_some(), "fault wiring must not drop the adaptive stats");
+}
+
+// ---------------------------------------------------------------------------
+// The zero-routable-replica guard.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_routable_window_rejects_typed() {
+    // Both engines down, never up: every arrival in the outage window
+    // must route to the typed unroutable reject — counted, stamped,
+    // conserved — instead of silently holding until the horizon drop.
+    let (profiles, rates) = c4();
+    let reqs = c4_requests(&rates, &profiles, 1_500.0, 3);
+    let offered = offered_counts(&reqs, profiles.len());
+    let gpus = [T4.clone(), T4.clone()];
+    let fcfg = ResilienceCfg {
+        events: vec![ev(500.0, 0, FaultKind::Down), ev(500.0, 1, FaultKind::Down)],
+        ..Default::default()
+    };
+    let rep = serve_cluster_stream_faults(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        MaterializedStream::new(reqs, profiles.len()),
+        1_500.0,
+        3,
+        ExecOpts::default(),
+        Some(&fcfg),
+    );
+    assert_conserved(&rep, &offered, "total outage");
+    let res = rep.resilience.expect("resilience stats");
+    assert!(
+        res.unroutable_rejects > 0,
+        "arrivals during a total outage must become typed unroutable rejects"
+    );
+    // Two engines down from 500 ms to the 1500 ms horizon = 2/3 uptime.
+    assert!(
+        (res.availability_pct - 100.0 * (1.0 - 1_000.0 / 3_000.0)).abs() < 1e-6,
+        "availability integral is off: {}",
+        res.availability_pct
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Deadline admission by SLO class.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_admission_rejects_by_class() {
+    // Losing one of two engines mid-run piles the survivor's queue far
+    // past any deadline budget: with admission armed, arrivals whose
+    // best-case estimate cannot make their deadline are rejected at the
+    // front door, tallied per SLO class.
+    let (profiles, rates) = c4();
+    let reqs = c4_requests(&rates, &profiles, 2_000.0, 9);
+    let offered = offered_counts(&reqs, profiles.len());
+    let gpus = [T4.clone(), T4.clone()];
+    let fcfg = ResilienceCfg {
+        events: vec![ev(800.0, 1, FaultKind::Down)],
+        bulk_models: vec!["vgg19".into()],
+        admission: true,
+        ..Default::default()
+    };
+    let rep = serve_cluster_stream_faults(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        MaterializedStream::new(reqs, profiles.len()),
+        2_000.0,
+        9,
+        ExecOpts::default(),
+        Some(&fcfg),
+    );
+    assert_conserved(&rep, &offered, "admission");
+    let res = rep.resilience.expect("resilience stats");
+    assert!(
+        res.deadline_rejects_critical + res.deadline_rejects_bulk > 0,
+        "an overloaded survivor must trip deadline admission"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Hedge determinism.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hedge_sweep_fires_and_is_deterministic() {
+    // A permanently degraded engine with tight hedge thresholds: the
+    // sweep must actually fire, every won hedge must also be a fired
+    // hedge, and the whole run — analytic first-completion-wins, ties
+    // broken by engine index — must reproduce byte-for-byte, in both
+    // exec modes and at any thread count.
+    let (profiles, rates, reqs) = longtail_workload(24, 1.1, 600.0, 3_000.0, 42);
+    let offered = offered_counts(&reqs, profiles.len());
+    let lcfg = LifecycleCfg { mem_budget_mib: 4_096, ..Default::default() };
+    let fcfg = ResilienceCfg {
+        events: vec![ev(1_000.0, 1, FaultKind::Degraded)],
+        hedge_check_ms: 20.0,
+        hedge_critical_ms: 5.0,
+        hedge_bulk_ms: 50.0,
+        ..Default::default()
+    };
+    let run = |opts: ExecOpts| {
+        serve_longtail_stream_faults(
+            &profiles,
+            &rates,
+            &longtail_gpus(),
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &lcfg,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            3_000.0,
+            42,
+            opts,
+            Some(&fcfg),
+        )
+    };
+    let serial = ExecOpts {
+        threads: Parallelism::Threads(1),
+        mode: ExecMode::Epoch,
+        ..Default::default()
+    };
+    let a = run(serial);
+    assert_conserved(&a, &offered, "hedged run");
+    let res = a.resilience.as_ref().expect("resilience stats");
+    assert!(
+        res.hedges_fired > 0,
+        "a 2 s degraded window at a 20 ms cadence must find stuck requests"
+    );
+    assert!(res.hedges_won <= res.hedges_fired, "won hedges are a subset of fired hedges");
+    let a_json = a.to_json().to_string_pretty();
+    // Same inputs, same bytes — twice serially, then sparse + threaded.
+    assert_eq!(a_json, run(serial).to_json().to_string_pretty(), "repeat run diverged");
+    let sparse = ExecOpts {
+        threads: Parallelism::Threads(2),
+        mode: ExecMode::Sparse,
+        ..Default::default()
+    };
+    assert_eq!(
+        a_json,
+        run(sparse).to_json().to_string_pretty(),
+        "hedged run diverged across exec mode x threads"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The shipped scenario file.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_engine_failure_scenario_runs() {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/cluster_engine_failure.json");
+    let sc = Scenario::from_file(&path).expect("shipped config must load");
+    let f = sc.faults.as_ref().expect("config must carry a faults block");
+    assert!(f.admission, "the shipped scenario arms deadline admission");
+    assert!(!f.bulk_models.is_empty(), "the shipped scenario declares SLO classes");
+    let rep = dstack::config::run_cluster_scenario(&sc);
+    let res = rep.resilience.expect("fault run must attach resilience stats");
+    assert!(res.engine_downs >= 1, "the shipped timeline takes an engine down");
+    assert!(res.fault_events >= 3);
+    assert!(res.availability_pct < 100.0);
+}
