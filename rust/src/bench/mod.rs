@@ -151,7 +151,9 @@ impl Bench {
             online.push(dt);
             iters += 1;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Timer deltas are never NaN; total_cmp keeps the same order
+        // without a panicking unwrap in the measurement loop.
+        samples.sort_by(|a, b| a.total_cmp(b));
         BenchResult {
             name: name.to_string(),
             iters,
@@ -263,6 +265,17 @@ mod tests {
             "recorded result missing from summary"
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sample_sort_total_cmp() {
+        // Regression for the partial_cmp().unwrap() this sort used:
+        // ascending total_cmp matches partial_cmp on finite samples and
+        // places NaN last (greatest) instead of panicking.
+        let mut v = vec![3.0f64, 1.0, f64::NAN, 2.0];
+        v.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(&v[..3], &[1.0, 2.0, 3.0]);
+        assert!(v[3].is_nan());
     }
 
     #[test]

@@ -48,8 +48,10 @@ pub use routing::{Router, RoutingPolicy};
 
 use crate::faults::{
     pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg, ResilienceStats,
+    SloClass,
 };
 use crate::gpu::{ms_to_us, Us};
+use crate::overload::{co_locate_variants, Overload, OverloadSpec, OverloadStats, RejectKind};
 use crate::metrics::RunReport;
 use crate::obs::{EngineObs, EventKind, ObsReport, Recorder, NO_MODEL};
 use crate::profile::{GpuSpec, ModelProfile};
@@ -186,6 +188,11 @@ pub struct ClusterReport {
     /// `Some` only when a `"faults"` config is active; serialized only
     /// when present, so every pre-existing golden shape is unchanged.
     pub resilience: Option<ResilienceStats>,
+    /// Overload-control telemetry ([`crate::overload`]: retries,
+    /// breakers, brownout) — `Some` only when an `"overload"` config is
+    /// active; serialized only when present, so every pre-existing
+    /// report and golden byte is unchanged.
+    pub overload: Option<OverloadStats>,
     /// Execution-core telemetry (barriers run/elided, lookahead).
     /// **Never serialized** by [`Self::to_json`]: `exec_mode` and
     /// thread count must not change report bytes. Surfaced by
@@ -265,6 +272,9 @@ impl ClusterReport {
         if let Some(stats) = &self.resilience {
             pairs.push(("resilience", stats.to_json()));
         }
+        if let Some(stats) = &self.overload {
+            pairs.push(("overload", stats.to_json()));
+        }
         Json::obj(pairs)
     }
 }
@@ -339,6 +349,9 @@ struct PlacementDriver<'a> {
     /// Fault timeline + front-door state — `None` for plain runs, in
     /// which case every hook below is pass-through.
     res: Option<Resilience>,
+    /// Overload layer (retry/breaker/brownout) — `None` keeps the
+    /// dispatch path byte-identical to the pre-overload code.
+    ovl: Option<Overload>,
     /// Control-lane recorder: arrive/route/reject, by global model.
     obs: Recorder,
 }
@@ -427,6 +440,126 @@ impl PlacementDriver<'_> {
             if let Some(res) = &mut self.res {
                 res.note_reroute(1);
             }
+        }
+    }
+
+    /// The overload front door (armed `ovl` only): family-ordered
+    /// admission — the primary first, then its brownout variants — with
+    /// per-engine breaker feeding/filtering, resolved to a dispatch, a
+    /// scheduled retry, or a typed terminal reject. `attempt` is 0 for
+    /// fresh arrivals and the retry ordinal for re-entries.
+    fn overload_dispatch(
+        &mut self,
+        t: Us,
+        attempt: u32,
+        mut req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        let m = req.model;
+        let order = self.ovl.as_ref().expect("overload dispatch without layer").service_order(m);
+        let mut cause = RejectKind::Unroutable;
+        for (fi, &fm) in order.iter().enumerate() {
+            let healthy: Vec<Replica> = self.pl.replicas[fm]
+                .iter()
+                .filter(|r| self.res.as_ref().is_none_or(|res| res.routable(r.gpu)))
+                .cloned()
+                .collect();
+            if healthy.is_empty() {
+                continue; // `cause` stays Unroutable for the primary
+            }
+            // Every healthy replica's estimate feeds its breaker; only
+            // breaker-approved replicas stay candidates.
+            let mut open: Vec<Replica> = Vec::with_capacity(healthy.len());
+            let mut best = Us::MAX;
+            for rep in &healthy {
+                let load = self
+                    .cache
+                    .backlog(engines, rep)
+                    .saturating_add(self.res.as_ref().map_or(0, |r| r.penalty_items(rep.gpu)));
+                let est = queue_est_us(load, rep.batch, rep.capacity_rps);
+                let miss = t.saturating_add(est) > req.deadline;
+                let ovl = self.ovl.as_mut().expect("checked above");
+                ovl.note_estimate(t, rep.gpu, miss);
+                if ovl.allows(t, rep.gpu) {
+                    if est < best {
+                        best = est;
+                    }
+                    open.push(rep.clone());
+                }
+            }
+            if open.is_empty() {
+                if fi == 0 {
+                    cause = RejectKind::BreakerOpen;
+                }
+                continue;
+            }
+            if t.saturating_add(best) > req.deadline {
+                if fi == 0 {
+                    cause = RejectKind::Deadline;
+                }
+                continue;
+            }
+            let cache = &mut self.cache;
+            let res = self.res.as_ref();
+            let pick = self.router.route(fm, &open, |rep| {
+                cache
+                    .backlog(engines, rep)
+                    .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)))
+            });
+            let (rep_gpu, rep_local) = (open[pick].gpu, open[pick].local);
+            if self.obs.on() {
+                self.obs.event(EventKind::Route, t, fm as u32, req.id, rep_gpu as u64);
+            }
+            req.model = rep_local;
+            engines[rep_gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
+            self.cache.note_inject(rep_gpu, rep_local);
+            touched.mark(rep_gpu);
+            let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+            let ovl = self.ovl.as_mut().expect("checked above");
+            ovl.note_dispatch(t, rep_gpu);
+            if fi > 0 {
+                ovl.note_degraded(class);
+            }
+            if attempt > 0 {
+                ovl.note_retry_served();
+            }
+            return;
+        }
+        self.overload_reject(t, attempt, &req, cause);
+    }
+
+    /// A request the overload front door could not place anywhere in its
+    /// family: schedule a backoff retry if budget remains, else issue
+    /// the terminal typed reject (`retry_exhausted` when retries are on,
+    /// the original cause otherwise).
+    fn overload_reject(&mut self, t: Us, attempt: u32, req: &Request, cause: RejectKind) {
+        let m = req.model;
+        if self.ovl.as_mut().expect("overload reject without layer").try_schedule_retry(
+            t,
+            req,
+            attempt + 1,
+        ) {
+            return; // re-enters at its release barrier; not terminal
+        }
+        self.rejected[m] += 1;
+        let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+        let forward = self.ovl.as_mut().expect("checked above").note_terminal(cause, class);
+        match forward {
+            Some(RejectKind::Deadline) => {
+                if let Some(res) = &mut self.res {
+                    res.note_deadline_reject(m);
+                }
+            }
+            Some(RejectKind::Unroutable) => {
+                if let Some(res) = &mut self.res {
+                    res.note_unroutable();
+                }
+            }
+            _ => {}
+        }
+        if self.obs.on() {
+            self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
         }
     }
 
@@ -632,6 +765,10 @@ impl PlacementDriver<'_> {
                         touched.mark(g);
                         touched.mark(t_gpu);
                         self.res.as_mut().expect("checked").note_hedges(n, n);
+                        // The losing engine's breaker sees the hedge loss.
+                        if let Some(ovl) = &mut self.ovl {
+                            ovl.note_hedge_loss(t, g);
+                        }
                     }
                 }
             }
@@ -645,7 +782,13 @@ impl EpochDriver for PlacementDriver<'_> {
     }
 
     fn next_event(&self) -> Option<Us> {
-        self.res.as_ref().and_then(|r| r.next_event())
+        let res = self.res.as_ref().and_then(|r| r.next_event());
+        let ovl = self.ovl.as_ref().and_then(|o| o.next_release());
+        match (res, ovl) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        }
     }
 
     fn candidates_of(&self, model: usize) -> &[usize] {
@@ -653,7 +796,7 @@ impl EpochDriver for PlacementDriver<'_> {
     }
 
     fn elides_barriers(&self) -> bool {
-        !self.router.policy().reads_backlogs() && self.res.is_none()
+        !self.router.policy().reads_backlogs() && self.res.is_none() && self.ovl.is_none()
     }
 
     fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
@@ -687,6 +830,13 @@ impl EpochDriver for PlacementDriver<'_> {
         if self.res.is_some() {
             self.apply_faults(t, engines, touched);
         }
+        if self.ovl.is_some() {
+            // Matured backoff retries re-enter through the front door in
+            // deterministic (release, schedule) order.
+            for (attempt, req) in self.ovl.as_mut().expect("checked").due_retries(t) {
+                self.overload_dispatch(t, attempt, req, engines, touched);
+            }
+        }
     }
 
     fn route(
@@ -704,6 +854,10 @@ impl EpochDriver for PlacementDriver<'_> {
             if self.obs.on() {
                 self.obs.event(EventKind::Reject, req.arrival, req.model as u32, req.id, 0);
             }
+            return;
+        }
+        if self.ovl.is_some() {
+            self.overload_dispatch(t, 0, req, engines, touched);
             return;
         }
         self.dispatch_one(t, req, engines, touched, false);
@@ -807,6 +961,33 @@ pub fn run_placement_stream_faults<S: ArrivalStream>(
     opts: ExecOpts,
     faults: Option<&ResilienceCfg>,
 ) -> ClusterReport {
+    run_placement_stream_overload(
+        profiles, gpus, pl, stream, horizon_ms, routing, sched, seed, label, opts, faults, None,
+    )
+}
+
+/// [`run_placement_stream_faults`] with the overload-control layer
+/// ([`crate::overload`]: backoff retries, per-engine circuit breakers,
+/// brownout variant fallback). With `overload: None` this is the exact
+/// faults path; when armed, the overload layer implies deadline-aware
+/// admission (a default front door is synthesized if no fault config is
+/// given), retry releases become driver events, and the report carries
+/// [`ClusterReport::overload`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_placement_stream_overload<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    pl: &Placement,
+    stream: S,
+    horizon_ms: f64,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    seed: u64,
+    label: &str,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+    overload: Option<&OverloadSpec>,
+) -> ClusterReport {
     assert_eq!(pl.n_gpus(), gpus.len(), "placement built for a different cluster");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
@@ -840,10 +1021,24 @@ pub fn run_placement_stream_faults<S: ArrivalStream>(
         .iter()
         .map(|reps| reps.iter().map(|r| r.gpu).collect())
         .collect();
-    let res = faults.map(|cfg| {
+    // The overload layer routes through the resilience front door's
+    // admission estimate; when armed without an explicit fault config,
+    // synthesize a minimal admission-only door (no faults, no hedging).
+    let synth_cfg;
+    let res_cfg = match (faults, overload) {
+        (Some(cfg), _) => Some(cfg),
+        (None, Some(_)) => {
+            synth_cfg =
+                ResilienceCfg { admission: true, hedge: false, ..ResilienceCfg::default() };
+            Some(&synth_cfg)
+        }
+        (None, None) => None,
+    };
+    let res = res_cfg.map(|cfg| {
         Resilience::new(cfg.clone(), profiles, n_gpus, horizon)
             .expect("invalid faults config (validate at the config layer)")
     });
+    let ovl = overload.map(|spec| Overload::new(spec, n_gpus));
     let mut driver = PlacementDriver {
         pl,
         profiles,
@@ -853,12 +1048,25 @@ pub fn run_placement_stream_faults<S: ArrivalStream>(
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
         res,
+        ovl,
         obs: Recorder::new(opts.obs, horizon),
     };
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
     let control_obs = driver.obs.finish(profiles.iter().map(|p| p.name.clone()).collect());
-    let rejected = driver.rejected;
+    let mut rejected = driver.rejected;
     let res = driver.res;
+    let mut ovl = driver.ovl;
+    // Retries still pending at the horizon never got a terminal answer:
+    // count them as retry-exhausted rejects so every offered request is
+    // accounted (served + dropped + typed rejects == offered).
+    if let Some(o) = &mut ovl {
+        for (_attempt, req) in o.drain_leftover() {
+            rejected[req.model] += 1;
+            let class =
+                res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(req.model));
+            o.note_retry_exhausted(class);
+        }
+    }
 
     let reports: Vec<Option<RunReport>> = engines
         .iter_mut()
@@ -954,6 +1162,7 @@ pub fn run_placement_stream_faults<S: ArrivalStream>(
         adaptive: None,
         lifecycle: None,
         resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
+        overload: ovl.map(|o| o.finalize()),
         exec: Some(exec_stats),
         obs,
     }
@@ -1060,6 +1269,46 @@ pub fn serve_cluster_stream_faults<S: ArrivalStream>(
     let label = format!("{}+{}+{}", placement.name(), routing.name(), sched.name());
     run_placement_stream_faults(
         profiles, gpus, &pl, stream, horizon_ms, routing, sched, seed, &label, opts, faults,
+    )
+}
+
+/// [`serve_cluster_stream_faults`] with the overload-control layer.
+/// `profiles` must already be the expanded family list (primaries
+/// first, then brownout variants, per [`crate::overload::expand_profiles`])
+/// and `offered_rps` covers the full expanded list with variant rates
+/// at 0. Placement bin-packs the primaries only; variants are then
+/// co-located onto their primaries' GPUs where knee headroom and memory
+/// allow ([`co_locate_variants`]), so a brownout never displaces a
+/// primary replica.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_cluster_stream_overload<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+    overload: Option<&OverloadSpec>,
+) -> ClusterReport {
+    let pl = match overload {
+        Some(spec) if spec.map.n_total() > spec.map.n_primary => {
+            let n_p = spec.map.n_primary;
+            assert_eq!(profiles.len(), spec.map.n_total(), "profiles not expanded for variants");
+            let mut pl = place(&profiles[..n_p], &offered_rps[..n_p], gpus, placement);
+            co_locate_variants(&mut pl, profiles, &spec.map, gpus);
+            pl
+        }
+        _ => place(profiles, offered_rps, gpus, placement),
+    };
+    let label = format!("{}+{}+{}", placement.name(), routing.name(), sched.name());
+    run_placement_stream_overload(
+        profiles, gpus, &pl, stream, horizon_ms, routing, sched, seed, &label, opts, faults,
+        overload,
     )
 }
 

@@ -88,6 +88,12 @@ pub struct ModelSpec {
     /// precedence over `rate`/`trace`/`poisson`; placement sizing uses
     /// its [`crate::workload::Arrivals::peak_rate`].
     pub arrivals: Option<crate::workload::Arrivals>,
+    /// Optional degraded brownout variants (a `"variants"` array) the
+    /// overload layer may serve when the primary cannot meet its
+    /// deadline — see [`crate::overload::VariantSpec`]. Requires an
+    /// `"overload"` block; incompatible with generated `lifecycle`
+    /// fleets.
+    pub variants: Vec<crate::overload::VariantSpec>,
 }
 
 /// Trace-replay block of a scenario (`"workload": {"trace": {...}}`):
@@ -180,6 +186,11 @@ pub struct Scenario {
     /// timeline is validated at load; the report gains a `resilience`
     /// block only when this is present.
     pub faults: Option<crate::faults::ResilienceCfg>,
+    /// Optional overload-control block (requires `cluster`) — retry
+    /// backoff, per-engine circuit breakers, brownout variant fallback;
+    /// see [`crate::overload::OverloadCfg`] and docs/CONFIG.md. The
+    /// report gains an `overload` block only when this is present.
+    pub overload: Option<crate::overload::OverloadCfg>,
     /// Observability knobs (the `"observability"` block — see
     /// `docs/CONFIG.md` and [`crate::obs`]). Default-off: no tracing,
     /// no time-series, exact latency vectors — report bytes unchanged.
@@ -332,12 +343,31 @@ impl Scenario {
                 Some(aj) => Some(parse_arrivals(aj)?),
                 None => None,
             };
+            let variants = match mj.get("variants") {
+                Some(Json::Arr(vs)) => {
+                    let mut out = Vec::new();
+                    for vj in vs {
+                        let v = crate::overload::VariantSpec {
+                            name: vj.req_str("name")?.to_string(),
+                            knee_pct: vj.req_u64("knee_pct")? as u32,
+                            latency_scale: vj.req_f64("latency_scale")?,
+                            mem_mib: vj.req_u64("mem_mib")?,
+                        };
+                        v.validate().map_err(|e| format!("model '{name}': {e}"))?;
+                        out.push(v);
+                    }
+                    out
+                }
+                Some(_) => return Err("'variants' must be an array".into()),
+                None => Vec::new(),
+            };
             models.push(ModelSpec {
                 name,
                 rate: mj.opt_f64("rate", 0.0),
                 trace,
                 slo_ms: mj.get("slo_ms").and_then(Json::as_f64),
                 arrivals,
+                variants,
             });
         }
         let cluster = match j.get("cluster") {
@@ -574,6 +604,42 @@ impl Scenario {
             }
             None => None,
         };
+        let overload = match j.get("overload") {
+            Some(oj) => {
+                if cluster.is_none() {
+                    return Err("'overload' requires a 'cluster' block \
+                                (the overload layer fronts cluster engines)"
+                        .into());
+                }
+                let d = crate::overload::OverloadCfg::default();
+                let cfg = crate::overload::OverloadCfg {
+                    max_retries: oj.opt_u64("max_retries", d.max_retries as u64) as u32,
+                    backoff_base_ms: oj.opt_f64("backoff_base_ms", d.backoff_base_ms),
+                    backoff_cap_ms: oj.opt_f64("backoff_cap_ms", d.backoff_cap_ms),
+                    breaker_k: oj.opt_u64("breaker_k", d.breaker_k as u64) as u32,
+                    breaker_window_ms: oj.opt_f64("breaker_window_ms", d.breaker_window_ms),
+                    breaker_cooldown_ms: oj
+                        .opt_f64("breaker_cooldown_ms", d.breaker_cooldown_ms),
+                    brownout: oj.opt_bool("brownout", d.brownout),
+                };
+                cfg.validate()?;
+                Some(cfg)
+            }
+            None => None,
+        };
+        if models.iter().any(|m| !m.variants.is_empty()) {
+            if overload.is_none() {
+                return Err("model 'variants' require an 'overload' block \
+                            (variants are served by the brownout fallback)"
+                    .into());
+            }
+            if lifecycle.is_some() {
+                return Err("model 'variants' are incompatible with a 'lifecycle' fleet \
+                            (fleet entries are generated from the base zoo; declare \
+                             variants on static/adaptive cluster scenarios)"
+                    .into());
+            }
+        }
         let parallelism = match j.get("parallelism") {
             None => crate::cluster::Parallelism::Auto,
             Some(v) => match (v.as_str(), v.as_u64()) {
@@ -624,7 +690,7 @@ impl Scenario {
             }
             None => crate::obs::ObsCfg::default(),
         };
-        Ok(Scenario {
+        let sc = Scenario {
             name: j.opt_str("name", "scenario").to_string(),
             gpu,
             n_gpus: j.opt_u64("n_gpus", 1) as usize,
@@ -641,8 +707,13 @@ impl Scenario {
             unified,
             workload,
             faults,
+            overload,
             obs,
-        })
+        };
+        // Expansion validates variant-name uniqueness against the model
+        // list — run it here so a bad block fails at load, not mid-run.
+        sc.overload_expanded()?;
+        Ok(sc)
     }
 
     pub fn from_file(path: &Path) -> Result<Scenario, String> {
@@ -684,6 +755,24 @@ impl Scenario {
                 }
                 if let Some(slo) = m.slo_ms {
                     pairs.push(("slo_ms", Json::from(slo)));
+                }
+                if !m.variants.is_empty() {
+                    pairs.push((
+                        "variants",
+                        Json::Arr(
+                            m.variants
+                                .iter()
+                                .map(|v| {
+                                    Json::obj(vec![
+                                        ("name", Json::from(v.name.as_str())),
+                                        ("knee_pct", Json::from(v.knee_pct as u64)),
+                                        ("latency_scale", Json::from(v.latency_scale)),
+                                        ("mem_mib", Json::from(v.mem_mib)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
                 }
                 if let Some(a) = &m.arrivals {
                     pairs.push(("arrivals", arrivals_to_json(a)));
@@ -809,6 +898,20 @@ impl Scenario {
                 ]),
             ));
         }
+        if let Some(o) = &self.overload {
+            pairs.push((
+                "overload",
+                Json::obj(vec![
+                    ("max_retries", Json::from(o.max_retries as u64)),
+                    ("backoff_base_ms", Json::from(o.backoff_base_ms)),
+                    ("backoff_cap_ms", Json::from(o.backoff_cap_ms)),
+                    ("breaker_k", Json::from(o.breaker_k as u64)),
+                    ("breaker_window_ms", Json::from(o.breaker_window_ms)),
+                    ("breaker_cooldown_ms", Json::from(o.breaker_cooldown_ms)),
+                    ("brownout", Json::from(o.brownout)),
+                ]),
+            ));
+        }
         if self.obs != crate::obs::ObsCfg::default() {
             pairs.push((
                 "observability",
@@ -888,6 +991,34 @@ impl Scenario {
         self.arrivals().iter().map(|a| a.rate_at(0.0)).collect()
     }
 
+    /// The overload layer's expanded inputs for the declared-model
+    /// cluster paths (static/adaptive/trace): the profile list with
+    /// brownout variants appended after the primaries, and the
+    /// [`crate::overload::OverloadSpec`] binding the knobs to the
+    /// variant map. `Ok(None)` without an `"overload"` block; errors on
+    /// an invalid variant set (duplicate names, unknown primaries).
+    /// With `brownout: false` the variant declarations are inert — the
+    /// map stays trivial and no variant profiles are added. Lifecycle/
+    /// unified scenario paths build their own trivial map over the
+    /// generated fleet instead (variants are rejected there at parse).
+    pub fn overload_expanded(
+        &self,
+    ) -> Result<Option<(Vec<ModelProfile>, crate::overload::OverloadSpec)>, String> {
+        let Some(cfg) = &self.overload else { return Ok(None) };
+        let base = self.profiles();
+        let decls: Vec<(usize, crate::overload::VariantSpec)> = if cfg.brownout {
+            self.models
+                .iter()
+                .enumerate()
+                .flat_map(|(i, m)| m.variants.iter().cloned().map(move |v| (i, v)))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let (profiles, map) = crate::overload::expand_profiles(&base, &decls)?;
+        Ok(Some((profiles, crate::overload::OverloadSpec { cfg: cfg.clone(), map })))
+    }
+
     /// Execution-core options for the cluster path: the scenario's
     /// thread budget + barrier mode in the form the drivers take.
     pub fn exec_opts(&self) -> crate::cluster::ExecOpts {
@@ -962,8 +1093,14 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         return run_trace_scenario(sc).expect("trace replay failed");
     }
     let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
-    let profiles = sc.profiles();
-    let rates = sc.offered_rates();
+    // Variants (if any) append to the profile list with zero planned
+    // rate — brownout serves them on co-located spare capacity, the
+    // placement never sizes for them. Arrivals only target primaries.
+    let (profiles, mut rates, ovl) = match sc.overload_expanded().expect("validated at parse") {
+        Some((profiles, spec)) => (profiles, sc.offered_rates(), Some(spec)),
+        None => (sc.profiles(), sc.offered_rates(), None),
+    };
+    rates.resize(profiles.len(), 0.0);
     let arrivals = sc.arrivals();
     let specs: Vec<_> = arrivals
         .into_iter()
@@ -974,7 +1111,7 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
     // never materialized (byte-identical to the collected path).
     let stream = MergedStream::new(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::cluster::serve_cluster_stream_faults(
+    crate::cluster::serve_cluster_stream_overload(
         &profiles,
         &rates,
         &gpus,
@@ -986,6 +1123,7 @@ pub fn run_cluster_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.seed,
         sc.exec_opts(),
         sc.faults.as_ref(),
+        ovl.as_ref(),
     )
 }
 
@@ -1010,15 +1148,22 @@ pub fn trace_spec(sc: &Scenario) -> crate::workload::TraceSpec {
 pub fn run_trace_scenario(sc: &Scenario) -> Result<crate::cluster::ClusterReport, String> {
     let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
     let w = sc.workload.as_ref().expect("scenario has no workload.trace block");
-    let profiles = sc.profiles();
+    // The trace addresses declared (primary) names; brownout variants
+    // append after them so recorded indices are unchanged.
+    let (profiles, ovl) = match sc.overload_expanded().expect("validated at parse") {
+        Some((profiles, spec)) => (profiles, Some(spec)),
+        None => (sc.profiles(), None),
+    };
     let spec = trace_spec(sc);
     let stream = crate::workload::TraceStream::open(&w.path, &spec)?;
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
     Ok(if sc.adaptive.is_some() {
         let adaptive = sc.adaptive.clone().unwrap_or_default();
-        crate::controlplane::run_adaptive_stream_faults(
+        let mut rates = sc.initial_rates();
+        rates.resize(profiles.len(), 0.0);
+        crate::controlplane::run_adaptive_stream_overload(
             &profiles,
-            &sc.initial_rates(),
+            &rates,
             &gpus,
             cl.placement,
             cl.routing,
@@ -1029,11 +1174,14 @@ pub fn run_trace_scenario(sc: &Scenario) -> Result<crate::cluster::ClusterReport
             sc.seed,
             sc.exec_opts(),
             sc.faults.as_ref(),
+            ovl.as_ref(),
         )
     } else {
-        crate::cluster::serve_cluster_stream_faults(
+        let mut rates = sc.offered_rates();
+        rates.resize(profiles.len(), 0.0);
+        crate::cluster::serve_cluster_stream_overload(
             &profiles,
-            &sc.offered_rates(),
+            &rates,
             &gpus,
             cl.placement,
             cl.routing,
@@ -1043,6 +1191,7 @@ pub fn run_trace_scenario(sc: &Scenario) -> Result<crate::cluster::ClusterReport
             sc.seed,
             sc.exec_opts(),
             sc.faults.as_ref(),
+            ovl.as_ref(),
         )
     })
 }
@@ -1059,8 +1208,11 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
     }
     let cl = sc.cluster.as_ref().expect("scenario has no cluster block");
     let adaptive = sc.adaptive.clone().unwrap_or_default();
-    let profiles = sc.profiles();
-    let initial = sc.initial_rates();
+    let (profiles, mut initial, ovl) = match sc.overload_expanded().expect("validated at parse") {
+        Some((profiles, spec)) => (profiles, sc.initial_rates(), Some(spec)),
+        None => (sc.profiles(), sc.initial_rates(), None),
+    };
+    initial.resize(profiles.len(), 0.0);
     let arrivals = sc.arrivals();
     let specs: Vec<_> = arrivals
         .into_iter()
@@ -1069,7 +1221,7 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         .collect();
     let stream = MergedStream::new(&specs, sc.horizon_ms, sc.seed);
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
-    crate::controlplane::run_adaptive_stream_faults(
+    crate::controlplane::run_adaptive_stream_overload(
         &profiles,
         &initial,
         &gpus,
@@ -1082,6 +1234,7 @@ pub fn run_adaptive_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.seed,
         sc.exec_opts(),
         sc.faults.as_ref(),
+        ovl.as_ref(),
     )
 }
 
@@ -1104,7 +1257,13 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
     );
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
     let stream = crate::workload::MaterializedStream::new(reqs, profiles.len());
-    crate::lifecycle::serve_longtail_stream_faults(
+    // Variants are rejected on lifecycle scenarios at parse; the
+    // overload knobs (retry/breaker) still apply over a trivial map.
+    let ovl = sc.overload.as_ref().map(|cfg| crate::overload::OverloadSpec {
+        cfg: cfg.clone(),
+        map: crate::overload::VariantMap::trivial(profiles.len()),
+    });
+    crate::lifecycle::serve_longtail_stream_overload(
         &profiles,
         &rates,
         &gpus,
@@ -1117,6 +1276,7 @@ pub fn run_lifecycle_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.seed,
         sc.exec_opts(),
         sc.faults.as_ref(),
+        ovl.as_ref(),
     )
 }
 
@@ -1156,7 +1316,13 @@ pub fn run_unified_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
     };
     let gpus: Vec<GpuSpec> = cl.gpus.iter().map(|g| (*g).clone()).collect();
     let stream = crate::workload::MaterializedStream::new(reqs, profiles.len());
-    crate::unified::run_unified_stream_faults(
+    // As on the lifecycle path: trivial variant map over the generated
+    // fleet, retry/breaker knobs still apply.
+    let ovl = sc.overload.as_ref().map(|cfg| crate::overload::OverloadSpec {
+        cfg: cfg.clone(),
+        map: crate::overload::VariantMap::trivial(profiles.len()),
+    });
+    crate::unified::run_unified_stream_overload(
         &profiles,
         &rates,
         &gpus,
@@ -1169,6 +1335,7 @@ pub fn run_unified_scenario(sc: &Scenario) -> crate::cluster::ClusterReport {
         sc.seed,
         sc.exec_opts(),
         sc.faults.as_ref(),
+        ovl.as_ref(),
     )
 }
 

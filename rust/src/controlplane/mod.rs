@@ -59,8 +59,11 @@ use crate::cluster::{
     PlacementPolicy, Replica, Router, RoutingPolicy,
 };
 use crate::cluster::p99_of;
-use crate::faults::{pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg};
+use crate::faults::{
+    pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg, SloClass,
+};
 use crate::gpu::{ms_to_us, Us};
+use crate::overload::{co_locate_variants, Overload, OverloadSpec, RejectKind};
 use crate::metrics::RunReport;
 use crate::obs::{EngineObs, EventKind, ObsCfg, ObsReport, Recorder, NO_MODEL};
 use crate::profile::{GpuSpec, ModelProfile};
@@ -468,6 +471,9 @@ struct AdaptiveDriver<'a> {
     /// Fault timeline + front-door state — `None` for plain runs, in
     /// which case every fault hook is pass-through.
     res: Option<Resilience>,
+    /// Overload-control layer (retry backoff, breakers, brownout) —
+    /// `None` leaves the faults path byte-identical.
+    ovl: Option<Overload>,
     /// Observability config copied into engines created mid-run.
     obs_cfg: ObsCfg,
     /// Control-lane recorder: arrive/route/reject + replans.
@@ -538,6 +544,128 @@ impl AdaptiveDriver<'_> {
             if let Some(res) = &mut self.res {
                 res.note_reroute(1);
             }
+        }
+    }
+
+    /// The overload front door (armed `ovl` only): family-ordered
+    /// admission over the *live routable* replica view — primary first,
+    /// then its brownout variants (routable only where the rebalancer's
+    /// co-location placed them) — with per-engine breaker
+    /// feeding/filtering, resolved to a dispatch, a scheduled retry, or
+    /// a typed terminal reject. `attempt` is 0 for fresh arrivals and
+    /// the retry ordinal for re-entries.
+    fn overload_dispatch(
+        &mut self,
+        t: Us,
+        attempt: u32,
+        mut req: Request,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        let m = req.model;
+        let order = self.ovl.as_ref().expect("overload dispatch without layer").service_order(m);
+        let mut cause = RejectKind::Unroutable;
+        for (fi, &fm) in order.iter().enumerate() {
+            let healthy: Vec<Replica> = self.routable[fm]
+                .iter()
+                .filter(|r| self.res.as_ref().is_none_or(|res| res.routable(r.gpu)))
+                .cloned()
+                .collect();
+            if healthy.is_empty() {
+                continue; // `cause` stays Unroutable for the primary
+            }
+            // Every healthy replica's estimate feeds its breaker; only
+            // breaker-approved replicas stay candidates.
+            let mut open: Vec<Replica> = Vec::with_capacity(healthy.len());
+            let mut best = Us::MAX;
+            for rep in &healthy {
+                let load = self
+                    .cache
+                    .backlog(engines, rep)
+                    .saturating_add(self.res.as_ref().map_or(0, |r| r.penalty_items(rep.gpu)));
+                let est = queue_est_us(load, rep.batch, rep.capacity_rps);
+                let miss = t.saturating_add(est) > req.deadline;
+                let ovl = self.ovl.as_mut().expect("checked above");
+                ovl.note_estimate(t, rep.gpu, miss);
+                if ovl.allows(t, rep.gpu) {
+                    if est < best {
+                        best = est;
+                    }
+                    open.push(rep.clone());
+                }
+            }
+            if open.is_empty() {
+                if fi == 0 {
+                    cause = RejectKind::BreakerOpen;
+                }
+                continue;
+            }
+            if t.saturating_add(best) > req.deadline {
+                if fi == 0 {
+                    cause = RejectKind::Deadline;
+                }
+                continue;
+            }
+            let cache = &mut self.cache;
+            let res = self.res.as_ref();
+            let pick = self.router.route(fm, &open, |rep| {
+                cache
+                    .backlog(engines, rep)
+                    .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)))
+            });
+            let (rep_gpu, rep_local) = (open[pick].gpu, open[pick].local);
+            if self.obs.on() {
+                self.obs.event(EventKind::Route, t, fm as u32, req.id, rep_gpu as u64);
+            }
+            req.model = rep_local;
+            engines[rep_gpu].as_mut().expect("replica on idle GPU").sim.inject(req);
+            self.cache.note_inject(rep_gpu, rep_local);
+            touched.mark(rep_gpu);
+            let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+            let ovl = self.ovl.as_mut().expect("checked above");
+            ovl.note_dispatch(t, rep_gpu);
+            if fi > 0 {
+                ovl.note_degraded(class);
+            }
+            if attempt > 0 {
+                ovl.note_retry_served();
+            }
+            return;
+        }
+        self.overload_reject(t, attempt, &req, cause);
+    }
+
+    /// A request the overload front door could not place anywhere in its
+    /// family: schedule a backoff retry if budget remains, else issue
+    /// the terminal typed reject (`retry_exhausted` when retries are on,
+    /// the original cause otherwise).
+    fn overload_reject(&mut self, t: Us, attempt: u32, req: &Request, cause: RejectKind) {
+        let m = req.model;
+        if self.ovl.as_mut().expect("overload reject without layer").try_schedule_retry(
+            t,
+            req,
+            attempt + 1,
+        ) {
+            return; // re-enters at its release barrier; not terminal
+        }
+        self.rejected[m] += 1;
+        let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+        let forward = self.ovl.as_mut().expect("checked above").note_terminal(cause, class);
+        match forward {
+            Some(RejectKind::Deadline) => {
+                if let Some(res) = &mut self.res {
+                    res.note_deadline_reject(m);
+                }
+            }
+            Some(RejectKind::Unroutable) => {
+                if let Some(res) = &mut self.res {
+                    res.note_unroutable();
+                }
+            }
+            _ => {}
+        }
+        if self.obs.on() {
+            self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
         }
     }
 
@@ -744,6 +872,11 @@ impl AdaptiveDriver<'_> {
                         touched.mark(g);
                         touched.mark(t_gpu);
                         self.res.as_mut().expect("checked").note_hedges(n, n);
+                        // A hedge fired off this engine: that's a strike
+                        // against its breaker.
+                        if let Some(ovl) = &mut self.ovl {
+                            ovl.note_hedge_loss(t, g);
+                        }
                     }
                 }
             }
@@ -764,8 +897,9 @@ impl EpochDriver for AdaptiveDriver<'_> {
         // RR decisions are pure router state; arrivals between control
         // ticks then batch into injection rounds. Demand counting
         // (`window_counts`) happens in `route_free`, identically. Fault
-        // runs never elide: the front door probes backlogs and ages.
-        !self.router.policy().reads_backlogs() && self.res.is_none()
+        // and overload runs never elide: the front door probes backlogs
+        // and ages.
+        !self.router.policy().reads_backlogs() && self.res.is_none() && self.ovl.is_none()
     }
 
     fn route_free(&mut self, _t: Us, req: &Request) -> Option<(usize, usize)> {
@@ -795,7 +929,8 @@ impl EpochDriver for AdaptiveDriver<'_> {
         let t_act = self.pending.iter().map(|&(at, _, _)| at).min();
         let t_tick = if self.next_tick < self.horizon { Some(self.next_tick) } else { None };
         let t_res = self.res.as_ref().and_then(|r| r.next_event());
-        [t_act, t_tick, t_res].into_iter().flatten().min()
+        let t_retry = self.ovl.as_ref().and_then(|o| o.next_release());
+        [t_act, t_tick, t_res, t_retry].into_iter().flatten().min()
     }
 
     /// Mature pending replica activations due at t (faults first: a
@@ -806,32 +941,38 @@ impl EpochDriver for AdaptiveDriver<'_> {
         if self.res.is_some() {
             self.apply_faults(t, engines, touched);
         }
-        if !self.pending.iter().any(|&(at, _, _)| at <= t) {
-            return;
+        if self.pending.iter().any(|&(at, _, _)| at <= t) {
+            let due: Vec<(Us, usize, usize)> =
+                self.pending.iter().copied().filter(|&(at, _, _)| at <= t).collect();
+            self.pending.retain(|&(at, _, _)| at > t);
+            let mut refreshed = Vec::new();
+            for (_, m, idx) in due {
+                let mut lr = self.live[m][idx].clone();
+                activate_replica(
+                    engines,
+                    &mut self.local_map,
+                    self.profiles,
+                    self.gpus,
+                    self.horizon_ms,
+                    self.obs_cfg,
+                    self.sched,
+                    m,
+                    &mut lr,
+                );
+                touched.mark(lr.gpu);
+                self.live[m][idx] = lr;
+                refreshed.push(m);
+            }
+            for m in refreshed {
+                self.refresh_routable(m);
+            }
         }
-        let due: Vec<(Us, usize, usize)> =
-            self.pending.iter().copied().filter(|&(at, _, _)| at <= t).collect();
-        self.pending.retain(|&(at, _, _)| at > t);
-        let mut refreshed = Vec::new();
-        for (_, m, idx) in due {
-            let mut lr = self.live[m][idx].clone();
-            activate_replica(
-                engines,
-                &mut self.local_map,
-                self.profiles,
-                self.gpus,
-                self.horizon_ms,
-                self.obs_cfg,
-                self.sched,
-                m,
-                &mut lr,
-            );
-            touched.mark(lr.gpu);
-            self.live[m][idx] = lr;
-            refreshed.push(m);
-        }
-        for m in refreshed {
-            self.refresh_routable(m);
+        // Matured backoff retries re-enter the front door after faults
+        // and activations so they see the post-barrier replica view.
+        if self.ovl.is_some() {
+            for (attempt, req) in self.ovl.as_mut().expect("checked").due_retries(t) {
+                self.overload_dispatch(t, attempt, req, engines, touched);
+            }
         }
     }
 
@@ -848,6 +989,12 @@ impl EpochDriver for AdaptiveDriver<'_> {
         self.window_counts[model] += 1;
         if self.obs.on() {
             self.obs.event(EventKind::Arrive, req.arrival, model as u32, req.id, 0);
+        }
+        if self.ovl.is_some() {
+            // The overload front door subsumes plain admission: family-
+            // ordered estimates, breaker filtering, retry scheduling.
+            self.overload_dispatch(t, 0, req, engines, touched);
+            return;
         }
         if self.res.as_ref().is_some_and(|r| r.cfg.admission) {
             // Deadline-aware admission: best-case estimate across the
@@ -891,7 +1038,23 @@ impl EpochDriver for AdaptiveDriver<'_> {
         }
         self.stats.replans += 1;
         self.planned_rates = self.estimator.rates().to_vec();
-        let target = place(self.profiles, &self.planned_rates, self.gpus, self.placement);
+        // With brownout variants armed, the rebalancer bin-packs the
+        // primaries only (variants offer no demand of their own) and
+        // then re-derives variant co-location on the new packing.
+        let target = match &self.ovl {
+            Some(ovl) if ovl.map.n_total() > ovl.map.n_primary => {
+                let n_p = ovl.map.n_primary;
+                let mut tgt = place(
+                    &self.profiles[..n_p],
+                    &self.planned_rates[..n_p],
+                    self.gpus,
+                    self.placement,
+                );
+                co_locate_variants(&mut tgt, self.profiles, &ovl.map, self.gpus);
+                tgt
+            }
+            _ => place(self.profiles, &self.planned_rates, self.gpus, self.placement),
+        };
         if self.obs.on() {
             self.obs.count_control(EventKind::Replan, t);
         }
@@ -1085,6 +1248,34 @@ pub fn run_adaptive_stream_faults<S: ArrivalStream>(
     opts: ExecOpts,
     faults: Option<&ResilienceCfg>,
 ) -> ClusterReport {
+    run_adaptive_stream_overload(
+        profiles, initial_rates, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts, faults, None,
+    )
+}
+
+/// [`run_adaptive_stream_faults`] with the overload-control layer
+/// ([`crate::overload`]). `overload: None` is the exact faults path.
+/// When armed, `profiles`/`initial_rates` must be the expanded family
+/// list (primaries first, then variants at rate 0); placement and
+/// every rebalance bin-pack the primaries and co-locate variants onto
+/// their primaries' GPUs where headroom allows.
+#[allow(clippy::too_many_arguments)]
+pub fn run_adaptive_stream_overload<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &AdaptiveCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+    overload: Option<&OverloadSpec>,
+) -> ClusterReport {
     cfg.validate().expect("invalid adaptive config");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
@@ -1093,7 +1284,16 @@ pub fn run_adaptive_stream_faults<S: ArrivalStream>(
     let migration_us = ms_to_us(cfg.migration_cost_ms);
 
     // --- initial placement --------------------------------------------------
-    let initial = place(profiles, initial_rates, gpus, placement);
+    let initial = match overload {
+        Some(spec) if spec.map.n_total() > spec.map.n_primary => {
+            let n_p = spec.map.n_primary;
+            assert_eq!(profiles.len(), spec.map.n_total(), "profiles not expanded for variants");
+            let mut pl = place(&profiles[..n_p], &initial_rates[..n_p], gpus, placement);
+            co_locate_variants(&mut pl, profiles, &spec.map, gpus);
+            pl
+        }
+        _ => place(profiles, initial_rates, gpus, placement),
+    };
     let mut live: Vec<Vec<LiveRep>> = vec![Vec::new(); n_models];
 
     let mut engines: Vec<Option<ExecEngine>> = (0..n_gpus).map(|_| None).collect();
@@ -1155,10 +1355,29 @@ pub fn run_adaptive_stream_faults<S: ArrivalStream>(
         cache: BacklogCache::default(),
         rejected: vec![0u64; n_models],
         next_tick: interval,
-        res: faults.map(|fc| {
-            Resilience::new(fc.clone(), profiles, n_gpus, horizon)
-                .expect("invalid faults config (validate at the config layer)")
-        }),
+        res: {
+            // The overload layer routes through the resilience front
+            // door's admission estimate; when armed without an explicit
+            // fault config, synthesize a minimal admission-only door.
+            let synth_cfg;
+            let res_cfg = match (faults, overload) {
+                (Some(fc), _) => Some(fc),
+                (None, Some(_)) => {
+                    synth_cfg = ResilienceCfg {
+                        admission: true,
+                        hedge: false,
+                        ..ResilienceCfg::default()
+                    };
+                    Some(&synth_cfg)
+                }
+                (None, None) => None,
+            };
+            res_cfg.map(|fc| {
+                Resilience::new(fc.clone(), profiles, n_gpus, horizon)
+                    .expect("invalid faults config (validate at the config layer)")
+            })
+        },
+        ovl: overload.map(|spec| Overload::new(spec, n_gpus)),
         obs_cfg: opts.obs,
         obs: Recorder::new(opts.obs, horizon),
     };
@@ -1171,12 +1390,24 @@ pub fn run_adaptive_stream_faults<S: ArrivalStream>(
         shed_rps,
         estimator,
         mut stats,
-        rejected,
+        mut rejected,
         res,
+        mut ovl,
         obs: mut obs_rec,
         ..
     } = driver;
     stats.est_rates = estimator.rates().to_vec();
+    // Retries still pending at the horizon never got a terminal answer:
+    // count them as retry-exhausted rejects so every offered request is
+    // accounted.
+    if let Some(o) = &mut ovl {
+        for (_attempt, req) in o.drain_leftover() {
+            rejected[req.model] += 1;
+            let class =
+                res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(req.model));
+            o.note_retry_exhausted(class);
+        }
+    }
     let control_obs = obs_rec.finish(profiles.iter().map(|p| p.name.clone()).collect());
 
     // --- finalize + aggregate ----------------------------------------------
@@ -1283,6 +1514,7 @@ pub fn run_adaptive_stream_faults<S: ArrivalStream>(
         adaptive: Some(stats),
         lifecycle: None,
         resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
+        overload: ovl.map(|o| o.finalize()),
         exec: Some(exec_stats),
         obs,
     }

@@ -1151,6 +1151,163 @@ pub fn fig18() -> FigData {
     out
 }
 
+/// Fig. 19 (beyond the paper): brownout under a flash crowd — a
+/// 4-model mix on 2×V100 + T4 where resnet50's arrival rate spikes 5×
+/// for two seconds mid-run, served three ways behind the same
+/// admission front door: **brownout** (retries + breakers + degraded
+/// int8 variants co-resident with their primaries), **retry-only**
+/// (same knobs, variants disabled), and **shed-only** (no overload
+/// layer — over-deadline arrivals are rejected outright). One row per
+/// virtual-time window: goodput (served − SLO misses) and p99 for each
+/// leg. `degraded_share_pct` is the brownout run's *run-level* share of
+/// served requests that landed on a degraded variant (the recorder
+/// aggregates windows per GPU, not per model, so the share has no
+/// per-window split); `spike` marks the flash window.
+pub fn fig19() -> FigData {
+    use crate::cluster::{
+        serve_cluster_stream_overload, ExecOpts, GpuSched, PlacementPolicy, RoutingPolicy,
+    };
+    use crate::faults::ResilienceCfg;
+    use crate::gpu::ms_to_us;
+    use crate::obs::ObsCfg;
+    use crate::overload::{expand_profiles, OverloadCfg, OverloadSpec, VariantMap, VariantSpec};
+    use crate::profile::GpuSpec;
+    use crate::workload::{Arrivals, MergedStream};
+    let horizon_ms = 8_000.0;
+    let seed = 42;
+    let (spike_start_ms, spike_ms) = (3_000.0, 2_000.0);
+    let base: Vec<crate::profile::ModelProfile> = ["resnet50", "vgg19", "mobilenet", "alexnet"]
+        .iter()
+        .map(|n| crate::profile::by_name(n).expect("zoo model"))
+        .collect();
+    let arrivals = [
+        Arrivals::Flash { base: 300.0, mult: 5.0, spike_start_ms, spike_ms },
+        Arrivals::Poisson { rate: 160.0 },
+        Arrivals::Poisson { rate: 400.0 },
+        Arrivals::Poisson { rate: 300.0 },
+    ];
+    let specs: Vec<_> =
+        arrivals.iter().cloned().zip(base.iter()).map(|(a, p)| (a, p.slo_ms)).collect();
+    let decls = vec![
+        (
+            0,
+            VariantSpec {
+                name: "resnet50_int8".into(),
+                knee_pct: 20,
+                latency_scale: 0.5,
+                mem_mib: 400,
+            },
+        ),
+        (
+            1,
+            VariantSpec {
+                name: "vgg19_int8".into(),
+                knee_pct: 30,
+                latency_scale: 0.55,
+                mem_mib: 600,
+            },
+        ),
+    ];
+    let (expanded, map) = expand_profiles(&base, &decls).expect("valid variants");
+    let gpus: Vec<GpuSpec> = ["V100", "V100", "T4"]
+        .iter()
+        .map(|n| GpuSpec::by_name(n).expect("known gpu").clone())
+        .collect();
+    let fcfg = ResilienceCfg {
+        admission: true,
+        hedge: false,
+        bulk_models: vec!["vgg19".into()],
+        ..Default::default()
+    };
+    let ocfg = OverloadCfg { breaker_k: 8, ..Default::default() };
+    let opts = ExecOpts {
+        obs: ObsCfg { timeseries: true, ..Default::default() },
+        ..Default::default()
+    };
+    let run = |profiles: &[crate::profile::ModelProfile], ovl: Option<&OverloadSpec>| {
+        let mut rates = arrivals.iter().map(|a| a.peak_rate()).collect::<Vec<_>>();
+        rates.resize(profiles.len(), 0.0);
+        serve_cluster_stream_overload(
+            profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            MergedStream::new(&specs, horizon_ms, seed),
+            horizon_ms,
+            seed,
+            opts,
+            Some(&fcfg),
+            ovl,
+        )
+    };
+    let brownout_spec = OverloadSpec { cfg: ocfg.clone(), map };
+    let retry_spec = OverloadSpec {
+        cfg: OverloadCfg { brownout: false, ..ocfg },
+        map: VariantMap::trivial(base.len()),
+    };
+    let brownout = run(&expanded, Some(&brownout_spec));
+    let retry = run(&base, Some(&retry_spec));
+    let shed = run(&base, None);
+    let summarize = |rep: &crate::cluster::ClusterReport| {
+        let obs = rep.obs.as_ref().expect("recorder was enabled");
+        let p99 = obs.per_window_p99();
+        (0..obs.n_windows())
+            .map(|i| {
+                let (mut served, mut miss) = (0u64, 0u64);
+                for l in &obs.lanes {
+                    if let Some(w) = l.windows.get(i) {
+                        served += w.served;
+                        miss += w.slo_miss;
+                    }
+                }
+                (served.saturating_sub(miss), p99[i])
+            })
+            .collect::<Vec<_>>()
+    };
+    let (b, r, s) = (summarize(&brownout), summarize(&retry), summarize(&shed));
+    let o = brownout.overload.as_ref().expect("overload layer was armed");
+    let degraded = o.degraded_served_critical + o.degraded_served_bulk;
+    let served_total: u64 = brownout.served.iter().sum();
+    let share = 100.0 * degraded as f64 / served_total.max(1) as f64;
+    let wus = brownout.obs.as_ref().expect("recorder was enabled").cfg.window_us;
+    let mut out = FigData::new(
+        "fig19",
+        "flash-crowd overload: goodput + p99, brownout vs shed-only vs retry-only (2xV100+T4)",
+        &[
+            "t0_ms",
+            "goodput_brownout",
+            "goodput_shed",
+            "goodput_retry",
+            "p99_brownout_ms",
+            "p99_shed_ms",
+            "p99_retry_ms",
+            "degraded_share_pct",
+            "spike",
+        ],
+    );
+    let rows = b.len().min(r.len()).min(s.len());
+    for i in 0..rows {
+        let t0 = i as crate::gpu::Us * wus;
+        let spike = u64::from(
+            t0 >= ms_to_us(spike_start_ms) && t0 < ms_to_us(spike_start_ms + spike_ms),
+        );
+        out.push(vec![
+            (t0 / 1_000).to_string(),
+            b[i].0.to_string(),
+            s[i].0.to_string(),
+            r[i].0.to_string(),
+            f(b[i].1),
+            f(s[i].1),
+            f(r[i].1),
+            f(share),
+            spike.to_string(),
+        ]);
+    }
+    out
+}
+
 /// All generators, keyed for the CLI (`--fig 2`, `--table 1`, `all`).
 pub fn generate(which: &str) -> Vec<FigData> {
     match which {
@@ -1175,6 +1332,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
         "16" | "streaming" => vec![fig_streaming()],
         "17" | "obs" | "timeline" => vec![fig17()],
         "18" | "resilience" | "failure" => vec![fig18()],
+        "19" | "overload" | "brownout" => vec![fig19()],
         "tables" => vec![table1(), table2(), table3(), table6()],
         "ablation" => vec![ablation()],
         "all" => {
@@ -1199,6 +1357,7 @@ pub fn generate(which: &str) -> Vec<FigData> {
                 fig_streaming(),
                 fig17(),
                 fig18(),
+                fig19(),
             ];
             v.extend([table1(), table2(), table3(), table6()]);
             v

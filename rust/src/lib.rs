@@ -33,6 +33,7 @@ pub mod lifecycle;
 pub mod metrics;
 pub mod obs;
 pub mod optimizer;
+pub mod overload;
 pub mod profile;
 pub mod runtime;
 pub mod sched;

@@ -53,8 +53,11 @@ use crate::cluster::{
     Router, RoutingPolicy,
 };
 use crate::cluster::p99_of;
-use crate::faults::{pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg};
+use crate::faults::{
+    pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg, SloClass,
+};
 use crate::gpu::{ms_to_us, us_to_ms, ReconfigModel, Us};
+use crate::overload::{Overload, OverloadSpec, RejectKind};
 use crate::metrics::RunReport;
 use crate::obs::{EngineObs, EventKind, ObsReport, Recorder, NO_MODEL};
 use crate::profile::{GpuSpec, ModelProfile};
@@ -378,6 +381,11 @@ struct LifecycleDriver<'a> {
     /// `None` outside fault scenarios (zero overhead, golden shapes
     /// untouched).
     res: Option<Resilience>,
+    /// Overload-control layer (retry backoff, breakers, brownout) —
+    /// `None` leaves the faults path byte-identical. Brownout here is
+    /// residency-gated: variants serve only where their weights are
+    /// already warm (the front door never cold-starts a fallback).
+    ovl: Option<Overload>,
     /// Control-lane recorder: arrive/route/reject plus
     /// eviction/cold-load/scale-to-zero events and warm-set levels.
     obs: Recorder,
@@ -397,7 +405,8 @@ impl LifecycleDriver<'_> {
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
     ) {
-        let all: &[Replica] = &self.plan.placement.replicas[model];
+        let plan = self.plan;
+        let all: &[Replica] = &plan.placement.replicas[model];
         if all.is_empty() {
             self.rejected[model] += 1;
             if self.obs.on() {
@@ -450,12 +459,32 @@ impl LifecycleDriver<'_> {
             };
             base.saturating_add((remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize)
         });
-        // Dispatch on the routed replica, falling back across the
-        // model's other replicas (index order) when a GPU cannot start
-        // a load right now (pinned or mid-load residents crowd its
-        // budget): a warm replica serves immediately, an in-flight load
-        // parks the request, a loadable GPU faults the model in. Only a
-        // model with no path to residency anywhere rejects.
+        if self.dispatch_on(t, model, req, reps, pick, work, engines, touched).is_none() {
+            self.rejected[model] += 1;
+        }
+    }
+
+    /// Dispatch on the routed replica, falling back across `reps` in
+    /// index order when a GPU cannot start a load right now (pinned or
+    /// mid-load residents crowd its budget): a warm replica serves
+    /// immediately, an in-flight load parks the request, a loadable GPU
+    /// faults the model in. Returns the GPU the request landed on, or
+    /// `None` when the model has no path to residency anywhere (the
+    /// caller counts the reject). Shared by the plain routing path and
+    /// the overload front door (which routes over a breaker-filtered
+    /// candidate set).
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_on(
+        &mut self,
+        t: Us,
+        model: usize,
+        req: Request,
+        reps: &[Replica],
+        pick: usize,
+        work: &mut VecDeque<(usize, Request)>,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) -> Option<usize> {
         let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
         for i in order {
             let r = &reps[i];
@@ -471,13 +500,13 @@ impl LifecycleDriver<'_> {
                 self.cache.note_inject(g, r.local);
                 touched.mark(g);
                 self.stats.warm_hits += 1;
-                return;
+                return Some(g);
             }
             if let Some(&ready) = self.loading.get(&(g, model)) {
                 self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
                 self.held.entry((g, model)).or_default().push(req);
                 self.stats.cold_delayed += 1;
-                return;
+                return Some(g);
             }
             // Cold start: reserve memory now (evicting if needed), park
             // the request until the weights have streamed in.
@@ -535,11 +564,181 @@ impl LifecycleDriver<'_> {
             self.held.entry((g, model)).or_default().push(req);
             self.stats.cold_delayed += 1;
             self.stats.load_ms_total += load_ms;
+            return Some(g);
+        }
+        None
+    }
+
+    /// Best-case completion estimate the overload front door (and its
+    /// breakers) reasons about: analytic queue time over backlog +
+    /// parked + health penalty, plus any remaining weight upload when
+    /// the replica is cold — the same quantity the plain admission
+    /// check computes.
+    fn admit_est_us(
+        &mut self,
+        t: Us,
+        model: usize,
+        rep: &Replica,
+        engines: &[Option<ExecEngine>],
+    ) -> Us {
+        let backlog = self
+            .cache
+            .backlog(engines, rep)
+            .saturating_add(self.held.get(&(rep.gpu, model)).map_or(0, |v| v.len()))
+            .saturating_add(self.res.as_ref().map_or(0, |r| r.penalty_items(rep.gpu)));
+        let mut est = queue_est_us(backlog, rep.batch, rep.capacity_rps);
+        if !self.stores[rep.gpu].is_warm(model) {
+            let remaining_ms = match self.loading.get(&(rep.gpu, model)) {
+                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                None => self
+                    .cfg
+                    .reconfig
+                    .cold_load_ms(self.profiles[model].load_ms, self.stores[rep.gpu].n_warm()),
+            };
+            est = est.saturating_add(ms_to_us(remaining_ms));
+        }
+        est
+    }
+
+    /// The overload front door (armed `ovl` only): family-ordered
+    /// admission — the primary first, then its brownout variants — with
+    /// per-engine breaker feeding/filtering, resolved through
+    /// [`Self::dispatch_on`] (warm-serve / park / cold-start for the
+    /// primary), a scheduled retry, or a typed terminal reject.
+    /// Variants are residency-gated: only replicas whose weights are
+    /// already warm are candidates, so a brownout never triggers a
+    /// fallback cold start. `attempt` is 0 for fresh arrivals and the
+    /// retry ordinal for re-entries.
+    #[allow(clippy::too_many_arguments)]
+    fn overload_dispatch(
+        &mut self,
+        t: Us,
+        attempt: u32,
+        req: Request,
+        work: &mut VecDeque<(usize, Request)>,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        let m = req.model;
+        let order = self.ovl.as_ref().expect("overload dispatch without layer").service_order(m);
+        let mut cause = RejectKind::Unroutable;
+        for (fi, &fm) in order.iter().enumerate() {
+            let healthy: Vec<Replica> = self.plan.placement.replicas[fm]
+                .iter()
+                .filter(|r| self.res.as_ref().is_none_or(|res| res.routable(r.gpu)))
+                .filter(|r| fi == 0 || self.stores[r.gpu].is_warm(fm))
+                .cloned()
+                .collect();
+            if healthy.is_empty() {
+                continue; // `cause` stays Unroutable for the primary
+            }
+            // Every healthy replica's estimate feeds its breaker; only
+            // breaker-approved replicas stay candidates.
+            let mut open: Vec<Replica> = Vec::with_capacity(healthy.len());
+            let mut best = Us::MAX;
+            for rep in &healthy {
+                let est = self.admit_est_us(t, fm, rep, engines);
+                let miss = t.saturating_add(est) > req.deadline;
+                let ovl = self.ovl.as_mut().expect("checked above");
+                ovl.note_estimate(t, rep.gpu, miss);
+                if ovl.allows(t, rep.gpu) {
+                    if est < best {
+                        best = est;
+                    }
+                    open.push(rep.clone());
+                }
+            }
+            if open.is_empty() {
+                if fi == 0 {
+                    cause = RejectKind::BreakerOpen;
+                }
+                continue;
+            }
+            if t.saturating_add(best) > req.deadline {
+                if fi == 0 {
+                    cause = RejectKind::Deadline;
+                }
+                continue;
+            }
+            // Route among the breaker-approved replicas with the same
+            // warmness-aware cost `dispatch` probes.
+            let cache = &mut self.cache;
+            let res = self.res.as_ref();
+            let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
+            let (cfg, profiles) = (self.cfg, self.profiles);
+            let pick = self.router.route(fm, &open, |rep| {
+                let backlog = cache.backlog(engines, rep);
+                let parked = held.get(&(rep.gpu, fm)).map_or(0, |v| v.len());
+                let base = backlog
+                    .saturating_add(parked)
+                    .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)));
+                if !cfg.warm_routing || stores[rep.gpu].is_warm(fm) {
+                    return base;
+                }
+                let remaining_ms = match loading.get(&(rep.gpu, fm)) {
+                    Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                    None => cfg
+                        .reconfig
+                        .cold_load_ms(profiles[fm].load_ms, stores[rep.gpu].n_warm()),
+                };
+                base.saturating_add((remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize)
+            });
+            let landed = self.dispatch_on(t, fm, req, &open, pick, work, engines, touched);
+            let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+            match landed {
+                Some(g) => {
+                    let ovl = self.ovl.as_mut().expect("checked above");
+                    ovl.note_dispatch(t, g);
+                    if fi > 0 {
+                        ovl.note_degraded(class);
+                    }
+                    if attempt > 0 {
+                        ovl.note_retry_served();
+                    }
+                }
+                // Crowded out everywhere despite passing admission: the
+                // pre-existing untyped lifecycle reject (no residency
+                // path), kept identical so conservation still holds.
+                None => self.rejected[fm] += 1,
+            }
             return;
         }
-        self.rejected[model] += 1;
+        self.overload_reject(t, attempt, &req, cause);
     }
-}
+
+    /// A request the overload front door could not place anywhere in its
+    /// family: schedule a backoff retry if budget remains, else issue
+    /// the terminal typed reject (`retry_exhausted` when retries are on,
+    /// the original cause otherwise).
+    fn overload_reject(&mut self, t: Us, attempt: u32, req: &Request, cause: RejectKind) {
+        let m = req.model;
+        if self.ovl.as_mut().expect("overload reject without layer").try_schedule_retry(
+            t,
+            req,
+            attempt + 1,
+        ) {
+            return; // re-enters at its release barrier; not terminal
+        }
+        self.rejected[m] += 1;
+        let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+        let forward = self.ovl.as_mut().expect("checked above").note_terminal(cause, class);
+        match forward {
+            Some(RejectKind::Deadline) => {
+                if let Some(res) = &mut self.res {
+                    res.note_deadline_reject(m);
+                }
+            }
+            Some(RejectKind::Unroutable) => {
+                if let Some(res) = &mut self.res {
+                    res.note_unroutable();
+                }
+            }
+            _ => {}
+        }
+        if self.obs.on() {
+            self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
+        }
+    }
 
 impl LifecycleDriver<'_> {
     /// True when no arrival can trigger a cold start right now: every
@@ -742,6 +941,11 @@ impl LifecycleDriver<'_> {
                         touched.mark(g);
                         touched.mark(t_gpu);
                         self.res.as_mut().expect("checked").note_hedges(n, n);
+                        // A hedge fired off this engine: that's a strike
+                        // against its breaker.
+                        if let Some(ovl) = &mut self.ovl {
+                            ovl.note_hedge_loss(t, g);
+                        }
                     }
                 }
             }
@@ -759,9 +963,10 @@ impl EpochDriver for LifecycleDriver<'_> {
     }
 
     fn elides_barriers(&self) -> bool {
-        // Fault timelines, hedge sweeps and admission all read engine
-        // state at barriers — never elide while resilience is on.
-        self.free_routing && self.warm_span_ready() && self.res.is_none()
+        // Fault timelines, hedge sweeps, admission and the overload
+        // front door all read engine state at barriers — never elide
+        // while resilience or overload control is on.
+        self.free_routing && self.warm_span_ready() && self.res.is_none() && self.ovl.is_none()
     }
 
     /// Barrier-free routing inside a fully-warm span: reproduces
@@ -817,7 +1022,8 @@ impl EpochDriver for LifecycleDriver<'_> {
             .idle_timeout
             .and_then(|to| self.stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
         let t_res = self.res.as_ref().and_then(|r| r.next_event());
-        [t_load, t_idle, t_res].into_iter().flatten().min()
+        let t_retry = self.ovl.as_ref().and_then(|o| o.next_release());
+        [t_load, t_idle, t_res, t_retry].into_iter().flatten().min()
     }
 
     /// Mature loads due at t: the model becomes warm, its tombstone
@@ -864,6 +1070,19 @@ impl EpochDriver for LifecycleDriver<'_> {
             }
             touched.mark(g);
         }
+        // Matured backoff retries re-enter the front door after faults
+        // and load maturities so they see the post-barrier warm sets.
+        if self.ovl.is_some() {
+            let mut work = std::mem::take(&mut self.scratch);
+            debug_assert!(work.is_empty());
+            for (attempt, req) in self.ovl.as_mut().expect("checked").due_retries(t) {
+                self.overload_dispatch(t, attempt, req, &mut work, engines, touched);
+                while let Some((m, q)) = work.pop_front() {
+                    self.dispatch(t, m, q, &mut work, engines, touched);
+                }
+            }
+            self.scratch = work;
+        }
     }
 
     /// Route one arrival, draining any eviction cascade it triggers.
@@ -876,6 +1095,20 @@ impl EpochDriver for LifecycleDriver<'_> {
     ) {
         if self.obs.on() {
             self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
+        if self.ovl.is_some() {
+            // The overload front door subsumes plain admission: family-
+            // ordered estimates, breaker filtering, retry scheduling.
+            // Victim queues drained by an eviction cascade re-route
+            // through the ordinary dispatch path (sunk work).
+            let mut work = std::mem::take(&mut self.scratch);
+            debug_assert!(work.is_empty());
+            self.overload_dispatch(t, 0, req, &mut work, engines, touched);
+            while let Some((m, q)) = work.pop_front() {
+                self.dispatch(t, m, q, &mut work, engines, touched);
+            }
+            self.scratch = work;
+            return;
         }
         // Deadline-aware admission (fresh arrivals only — cascade
         // re-routes inside `dispatch` already carry sunk work): reject
@@ -1072,10 +1305,39 @@ pub fn run_lifecycle_stream_faults<S: ArrivalStream>(
     opts: ExecOpts,
     faults: Option<&ResilienceCfg>,
 ) -> ClusterReport {
+    run_lifecycle_stream_overload(
+        profiles, gpus, plan, routing, sched, cfg, stream, horizon_ms, seed, opts, faults, None,
+    )
+}
+
+/// [`run_lifecycle_stream_faults`] with the overload-control layer
+/// ([`crate::overload`]). `overload: None` is the exact faults path.
+/// When armed with brownout variants, `profiles` and `plan` must
+/// already cover the expanded family list — variants are ordinary
+/// residency-managed entries (plan, stores, idle-out) that the front
+/// door falls back to only where they are currently warm.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lifecycle_stream_overload<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    gpus: &[GpuSpec],
+    plan: &ResidencyPlan,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+    overload: Option<&OverloadSpec>,
+) -> ClusterReport {
     cfg.validate().expect("invalid lifecycle config");
     let n_models = profiles.len();
     let n_gpus = gpus.len();
     assert_eq!(plan.placement.n_gpus(), n_gpus, "plan built for a different cluster");
+    if let Some(spec) = overload {
+        assert_eq!(n_models, spec.map.n_total(), "profiles not expanded for variants");
+    }
     let horizon = ms_to_us(horizon_ms);
     let idle_timeout: Option<Us> = if cfg.idle_timeout_ms > 0.0 {
         Some(ms_to_us(cfg.idle_timeout_ms).max(1))
@@ -1152,10 +1414,29 @@ pub fn run_lifecycle_stream_faults<S: ArrivalStream>(
         stats: LifecycleStats::default(),
         idle_timeout,
         scratch: VecDeque::new(),
-        res: faults.map(|f| {
-            Resilience::new(f.clone(), profiles, n_gpus, horizon)
-                .expect("invalid faults config (validate at the config layer)")
-        }),
+        res: {
+            // The overload layer routes through the resilience front
+            // door's admission estimate; when armed without an explicit
+            // fault config, synthesize a minimal admission-only door.
+            let synth_cfg;
+            let res_cfg = match (faults, overload) {
+                (Some(f), _) => Some(f),
+                (None, Some(_)) => {
+                    synth_cfg = ResilienceCfg {
+                        admission: true,
+                        hedge: false,
+                        ..ResilienceCfg::default()
+                    };
+                    Some(&synth_cfg)
+                }
+                (None, None) => None,
+            };
+            res_cfg.map(|f| {
+                Resilience::new(f.clone(), profiles, n_gpus, horizon)
+                    .expect("invalid faults config (validate at the config layer)")
+            })
+        },
+        ovl: overload.map(|spec| Overload::new(spec, n_gpus)),
         obs: Recorder::new(opts.obs, horizon),
     };
     // Seed the warm-set timeline with the t = 0 resident sets so the
@@ -1169,14 +1450,26 @@ pub fn run_lifecycle_stream_faults<S: ArrivalStream>(
     let exec_stats = run_epochs_stream(&mut engines, stream, horizon, opts, &mut driver);
     let LifecycleDriver {
         stores,
-        rejected,
+        mut rejected,
         held,
         cold_delays_ms,
         mut stats,
         res,
+        mut ovl,
         obs: mut obs_rec,
         ..
     } = driver;
+    // Retries still pending at the horizon never got a terminal answer:
+    // count them as retry-exhausted rejects so every offered request is
+    // accounted.
+    if let Some(o) = &mut ovl {
+        for (_attempt, req) in o.drain_leftover() {
+            rejected[req.model] += 1;
+            let class =
+                res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(req.model));
+            o.note_retry_exhausted(class);
+        }
+    }
     // Requests still parked behind an immature load never reached an
     // engine; stamp their drops on the control lane at the horizon.
     if obs_rec.on() {
@@ -1307,6 +1600,7 @@ pub fn run_lifecycle_stream_faults<S: ArrivalStream>(
         adaptive: None,
         lifecycle: Some(stats),
         resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
+        overload: ovl.map(|o| o.finalize()),
         exec: Some(exec_stats),
         obs,
     }
@@ -1419,6 +1713,46 @@ pub fn serve_longtail_stream_faults<S: ArrivalStream>(
     );
     run_lifecycle_stream_faults(
         profiles, gpus, &plan, routing, sched, cfg, stream, horizon_ms, seed, opts, faults,
+    )
+}
+
+/// [`serve_longtail_stream_faults`] with the overload-control layer:
+/// residency planning over the full expanded family list (variants are
+/// ordinary entries with zero offered demand, so they never displace a
+/// primary's residency claim), then the overload-armed lifecycle run.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_longtail_stream_overload<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    offered_rps: &[f64],
+    gpus: &[GpuSpec],
+    placement: crate::cluster::PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &LifecycleCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+    overload: Option<&OverloadSpec>,
+) -> ClusterReport {
+    let budgets = cfg.budgets(gpus);
+    assert!(
+        budgets.iter().all(|&b| b > 0),
+        "lifecycle memory budget is zero after headroom ({budgets:?} MiB) — \
+         lower headroom_mib or raise mem_budget_mib"
+    );
+    let plan = crate::cluster::plan_residency(
+        profiles,
+        offered_rps,
+        gpus,
+        placement,
+        &budgets,
+        cfg.min_replicas,
+    );
+    run_lifecycle_stream_overload(
+        profiles, gpus, &plan, routing, sched, cfg, stream, horizon_ms, seed, opts, faults,
+        overload,
     )
 }
 

@@ -3,12 +3,14 @@
 //! figure of the paper.
 //!
 //! Subcommands:
-//!   figures  --fig <2|3|4|...|18|all> [--out results]
+//!   figures  --fig <2|3|4|...|19|all> [--out results]
 //!            (--fig 17 also writes fig17_trace.json +
 //!            fig17_timeseries.json, the observability artifacts;
 //!            --fig 18 is the engine-failure resilience timeline:
 //!            goodput + per-class p99 through a degrade→down→up
-//!            cycle, hedged front door vs naive)
+//!            cycle, hedged front door vs naive; --fig 19 is the
+//!            flash-crowd overload timeline: goodput + p99 under
+//!            brownout variant fallback vs shed-only vs retry-only)
 //!   tables   --table <1|2|3|6|all>    [--out results]
 //!   simulate --config <scenario.json> [--threads N|auto]
 //!            [--exec-mode sparse|epoch] [--verbose]   (scenarios
@@ -22,7 +24,12 @@
 //!            block injects a deterministic engine-failure timeline
 //!            and arms the resilient front door — SLO classes,
 //!            deadline admission, hedged re-dispatch — on any of
-//!            those paths, see configs/cluster_engine_failure.json)
+//!            those paths, see configs/cluster_engine_failure.json;
+//!            an "overload" block arms retry-with-backoff, per-engine
+//!            circuit breakers and brownout variant fallback — models
+//!            may declare degraded "variants" served when the primary
+//!            cannot meet its deadline, see
+//!            configs/cluster_brownout_flash.json)
 //!   cluster  [--gpus V100,T4,...] [--placement ffd|lb]
 //!            [--routing rr|jsq|p2c] [--sched dstack|temporal|triton|gslice]
 //!            [--horizon ms] [--seed N] [--threads N|auto]
@@ -172,17 +179,47 @@ fn overlay_exec_args(args: &Args, sc: &mut dstack::config::Scenario) -> anyhow::
 }
 
 /// `--verbose`: print the execution core's out-of-band telemetry
-/// (never part of the report JSON — see `cluster::exec::ExecStats`).
+/// (never part of the report JSON — see `cluster::exec::ExecStats`)
+/// plus a one-line typed-reject digest so failure modes are
+/// diagnosable without parsing the report JSON.
 fn print_exec_stats(args: &Args, rep: &dstack::cluster::ClusterReport) {
     if !args.has_flag("verbose") {
         return;
     }
+    print_reject_digest(rep);
     if let Some(x) = &rep.exec {
         println!("{}", x.render());
     }
     if let Some(o) = &rep.obs {
         println!("{}", o.render());
     }
+}
+
+/// The full typed-reject taxonomy on one line: every terminal reject
+/// class the front door can produce (per-SLO-class deadline,
+/// unroutable, retry-exhausted, breaker-open) next to the untyped
+/// remainder and the placement-time shed rate.
+fn print_reject_digest(rep: &dstack::cluster::ClusterReport) {
+    let rejected: u64 = rep.rejected.iter().sum();
+    let shed: f64 = rep.shed_rps.iter().sum();
+    let (dc, db, un) = rep
+        .resilience
+        .as_ref()
+        .map(|r| (r.deadline_rejects_critical, r.deadline_rejects_bulk, r.unroutable_rejects))
+        .unwrap_or((0, 0, 0));
+    let (rc, rb, bo) = rep
+        .overload
+        .as_ref()
+        .map(|o| (o.retry_exhausted_critical, o.retry_exhausted_bulk, o.breaker_open_rejects))
+        .unwrap_or((0, 0, 0));
+    let typed = dc + db + un + rc + rb;
+    println!(
+        "reject taxonomy: {rejected} rejected | deadline {dc} critical + {db} bulk, \
+         unroutable {un}, retry-exhausted {rc} critical + {rb} bulk, \
+         breaker-open {bo} (absorbed by retries/fallback), \
+         untyped {}; placement shed {shed:.0} req/s",
+        rejected.saturating_sub(typed),
+    );
 }
 
 /// Write the run's observability artifacts where `--emit-trace` /
@@ -231,7 +268,12 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             emit_obs_artifacts(args, &rep)?;
             return Ok(());
         }
-        let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
+        // Brownout variants appear in the report as extra models —
+        // name the rows from the expanded list when one exists.
+        let names: Vec<String> = match sc.overload_expanded() {
+            Ok(Some((profiles, _))) => profiles.iter().map(|p| p.name.clone()).collect(),
+            _ => sc.profiles().iter().map(|p| p.name.clone()).collect(),
+        };
         let rep = if sc.workload.is_some() {
             // Trace replay: file errors surface as CLI errors, not panics.
             dstack::config::run_trace_scenario(&sc).map_err(|e| anyhow::anyhow!("{e}"))?
@@ -382,6 +424,23 @@ fn print_cluster_report(names: &[String], rep: &dstack::cluster::ClusterReport) 
             r.degraded_goodput_rps,
         );
     }
+    if let Some(o) = &rep.overload {
+        println!(
+            "overload: {} retries scheduled ({} served), retry-exhausted {} critical + {} bulk, \
+             breakers {} trips / {} probes / {} open rejects",
+            o.retries_scheduled,
+            o.retries_succeeded,
+            o.retry_exhausted_critical,
+            o.retry_exhausted_bulk,
+            o.breaker_trips,
+            o.breaker_probes,
+            o.breaker_open_rejects,
+        );
+        println!(
+            "brownout: {} degraded served (critical) + {} (bulk)",
+            o.degraded_served_critical, o.degraded_served_bulk,
+        );
+    }
 }
 
 /// Overlay the `adaptive` tuning flags onto a base config: every flag
@@ -417,7 +476,10 @@ fn adaptive_cmd(args: &Args) -> anyhow::Result<()> {
         overlay_exec_args(args, &mut sc)?;
         sc.adaptive =
             Some(adaptive_cfg_from_args(args, sc.adaptive.clone().unwrap_or_default())?);
-        let names: Vec<String> = sc.profiles().iter().map(|p| p.name.clone()).collect();
+        let names: Vec<String> = match sc.overload_expanded() {
+            Ok(Some((profiles, _))) => profiles.iter().map(|p| p.name.clone()).collect(),
+            _ => sc.profiles().iter().map(|p| p.name.clone()).collect(),
+        };
         let rep = dstack::config::run_adaptive_scenario(&sc);
         println!("scenario '{}' adaptive policy={}", sc.name, rep.policy);
         print_cluster_report(&names, &rep);

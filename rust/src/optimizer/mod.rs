@@ -115,13 +115,17 @@ pub fn optimize(m: &ModelProfile, gpu: &GpuSpec, cfg: &OptConfig) -> Option<Oper
             cands.push((p, false)); // Eq. 11 holds, Eq. 12 does not
         }
     }
-    // Throughput dominates; strictness (Eq. 12) then efficacy break ties.
+    // Throughput dominates; strictness (Eq. 12) then efficacy break
+    // ties. total_cmp per key matches the old tuple partial_cmp on the
+    // finite values evaluate() yields, without a NaN panic path (a NaN
+    // key compares greatest in the total order, deterministically).
     cands
         .into_iter()
         .max_by(|(a, sa), (b, sb)| {
-            (a.throughput, *sa, a.efficacy)
-                .partial_cmp(&(b.throughput, *sb, b.efficacy))
-                .unwrap()
+            a.throughput
+                .total_cmp(&b.throughput)
+                .then(sa.cmp(sb))
+                .then(a.efficacy.total_cmp(&b.efficacy))
         })
         .map(|(p, _)| p)
 }
@@ -209,10 +213,46 @@ mod tests {
         let m = by_name("resnet50").unwrap();
         let cfg = OptConfig { slo_ms: Some(1e9), ..Default::default() }; // unconstrained
         let s = surface(&m, &V100, &cfg);
-        let best = s.iter().max_by(|a, b| a.efficacy.partial_cmp(&b.efficacy).unwrap()).unwrap();
+        let best = s.iter().max_by(|a, b| a.efficacy.total_cmp(&b.efficacy)).unwrap();
         let b1 = s.iter().find(|p| p.batch == 1 && p.gpu_pct == best.gpu_pct).unwrap();
         assert!(best.efficacy > b1.efficacy, "batch 1 should not be optimal");
         assert!(best.gpu_pct < 100, "100% GPU should not be optimal");
+    }
+
+    #[test]
+    fn optimize_ranking_total_cmp_matches_partial() {
+        // The (throughput, strict, efficacy) ranking must pick the same
+        // point the old tuple partial_cmp().unwrap() did on the finite
+        // candidates real profiles yield; regression for the NaN panic
+        // path the unwrap carried.
+        for m in zoo() {
+            let cfg = OptConfig::default();
+            let Some(p) = optimize(&m, &V100, &cfg) else { continue };
+            let slo = m.slo_ms;
+            let mut cands = Vec::new();
+            for batch in 1..=m.max_batch {
+                let q = evaluate(&m, &V100, batch, m.knee_pct_on(&V100, batch), &cfg);
+                if q.feasible {
+                    cands.push((q, true));
+                } else if q.latency_ms + q.assembly_ms <= slo {
+                    cands.push((q, false));
+                }
+            }
+            let old = cands
+                .iter()
+                .max_by(|(a, sa), (b, sb)| {
+                    (a.throughput, *sa, a.efficacy)
+                        .partial_cmp(&(b.throughput, *sb, b.efficacy))
+                        .unwrap()
+                })
+                .unwrap();
+            assert_eq!((p.batch, p.gpu_pct), (old.0.batch, old.0.gpu_pct), "{}", m.name);
+        }
+        // NaN keys order deterministically: greatest in the total order,
+        // so a NaN-throughput candidate wins max_by instead of panicking.
+        let pick =
+            [f64::NAN, 1.0, 2.0].iter().copied().max_by(|a, b| a.total_cmp(b)).unwrap();
+        assert!(pick.is_nan());
     }
 
     #[test]

@@ -1,0 +1,788 @@
+//! Overload control: the third lever between "serve on time" and
+//! "shed" (ISSUE 10; DARIS-style controlled degradation, cf. PAPERS.md).
+//!
+//! Three mechanisms compose with the `faults` front door on every
+//! driver:
+//!
+//! 1. **Retry with virtual-clock backoff** — a deadline / unroutable /
+//!    breaker-open reject is not terminal: the request re-enters the
+//!    arrival stream after a deterministic exponential backoff
+//!    (`backoff_base_ms · 2^(attempt-1)`, capped at `backoff_cap_ms`),
+//!    provided the release time still precedes its absolute deadline
+//!    and the attempt budget (`max_retries`) is not spent. A retry that
+//!    cannot meet either budget becomes a typed `retry_exhausted`
+//!    reject. Retries still queued when the horizon ends are drained as
+//!    `retry_exhausted` too, so request conservation
+//!    (`served + dropped + rejected == offered`) always holds.
+//! 2. **Per-engine circuit breakers** — every admission estimate feeds
+//!    the target engine's breaker: `breaker_k` consecutive would-miss
+//!    estimates (or hedge losses) within `breaker_window_ms` trip it
+//!    open for `breaker_cooldown_ms`, removing the engine from routing
+//!    with no fault timeline required. After the cooldown the breaker
+//!    is half-open: the engine is routable again and the first request
+//!    actually dispatched to it is the probe that closes the breaker; a
+//!    would-miss estimate while half-open re-opens it instead.
+//! 3. **Brownout variant fallback** — a model may declare degraded
+//!    variants (`variants: [{name, knee_pct, latency_scale, mem_mib}]`
+//!    in the config). Variants are real fleet members: separate
+//!    profiles (calibrated to the declared knee at
+//!    `latency_scale × primary runtime`), separate replicas co-located
+//!    with the primary where knee/memory headroom allows, and — on the
+//!    lifecycle/unified drivers — separately resident `ModelStore`
+//!    entries. When best-case admission fails for the primary, the
+//!    front door re-estimates against the variant's replicas (resident
+//!    ones only on lifecycle paths) and serves the cheap variant
+//!    instead, counted as `degraded_served` per SLO class.
+//!
+//! Determinism: every decision above is made at an existing driver
+//! barrier (arrival, retry release, or control event) from
+//! virtual-clock state only, so reports stay byte-identical across
+//! exec_mode × threads × {materialized, streamed}. Retry releases
+//! surface through `EpochDriver::next_event`, and any driver with an
+//! active overload layer stops eliding barriers.
+//!
+//! Typed-reject taxonomy: terminal rejects are counted exactly once.
+//! With retries enabled (`max_retries > 0`) every terminal front-door
+//! reject is `retry_exhausted` (per SLO class); with retries disabled
+//! the original cause stands — per-class deadline and unroutable
+//! rejects (in `ResilienceStats`) or `breaker_open_rejects` (here).
+
+use crate::analytic::calibrate;
+use crate::cluster::placement::{op_point, Placement};
+use crate::faults::SloClass;
+use crate::gpu::{ms_to_us, Us};
+use crate::profile::{GpuSpec, ModelProfile, V100};
+use crate::util::json::Json;
+use crate::workload::Request;
+
+/// Knobs for the overload-control layer (the `"overload"` config block).
+#[derive(Debug, Clone)]
+pub struct OverloadCfg {
+    /// Retry budget per request; 0 disables retries entirely.
+    pub max_retries: u32,
+    /// First backoff delay in virtual ms; doubles per attempt.
+    pub backoff_base_ms: f64,
+    /// Backoff ceiling in virtual ms.
+    pub backoff_cap_ms: f64,
+    /// Consecutive would-miss estimates that trip an engine's breaker;
+    /// 0 disables breakers.
+    pub breaker_k: u32,
+    /// Misses further apart than this window restart the count.
+    pub breaker_window_ms: f64,
+    /// How long a tripped breaker stays hard-open before half-opening.
+    pub breaker_cooldown_ms: f64,
+    /// Serve declared degraded variants when primary admission fails.
+    pub brownout: bool,
+}
+
+impl Default for OverloadCfg {
+    fn default() -> OverloadCfg {
+        OverloadCfg {
+            max_retries: 2,
+            backoff_base_ms: 10.0,
+            backoff_cap_ms: 160.0,
+            breaker_k: 0,
+            breaker_window_ms: 500.0,
+            breaker_cooldown_ms: 250.0,
+            brownout: true,
+        }
+    }
+}
+
+impl OverloadCfg {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.backoff_base_ms.is_finite() && self.backoff_base_ms > 0.0) {
+            return Err(format!("overload: backoff_base_ms must be > 0, got {}", self.backoff_base_ms));
+        }
+        if !(self.backoff_cap_ms.is_finite() && self.backoff_cap_ms >= self.backoff_base_ms) {
+            return Err(format!(
+                "overload: backoff_cap_ms ({}) must be >= backoff_base_ms ({})",
+                self.backoff_cap_ms, self.backoff_base_ms
+            ));
+        }
+        if !(self.breaker_window_ms.is_finite() && self.breaker_window_ms > 0.0) {
+            return Err(format!(
+                "overload: breaker_window_ms must be > 0, got {}",
+                self.breaker_window_ms
+            ));
+        }
+        if !(self.breaker_cooldown_ms.is_finite() && self.breaker_cooldown_ms > 0.0) {
+            return Err(format!(
+                "overload: breaker_cooldown_ms must be > 0, got {}",
+                self.breaker_cooldown_ms
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A declared degraded variant of a primary model.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    /// Knee GPU% of the variant on the V100 (its own operating point).
+    pub knee_pct: u32,
+    /// Variant runtime as a fraction of the primary's (0 < scale <= 1).
+    pub latency_scale: f64,
+    /// GPU memory footprint of the variant, MiB.
+    pub mem_mib: u64,
+}
+
+impl VariantSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("variant: name must be non-empty".into());
+        }
+        if self.knee_pct == 0 || self.knee_pct > 100 {
+            return Err(format!("variant '{}': knee_pct must be in 1..=100, got {}", self.name, self.knee_pct));
+        }
+        if !(self.latency_scale.is_finite() && self.latency_scale > 0.0 && self.latency_scale <= 1.0) {
+            return Err(format!(
+                "variant '{}': latency_scale must be in (0, 1], got {}",
+                self.name, self.latency_scale
+            ));
+        }
+        if self.mem_mib == 0 {
+            return Err(format!("variant '{}': mem_mib must be >= 1", self.name));
+        }
+        Ok(())
+    }
+}
+
+/// Primary↔variant index structure over the *expanded* model space:
+/// global indices `0..n_primary` are the declared models, variants are
+/// appended after them in declaration order.
+#[derive(Debug, Clone)]
+pub struct VariantMap {
+    pub n_primary: usize,
+    /// Per global model: its primary's index (`None` for primaries).
+    pub primary_of: Vec<Option<usize>>,
+    /// Per global model: its variants' global indices (empty for variants).
+    pub variants_of: Vec<Vec<usize>>,
+}
+
+impl VariantMap {
+    /// No variants: every model is its own family.
+    pub fn trivial(n_models: usize) -> VariantMap {
+        VariantMap {
+            n_primary: n_models,
+            primary_of: vec![None; n_models],
+            variants_of: vec![Vec::new(); n_models],
+        }
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.primary_of.len()
+    }
+
+    /// The family head (primary) of any global model index.
+    pub fn family_of(&self, m: usize) -> usize {
+        self.primary_of[m].unwrap_or(m)
+    }
+}
+
+/// Derive a variant's `ModelProfile` from its primary: calibrated so the
+/// variant's latency at its declared knee is `latency_scale ×` the
+/// primary's published runtime, with the primary's SLO/batch and the
+/// declared memory footprint. Cold-load time scales with the memory
+/// ratio (smaller weights upload faster).
+pub fn variant_profile(primary: &ModelProfile, spec: &VariantSpec) -> ModelProfile {
+    let runtime_ms = primary.runtime_ms * spec.latency_scale;
+    let serial_frac =
+        if primary.dnn.t_p > 0.0 { primary.dnn.t_np / primary.dnn.t_p } else { 0.35 };
+    let knee_sms = V100.sms_for_pct(spec.knee_pct);
+    let dnn = calibrate(knee_sms, runtime_ms, primary.opt_batch as f64, V100.sms, serial_frac);
+    let mem_ratio = spec.mem_mib as f64 / primary.mem_mib.max(1) as f64;
+    ModelProfile {
+        name: spec.name.clone(),
+        knee_pct: spec.knee_pct,
+        slo_ms: primary.slo_ms,
+        opt_batch: primary.opt_batch,
+        runtime_ms,
+        dnn,
+        load_ms: primary.load_ms * mem_ratio,
+        mem_mib: spec.mem_mib,
+        kernels: Vec::new(),
+        max_batch: primary.max_batch,
+    }
+}
+
+/// Expand a primary fleet with declared variants: returns the extended
+/// profile list (primaries first, variants appended in declaration
+/// order) and the index map. `decls` pairs each variant with its
+/// primary's index.
+pub fn expand_profiles(
+    base: &[ModelProfile],
+    decls: &[(usize, VariantSpec)],
+) -> Result<(Vec<ModelProfile>, VariantMap), String> {
+    let n_primary = base.len();
+    let mut profiles: Vec<ModelProfile> = base.to_vec();
+    let mut map = VariantMap::trivial(n_primary);
+    for (primary, spec) in decls {
+        if *primary >= n_primary {
+            return Err(format!(
+                "variant '{}': primary index {primary} out of range ({n_primary} models)",
+                spec.name
+            ));
+        }
+        spec.validate()?;
+        if profiles.iter().any(|p| p.name == spec.name) {
+            return Err(format!("variant '{}': name collides with an existing model", spec.name));
+        }
+        let v = profiles.len();
+        profiles.push(variant_profile(&base[*primary], spec));
+        map.primary_of.push(Some(*primary));
+        map.variants_of.push(Vec::new());
+        map.variants_of[*primary].push(v);
+    }
+    Ok((profiles, map))
+}
+
+/// Co-locate variant replicas with their primaries on an already-packed
+/// placement: for every GPU hosting the primary, add one variant
+/// replica if the GPU's knee budget (≤ 100%) and memory still fit. The
+/// placement arrays grow from `n_primary` to the expanded model count;
+/// a variant with no feasible replica stays unadmitted (brownout simply
+/// never fires for it).
+pub fn co_locate_variants(
+    pl: &mut Placement,
+    profiles: &[ModelProfile],
+    map: &VariantMap,
+    gpus: &[GpuSpec],
+) {
+    assert_eq!(pl.replicas.len(), map.n_primary, "co_locate_variants: placement already expanded");
+    let n_gpus = pl.n_gpus();
+    let mut used_mem = vec![0u64; n_gpus];
+    for g in 0..n_gpus {
+        used_mem[g] = pl.hosted[g].iter().map(|&m| profiles[m].mem_mib).sum();
+    }
+    for _ in map.n_primary..map.n_total() {
+        pl.replicas.push(Vec::new());
+        pl.admitted.push(false);
+        pl.shed_rps.push(0.0);
+    }
+    for m in 0..map.n_primary {
+        for &v in &map.variants_of[m] {
+            // Distinct GPUs hosting the primary, in ascending order.
+            let mut host_gpus: Vec<usize> = pl.replicas[m].iter().map(|r| r.gpu).collect();
+            host_gpus.sort_unstable();
+            host_gpus.dedup();
+            for g in host_gpus {
+                let (pct, batch, capacity_rps) = op_point(&profiles[v], &gpus[g]);
+                if pl.knee_load[g] + pct > 100 || used_mem[g] + profiles[v].mem_mib > gpus[g].mem_mib
+                {
+                    continue;
+                }
+                let local = pl.hosted[g].len();
+                pl.replicas[v].push(crate::cluster::placement::Replica {
+                    gpu: g,
+                    local,
+                    pct,
+                    batch,
+                    capacity_rps,
+                });
+                pl.hosted[g].push(v);
+                pl.knee_load[g] += pct;
+                used_mem[g] += profiles[v].mem_mib;
+                pl.admitted[v] = true;
+            }
+        }
+    }
+}
+
+/// Why the front door could not dispatch a request to a model family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectKind {
+    /// Best-case estimate misses the absolute deadline.
+    Deadline,
+    /// No healthy replica exists.
+    Unroutable,
+    /// Healthy replicas exist but every breaker is open.
+    BreakerOpen,
+}
+
+/// Counters for the overload layer, serialized as
+/// `ClusterReport.overload` only when the layer is active.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OverloadStats {
+    pub retries_scheduled: u64,
+    /// Retried requests that were eventually dispatched (primary or variant).
+    pub retries_succeeded: u64,
+    pub retry_exhausted_critical: u64,
+    pub retry_exhausted_bulk: u64,
+    pub breaker_trips: u64,
+    /// Half-open probe dispatches that closed a breaker.
+    pub breaker_probes: u64,
+    /// Terminal rejects whose cause was every-breaker-open (retries off).
+    pub breaker_open_rejects: u64,
+    pub degraded_served_critical: u64,
+    pub degraded_served_bulk: u64,
+}
+
+impl OverloadStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("retries_scheduled", Json::from(self.retries_scheduled)),
+            ("retries_succeeded", Json::from(self.retries_succeeded)),
+            ("retry_exhausted_critical", Json::from(self.retry_exhausted_critical)),
+            ("retry_exhausted_bulk", Json::from(self.retry_exhausted_bulk)),
+            ("breaker_trips", Json::from(self.breaker_trips)),
+            ("breaker_probes", Json::from(self.breaker_probes)),
+            ("breaker_open_rejects", Json::from(self.breaker_open_rejects)),
+            ("degraded_served_critical", Json::from(self.degraded_served_critical)),
+            ("degraded_served_bulk", Json::from(self.degraded_served_bulk)),
+        ])
+    }
+
+    pub fn retry_exhausted_total(&self) -> u64 {
+        self.retry_exhausted_critical + self.retry_exhausted_bulk
+    }
+
+    pub fn degraded_served_total(&self) -> u64 {
+        self.degraded_served_critical + self.degraded_served_bulk
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BreakerState {
+    Closed,
+    /// Hard-open until `until`; half-open (routable, probe pending) after.
+    Open { until: Us },
+}
+
+#[derive(Debug, Clone)]
+struct Breaker {
+    state: BreakerState,
+    consec: u32,
+    last_miss: Us,
+}
+
+#[derive(Debug, Clone)]
+struct RetryEntry {
+    release: Us,
+    seq: u64,
+    attempt: u32,
+    req: Request,
+}
+
+/// Per-run overload state: one instance per driver, mutated only at
+/// barriers. Bundle `cfg` + `map` (see [`expand_profiles`]) to arm it.
+#[derive(Debug, Clone)]
+pub struct OverloadSpec {
+    pub cfg: OverloadCfg,
+    pub map: VariantMap,
+}
+
+#[derive(Debug)]
+pub struct Overload {
+    pub cfg: OverloadCfg,
+    pub map: VariantMap,
+    pub stats: OverloadStats,
+    breakers: Vec<Breaker>,
+    retry_q: Vec<RetryEntry>,
+    seq: u64,
+}
+
+impl Overload {
+    pub fn new(spec: &OverloadSpec, n_gpus: usize) -> Overload {
+        Overload {
+            cfg: spec.cfg.clone(),
+            map: spec.map.clone(),
+            stats: OverloadStats::default(),
+            breakers: vec![
+                Breaker { state: BreakerState::Closed, consec: 0, last_miss: 0 };
+                n_gpus
+            ],
+            retry_q: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    /// Service order for a request to model `m`: the primary first, then
+    /// its declared variants (brownout candidates) in declaration order.
+    pub fn service_order(&self, m: usize) -> Vec<usize> {
+        let mut order = vec![m];
+        if self.cfg.brownout {
+            order.extend(self.map.variants_of[self.map.family_of(m)].iter().copied());
+        }
+        order
+    }
+
+    /// Is engine `g` routable as far as its breaker is concerned
+    /// (closed, or past its cooldown ⇒ half-open)?
+    pub fn allows(&self, t: Us, g: usize) -> bool {
+        match self.breakers[g].state {
+            BreakerState::Closed => true,
+            BreakerState::Open { until } => t >= until,
+        }
+    }
+
+    /// Feed one admission estimate for engine `g`: `miss` is whether the
+    /// best-case completion would overrun the request deadline.
+    pub fn note_estimate(&mut self, t: Us, g: usize, miss: bool) {
+        if self.cfg.breaker_k == 0 {
+            return;
+        }
+        let cooldown = ms_to_us(self.cfg.breaker_cooldown_ms).max(1);
+        let window = ms_to_us(self.cfg.breaker_window_ms).max(1);
+        let b = &mut self.breakers[g];
+        match b.state {
+            BreakerState::Open { until } if t < until => {} // hard-open: not routable, ignore
+            BreakerState::Open { .. } => {
+                // Half-open: a would-miss estimate re-opens immediately.
+                if miss {
+                    b.state = BreakerState::Open { until: t.saturating_add(cooldown) };
+                    b.consec = 0;
+                    b.last_miss = t;
+                    self.stats.breaker_trips += 1;
+                }
+            }
+            BreakerState::Closed => {
+                if !miss {
+                    b.consec = 0;
+                    return;
+                }
+                if t.saturating_sub(b.last_miss) > window {
+                    b.consec = 1;
+                } else {
+                    b.consec += 1;
+                }
+                b.last_miss = t;
+                if b.consec >= self.cfg.breaker_k {
+                    b.state = BreakerState::Open { until: t.saturating_add(cooldown) };
+                    b.consec = 0;
+                    self.stats.breaker_trips += 1;
+                }
+            }
+        }
+    }
+
+    /// A hedge moved work off engine `g` (it lost the race): counts as a
+    /// breaker miss.
+    pub fn note_hedge_loss(&mut self, t: Us, g: usize) {
+        self.note_estimate(t, g, true);
+    }
+
+    /// A request was dispatched to engine `g`: closes a half-open
+    /// breaker (this dispatch is the probe).
+    pub fn note_dispatch(&mut self, t: Us, g: usize) {
+        if let BreakerState::Open { until } = self.breakers[g].state {
+            if t >= until {
+                self.breakers[g].state = BreakerState::Closed;
+                self.breakers[g].consec = 0;
+                self.stats.breaker_probes += 1;
+            }
+        }
+    }
+
+    /// Earliest pending retry release, for `EpochDriver::next_event`.
+    pub fn next_release(&self) -> Option<Us> {
+        self.retry_q.iter().map(|e| e.release).min()
+    }
+
+    /// Deterministic exponential backoff for attempt `n` (1-based).
+    pub fn backoff_us(&self, attempt: u32) -> Us {
+        let exp = 2f64.powi(attempt.saturating_sub(1).min(52) as i32);
+        ms_to_us((self.cfg.backoff_base_ms * exp).min(self.cfg.backoff_cap_ms)).max(1)
+    }
+
+    /// Try to queue a retry as attempt `next_attempt`; `false` means the
+    /// attempt or deadline budget is spent (caller issues the terminal
+    /// typed reject).
+    pub fn try_schedule_retry(&mut self, t: Us, req: &Request, next_attempt: u32) -> bool {
+        if self.cfg.max_retries == 0 || next_attempt > self.cfg.max_retries {
+            return false;
+        }
+        let release = t.saturating_add(self.backoff_us(next_attempt));
+        if release >= req.deadline {
+            return false; // cannot meet the remaining deadline
+        }
+        self.retry_q.push(RetryEntry { release, seq: self.seq, attempt: next_attempt, req: req.clone() });
+        self.seq += 1;
+        self.stats.retries_scheduled += 1;
+        true
+    }
+
+    /// Drain retries due at `t`, ordered by (release, schedule order).
+    pub fn due_retries(&mut self, t: Us) -> Vec<(u32, Request)> {
+        if self.retry_q.iter().all(|e| e.release > t) {
+            return Vec::new();
+        }
+        let mut due: Vec<RetryEntry> = Vec::new();
+        self.retry_q.retain_mut(|e| {
+            if e.release <= t {
+                due.push(e.clone());
+                false
+            } else {
+                true
+            }
+        });
+        due.sort_by(|a, b| a.release.cmp(&b.release).then(a.seq.cmp(&b.seq)));
+        due.into_iter().map(|e| (e.attempt, e.req)).collect()
+    }
+
+    /// Retries still queued when the run ends, in deterministic order;
+    /// the driver accounts each as a `retry_exhausted` reject.
+    pub fn drain_leftover(&mut self) -> Vec<(u32, Request)> {
+        let mut rest = std::mem::take(&mut self.retry_q);
+        rest.sort_by(|a, b| a.release.cmp(&b.release).then(a.seq.cmp(&b.seq)));
+        rest.into_iter().map(|e| (e.attempt, e.req)).collect()
+    }
+
+    pub fn note_retry_served(&mut self) {
+        self.stats.retries_succeeded += 1;
+    }
+
+    pub fn note_degraded(&mut self, class: SloClass) {
+        match class {
+            SloClass::LatencyCritical => self.stats.degraded_served_critical += 1,
+            SloClass::Bulk => self.stats.degraded_served_bulk += 1,
+        }
+    }
+
+    pub fn note_retry_exhausted(&mut self, class: SloClass) {
+        match class {
+            SloClass::LatencyCritical => self.stats.retry_exhausted_critical += 1,
+            SloClass::Bulk => self.stats.retry_exhausted_bulk += 1,
+        }
+    }
+
+    pub fn note_breaker_reject(&mut self) {
+        self.stats.breaker_open_rejects += 1;
+    }
+
+    /// Terminal accounting for a reject that could not be retried:
+    /// `retry_exhausted` when retries are configured (the budget ran
+    /// out), else the original cause. Returns the cause the caller must
+    /// forward to `ResilienceStats` (deadline/unroutable), if any.
+    pub fn note_terminal(&mut self, kind: RejectKind, class: SloClass) -> Option<RejectKind> {
+        if self.cfg.max_retries > 0 {
+            self.note_retry_exhausted(class);
+            return None;
+        }
+        match kind {
+            RejectKind::BreakerOpen => {
+                self.note_breaker_reject();
+                None
+            }
+            other => Some(other),
+        }
+    }
+
+    pub fn finalize(self) -> OverloadStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::by_name;
+
+    fn req(model: usize, arrival: Us, deadline: Us) -> Request {
+        Request { id: 1, model, arrival, deadline }
+    }
+
+    fn spec(cfg: OverloadCfg, n_models: usize) -> OverloadSpec {
+        OverloadSpec { cfg, map: VariantMap::trivial(n_models) }
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let ovl = Overload::new(
+            &spec(
+                OverloadCfg { backoff_base_ms: 10.0, backoff_cap_ms: 35.0, ..Default::default() },
+                1,
+            ),
+            1,
+        );
+        assert_eq!(ovl.backoff_us(1), ms_to_us(10.0));
+        assert_eq!(ovl.backoff_us(2), ms_to_us(20.0));
+        assert_eq!(ovl.backoff_us(3), ms_to_us(35.0)); // capped, not 40
+        assert_eq!(ovl.backoff_us(9), ms_to_us(35.0));
+    }
+
+    #[test]
+    fn retry_budget_and_deadline_checked() {
+        let cfg = OverloadCfg {
+            max_retries: 2,
+            backoff_base_ms: 10.0,
+            backoff_cap_ms: 160.0,
+            ..Default::default()
+        };
+        let mut ovl = Overload::new(&spec(cfg, 1), 1);
+        let r = req(0, 0, ms_to_us(100.0));
+        assert!(ovl.try_schedule_retry(0, &r, 1));
+        assert!(ovl.try_schedule_retry(0, &r, 2));
+        assert!(!ovl.try_schedule_retry(0, &r, 3), "attempt budget spent");
+        // A release past the deadline is refused outright.
+        let tight = req(0, 0, ms_to_us(5.0));
+        assert!(!ovl.try_schedule_retry(0, &tight, 1));
+        assert_eq!(ovl.stats.retries_scheduled, 2);
+        // Releases surface in order through next_release/due_retries.
+        assert_eq!(ovl.next_release(), Some(ms_to_us(10.0)));
+        let due = ovl.due_retries(ms_to_us(10.0));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].0, 1);
+        assert_eq!(ovl.next_release(), Some(ms_to_us(20.0)));
+        let rest = ovl.drain_leftover();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].0, 2);
+        assert_eq!(ovl.next_release(), None);
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_closes() {
+        let cfg = OverloadCfg {
+            breaker_k: 3,
+            breaker_window_ms: 100.0,
+            breaker_cooldown_ms: 50.0,
+            ..Default::default()
+        };
+        let mut ovl = Overload::new(&spec(cfg, 1), 2);
+        let ms = ms_to_us;
+        for i in 0..3 {
+            assert!(ovl.allows(ms(i as f64), 0));
+            ovl.note_estimate(ms(i as f64), 0, true);
+        }
+        assert_eq!(ovl.stats.breaker_trips, 1);
+        assert!(!ovl.allows(ms(3.0), 0), "tripped breaker removes the engine");
+        assert!(ovl.allows(ms(3.0), 1), "other engines unaffected");
+        // Half-open after the cooldown; the probe dispatch closes it.
+        assert!(ovl.allows(ms(52.0) + ms(1.0), 0));
+        ovl.note_dispatch(ms(53.0), 0);
+        assert_eq!(ovl.stats.breaker_probes, 1);
+        assert!(ovl.allows(ms(54.0), 0));
+        // A fresh miss while closed starts a new count (window reset).
+        ovl.note_estimate(ms(60.0), 0, true);
+        ovl.note_estimate(ms(200.0), 0, true); // > window since last miss
+        ovl.note_estimate(ms(201.0), 0, true);
+        assert_eq!(ovl.stats.breaker_trips, 1, "window gap must reset the count");
+        ovl.note_estimate(ms(202.0), 0, true);
+        assert_eq!(ovl.stats.breaker_trips, 2);
+    }
+
+    #[test]
+    fn half_open_miss_reopens() {
+        let cfg = OverloadCfg {
+            breaker_k: 1,
+            breaker_cooldown_ms: 50.0,
+            ..Default::default()
+        };
+        let mut ovl = Overload::new(&spec(cfg, 1), 1);
+        ovl.note_estimate(0, 0, true);
+        assert!(!ovl.allows(ms_to_us(10.0), 0));
+        // Past cooldown: half-open, but a miss re-opens it.
+        ovl.note_estimate(ms_to_us(60.0), 0, true);
+        assert_eq!(ovl.stats.breaker_trips, 2);
+        assert!(!ovl.allows(ms_to_us(80.0), 0));
+    }
+
+    #[test]
+    fn successes_reset_consecutive_count() {
+        let cfg = OverloadCfg { breaker_k: 2, ..Default::default() };
+        let mut ovl = Overload::new(&spec(cfg, 1), 1);
+        ovl.note_estimate(1, 0, true);
+        ovl.note_estimate(2, 0, false);
+        ovl.note_estimate(3, 0, true);
+        assert_eq!(ovl.stats.breaker_trips, 0, "an ok estimate must reset the streak");
+        ovl.note_estimate(4, 0, true);
+        assert_eq!(ovl.stats.breaker_trips, 1);
+    }
+
+    #[test]
+    fn expand_profiles_builds_family_map() {
+        let base = vec![by_name("resnet50").unwrap(), by_name("alexnet").unwrap()];
+        let decl = VariantSpec {
+            name: "resnet50_lite".into(),
+            knee_pct: 20,
+            latency_scale: 0.4,
+            mem_mib: 400,
+        };
+        let (profiles, map) = expand_profiles(&base, &[(0, decl)]).unwrap();
+        assert_eq!(profiles.len(), 3);
+        assert_eq!(map.n_primary, 2);
+        assert_eq!(map.variants_of[0], vec![2]);
+        assert!(map.variants_of[1].is_empty());
+        assert_eq!(map.primary_of[2], Some(0));
+        assert_eq!(map.family_of(2), 0);
+        let v = &profiles[2];
+        assert_eq!(v.name, "resnet50_lite");
+        assert_eq!(v.knee_pct, 20);
+        assert_eq!(v.mem_mib, 400);
+        assert_eq!(v.slo_ms, base[0].slo_ms);
+        // The calibrated variant is genuinely cheaper at its knee.
+        let prim_rt = base[0].latency_ms(base[0].knee_pct, base[0].opt_batch);
+        let var_rt = v.latency_ms(v.knee_pct, v.opt_batch);
+        assert!(
+            (var_rt - 0.4 * base[0].runtime_ms).abs() / base[0].runtime_ms < 1e-6,
+            "variant runtime {var_rt} vs target {}",
+            0.4 * base[0].runtime_ms
+        );
+        assert!(var_rt < prim_rt);
+    }
+
+    #[test]
+    fn expand_profiles_rejects_bad_decls() {
+        let base = vec![by_name("resnet50").unwrap()];
+        let ok = VariantSpec { name: "v".into(), knee_pct: 20, latency_scale: 0.5, mem_mib: 100 };
+        assert!(expand_profiles(&base, &[(1, ok.clone())]).is_err(), "primary out of range");
+        let dup = VariantSpec { name: "resnet50".into(), ..ok.clone() };
+        assert!(expand_profiles(&base, &[(0, dup)]).is_err(), "name collision");
+        let bad_scale = VariantSpec { latency_scale: 1.5, ..ok.clone() };
+        assert!(expand_profiles(&base, &[(0, bad_scale)]).is_err());
+        let bad_knee = VariantSpec { knee_pct: 0, ..ok };
+        assert!(expand_profiles(&base, &[(0, bad_knee)]).is_err());
+    }
+
+    #[test]
+    fn service_order_respects_brownout_flag() {
+        let base = vec![by_name("resnet50").unwrap()];
+        let decl = VariantSpec { name: "lite".into(), knee_pct: 20, latency_scale: 0.5, mem_mib: 300 };
+        let (_, map) = expand_profiles(&base, &[(0, decl)]).unwrap();
+        let on = Overload::new(
+            &OverloadSpec { cfg: OverloadCfg { brownout: true, ..Default::default() }, map: map.clone() },
+            1,
+        );
+        assert_eq!(on.service_order(0), vec![0, 1]);
+        let off = Overload::new(
+            &OverloadSpec { cfg: OverloadCfg { brownout: false, ..Default::default() }, map },
+            1,
+        );
+        assert_eq!(off.service_order(0), vec![0]);
+    }
+
+    #[test]
+    fn terminal_typing_matches_retry_mode() {
+        let mut with = Overload::new(
+            &spec(OverloadCfg { max_retries: 2, ..Default::default() }, 1),
+            1,
+        );
+        assert_eq!(with.note_terminal(RejectKind::Deadline, SloClass::LatencyCritical), None);
+        assert_eq!(with.stats.retry_exhausted_critical, 1);
+        let mut without = Overload::new(
+            &spec(OverloadCfg { max_retries: 0, ..Default::default() }, 1),
+            1,
+        );
+        assert_eq!(
+            without.note_terminal(RejectKind::Deadline, SloClass::Bulk),
+            Some(RejectKind::Deadline)
+        );
+        assert_eq!(without.note_terminal(RejectKind::BreakerOpen, SloClass::Bulk), None);
+        assert_eq!(without.stats.breaker_open_rejects, 1);
+        assert_eq!(without.stats.retry_exhausted_bulk, 0);
+    }
+
+    #[test]
+    fn cfg_validation_bounds() {
+        assert!(OverloadCfg::default().validate().is_ok());
+        let bad = OverloadCfg { backoff_base_ms: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = OverloadCfg { backoff_cap_ms: 1.0, backoff_base_ms: 2.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = OverloadCfg { breaker_window_ms: -1.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = OverloadCfg { breaker_cooldown_ms: f64::NAN, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -431,10 +431,28 @@ mod tests {
         }
         // The biggest runtime contributors demand <10% GPU.
         let mut by_rt = ks.clone();
-        by_rt.sort_by(|a, b| b.runtime_frac.partial_cmp(&a.runtime_frac).unwrap());
+        by_rt.sort_by(|a, b| b.runtime_frac.total_cmp(&a.runtime_frac));
         for k in &by_rt[..2] {
             assert!(V100.pct_for_threads(k.threads) < 10.0, "{}", k.name);
         }
+    }
+
+    #[test]
+    fn runtime_frac_sort_total_cmp() {
+        // Regression for the NaN-unsafe partial_cmp().unwrap() the
+        // descending runtime_frac sort used: total_cmp matches
+        // partial_cmp on the finite fractions kernel tables hold, and a
+        // NaN key (greatest in the total order, so first in a descending
+        // sort) orders deterministically instead of panicking.
+        let mut by_rt = mobilenet_kernels();
+        by_rt.sort_by(|a, b| b.runtime_frac.total_cmp(&a.runtime_frac));
+        for w in by_rt.windows(2) {
+            assert!(w[0].runtime_frac >= w[1].runtime_frac);
+        }
+        let mut keys = vec![0.3f64, f64::NAN, 0.5, 0.2];
+        keys.sort_by(|a, b| b.total_cmp(a));
+        assert!(keys[0].is_nan());
+        assert_eq!(&keys[1..], &[0.5, 0.3, 0.2]);
     }
 
     #[test]

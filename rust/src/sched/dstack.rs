@@ -126,12 +126,16 @@ impl Dstack {
         required: bool,
     ) -> Vec<Planned> {
         // EDF: earliest deadline first; longer runtime first on ties so
-        // bulky instances grab contiguous capacity early.
+        // bulky instances grab contiguous capacity early. total_cmp
+        // orders identically to partial_cmp on the non-NaN runtimes
+        // profiles produce; a NaN runtime (greatest in the total order,
+        // so first in this descending tiebreak) sorts deterministically
+        // instead of panicking.
         insts.sort_by(|a, b| {
             a.2.cmp(&b.2).then_with(|| {
                 let ra = models[a.0].profile.runtime_ms;
                 let rb = models[b.0].profile.runtime_ms;
-                rb.partial_cmp(&ra).unwrap()
+                rb.total_cmp(&ra)
             })
         });
         let mut placed = Vec::new();
@@ -504,6 +508,28 @@ mod tests {
             let got = d.planned.iter().filter(|p| p.model == j).count() as u64;
             assert!(got >= want, "{}: planned {got} < required {want}", e.profile.name);
         }
+    }
+
+    #[test]
+    fn edf_tiebreak_total_cmp() {
+        // Equal deadlines tie-break on descending runtime — vgg19's
+        // instance must sort ahead of alexnet's. Regression for the
+        // NaN-unsafe partial_cmp().unwrap() this tiebreak used.
+        let es = entries(&["alexnet", "vgg19"]);
+        let d = Dstack::from_entries(&es);
+        let mut tl = CapTimeline::new();
+        let mut insts: Vec<(usize, Us, Us)> = vec![(0, 0, 80_000), (1, 0, 80_000)];
+        let placed =
+            d.place_instances(&mut insts, &es, &crate::profile::V100, &mut tl, 0, true);
+        assert_eq!(insts[0].0, 1, "longer runtime first on deadline ties");
+        assert!(!placed.is_empty());
+        // A NaN runtime key orders deterministically (greatest in the
+        // total order, so first in this descending tiebreak) instead of
+        // panicking mid-plan.
+        let mut keys = vec![0.5f64, f64::NAN, 2.0];
+        keys.sort_by(|a, b| b.total_cmp(a));
+        assert!(keys[0].is_nan());
+        assert_eq!(&keys[1..], &[2.0, 0.5]);
     }
 
     #[test]

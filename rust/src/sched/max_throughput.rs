@@ -20,9 +20,11 @@ impl MaxThroughput {
             let thpt = e.profile.throughput(e.pct, e.batch); // img/s
             thpt / e.pct as f64
         };
-        order.sort_by(|&a, &b| {
-            density(&models[b]).partial_cmp(&density(&models[a])).unwrap()
-        });
+        // total_cmp: identical order to partial_cmp on non-NaN
+        // densities; a degenerate profile (0/0 → NaN, greatest in the
+        // total order, so first in this descending sort) orders
+        // deterministically instead of panicking the scheduler.
+        order.sort_by(|&a, &b| density(&models[b]).total_cmp(&density(&models[a])));
         MaxThroughput { order }
     }
 }
@@ -96,5 +98,28 @@ mod tests {
         assert!(alex > 2 * vgg, "alexnet {alex} vs vgg {vgg}");
         // And aggregate throughput is high.
         assert!(rep.total_throughput() > 1_000.0, "{}", rep.total_throughput());
+    }
+
+    #[test]
+    fn density_order_total_cmp() {
+        // Regression for the NaN-unsafe partial_cmp().unwrap() this sort
+        // used: on the finite densities real entries produce the order
+        // must be descending (same as partial_cmp gave), and a NaN key
+        // must order deterministically instead of panicking.
+        let names = ["alexnet", "mobilenet", "resnet50", "vgg19"];
+        let profiles: Vec<_> = names.iter().map(|n| by_name(n).unwrap()).collect();
+        let entries = entries_at_optimum(&profiles);
+        let pol = MaxThroughput::from_entries(&entries);
+        let density = |e: &ModelEntry| e.profile.throughput(e.pct, e.batch) / e.pct as f64;
+        for w in pol.order.windows(2) {
+            assert!(
+                density(&entries[w[0]]) >= density(&entries[w[1]]),
+                "order not descending by density"
+            );
+        }
+        let mut keys = vec![1.0f64, f64::NAN, 3.0, 2.0];
+        keys.sort_by(|a, b| b.total_cmp(a));
+        assert!(keys[0].is_nan(), "NaN is greatest in the total order");
+        assert_eq!(&keys[1..], &[3.0, 2.0, 1.0]);
     }
 }

@@ -61,11 +61,14 @@ use crate::controlplane::{
     placement_delta, AdaptiveCfg, AdaptiveStats, DriftDetector, RateEstimator,
 };
 use crate::cluster::p99_of;
-use crate::faults::{pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg};
+use crate::faults::{
+    pick_hedge_target, queue_est_us, FaultKind, Resilience, ResilienceCfg, SloClass,
+};
 use crate::gpu::{ms_to_us, us_to_ms, Us};
 use crate::lifecycle::{reachability_candidates, LifecycleCfg, LifecycleStats, ModelStore};
 use crate::metrics::RunReport;
 use crate::obs::{EngineObs, EventKind, ObsCfg, ObsReport, Recorder, NO_MODEL};
+use crate::overload::{Overload, OverloadSpec, RejectKind};
 use crate::profile::{GpuSpec, ModelProfile};
 use crate::sim::{ModelEntry, Sim, SimConfig};
 use crate::util::stats::{percentile, LogHistogram};
@@ -169,6 +172,12 @@ struct UnifiedDriver<'a> {
     /// Fault timeline + SLO-class front door ([`crate::faults`]);
     /// `None` outside fault scenarios.
     res: Option<Resilience>,
+    /// Overload-control layer ([`crate::overload`]): retry backoff,
+    /// per-engine breakers, brownout variant fallback. Brownout here is
+    /// residency-gated — a variant is a candidate only where its
+    /// weights are already warm; degradation never triggers a cold
+    /// start. `None` when the scenario has no `overload` block.
+    ovl: Option<Overload>,
     /// Copied into engines created mid-run by replan surgery.
     obs_cfg: ObsCfg,
     /// Control-lane event recorder (routing + both planes' decisions).
@@ -188,8 +197,7 @@ impl UnifiedDriver<'_> {
         engines: &mut [Option<ExecEngine>],
         touched: &mut Touched,
     ) {
-        let all: &[Replica] = &self.replicas[model];
-        if all.is_empty() {
+        if self.replicas[model].is_empty() {
             self.rejected[model] += 1;
             if self.obs.on() {
                 self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
@@ -198,15 +206,13 @@ impl UnifiedDriver<'_> {
         }
         // Health filter: downed engines drop out of the candidate set
         // (the clone only happens while some engine is unroutable).
-        let filtered: Vec<Replica>;
-        let reps: &[Replica] = match self.res.as_ref() {
-            Some(res) if res.any_unroutable() => {
-                filtered = all.iter().filter(|r| res.routable(r.gpu)).cloned().collect();
-                &filtered
-            }
-            _ => all,
+        let filtered: Option<Vec<Replica>> = match self.res.as_ref() {
+            Some(res) if res.any_unroutable() => Some(
+                self.replicas[model].iter().filter(|r| res.routable(r.gpu)).cloned().collect(),
+            ),
+            _ => None,
         };
-        if reps.is_empty() {
+        if filtered.as_ref().is_some_and(|f| f.is_empty()) {
             // Placed, but every hosting engine is down right now.
             self.rejected[model] += 1;
             self.res.as_mut().expect("unroutable without resilience").note_unroutable();
@@ -215,6 +221,18 @@ impl UnifiedDriver<'_> {
             }
             return;
         }
+        // `dispatch_on` needs `&mut self`, so the unfiltered candidate
+        // list is moved out of `replicas[model]` for the call (O(1), no
+        // allocation) and restored right after — `dispatch_on` never
+        // reads `replicas`.
+        let mut taken: Vec<Replica> = Vec::new();
+        let reps: &[Replica] = match &filtered {
+            Some(f) => f,
+            None => {
+                taken = std::mem::take(&mut self.replicas[model]);
+                &taken
+            }
+        };
         let cache = &mut self.cache;
         let res = self.res.as_ref();
         let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
@@ -236,6 +254,38 @@ impl UnifiedDriver<'_> {
             };
             base.saturating_add((remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize)
         });
+        let (rid, rarr) = (req.id, req.arrival);
+        let landed = self.dispatch_on(t, model, req, reps, pick, work, engines, touched);
+        if filtered.is_none() {
+            self.replicas[model] = taken;
+        }
+        if landed.is_none() {
+            self.rejected[model] += 1;
+            if self.obs.on() {
+                self.obs.event(EventKind::Reject, rarr, model as u32, rid, 0);
+            }
+        }
+    }
+
+    /// Dispatch on the routed replica, falling back across `reps` in
+    /// index order: a warm replica serves immediately, an in-flight
+    /// load parks the request, a loadable GPU faults the model in.
+    /// Returns the GPU the request landed on, or `None` when every
+    /// candidate is crowded out (the caller counts the reject). Shared
+    /// by the plain routing path and the overload front door (which
+    /// routes over a breaker-filtered candidate set).
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_on(
+        &mut self,
+        t: Us,
+        model: usize,
+        req: Request,
+        reps: &[Replica],
+        pick: usize,
+        work: &mut VecDeque<(usize, Request)>,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) -> Option<usize> {
         let order = std::iter::once(pick).chain((0..reps.len()).filter(|&i| i != pick));
         for i in order {
             let (g, local) = (reps[i].gpu, reps[i].local);
@@ -250,13 +300,13 @@ impl UnifiedDriver<'_> {
                 self.cache.note_inject(g, local);
                 touched.mark(g);
                 self.lstats.warm_hits += 1;
-                return;
+                return Some(g);
             }
             if let Some(&ready) = self.loading.get(&(g, model)) {
                 self.cold_delays_ms.push(us_to_ms(ready.saturating_sub(req.arrival)));
                 self.held.entry((g, model)).or_default().push(req);
                 self.lstats.cold_delayed += 1;
-                return;
+                return Some(g);
             }
             let Some(victims) = self.stores[g].begin_load(
                 t,
@@ -305,11 +355,178 @@ impl UnifiedDriver<'_> {
             self.held.entry((g, model)).or_default().push(req);
             self.lstats.cold_delayed += 1;
             self.lstats.load_ms_total += load_ms;
+            return Some(g);
+        }
+        None
+    }
+
+    /// Best-case completion estimate the overload front door (and its
+    /// breakers) reasons about: analytic queue time over backlog +
+    /// parked + health penalty, plus any remaining weight upload when
+    /// the replica is cold.
+    fn admit_est_us(
+        &mut self,
+        t: Us,
+        model: usize,
+        rep: &Replica,
+        engines: &[Option<ExecEngine>],
+    ) -> Us {
+        let backlog = self
+            .cache
+            .backlog(engines, rep)
+            .saturating_add(self.held.get(&(rep.gpu, model)).map_or(0, |v| v.len()))
+            .saturating_add(self.res.as_ref().map_or(0, |r| r.penalty_items(rep.gpu)));
+        let mut est = queue_est_us(backlog, rep.batch, rep.capacity_rps);
+        if !self.stores[rep.gpu].is_warm(model) {
+            let remaining_ms = match self.loading.get(&(rep.gpu, model)) {
+                Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                None => self
+                    .cfg
+                    .lifecycle
+                    .reconfig
+                    .cold_load_ms(self.profiles[model].load_ms, self.stores[rep.gpu].n_warm()),
+            };
+            est = est.saturating_add(ms_to_us(remaining_ms));
+        }
+        est
+    }
+
+    /// The overload front door (armed `ovl` only): family-ordered
+    /// admission — the primary first, then its brownout variants — with
+    /// per-engine breaker feeding/filtering, resolved through
+    /// [`Self::dispatch_on`], a scheduled retry, or a typed terminal
+    /// reject. Variants are residency-gated: only replicas whose
+    /// weights are currently warm are candidates, so a brownout never
+    /// triggers a fallback cold start. `attempt` is 0 for fresh
+    /// arrivals and the retry ordinal for re-entries.
+    #[allow(clippy::too_many_arguments)]
+    fn overload_dispatch(
+        &mut self,
+        t: Us,
+        attempt: u32,
+        req: Request,
+        work: &mut VecDeque<(usize, Request)>,
+        engines: &mut [Option<ExecEngine>],
+        touched: &mut Touched,
+    ) {
+        let m = req.model;
+        let order = self.ovl.as_ref().expect("overload dispatch without layer").service_order(m);
+        let mut cause = RejectKind::Unroutable;
+        for (fi, &fm) in order.iter().enumerate() {
+            let healthy: Vec<Replica> = self.replicas[fm]
+                .iter()
+                .filter(|r| self.res.as_ref().is_none_or(|res| res.routable(r.gpu)))
+                .filter(|r| fi == 0 || self.stores[r.gpu].is_warm(fm))
+                .cloned()
+                .collect();
+            if healthy.is_empty() {
+                continue; // `cause` stays Unroutable for the primary
+            }
+            // Every healthy replica's estimate feeds its breaker; only
+            // breaker-approved replicas stay candidates.
+            let mut open: Vec<Replica> = Vec::with_capacity(healthy.len());
+            let mut best = Us::MAX;
+            for rep in &healthy {
+                let est = self.admit_est_us(t, fm, rep, engines);
+                let miss = t.saturating_add(est) > req.deadline;
+                let ovl = self.ovl.as_mut().expect("checked above");
+                ovl.note_estimate(t, rep.gpu, miss);
+                if ovl.allows(t, rep.gpu) {
+                    if est < best {
+                        best = est;
+                    }
+                    open.push(rep.clone());
+                }
+            }
+            if open.is_empty() {
+                if fi == 0 {
+                    cause = RejectKind::BreakerOpen;
+                }
+                continue;
+            }
+            if t.saturating_add(best) > req.deadline {
+                if fi == 0 {
+                    cause = RejectKind::Deadline;
+                }
+                continue;
+            }
+            // Route among the breaker-approved replicas with the same
+            // warmness-aware cost `dispatch` probes.
+            let cache = &mut self.cache;
+            let res = self.res.as_ref();
+            let (held, stores, loading) = (&self.held, &self.stores, &self.loading);
+            let (lcfg, profiles) = (&self.cfg.lifecycle, self.profiles);
+            let pick = self.router.route(fm, &open, |rep| {
+                let backlog = cache.backlog(engines, rep);
+                let parked = held.get(&(rep.gpu, fm)).map_or(0, |v| v.len());
+                let base = backlog
+                    .saturating_add(parked)
+                    .saturating_add(res.map_or(0, |r| r.penalty_items(rep.gpu)));
+                if !lcfg.warm_routing || stores[rep.gpu].is_warm(fm) {
+                    return base;
+                }
+                let remaining_ms = match loading.get(&(rep.gpu, fm)) {
+                    Some(&ready) => us_to_ms(ready.saturating_sub(t)),
+                    None => lcfg
+                        .reconfig
+                        .cold_load_ms(profiles[fm].load_ms, stores[rep.gpu].n_warm()),
+                };
+                base.saturating_add((remaining_ms * rep.capacity_rps / 1_000.0).ceil() as usize)
+            });
+            let landed = self.dispatch_on(t, fm, req, &open, pick, work, engines, touched);
+            let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+            match landed {
+                Some(g) => {
+                    let ovl = self.ovl.as_mut().expect("checked above");
+                    ovl.note_dispatch(t, g);
+                    if fi > 0 {
+                        ovl.note_degraded(class);
+                    }
+                    if attempt > 0 {
+                        ovl.note_retry_served();
+                    }
+                }
+                // Crowded out everywhere despite passing admission: the
+                // pre-existing untyped reject, kept identical so
+                // conservation still holds.
+                None => self.rejected[fm] += 1,
+            }
             return;
         }
-        self.rejected[model] += 1;
+        self.overload_reject(t, attempt, &req, cause);
+    }
+
+    /// A request the overload front door could not place anywhere in its
+    /// family: schedule a backoff retry if budget remains, else issue
+    /// the terminal typed reject (`retry_exhausted` when retries are on,
+    /// the original cause otherwise).
+    fn overload_reject(&mut self, t: Us, attempt: u32, req: &Request, cause: RejectKind) {
+        let m = req.model;
+        if self.ovl.as_mut().expect("overload reject without layer").try_schedule_retry(
+            t,
+            req,
+            attempt + 1,
+        ) {
+            return; // re-enters at its release barrier; not terminal
+        }
+        self.rejected[m] += 1;
+        let class = self.res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(m));
+        let forward = self.ovl.as_mut().expect("checked above").note_terminal(cause, class);
+        match forward {
+            Some(RejectKind::Deadline) => {
+                if let Some(res) = &mut self.res {
+                    res.note_deadline_reject(m);
+                }
+            }
+            Some(RejectKind::Unroutable) => {
+                if let Some(res) = &mut self.res {
+                    res.note_unroutable();
+                }
+            }
+            _ => {}
+        }
         if self.obs.on() {
-            self.obs.event(EventKind::Reject, req.arrival, model as u32, req.id, 0);
+            self.obs.event(EventKind::Reject, t, m as u32, req.id, 0);
         }
     }
 
@@ -501,6 +718,11 @@ impl UnifiedDriver<'_> {
                         touched.mark(g);
                         touched.mark(t_gpu);
                         self.res.as_mut().expect("checked").note_hedges(n, n);
+                        // A won hedge is evidence the source engine is
+                        // falling behind — feed its breaker.
+                        if let Some(ovl) = &mut self.ovl {
+                            ovl.note_hedge_loss(t, g);
+                        }
                     }
                 }
             }
@@ -722,8 +944,10 @@ impl EpochDriver for UnifiedDriver<'_> {
 
     fn elides_barriers(&self) -> bool {
         // Fault timelines, hedge sweeps and admission all read engine
-        // state at barriers — never elide while resilience is on.
-        self.free_routing && self.warm_span_ready() && self.res.is_none()
+        // state at barriers — never elide while resilience is on. The
+        // overload layer's breakers and retries read estimates at
+        // barriers too.
+        self.free_routing && self.warm_span_ready() && self.res.is_none() && self.ovl.is_none()
     }
 
     /// Barrier-free routing inside a fully-warm span (the lifecycle
@@ -779,7 +1003,8 @@ impl EpochDriver for UnifiedDriver<'_> {
             .and_then(|to| self.stores.iter().filter_map(|s| s.next_idle_expiry(to)).min());
         let t_tick = if self.next_tick < self.horizon { Some(self.next_tick) } else { None };
         let t_res = self.res.as_ref().and_then(|r| r.next_event());
-        [t_load, t_idle, t_tick, t_res].into_iter().flatten().min()
+        let t_retry = self.ovl.as_ref().and_then(|o| o.next_release());
+        [t_load, t_idle, t_tick, t_res, t_retry].into_iter().flatten().min()
     }
 
     /// Mature weight loads due at t (lifecycle semantics: parked
@@ -825,6 +1050,21 @@ impl EpochDriver for UnifiedDriver<'_> {
             }
             touched.mark(g);
         }
+        // Matured retries re-enter the front door after faults and load
+        // maturations so they see the same engine state a fresh arrival
+        // at t would.
+        if self.ovl.is_some() {
+            let due = self.ovl.as_mut().expect("checked").due_retries(t);
+            let mut work = std::mem::take(&mut self.scratch);
+            debug_assert!(work.is_empty());
+            for (attempt, req) in due {
+                self.overload_dispatch(t, attempt, req, &mut work, engines, touched);
+                while let Some((m, q)) = work.pop_front() {
+                    self.dispatch(t, m, q, &mut work, engines, touched);
+                }
+            }
+            self.scratch = work;
+        }
     }
 
     /// Route one arrival (demand-counted), draining any eviction
@@ -839,6 +1079,18 @@ impl EpochDriver for UnifiedDriver<'_> {
         self.window_counts[req.model] += 1;
         if self.obs.on() {
             self.obs.event(EventKind::Arrive, req.arrival, req.model as u32, req.id, 0);
+        }
+        // Overload front door supersedes plain admission: family-ordered
+        // brownout, breaker filtering, and retry scheduling.
+        if self.ovl.is_some() {
+            let mut work = std::mem::take(&mut self.scratch);
+            debug_assert!(work.is_empty());
+            self.overload_dispatch(t, 0, req, &mut work, engines, touched);
+            while let Some((m, q)) = work.pop_front() {
+                self.dispatch(t, m, q, &mut work, engines, touched);
+            }
+            self.scratch = work;
+            return;
         }
         // Deadline-aware admission (fresh arrivals only): reject
         // outright when even the best-case replica — shortest analytic
@@ -1011,7 +1263,39 @@ pub fn run_unified_stream_faults<S: ArrivalStream>(
     opts: ExecOpts,
     faults: Option<&ResilienceCfg>,
 ) -> ClusterReport {
+    run_unified_stream_overload(
+        profiles, initial_rates, gpus, placement, routing, sched, cfg, stream, horizon_ms, seed,
+        opts, faults, None,
+    )
+}
+
+/// [`run_unified_stream_faults`] plus the optional overload-control
+/// layer ([`crate::overload`]): retry-with-backoff, per-engine circuit
+/// breakers, and brownout variant fallback. When `overload` declares
+/// variants, `profiles` must already be the expanded list
+/// (`expand_profiles`) — variants enter the residency plan as ordinary
+/// near-zero-demand entries and are served only where their weights are
+/// warm.
+#[allow(clippy::too_many_arguments)]
+pub fn run_unified_stream_overload<S: ArrivalStream>(
+    profiles: &[ModelProfile],
+    initial_rates: &[f64],
+    gpus: &[GpuSpec],
+    placement: PlacementPolicy,
+    routing: RoutingPolicy,
+    sched: GpuSched,
+    cfg: &UnifiedCfg,
+    stream: S,
+    horizon_ms: f64,
+    seed: u64,
+    opts: ExecOpts,
+    faults: Option<&ResilienceCfg>,
+    overload: Option<&OverloadSpec>,
+) -> ClusterReport {
     cfg.validate().expect("invalid unified config");
+    if let Some(spec) = overload {
+        assert_eq!(profiles.len(), spec.map.n_total(), "profiles not expanded for variants");
+    }
     let n_models = profiles.len();
     let n_gpus = gpus.len();
     let horizon = ms_to_us(horizon_ms);
@@ -1125,10 +1409,29 @@ pub fn run_unified_stream_faults<S: ArrivalStream>(
         next_tick: interval,
         evictions_at_tick: 0,
         scratch: VecDeque::new(),
-        res: faults.map(|f| {
-            Resilience::new(f.clone(), profiles, n_gpus, horizon)
-                .expect("invalid faults config (validate at the config layer)")
-        }),
+        res: {
+            // The overload layer routes through the resilience front
+            // door's admission estimate; when armed without an explicit
+            // fault config, synthesize a minimal admission-only door.
+            let synth_cfg;
+            let res_cfg = match (faults, overload) {
+                (Some(f), _) => Some(f),
+                (None, Some(_)) => {
+                    synth_cfg = ResilienceCfg {
+                        admission: true,
+                        hedge: false,
+                        ..ResilienceCfg::default()
+                    };
+                    Some(&synth_cfg)
+                }
+                (None, None) => None,
+            };
+            res_cfg.map(|f| {
+                Resilience::new(f.clone(), profiles, n_gpus, horizon)
+                    .expect("invalid faults config (validate at the config layer)")
+            })
+        },
+        ovl: overload.map(|spec| Overload::new(spec, n_gpus)),
         obs_cfg: opts.obs,
         obs: Recorder::new(opts.obs, horizon),
     };
@@ -1147,16 +1450,27 @@ pub fn run_unified_stream_faults<S: ArrivalStream>(
         knee_load,
         shed_rps,
         stores,
-        rejected,
+        mut rejected,
         held,
         cold_delays_ms,
         mut lstats,
         mut astats,
         estimator,
         res,
+        mut ovl,
         obs: mut obs_rec,
         ..
     } = driver;
+    // Retries still pending at the horizon never got a terminal answer:
+    // count them as retry-exhausted rejects so every offered request is
+    // accounted.
+    if let Some(o) = &mut ovl {
+        for (_attempt, req) in o.drain_leftover() {
+            rejected[req.model] += 1;
+            let class = res.as_ref().map_or(SloClass::LatencyCritical, |r| r.class(req.model));
+            o.note_retry_exhausted(class);
+        }
+    }
     astats.est_rates = estimator.rates().to_vec();
     // Requests still parked behind an immature load never reached an
     // engine; stamp their drops on the control lane at the horizon.
@@ -1292,6 +1606,7 @@ pub fn run_unified_stream_faults<S: ArrivalStream>(
         adaptive: Some(astats),
         lifecycle: Some(lstats),
         resilience: res.map(|mut r| r.finalize(horizon, comps.into_iter())),
+        overload: ovl.map(|o| o.finalize()),
         exec: Some(exec_stats),
         obs,
     }

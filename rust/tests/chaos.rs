@@ -1,0 +1,330 @@
+//! Seeded chaos sweep: randomized combinations of fault timelines,
+//! workload shape, eviction policy and retry/breaker/brownout knobs,
+//! driven through the static, lifecycle and unified drivers. Every
+//! combination must uphold the simulator's global invariants —
+//! request conservation, availability ∈ [0, 100], knee load ≤ 100% per
+//! GPU at placement time, and epoch/sparse byte-identity. Failures
+//! print the per-iteration seed; re-run a single case with
+//! `DSTACK_CHAOS_SEED=<seed> DSTACK_CHAOS_ITERS=1 cargo test --test chaos`.
+
+use dstack::cluster::{
+    place, serve_cluster_stream_overload, ClusterReport, ExecMode, ExecOpts, GpuSched,
+    Parallelism, PlacementPolicy, RoutingPolicy,
+};
+use dstack::faults::{FaultEvent, FaultKind, ResilienceCfg};
+use dstack::gpu::ms_to_us;
+use dstack::lifecycle::{
+    longtail_gpus, longtail_workload, serve_longtail_stream_overload, EvictionPolicy, LifecycleCfg,
+};
+use dstack::overload::{expand_profiles, OverloadCfg, OverloadSpec, VariantMap, VariantSpec};
+use dstack::profile::{by_name, ModelProfile, T4, V100};
+use dstack::unified::{drifting_longtail_workload, run_unified_stream_overload, unified_gpus, UnifiedCfg};
+use dstack::workload::{merged_stream, Arrivals, MaterializedStream, Request};
+
+/// SplitMix64: a tiny deterministic generator for deriving case
+/// parameters. Not the simulator's RNG — just the fuzzer's dice.
+struct Dice(u64);
+
+impl Dice {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `0..n`.
+    fn pick(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+
+    fn chance(&mut self, pct: u64) -> bool {
+        self.pick(100) < pct
+    }
+}
+
+fn offered_counts(reqs: &[Request], n_models: usize) -> Vec<u64> {
+    let mut off = vec![0u64; n_models];
+    for r in reqs {
+        off[r.model] += 1;
+    }
+    off
+}
+
+fn check_invariants(rep: &ClusterReport, offered: &[u64], label: &str) {
+    let off: u64 = offered.iter().sum();
+    let acc: u64 = (0..rep.served.len())
+        .map(|m| rep.served[m] + rep.dropped[m] + rep.rejected[m])
+        .sum();
+    assert_eq!(acc, off, "{label}: conservation violated");
+    if let Some(res) = &rep.resilience {
+        assert!(
+            (0.0..=100.0).contains(&res.availability_pct),
+            "{label}: availability {} out of [0, 100]",
+            res.availability_pct
+        );
+    }
+    if let Some(o) = &rep.overload {
+        assert!(o.retries_succeeded <= o.retries_scheduled, "{label}: {o:?}");
+        assert!(o.breaker_probes <= o.breaker_trips, "{label}: more probes than trips: {o:?}");
+    }
+}
+
+/// A random but *valid* fault timeline: per GPU at most one
+/// degraded→down→up prefix, truncated at a random depth.
+fn random_faults(d: &mut Dice, n_gpus: usize, horizon_ms: f64) -> Option<ResilienceCfg> {
+    if d.chance(25) {
+        return None; // no fault layer at all
+    }
+    let mut events = Vec::new();
+    for g in 0..n_gpus {
+        if !d.chance(50) {
+            continue;
+        }
+        let t0 = 100.0 + d.pick((horizon_ms * 0.4) as u64) as f64;
+        let script: &[FaultKind] = match d.pick(3) {
+            0 => &[FaultKind::Degraded],
+            1 => &[FaultKind::Down, FaultKind::Up],
+            _ => &[FaultKind::Degraded, FaultKind::Down, FaultKind::Up],
+        };
+        let depth = 1 + d.pick(script.len() as u64) as usize;
+        for (i, kind) in script[..depth].iter().enumerate() {
+            events.push(FaultEvent {
+                t: ms_to_us(t0 + i as f64 * (50.0 + d.pick(300) as f64)),
+                gpu: g,
+                kind: *kind,
+            });
+        }
+    }
+    Some(ResilienceCfg {
+        events,
+        bulk_models: if d.chance(50) { vec!["vgg19".into()] } else { Vec::new() },
+        admission: true,
+        hedge: d.chance(30),
+        ..Default::default()
+    })
+}
+
+fn random_overload(d: &mut Dice, map: VariantMap) -> OverloadSpec {
+    OverloadSpec {
+        cfg: OverloadCfg {
+            max_retries: d.pick(4) as u32,
+            backoff_base_ms: 2.0 + d.pick(20) as f64,
+            backoff_cap_ms: 200.0,
+            breaker_k: d.pick(9) as u32,
+            breaker_window_ms: 200.0 + d.pick(400) as f64,
+            breaker_cooldown_ms: 50.0 + d.pick(300) as f64,
+            brownout: d.chance(70),
+            ..Default::default()
+        },
+        map,
+    }
+}
+
+fn epoch1() -> ExecOpts {
+    ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Epoch, ..Default::default() }
+}
+
+fn sparse_n(threads: usize) -> ExecOpts {
+    ExecOpts { threads: Parallelism::Threads(threads), mode: ExecMode::Sparse, ..Default::default() }
+}
+
+/// One static-driver case: random zoo subset, optional variant
+/// expansion, random faults + overload knobs.
+fn static_case(seed: u64) -> (String, String) {
+    let mut d = Dice(seed);
+    let zoo = ["mobilenet", "alexnet", "resnet50", "vgg19", "resnet18"];
+    let n = 2 + d.pick(3) as usize;
+    let base: Vec<ModelProfile> = zoo[..n].iter().map(|s| by_name(s).unwrap()).collect();
+    let decls: Vec<(usize, VariantSpec)> = if d.chance(60) {
+        vec![(
+            d.pick(n as u64) as usize,
+            VariantSpec {
+                name: "chaos_variant".into(),
+                knee_pct: 10 + d.pick(20) as u32,
+                latency_scale: 0.4 + d.pick(5) as f64 / 10.0,
+                mem_mib: 200 + d.pick(400),
+            },
+        )]
+    } else {
+        Vec::new()
+    };
+    let (profiles, map) = expand_profiles(&base, &decls).expect("valid chaos variant");
+    let horizon_ms = 1_200.0 + d.pick(1_000) as f64;
+    let specs: Vec<_> = base
+        .iter()
+        .map(|p| {
+            let rate = 80.0 + d.pick(400) as f64;
+            if d.chance(30) {
+                (
+                    Arrivals::Flash {
+                        base: rate,
+                        mult: 2.0 + d.pick(4) as f64,
+                        spike_start_ms: horizon_ms * 0.3,
+                        spike_ms: horizon_ms * 0.3,
+                    },
+                    p.slo_ms,
+                )
+            } else {
+                (Arrivals::Poisson { rate }, p.slo_ms)
+            }
+        })
+        .collect();
+    let reqs = merged_stream(&specs, horizon_ms, seed);
+    let offered = offered_counts(&reqs, profiles.len());
+    let mut rates: Vec<f64> = specs
+        .iter()
+        .map(|(a, _)| match a {
+            Arrivals::Poisson { rate } => *rate,
+            Arrivals::Flash { base, .. } => *base,
+            _ => 100.0,
+        })
+        .collect();
+    rates.resize(profiles.len(), 0.0);
+    let gpus: Vec<_> = match d.pick(3) {
+        0 => vec![V100.clone(), T4.clone()],
+        1 => vec![T4.clone(), T4.clone()],
+        _ => vec![V100.clone(), T4.clone(), T4.clone()],
+    };
+    // Knee invariant at placement time: the packer may never
+    // oversubscribe a GPU's spatial budget.
+    let pl = place(&profiles[..map.n_primary], &rates[..map.n_primary], &gpus, PlacementPolicy::LoadBalance);
+    for (g, &k) in pl.knee_load.iter().enumerate() {
+        assert!(k <= 100, "case {seed}: GPU {g} packed past 100% knee ({k})");
+    }
+    let faults = random_faults(&mut d, gpus.len(), horizon_ms);
+    let ovl = random_overload(&mut d, map);
+    let run = |opts: ExecOpts| {
+        serve_cluster_stream_overload(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            horizon_ms,
+            seed,
+            opts,
+            faults.as_ref(),
+            Some(&ovl),
+        )
+    };
+    let a = run(epoch1());
+    check_invariants(&a, &offered, &format!("static case {seed}"));
+    (a.to_json().to_string_pretty(), run(sparse_n(4)).to_json().to_string_pretty())
+}
+
+/// One lifecycle-driver case: memory pressure + random eviction policy
+/// under faults and overload.
+fn lifecycle_case(seed: u64) -> (String, String) {
+    let mut d = Dice(seed);
+    let n_models = 8 + d.pick(6) as usize;
+    let rate = 300.0 + d.pick(250) as f64;
+    let horizon_ms = 1_500.0 + d.pick(800) as f64;
+    let (profiles, rates, reqs) = longtail_workload(n_models, 1.1, rate, horizon_ms, seed);
+    let offered = offered_counts(&reqs, profiles.len());
+    let eviction = match d.pick(3) {
+        0 => EvictionPolicy::Lru,
+        1 => EvictionPolicy::Lfu,
+        _ => EvictionPolicy::CostAware,
+    };
+    let lcfg = LifecycleCfg {
+        eviction,
+        mem_budget_mib: 1_536 + d.pick(2_048),
+        idle_timeout_ms: if d.chance(50) { 300.0 } else { 0.0 },
+        ..Default::default()
+    };
+    let gpus = longtail_gpus();
+    let faults = random_faults(&mut d, gpus.len(), horizon_ms);
+    let ovl = random_overload(&mut d, VariantMap::trivial(profiles.len()));
+    let run = |opts: ExecOpts| {
+        serve_longtail_stream_overload(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &lcfg,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            horizon_ms,
+            seed,
+            opts,
+            faults.as_ref(),
+            Some(&ovl),
+        )
+    };
+    let a = run(epoch1());
+    check_invariants(&a, &offered, &format!("lifecycle case {seed}"));
+    (a.to_json().to_string_pretty(), run(sparse_n(2)).to_json().to_string_pretty())
+}
+
+/// One unified-driver case: drift + residency churn under overload.
+fn unified_case(seed: u64) -> (String, String) {
+    let mut d = Dice(seed);
+    let n_models = 10 + d.pick(4) as usize;
+    let rate = 350.0 + d.pick(200) as f64;
+    let horizon_ms = 1_500.0 + d.pick(700) as f64;
+    let (profiles, rates, reqs) =
+        drifting_longtail_workload(n_models, 1.1, rate, horizon_ms, seed);
+    let offered = offered_counts(&reqs, profiles.len());
+    let ucfg = UnifiedCfg {
+        lifecycle: LifecycleCfg {
+            mem_budget_mib: 2_048 + d.pick(2_048),
+            min_replicas: 1 + d.pick(2) as usize,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let gpus = unified_gpus(3 + d.pick(2) as usize);
+    let faults = random_faults(&mut d, gpus.len(), horizon_ms);
+    let ovl = random_overload(&mut d, VariantMap::trivial(profiles.len()));
+    let run = |opts: ExecOpts| {
+        run_unified_stream_overload(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &ucfg,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            horizon_ms,
+            seed,
+            opts,
+            faults.as_ref(),
+            Some(&ovl),
+        )
+    };
+    let a = run(epoch1());
+    check_invariants(&a, &offered, &format!("unified case {seed}"));
+    (a.to_json().to_string_pretty(), run(sparse_n(4)).to_json().to_string_pretty())
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[test]
+fn chaos_sweep_upholds_invariants() {
+    let base_seed = env_u64("DSTACK_CHAOS_SEED", 0xD57A);
+    let iters = env_u64("DSTACK_CHAOS_ITERS", 9);
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x1_0000));
+        // Rotate drivers so every run covers all three; a single
+        // failing (driver, seed) pair reproduces via DSTACK_CHAOS_SEED
+        // with DSTACK_CHAOS_ITERS=1 after adding the offset printed in
+        // the panic label.
+        let (epoch, sparse) = match i % 3 {
+            0 => static_case(seed),
+            1 => lifecycle_case(seed),
+            _ => unified_case(seed),
+        };
+        assert_eq!(
+            epoch, sparse,
+            "chaos case seed={seed} (iter {i}): epoch and sparse reports diverged"
+        );
+    }
+}

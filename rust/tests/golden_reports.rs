@@ -235,6 +235,26 @@ fn engine_failure_report_matches_golden() {
 }
 
 #[test]
+fn brownout_flash_report_matches_golden() {
+    // The shipped overload scenario end to end: scenario file → variant
+    // expansion (primaries + int8 brownouts) → streaming cluster core
+    // with retries, breakers and brownout armed. The golden pins the
+    // whole overload layer — backoff schedule, breaker state machine,
+    // variant co-location, degraded-goodput accounting and the
+    // serialized `overload` block — against behavioral drift.
+    let cfg =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/cluster_brownout_flash.json");
+    let sc = dstack::config::Scenario::from_file(&cfg).expect("shipped config must load");
+    let rep = dstack::config::run_cluster_scenario(&sc);
+    let o = rep.overload.as_ref().expect("overload runs must serialize overload stats");
+    assert!(
+        o.retries_scheduled + o.degraded_served_total() + o.breaker_trips > 0,
+        "the shipped flash crowd must exercise the overload layer"
+    );
+    check_golden("brownout_flash", &rep.to_json());
+}
+
+#[test]
 fn legacy_fig12_cluster_matches_golden() {
     use dstack::cluster::{fig12_workload, run_cluster, ClusterPolicy};
     let (profiles, _rates, reqs) = fig12_workload(HORIZON_MS, SEED);

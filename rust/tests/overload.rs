@@ -1,0 +1,572 @@
+//! Driver-level contract of the overload-control layer (`overload`,
+//! DESIGN.md §4.13): retry-with-backoff resolves at driver-event
+//! barriers (byte-identical reports across exec mode × threads ×
+//! ingestion), circuit breakers trip and recover inside real runs,
+//! brownout serves declared variants with per-class degraded-goodput
+//! accounting, the typed-reject taxonomy stays conservation-exact, and
+//! the config boundary gates the `"overload"` block and `variants`
+//! declarations. Complements the state-machine unit tests in
+//! `overload::tests` and the full identity matrix row in
+//! `tests/parallel_exec.rs`.
+
+use dstack::cluster::{
+    serve_cluster_stream_faults, serve_cluster_stream_overload, ClusterReport, ExecMode, ExecOpts,
+    GpuSched, Parallelism, PlacementPolicy, RoutingPolicy,
+};
+use dstack::config::Scenario;
+use dstack::controlplane::{drift_gpus, drift_workload, run_adaptive_stream_overload, AdaptiveCfg};
+use dstack::lifecycle::{longtail_gpus, longtail_workload, serve_longtail_stream_overload, LifecycleCfg};
+use dstack::overload::{expand_profiles, OverloadCfg, OverloadSpec, VariantMap, VariantSpec};
+use dstack::profile::{by_name, ModelProfile, T4, V100};
+use dstack::unified::{drifting_longtail_workload, run_unified_stream_overload, unified_gpus, UnifiedCfg};
+use dstack::workload::{merged_stream, Arrivals, MaterializedStream, Request};
+use std::path::PathBuf;
+
+fn offered_counts(reqs: &[Request], n_models: usize) -> Vec<u64> {
+    let mut off = vec![0u64; n_models];
+    for r in reqs {
+        off[r.model] += 1;
+    }
+    off
+}
+
+/// Per-model conservation (exact when no brownout re-targeting happened).
+fn assert_conserved(rep: &ClusterReport, offered: &[u64], label: &str) {
+    for m in 0..offered.len() {
+        assert_eq!(
+            rep.served[m] + rep.dropped[m] + rep.rejected[m],
+            offered[m],
+            "{label}: model {m} lost or double-served requests"
+        );
+    }
+}
+
+/// Total conservation across the whole (possibly variant-expanded)
+/// model space: brownout moves a request to a sibling index, never out
+/// of the books.
+fn assert_conserved_total(rep: &ClusterReport, offered: &[u64], label: &str) {
+    let off: u64 = offered.iter().sum();
+    let acc: u64 = (0..rep.served.len())
+        .map(|m| rep.served[m] + rep.dropped[m] + rep.rejected[m])
+        .sum();
+    assert_eq!(acc, off, "{label}: expanded fleet lost or double-served requests");
+}
+
+fn c4() -> (Vec<ModelProfile>, Vec<f64>) {
+    let names = ["mobilenet", "alexnet", "resnet50", "vgg19"];
+    let profiles: Vec<ModelProfile> = names.iter().map(|n| by_name(n).unwrap()).collect();
+    let rates = vec![700.0, 700.0, 320.0, 160.0];
+    (profiles, rates)
+}
+
+fn c4_requests(rates: &[f64], profiles: &[ModelProfile], horizon_ms: f64, seed: u64) -> Vec<Request> {
+    let specs: Vec<_> = profiles
+        .iter()
+        .zip(rates)
+        .map(|(p, &r)| (Arrivals::Poisson { rate: r }, p.slo_ms))
+        .collect();
+    merged_stream(&specs, horizon_ms, seed)
+}
+
+fn trivial_spec(cfg: OverloadCfg, n_models: usize) -> OverloadSpec {
+    OverloadSpec { cfg, map: VariantMap::trivial(n_models) }
+}
+
+fn serial() -> ExecOpts {
+    ExecOpts { threads: Parallelism::Threads(1), mode: ExecMode::Epoch, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// Retry-with-backoff: taxonomy exactness and cross-mode determinism.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retry_backoff_conserves_types_and_reproduces() {
+    // Two T4s cannot carry the c4 mix: deadline admission rejects pile
+    // up and every one must flow through the retry queue. With retries
+    // armed every *terminal* reject is typed retry_exhausted — the
+    // rejected counters and the typed counters must balance exactly.
+    let (profiles, rates) = c4();
+    let reqs = c4_requests(&rates, &profiles, 2_000.0, 9);
+    let offered = offered_counts(&reqs, profiles.len());
+    let gpus = [T4.clone(), T4.clone()];
+    let spec = trivial_spec(
+        OverloadCfg { max_retries: 2, backoff_base_ms: 5.0, backoff_cap_ms: 40.0, ..Default::default() },
+        profiles.len(),
+    );
+    let run = |opts: ExecOpts| {
+        serve_cluster_stream_overload(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            2_000.0,
+            9,
+            opts,
+            None,
+            Some(&spec),
+        )
+    };
+    let rep = run(serial());
+    assert_conserved(&rep, &offered, "retry run");
+    let o = rep.overload.as_ref().expect("overload run must attach overload stats");
+    assert!(o.retries_scheduled > 0, "an overloaded front door must schedule retries");
+    assert!(o.retries_succeeded <= o.retries_scheduled);
+    let rejected_total: u64 = rep.rejected.iter().sum();
+    assert_eq!(
+        rejected_total,
+        o.retry_exhausted_total(),
+        "with retries armed every terminal reject must be typed retry_exhausted"
+    );
+    // Byte-identity: repeat, then sparse mode at higher thread counts.
+    let a = rep.to_json().to_string_pretty();
+    assert_eq!(a, run(serial()).to_json().to_string_pretty(), "repeat run diverged");
+    for threads in [2usize, 8] {
+        let opts = ExecOpts {
+            threads: Parallelism::Threads(threads),
+            mode: ExecMode::Sparse,
+            ..Default::default()
+        };
+        assert_eq!(
+            a,
+            run(opts).to_json().to_string_pretty(),
+            "retry run diverged at sparse/threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn retry_deadline_budget_exhaustion_is_typed() {
+    // A backoff floor longer than any model's SLO window means no retry
+    // can ever be scheduled (its release would land past the deadline):
+    // the budget check must refuse them all and the terminal rejects
+    // still carry the retry_exhausted type.
+    let (profiles, rates) = c4();
+    let reqs = c4_requests(&rates, &profiles, 1_500.0, 3);
+    let offered = offered_counts(&reqs, profiles.len());
+    let gpus = [T4.clone(), T4.clone()];
+    let spec = trivial_spec(
+        OverloadCfg {
+            max_retries: 3,
+            backoff_base_ms: 1_000.0,
+            backoff_cap_ms: 1_000.0,
+            ..Default::default()
+        },
+        profiles.len(),
+    );
+    let rep = serve_cluster_stream_overload(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        MaterializedStream::new(reqs, profiles.len()),
+        1_500.0,
+        3,
+        serial(),
+        None,
+        Some(&spec),
+    );
+    assert_conserved(&rep, &offered, "deadline-budget run");
+    let o = rep.overload.expect("overload stats");
+    assert_eq!(o.retries_scheduled, 0, "a 1 s backoff can never meet a <1 s deadline");
+    let rejected_total: u64 = rep.rejected.iter().sum();
+    assert!(rejected_total > 0, "two T4s must reject part of the c4 mix");
+    assert_eq!(rejected_total, o.retry_exhausted_total());
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breakers inside a real run.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn breakers_trip_during_flash_and_recover_after() {
+    // A flash crowd on one model drives consecutive would-miss
+    // estimates into the breakers; after the spike subsides the
+    // half-open probe path must close them again (probes > 0). Retries
+    // are off, so terminal causes keep their original types.
+    let profiles = vec![by_name("resnet50").unwrap(), by_name("mobilenet").unwrap()];
+    let rates = vec![250.0, 300.0];
+    let specs = vec![
+        (
+            Arrivals::Flash { base: 250.0, mult: 6.0, spike_start_ms: 800.0, spike_ms: 1_200.0 },
+            profiles[0].slo_ms,
+        ),
+        (Arrivals::Poisson { rate: 300.0 }, profiles[1].slo_ms),
+    ];
+    let reqs = merged_stream(&specs, 4_000.0, 21);
+    let offered = offered_counts(&reqs, profiles.len());
+    let gpus = [V100.clone(), T4.clone()];
+    let spec = trivial_spec(
+        OverloadCfg {
+            max_retries: 0,
+            breaker_k: 5,
+            breaker_window_ms: 300.0,
+            breaker_cooldown_ms: 100.0,
+            ..Default::default()
+        },
+        profiles.len(),
+    );
+    let rep = serve_cluster_stream_overload(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::LoadBalance,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        MaterializedStream::new(reqs, profiles.len()),
+        4_000.0,
+        21,
+        serial(),
+        None,
+        Some(&spec),
+    );
+    assert_conserved(&rep, &offered, "breaker run");
+    let o = rep.overload.expect("overload stats");
+    assert!(o.breaker_trips > 0, "a 6x flash must trip a breaker");
+    assert!(
+        o.breaker_probes > 0,
+        "post-spike traffic must half-open and close a breaker via a probe dispatch"
+    );
+    assert_eq!(o.retry_exhausted_total(), 0, "retries are off in this run");
+}
+
+// ---------------------------------------------------------------------------
+// Brownout variant degradation (static driver).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn brownout_serves_variants_and_counts_goodput() {
+    // resnet50 declares an int8 variant at half the runtime. During the
+    // flash the primary's queue estimate blows its deadline and the
+    // front door must fall back to the co-located variant — visible as
+    // served requests on the variant index and per-class degraded
+    // counters — while total conservation holds across the expanded
+    // space. With brownout disabled the same workload serves no
+    // variant at all.
+    let base = vec![by_name("resnet50").unwrap(), by_name("mobilenet").unwrap()];
+    let decl = VariantSpec {
+        name: "resnet50_int8".into(),
+        knee_pct: 20,
+        latency_scale: 0.5,
+        mem_mib: 400,
+    };
+    let (profiles, map) = expand_profiles(&base, &[(0, decl)]).unwrap();
+    let v_idx = map.variants_of[0][0];
+    let specs = vec![
+        (
+            Arrivals::Flash { base: 250.0, mult: 5.0, spike_start_ms: 700.0, spike_ms: 1_500.0 },
+            base[0].slo_ms,
+        ),
+        (Arrivals::Poisson { rate: 350.0 }, base[1].slo_ms),
+    ];
+    let reqs = merged_stream(&specs, 3_500.0, 17);
+    let offered = offered_counts(&reqs, profiles.len());
+    let mut rates = vec![250.0, 350.0];
+    rates.resize(profiles.len(), 0.0);
+    let gpus = [V100.clone()];
+    let run = |brownout: bool, opts: ExecOpts| {
+        let spec = OverloadSpec {
+            cfg: OverloadCfg { max_retries: 2, brownout, ..Default::default() },
+            map: map.clone(),
+        };
+        serve_cluster_stream_overload(
+            &profiles,
+            &rates,
+            &gpus,
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            3_500.0,
+            17,
+            opts,
+            None,
+            Some(&spec),
+        )
+    };
+    let rep = run(true, serial());
+    assert_conserved_total(&rep, &offered, "brownout run");
+    assert_eq!(offered[v_idx], 0, "variants must receive no direct arrivals");
+    let o = rep.overload.as_ref().expect("overload stats");
+    assert!(
+        o.degraded_served_total() > 0,
+        "the flash must push some requests onto the int8 variant"
+    );
+    assert_eq!(
+        rep.served[v_idx], o.degraded_served_total(),
+        "every variant-served request is exactly one degraded-served count"
+    );
+    // Brownout decisions happen at barriers too: full byte-identity.
+    let a = rep.to_json().to_string_pretty();
+    let sparse = ExecOpts {
+        threads: Parallelism::Threads(4),
+        mode: ExecMode::Sparse,
+        ..Default::default()
+    };
+    assert_eq!(a, run(true, sparse).to_json().to_string_pretty(), "brownout run diverged");
+    // Kill switch: same declarations, brownout off — no variant serving.
+    let off = run(false, serial());
+    assert_eq!(off.served[v_idx], 0);
+    assert_eq!(off.overload.expect("stats").degraded_served_total(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Lifecycle and unified drivers: residency-gated brownout, determinism.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lifecycle_brownout_composes_with_residency() {
+    // Memory-pressured long-tail fleet with variants declared for the
+    // two head models. Variants are ordinary (zero-rate) residency
+    // entries: brownout may only use them where the ModelStore already
+    // has them warm — never a cold start. The observable contract here:
+    // conservation over the expanded space, overload stats attached,
+    // and byte-identity across exec modes.
+    let (base, mut rates, reqs) = longtail_workload(10, 1.1, 500.0, 3_000.0, 7);
+    let decls = vec![
+        (
+            0usize,
+            VariantSpec { name: "lt0_int8".into(), knee_pct: 15, latency_scale: 0.5, mem_mib: 300 },
+        ),
+        (
+            1usize,
+            VariantSpec { name: "lt1_int8".into(), knee_pct: 15, latency_scale: 0.5, mem_mib: 300 },
+        ),
+    ];
+    let (profiles, map) = expand_profiles(&base, &decls).unwrap();
+    rates.resize(profiles.len(), 0.0);
+    let offered = offered_counts(&reqs, profiles.len());
+    let lcfg = LifecycleCfg { mem_budget_mib: 4_096, min_replicas: 1, ..Default::default() };
+    let spec = OverloadSpec {
+        cfg: OverloadCfg { max_retries: 2, breaker_k: 8, ..Default::default() },
+        map,
+    };
+    let run = |opts: ExecOpts| {
+        serve_longtail_stream_overload(
+            &profiles,
+            &rates,
+            &longtail_gpus(),
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &lcfg,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            3_000.0,
+            7,
+            opts,
+            None,
+            Some(&spec),
+        )
+    };
+    let rep = run(serial());
+    assert_conserved_total(&rep, &offered, "lifecycle brownout");
+    assert!(rep.overload.is_some(), "overload stats must attach");
+    assert!(rep.lifecycle.is_some(), "overload wiring must not drop lifecycle stats");
+    let a = rep.to_json().to_string_pretty();
+    let sparse = ExecOpts {
+        threads: Parallelism::Threads(2),
+        mode: ExecMode::Sparse,
+        ..Default::default()
+    };
+    assert_eq!(a, run(sparse).to_json().to_string_pretty(), "lifecycle brownout diverged");
+}
+
+#[test]
+fn adaptive_and_unified_overload_reproduce() {
+    // The remaining two drivers, retry + breaker armed (trivial variant
+    // map — the scenario paths for these fleets do the same): per-model
+    // conservation, stats attached alongside the drivers' own, and
+    // byte-identity epoch vs sparse.
+    let cfg = OverloadCfg { max_retries: 2, breaker_k: 6, ..Default::default() };
+    let sparse = ExecOpts {
+        threads: Parallelism::Threads(4),
+        mode: ExecMode::Sparse,
+        ..Default::default()
+    };
+
+    let (profiles, initial, _peak, reqs) = drift_workload(2_000.0, 11);
+    let offered = offered_counts(&reqs, profiles.len());
+    let acfg = AdaptiveCfg { interval_ms: 250.0, cooldown_ticks: 1, ..Default::default() };
+    let spec = trivial_spec(cfg.clone(), profiles.len());
+    let run_a = |opts: ExecOpts| {
+        run_adaptive_stream_overload(
+            &profiles,
+            &initial,
+            &drift_gpus(),
+            PlacementPolicy::FirstFitDecreasing,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &acfg,
+            MaterializedStream::new(reqs.clone(), profiles.len()),
+            2_000.0,
+            11,
+            opts,
+            None,
+            Some(&spec),
+        )
+    };
+    let rep = run_a(serial());
+    assert_conserved(&rep, &offered, "adaptive overload");
+    assert!(rep.overload.is_some() && rep.adaptive.is_some());
+    assert_eq!(
+        rep.to_json().to_string_pretty(),
+        run_a(sparse).to_json().to_string_pretty(),
+        "adaptive overload diverged"
+    );
+
+    let (uprofiles, urates, ureqs) = drifting_longtail_workload(12, 1.1, 450.0, 2_000.0, 17);
+    let uoffered = offered_counts(&ureqs, uprofiles.len());
+    let ucfg = UnifiedCfg {
+        lifecycle: LifecycleCfg { mem_budget_mib: 3_072, min_replicas: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let uspec = trivial_spec(cfg, uprofiles.len());
+    let run_u = |opts: ExecOpts| {
+        run_unified_stream_overload(
+            &uprofiles,
+            &urates,
+            &unified_gpus(4),
+            PlacementPolicy::LoadBalance,
+            RoutingPolicy::JoinShortestQueue,
+            GpuSched::Dstack,
+            &ucfg,
+            MaterializedStream::new(ureqs.clone(), uprofiles.len()),
+            2_000.0,
+            17,
+            opts,
+            None,
+            Some(&uspec),
+        )
+    };
+    let urep = run_u(serial());
+    assert_conserved(&urep, &uoffered, "unified overload");
+    let o = urep.overload.as_ref().expect("overload stats");
+    // Unified keeps an untyped reject path (replica sets crowded out
+    // mid-reconfig), so typed rejects bound, not equal, the total.
+    assert!(o.retry_exhausted_total() <= urep.rejected.iter().sum::<u64>());
+    assert!(urep.adaptive.is_some() && urep.lifecycle.is_some());
+    assert_eq!(
+        urep.to_json().to_string_pretty(),
+        run_u(sparse).to_json().to_string_pretty(),
+        "unified overload diverged"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The Option<overload> seam: absent block, absent key, identical bytes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn absent_overload_block_changes_nothing() {
+    let (profiles, rates) = c4();
+    let reqs = c4_requests(&rates, &profiles, 1_200.0, 5);
+    let gpus = [V100.clone(), T4.clone()];
+    let via_overload = serve_cluster_stream_overload(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        MaterializedStream::new(reqs.clone(), profiles.len()),
+        1_200.0,
+        5,
+        serial(),
+        None,
+        None,
+    )
+    .to_json()
+    .to_string_pretty();
+    let via_faults = serve_cluster_stream_faults(
+        &profiles,
+        &rates,
+        &gpus,
+        PlacementPolicy::FirstFitDecreasing,
+        RoutingPolicy::JoinShortestQueue,
+        GpuSched::Dstack,
+        MaterializedStream::new(reqs, profiles.len()),
+        1_200.0,
+        5,
+        serial(),
+        None,
+    )
+    .to_json()
+    .to_string_pretty();
+    assert_eq!(via_overload, via_faults, "a None overload layer must be invisible");
+    assert!(
+        !via_overload.contains("\"overload\""),
+        "reports without an overload block must not grow an overload key"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Config boundary: the "overload" block and variants declarations.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn config_gates_overload_and_variants() {
+    let base = |models: &str, extra: &str| {
+        format!(
+            r#"{{"name": "t", "horizon_ms": 1000,
+                 "cluster": {{"gpus": ["V100"], "placement": "lb", "routing": "jsq"}},
+                 "models": [{models}]{extra}}}"#
+        )
+    };
+    let with_variant = r#"{"name": "resnet50", "rate": 100,
+        "variants": [{"name": "resnet50_int8", "knee_pct": 20,
+                      "latency_scale": 0.5, "mem_mib": 400}]}"#;
+    // Variants without an overload block are rejected.
+    assert!(Scenario::from_json(&base(with_variant, "")).is_err());
+    // Variants with a lifecycle fleet are rejected.
+    let lc = r#", "overload": {}, "lifecycle": {"n_models": 4, "alpha": 1.1,
+                 "total_rps": 100, "mem_budget_mib": 2048}"#;
+    assert!(Scenario::from_json(&base(with_variant, lc)).is_err());
+    // Duplicate variant names are rejected at load, not at run.
+    let dup = r#"{"name": "resnet50", "rate": 100,
+        "variants": [{"name": "resnet50", "knee_pct": 20,
+                      "latency_scale": 0.5, "mem_mib": 400}]}"#;
+    assert!(Scenario::from_json(&base(dup, r#", "overload": {}"#)).is_err());
+    // The legal form parses, expands, and round-trips.
+    let sc = Scenario::from_json(&base(with_variant, r#", "overload": {"breaker_k": 4}"#))
+        .expect("legal overload config must parse");
+    let (profiles, spec) = sc
+        .overload_expanded()
+        .expect("expansion must succeed")
+        .expect("overload block must expand");
+    assert_eq!(profiles.len(), 2);
+    assert_eq!(spec.map.n_primary, 1);
+    assert_eq!(spec.cfg.breaker_k, 4);
+    let back = Scenario::from_json(&sc.to_json().to_string_pretty())
+        .expect("emitted overload config must re-parse");
+    assert_eq!(back.models[0].variants.len(), 1);
+    assert_eq!(back.overload.expect("overload survives round-trip").breaker_k, 4);
+}
+
+// ---------------------------------------------------------------------------
+// The shipped scenario file.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_brownout_scenario_runs() {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/cluster_brownout_flash.json");
+    let sc = Scenario::from_file(&path).expect("shipped config must load");
+    let ocfg = sc.overload.as_ref().expect("config must carry an overload block");
+    assert!(ocfg.brownout && ocfg.max_retries > 0 && ocfg.breaker_k > 0);
+    assert!(
+        sc.models.iter().any(|m| !m.variants.is_empty()),
+        "the shipped scenario declares brownout variants"
+    );
+    let rep = dstack::config::run_cluster_scenario(&sc);
+    let o = rep.overload.expect("overload run must attach overload stats");
+    assert!(
+        o.retries_scheduled + o.degraded_served_total() + o.breaker_trips > 0,
+        "the flash-crowd scenario must exercise the overload layer: {o:?}"
+    );
+    assert!(rep.served.iter().sum::<u64>() > 0);
+}

@@ -11,8 +11,9 @@
 //! implementation eligible for the worker pool.
 
 use dstack::cluster::{
-    fig12_specs, fig12_workload, place, run_placement_stream, run_placement_with, ExecMode,
-    ExecOpts, GpuSched, Parallelism, PlacementPolicy, RoutingPolicy,
+    fig12_specs, fig12_workload, place, run_placement_stream, run_placement_with,
+    serve_cluster_stream_overload, ExecMode, ExecOpts, GpuSched, Parallelism, PlacementPolicy,
+    RoutingPolicy,
 };
 use dstack::controlplane::{
     drift_gpus, drift_specs, drift_workload, run_adaptive_stream, run_adaptive_with, AdaptiveCfg,
@@ -28,12 +29,13 @@ use dstack::unified::{
     drifting_longtail_specs, drifting_longtail_workload, run_unified_stream, run_unified_with,
     unified_gpus, UnifiedCfg,
 };
+use dstack::overload::{expand_profiles, OverloadCfg, OverloadSpec, VariantSpec};
 use dstack::workload::{MaterializedStream, MergedStream};
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 const MODES: [ExecMode; 2] = [ExecMode::Epoch, ExecMode::Sparse];
 
-const SCENARIOS: [&str; 9] = [
+const SCENARIOS: [&str; 10] = [
     "static-jsq",
     "static-wide-jsq",
     "static-wide-rr",
@@ -43,6 +45,7 @@ const SCENARIOS: [&str; 9] = [
     "lifecycle",
     "unified",
     "lifecycle-faults",
+    "static-overload",
 ];
 
 /// Render the canonical scenarios' reports under `opts`. `streamed`
@@ -306,6 +309,64 @@ fn report_strings(opts: ExecOpts, streamed: bool) -> Vec<String> {
         .to_string_pretty(),
     );
 
+    // Overload: the Fig. 12 mix squeezed onto two T4s with the full
+    // overload layer armed — a declared brownout variant, retry
+    // backoff and circuit breakers. Retry releases merge into the
+    // driver's event stream and breaker/brownout decisions resolve at
+    // arrival barriers, so this row pins the PR's determinism claim the
+    // same way the faults row pins PR 9's.
+    let (oprofiles_base, orates_base, ospecs) = fig12_specs();
+    let (_, _, oreqs) = fig12_workload(1_500.0, 77);
+    let odecl = VariantSpec {
+        name: "fig12_int8".into(),
+        knee_pct: 15,
+        latency_scale: 0.5,
+        mem_mib: 300,
+    };
+    let (oprofiles, omap) = expand_profiles(&oprofiles_base, &[(0, odecl)]).unwrap();
+    let ospec = OverloadSpec {
+        cfg: OverloadCfg { max_retries: 2, breaker_k: 6, ..Default::default() },
+        map: omap,
+    };
+    let mut orates = orates_base.clone();
+    orates.resize(oprofiles.len(), 0.0);
+    let ogpus = [T4.clone(), T4.clone()];
+    out.push(
+        if streamed {
+            serve_cluster_stream_overload(
+                &oprofiles,
+                &orates,
+                &ogpus,
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                MergedStream::new(&ospecs, 1_500.0, 77),
+                1_500.0,
+                7,
+                opts,
+                None,
+                Some(&ospec),
+            )
+        } else {
+            serve_cluster_stream_overload(
+                &oprofiles,
+                &orates,
+                &ogpus,
+                PlacementPolicy::LoadBalance,
+                RoutingPolicy::JoinShortestQueue,
+                GpuSched::Dstack,
+                MaterializedStream::new(oreqs, oprofiles.len()),
+                1_500.0,
+                7,
+                opts,
+                None,
+                Some(&ospec),
+            )
+        }
+        .to_json()
+        .to_string_pretty(),
+    );
+
     out
 }
 
@@ -334,6 +395,13 @@ fn reports_are_byte_identical_across_threads_and_modes() {
     assert!(
         baseline[8].contains("\"resilience\""),
         "fault scenario attached no resilience stats"
+    );
+    // The overload row must attach overload telemetry and actually
+    // schedule retries, or its identity check degenerates into the
+    // plain static row.
+    assert!(
+        baseline[9].contains("\"overload\"") && baseline[9].contains("\"retries_scheduled\""),
+        "overload scenario attached no overload stats"
     );
     for streamed in [false, true] {
         for mode in MODES {
